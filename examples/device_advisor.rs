@@ -1,0 +1,57 @@
+//! Device advisor — the paper's "insight for mobile developers" use case
+//! (Section 1, contribution 3): given a model, report how to run it on each
+//! SoC — best core combination, fp32 vs int8, CPU vs GPU — from predictions
+//! alone, and show the counterintuitive cases (heterogeneous combos that
+//! *hurt*, element-wise quantization penalties).
+//!
+//! Run: `cargo run --release --example device_advisor -- [model-name]`
+
+use edgelat::device::{socs, DataRep};
+use edgelat::profiler::profile;
+use edgelat::scenario::{cpu_combos, Scenario};
+
+fn main() {
+    let name = std::env::args().nth(1).unwrap_or_else(|| "mobilenetv3_large_w100".into());
+    let g = edgelat::zoo::by_name(&name).unwrap_or_else(|| {
+        eprintln!("unknown zoo model '{name}' (see `edgelat list models`)");
+        std::process::exit(2);
+    });
+    println!(
+        "advisor for {name}: {:.1}M params, {:.2} GFLOPs\n",
+        g.params() as f64 / 1e6,
+        g.flops() as f64 / 1e9
+    );
+    let seed = 42;
+    for soc in socs() {
+        println!("=== {} ({}) ===", soc.name, soc.platform);
+        let mut rows: Vec<(String, f64)> = Vec::new();
+        for counts in cpu_combos(&soc) {
+            for rep in [DataRep::Fp32, DataRep::Int8] {
+                let sc = Scenario::cpu(&soc, counts.clone(), rep);
+                let ms = profile(&sc, &g, seed, 7).end_to_end_ms;
+                rows.push((format!("cpu {} {}", sc.combo_label(), rep.name()), ms));
+            }
+        }
+        let sg = Scenario::gpu(&soc);
+        rows.push(("gpu".into(), profile(&sg, &g, seed, 7).end_to_end_ms));
+        rows.sort_by(|a, b| a.1.partial_cmp(&b.1).unwrap());
+        for (label, ms) in rows.iter().take(4) {
+            println!("  {label:<24} {ms:8.2} ms");
+        }
+        let (wl, wm) = rows.last().map(|(l, m)| (l.clone(), *m)).unwrap();
+        println!("  ... worst: {wl:<15} {wm:8.2} ms");
+        // Flag the straggler effect: fastest single fast-core vs hetero combos.
+        let single_fast = rows
+            .iter()
+            .find(|(l, _)| l.starts_with("cpu 1L") && l.ends_with("fp32"))
+            .map(|(_, m)| *m);
+        if let Some(sf) = single_fast {
+            for (l, m) in &rows {
+                if l.contains('+') && l.ends_with("fp32") && *m > sf {
+                    println!("  note: {l} ({m:.2} ms) is SLOWER than 1L alone ({sf:.2} ms) — small-core straggler (Insight 1)");
+                }
+            }
+        }
+        println!();
+    }
+}

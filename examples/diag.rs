@@ -1,0 +1,32 @@
+use edgelat::features::Standardizer;
+use edgelat::predict::lasso::Lasso;
+use edgelat::predict::Regressor;
+use edgelat::profiler::{bucket_datasets, profile_set};
+use edgelat::scenario::one_large_core;
+
+// Calibration diagnostic: per-bucket Lasso fits with per-decade MAPE/bias.
+// Used while tuning the device cost model (EXPERIMENTS.md §Perf); kept as a
+// developer tool: `cargo run --release --example diag`.
+
+fn main() {
+    let graphs: Vec<_> = edgelat::nas::sample_dataset(2022, 120).into_iter().map(|a| a.graph).collect();
+    let sc = one_large_core("Snapdragon855");
+    let profiles = profile_set(&sc, &graphs, 2022, 5);
+    let data = bucket_datasets(&profiles);
+    for bucket in ["Conv2D", "FullyConnected", "DepthwiseConv2D"] {
+        let d = &data[bucket];
+        let s = Standardizer::fit(&d.x);
+        let xs = s.transform_all(&d.x);
+        let l = Lasso::fit_cv(&xs, &d.y, 1);
+        println!("== {bucket}: n={} alpha={} intercept={:.4}", d.y.len(), l.alpha, l.intercept);
+        println!("   weights: {:?}", l.weights.iter().map(|w| (w * 1000.0).round() / 1000.0).collect::<Vec<_>>());
+        for (lo, hi) in [(0.0, 0.01), (0.01, 0.1), (0.1, 1.0), (1.0, 10.0), (10.0, 1e9)] {
+            let sel: Vec<(f64, f64)> = xs.iter().zip(&d.y).filter(|(_, &y)| y >= lo && y < hi)
+                .map(|(x, &y)| (l.predict_one(x).max(1e-9), y)).collect();
+            if sel.len() < 3 { continue; }
+            let m = sel.iter().map(|(p, a)| ((p - a) / a).abs()).sum::<f64>() / sel.len() as f64;
+            let bias = sel.iter().map(|(p, a)| (p - a) / a).sum::<f64>() / sel.len() as f64;
+            println!("   y [{lo:>5}..{hi:<5}) n={:<5} MAPE {:6.1}%  bias {:+6.1}%", sel.len(), m * 100.0, bias * 100.0);
+        }
+    }
+}

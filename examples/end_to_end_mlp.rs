@@ -1,0 +1,69 @@
+//! End-to-end three-layer validation driver (the EXPERIMENTS.md §E2E run).
+//!
+//! Exercises the full stack on a real small workload:
+//!   L1 Pallas fused_dense kernels -> L2 JAX MLP train step (AOT HLO text)
+//!   -> L3 rust: profiles 80 synthetic NAs on the simulated Pixel 4, trains
+//!   the MLP latency predictor for the Conv2D bucket BY EXECUTING THE AOT
+//!   TRAIN STEP THROUGH PJRT, logs the loss curve, and reports test MAPE
+//!   against GBDT on the same data.
+//!
+//! Requires `make artifacts`. Run:
+//!   cargo run --release --example end_to_end_mlp
+
+use edgelat::features::Standardizer;
+use edgelat::predict::mlp::{MlpContext, MlpModel};
+use edgelat::predict::{train, Method, Regressor};
+use edgelat::profiler::{bucket_datasets, profile_set};
+use edgelat::runtime::Runtime;
+use edgelat::scenario::one_large_core;
+use edgelat::util::mape;
+
+fn main() {
+    let dir = Runtime::default_dir();
+    if !Runtime::artifacts_available(&dir) {
+        eprintln!("artifacts/ missing — run `make artifacts` first");
+        std::process::exit(1);
+    }
+    let ctx = MlpContext::load(&dir).expect("loading artifacts");
+    println!(
+        "loaded {} AOT MLP variants: {:?}",
+        ctx.variants.len(),
+        ctx.variants.iter().map(|v| v.name.as_str()).collect::<Vec<_>>()
+    );
+
+    // L3: collect a real training workload from the simulated device.
+    let seed = 2022;
+    let sc = one_large_core("Snapdragon855");
+    let graphs: Vec<_> =
+        edgelat::nas::sample_dataset(seed, 80).into_iter().map(|a| a.graph).collect();
+    println!("profiling {} synthetic NAs on {} ...", graphs.len(), sc.id);
+    let profiles = profile_set(&sc, &graphs, seed, 5);
+    let data = bucket_datasets(&profiles);
+    let conv = &data["Conv2D"];
+    println!("Conv2D bucket: {} samples x {} features", conv.x.len(), conv.x[0].len());
+
+    let n_test = conv.x.len() / 5;
+    let (test_x, train_x) = conv.x.split_at(n_test);
+    let (test_y, train_y) = conv.y.split_at(n_test);
+
+    // L2+L1 via PJRT: train the MLP (Adam steps executed as AOT HLO).
+    let t0 = std::time::Instant::now();
+    let std = Standardizer::fit(train_x);
+    let xs = std.transform_all(train_x);
+    let model = MlpModel::fit(&ctx, &xs, train_y, seed);
+    println!("MLP trained through PJRT in {:.1}s", t0.elapsed().as_secs_f64());
+    let xt = std.transform_all(test_x);
+    let pred: Vec<f64> = model.predict(&xt).iter().map(|&p| p.max(1e-9)).collect();
+    let mlp_mape = mape(&pred, test_y);
+
+    // Baseline: native GBDT on the identical split.
+    let gb = train(Method::Gbdt, train_x, train_y, seed, None);
+    let gb_pred: Vec<f64> = test_x.iter().map(|v| gb.predict_raw(v)).collect();
+    let gb_mape = mape(&gb_pred, test_y);
+
+    println!("\nConv2D latency prediction on {} held-out ops:", test_x.len());
+    println!("  MLP  (AOT JAX+Pallas via PJRT): MAPE {:.2}%", mlp_mape * 100.0);
+    println!("  GBDT (native rust)            : MAPE {:.2}%", gb_mape * 100.0);
+    assert!(mlp_mape < 0.5, "MLP should be broadly correct (got {mlp_mape})");
+    println!("\nOK: all three layers compose.");
+}

@@ -1,0 +1,72 @@
+//! Latency-constrained NAS — the paper's motivating application
+//! (Section 1): search a NAS space for the highest-"accuracy" architecture
+//! under a latency budget, using the prediction framework instead of
+//! device-in-the-loop measurement, then validate the winners on the device.
+//!
+//! Accuracy is proxied by log-FLOPs (a standing NAS heuristic); the point of
+//! the example is the *latency* side: candidate evaluation via predictors is
+//! ~1000x cheaper than profiling each candidate.
+//!
+//! Run: `cargo run --release --example nas_latency_constrained`
+
+use edgelat::framework::{DeductionMode, ScenarioPredictor};
+use edgelat::predict::Method;
+use edgelat::profiler::{profile, profile_set};
+use edgelat::scenario::Scenario;
+use std::time::Instant;
+
+fn main() {
+    let seed = 7;
+    let budget_ms = 60.0;
+    let soc = edgelat::device::soc_by_name("Exynos9820").unwrap();
+    let sc = Scenario::cpu(&soc, vec![1, 0, 0], edgelat::device::DataRep::Fp32);
+    println!("NAS under a {budget_ms} ms budget on {}", sc.id);
+
+    // One-time profiling + predictor training (30 architectures — the
+    // paper's minimal-data regime, Section 5.5).
+    let train: Vec<_> =
+        edgelat::nas::sample_dataset(seed, 30).into_iter().map(|a| a.graph).collect();
+    let profiles = profile_set(&sc, &train, seed, 5);
+    let pred = ScenarioPredictor::train_from(
+        &sc,
+        &profiles,
+        Method::Lasso,
+        DeductionMode::Full,
+        seed,
+        None,
+    );
+
+    // Search: score 400 candidates by predicted latency.
+    let t0 = Instant::now();
+    let candidates = edgelat::nas::sample_dataset(seed ^ 0xbeef, 400);
+    let mut feasible: Vec<(f64, f64, String, edgelat::graph::Graph)> = Vec::new();
+    for c in candidates {
+        let lat = pred.predict(&c.graph);
+        if lat <= budget_ms {
+            let acc_proxy = (c.graph.flops() as f64).ln();
+            feasible.push((acc_proxy, lat, c.graph.name.clone(), c.graph));
+        }
+    }
+    feasible.sort_by(|a, b| b.0.partial_cmp(&a.0).unwrap());
+    println!(
+        "scored 400 candidates in {:.2}s; {} within budget",
+        t0.elapsed().as_secs_f64(),
+        feasible.len()
+    );
+
+    // Validate the top-5 on the device (simulated measurement).
+    println!("\n{:<14} {:>12} {:>12} {:>8}", "candidate", "predicted", "measured", "err%");
+    for (acc, lat, name, g) in feasible.iter().take(5) {
+        let measured = profile(&sc, g, seed, 10).end_to_end_ms;
+        println!(
+            "{name:<14} {lat:>10.2}ms {measured:>10.2}ms {:>7.1}%  (acc proxy {acc:.1})",
+            ((lat - measured) / measured).abs() * 100.0
+        );
+    }
+    let violations = feasible
+        .iter()
+        .take(5)
+        .filter(|(_, _, _, g)| profile(&sc, g, seed, 10).end_to_end_ms > budget_ms * 1.15)
+        .count();
+    println!("\nbudget violations >15% among top-5: {violations}");
+}

@@ -1,0 +1,48 @@
+//! Quickstart: predict MobileNetV2's inference latency on a Pixel 4 without
+//! touching the device, exactly as the paper's framework does (Section 4):
+//! profile a small set of synthetic NAS architectures once, train per-op
+//! predictors, then predict a new model from its model file alone.
+//!
+//! Run: `cargo run --release --example quickstart`
+
+use edgelat::framework::{DeductionMode, ScenarioPredictor};
+use edgelat::predict::Method;
+use edgelat::profiler::{profile, profile_set};
+use edgelat::scenario::Scenario;
+
+fn main() {
+    let seed = 2022;
+    // 1. Target scenario: Pixel 4 (Snapdragon 855), one large CPU core, fp32.
+    let soc = edgelat::device::soc_by_name("Snapdragon855").unwrap();
+    let sc = Scenario::cpu(&soc, vec![1, 0, 0], edgelat::device::DataRep::Fp32);
+    println!("scenario: {}", sc.id);
+
+    // 2. One-time training-data collection: profile 60 synthetic NAS
+    //    architectures on the (simulated) device.
+    let train: Vec<_> =
+        edgelat::nas::sample_dataset(seed, 60).into_iter().map(|a| a.graph).collect();
+    println!("profiling {} synthetic architectures ...", train.len());
+    let profiles = profile_set(&sc, &train, seed, 5);
+
+    // 3. Train per-op-type GBDT latency predictors.
+    let pred = ScenarioPredictor::train_from(
+        &sc,
+        &profiles,
+        Method::Gbdt,
+        DeductionMode::Full,
+        seed,
+        None,
+    );
+    println!("trained {} per-op models; T_overhead = {:.2} ms", pred.models.len(), pred.t_overhead_ms);
+
+    // 4. Predict an unseen real-world model — no device access needed.
+    let target = edgelat::zoo::by_name("mobilenetv2_wd100").unwrap();
+    let predicted = pred.predict(&target);
+
+    // 5. Compare against a "measurement" on the simulated device.
+    let measured = profile(&sc, &target, seed, 10).end_to_end_ms;
+    println!("\nMobileNetV2 on {}:", sc.id);
+    println!("  predicted: {predicted:8.2} ms");
+    println!("  measured:  {measured:8.2} ms");
+    println!("  error:     {:8.2} %", ((predicted - measured) / measured).abs() * 100.0);
+}

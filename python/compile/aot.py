@@ -1,0 +1,79 @@
+"""AOT lowering: JAX (L2) + Pallas (L1) -> HLO text artifacts for the rust
+runtime (L3). Runs once at build time (`make artifacts`); Python is never on
+the prediction path.
+
+HLO *text* is the interchange format (NOT ``.serialize()``): jax >= 0.5
+emits HloModuleProto with 64-bit instruction ids which xla_extension 0.5.1
+rejects; the text parser reassigns ids (see /opt/xla-example/README.md).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+# AOT-compiled MLP architecture variants (the rust side grid-searches over
+# these, mirroring the paper's layer/width tuning within fixed shapes).
+VARIANTS = [
+    {"name": "h64l2", "layers": 2, "width": 64, "in_dim": 24, "batch": 256},
+    {"name": "h128l2", "layers": 2, "width": 128, "in_dim": 24, "batch": 256},
+]
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def f32(*shape) -> jax.ShapeDtypeStruct:
+    return jax.ShapeDtypeStruct(shape, jnp.float32)
+
+
+def lower_variant(v: dict) -> dict[str, str]:
+    b, d = v["batch"], v["in_dim"]
+    shapes = model.init_shapes(d, v["width"], v["layers"])
+    param_specs = [f32(*s) for s in shapes]
+
+    fwd = jax.jit(model.forward).lower(f32(b, d), *param_specs)
+
+    scalars = [f32(), f32(), f32()]  # t, lr, wd
+    state = param_specs * 3  # params + m + v
+    trn = jax.jit(model.train_step).lower(
+        f32(b, d), f32(b), f32(b), *scalars, *state
+    )
+    return {
+        f"mlp_forward_{v['name']}.hlo.txt": to_hlo_text(fwd),
+        f"mlp_train_{v['name']}.hlo.txt": to_hlo_text(trn),
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+    for v in VARIANTS:
+        for name, text in lower_variant(v).items():
+            path = os.path.join(args.out_dir, name)
+            with open(path, "w") as f:
+                f.write(text)
+            print(f"wrote {path} ({len(text)} chars)")
+    meta = {"format": "edgelat-artifacts-v1", "variants": VARIANTS}
+    meta_path = os.path.join(args.out_dir, "mlp_meta.json")
+    with open(meta_path, "w") as f:
+        json.dump(meta, f, indent=1)
+    print(f"wrote {meta_path}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,4 @@
+"""Pallas kernels (L1) and their pure-jnp oracles."""
+
+from .fused_dense import fused_dense, mxu_utilization_estimate, vmem_bytes  # noqa: F401
+from .ref import fused_dense_ref, mlp_forward_ref  # noqa: F401

@@ -1,0 +1,139 @@
+"""L1: the MLP predictor's fused dense layer as a Pallas kernel.
+
+The hot-spot of the latency-predictor MLP (Section 4.2 of the paper) is the
+batched dense layer. On the paper's mobile GPUs this is an OpenCL kernel; on
+our TPU-style target we express it as a single fused Pallas kernel:
+``y = relu(x @ W + b)`` with the matmul, bias add and activation fused so the
+intermediate never round-trips through HBM.
+
+Autodiff: Pallas interpret-mode kernels have no built-in reverse rule, so
+``fused_dense`` carries a ``custom_vjp`` whose backward pass is built from
+the same tiled Pallas matmul kernel (dx = g @ W^T, dW = x^T @ g) — both the
+forward and backward of the L2 train step execute L1 kernels.
+
+Hardware adaptation (DESIGN.md §Hardware-Adaptation): the (batch x out) block
+is tiled into VMEM via BlockSpec; each grid step feeds a (bm, K) x (K, bn)
+tile pair to the MXU via ``jnp.dot`` with fp32 accumulation. Block sizes are
+multiples of the (8, 128) TPU lane layout where the problem permits.
+
+Pallas runs with ``interpret=True`` everywhere in this repo: the CPU PJRT
+plugin cannot execute Mosaic custom-calls, so real-TPU lowering is treated as
+a compile-only target (see /opt/xla-example/README.md); numerics are
+validated against ``ref.py`` by the pytest + hypothesis suite.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _pick_block(dim: int, preferred: int) -> int:
+    """Largest divisor of ``dim`` that is <= preferred (keeps grids exact)."""
+    b = min(dim, preferred)
+    while dim % b != 0:
+        b -= 1
+    return max(b, 1)
+
+
+def _matmul_kernel(a_ref, b_ref, o_ref):
+    o_ref[...] = jnp.dot(
+        a_ref[...], b_ref[...], preferred_element_type=jnp.float32
+    ).astype(o_ref.dtype)
+
+
+def matmul(a: jax.Array, b: jax.Array) -> jax.Array:
+    """Tiled Pallas matmul (used by the fused_dense backward pass)."""
+    M, K = a.shape
+    K2, N = b.shape
+    assert K == K2
+    bm = _pick_block(M, 128)
+    bn = _pick_block(N, 128)
+    return pl.pallas_call(
+        _matmul_kernel,
+        grid=(M // bm, N // bn),
+        in_specs=[
+            pl.BlockSpec((bm, K), lambda i, j: (i, 0)),
+            pl.BlockSpec((K, bn), lambda i, j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((M, N), a.dtype),
+        interpret=True,
+    )(a, b)
+
+
+def _fused_dense_kernel(x_ref, w_ref, b_ref, o_ref, *, relu: bool):
+    """One (bm, bn) output tile: full-K matmul + bias + optional ReLU."""
+    acc = jnp.dot(x_ref[...], w_ref[...], preferred_element_type=jnp.float32)
+    acc = acc + b_ref[...][None, :]
+    if relu:
+        acc = jnp.maximum(acc, 0.0)
+    o_ref[...] = acc.astype(o_ref.dtype)
+
+
+def _fused_dense_impl(x: jax.Array, w: jax.Array, b: jax.Array, relu: bool) -> jax.Array:
+    B, K = x.shape
+    K2, N = w.shape
+    assert K == K2, f"inner dims mismatch: {K} vs {K2}"
+    assert b.shape == (N,)
+    bm = _pick_block(B, 128)
+    bn = _pick_block(N, 128)
+    return pl.pallas_call(
+        functools.partial(_fused_dense_kernel, relu=relu),
+        grid=(B // bm, N // bn),
+        in_specs=[
+            pl.BlockSpec((bm, K), lambda i, j: (i, 0)),
+            pl.BlockSpec((K, bn), lambda i, j: (0, j)),
+            pl.BlockSpec((bn,), lambda i, j: (j,)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((B, N), x.dtype),
+        interpret=True,
+    )(x, w, b)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3,))
+def fused_dense(x: jax.Array, w: jax.Array, b: jax.Array, relu: bool = True) -> jax.Array:
+    """Fused ``relu(x @ w + b)`` as a tiled Pallas call.
+
+    x: (B, K) activations; w: (K, N) weights; b: (N,) bias. K is kept whole
+    per tile (the MLP's K <= 128 fits VMEM comfortably: three 128x128 fp32
+    tiles = 192 KiB of the ~16 MiB budget).
+    """
+    return _fused_dense_impl(x, w, b, relu)
+
+
+def _fused_dense_fwd(x, w, b, relu):
+    y = _fused_dense_impl(x, w, b, relu)
+    return y, (x, w, y)
+
+
+def _fused_dense_bwd(relu, res, g):
+    x, w, y = res
+    if relu:
+        g = g * (y > 0).astype(g.dtype)
+    dx = matmul(g, w.T)
+    dw = matmul(x.T, g)
+    db = jnp.sum(g, axis=0)
+    return dx, dw, db
+
+
+fused_dense.defvjp(_fused_dense_fwd, _fused_dense_bwd)
+
+
+def vmem_bytes(bm: int, bk: int, bn: int, dtype_bytes: int = 4) -> int:
+    """Estimated VMEM footprint of one grid step (x + w + out tiles + bias).
+
+    Used by DESIGN.md §Perf to check the schedule against the ~16 MiB VMEM
+    budget of a TPU core.
+    """
+    return dtype_bytes * (bm * bk + bk * bn + bm * bn + bn)
+
+
+def mxu_utilization_estimate(bm: int, bk: int, bn: int) -> float:
+    """Fraction of 128x128 MXU lanes a (bm,bk)x(bk,bn) tile pair keeps busy."""
+    fill = (min(bm, 128) / 128.0) * (min(bn, 128) / 128.0) * (min(bk, 128) / 128.0)
+    return min(fill, 1.0)

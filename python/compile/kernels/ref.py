@@ -1,0 +1,29 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+Every Pallas kernel in ``kernels/`` has a reference implementation here;
+the pytest + hypothesis suite asserts allclose equivalence across shapes
+and dtypes (build-time correctness gate, deliverable (c)).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def fused_dense_ref(x: jax.Array, w: jax.Array, b: jax.Array, relu: bool = True) -> jax.Array:
+    """Reference for kernels.fused_dense: relu(x @ w + b)."""
+    y = jnp.dot(x, w, preferred_element_type=jnp.float32) + b[None, :]
+    if relu:
+        y = jnp.maximum(y, 0.0)
+    return y.astype(x.dtype)
+
+
+def mlp_forward_ref(x: jax.Array, params: list[jax.Array]) -> jax.Array:
+    """Reference MLP forward: hidden layers with ReLU, linear head."""
+    h = x
+    n_layers = len(params) // 2
+    for i in range(n_layers):
+        w, b = params[2 * i], params[2 * i + 1]
+        h = fused_dense_ref(h, w, b, relu=(i < n_layers - 1))
+    return h[:, 0]

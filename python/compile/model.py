@@ -1,0 +1,81 @@
+"""L2: the MLP latency predictor's forward pass and Adam train step in JAX.
+
+The forward pass calls the L1 Pallas ``fused_dense`` kernel for every layer,
+so the whole predictor lowers into a single HLO module that the rust
+coordinator executes via PJRT. The training objective is the paper's
+mean-square *percentage* error (Section 4.2), masked for padded batch rows.
+
+Positional signatures (the rust side, ``predict::mlp``, passes literals in
+exactly this order):
+
+  forward(x, *params)                          -> (pred,)
+  train_step(x, y, mask, t, lr, wd, *params, *m, *v)
+                                               -> (loss, *params, *m, *v)
+
+``params`` is [W0, b0, W1, b1, ..., W_out, b_out].
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import fused_dense
+
+ADAM_B1 = 0.9
+ADAM_B2 = 0.999
+ADAM_EPS = 1e-8
+
+
+def init_shapes(in_dim: int, width: int, layers: int) -> list[tuple[int, ...]]:
+    """Weight/bias shapes in positional order (matches predict::mlp)."""
+    shapes: list[tuple[int, ...]] = []
+    fan_in = in_dim
+    for _ in range(layers):
+        shapes.append((fan_in, width))
+        shapes.append((width,))
+        fan_in = width
+    shapes.append((fan_in, 1))
+    shapes.append((1,))
+    return shapes
+
+
+def forward(x: jax.Array, *params: jax.Array) -> tuple[jax.Array]:
+    """MLP forward: Pallas fused dense layers, ReLU on hidden, linear head."""
+    h = x
+    n_layers = len(params) // 2
+    for i in range(n_layers):
+        w, b = params[2 * i], params[2 * i + 1]
+        h = fused_dense(h, w, b, relu=(i < n_layers - 1))
+    return (h[:, 0],)
+
+
+def _loss(params: tuple[jax.Array, ...], x, y, mask):
+    pred = forward(x, *params)[0]
+    rel = (pred - y) / jnp.maximum(y, 1e-9)
+    return jnp.sum(mask * rel * rel) / jnp.maximum(jnp.sum(mask), 1.0)
+
+
+def train_step(x, y, mask, t, lr, wd, *state: jax.Array):
+    """One Adam step on the masked relative-error loss.
+
+    ``state`` is params + m + v concatenated (each ``n_params`` tensors).
+    Returns (loss, new_params..., new_m..., new_v...).
+    """
+    n = len(state) // 3
+    params = tuple(state[:n])
+    m = tuple(state[n : 2 * n])
+    v = tuple(state[2 * n :])
+    loss, grads = jax.value_and_grad(_loss)(params, x, y, mask)
+    t = t.astype(jnp.float32)
+    out_p, out_m, out_v = [], [], []
+    for p, g, mi, vi in zip(params, grads, m, v):
+        nm = ADAM_B1 * mi + (1.0 - ADAM_B1) * g
+        nv = ADAM_B2 * vi + (1.0 - ADAM_B2) * g * g
+        mhat = nm / (1.0 - ADAM_B1**t)
+        vhat = nv / (1.0 - ADAM_B2**t)
+        np_ = p - lr * (mhat / (jnp.sqrt(vhat) + ADAM_EPS) + wd * p)
+        out_p.append(np_)
+        out_m.append(nm)
+        out_v.append(nv)
+    return (loss, *out_p, *out_m, *out_v)

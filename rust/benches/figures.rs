@@ -1,0 +1,34 @@
+//! Figure-regeneration benches (cargo bench --bench figures): one timed
+//! entry per paper table/figure, run at smoke scale. This both validates
+//! that every experiment in DESIGN.md §6 regenerates and tracks the
+//! end-to-end cost of the reproduction harness (EXPERIMENTS.md §Perf).
+//!
+//! For paper-scale output run `edgelat reproduce --all --full`.
+
+use edgelat::report::{all_ids, reproduce, ReportConfig, ReportCtx};
+use std::time::Instant;
+
+fn main() {
+    println!("== figure/table regeneration benches (smoke scale) ==");
+    let mut ctx = ReportCtx::new(ReportConfig::smoke());
+    let mut total_rows = 0usize;
+    let t_all = Instant::now();
+    for id in all_ids() {
+        let t0 = Instant::now();
+        let tables = reproduce(id, &mut ctx);
+        let rows: usize = tables.iter().map(|t| t.rows.len()).sum();
+        total_rows += rows;
+        println!(
+            "fig/table {id:<4} {:>3} tables {:>4} rows   {:8.2} s",
+            tables.len(),
+            rows,
+            t0.elapsed().as_secs_f64()
+        );
+        assert!(rows > 0, "figure {id} produced no rows");
+    }
+    println!(
+        "\nALL {} figures/tables regenerated: {total_rows} rows in {:.1} s",
+        all_ids().len(),
+        t_all.elapsed().as_secs_f64()
+    );
+}

@@ -1,0 +1,133 @@
+//! System performance benches (cargo bench --bench pipeline).
+//!
+//! No criterion in the offline crate set, so this is a plain harness =
+//! false binary: warmup + N timed iterations, reporting mean/min per op.
+//! These cover the L3 hot paths targeted by the §Perf pass in
+//! EXPERIMENTS.md: graph construction, fusion, kernel selection, feature
+//! extraction, the device simulator, profiling throughput, and predictor
+//! train/inference.
+
+use edgelat::device::{DataRep, Target};
+use edgelat::predict::{train, Method};
+use edgelat::profiler::{bucket_datasets, profile_set};
+use edgelat::scenario::{one_large_core, Scenario};
+use edgelat::tflite::{compile, CompileOptions};
+use std::time::Instant;
+
+fn bench<F: FnMut()>(name: &str, iters: usize, mut f: F) {
+    // Warmup.
+    for _ in 0..iters.div_ceil(10).max(1) {
+        f();
+    }
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        f();
+        samples.push(t0.elapsed().as_secs_f64());
+    }
+    samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let mean: f64 = samples.iter().sum::<f64>() / samples.len() as f64;
+    let fmt = |s: f64| {
+        if s >= 1.0 {
+            format!("{s:9.3} s ")
+        } else if s >= 1e-3 {
+            format!("{:9.3} ms", s * 1e3)
+        } else {
+            format!("{:9.3} µs", s * 1e6)
+        }
+    };
+    println!(
+        "{name:<44} mean {}  min {}  p50 {}  (n={iters})",
+        fmt(mean),
+        fmt(samples[0]),
+        fmt(samples[samples.len() / 2])
+    );
+}
+
+fn main() {
+    println!("== edgelat pipeline benches ==");
+    let mv2 = edgelat::zoo::mobilenets::mobilenet_v2(1.0);
+    let r18 = edgelat::zoo::resnets::resnet(18, 1.0);
+    let soc = edgelat::device::soc_by_name("Snapdragon855").unwrap();
+    let sc_cpu = one_large_core("Snapdragon855");
+    let sc_gpu = Scenario::gpu(&soc);
+
+    bench("graph/build mobilenet_v2", 200, || {
+        std::hint::black_box(edgelat::zoo::mobilenets::mobilenet_v2(1.0));
+    });
+    bench("graph/build full zoo (102 models)", 10, || {
+        std::hint::black_box(edgelat::zoo::all_graphs());
+    });
+    bench("nas/sample one architecture", 500, || {
+        std::hint::black_box(edgelat::nas::sample(7, 3));
+    });
+    bench("tflite/fuse mobilenet_v2", 200, || {
+        std::hint::black_box(edgelat::tflite::fusion::fuse(&mv2));
+    });
+    bench("tflite/compile resnet18 (Mali)", 200, || {
+        std::hint::black_box(compile(&r18, edgelat::tflite::GpuKind::Mali, CompileOptions::default()));
+    });
+    bench("features/extract all ops mobilenet_v2", 200, || {
+        for n in &mv2.nodes {
+            std::hint::black_box(edgelat::features::features(&mv2, n));
+        }
+    });
+    let cpu_target = Target::Cpu {
+        combo: edgelat::device::CoreCombo::new(vec![1, 3, 0]),
+        rep: DataRep::Fp32,
+    };
+    bench("device/run mobilenet_v2 CPU 1L+3M", 200, || {
+        std::hint::black_box(edgelat::device::run(&soc, &mv2, &cpu_target, 1, 0));
+    });
+    let gpu_target = Target::Gpu { options: CompileOptions::default() };
+    bench("device/run mobilenet_v2 GPU", 200, || {
+        std::hint::black_box(edgelat::device::run(&soc, &mv2, &gpu_target, 1, 0));
+    });
+
+    // Profiling throughput: the dominant cost of `reproduce --all`.
+    let synth: Vec<_> = edgelat::nas::sample_dataset(3, 40).into_iter().map(|a| a.graph).collect();
+    bench("profiler/profile_set 40 synth x5 runs CPU", 5, || {
+        std::hint::black_box(profile_set(&sc_cpu, &synth, 3, 5));
+    });
+    bench("profiler/profile_set 40 synth x5 runs GPU", 5, || {
+        std::hint::black_box(profile_set(&sc_gpu, &synth, 3, 5));
+    });
+
+    // Predictor training + inference on a realistic Conv2D bucket.
+    let profiles = profile_set(&sc_cpu, &synth, 3, 5);
+    let data = bucket_datasets(&profiles);
+    let conv = &data["Conv2D"];
+    println!("(Conv2D bucket: {} rows x {} features)", conv.x.len(), conv.x[0].len());
+    for m in [Method::Lasso, Method::RandomForest, Method::Gbdt] {
+        bench(&format!("predict/train {} on Conv2D bucket", m.name()), 3, || {
+            std::hint::black_box(train(m, &conv.x, &conv.y, 1, None));
+        });
+    }
+    let model = train(Method::Gbdt, &conv.x, &conv.y, 1, None);
+    bench("predict/GBDT inference 1 op", 2000, || {
+        std::hint::black_box(model.predict_raw(&conv.x[0]));
+    });
+
+    // End-to-end: train a scenario predictor and predict one model file.
+    bench("framework/train ScenarioPredictor (GBDT)", 3, || {
+        std::hint::black_box(edgelat::framework::ScenarioPredictor::train_from(
+            &sc_cpu,
+            &profiles,
+            Method::Gbdt,
+            edgelat::framework::DeductionMode::Full,
+            1,
+            None,
+        ));
+    });
+    let pred = edgelat::framework::ScenarioPredictor::train_from(
+        &sc_cpu,
+        &profiles,
+        Method::Gbdt,
+        edgelat::framework::DeductionMode::Full,
+        1,
+        None,
+    );
+    bench("framework/predict mobilenet_v2 end-to-end", 500, || {
+        std::hint::black_box(pred.predict(&mv2));
+    });
+}

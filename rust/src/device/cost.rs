@@ -1,0 +1,430 @@
+//! Noise-free cost models for CPU operations and GPU kernels.
+//!
+//! Roofline-style: latency = max(compute time, memory time) + fixed
+//! overhead, with empirically-shaped efficiency factors (narrow channels
+//! and small kernels run below peak, depthwise convolutions are memory
+//! bound, Ruy splits work equally across threads so heterogeneous combos
+//! straggle on the slowest core — Insight 1).
+
+use crate::device::{CoreCombo, DataRep, Soc};
+use crate::graph::{Graph, Node, Op, OpType, Shape};
+use crate::tflite::{FusedKernel, KernelImpl};
+
+/// Fraction of peak a convolution achieves as a function of its narrowest
+/// channel dimension: Ruy/GEMM kernels need wide panels to fill NEON lanes.
+/// The curve is mild (≈1.9x between 8 and 64 channels) — real Ruy/OpenCL
+/// GEMMs stay closer to linear-in-FLOPs than a naive occupancy model, which
+/// is what lets the paper's *linear* Lasso stay in the ~10% MAPE band.
+fn chan_eff(c: usize) -> f64 {
+    ((c as f64 / 64.0).powf(0.22)).clamp(0.35, 1.0)
+}
+
+/// CPU variant: Ruy's cache-blocked GEMM keeps narrow-panel efficiency much
+/// flatter than a GPU's occupancy curve; the *memory* term (streamed at the
+/// low effective per-core bandwidth) is what slows narrow architectures
+/// down. The CPU cost is additive — compute + memory + dispatch — which is
+/// near-linear in the Table 3 features; that additivity is what keeps the
+/// paper's *linear* Lasso predictor in its ~10% end-to-end band on CPUs,
+/// while trees exploit the residual curvature.
+fn cpu_chan_eff(c: usize) -> f64 {
+    ((c as f64 / 64.0).powf(0.35)).clamp(0.30, 1.0)
+}
+
+/// Kernel-size efficiency: 1x1 convs are pure GEMM but memory-heavier;
+/// larger kernels amortize loads.
+fn kernel_eff(k: usize) -> f64 {
+    match k {
+        1 => 0.78,
+        3 => 1.0,
+        5 => 0.95,
+        _ => 0.90,
+    }
+}
+
+/// Multithreading efficiency loss per extra thread (work-queue overhead),
+/// yielding the sublinear homogeneous scaling of Fig 3.
+fn par_eff(threads: usize) -> f64 {
+    1.0 / (1.0 + 0.07 * (threads as f64 - 1.0))
+}
+
+/// Bytes moved by an op on the CPU (activations at `rep` precision,
+/// weights at `rep` precision).
+fn cpu_bytes(node: &Node, ins: &[Shape], outs: &[Shape], rep: DataRep) -> f64 {
+    let act = rep.bytes();
+    let i: f64 = ins.iter().map(|s| s.numel() as f64).sum::<f64>() * act;
+    let o: f64 = outs.iter().map(|s| s.numel() as f64).sum::<f64>() * act;
+    let p = node.op.param_count(ins, outs) as f64 * act;
+    match node.op {
+        // Convs re-read input patches; the factor is folded into efficiency,
+        // traffic is in + out + weights.
+        Op::Conv2D { .. } | Op::DepthwiseConv2D { .. } | Op::FullyConnected { .. } => i + o + p,
+        // Concat/split are pure copies: read + write.
+        Op::Concat | Op::Split { .. } => i + o,
+        Op::Pad { .. } => o,
+        Op::Softmax => 3.0 * i,
+        Op::Reshape => 0.0, // view
+        // Standalone activations mostly run on cache-resident data right
+        // after their producer (TFLite fuses them into the conv kernels).
+        Op::Activation { .. } => 0.25 * (i + o),
+        _ => i + o,
+    }
+}
+
+/// Compute-efficiency factor for an op on a CPU core.
+fn cpu_eff(node: &Node, ins: &[Shape], outs: &[Shape]) -> f64 {
+    match &node.op {
+        Op::Conv2D { kh, groups, out_c, .. } => {
+            let in_g = ins[0].c / groups;
+            let out_g = out_c / groups;
+            0.78 * cpu_chan_eff(in_g.min(out_g)) * kernel_eff(*kh)
+        }
+        Op::DepthwiseConv2D { .. } => 0.30 * ((outs[0].c as f64 / 128.0).powf(0.1)).clamp(0.8, 1.0),
+        Op::FullyConnected { .. } => 0.40,
+        Op::Pooling { .. } => 0.12,
+        Op::Mean => 0.10,
+        Op::ElementWise { .. } | Op::Activation { .. } => 0.12,
+        Op::Softmax => 0.08,
+        _ => 0.10,
+    }
+}
+
+/// Quantized-compute speedup class of an op (Insight 2): matmul-family ops
+/// gain the cluster's dot-product speedup; element-wise/pad *lose* from
+/// rescaling; the rest gain modestly.
+enum QuantClass {
+    Matmul,
+    Penalized,
+    Modest,
+    Copy,
+}
+
+fn quant_class(op: &Op) -> QuantClass {
+    match op {
+        Op::Conv2D { .. } | Op::DepthwiseConv2D { .. } | Op::FullyConnected { .. } => {
+            QuantClass::Matmul
+        }
+        Op::ElementWise { .. } | Op::Pad { .. } => QuantClass::Penalized,
+        Op::Concat | Op::Split { .. } | Op::Reshape => QuantClass::Copy,
+        _ => QuantClass::Modest,
+    }
+}
+
+/// Noise-free latency (ms) of one op on the CPU under a core combo.
+///
+/// `serial_cluster` is the cluster index executing non-parallelizable ops
+/// this run (TFLite schedules them on an arbitrary core of the affinity
+/// set — Section 5.2 notes this complicates heterogeneous prediction).
+pub fn cpu_op_ms(
+    soc: &Soc,
+    g: &Graph,
+    node: &Node,
+    combo: &CoreCombo,
+    rep: DataRep,
+    serial_cluster: usize,
+) -> f64 {
+    let ins = g.input_shapes(node);
+    let outs = g.output_shapes(node);
+    let flops = node.op.flops(&ins, &outs) as f64;
+    let eff = cpu_eff(node, &ins, &outs);
+    let overhead_ms = soc.cpu_op_overhead_us / 1e3;
+
+    let quant = matches!(rep, DataRep::Int8);
+    let class = quant_class(&node.op);
+    // Element-wise/pad ops under int8 pay the rescale penalty on their full
+    // fp32-equivalent cost (Insight 2): they move int8 data but re-quantize
+    // every element, ending up *slower* than fp32.
+    let penalized = quant && matches!(class, QuantClass::Penalized);
+    let bytes_rep = if penalized { DataRep::Fp32 } else { rep };
+    let bytes = cpu_bytes(node, &ins, &outs, bytes_rep);
+
+    let core_gflops = |cluster: usize| -> f64 {
+        let cl = &soc.clusters[cluster];
+        let mut peak = cl.peak_gflops();
+        if quant {
+            peak *= match class {
+                QuantClass::Matmul => cl.int8_speedup,
+                QuantClass::Modest => 1.3,
+                _ => 1.0,
+            };
+        }
+        peak
+    };
+
+    // Compute and memory phases. Cost is ADDITIVE (compute + stream), which
+    // is what Ruy's pack->multiply pipeline approximates and what makes the
+    // per-op latency near-linear in the Table 3 features.
+    let (compute_ms, mem_ms) = if node.op.cpu_parallel() && combo.total_cores() > 1 {
+        // Ruy splits the work *equally* across threads; the slowest core
+        // becomes the straggler (Insight 1).
+        let cores = combo.cores();
+        let t = cores.len();
+        let fshare = flops / t as f64;
+        let bshare = bytes / t as f64;
+        let slowest_c = cores
+            .iter()
+            .map(|&cl| fshare / (eff * par_eff(t) * core_gflops(cl) * 1e6))
+            .fold(0.0f64, f64::max);
+        let slowest_m = cores
+            .iter()
+            .map(|&cl| bshare / (soc.clusters[cl].stream_gbps * par_eff(t) * 1e6))
+            .fold(0.0f64, f64::max);
+        let hetero = combo.is_heterogeneous();
+        let sync_us =
+            8.0 * ((t - 1) as f64).sqrt() * if hetero { soc.hetero_sync_mult } else { 1.0 };
+        (slowest_c + sync_us / 1e3, slowest_m)
+    } else {
+        let cl = if node.op.cpu_parallel() { combo.cores()[0] } else { serial_cluster };
+        (
+            flops / (eff * core_gflops(cl) * 1e6),
+            bytes / (soc.clusters[cl].stream_gbps * 1e6),
+        )
+    };
+
+    let mut ms = compute_ms + mem_ms + overhead_ms;
+    if penalized {
+        // Rescaling all inputs to a common quantization scale costs more
+        // than the int8 arithmetic saves (Insight 2; ~2.5x on S855/E9820).
+        ms *= soc.quant_ew_penalty;
+    }
+    ms
+}
+
+/// GPU activation/weight byte width (the TFLite GPU delegate computes in
+/// fp16 on all four devices).
+const GPU_ACT_BYTES: f64 = 2.0;
+
+fn gpu_eff(impl_: KernelImpl, root: &Node, ins: &[Shape]) -> f64 {
+    match impl_ {
+        KernelImpl::Conv2D => {
+            if let Op::Conv2D { kh, out_c, .. } = root.op {
+                0.50 * chan_eff(ins[0].c.min(out_c)) * kernel_eff(kh)
+            } else {
+                0.40
+            }
+        }
+        KernelImpl::Winograd => {
+            if let Op::Conv2D { out_c, .. } = root.op {
+                0.48 * chan_eff(ins[0].c.min(out_c))
+            } else {
+                0.48
+            }
+        }
+        KernelImpl::GroupedConv2D => {
+            if let Op::Conv2D { groups, out_c, .. } = root.op {
+                0.42 * chan_eff((ins[0].c / groups).min(out_c / groups))
+            } else {
+                0.42
+            }
+        }
+        KernelImpl::NaiveGroupedConv2D { .. } => 0.42, // handled per group below
+        KernelImpl::DepthwiseConv2D => 0.13,
+        KernelImpl::FullyConnected => 0.25,
+        KernelImpl::Generic => 0.08,
+    }
+}
+
+/// Noise-free latency (ms) of one compiled GPU kernel.
+pub fn gpu_kernel_ms(soc: &Soc, g: &Graph, k: &FusedKernel) -> f64 {
+    let gpu = &soc.gpu;
+    let root = &g.nodes[k.root()];
+    let ins = g.input_shapes(root);
+    let outs = g.output_shapes(root);
+    let dispatch_ms = gpu.dispatch_us / 1e3;
+
+    if let KernelImpl::NaiveGroupedConv2D { groups } = k.impl_ {
+        // split + per-group Conv2D kernels + concat, each dispatched. Each
+        // per-group convolution runs at the (low) occupancy of its narrow
+        // channel slice — the source of the paper's up-to-3x gap (Fig 9).
+        let flops = root.op.flops(&ins, &outs) as f64;
+        let params = root.op.param_count(&ins, &outs) as f64;
+        let in_b = ins[0].numel() as f64 * GPU_ACT_BYTES;
+        let out_b = outs[0].numel() as f64 * GPU_ACT_BYTES;
+        let (kh, per_group_c) = match root.op {
+            crate::graph::Op::Conv2D { kh, out_c, .. } => {
+                (kh, (ins[0].c / groups).min(out_c / groups))
+            }
+            _ => (3, 8),
+        };
+        let naive_eff = 0.50 * chan_eff(per_group_c) * kernel_eff(kh);
+        let per_group_compute = (flops / groups as f64) / (naive_eff * gpu.gflops * 1e6);
+        let per_group_mem =
+            ((in_b + out_b) / groups as f64 + params * GPU_ACT_BYTES / groups as f64)
+                / (gpu.mem_gbps * 1e9)
+                * 1e3;
+        let group_ms: f64 = (0..groups)
+            .map(|_| per_group_compute.max(per_group_mem) + dispatch_ms)
+            .sum();
+        // split: read+write input; concat: read+write output.
+        let split_ms = 2.0 * in_b / (gpu.mem_gbps * 1e9) * 1e3 + dispatch_ms;
+        let concat_ms = 2.0 * out_b / (gpu.mem_gbps * 1e9) * 1e3 + dispatch_ms;
+        return split_ms + group_ms + concat_ms;
+    }
+
+    let mut flops = root.op.flops(&ins, &outs) as f64;
+    let eff = gpu_eff(k.impl_, root, &ins);
+    let mut mem_mult = 1.0;
+    if k.impl_ == KernelImpl::Winograd {
+        // F(4x4, 3x3): 36/16 = 2.25x arithmetic reduction; tile transforms
+        // add memory traffic.
+        flops /= 2.3;
+        mem_mult = 1.25;
+    }
+
+    // Fused linkable ops execute in-register: their FLOPs ride along at low
+    // cost and their intermediate tensors never touch memory. Extra inputs
+    // (e.g. residual shortcuts) are read once.
+    let mut fused_flops = 0.0;
+    for &op in k.fused_ops() {
+        let n = &g.nodes[op];
+        fused_flops += n.op.flops(&g.input_shapes(n), &g.output_shapes(n)) as f64;
+    }
+
+    let src_b: f64 = k.src.iter().map(|&t| g.shape(t).numel() as f64).sum::<f64>() * GPU_ACT_BYTES;
+    let dst_b: f64 = k.dst.iter().map(|&t| g.shape(t).numel() as f64).sum::<f64>() * GPU_ACT_BYTES;
+    let param_b = root.op.param_count(&ins, &outs) as f64 * GPU_ACT_BYTES;
+
+    let compute_ms = (flops / eff + fused_flops / 0.30) / (gpu.gflops * 1e6);
+    let mem_ms = (src_b * mem_mult + dst_b + param_b) / (gpu.mem_gbps * 1e9) * 1e3;
+    compute_ms.max(mem_ms) + dispatch_ms
+}
+
+/// Coarse op-type of a fused kernel for breakdown figures (root op's type).
+pub fn kernel_op_type(g: &Graph, k: &FusedKernel) -> OpType {
+    g.nodes[k.root()].op.op_type()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::device::{soc_by_name, CoreCombo};
+    use crate::graph::{ActKind, GraphBuilder, Padding};
+    use crate::tflite::{compile, CompileOptions, GpuKind};
+
+    fn conv_graph(c_in: usize, c_out: usize, hw: usize, k: usize) -> Graph {
+        let mut b = GraphBuilder::new("t", hw, hw, c_in);
+        let x = b.input_tensor();
+        let t = b.conv(x, c_out, k, 1, Padding::Same);
+        b.finish(vec![t])
+    }
+
+    #[test]
+    fn larger_convs_cost_more() {
+        let soc = soc_by_name("Snapdragon855").unwrap();
+        let combo = CoreCombo::new(vec![1, 0, 0]);
+        let small = conv_graph(32, 32, 28, 3);
+        let big = conv_graph(64, 64, 56, 3);
+        let a = cpu_op_ms(&soc, &small, &small.nodes[0], &combo, DataRep::Fp32, 0);
+        let b = cpu_op_ms(&soc, &big, &big.nodes[0], &combo, DataRep::Fp32, 0);
+        assert!(b > 4.0 * a, "a={a} b={b}");
+    }
+
+    #[test]
+    fn homogeneous_multicore_speedup_is_sublinear() {
+        let soc = soc_by_name("Snapdragon855").unwrap();
+        let g = conv_graph(64, 128, 56, 3);
+        let one = cpu_op_ms(&soc, &g, &g.nodes[0], &CoreCombo::new(vec![0, 1, 0]), DataRep::Fp32, 1);
+        let three =
+            cpu_op_ms(&soc, &g, &g.nodes[0], &CoreCombo::new(vec![0, 3, 0]), DataRep::Fp32, 1);
+        let speedup = one / three;
+        assert!(speedup > 1.6 && speedup < 3.0, "speedup={speedup}");
+    }
+
+    #[test]
+    fn hetero_combo_straggles_below_fast_core_alone() {
+        // Insight 1: medium + small can be slower than medium alone.
+        let soc = soc_by_name("Snapdragon855").unwrap();
+        let g = conv_graph(64, 128, 56, 3);
+        let medium =
+            cpu_op_ms(&soc, &g, &g.nodes[0], &CoreCombo::new(vec![0, 1, 0]), DataRep::Fp32, 1);
+        let med_small =
+            cpu_op_ms(&soc, &g, &g.nodes[0], &CoreCombo::new(vec![0, 1, 1]), DataRep::Fp32, 1);
+        assert!(
+            med_small > medium * 0.95,
+            "medium={medium} med+small={med_small}: small core should straggle"
+        );
+    }
+
+    #[test]
+    fn int8_speeds_up_convs() {
+        let soc = soc_by_name("Snapdragon855").unwrap();
+        let combo = CoreCombo::new(vec![1, 0, 0]);
+        let g = conv_graph(64, 128, 56, 3);
+        let f = cpu_op_ms(&soc, &g, &g.nodes[0], &combo, DataRep::Fp32, 0);
+        let q = cpu_op_ms(&soc, &g, &g.nodes[0], &combo, DataRep::Int8, 0);
+        assert!(f / q > 1.8, "fp32={f} int8={q}");
+    }
+
+    #[test]
+    fn int8_degrades_elementwise() {
+        // Insight 2: element-wise ops slow down ~2.5x after quantization.
+        let soc = soc_by_name("Snapdragon855").unwrap();
+        let combo = CoreCombo::new(vec![1, 0, 0]);
+        let mut b = GraphBuilder::new("t", 56, 56, 64);
+        let x = b.input_tensor();
+        let t = b.ew_const(crate::graph::EwKind::Abs, x);
+        let g = b.finish(vec![t]);
+        let f = cpu_op_ms(&soc, &g, &g.nodes[0], &combo, DataRep::Fp32, 0);
+        let q = cpu_op_ms(&soc, &g, &g.nodes[0], &combo, DataRep::Int8, 0);
+        assert!(q / f > 1.5, "fp32={f} int8={q}");
+    }
+
+    #[test]
+    fn serial_ops_use_serial_cluster() {
+        let soc = soc_by_name("Snapdragon855").unwrap();
+        let combo = CoreCombo::new(vec![1, 0, 1]);
+        let mut b = GraphBuilder::new("t", 56, 56, 64);
+        let x = b.input_tensor();
+        let t = b.softmax(x);
+        let g = b.finish(vec![t]);
+        let on_large = cpu_op_ms(&soc, &g, &g.nodes[0], &combo, DataRep::Fp32, 0);
+        let on_small = cpu_op_ms(&soc, &g, &g.nodes[0], &combo, DataRep::Fp32, 2);
+        assert!(on_small > on_large, "large={on_large} small={on_small}");
+    }
+
+    #[test]
+    fn winograd_kernel_faster_than_conv2d() {
+        let soc = soc_by_name("HelioP35").unwrap();
+        let g = conv_graph(128, 128, 28, 3);
+        let full = compile(&g, GpuKind::PowerVR, CompileOptions::default());
+        assert_eq!(full.kernels[0].impl_, KernelImpl::Winograd);
+        let plain = compile(
+            &g,
+            GpuKind::PowerVR,
+            CompileOptions { winograd: false, ..Default::default() },
+        );
+        let w = gpu_kernel_ms(&soc, &g, &full.kernels[0]);
+        let c = gpu_kernel_ms(&soc, &g, &plain.kernels[0]);
+        assert!(c / w > 1.4, "conv={c} winograd={w}");
+    }
+
+    #[test]
+    fn optimized_grouped_beats_naive() {
+        let soc = soc_by_name("HelioP35").unwrap();
+        let mut b = GraphBuilder::new("t", 28, 28, 64);
+        let x = b.input_tensor();
+        let t = b.grouped_conv(x, 64, 3, 1, 8);
+        let g = b.finish(vec![t]);
+        let opt = compile(&g, GpuKind::PowerVR, CompileOptions::default());
+        assert_eq!(opt.kernels[0].impl_, KernelImpl::GroupedConv2D);
+        let naive = compile(
+            &g,
+            GpuKind::PowerVR,
+            CompileOptions { grouped: false, ..Default::default() },
+        );
+        let o = gpu_kernel_ms(&soc, &g, &opt.kernels[0]);
+        let n = gpu_kernel_ms(&soc, &g, &naive.kernels[0]);
+        assert!(n / o > 1.5, "naive={n} optimized={o}");
+    }
+
+    #[test]
+    fn fusion_reduces_kernel_total() {
+        let soc = soc_by_name("Exynos9820").unwrap();
+        let g = crate::zoo::mobilenets::mobilenet_v2(1.0);
+        let fused = compile(&g, GpuKind::Mali, CompileOptions::default());
+        let plain = compile(&g, GpuKind::Mali, CompileOptions { fusion: false, ..Default::default() });
+        let t_f: f64 = fused.kernels.iter().map(|k| gpu_kernel_ms(&soc, &g, k)).sum();
+        let t_p: f64 = plain.kernels.iter().map(|k| gpu_kernel_ms(&soc, &g, k)).sum();
+        let speedup = t_p / t_f;
+        assert!(speedup > 1.05 && speedup < 1.8, "fusion speedup {speedup}");
+    }
+}

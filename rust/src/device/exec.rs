@@ -1,0 +1,254 @@
+//! The device executor: runs an inference of a computational graph on a
+//! simulated SoC and returns the per-op (CPU) or per-kernel (GPU) latency
+//! trace plus end-to-end latency — the analogue of the TFLite Model
+//! Benchmark Tool + OpenCL command-queue timestamps (Section 4.3.1).
+
+use crate::device::cost::{cpu_op_ms, gpu_kernel_ms};
+use crate::device::noise::{cpu_noise, gpu_noise};
+use crate::device::{CoreCombo, DataRep, Soc};
+use crate::graph::{Graph, OpId, OpType};
+use crate::tflite::{compile, CompileOptions, FusedKernel, KernelImpl};
+use crate::util::Rng;
+
+/// Execution target for one scenario.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Target {
+    Cpu { combo: CoreCombo, rep: DataRep },
+    Gpu { options: CompileOptions },
+}
+
+/// Latency record of one executed op / kernel.
+#[derive(Debug, Clone)]
+pub struct OpTrace {
+    /// Root op of the kernel (CPU: the op itself).
+    pub op: OpId,
+    pub op_type: OpType,
+    pub kernel: KernelImpl,
+    /// Ops fused into this kernel (empty on CPU).
+    pub fused: Vec<OpId>,
+    pub latency_ms: f64,
+}
+
+/// One inference run.
+#[derive(Debug, Clone)]
+pub struct RunTrace {
+    pub per_op: Vec<OpTrace>,
+    /// Framework overhead outside op execution (the Fig 10 gap).
+    pub overhead_ms: f64,
+    pub end_to_end_ms: f64,
+}
+
+impl RunTrace {
+    pub fn op_sum_ms(&self) -> f64 {
+        self.per_op.iter().map(|t| t.latency_ms).sum()
+    }
+}
+
+/// Execute one inference run. Fully deterministic in
+/// `(seed, graph name, target, run_idx)`.
+pub fn run(soc: &Soc, g: &Graph, target: &Target, seed: u64, run_idx: usize) -> RunTrace {
+    let mut rng = run_rng(soc, g, target, seed, run_idx);
+    match target {
+        Target::Cpu { combo, rep } => run_cpu(soc, g, combo, *rep, &mut rng),
+        Target::Gpu { options } => run_gpu(soc, g, *options, &mut rng),
+    }
+}
+
+fn target_label(target: &Target) -> u64 {
+    match target {
+        Target::Cpu { combo, rep } => {
+            let mut h: u64 = match rep {
+                DataRep::Fp32 => 1,
+                DataRep::Int8 => 2,
+            };
+            for &c in &combo.counts {
+                h = h.wrapping_mul(31).wrapping_add(c as u64 + 1);
+            }
+            h
+        }
+        Target::Gpu { options } => {
+            0x4000 | (options.fusion as u64) | (options.winograd as u64) << 1
+                | (options.grouped as u64) << 2
+        }
+    }
+}
+
+fn run_rng(soc: &Soc, g: &Graph, target: &Target, seed: u64, run_idx: usize) -> Rng {
+    let mut name_hash: u64 = 0xcbf29ce484222325;
+    for b in g.name.bytes() {
+        name_hash = (name_hash ^ b as u64).wrapping_mul(0x100000001b3);
+    }
+    let mut soc_hash: u64 = 0xcbf29ce484222325;
+    for b in soc.name.bytes() {
+        soc_hash = (soc_hash ^ b as u64).wrapping_mul(0x100000001b3);
+    }
+    Rng::derive(seed, &[soc_hash, name_hash, target_label(target), run_idx as u64])
+}
+
+fn run_cpu(soc: &Soc, g: &Graph, combo: &CoreCombo, rep: DataRep, rng: &mut Rng) -> RunTrace {
+    combo.validate(soc).expect("invalid core combo");
+    let params = cpu_noise(soc, combo);
+    let noise = params.sample_run(rng);
+    // TFLite's non-parallel ops land on whichever core hosts the
+    // interpreter thread this run.
+    let cores = combo.cores();
+    let serial_cluster = *rng.choice(&cores);
+    let mut per_op = Vec::with_capacity(g.nodes.len());
+    for node in &g.nodes {
+        let base = cpu_op_ms(soc, g, node, combo, rep, serial_cluster);
+        let ms = base * noise.op_factor(rng);
+        per_op.push(OpTrace {
+            op: node.id,
+            op_type: node.op.op_type(),
+            kernel: KernelImpl::Generic,
+            fused: Vec::new(),
+            latency_ms: ms,
+        });
+    }
+    let overhead = soc.cpu_overhead_ms * rng.lognormal_unit_mean(0.15);
+    let total: f64 = per_op.iter().map(|t| t.latency_ms).sum::<f64>() + overhead;
+    RunTrace { per_op, overhead_ms: overhead, end_to_end_ms: total }
+}
+
+fn run_gpu(soc: &Soc, g: &Graph, options: CompileOptions, rng: &mut Rng) -> RunTrace {
+    let compiled = compile(g, soc.gpu.kind, options);
+    let params = gpu_noise(soc);
+    let noise = params.sample_run(rng);
+    let mut per_op = Vec::with_capacity(compiled.kernels.len());
+    for k in &compiled.kernels {
+        let base = gpu_kernel_ms(soc, g, k);
+        let ms = base * noise.op_factor(rng);
+        per_op.push(trace_of(g, k, ms));
+    }
+    let overhead = soc.gpu.overhead_ms * rng.lognormal_unit_mean(soc.gpu.overhead_sigma);
+    let total: f64 = per_op.iter().map(|t| t.latency_ms).sum::<f64>() + overhead;
+    RunTrace { per_op, overhead_ms: overhead, end_to_end_ms: total }
+}
+
+fn trace_of(g: &Graph, k: &FusedKernel, ms: f64) -> OpTrace {
+    OpTrace {
+        op: k.root(),
+        op_type: g.nodes[k.root()].op.op_type(),
+        kernel: k.impl_,
+        fused: k.fused_ops().to_vec(),
+        latency_ms: ms,
+    }
+}
+
+/// Run `n` times and return the median end-to-end latency with all traces.
+pub fn run_many(soc: &Soc, g: &Graph, target: &Target, seed: u64, n: usize) -> Vec<RunTrace> {
+    (0..n).map(|i| run(soc, g, target, seed, i)).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::device::soc_by_name;
+
+    fn g() -> Graph {
+        crate::zoo::mobilenets::mobilenet_v2(0.5)
+    }
+
+    fn cpu_target(counts: Vec<usize>) -> Target {
+        Target::Cpu { combo: CoreCombo::new(counts), rep: DataRep::Fp32 }
+    }
+
+    #[test]
+    fn deterministic_per_run_index() {
+        let soc = soc_by_name("Snapdragon855").unwrap();
+        let g = g();
+        let t = cpu_target(vec![1, 0, 0]);
+        let a = run(&soc, &g, &t, 42, 0);
+        let b = run(&soc, &g, &t, 42, 0);
+        assert_eq!(a.end_to_end_ms, b.end_to_end_ms);
+        let c = run(&soc, &g, &t, 42, 1);
+        assert_ne!(a.end_to_end_ms, c.end_to_end_ms);
+    }
+
+    #[test]
+    fn end_to_end_exceeds_op_sum() {
+        // Fig 10: end-to-end latency > sum of op latencies (overhead).
+        let soc = soc_by_name("Exynos9820").unwrap();
+        let g = g();
+        for t in [cpu_target(vec![1, 0, 0]), Target::Gpu { options: CompileOptions::default() }] {
+            let r = run(&soc, &g, &t, 1, 0);
+            assert!(r.end_to_end_ms > r.op_sum_ms());
+            assert!((r.end_to_end_ms - r.op_sum_ms() - r.overhead_ms).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn gpu_trace_counts_kernels_not_ops() {
+        let soc = soc_by_name("Snapdragon855").unwrap();
+        let g = g();
+        let r = run(&soc, &g, &Target::Gpu { options: CompileOptions::default() }, 1, 0);
+        assert!(r.per_op.len() < g.nodes.len());
+        let fused_total: usize = r.per_op.iter().map(|t| 1 + t.fused.len()).sum();
+        assert_eq!(fused_total, g.nodes.len());
+    }
+
+    #[test]
+    fn quantization_speeds_up_end_to_end() {
+        // Fig 4: int8 faster end-to-end on all devices.
+        for soc in crate::device::socs() {
+            let g = g();
+            let counts = vec![0; soc.clusters.len()];
+            let mut c1 = counts.clone();
+            c1[0] = 1;
+            let f = run(
+                &soc,
+                &g,
+                &Target::Cpu { combo: CoreCombo::new(c1.clone()), rep: DataRep::Fp32 },
+                3,
+                0,
+            );
+            let q = run(
+                &soc,
+                &g,
+                &Target::Cpu { combo: CoreCombo::new(c1), rep: DataRep::Int8 },
+                3,
+                0,
+            );
+            assert!(
+                f.end_to_end_ms / q.end_to_end_ms > 1.3,
+                "{}: fp32={} int8={}",
+                soc.name,
+                f.end_to_end_ms,
+                q.end_to_end_ms
+            );
+        }
+    }
+
+    #[test]
+    fn latencies_in_plausible_mobile_range() {
+        // MobileNetV2 0.5 on a Pixel 4 big core: O(10ms), not µs or seconds.
+        let soc = soc_by_name("Snapdragon855").unwrap();
+        let g = g();
+        let r = run(&soc, &g, &cpu_target(vec![1, 0, 0]), 5, 0);
+        assert!(
+            (3.0..80.0).contains(&r.end_to_end_ms),
+            "end_to_end={}ms",
+            r.end_to_end_ms
+        );
+    }
+
+    #[test]
+    fn helio_much_slower_than_flagship() {
+        let g = g();
+        let s855 = soc_by_name("Snapdragon855").unwrap();
+        let p35 = soc_by_name("HelioP35").unwrap();
+        let fast = run(&s855, &g, &cpu_target(vec![1, 0, 0]), 5, 0).end_to_end_ms;
+        let slow = run(&p35, &g, &cpu_target(vec![1, 0]), 5, 0).end_to_end_ms;
+        assert!(slow / fast > 2.0, "fast={fast} slow={slow}");
+    }
+
+    #[test]
+    fn run_many_produces_variance() {
+        let soc = soc_by_name("Snapdragon710").unwrap();
+        let g = g();
+        let rs = run_many(&soc, &g, &cpu_target(vec![0, 6]), 9, 20);
+        let e2e: Vec<f64> = rs.iter().map(|r| r.end_to_end_ms).collect();
+        let cov = crate::util::cov(&e2e);
+        assert!(cov > 0.02, "cov={cov}");
+    }
+}

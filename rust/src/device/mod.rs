@@ -1,0 +1,388 @@
+//! The simulated mobile-device substrate (see DESIGN.md §2 for the
+//! substitution argument). Models the four SoCs of Table 1: heterogeneous
+//! ARM big.LITTLE CPU clusters (Ruy-style equal-split multithreading,
+//! cross-cluster sync overhead, int8 quantization effects) and mobile GPUs
+//! (per-dispatch overhead, fusion, Winograd / grouped kernel selection),
+//! plus a measurement-noise model reproducing the paper's variance findings
+//! (Fig 32: CoV grows with core count, especially small-core clusters).
+
+pub mod cost;
+pub mod exec;
+pub mod noise;
+
+pub use exec::{run, OpTrace, RunTrace, Target};
+
+use crate::tflite::GpuKind;
+
+/// Cluster tier within a big.LITTLE SoC.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum ClusterKind {
+    Large,
+    Medium,
+    Small,
+}
+
+impl ClusterKind {
+    pub fn letter(&self) -> char {
+        match self {
+            ClusterKind::Large => 'L',
+            ClusterKind::Medium => 'M',
+            ClusterKind::Small => 'S',
+        }
+    }
+}
+
+/// A homogeneous CPU core cluster sharing one clock domain.
+#[derive(Debug, Clone)]
+pub struct CoreCluster {
+    pub kind: ClusterKind,
+    pub name: &'static str,
+    pub count: usize,
+    pub ghz: f64,
+    /// Peak fp32 FLOPs per cycle per core (NEON FMA width).
+    pub flops_per_cycle: f64,
+    /// int8 throughput multiplier vs fp32 (dot-product instructions).
+    pub int8_speedup: f64,
+    /// Effective per-core streaming bandwidth (GB/s) seen by Ruy-style
+    /// kernels (packing + strided access make this far below DRAM peak;
+    /// this term is what makes narrow architectures memory-bound).
+    pub stream_gbps: f64,
+}
+
+impl CoreCluster {
+    /// Peak fp32 GFLOPS of one core.
+    pub fn peak_gflops(&self) -> f64 {
+        self.ghz * self.flops_per_cycle
+    }
+}
+
+/// A mobile GPU with TFLite-relevant performance parameters.
+#[derive(Debug, Clone)]
+pub struct GpuSpec {
+    pub kind: GpuKind,
+    pub name: &'static str,
+    /// Effective peak GFLOPS (fp16/fp32 mixed as TFLite GPU delegate uses).
+    pub gflops: f64,
+    /// Memory bandwidth available to the GPU (GB/s).
+    pub mem_gbps: f64,
+    /// Per-kernel dispatch overhead (µs): OpenCL enqueue + driver cost.
+    pub dispatch_us: f64,
+    /// Mean per-inference framework overhead (ms) — the Fig 10b gap.
+    pub overhead_ms: f64,
+    /// Log-std of the framework overhead (PowerVR/Mali are more variable).
+    pub overhead_sigma: f64,
+    /// Per-run multiplicative noise log-std (faster GPUs are noisier
+    /// relative to their shorter run times — Section 5.5.2).
+    pub run_sigma: f64,
+}
+
+/// A system-on-chip: CPU clusters (fastest first) + GPU (Table 1).
+#[derive(Debug, Clone)]
+pub struct Soc {
+    pub name: &'static str,
+    pub platform: &'static str,
+    pub clusters: Vec<CoreCluster>,
+    pub gpu: GpuSpec,
+    /// CPU-side memory bandwidth (GB/s), shared across cores.
+    pub mem_gbps: f64,
+    /// Fixed per-op CPU dispatch overhead (µs).
+    pub cpu_op_overhead_us: f64,
+    /// Mean per-inference CPU framework overhead (ms) — the Fig 10a gap.
+    pub cpu_overhead_ms: f64,
+    /// Cross-cluster thread-sync penalty multiplier (Insight 1).
+    pub hetero_sync_mult: f64,
+    /// int8 rescale degradation factor for element-wise/pad ops (Insight 2).
+    pub quant_ew_penalty: f64,
+    /// Per-run noise: base log-std and per-small-core increment (Fig 32).
+    pub noise_base: f64,
+    pub noise_per_small_core: f64,
+    pub noise_per_extra_core: f64,
+}
+
+/// Which cores an inference uses: cores per cluster index.
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub struct CoreCombo {
+    /// `counts[i]` cores taken from `soc.clusters[i]`.
+    pub counts: Vec<usize>,
+}
+
+impl CoreCombo {
+    pub fn new(counts: Vec<usize>) -> CoreCombo {
+        CoreCombo { counts }
+    }
+
+    pub fn total_cores(&self) -> usize {
+        self.counts.iter().sum()
+    }
+
+    pub fn is_heterogeneous(&self) -> bool {
+        self.counts.iter().filter(|&&c| c > 0).count() > 1
+    }
+
+    /// Label like "1L+3M" for figures.
+    pub fn label(&self, soc: &Soc) -> String {
+        let mut parts = Vec::new();
+        for (i, &c) in self.counts.iter().enumerate() {
+            if c > 0 {
+                parts.push(format!("{}{}", c, soc.clusters[i].kind.letter()));
+            }
+        }
+        parts.join("+")
+    }
+
+    /// Expand to a list of cluster indices, one per core.
+    pub fn cores(&self) -> Vec<usize> {
+        let mut v = Vec::with_capacity(self.total_cores());
+        for (i, &c) in self.counts.iter().enumerate() {
+            for _ in 0..c {
+                v.push(i);
+            }
+        }
+        v
+    }
+
+    /// Number of cores drawn from `Small` clusters.
+    pub fn small_cores(&self, soc: &Soc) -> usize {
+        self.counts
+            .iter()
+            .enumerate()
+            .filter(|(i, _)| soc.clusters[*i].kind == ClusterKind::Small)
+            .map(|(_, &c)| c)
+            .sum()
+    }
+
+    pub fn validate(&self, soc: &Soc) -> Result<(), String> {
+        if self.counts.len() != soc.clusters.len() {
+            return Err(format!(
+                "combo has {} clusters, {} has {}",
+                self.counts.len(),
+                soc.name,
+                soc.clusters.len()
+            ));
+        }
+        for (i, &c) in self.counts.iter().enumerate() {
+            if c > soc.clusters[i].count {
+                return Err(format!(
+                    "combo wants {c} cores from cluster {} ({} available)",
+                    soc.clusters[i].name, soc.clusters[i].count
+                ));
+            }
+        }
+        if self.total_cores() == 0 {
+            return Err("combo has no cores".into());
+        }
+        Ok(())
+    }
+}
+
+/// Data representation of weights and activations (Section 3.1.2).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum DataRep {
+    Fp32,
+    Int8,
+}
+
+impl DataRep {
+    pub fn name(&self) -> &'static str {
+        match self {
+            DataRep::Fp32 => "fp32",
+            DataRep::Int8 => "int8",
+        }
+    }
+    pub fn bytes(&self) -> f64 {
+        match self {
+            DataRep::Fp32 => 4.0,
+            DataRep::Int8 => 1.0,
+        }
+    }
+}
+
+/// The four platforms of Table 1.
+pub fn socs() -> Vec<Soc> {
+    vec![
+        // Google Pixel 4 — Snapdragon 855: 1x Kryo 485 Prime 2.84 GHz,
+        // 3x Kryo 485 Gold 2.42 GHz, 4x Kryo 485 Silver 1.80 GHz; Adreno 640.
+        Soc {
+            name: "Snapdragon855",
+            platform: "Google Pixel 4",
+            clusters: vec![
+                CoreCluster { kind: ClusterKind::Large, name: "Kryo 485 Prime", count: 1, ghz: 2.84, flops_per_cycle: 16.0, int8_speedup: 3.0, stream_gbps: 8.50 },
+                CoreCluster { kind: ClusterKind::Medium, name: "Kryo 485 Gold", count: 3, ghz: 2.42, flops_per_cycle: 16.0, int8_speedup: 3.0, stream_gbps: 7.00 },
+                CoreCluster { kind: ClusterKind::Small, name: "Kryo 485 Silver", count: 4, ghz: 1.80, flops_per_cycle: 8.0, int8_speedup: 2.4, stream_gbps: 4.00 },
+            ],
+            gpu: GpuSpec {
+                kind: GpuKind::Adreno6xx,
+                name: "Adreno 640",
+                gflops: 900.0,
+                mem_gbps: 28.0,
+                dispatch_us: 28.0,
+                overhead_ms: 3.2,
+                overhead_sigma: 0.10,
+                run_sigma: 0.035,
+            },
+            mem_gbps: 28.0,
+            cpu_op_overhead_us: 3.0,
+            cpu_overhead_ms: 0.7,
+            hetero_sync_mult: 2.6,
+            quant_ew_penalty: 2.55,
+            noise_base: 0.012,
+            noise_per_small_core: 0.016,
+            noise_per_extra_core: 0.006,
+        },
+        // Xiaomi Mi 8 SE — Snapdragon 710: 2x Kryo 360 Gold 2.2 GHz,
+        // 6x Kryo 360 Silver 1.7 GHz; Adreno 616.
+        Soc {
+            name: "Snapdragon710",
+            platform: "Xiaomi Mi 8 SE",
+            clusters: vec![
+                CoreCluster { kind: ClusterKind::Large, name: "Kryo 360 Gold", count: 2, ghz: 2.2, flops_per_cycle: 16.0, int8_speedup: 2.6, stream_gbps: 6.50 },
+                CoreCluster { kind: ClusterKind::Small, name: "Kryo 360 Silver", count: 6, ghz: 1.7, flops_per_cycle: 8.0, int8_speedup: 2.2, stream_gbps: 3.50 },
+            ],
+            gpu: GpuSpec {
+                kind: GpuKind::Adreno6xx,
+                name: "Adreno 616",
+                gflops: 380.0,
+                mem_gbps: 13.0,
+                dispatch_us: 34.0,
+                overhead_ms: 4.1,
+                overhead_sigma: 0.08,
+                run_sigma: 0.022,
+            },
+            mem_gbps: 13.0,
+            cpu_op_overhead_us: 4.0,
+            cpu_overhead_ms: 0.9,
+            hetero_sync_mult: 2.4,
+            quant_ew_penalty: 2.35,
+            noise_base: 0.012,
+            noise_per_small_core: 0.013,
+            noise_per_extra_core: 0.005,
+        },
+        // Samsung Galaxy S10 — Exynos 9820: 2x M4 2.73 GHz, 2x A75 2.31 GHz,
+        // 4x A55 1.95 GHz; Mali G76.
+        Soc {
+            name: "Exynos9820",
+            platform: "Samsung Galaxy S10",
+            clusters: vec![
+                CoreCluster { kind: ClusterKind::Large, name: "M4 Cheetah", count: 2, ghz: 2.73, flops_per_cycle: 24.0, int8_speedup: 2.8, stream_gbps: 9.00 },
+                CoreCluster { kind: ClusterKind::Medium, name: "Cortex-A75", count: 2, ghz: 2.31, flops_per_cycle: 16.0, int8_speedup: 2.8, stream_gbps: 6.50 },
+                CoreCluster { kind: ClusterKind::Small, name: "Cortex-A55", count: 4, ghz: 1.95, flops_per_cycle: 8.0, int8_speedup: 2.3, stream_gbps: 3.75 },
+            ],
+            gpu: GpuSpec {
+                kind: GpuKind::Mali,
+                name: "Mali G76",
+                gflops: 780.0,
+                mem_gbps: 28.0,
+                dispatch_us: 42.0,
+                overhead_ms: 5.6,
+                overhead_sigma: 0.18,
+                run_sigma: 0.045,
+            },
+            mem_gbps: 28.0,
+            cpu_op_overhead_us: 3.2,
+            cpu_overhead_ms: 0.8,
+            // Exynos inter-cluster communication is notoriously costly
+            // (Section 5.2: hetero combos show the worst variability here).
+            hetero_sync_mult: 3.4,
+            quant_ew_penalty: 2.60,
+            noise_base: 0.014,
+            noise_per_small_core: 0.022,
+            noise_per_extra_core: 0.008,
+        },
+        // Samsung Galaxy A03s — Helio P35: 4x A53 2.3 GHz + 4x A53 1.8 GHz;
+        // PowerVR GE8320. Both clusters are Cortex-A53 (Section 5.5.2).
+        Soc {
+            name: "HelioP35",
+            platform: "Samsung Galaxy A03s",
+            clusters: vec![
+                CoreCluster { kind: ClusterKind::Large, name: "Cortex-A53 @2.3", count: 4, ghz: 2.3, flops_per_cycle: 8.0, int8_speedup: 1.9, stream_gbps: 4.00 },
+                CoreCluster { kind: ClusterKind::Small, name: "Cortex-A53 @1.8", count: 4, ghz: 1.8, flops_per_cycle: 8.0, int8_speedup: 1.9, stream_gbps: 3.25 },
+            ],
+            gpu: GpuSpec {
+                kind: GpuKind::PowerVR,
+                name: "PowerVR GE8320",
+                gflops: 55.0,
+                mem_gbps: 6.5,
+                dispatch_us: 60.0,
+                overhead_ms: 7.5,
+                overhead_sigma: 0.20,
+                run_sigma: 0.016,
+            },
+            mem_gbps: 6.5,
+            cpu_op_overhead_us: 7.0,
+            cpu_overhead_ms: 1.4,
+            // Same microarchitecture in both clusters: cheap migration.
+            hetero_sync_mult: 1.6,
+            quant_ew_penalty: 2.2,
+            noise_base: 0.012,
+            noise_per_small_core: 0.012,
+            noise_per_extra_core: 0.006,
+        },
+    ]
+}
+
+/// Look up a SoC by name.
+pub fn soc_by_name(name: &str) -> Option<Soc> {
+    socs().into_iter().find(|s| s.name == name)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn four_socs_match_table1() {
+        let s = socs();
+        assert_eq!(s.len(), 4);
+        let s855 = &s[0];
+        assert_eq!(s855.clusters.len(), 3);
+        assert_eq!(s855.clusters.iter().map(|c| c.count).sum::<usize>(), 8);
+        assert_eq!(s855.gpu.name, "Adreno 640");
+        let p35 = &s[3];
+        assert_eq!(p35.clusters.len(), 2);
+        assert_eq!(p35.gpu.kind, GpuKind::PowerVR);
+    }
+
+    #[test]
+    fn combo_labels() {
+        let s855 = soc_by_name("Snapdragon855").unwrap();
+        let c = CoreCombo::new(vec![1, 3, 0]);
+        assert_eq!(c.label(&s855), "1L+3M");
+        assert!(c.is_heterogeneous());
+        assert_eq!(c.total_cores(), 4);
+        let c1 = CoreCombo::new(vec![0, 0, 2]);
+        assert_eq!(c1.label(&s855), "2S");
+        assert!(!c1.is_heterogeneous());
+        assert_eq!(c1.small_cores(&s855), 2);
+    }
+
+    #[test]
+    fn combo_validation() {
+        let s855 = soc_by_name("Snapdragon855").unwrap();
+        assert!(CoreCombo::new(vec![2, 0, 0]).validate(&s855).is_err()); // only 1 prime
+        assert!(CoreCombo::new(vec![0, 0, 0]).validate(&s855).is_err());
+        assert!(CoreCombo::new(vec![1, 0]).validate(&s855).is_err()); // wrong arity
+        assert!(CoreCombo::new(vec![1, 3, 4]).validate(&s855).is_ok());
+    }
+
+    #[test]
+    fn cluster_ordering_fast_first() {
+        for soc in socs() {
+            for w in soc.clusters.windows(2) {
+                assert!(
+                    w[0].peak_gflops() >= w[1].peak_gflops(),
+                    "{}: clusters must be fastest-first",
+                    soc.name
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn large_cores_faster_than_small() {
+        for soc in socs() {
+            let first = soc.clusters.first().unwrap().peak_gflops();
+            let last = soc.clusters.last().unwrap().peak_gflops();
+            assert!(first > last, "{}", soc.name);
+        }
+    }
+}

@@ -1,0 +1,145 @@
+//! Measurement-noise model.
+//!
+//! Real measurements in the paper fluctuate with background jobs (camera,
+//! sensors, networking), DVFS and inter-cluster migration; the coefficient
+//! of variation grows with the number of cores used — especially small
+//! ("efficiency") cores, which share the cluster with background work
+//! (Fig 32, Sections 5.2/5.5.2). We model:
+//!
+//! - a per-run correlated log-normal factor (whole-inference slowdown),
+//!   whose log-std grows with core count and small-core count;
+//! - per-op i.i.d. log-normal jitter;
+//! - rare heavy-tail outliers (a background job stealing the cluster).
+
+use crate::device::{CoreCombo, Soc};
+use crate::util::Rng;
+
+#[derive(Debug, Clone, Copy)]
+pub struct NoiseParams {
+    /// Log-std of the per-run correlated factor.
+    pub run_sigma: f64,
+    /// Log-std of per-op jitter.
+    pub op_sigma: f64,
+    /// Probability that a run is an outlier.
+    pub outlier_p: f64,
+    /// Outlier multiplier range.
+    pub outlier_lo: f64,
+    pub outlier_hi: f64,
+}
+
+/// Noise parameters for a CPU scenario.
+pub fn cpu_noise(soc: &Soc, combo: &CoreCombo) -> NoiseParams {
+    let n = combo.total_cores();
+    let small = combo.small_cores(soc);
+    let hetero_extra = if combo.is_heterogeneous() { 0.008 } else { 0.0 };
+    let run_sigma = soc.noise_base
+        + soc.noise_per_small_core * small as f64
+        + soc.noise_per_extra_core * (n - 1) as f64
+        + hetero_extra;
+    // Using the whole small cluster maximizes contention with background
+    // jobs (the paper's worst cases: 6 small on S710, 4 small on E9820).
+    let all_small = small > 0 && small == soc.clusters.iter().filter(|c| c.kind == crate::device::ClusterKind::Small).map(|c| c.count).sum::<usize>();
+    let outlier_p = if all_small {
+        0.035
+    } else if small > 0 {
+        0.02
+    } else {
+        0.01
+    };
+    NoiseParams {
+        run_sigma,
+        op_sigma: 0.025,
+        outlier_p,
+        outlier_lo: 1.4,
+        outlier_hi: 3.2,
+    }
+}
+
+/// Noise parameters for a GPU scenario.
+pub fn gpu_noise(soc: &Soc) -> NoiseParams {
+    NoiseParams {
+        run_sigma: soc.gpu.run_sigma,
+        op_sigma: 0.02,
+        outlier_p: 0.008,
+        outlier_lo: 1.3,
+        outlier_hi: 2.2,
+    }
+}
+
+/// Per-run sampled factors.
+#[derive(Debug, Clone, Copy)]
+pub struct RunNoise {
+    /// Correlated multiplier applied to every op this run.
+    pub run_factor: f64,
+    pub op_sigma: f64,
+}
+
+impl NoiseParams {
+    /// Draw this run's correlated factor (including possible outlier).
+    pub fn sample_run(&self, rng: &mut Rng) -> RunNoise {
+        let mut f = rng.lognormal_unit_mean(self.run_sigma);
+        if rng.bool(self.outlier_p) {
+            f *= rng.range_f64(self.outlier_lo, self.outlier_hi);
+        }
+        RunNoise { run_factor: f, op_sigma: self.op_sigma }
+    }
+}
+
+impl RunNoise {
+    /// Apply per-op jitter on top of the run factor.
+    pub fn op_factor(&self, rng: &mut Rng) -> f64 {
+        self.run_factor * rng.lognormal_unit_mean(self.op_sigma)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::device::soc_by_name;
+
+    #[test]
+    fn more_cores_noisier() {
+        let soc = soc_by_name("Snapdragon710").unwrap();
+        let one = cpu_noise(&soc, &CoreCombo::new(vec![0, 1]));
+        let six = cpu_noise(&soc, &CoreCombo::new(vec![0, 6]));
+        assert!(six.run_sigma > 2.0 * one.run_sigma);
+        assert!(six.outlier_p > one.outlier_p);
+    }
+
+    #[test]
+    fn small_cores_noisier_than_large() {
+        let soc = soc_by_name("Exynos9820").unwrap();
+        let large2 = cpu_noise(&soc, &CoreCombo::new(vec![2, 0, 0]));
+        let small2 = cpu_noise(&soc, &CoreCombo::new(vec![0, 0, 2]));
+        assert!(small2.run_sigma > large2.run_sigma);
+    }
+
+    #[test]
+    fn fast_gpus_relatively_noisier() {
+        // Section 5.5.2: slower GPUs show smaller relative variance.
+        let mali = gpu_noise(&soc_by_name("Exynos9820").unwrap());
+        let powervr = gpu_noise(&soc_by_name("HelioP35").unwrap());
+        assert!(mali.run_sigma > powervr.run_sigma);
+    }
+
+    #[test]
+    fn noise_is_unit_mean() {
+        let soc = soc_by_name("Snapdragon855").unwrap();
+        let p = cpu_noise(&soc, &CoreCombo::new(vec![1, 0, 0]));
+        let mut rng = Rng::new(7);
+        let n = 40_000;
+        let mean: f64 =
+            (0..n).map(|_| p.sample_run(&mut rng).run_factor).sum::<f64>() / n as f64;
+        // Outliers push the mean slightly above 1.
+        assert!((0.98..1.06).contains(&mean), "mean={mean}");
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let soc = soc_by_name("Snapdragon855").unwrap();
+        let p = cpu_noise(&soc, &CoreCombo::new(vec![1, 3, 0]));
+        let a = p.sample_run(&mut Rng::new(3)).run_factor;
+        let b = p.sample_run(&mut Rng::new(3)).run_factor;
+        assert_eq!(a, b);
+    }
+}

@@ -1,0 +1,279 @@
+//! Feature extraction (Table 3 of the paper): per-operation feature vectors
+//! combining shape parameters with memory-cost features (input/output/param
+//! sizes) and compute-cost features (FLOPs), plus the standardization used
+//! before model fitting (Section 4.2).
+
+use crate::graph::{Graph, Node, Op, OpType};
+use crate::tflite::FusedKernel;
+
+/// Predictor bucket name for an op or kernel: one ML model is trained per
+/// bucket per scenario. GPU convolutions split into Conv2D / Winograd /
+/// GroupedConv2D per the selected kernel (Section 5.4).
+pub fn bucket_of(g: &Graph, k: &FusedKernel) -> String {
+    let root_type = g.nodes[k.root()].op.op_type();
+    k.impl_.predictor_bucket(root_type).to_string()
+}
+
+/// Bucket for a CPU op (no kernel selection on CPU).
+pub fn cpu_bucket(node: &Node) -> String {
+    node.op.op_type().name().to_string()
+}
+
+/// Feature vector of an op (Table 3 layout per op category).
+pub fn features(g: &Graph, node: &Node) -> Vec<f64> {
+    let ins = g.input_shapes(node);
+    let outs = g.output_shapes(node);
+    let in0 = ins[0];
+    let out0 = outs[0];
+    let in_size: f64 = ins.iter().map(|s| s.numel() as f64).sum();
+    let out_size: f64 = outs.iter().map(|s| s.numel() as f64).sum();
+    let flops = node.op.flops(&ins, &outs) as f64;
+    let params = node.op.param_count(&ins, &outs) as f64;
+
+    match &node.op {
+        Op::Conv2D { kh, kw, stride, out_c, groups, .. } => {
+            let mut v = vec![
+                in0.h as f64,
+                in0.w as f64,
+                in0.c as f64,
+                out0.h as f64,
+                out0.w as f64,
+                *out_c as f64,
+                *stride as f64,
+                *kh as f64,
+                *kw as f64,
+                in_size,
+                out_size,
+                params,
+                flops,
+            ];
+            if *groups > 1 {
+                v.push(*groups as f64);
+            }
+            v
+        }
+        Op::DepthwiseConv2D { kh, kw, stride, .. } => vec![
+            in0.h as f64,
+            in0.w as f64,
+            in0.c as f64,
+            out0.h as f64,
+            out0.w as f64,
+            out0.c as f64,
+            *stride as f64,
+            *kh as f64,
+            *kw as f64,
+            in_size,
+            out_size,
+            params,
+            flops,
+        ],
+        Op::FullyConnected { out_features } => {
+            vec![in0.c as f64, *out_features as f64, params, flops]
+        }
+        Op::Mean => vec![in0.h as f64, in0.w as f64, in0.c as f64, in_size, flops],
+        Op::Concat | Op::Split { .. } => vec![
+            in0.h as f64,
+            in0.w as f64,
+            in0.c as f64,
+            out0.c as f64,
+            in_size,
+            out_size,
+        ],
+        Op::Pooling { kh, kw, stride, .. } => vec![
+            in0.h as f64,
+            in0.w as f64,
+            in0.c as f64,
+            out0.h as f64,
+            out0.w as f64,
+            *stride as f64,
+            *kh as f64,
+            *kw as f64,
+            in_size,
+            out_size,
+            flops,
+        ],
+        Op::Pad { pad_h, pad_w } => vec![
+            in0.h as f64,
+            in0.w as f64,
+            in0.c as f64,
+            out0.h as f64,
+            out0.w as f64,
+            (*pad_h + *pad_w) as f64,
+            out_size,
+        ],
+        Op::ElementWise { .. } => vec![in0.h as f64, in0.w as f64, in0.c as f64, in_size],
+        Op::Activation { .. } => {
+            vec![in0.h as f64, in0.w as f64, in0.c as f64, in_size, flops]
+        }
+        Op::Softmax | Op::Reshape => vec![in_size, out_size],
+    }
+}
+
+/// Features of a fused GPU kernel: the root op's features plus the total
+/// size of extra fused inputs (residual shortcuts read by the kernel).
+pub fn kernel_features(g: &Graph, k: &FusedKernel) -> Vec<f64> {
+    let root = &g.nodes[k.root()];
+    let mut v = features(g, root);
+    let root_in: usize = root.inputs.len();
+    let extra: f64 = k.src.iter().skip(root_in).map(|&t| g.shape(t).numel() as f64).sum();
+    v.push(extra);
+    v.push(k.fused_ops().len() as f64);
+    v
+}
+
+/// Number of features for each bucket (kernel features = op features + 2).
+pub fn feature_dim(op_type: OpType, grouped: bool) -> usize {
+    match op_type {
+        OpType::Conv2D | OpType::DepthwiseConv2D => 13,
+        OpType::GroupedConv2D => {
+            if grouped {
+                14
+            } else {
+                13
+            }
+        }
+        OpType::FullyConnected => 4,
+        OpType::Mean => 5,
+        OpType::ConcatSplit => 6,
+        OpType::Pooling => 11,
+        OpType::Pad => 7,
+        OpType::ElementWise => 4,
+        OpType::Activation => 5,
+        OpType::Softmax | OpType::Reshape => 2,
+    }
+}
+
+/// Feature standardizer: per-feature mean/std from the training set
+/// (Section 4.2), applied before every model.
+#[derive(Debug, Clone)]
+pub struct Standardizer {
+    pub mean: Vec<f64>,
+    pub std: Vec<f64>,
+}
+
+impl Standardizer {
+    pub fn fit(rows: &[Vec<f64>]) -> Standardizer {
+        assert!(!rows.is_empty(), "cannot fit standardizer on empty data");
+        let d = rows[0].len();
+        let n = rows.len() as f64;
+        let mut mean = vec![0.0; d];
+        for r in rows {
+            for (m, x) in mean.iter_mut().zip(r) {
+                *m += x;
+            }
+        }
+        for m in &mut mean {
+            *m /= n;
+        }
+        let mut var = vec![0.0; d];
+        for r in rows {
+            for ((v, x), m) in var.iter_mut().zip(r).zip(&mean) {
+                *v += (x - m) * (x - m);
+            }
+        }
+        let std = var
+            .into_iter()
+            .map(|v| {
+                let s = (v / n).sqrt();
+                if s < 1e-12 {
+                    1.0
+                } else {
+                    s
+                }
+            })
+            .collect();
+        Standardizer { mean, std }
+    }
+
+    pub fn transform(&self, x: &[f64]) -> Vec<f64> {
+        x.iter()
+            .zip(&self.mean)
+            .zip(&self.std)
+            .map(|((x, m), s)| (x - m) / s)
+            .collect()
+    }
+
+    pub fn transform_all(&self, rows: &[Vec<f64>]) -> Vec<Vec<f64>> {
+        rows.iter().map(|r| self.transform(r)).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::{GraphBuilder, Padding};
+    use crate::tflite::{compile, CompileOptions, GpuKind};
+
+    #[test]
+    fn conv_features_have_13_dims() {
+        let mut b = GraphBuilder::new("t", 28, 28, 32);
+        let x = b.input_tensor();
+        let t = b.conv(x, 64, 3, 1, Padding::Same);
+        let g = b.finish(vec![t]);
+        let f = features(&g, &g.nodes[0]);
+        assert_eq!(f.len(), 13);
+        // flops is last and positive
+        assert!(f[12] > 0.0);
+        assert_eq!(f[2], 32.0); // in_c
+        assert_eq!(f[5], 64.0); // out_c (filters)
+    }
+
+    #[test]
+    fn grouped_conv_adds_group_feature() {
+        let mut b = GraphBuilder::new("t", 28, 28, 32);
+        let x = b.input_tensor();
+        let t = b.grouped_conv(x, 64, 3, 1, 4);
+        let g = b.finish(vec![t]);
+        let f = features(&g, &g.nodes[0]);
+        assert_eq!(f.len(), 14);
+        assert_eq!(f[13], 4.0);
+    }
+
+    #[test]
+    fn kernel_features_include_fused_extras() {
+        let mut b = GraphBuilder::new("t", 8, 8, 8);
+        let x = b.input_tensor();
+        let y = b.conv(x, 8, 3, 1, Padding::Same);
+        let t = b.add_t(y, x);
+        let t = b.relu(t);
+        let g = b.finish(vec![t]);
+        let ks = compile(&g, GpuKind::Mali, CompileOptions::default()).kernels;
+        assert_eq!(ks.len(), 1);
+        let f = kernel_features(&g, &ks[0]);
+        // conv features (13) + extra-input size + fused count
+        assert_eq!(f.len(), 15);
+        assert_eq!(f[13], 8.0 * 8.0 * 8.0); // the shortcut tensor
+        assert_eq!(f[14], 2.0); // add + relu fused
+    }
+
+    #[test]
+    fn standardizer_zero_mean_unit_std() {
+        let rows: Vec<Vec<f64>> = (0..100).map(|i| vec![i as f64, 5.0]).collect();
+        let s = Standardizer::fit(&rows);
+        let t = s.transform_all(&rows);
+        let mean0: f64 = t.iter().map(|r| r[0]).sum::<f64>() / 100.0;
+        assert!(mean0.abs() < 1e-9);
+        // constant feature: std fallback 1.0, transformed to 0
+        assert!(t.iter().all(|r| r[1].abs() < 1e-9));
+    }
+
+    #[test]
+    fn feature_dims_consistent_with_extractor() {
+        let mut b = GraphBuilder::new("t", 28, 28, 32);
+        let x = b.input_tensor();
+        let t = b.dwconv(x, 3, 1);
+        let t = b.mean(t);
+        let t = b.fc(t, 10);
+        let t = b.softmax(t);
+        let g = b.finish(vec![t]);
+        for n in &g.nodes {
+            let f = features(&g, n);
+            assert_eq!(
+                f.len(),
+                feature_dim(n.op.op_type(), false),
+                "{:?}",
+                n.op.op_type()
+            );
+        }
+    }
+}

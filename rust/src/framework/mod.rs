@@ -1,0 +1,340 @@
+//! The end-to-end latency prediction framework (Section 4).
+//!
+//! Given a model file and a target scenario, and *without* touching the
+//! device: (1) extract the computational graph; (2) for GPUs, deduce the
+//! kernels TFLite would execute (fusion + selection, Section 4.1); (3)
+//! predict each op/kernel's latency with the per-bucket ML model trained
+//! from one-time profiling data (Section 4.2); (4) report
+//! `T_overhead + Σ_c f*_c(x_c)`, where `T_overhead` is the mean measured
+//! gap between end-to-end latency and the op sum on the training set.
+
+use crate::features::{bucket_of, cpu_bucket, features, kernel_features};
+use crate::graph::Graph;
+use crate::predict::{mlp::MlpContext, train, Method, TrainedModel};
+use crate::profiler::{bucket_datasets, ModelProfile};
+use crate::scenario::Scenario;
+use crate::tflite::{compile, fusion, CompileOptions};
+use crate::util::{mape, mean};
+use crate::device::Target;
+use std::collections::BTreeMap;
+
+/// How the predictor handles ML-framework optimizations — the ablations of
+/// Section 5.4 (Figs 19, 20).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DeductionMode {
+    /// Full kernel deduction: fusion + kernel selection (the paper's method).
+    Full,
+    /// Ignore kernel fusion: predict each graph op as its own kernel.
+    NoFusion,
+    /// Ignore kernel selection: all convolutions use the Conv2D bucket.
+    NoSelection,
+}
+
+/// A trained end-to-end predictor for one scenario.
+pub struct ScenarioPredictor<'a> {
+    pub scenario: Scenario,
+    pub method: Method,
+    pub mode: DeductionMode,
+    pub models: BTreeMap<String, TrainedModel<'a>>,
+    /// Estimated framework overhead (mean end-to-end minus op-sum gap).
+    pub t_overhead_ms: f64,
+    /// Buckets seen at prediction time with no trained model (counted, and
+    /// predicted with the global mean op latency as fallback).
+    pub fallback_ms: f64,
+}
+
+/// Merge Winograd/Conv2D buckets for the NoSelection ablation.
+fn ablate_bucket(bucket: &str, mode: DeductionMode) -> String {
+    if mode == DeductionMode::NoSelection
+        && matches!(bucket, "Winograd" | "GroupedConv2D" | "NaiveGroupedConv2D")
+    {
+        "Conv2D".to_string()
+    } else {
+        bucket.to_string()
+    }
+}
+
+impl<'a> ScenarioPredictor<'a> {
+    /// Train per-bucket models from profiles of the training architectures.
+    pub fn train_from(
+        scenario: &Scenario,
+        profiles: &[ModelProfile],
+        method: Method,
+        mode: DeductionMode,
+        seed: u64,
+        mlp_ctx: Option<&'a MlpContext>,
+    ) -> ScenarioPredictor<'a> {
+        let mut data = bucket_datasets(profiles);
+        if mode == DeductionMode::NoSelection {
+            // Merge all convolution kernels into one Conv2D bucket.
+            let mut merged = crate::profiler::BucketData::default();
+            for b in ["Conv2D", "Winograd", "GroupedConv2D", "NaiveGroupedConv2D"] {
+                if let Some(d) = data.remove(b) {
+                    // Drop the group-count feature where present so rows align.
+                    for (mut x, y) in d.x.into_iter().zip(d.y) {
+                        x.truncate(crate::features::feature_dim(
+                            crate::graph::OpType::Conv2D,
+                            false,
+                        ));
+                        // kernel rows carry 2 extra fused-features; re-pad.
+                        while x.len() < 15 {
+                            x.push(0.0);
+                        }
+                        merged.x.push(x);
+                        merged.y.push(y);
+                    }
+                }
+            }
+            if !merged.x.is_empty() {
+                data.insert("Conv2D".into(), merged);
+            }
+        }
+        let mut models = BTreeMap::new();
+        for (bucket, d) in &data {
+            if d.x.is_empty() {
+                continue;
+            }
+            models.insert(bucket.clone(), train(method, &d.x, &d.y, seed, mlp_ctx));
+        }
+        let gaps: Vec<f64> = profiles.iter().map(|p| p.overhead_ms()).collect();
+        let all_lat: Vec<f64> =
+            profiles.iter().flat_map(|p| p.ops.iter().map(|o| o.latency_ms)).collect();
+        ScenarioPredictor {
+            scenario: scenario.clone(),
+            method,
+            mode,
+            models,
+            t_overhead_ms: mean(&gaps).max(0.0),
+            fallback_ms: mean(&all_lat),
+        }
+    }
+
+    /// Features + bucket for every predicted unit of a graph under this
+    /// scenario (CPU: ops; GPU: deduced kernels).
+    pub fn units(&self, g: &Graph) -> Vec<(String, Vec<f64>)> {
+        match &self.scenario.target {
+            Target::Cpu { .. } => g
+                .nodes
+                .iter()
+                .map(|n| (cpu_bucket(n), features(g, n)))
+                .collect(),
+            Target::Gpu { options } => {
+                let opts = match self.mode {
+                    DeductionMode::Full => *options,
+                    DeductionMode::NoFusion => CompileOptions { fusion: false, ..*options },
+                    DeductionMode::NoSelection => *options,
+                };
+                let kernels = if opts.fusion {
+                    compile(g, self.scenario.soc.gpu.kind, opts).kernels
+                } else {
+                    let mut ks = fusion::no_fuse(g);
+                    for k in &mut ks {
+                        k.impl_ = crate::tflite::select::select_for_kernel(
+                            g,
+                            k,
+                            self.scenario.soc.gpu.kind,
+                            opts,
+                        );
+                    }
+                    ks
+                };
+                kernels
+                    .iter()
+                    .map(|k| {
+                        let b = ablate_bucket(&bucket_of(g, k), self.mode);
+                        let mut f = kernel_features(g, k);
+                        if self.mode == DeductionMode::NoSelection {
+                            f.truncate(13);
+                            while f.len() < 15 {
+                                f.push(0.0);
+                            }
+                        }
+                        (b, f)
+                    })
+                    .collect()
+            }
+        }
+    }
+
+    /// Predict the latency of each unit.
+    pub fn predict_units(&self, g: &Graph) -> Vec<(String, f64)> {
+        self.units(g)
+            .into_iter()
+            .map(|(bucket, f)| {
+                let ms = match self.models.get(&bucket) {
+                    Some(m) => m.predict_raw(&f),
+                    None => self.fallback_ms,
+                };
+                (bucket, ms)
+            })
+            .collect()
+    }
+
+    /// End-to-end prediction: `T_overhead + Σ f*_c(x_c)` (Section 4.2).
+    pub fn predict(&self, g: &Graph) -> f64 {
+        self.t_overhead_ms + self.predict_units(g).iter().map(|(_, ms)| ms).sum::<f64>()
+    }
+}
+
+/// End-to-end + per-bucket MAPE of a predictor over test profiles.
+pub struct Evaluation {
+    pub end_to_end_mape: f64,
+    pub per_bucket_mape: BTreeMap<String, f64>,
+    pub predictions: Vec<(String, f64, f64)>, // (model, predicted, measured)
+}
+
+/// Evaluate a scenario predictor against measured test profiles.
+pub fn evaluate(
+    pred: &ScenarioPredictor,
+    test_graphs: &[Graph],
+    test_profiles: &[ModelProfile],
+) -> Evaluation {
+    assert_eq!(test_graphs.len(), test_profiles.len());
+    let mut predictions = Vec::new();
+    let mut e2e_pred = Vec::new();
+    let mut e2e_meas = Vec::new();
+    let mut bucket_pred: BTreeMap<String, (Vec<f64>, Vec<f64>)> = BTreeMap::new();
+    for (g, p) in test_graphs.iter().zip(test_profiles) {
+        let e = pred.predict(g);
+        predictions.push((g.name.clone(), e, p.end_to_end_ms));
+        e2e_pred.push(e);
+        e2e_meas.push(p.end_to_end_ms);
+        // Per-unit comparison: deduced units must align with measured ops
+        // when the deduction mode matches the device compilation (Full).
+        if pred.mode == DeductionMode::Full {
+            let units = pred.predict_units(g);
+            if units.len() == p.ops.len() {
+                for ((b, pm), o) in units.iter().zip(&p.ops) {
+                    let e = bucket_pred.entry(b.clone()).or_default();
+                    e.0.push(*pm);
+                    e.1.push(o.latency_ms);
+                }
+            }
+        }
+    }
+    let per_bucket_mape = bucket_pred
+        .into_iter()
+        .map(|(b, (p, a))| (b, mape(&p, &a)))
+        .collect();
+    Evaluation {
+        end_to_end_mape: mape(&e2e_pred, &e2e_meas),
+        per_bucket_mape,
+        predictions,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::profiler::profile_set;
+    use crate::scenario;
+
+    fn train_graphs(n: usize) -> Vec<Graph> {
+        crate::nas::sample_dataset(1234, n).into_iter().map(|a| a.graph).collect()
+    }
+
+    #[test]
+    fn cpu_predictor_achieves_low_mape_in_distribution() {
+        // Default NAS setting (Section 5.1): train and test from the same
+        // space; GBDT should land in single-digit MAPE.
+        let sc = scenario::one_large_core("Snapdragon855");
+        let graphs = train_graphs(60);
+        let profiles = profile_set(&sc, &graphs, 7, 5);
+        let (tr_g, te_g) = graphs.split_at(45);
+        let (tr_p, te_p) = profiles.split_at(45);
+        let pred = ScenarioPredictor::train_from(
+            &sc,
+            tr_p,
+            Method::Gbdt,
+            DeductionMode::Full,
+            1,
+            None,
+        );
+        let ev = evaluate(&pred, te_g, te_p);
+        assert!(
+            ev.end_to_end_mape < 0.12,
+            "GBDT e2e MAPE {:.3} too high",
+            ev.end_to_end_mape
+        );
+        let _ = tr_g;
+    }
+
+    #[test]
+    fn gpu_predictor_units_match_measured_kernels() {
+        let soc = crate::device::soc_by_name("Exynos9820").unwrap();
+        let sc = Scenario::gpu(&soc);
+        let graphs = train_graphs(12);
+        let profiles = profile_set(&sc, &graphs, 3, 3);
+        let pred = ScenarioPredictor::train_from(
+            &sc,
+            &profiles,
+            Method::Lasso,
+            DeductionMode::Full,
+            1,
+            None,
+        );
+        for (g, p) in graphs.iter().zip(&profiles) {
+            let units = pred.units(g);
+            assert_eq!(units.len(), p.ops.len(), "{}", g.name);
+            for (u, o) in units.iter().zip(&p.ops) {
+                assert_eq!(u.0, o.bucket, "{}", g.name);
+            }
+        }
+    }
+
+    #[test]
+    fn overhead_estimated_positive() {
+        let soc = crate::device::soc_by_name("HelioP35").unwrap();
+        let sc = Scenario::gpu(&soc);
+        let graphs = train_graphs(8);
+        let profiles = profile_set(&sc, &graphs, 5, 3);
+        let pred = ScenarioPredictor::train_from(
+            &sc,
+            &profiles,
+            Method::Lasso,
+            DeductionMode::Full,
+            2,
+            None,
+        );
+        // HelioP35 GPU overhead is 7.5ms mean in the simulator.
+        assert!(
+            (3.0..14.0).contains(&pred.t_overhead_ms),
+            "t_overhead={}",
+            pred.t_overhead_ms
+        );
+    }
+
+    #[test]
+    fn no_fusion_ablation_overpredicts() {
+        // Predicting unfused ops while the device fuses them must
+        // overestimate latency (Fig 19 error reduction).
+        let soc = crate::device::soc_by_name("Snapdragon855").unwrap();
+        let sc = Scenario::gpu(&soc);
+        let graphs = train_graphs(15);
+        let profiles = profile_set(&sc, &graphs, 9, 3);
+        // Train the NoFusion predictor on unfused profiles (fusion disabled
+        // during its calibration runs), as the paper's baseline would.
+        let sc_nofuse = Scenario {
+            target: Target::Gpu {
+                options: CompileOptions { fusion: false, ..Default::default() },
+            },
+            ..sc.clone()
+        };
+        let profiles_nofuse = profile_set(&sc_nofuse, &graphs, 9, 3);
+        let full = ScenarioPredictor::train_from(
+            &sc, &profiles, Method::Gbdt, DeductionMode::Full, 3, None,
+        );
+        let nofuse = ScenarioPredictor::train_from(
+            &sc_nofuse, &profiles_nofuse, Method::Gbdt, DeductionMode::NoFusion, 3, None,
+        );
+        let (te_g, te_p) = (&graphs[10..], &profiles[10..]);
+        let ev_full = evaluate(&full, te_g, te_p);
+        let ev_nofuse = evaluate(&nofuse, te_g, te_p);
+        assert!(
+            ev_nofuse.end_to_end_mape > ev_full.end_to_end_mape,
+            "full={:.3} nofusion={:.3}",
+            ev_full.end_to_end_mape,
+            ev_nofuse.end_to_end_mape
+        );
+    }
+}

@@ -1,0 +1,350 @@
+//! Fluent graph construction. Used by the real-world zoo (`zoo/`), the NAS
+//! sampler (`nas/`), and tests. Shape inference happens on every `add`, so a
+//! finished graph is valid by construction (and `Graph::validate` re-checks).
+
+use crate::graph::op::{ActKind, EwKind, Op, Padding, PoolKind};
+use crate::graph::{infer_shapes, Graph, Node, Shape, Tensor, TensorId};
+
+pub struct GraphBuilder {
+    name: String,
+    tensors: Vec<Tensor>,
+    nodes: Vec<Node>,
+    inputs: Vec<TensorId>,
+}
+
+impl GraphBuilder {
+    /// Start a graph with a single HxWxC image input.
+    pub fn new(name: &str, h: usize, w: usize, c: usize) -> GraphBuilder {
+        let t = Tensor { id: 0, shape: Shape::new(h, w, c) };
+        GraphBuilder {
+            name: name.to_string(),
+            tensors: vec![t],
+            nodes: Vec::new(),
+            inputs: vec![0],
+        }
+    }
+
+    /// The id of the (single) graph input.
+    pub fn input_tensor(&self) -> TensorId {
+        self.inputs[0]
+    }
+
+    pub fn shape(&self, t: TensorId) -> Shape {
+        self.tensors[t].shape
+    }
+
+    fn new_tensor(&mut self, shape: Shape) -> TensorId {
+        let id = self.tensors.len();
+        self.tensors.push(Tensor { id, shape });
+        id
+    }
+
+    /// Append an op; panics on shape errors (zoo definitions are static, and
+    /// the NAS sampler guarantees constraints before calling).
+    pub fn add(&mut self, op: Op, inputs: Vec<TensorId>) -> Vec<TensorId> {
+        let in_shapes: Vec<Shape> = inputs.iter().map(|&t| self.tensors[t].shape).collect();
+        let out_shapes = infer_shapes(&op, &in_shapes)
+            .unwrap_or_else(|e| panic!("graph '{}': {} on {:?}: {e}", self.name, op.name(), in_shapes));
+        let outputs: Vec<TensorId> = out_shapes.into_iter().map(|s| self.new_tensor(s)).collect();
+        self.nodes.push(Node { id: self.nodes.len(), op, inputs, outputs: outputs.clone() });
+        outputs
+    }
+
+    fn add1(&mut self, op: Op, inputs: Vec<TensorId>) -> TensorId {
+        self.add(op, inputs)[0]
+    }
+
+    // ---- convenience wrappers ------------------------------------------
+
+    pub fn conv(&mut self, x: TensorId, out_c: usize, k: usize, stride: usize, padding: Padding) -> TensorId {
+        self.add1(Op::Conv2D { kh: k, kw: k, stride, padding, out_c, groups: 1 }, vec![x])
+    }
+
+    pub fn grouped_conv(
+        &mut self,
+        x: TensorId,
+        out_c: usize,
+        k: usize,
+        stride: usize,
+        groups: usize,
+    ) -> TensorId {
+        self.add1(
+            Op::Conv2D { kh: k, kw: k, stride, padding: Padding::Same, out_c, groups },
+            vec![x],
+        )
+    }
+
+    pub fn dwconv(&mut self, x: TensorId, k: usize, stride: usize) -> TensorId {
+        self.add1(Op::DepthwiseConv2D { kh: k, kw: k, stride, padding: Padding::Same }, vec![x])
+    }
+
+    pub fn fc(&mut self, x: TensorId, out: usize) -> TensorId {
+        self.add1(Op::FullyConnected { out_features: out }, vec![x])
+    }
+
+    pub fn avg_pool(&mut self, x: TensorId, k: usize, stride: usize) -> TensorId {
+        self.add1(
+            Op::Pooling { kind: PoolKind::Avg, kh: k, kw: k, stride, padding: Padding::Same },
+            vec![x],
+        )
+    }
+
+    pub fn max_pool(&mut self, x: TensorId, k: usize, stride: usize) -> TensorId {
+        self.add1(
+            Op::Pooling { kind: PoolKind::Max, kh: k, kw: k, stride, padding: Padding::Same },
+            vec![x],
+        )
+    }
+
+    pub fn mean(&mut self, x: TensorId) -> TensorId {
+        self.add1(Op::Mean, vec![x])
+    }
+
+    pub fn concat(&mut self, xs: Vec<TensorId>) -> TensorId {
+        self.add1(Op::Concat, xs)
+    }
+
+    pub fn split(&mut self, x: TensorId, num: usize) -> Vec<TensorId> {
+        self.add(Op::Split { num }, vec![x])
+    }
+
+    pub fn pad(&mut self, x: TensorId, pad: usize) -> TensorId {
+        self.add1(Op::Pad { pad_h: pad, pad_w: pad }, vec![x])
+    }
+
+    pub fn ew(&mut self, kind: EwKind, a: TensorId, b: TensorId) -> TensorId {
+        self.add1(Op::ElementWise { kind, with_const: false }, vec![a, b])
+    }
+
+    pub fn ew_const(&mut self, kind: EwKind, a: TensorId) -> TensorId {
+        self.add1(Op::ElementWise { kind, with_const: true }, vec![a])
+    }
+
+    pub fn add_t(&mut self, a: TensorId, b: TensorId) -> TensorId {
+        self.ew(EwKind::Add, a, b)
+    }
+
+    pub fn mul_t(&mut self, a: TensorId, b: TensorId) -> TensorId {
+        self.ew(EwKind::Mul, a, b)
+    }
+
+    pub fn act(&mut self, x: TensorId, kind: ActKind) -> TensorId {
+        self.add1(Op::Activation { kind }, vec![x])
+    }
+
+    pub fn relu(&mut self, x: TensorId) -> TensorId {
+        self.act(x, ActKind::Relu)
+    }
+
+    pub fn relu6(&mut self, x: TensorId) -> TensorId {
+        self.act(x, ActKind::Relu6)
+    }
+
+    pub fn hswish(&mut self, x: TensorId) -> TensorId {
+        self.act(x, ActKind::HSwish)
+    }
+
+    pub fn softmax(&mut self, x: TensorId) -> TensorId {
+        self.add1(Op::Softmax, vec![x])
+    }
+
+    pub fn reshape(&mut self, x: TensorId) -> TensorId {
+        self.add1(Op::Reshape, vec![x])
+    }
+
+    // ---- composite blocks shared by zoo + NAS sampler ------------------
+
+    /// conv + activation ("conv-bn-act"; BN folds into conv at inference).
+    pub fn conv_act(
+        &mut self,
+        x: TensorId,
+        out_c: usize,
+        k: usize,
+        stride: usize,
+        act: ActKind,
+    ) -> TensorId {
+        let t = self.conv(x, out_c, k, stride, Padding::Same);
+        self.act(t, act)
+    }
+
+    /// Depthwise-separable block: dwconv(k, s) + act + 1x1 conv + act.
+    pub fn dw_separable(
+        &mut self,
+        x: TensorId,
+        out_c: usize,
+        k: usize,
+        stride: usize,
+        act: ActKind,
+    ) -> TensorId {
+        let t = self.dwconv(x, k, stride);
+        let t = self.act(t, act);
+        let t = self.conv(t, out_c, 1, 1, Padding::Same);
+        self.act(t, act)
+    }
+
+    /// Squeeze-and-Excite: mean -> fc(c/r) -> relu -> fc(c) -> sigmoid -> mul.
+    pub fn se_block(&mut self, x: TensorId, reduction: usize) -> TensorId {
+        let c = self.shape(x).c;
+        let mid = (c / reduction).max(1);
+        let s = self.mean(x);
+        let s = self.fc(s, mid);
+        let s = self.relu(s);
+        let s = self.fc(s, c);
+        let s = self.act(s, ActKind::Sigmoid);
+        self.mul_t(x, s)
+    }
+
+    /// MobileNetV2 inverted residual (linear bottleneck): optional 1x1 expand,
+    /// dwconv, 1x1 project; residual add when stride 1 and channels match.
+    pub fn inverted_residual(
+        &mut self,
+        x: TensorId,
+        out_c: usize,
+        k: usize,
+        stride: usize,
+        expand: usize,
+        se: bool,
+        act: ActKind,
+    ) -> TensorId {
+        let in_c = self.shape(x).c;
+        let mut t = x;
+        if expand != 1 {
+            t = self.conv(t, in_c * expand, 1, 1, Padding::Same);
+            t = self.act(t, act);
+        }
+        t = self.dwconv(t, k, stride);
+        t = self.act(t, act);
+        if se {
+            t = self.se_block(t, 4);
+        }
+        t = self.conv(t, out_c, 1, 1, Padding::Same);
+        if stride == 1 && in_c == out_c {
+            t = self.add_t(x, t);
+        }
+        t
+    }
+
+    /// Basic ResNet block (two 3x3 convs + shortcut).
+    pub fn res_basic(&mut self, x: TensorId, out_c: usize, stride: usize) -> TensorId {
+        let in_c = self.shape(x).c;
+        let t = self.conv(x, out_c, 3, stride, Padding::Same);
+        let t = self.relu(t);
+        let t = self.conv(t, out_c, 3, 1, Padding::Same);
+        let short = if stride != 1 || in_c != out_c {
+            self.conv(x, out_c, 1, stride, Padding::Same)
+        } else {
+            x
+        };
+        let t = self.add_t(t, short);
+        self.relu(t)
+    }
+
+    /// Bottleneck ResNet block (1x1 down, 3x3, 1x1 up + shortcut), with
+    /// optional grouping on the 3x3 (ResNeXt) and optional SE.
+    pub fn res_bottleneck(
+        &mut self,
+        x: TensorId,
+        mid_c: usize,
+        out_c: usize,
+        stride: usize,
+        groups: usize,
+        se: bool,
+    ) -> TensorId {
+        let in_c = self.shape(x).c;
+        let t = self.conv(x, mid_c, 1, 1, Padding::Same);
+        let t = self.relu(t);
+        let t = if groups > 1 {
+            self.grouped_conv(t, mid_c, 3, stride, groups)
+        } else {
+            self.conv(t, mid_c, 3, stride, Padding::Same)
+        };
+        let t = self.relu(t);
+        let mut t = self.conv(t, out_c, 1, 1, Padding::Same);
+        if se {
+            t = self.se_block(t, 16);
+        }
+        let short = if stride != 1 || in_c != out_c {
+            self.conv(x, out_c, 1, stride, Padding::Same)
+        } else {
+            x
+        };
+        let t = self.add_t(t, short);
+        self.relu(t)
+    }
+
+    /// Classifier head: global mean + FC(classes) + softmax.
+    pub fn head(&mut self, x: TensorId, classes: usize) -> TensorId {
+        let t = self.mean(x);
+        let t = self.fc(t, classes);
+        self.softmax(t)
+    }
+
+    pub fn finish(self, outputs: Vec<TensorId>) -> Graph {
+        let g = Graph {
+            name: self.name,
+            tensors: self.tensors,
+            nodes: self.nodes,
+            inputs: self.inputs,
+            outputs,
+        };
+        debug_assert!(g.validate().is_ok(), "{:?}", g.validate());
+        g
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn inverted_residual_has_residual_add_when_possible() {
+        let mut b = GraphBuilder::new("t", 16, 16, 24);
+        let x = b.input_tensor();
+        let t = b.inverted_residual(x, 24, 3, 1, 6, false, ActKind::Relu6);
+        let g = b.finish(vec![t]);
+        g.validate().unwrap();
+        assert!(g.nodes.iter().any(|n| matches!(n.op, Op::ElementWise { kind: EwKind::Add, .. })));
+    }
+
+    #[test]
+    fn inverted_residual_no_add_on_stride2() {
+        let mut b = GraphBuilder::new("t", 16, 16, 24);
+        let x = b.input_tensor();
+        let t = b.inverted_residual(x, 24, 3, 2, 6, false, ActKind::Relu6);
+        let g = b.finish(vec![t]);
+        assert!(!g.nodes.iter().any(|n| matches!(n.op, Op::ElementWise { kind: EwKind::Add, .. })));
+    }
+
+    #[test]
+    fn se_block_shapes() {
+        let mut b = GraphBuilder::new("t", 8, 8, 32);
+        let x = b.input_tensor();
+        let t = b.se_block(x, 4);
+        let g = b.finish(vec![t]);
+        g.validate().unwrap();
+        assert_eq!(g.shape(t), Shape::new(8, 8, 32));
+        // mean, fc, relu, fc, sigmoid, mul
+        assert_eq!(g.nodes.len(), 6);
+    }
+
+    #[test]
+    fn res_basic_downsamples_shortcut() {
+        let mut b = GraphBuilder::new("t", 16, 16, 32);
+        let x = b.input_tensor();
+        let t = b.res_basic(x, 64, 2);
+        let g = b.finish(vec![t]);
+        g.validate().unwrap();
+        assert_eq!(g.shape(t), Shape::new(8, 8, 64));
+        // two 3x3 convs + 1x1 projection
+        let convs = g.nodes.iter().filter(|n| matches!(n.op, Op::Conv2D { .. })).count();
+        assert_eq!(convs, 3);
+    }
+
+    #[test]
+    #[should_panic]
+    fn builder_panics_on_bad_split() {
+        let mut b = GraphBuilder::new("t", 8, 8, 9);
+        let x = b.input_tensor();
+        b.split(x, 2);
+    }
+}

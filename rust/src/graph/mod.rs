@@ -1,0 +1,322 @@
+//! Computational-graph IR — our analogue of the `.tflite` model file.
+//!
+//! A [`Graph`] is a DAG of [`Node`]s over [`Tensor`]s, stored in topological
+//! order (the builder only lets you consume tensors that already exist).
+//! Shape inference runs at construction time; FLOPs, parameter counts and
+//! tensor sizes are derived on demand for the feature extractor (Table 3 of
+//! the paper).
+
+pub mod builder;
+pub mod modelfile;
+pub mod op;
+pub mod shape;
+
+pub use builder::GraphBuilder;
+pub use op::{ActKind, EwKind, Op, OpArity, OpType, Padding, PoolKind};
+pub use shape::Shape;
+
+use std::collections::HashMap;
+
+pub type TensorId = usize;
+pub type OpId = usize;
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct Tensor {
+    pub id: TensorId,
+    pub shape: Shape,
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct Node {
+    pub id: OpId,
+    pub op: Op,
+    pub inputs: Vec<TensorId>,
+    pub outputs: Vec<TensorId>,
+}
+
+/// A neural-architecture computational graph (batch size 1).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Graph {
+    pub name: String,
+    pub tensors: Vec<Tensor>,
+    /// Nodes in topological order.
+    pub nodes: Vec<Node>,
+    pub inputs: Vec<TensorId>,
+    pub outputs: Vec<TensorId>,
+}
+
+impl Graph {
+    pub fn shape(&self, t: TensorId) -> Shape {
+        self.tensors[t].shape
+    }
+
+    pub fn input_shapes(&self, node: &Node) -> Vec<Shape> {
+        node.inputs.iter().map(|&t| self.shape(t)).collect()
+    }
+
+    pub fn output_shapes(&self, node: &Node) -> Vec<Shape> {
+        node.outputs.iter().map(|&t| self.shape(t)).collect()
+    }
+
+    /// All nodes consuming tensor `t`, in topological order.
+    pub fn consumers(&self, t: TensorId) -> Vec<OpId> {
+        self.nodes
+            .iter()
+            .filter(|n| n.inputs.contains(&t))
+            .map(|n| n.id)
+            .collect()
+    }
+
+    /// The node producing tensor `t`, if any (graph inputs have none).
+    pub fn producer(&self, t: TensorId) -> Option<OpId> {
+        self.nodes.iter().find(|n| n.outputs.contains(&t)).map(|n| n.id)
+    }
+
+    /// Total MAC-based FLOPs of the architecture.
+    pub fn flops(&self) -> u64 {
+        self.nodes
+            .iter()
+            .map(|n| n.op.flops(&self.input_shapes(n), &self.output_shapes(n)))
+            .sum()
+    }
+
+    /// Total learned parameters.
+    pub fn params(&self) -> u64 {
+        self.nodes
+            .iter()
+            .map(|n| n.op.param_count(&self.input_shapes(n), &self.output_shapes(n)))
+            .sum()
+    }
+
+    /// Count of nodes per coarse op type.
+    pub fn op_type_histogram(&self) -> HashMap<OpType, usize> {
+        let mut h = HashMap::new();
+        for n in &self.nodes {
+            *h.entry(n.op.op_type()).or_insert(0) += 1;
+        }
+        h
+    }
+
+    /// Structural validation; used by property tests and after model-file
+    /// loading. Checks topological ordering, arity, shape consistency, and
+    /// tensor linkage.
+    pub fn validate(&self) -> Result<(), String> {
+        let mut produced: Vec<bool> = vec![false; self.tensors.len()];
+        for &t in &self.inputs {
+            if t >= self.tensors.len() {
+                return Err(format!("input tensor {t} out of range"));
+            }
+            produced[t] = true;
+        }
+        for (idx, node) in self.nodes.iter().enumerate() {
+            if node.id != idx {
+                return Err(format!("node {idx} has id {}", node.id));
+            }
+            match node.op.arity() {
+                OpArity::Exact(k) if node.inputs.len() != k => {
+                    return Err(format!(
+                        "node {idx} ({}) expects {k} inputs, has {}",
+                        node.op.name(),
+                        node.inputs.len()
+                    ));
+                }
+                OpArity::Variadic if node.inputs.len() < 2 => {
+                    return Err(format!("node {idx} (Concat) needs >= 2 inputs"));
+                }
+                _ => {}
+            }
+            for &t in &node.inputs {
+                if t >= self.tensors.len() {
+                    return Err(format!("node {idx} reads missing tensor {t}"));
+                }
+                if !produced[t] {
+                    return Err(format!("node {idx} reads tensor {t} before production"));
+                }
+            }
+            // Shape consistency.
+            let ins = self.input_shapes(node);
+            let outs = self.output_shapes(node);
+            let expect = infer_shapes(&node.op, &ins).map_err(|e| format!("node {idx}: {e}"))?;
+            if expect != outs {
+                return Err(format!(
+                    "node {idx} ({}) shape mismatch: expected {:?}, stored {:?}",
+                    node.op.name(),
+                    expect,
+                    outs
+                ));
+            }
+            for &t in &node.outputs {
+                if t >= self.tensors.len() {
+                    return Err(format!("node {idx} writes missing tensor {t}"));
+                }
+                if produced[t] {
+                    return Err(format!("tensor {t} produced twice"));
+                }
+                produced[t] = true;
+            }
+        }
+        for &t in &self.outputs {
+            if t >= self.tensors.len() || !produced[t] {
+                return Err(format!("graph output {t} never produced"));
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Shape inference for one op. Errors on inconsistent inputs (e.g. concat of
+/// mismatched spatial dims, split of indivisible channels).
+pub fn infer_shapes(op: &Op, inputs: &[Shape]) -> Result<Vec<Shape>, String> {
+    let one = |s: Shape| Ok(vec![s]);
+    match op {
+        Op::Conv2D { kh, kw, stride, padding, out_c, groups } => {
+            let i = inputs[0];
+            if i.c % groups != 0 || out_c % groups != 0 {
+                return Err(format!(
+                    "groups {groups} must divide in_c {} and out_c {out_c}",
+                    i.c
+                ));
+            }
+            one(Shape::new(
+                Shape::conv_out_dim(i.h, *kh, *stride, *padding),
+                Shape::conv_out_dim(i.w, *kw, *stride, *padding),
+                *out_c,
+            ))
+        }
+        Op::DepthwiseConv2D { kh, kw, stride, padding } => {
+            let i = inputs[0];
+            one(Shape::new(
+                Shape::conv_out_dim(i.h, *kh, *stride, *padding),
+                Shape::conv_out_dim(i.w, *kw, *stride, *padding),
+                i.c,
+            ))
+        }
+        Op::FullyConnected { out_features } => one(Shape::vec(*out_features)),
+        Op::Pooling { kh, kw, stride, padding, .. } => {
+            let i = inputs[0];
+            one(Shape::new(
+                Shape::conv_out_dim(i.h, *kh, *stride, *padding),
+                Shape::conv_out_dim(i.w, *kw, *stride, *padding),
+                i.c,
+            ))
+        }
+        Op::Mean => one(Shape::vec(inputs[0].c)),
+        Op::Concat => {
+            let (h, w) = (inputs[0].h, inputs[0].w);
+            if inputs.iter().any(|s| s.h != h || s.w != w) {
+                return Err("concat inputs must share spatial dims".into());
+            }
+            one(Shape::new(h, w, inputs.iter().map(|s| s.c).sum()))
+        }
+        Op::Split { num } => {
+            let i = inputs[0];
+            if i.c % num != 0 {
+                return Err(format!("split {num} must divide channels {}", i.c));
+            }
+            Ok((0..*num).map(|_| Shape::new(i.h, i.w, i.c / num)).collect())
+        }
+        Op::Pad { pad_h, pad_w } => {
+            let i = inputs[0];
+            one(Shape::new(i.h + 2 * pad_h, i.w + 2 * pad_w, i.c))
+        }
+        Op::ElementWise { .. } => {
+            if inputs.len() == 2 && inputs[0] != inputs[1] {
+                // Broadcast: a 1x1xC tensor may combine with HxWxC.
+                let (a, b) = (inputs[0], inputs[1]);
+                let big = if a.numel() >= b.numel() { a } else { b };
+                let small = if a.numel() >= b.numel() { b } else { a };
+                if small.h == 1 && small.w == 1 && (small.c == big.c || small.c == 1) {
+                    return one(big);
+                }
+                return Err(format!(
+                    "elementwise shape mismatch: {} vs {}",
+                    a.render(),
+                    b.render()
+                ));
+            }
+            one(inputs[0])
+        }
+        Op::Activation { .. } | Op::Softmax => one(inputs[0]),
+        Op::Reshape => one(Shape::vec(inputs[0].numel())),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_graph() -> Graph {
+        let mut b = GraphBuilder::new("tiny", 8, 8, 3);
+        let x = b.input_tensor();
+        let t = b.conv(x, 16, 3, 2, Padding::Same);
+        let t = b.relu(t);
+        let t = b.mean(t);
+        let t = b.fc(t, 10);
+        b.finish(vec![t])
+    }
+
+    #[test]
+    fn tiny_graph_validates() {
+        let g = tiny_graph();
+        g.validate().unwrap();
+        assert_eq!(g.nodes.len(), 4);
+        assert_eq!(g.shape(g.outputs[0]), Shape::vec(10));
+    }
+
+    #[test]
+    fn flops_positive_and_consistent() {
+        let g = tiny_graph();
+        // conv: 2*4*4*16*3*9 ; fc: 2*16*10 ; relu: 256 ; mean: 256
+        let conv = 2 * 4 * 4 * 16 * 3 * 9u64;
+        let fc = 2 * 16 * 10u64;
+        assert_eq!(g.flops(), conv + fc + 256 + 256);
+    }
+
+    #[test]
+    fn consumers_and_producer() {
+        let g = tiny_graph();
+        let conv_out = g.nodes[0].outputs[0];
+        assert_eq!(g.consumers(conv_out), vec![1]);
+        assert_eq!(g.producer(conv_out), Some(0));
+        assert_eq!(g.producer(g.inputs[0]), None);
+    }
+
+    #[test]
+    fn infer_split_divisibility() {
+        assert!(infer_shapes(&Op::Split { num: 3 }, &[Shape::new(4, 4, 8)]).is_err());
+        let out = infer_shapes(&Op::Split { num: 2 }, &[Shape::new(4, 4, 8)]).unwrap();
+        assert_eq!(out, vec![Shape::new(4, 4, 4), Shape::new(4, 4, 4)]);
+    }
+
+    #[test]
+    fn infer_concat_checks_spatial() {
+        assert!(infer_shapes(&Op::Concat, &[Shape::new(4, 4, 8), Shape::new(2, 2, 8)]).is_err());
+        let out = infer_shapes(&Op::Concat, &[Shape::new(4, 4, 8), Shape::new(4, 4, 4)]).unwrap();
+        assert_eq!(out[0], Shape::new(4, 4, 12));
+    }
+
+    #[test]
+    fn infer_broadcast_elementwise() {
+        let out = infer_shapes(
+            &Op::ElementWise { kind: EwKind::Mul, with_const: false },
+            &[Shape::new(8, 8, 32), Shape::vec(32)],
+        )
+        .unwrap();
+        assert_eq!(out[0], Shape::new(8, 8, 32));
+    }
+
+    #[test]
+    fn grouped_conv_divisibility_enforced() {
+        let op = Op::Conv2D { kh: 3, kw: 3, stride: 1, padding: Padding::Same, out_c: 32, groups: 5 };
+        assert!(infer_shapes(&op, &[Shape::new(8, 8, 30)]).is_err());
+    }
+
+    #[test]
+    fn histogram_counts() {
+        let g = tiny_graph();
+        let h = g.op_type_histogram();
+        assert_eq!(h[&OpType::Conv2D], 1);
+        assert_eq!(h[&OpType::Activation], 1);
+        assert_eq!(h[&OpType::FullyConnected], 1);
+    }
+}

@@ -1,0 +1,304 @@
+//! Model-file (de)serialization — the crate's analogue of `.tflite`.
+//!
+//! The paper's framework takes a model file produced on a cloud server and
+//! predicts latency without touching the device (Section 4). Our model files
+//! are JSON documents carrying the full computational graph; `save`/`load`
+//! round-trip exactly, so predictions can be made from the file alone.
+
+use crate::graph::op::{ActKind, EwKind, Op, Padding, PoolKind};
+use crate::graph::{Graph, Node, Shape, Tensor};
+use crate::util::Json;
+
+fn padding_str(p: Padding) -> &'static str {
+    match p {
+        Padding::Same => "SAME",
+        Padding::Valid => "VALID",
+    }
+}
+
+fn padding_from(s: &str) -> Result<Padding, String> {
+    match s {
+        "SAME" => Ok(Padding::Same),
+        "VALID" => Ok(Padding::Valid),
+        _ => Err(format!("bad padding {s}")),
+    }
+}
+
+fn op_to_json(op: &Op) -> Json {
+    match op {
+        Op::Conv2D { kh, kw, stride, padding, out_c, groups } => Json::obj(vec![
+            ("type", Json::str("CONV_2D")),
+            ("kh", Json::num(*kh as f64)),
+            ("kw", Json::num(*kw as f64)),
+            ("stride", Json::num(*stride as f64)),
+            ("padding", Json::str(padding_str(*padding))),
+            ("out_c", Json::num(*out_c as f64)),
+            ("groups", Json::num(*groups as f64)),
+        ]),
+        Op::DepthwiseConv2D { kh, kw, stride, padding } => Json::obj(vec![
+            ("type", Json::str("DEPTHWISE_CONV_2D")),
+            ("kh", Json::num(*kh as f64)),
+            ("kw", Json::num(*kw as f64)),
+            ("stride", Json::num(*stride as f64)),
+            ("padding", Json::str(padding_str(*padding))),
+        ]),
+        Op::FullyConnected { out_features } => Json::obj(vec![
+            ("type", Json::str("FULLY_CONNECTED")),
+            ("out", Json::num(*out_features as f64)),
+        ]),
+        Op::Pooling { kind, kh, kw, stride, padding } => Json::obj(vec![
+            (
+                "type",
+                Json::str(match kind {
+                    PoolKind::Avg => "AVERAGE_POOL_2D",
+                    PoolKind::Max => "MAX_POOL_2D",
+                }),
+            ),
+            ("kh", Json::num(*kh as f64)),
+            ("kw", Json::num(*kw as f64)),
+            ("stride", Json::num(*stride as f64)),
+            ("padding", Json::str(padding_str(*padding))),
+        ]),
+        Op::Mean => Json::obj(vec![("type", Json::str("MEAN"))]),
+        Op::Concat => Json::obj(vec![("type", Json::str("CONCATENATION"))]),
+        Op::Split { num } => Json::obj(vec![
+            ("type", Json::str("SPLIT")),
+            ("num", Json::num(*num as f64)),
+        ]),
+        Op::Pad { pad_h, pad_w } => Json::obj(vec![
+            ("type", Json::str("PAD")),
+            ("pad_h", Json::num(*pad_h as f64)),
+            ("pad_w", Json::num(*pad_w as f64)),
+        ]),
+        Op::ElementWise { kind, with_const } => Json::obj(vec![
+            ("type", Json::str("ELEMENTWISE")),
+            ("kind", Json::str(kind.name())),
+            ("with_const", Json::Bool(*with_const)),
+        ]),
+        Op::Activation { kind } => Json::obj(vec![
+            ("type", Json::str("ACTIVATION")),
+            ("kind", Json::str(kind.name())),
+        ]),
+        Op::Softmax => Json::obj(vec![("type", Json::str("SOFTMAX"))]),
+        Op::Reshape => Json::obj(vec![("type", Json::str("RESHAPE"))]),
+    }
+}
+
+fn ew_from(s: &str) -> Result<EwKind, String> {
+    EwKind::all()
+        .iter()
+        .find(|k| k.name() == s)
+        .copied()
+        .ok_or_else(|| format!("bad ew kind {s}"))
+}
+
+fn act_from(s: &str) -> Result<ActKind, String> {
+    [
+        ActKind::Relu,
+        ActKind::Relu6,
+        ActKind::HSwish,
+        ActKind::HSigmoid,
+        ActKind::Sigmoid,
+        ActKind::Swish,
+        ActKind::Tanh,
+    ]
+    .into_iter()
+    .find(|k| k.name() == s)
+    .ok_or_else(|| format!("bad act kind {s}"))
+}
+
+fn op_from_json(j: &Json) -> Result<Op, String> {
+    let ty = j.get("type").and_then(Json::as_str).ok_or("op missing type")?;
+    let u = |k: &str| -> Result<usize, String> {
+        j.get(k).and_then(Json::as_usize).ok_or(format!("op missing {k}"))
+    };
+    Ok(match ty {
+        "CONV_2D" => Op::Conv2D {
+            kh: u("kh")?,
+            kw: u("kw")?,
+            stride: u("stride")?,
+            padding: padding_from(j.get("padding").and_then(Json::as_str).ok_or("padding")?)?,
+            out_c: u("out_c")?,
+            groups: u("groups")?,
+        },
+        "DEPTHWISE_CONV_2D" => Op::DepthwiseConv2D {
+            kh: u("kh")?,
+            kw: u("kw")?,
+            stride: u("stride")?,
+            padding: padding_from(j.get("padding").and_then(Json::as_str).ok_or("padding")?)?,
+        },
+        "FULLY_CONNECTED" => Op::FullyConnected { out_features: u("out")? },
+        "AVERAGE_POOL_2D" | "MAX_POOL_2D" => Op::Pooling {
+            kind: if ty == "AVERAGE_POOL_2D" { PoolKind::Avg } else { PoolKind::Max },
+            kh: u("kh")?,
+            kw: u("kw")?,
+            stride: u("stride")?,
+            padding: padding_from(j.get("padding").and_then(Json::as_str).ok_or("padding")?)?,
+        },
+        "MEAN" => Op::Mean,
+        "CONCATENATION" => Op::Concat,
+        "SPLIT" => Op::Split { num: u("num")? },
+        "PAD" => Op::Pad { pad_h: u("pad_h")?, pad_w: u("pad_w")? },
+        "ELEMENTWISE" => Op::ElementWise {
+            kind: ew_from(j.get("kind").and_then(Json::as_str).ok_or("kind")?)?,
+            with_const: matches!(j.get("with_const"), Some(Json::Bool(true))),
+        },
+        "ACTIVATION" => Op::Activation {
+            kind: act_from(j.get("kind").and_then(Json::as_str).ok_or("kind")?)?,
+        },
+        "SOFTMAX" => Op::Softmax,
+        "RESHAPE" => Op::Reshape,
+        other => return Err(format!("unknown op type {other}")),
+    })
+}
+
+/// Serialize a graph to a model-file JSON string.
+pub fn to_model_file(g: &Graph) -> String {
+    let tensors = g
+        .tensors
+        .iter()
+        .map(|t| {
+            Json::arr(vec![
+                Json::num(t.shape.h as f64),
+                Json::num(t.shape.w as f64),
+                Json::num(t.shape.c as f64),
+            ])
+        })
+        .collect();
+    let nodes = g
+        .nodes
+        .iter()
+        .map(|n| {
+            let mut o = op_to_json(&n.op);
+            if let Json::Obj(m) = &mut o {
+                m.insert(
+                    "inputs".into(),
+                    Json::arr(n.inputs.iter().map(|&t| Json::num(t as f64)).collect()),
+                );
+                m.insert(
+                    "outputs".into(),
+                    Json::arr(n.outputs.iter().map(|&t| Json::num(t as f64)).collect()),
+                );
+            }
+            o
+        })
+        .collect();
+    Json::obj(vec![
+        ("format", Json::str("edgelat-model-v1")),
+        ("name", Json::str(g.name.clone())),
+        ("tensors", Json::Arr(tensors)),
+        ("nodes", Json::Arr(nodes)),
+        ("inputs", Json::arr(g.inputs.iter().map(|&t| Json::num(t as f64)).collect())),
+        ("outputs", Json::arr(g.outputs.iter().map(|&t| Json::num(t as f64)).collect())),
+    ])
+    .to_string()
+}
+
+/// Parse a model file back into a validated graph.
+pub fn from_model_file(s: &str) -> Result<Graph, String> {
+    let j = Json::parse(s)?;
+    if j.get("format").and_then(Json::as_str) != Some("edgelat-model-v1") {
+        return Err("not an edgelat-model-v1 file".into());
+    }
+    let name = j.get("name").and_then(Json::as_str).unwrap_or("model").to_string();
+    let tensors = j
+        .get("tensors")
+        .and_then(Json::as_arr)
+        .ok_or("missing tensors")?
+        .iter()
+        .enumerate()
+        .map(|(id, t)| {
+            let a = t.as_arr().ok_or("tensor must be array")?;
+            if a.len() != 3 {
+                return Err("tensor must be [h,w,c]".to_string());
+            }
+            Ok(Tensor {
+                id,
+                shape: Shape::new(
+                    a[0].as_usize().ok_or("h")?,
+                    a[1].as_usize().ok_or("w")?,
+                    a[2].as_usize().ok_or("c")?,
+                ),
+            })
+        })
+        .collect::<Result<Vec<_>, String>>()?;
+    let ids = |key: &str| -> Result<Vec<usize>, String> {
+        j.get(key)
+            .and_then(Json::as_arr)
+            .ok_or(format!("missing {key}"))?
+            .iter()
+            .map(|x| x.as_usize().ok_or(format!("bad id in {key}")))
+            .collect()
+    };
+    let nodes = j
+        .get("nodes")
+        .and_then(Json::as_arr)
+        .ok_or("missing nodes")?
+        .iter()
+        .enumerate()
+        .map(|(id, nj)| {
+            let op = op_from_json(nj)?;
+            let get_ids = |key: &str| -> Result<Vec<usize>, String> {
+                nj.get(key)
+                    .and_then(Json::as_arr)
+                    .ok_or(format!("node missing {key}"))?
+                    .iter()
+                    .map(|x| x.as_usize().ok_or(format!("bad id in node {key}")))
+                    .collect()
+            };
+            Ok(Node { id, op, inputs: get_ids("inputs")?, outputs: get_ids("outputs")? })
+        })
+        .collect::<Result<Vec<_>, String>>()?;
+    let g = Graph {
+        name,
+        tensors,
+        nodes,
+        inputs: ids("inputs")?,
+        outputs: ids("outputs")?,
+    };
+    g.validate()?;
+    Ok(g)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::{ActKind, GraphBuilder, Padding};
+
+    fn sample() -> Graph {
+        let mut b = GraphBuilder::new("sample", 32, 32, 3);
+        let x = b.input_tensor();
+        let t = b.conv_act(x, 16, 3, 2, ActKind::Relu6);
+        let t = b.inverted_residual(t, 16, 5, 1, 3, true, ActKind::HSwish);
+        let parts = b.split(t, 2);
+        let a = b.ew_const(EwKind::Abs, parts[0]);
+        let t = b.concat(vec![a, parts[1]]);
+        let t = b.pad(t, 1);
+        let t = b.max_pool(t, 3, 2);
+        let t = b.head(t, 10);
+        b.finish(vec![t])
+    }
+
+    #[test]
+    fn roundtrip_preserves_graph() {
+        let g = sample();
+        let s = to_model_file(&g);
+        let back = from_model_file(&s).unwrap();
+        assert_eq!(g, back);
+    }
+
+    #[test]
+    fn rejects_bad_format() {
+        assert!(from_model_file("{\"format\":\"bogus\"}").is_err());
+        assert!(from_model_file("not json").is_err());
+    }
+
+    #[test]
+    fn rejects_corrupted_topology() {
+        let g = sample();
+        let s = to_model_file(&g);
+        // Point an input at a tensor that doesn't exist yet.
+        let bad = s.replace("\"inputs\":[0]", "\"inputs\":[9999]");
+        assert!(from_model_file(&bad).is_err());
+    }
+}

@@ -1,0 +1,436 @@
+//! Operation taxonomy of the computational graph.
+//!
+//! Mirrors the TFLite op set covered by the paper (Table 3): convolutions
+//! (standard / depthwise / grouped), fully-connected, pooling, mean
+//! (global average pooling), concat/split, padding, element-wise binary and
+//! unary ops, activations and softmax.
+
+use crate::graph::shape::Shape;
+
+/// Spatial padding policy (TFLite SAME / VALID).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Padding {
+    Same,
+    Valid,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum PoolKind {
+    Avg,
+    Max,
+}
+
+/// Element-wise op kinds. The list matches the `IsLinkable` set in TFLite's
+/// GPU-delegate fusion pass (Algorithm C.1, line 23), plus Copy.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum EwKind {
+    Add,
+    Sub,
+    Mul,
+    Div,
+    Exp,
+    Log,
+    Sqrt,
+    Square,
+    Abs,
+    Neg,
+    Pow,
+    Equal,
+    Greater,
+    Less,
+    Maximum,
+    Minimum,
+    Copy,
+}
+
+impl EwKind {
+    pub fn name(&self) -> &'static str {
+        match self {
+            EwKind::Add => "ADD",
+            EwKind::Sub => "SUB",
+            EwKind::Mul => "MUL",
+            EwKind::Div => "DIV",
+            EwKind::Exp => "EXP",
+            EwKind::Log => "LOG",
+            EwKind::Sqrt => "SQRT",
+            EwKind::Square => "SQUARE",
+            EwKind::Abs => "ABS",
+            EwKind::Neg => "NEG",
+            EwKind::Pow => "POW",
+            EwKind::Equal => "EQUAL",
+            EwKind::Greater => "GREATER",
+            EwKind::Less => "LESS",
+            EwKind::Maximum => "MAXIMUM",
+            EwKind::Minimum => "MINIMUM",
+            EwKind::Copy => "COPY",
+        }
+    }
+    pub fn all() -> &'static [EwKind] {
+        use EwKind::*;
+        &[
+            Add, Sub, Mul, Div, Exp, Log, Sqrt, Square, Abs, Neg, Pow, Equal, Greater, Less,
+            Maximum, Minimum, Copy,
+        ]
+    }
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum ActKind {
+    Relu,
+    Relu6,
+    HSwish,
+    HSigmoid,
+    Sigmoid,
+    Swish,
+    Tanh,
+}
+
+impl ActKind {
+    pub fn name(&self) -> &'static str {
+        match self {
+            ActKind::Relu => "RELU",
+            ActKind::Relu6 => "RELU6",
+            ActKind::HSwish => "HSWISH",
+            ActKind::HSigmoid => "HSIGMOID",
+            ActKind::Sigmoid => "SIGMOID",
+            ActKind::Swish => "SWISH",
+            ActKind::Tanh => "TANH",
+        }
+    }
+}
+
+/// An operation in the computational graph. Weights are not materialized —
+/// only their shapes matter for latency (parameter size features).
+#[derive(Debug, Clone, PartialEq)]
+pub enum Op {
+    /// Standard 2-D convolution; `groups > 1` makes it a grouped convolution.
+    Conv2D {
+        kh: usize,
+        kw: usize,
+        stride: usize,
+        padding: Padding,
+        out_c: usize,
+        groups: usize,
+    },
+    /// Depthwise convolution (channel multiplier fixed to 1, as in the zoo).
+    DepthwiseConv2D {
+        kh: usize,
+        kw: usize,
+        stride: usize,
+        padding: Padding,
+    },
+    FullyConnected {
+        out_features: usize,
+    },
+    Pooling {
+        kind: PoolKind,
+        kh: usize,
+        kw: usize,
+        stride: usize,
+        padding: Padding,
+    },
+    /// Global spatial mean (TFLite MEAN over H,W) — used by SE blocks and
+    /// classifier heads.
+    Mean,
+    /// Channel-axis concatenation of >= 2 tensors.
+    Concat,
+    /// Channel-axis split into `num` equal parts.
+    Split {
+        num: usize,
+    },
+    /// Explicit spatial zero-padding.
+    Pad {
+        pad_h: usize,
+        pad_w: usize,
+    },
+    /// Element-wise op; unary kinds take 1 input, binary kinds take 2
+    /// (or 1 input + broadcast constant when `with_const` is set).
+    ElementWise {
+        kind: EwKind,
+        with_const: bool,
+    },
+    Activation {
+        kind: ActKind,
+    },
+    Softmax,
+    /// Flatten HxWxC -> 1x1x(HWC); zero-cost view in TFLite but present in
+    /// graphs between conv trunk and FC head.
+    Reshape,
+}
+
+/// Coarse operation types; one latency predictor is trained per `OpType`
+/// per scenario (Section 4.2 / Table 3).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum OpType {
+    Conv2D,
+    GroupedConv2D,
+    DepthwiseConv2D,
+    FullyConnected,
+    Pooling,
+    Mean,
+    ConcatSplit,
+    Pad,
+    ElementWise,
+    Activation,
+    Softmax,
+    Reshape,
+}
+
+impl OpType {
+    pub fn name(&self) -> &'static str {
+        match self {
+            OpType::Conv2D => "Conv2D",
+            OpType::GroupedConv2D => "GroupedConv2D",
+            OpType::DepthwiseConv2D => "DepthwiseConv2D",
+            OpType::FullyConnected => "FullyConnected",
+            OpType::Pooling => "Pooling",
+            OpType::Mean => "Mean",
+            OpType::ConcatSplit => "Concat/Split",
+            OpType::Pad => "Pad",
+            OpType::ElementWise => "ElementWise",
+            OpType::Activation => "Activation",
+            OpType::Softmax => "Softmax",
+            OpType::Reshape => "Reshape",
+        }
+    }
+
+    pub fn all() -> &'static [OpType] {
+        &[
+            OpType::Conv2D,
+            OpType::GroupedConv2D,
+            OpType::DepthwiseConv2D,
+            OpType::FullyConnected,
+            OpType::Pooling,
+            OpType::Mean,
+            OpType::ConcatSplit,
+            OpType::Pad,
+            OpType::ElementWise,
+            OpType::Activation,
+            OpType::Softmax,
+            OpType::Reshape,
+        ]
+    }
+}
+
+impl Op {
+    /// The coarse type used to route this op to a latency predictor.
+    pub fn op_type(&self) -> OpType {
+        match self {
+            Op::Conv2D { groups, .. } if *groups > 1 => OpType::GroupedConv2D,
+            Op::Conv2D { .. } => OpType::Conv2D,
+            Op::DepthwiseConv2D { .. } => OpType::DepthwiseConv2D,
+            Op::FullyConnected { .. } => OpType::FullyConnected,
+            Op::Pooling { .. } => OpType::Pooling,
+            Op::Mean => OpType::Mean,
+            Op::Concat | Op::Split { .. } => OpType::ConcatSplit,
+            Op::Pad { .. } => OpType::Pad,
+            Op::ElementWise { .. } => OpType::ElementWise,
+            Op::Activation { .. } => OpType::Activation,
+            Op::Softmax => OpType::Softmax,
+            Op::Reshape => OpType::Reshape,
+        }
+    }
+
+    /// Whether TFLite parallelizes this op across CPU threads (Insight 1:
+    /// only convolution, depthwise convolution, and fully-connected have
+    /// multithreaded implementations).
+    pub fn cpu_parallel(&self) -> bool {
+        matches!(
+            self,
+            Op::Conv2D { .. } | Op::DepthwiseConv2D { .. } | Op::FullyConnected { .. }
+        )
+    }
+
+    /// Whether the GPU-delegate fusion pass may merge this op into its
+    /// producer (`IsLinkable`, Algorithm C.1 line 23).
+    pub fn is_linkable(&self) -> bool {
+        matches!(self, Op::Activation { .. } | Op::ElementWise { .. })
+    }
+
+    /// Number of graph inputs this op consumes.
+    pub fn arity(&self) -> OpArity {
+        match self {
+            Op::Concat => OpArity::Variadic,
+            Op::ElementWise { kind, with_const } => {
+                let binary = matches!(
+                    kind,
+                    EwKind::Add
+                        | EwKind::Sub
+                        | EwKind::Mul
+                        | EwKind::Div
+                        | EwKind::Pow
+                        | EwKind::Equal
+                        | EwKind::Greater
+                        | EwKind::Less
+                        | EwKind::Maximum
+                        | EwKind::Minimum
+                );
+                if binary && !with_const {
+                    OpArity::Exact(2)
+                } else {
+                    OpArity::Exact(1)
+                }
+            }
+            _ => OpArity::Exact(1),
+        }
+    }
+
+    /// Multiply-accumulate-based FLOP count (2 FLOPs per MAC), matching the
+    /// convention in the paper's feature table.
+    pub fn flops(&self, inputs: &[Shape], outputs: &[Shape]) -> u64 {
+        match self {
+            Op::Conv2D { kh, kw, groups, .. } => {
+                let out = &outputs[0];
+                let in_c = inputs[0].c;
+                let macs = out.numel() as u64 * (in_c / groups) as u64 * (*kh as u64) * (*kw as u64);
+                2 * macs
+            }
+            Op::DepthwiseConv2D { kh, kw, .. } => {
+                let out = &outputs[0];
+                2 * out.numel() as u64 * (*kh as u64) * (*kw as u64)
+            }
+            Op::FullyConnected { out_features } => {
+                2 * inputs[0].numel() as u64 * *out_features as u64
+            }
+            Op::Pooling { kh, kw, .. } => outputs[0].numel() as u64 * (*kh as u64) * (*kw as u64),
+            Op::Mean => inputs[0].numel() as u64,
+            Op::Concat | Op::Split { .. } | Op::Reshape => 0,
+            Op::Pad { .. } => 0,
+            Op::ElementWise { .. } => inputs.iter().map(|s| s.numel() as u64).max().unwrap_or(0),
+            Op::Activation { kind } => {
+                let n = inputs[0].numel() as u64;
+                match kind {
+                    ActKind::Relu | ActKind::Relu6 => n,
+                    ActKind::HSwish | ActKind::HSigmoid => 3 * n,
+                    ActKind::Sigmoid | ActKind::Swish | ActKind::Tanh => 4 * n,
+                }
+            }
+            Op::Softmax => 5 * inputs[0].numel() as u64,
+        }
+    }
+
+    /// Number of learned parameters (weights + biases).
+    pub fn param_count(&self, inputs: &[Shape], outputs: &[Shape]) -> u64 {
+        match self {
+            Op::Conv2D { kh, kw, out_c, groups, .. } => {
+                let in_c = inputs[0].c;
+                (*kh as u64) * (*kw as u64) * (in_c / groups) as u64 * (*out_c as u64)
+                    + *out_c as u64
+            }
+            Op::DepthwiseConv2D { kh, kw, .. } => {
+                let c = outputs[0].c as u64;
+                (*kh as u64) * (*kw as u64) * c + c
+            }
+            Op::FullyConnected { out_features } => {
+                inputs[0].numel() as u64 * *out_features as u64 + *out_features as u64
+            }
+            _ => 0,
+        }
+    }
+
+    /// Human-readable op name for traces and model files.
+    pub fn name(&self) -> String {
+        match self {
+            Op::Conv2D { kh, kw, groups, .. } if *groups > 1 => {
+                format!("GroupedConv2D{kh}x{kw}g{groups}")
+            }
+            Op::Conv2D { kh, kw, .. } => format!("Conv2D{kh}x{kw}"),
+            Op::DepthwiseConv2D { kh, kw, .. } => format!("DepthwiseConv2D{kh}x{kw}"),
+            Op::FullyConnected { .. } => "FullyConnected".into(),
+            Op::Pooling { kind: PoolKind::Avg, .. } => "AvgPool".into(),
+            Op::Pooling { kind: PoolKind::Max, .. } => "MaxPool".into(),
+            Op::Mean => "Mean".into(),
+            Op::Concat => "Concat".into(),
+            Op::Split { num } => format!("Split{num}"),
+            Op::Pad { .. } => "Pad".into(),
+            Op::ElementWise { kind, .. } => kind.name().into(),
+            Op::Activation { kind } => kind.name().into(),
+            Op::Softmax => "Softmax".into(),
+            Op::Reshape => "Reshape".into(),
+        }
+    }
+}
+
+/// Input arity of an op.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum OpArity {
+    Exact(usize),
+    /// >= 2 inputs (Concat).
+    Variadic,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::shape::Shape;
+
+    #[test]
+    fn conv_flops_standard() {
+        // 3x3 conv, 16->32 channels, 8x8 output: 2 * 8*8*32 * 16*9
+        let op = Op::Conv2D { kh: 3, kw: 3, stride: 1, padding: Padding::Same, out_c: 32, groups: 1 };
+        let f = op.flops(&[Shape::new(8, 8, 16)], &[Shape::new(8, 8, 32)]);
+        assert_eq!(f, 2 * 8 * 8 * 32 * 16 * 9);
+    }
+
+    #[test]
+    fn grouped_conv_flops_divide_by_groups() {
+        let op1 = Op::Conv2D { kh: 3, kw: 3, stride: 1, padding: Padding::Same, out_c: 32, groups: 1 };
+        let op4 = Op::Conv2D { kh: 3, kw: 3, stride: 1, padding: Padding::Same, out_c: 32, groups: 4 };
+        let i = [Shape::new(8, 8, 16)];
+        let o = [Shape::new(8, 8, 32)];
+        assert_eq!(op1.flops(&i, &o), 4 * op4.flops(&i, &o));
+    }
+
+    #[test]
+    fn depthwise_flops() {
+        let op = Op::DepthwiseConv2D { kh: 3, kw: 3, stride: 1, padding: Padding::Same };
+        let f = op.flops(&[Shape::new(8, 8, 16)], &[Shape::new(8, 8, 16)]);
+        assert_eq!(f, 2 * 8 * 8 * 16 * 9);
+    }
+
+    #[test]
+    fn op_type_distinguishes_grouped() {
+        let op = Op::Conv2D { kh: 3, kw: 3, stride: 1, padding: Padding::Same, out_c: 32, groups: 4 };
+        assert_eq!(op.op_type(), OpType::GroupedConv2D);
+    }
+
+    #[test]
+    fn only_conv_dw_fc_parallel() {
+        assert!(Op::FullyConnected { out_features: 10 }.cpu_parallel());
+        assert!(!Op::Mean.cpu_parallel());
+        assert!(!Op::Softmax.cpu_parallel());
+        assert!(!Op::ElementWise { kind: EwKind::Add, with_const: false }.cpu_parallel());
+    }
+
+    #[test]
+    fn linkable_matches_algorithm_c1() {
+        assert!(Op::Activation { kind: ActKind::Relu }.is_linkable());
+        assert!(Op::ElementWise { kind: EwKind::Add, with_const: false }.is_linkable());
+        assert!(!Op::Concat.is_linkable());
+        assert!(!Op::Pooling { kind: PoolKind::Max, kh: 2, kw: 2, stride: 2, padding: Padding::Valid }
+            .is_linkable());
+    }
+
+    #[test]
+    fn binary_ew_arity() {
+        assert_eq!(
+            Op::ElementWise { kind: EwKind::Add, with_const: false }.arity(),
+            OpArity::Exact(2)
+        );
+        assert_eq!(
+            Op::ElementWise { kind: EwKind::Add, with_const: true }.arity(),
+            OpArity::Exact(1)
+        );
+        assert_eq!(Op::ElementWise { kind: EwKind::Sqrt, with_const: false }.arity(), OpArity::Exact(1));
+        assert_eq!(Op::Concat.arity(), OpArity::Variadic);
+    }
+
+    #[test]
+    fn param_counts() {
+        let conv = Op::Conv2D { kh: 3, kw: 3, stride: 1, padding: Padding::Same, out_c: 8, groups: 1 };
+        assert_eq!(conv.param_count(&[Shape::new(4, 4, 4)], &[Shape::new(4, 4, 8)]), 3 * 3 * 4 * 8 + 8);
+        let fc = Op::FullyConnected { out_features: 10 };
+        assert_eq!(fc.param_count(&[Shape::new(1, 1, 64)], &[Shape::new(1, 1, 10)]), 64 * 10 + 10);
+        assert_eq!(Op::Mean.param_count(&[Shape::new(4, 4, 4)], &[Shape::new(1, 1, 4)]), 0);
+    }
+}

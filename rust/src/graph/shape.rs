@@ -1,0 +1,64 @@
+//! Tensor shapes. Inference on mobile uses batch size 1 throughout the
+//! paper, so shapes are HWC feature maps (vectors are 1x1xC).
+
+use crate::graph::op::Padding;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct Shape {
+    pub h: usize,
+    pub w: usize,
+    pub c: usize,
+}
+
+impl Shape {
+    pub fn new(h: usize, w: usize, c: usize) -> Shape {
+        Shape { h, w, c }
+    }
+
+    /// A 1-D feature vector (output of Mean / FullyConnected / Reshape).
+    pub fn vec(c: usize) -> Shape {
+        Shape { h: 1, w: 1, c }
+    }
+
+    pub fn numel(&self) -> usize {
+        self.h * self.w * self.c
+    }
+
+    /// Spatial output extent of a strided window op under a padding policy.
+    pub fn conv_out_dim(in_dim: usize, k: usize, stride: usize, padding: Padding) -> usize {
+        match padding {
+            Padding::Same => in_dim.div_ceil(stride),
+            Padding::Valid => {
+                assert!(in_dim >= k, "VALID padding needs input >= kernel ({in_dim} < {k})");
+                (in_dim - k) / stride + 1
+            }
+        }
+    }
+
+    pub fn render(&self) -> String {
+        format!("{}x{}x{}", self.h, self.w, self.c)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn same_padding_halves_with_stride2() {
+        assert_eq!(Shape::conv_out_dim(224, 3, 2, Padding::Same), 112);
+        assert_eq!(Shape::conv_out_dim(7, 3, 2, Padding::Same), 4);
+    }
+
+    #[test]
+    fn valid_padding() {
+        assert_eq!(Shape::conv_out_dim(224, 3, 1, Padding::Valid), 222);
+        assert_eq!(Shape::conv_out_dim(7, 7, 1, Padding::Valid), 1);
+    }
+
+    #[test]
+    fn numel() {
+        assert_eq!(Shape::new(7, 7, 64).numel(), 3136);
+        assert_eq!(Shape::vec(1000).numel(), 1000);
+    }
+}

@@ -1,0 +1,35 @@
+//! # edgelat — Inference Latency Prediction at the Edge
+//!
+//! A full reproduction of *"Inference Latency Prediction at the Edge"*
+//! (Li, Paolieri, Golubchik, 2022): operation-wise latency prediction for
+//! neural-network inference on mobile SoCs, evaluated against a simulated
+//! big.LITTLE CPU + mobile-GPU substrate (see DESIGN.md for the hardware
+//! substitution argument).
+//!
+//! Architecture (three layers):
+//! - **L3 (this crate)**: computational-graph IR, real-world model zoo, NAS
+//!   sampler, TFLite compile simulation (kernel fusion/selection), device
+//!   simulator, profiler, feature extraction, Lasso/RF/GBDT predictors, and
+//!   the end-to-end prediction framework + evaluation harness.
+//! - **L2 (python/compile/model.py, build-time only)**: the MLP latency
+//!   predictor's forward/backward in JAX, AOT-lowered to HLO text.
+//! - **L1 (python/compile/kernels/, build-time only)**: the MLP's fused
+//!   dense layer as a Pallas kernel (interpret mode), verified vs a jnp
+//!   oracle.
+//!
+//! The rust binary executes the AOT-compiled MLP via the PJRT C API
+//! (`runtime`); Python never runs on the request path.
+
+pub mod device;
+pub mod graph;
+pub mod features;
+pub mod framework;
+pub mod nas;
+pub mod predict;
+pub mod profiler;
+pub mod report;
+pub mod runtime;
+pub mod scenario;
+pub mod tflite;
+pub mod util;
+pub mod zoo;

@@ -1,0 +1,280 @@
+//! edgelat CLI — the L3 coordinator entrypoint.
+//!
+//! Subcommands:
+//!   reproduce   regenerate paper figures/tables (see DESIGN.md §6)
+//!   generate    emit model files (zoo / synthetic NAS samples)
+//!   profile     profile a model under a scenario on the simulated device
+//!   evaluate    train + evaluate a predictor for a scenario
+//!   predict     end-to-end latency prediction for a model file
+//!   list        list scenarios / zoo models
+//!
+//! Arg parsing is hand-rolled: the offline crate set has no clap.
+
+use edgelat::framework::{evaluate, DeductionMode, ScenarioPredictor};
+use edgelat::graph::modelfile;
+use edgelat::predict::Method;
+use edgelat::profiler::{profile, profile_set};
+use edgelat::report::{all_ids, reproduce, ReportConfig, ReportCtx};
+use edgelat::scenario::{all_scenarios, by_id};
+use edgelat::util::table::ms;
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let cmd = args.first().map(|s| s.as_str()).unwrap_or("help");
+    let rest = &args[1.min(args.len())..];
+    match cmd {
+        "reproduce" => cmd_reproduce(rest),
+        "generate" => cmd_generate(rest),
+        "profile" => cmd_profile(rest),
+        "evaluate" => cmd_evaluate(rest),
+        "predict" => cmd_predict(rest),
+        "list" => cmd_list(rest),
+        "help" | "--help" | "-h" => usage(),
+        other => {
+            eprintln!("unknown command '{other}'");
+            usage();
+            std::process::exit(2);
+        }
+    }
+}
+
+fn usage() {
+    println!(
+        "edgelat — Inference Latency Prediction at the Edge (reproduction)
+
+USAGE:
+  edgelat reproduce [--figure ID | --all] [--full|--smoke] [--seed S] [--csv DIR]
+  edgelat generate  [--zoo | --synth N] [--seed S] --out DIR
+  edgelat profile   --model NAME --scenario ID [--runs R] [--seed S]
+  edgelat evaluate  --scenario ID --method {{lasso|rf|gbdt|mlp}} [--train N] [--test {{synth|zoo}}]
+  edgelat predict   --model-file PATH --scenario ID [--method M] [--train N]
+  edgelat list      {{scenarios|models|figures}}
+
+Figures/tables: {}",
+        all_ids().join(" ")
+    );
+}
+
+fn flag(rest: &[String], name: &str) -> Option<String> {
+    rest.iter().position(|a| a == name).and_then(|i| rest.get(i + 1).cloned())
+}
+
+fn has(rest: &[String], name: &str) -> bool {
+    rest.iter().any(|a| a == name)
+}
+
+fn parse_method(s: &str) -> Method {
+    match s.to_lowercase().as_str() {
+        "lasso" => Method::Lasso,
+        "rf" | "randomforest" => Method::RandomForest,
+        "gbdt" => Method::Gbdt,
+        "mlp" => Method::Mlp,
+        other => {
+            eprintln!("unknown method '{other}'");
+            std::process::exit(2);
+        }
+    }
+}
+
+fn report_config(rest: &[String]) -> ReportConfig {
+    let mut cfg = if has(rest, "--full") {
+        ReportConfig::full()
+    } else if has(rest, "--smoke") {
+        ReportConfig::smoke()
+    } else {
+        ReportConfig::default()
+    };
+    if let Some(s) = flag(rest, "--seed") {
+        cfg.seed = s.parse().expect("--seed u64");
+    }
+    let dir = edgelat::runtime::Runtime::default_dir();
+    if edgelat::runtime::Runtime::artifacts_available(&dir) {
+        cfg.artifacts = Some(dir);
+    }
+    cfg
+}
+
+fn cmd_reproduce(rest: &[String]) {
+    let cfg = report_config(rest);
+    let csv_dir = flag(rest, "--csv");
+    let ids: Vec<String> = if has(rest, "--all") {
+        all_ids().iter().map(|s| s.to_string()).collect()
+    } else if let Some(f) = flag(rest, "--figure").or_else(|| flag(rest, "--table")) {
+        vec![f]
+    } else {
+        eprintln!("need --figure ID or --all");
+        std::process::exit(2);
+    };
+    let mut ctx = ReportCtx::new(cfg);
+    for id in ids {
+        let start = std::time::Instant::now();
+        let tables = reproduce(&id, &mut ctx);
+        for t in &tables {
+            println!("{}", t.render());
+            if let Some(dir) = &csv_dir {
+                std::fs::create_dir_all(dir).expect("mkdir csv dir");
+                let slug: String = t
+                    .title
+                    .chars()
+                    .map(|c| if c.is_alphanumeric() { c } else { '_' })
+                    .take(60)
+                    .collect();
+                let path = format!("{dir}/fig{id}_{slug}.csv");
+                std::fs::write(&path, t.to_csv()).expect("write csv");
+            }
+        }
+        eprintln!("[fig {id}] done in {:.1}s", start.elapsed().as_secs_f64());
+    }
+}
+
+fn cmd_generate(rest: &[String]) {
+    let out = flag(rest, "--out").unwrap_or_else(|| "models".into());
+    std::fs::create_dir_all(&out).expect("mkdir out");
+    let seed: u64 = flag(rest, "--seed").map(|s| s.parse().unwrap()).unwrap_or(2022);
+    let graphs = if let Some(n) = flag(rest, "--synth") {
+        edgelat::nas::sample_dataset(seed, n.parse().expect("--synth N"))
+            .into_iter()
+            .map(|a| a.graph)
+            .collect()
+    } else {
+        edgelat::zoo::all_graphs()
+    };
+    for g in &graphs {
+        let path = format!("{out}/{}.json", g.name);
+        std::fs::write(&path, modelfile::to_model_file(g)).expect("write model file");
+    }
+    println!("wrote {} model files to {out}/", graphs.len());
+}
+
+fn cmd_profile(rest: &[String]) {
+    let name = flag(rest, "--model").expect("--model NAME");
+    let sc_id = flag(rest, "--scenario").expect("--scenario ID");
+    let runs: usize = flag(rest, "--runs").map(|s| s.parse().unwrap()).unwrap_or(10);
+    let seed: u64 = flag(rest, "--seed").map(|s| s.parse().unwrap()).unwrap_or(2022);
+    let g = edgelat::zoo::by_name(&name)
+        .or_else(|| {
+            std::fs::read_to_string(&name).ok().and_then(|s| modelfile::from_model_file(&s).ok())
+        })
+        .unwrap_or_else(|| {
+            eprintln!("model '{name}' not in zoo and not a readable model file");
+            std::process::exit(2);
+        });
+    let sc = by_id(&sc_id).unwrap_or_else(|| {
+        eprintln!("unknown scenario '{sc_id}' (see `edgelat list scenarios`)");
+        std::process::exit(2);
+    });
+    let p = profile(&sc, &g, seed, runs);
+    println!("model: {}  scenario: {}  runs: {runs}", p.model, sc.id);
+    println!(
+        "end-to-end median: {} ms  (op sum {} + overhead {})",
+        ms(p.end_to_end_ms),
+        ms(p.op_sum_ms()),
+        ms(p.overhead_ms())
+    );
+    println!("\n{:<28} {:>22} {:>12}", "bucket", "kernel", "latency ms");
+    for o in p.ops.iter().take(40) {
+        println!("{:<28} {:>22} {:>12}", o.bucket, o.kernel.name(), ms(o.latency_ms));
+    }
+    if p.ops.len() > 40 {
+        println!("... ({} more)", p.ops.len() - 40);
+    }
+}
+
+fn cmd_evaluate(rest: &[String]) {
+    let sc_id = flag(rest, "--scenario").expect("--scenario ID");
+    let method = parse_method(&flag(rest, "--method").unwrap_or_else(|| "gbdt".into()));
+    let n_train: usize = flag(rest, "--train").map(|s| s.parse().unwrap()).unwrap_or(120);
+    let test = flag(rest, "--test").unwrap_or_else(|| "synth".into());
+    let seed: u64 = flag(rest, "--seed").map(|s| s.parse().unwrap()).unwrap_or(2022);
+    let sc = by_id(&sc_id).expect("unknown scenario");
+    let train_g: Vec<_> = edgelat::nas::sample_dataset(seed, n_train + 40)
+        .into_iter()
+        .map(|a| a.graph)
+        .collect();
+    let (tr_g, te_synth) = train_g.split_at(n_train);
+    let tr_p = profile_set(&sc, tr_g, seed, 5);
+    let mlp_ctx = if method == Method::Mlp {
+        Some(
+            edgelat::predict::mlp::MlpContext::load(edgelat::runtime::Runtime::default_dir())
+                .expect("MLP needs artifacts (make artifacts)"),
+        )
+    } else {
+        None
+    };
+    let pred = ScenarioPredictor::train_from(
+        &sc,
+        &tr_p,
+        method,
+        DeductionMode::Full,
+        seed,
+        mlp_ctx.as_ref(),
+    );
+    let (te_g, te_p): (Vec<_>, Vec<_>) = if test == "zoo" {
+        let g = edgelat::zoo::all_graphs();
+        let p = profile_set(&sc, &g, seed, 5);
+        (g, p)
+    } else {
+        let p = profile_set(&sc, te_synth, seed, 5);
+        (te_synth.to_vec(), p)
+    };
+    let ev = evaluate(&pred, &te_g, &te_p);
+    println!(
+        "scenario {}  method {}  train {}  test {} ({} NAs)",
+        sc.id,
+        method.name(),
+        n_train,
+        test,
+        te_g.len()
+    );
+    println!("end-to-end MAPE: {:.2}%", ev.end_to_end_mape * 100.0);
+    println!("T_overhead estimate: {} ms", ms(pred.t_overhead_ms));
+    for (b, m) in &ev.per_bucket_mape {
+        println!("  {b:<24} MAPE {:.2}%", m * 100.0);
+    }
+}
+
+fn cmd_predict(rest: &[String]) {
+    let path = flag(rest, "--model-file").expect("--model-file PATH");
+    let sc_id = flag(rest, "--scenario").expect("--scenario ID");
+    let method = parse_method(&flag(rest, "--method").unwrap_or_else(|| "gbdt".into()));
+    let n_train: usize = flag(rest, "--train").map(|s| s.parse().unwrap()).unwrap_or(120);
+    let seed: u64 = 2022;
+    let s = std::fs::read_to_string(&path).expect("reading model file");
+    let g = modelfile::from_model_file(&s).expect("parsing model file");
+    let sc = by_id(&sc_id).expect("unknown scenario");
+    let train_g: Vec<_> =
+        edgelat::nas::sample_dataset(seed, n_train).into_iter().map(|a| a.graph).collect();
+    let tr_p = profile_set(&sc, &train_g, seed, 5);
+    let pred = ScenarioPredictor::train_from(&sc, &tr_p, method, DeductionMode::Full, seed, None);
+    let e = pred.predict(&g);
+    println!("{}: predicted end-to-end latency on {} = {} ms", g.name, sc.id, ms(e));
+    for (b, m) in pred.predict_units(&g).iter().take(30) {
+        println!("  {b:<24} {} ms", ms(*m));
+    }
+}
+
+fn cmd_list(rest: &[String]) {
+    match rest.first().map(|s| s.as_str()).unwrap_or("scenarios") {
+        "scenarios" => {
+            for s in all_scenarios() {
+                println!("{}", s.id);
+            }
+        }
+        "models" => {
+            for g in edgelat::zoo::all_graphs() {
+                println!(
+                    "{:<28} params={:>9}  flops={:>12}  ops={}",
+                    g.name,
+                    g.params(),
+                    g.flops(),
+                    g.nodes.len()
+                );
+            }
+        }
+        "figures" => println!("{}", all_ids().join("\n")),
+        other => {
+            eprintln!("unknown list target '{other}'");
+            std::process::exit(2);
+        }
+    }
+}

@@ -1,0 +1,302 @@
+//! The synthetic NAS space of Section 4.3.2 and Fig. 12.
+//!
+//! A synthetic architecture is a sequence of 9 building blocks that halves
+//! the input width/height after blocks 1, 3, 5, 7 and 9, followed by a 1x1
+//! convolution and a fully-connected layer producing a 1000-d output. The
+//! type and parameters of each block are sampled uniformly at random:
+//!
+//! 1. convolution (kernel 3x3/5x5/7x7, optional group count 4k, 1<=k<=16)
+//! 2. depthwise-separable convolution (kernel 3x3/5x5/7x7)
+//! 3. linear bottleneck (kernel 3/5/7, expansion 1/3/6, optional SE)
+//! 4. average or max pooling (pool size 1x1 or 3x3)
+//! 5. split (2/3/4 ways) + element-wise op per branch + concat
+//!
+//! Output channels: C1..C5 ~ U[8, 80], C6..C9 ~ U[80, 400],
+//! C10 (head conv) ~ U[1200, 1800]. Divisibility constraints (groups and
+//! splits) are enforced by resampling, preserving the uniform marginals the
+//! paper describes.
+
+use crate::graph::{ActKind, EwKind, Graph, GraphBuilder, Padding, TensorId};
+use crate::util::Rng;
+
+/// Block descriptors, recorded so experiments can stratify by block type.
+#[derive(Debug, Clone, PartialEq)]
+pub enum BlockSpec {
+    Conv { k: usize, groups: usize, out_c: usize },
+    DwSeparable { k: usize, out_c: usize },
+    Bottleneck { k: usize, expand: usize, se: bool, out_c: usize },
+    Pool { avg: bool, k: usize },
+    SplitEwConcat { ways: usize, ew: EwKind },
+}
+
+/// A sampled synthetic architecture: the spec and the built graph.
+pub struct SynthArch {
+    pub index: usize,
+    pub blocks: Vec<BlockSpec>,
+    pub head_c: usize,
+    pub graph: Graph,
+}
+
+/// Unary element-wise ops that are numerically safe on activations.
+const BRANCH_EW: [EwKind; 4] = [EwKind::Abs, EwKind::Neg, EwKind::Square, EwKind::Copy];
+
+fn sample_channels(rng: &mut Rng, i: usize) -> usize {
+    match i {
+        0..=4 => rng.range_usize(8, 80),
+        5..=8 => rng.range_usize(80, 400),
+        _ => rng.range_usize(1200, 1800),
+    }
+}
+
+/// Largest group count of the form 4k (k<=16) dividing both channel counts,
+/// at most the sampled `want`; falls back to 1 (no grouping).
+fn fit_groups(want: usize, in_c: usize, out_c: usize) -> usize {
+    let mut g = want;
+    while g > 1 {
+        if g % 4 == 0 && in_c % g == 0 && out_c % g == 0 {
+            return g;
+        }
+        g -= 4;
+    }
+    1
+}
+
+fn fit_split(want: usize, c: usize) -> usize {
+    for w in (2..=want).rev() {
+        if c % w == 0 {
+            return w;
+        }
+    }
+    1
+}
+
+/// Sample one block spec. `i` is the 0-based block index (channels range
+/// depends on position).
+fn sample_block(rng: &mut Rng, i: usize, in_c: usize) -> BlockSpec {
+    let out_c = sample_channels(rng, i);
+    match rng.range_usize(0, 4) {
+        0 => {
+            let k = *rng.choice(&[3usize, 5, 7]);
+            let groups = if rng.bool(0.5) {
+                // groups = 4k, k in 1..=16, fitted to divisibility
+                let want = 4 * rng.range_usize(1, 16);
+                // grouped conv wants channel counts divisible by the group
+                // count; round out_c up to a multiple of 4 to give groups a
+                // chance (uniformity over multiples of 4, as the space's
+                // grouped configurations require).
+                let out_c4 = out_c.div_ceil(4) * 4;
+                let g = fit_groups(want, in_c, out_c4);
+                if g > 1 {
+                    return BlockSpec::Conv { k, groups: g, out_c: out_c4 };
+                }
+                1
+            } else {
+                1
+            };
+            BlockSpec::Conv { k, groups, out_c }
+        }
+        1 => BlockSpec::DwSeparable { k: *rng.choice(&[3usize, 5, 7]), out_c },
+        2 => BlockSpec::Bottleneck {
+            k: *rng.choice(&[3usize, 5, 7]),
+            expand: *rng.choice(&[1usize, 3, 6]),
+            se: rng.bool(0.5),
+            out_c,
+        },
+        3 => BlockSpec::Pool { avg: rng.bool(0.5), k: *rng.choice(&[1usize, 3]) },
+        _ => {
+            let want = rng.range_usize(2, 4);
+            let ways = fit_split(want, in_c);
+            if ways < 2 {
+                // Channels not divisible: degrade to a pooling block, which
+                // is the cheapest structure-preserving alternative.
+                BlockSpec::Pool { avg: true, k: 1 }
+            } else {
+                BlockSpec::SplitEwConcat { ways, ew: *rng.choice(&BRANCH_EW) }
+            }
+        }
+    }
+}
+
+fn apply_block(b: &mut GraphBuilder, t: TensorId, spec: &BlockSpec, halve: bool) -> TensorId {
+    let stride = if halve { 2 } else { 1 };
+    match spec {
+        BlockSpec::Conv { k, groups, out_c } => {
+            let t = if *groups > 1 {
+                b.grouped_conv(t, *out_c, *k, stride, *groups)
+            } else {
+                b.conv(t, *out_c, *k, stride, Padding::Same)
+            };
+            b.relu(t)
+        }
+        BlockSpec::DwSeparable { k, out_c } => b.dw_separable(t, *out_c, *k, stride, ActKind::Relu),
+        BlockSpec::Bottleneck { k, expand, se, out_c } => {
+            b.inverted_residual(t, *out_c, *k, stride, *expand, *se, ActKind::Relu6)
+        }
+        BlockSpec::Pool { avg, k } => {
+            if *avg {
+                b.avg_pool(t, *k, stride)
+            } else {
+                b.max_pool(t, *k, stride)
+            }
+        }
+        BlockSpec::SplitEwConcat { ways, ew } => {
+            let parts = b.split(t, *ways);
+            let outs: Vec<TensorId> = parts
+                .into_iter()
+                .map(|p| {
+                    if *ew == EwKind::Copy {
+                        p
+                    } else {
+                        b.ew_const(*ew, p)
+                    }
+                })
+                .collect();
+            let t = b.concat(outs);
+            if halve {
+                b.max_pool(t, 2, 2)
+            } else {
+                t
+            }
+        }
+    }
+}
+
+/// Sample synthetic architecture number `index` from the space, seeded.
+pub fn sample(seed: u64, index: usize) -> SynthArch {
+    let mut rng = Rng::derive(seed, &[0x5a5a, index as u64]);
+    let mut b = GraphBuilder::new(&format!("synth_{index:04}"), 224, 224, 3);
+    let mut t = b.input_tensor();
+    let mut blocks = Vec::with_capacity(9);
+    for i in 0..9 {
+        let in_c = b.shape(t).c;
+        let spec = sample_block(&mut rng, i, in_c);
+        // Halve after blocks 1,3,5,7,9 (1-indexed) = 0,2,4,6,8 (0-indexed).
+        let halve = i % 2 == 0;
+        t = apply_block(&mut b, t, &spec, halve);
+        blocks.push(spec);
+    }
+    let head_c = sample_channels(&mut rng, 9);
+    t = b.conv(t, head_c, 1, 1, Padding::Same);
+    t = b.relu(t);
+    let out = b.head(t, 1000);
+    SynthArch { index, blocks, head_c, graph: b.finish(vec![out]) }
+}
+
+/// Sample the full synthetic dataset (1000 architectures in the paper).
+pub fn sample_dataset(seed: u64, n: usize) -> Vec<SynthArch> {
+    (0..n).map(|i| sample(seed, i)).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::OpType;
+
+    #[test]
+    fn samples_are_deterministic() {
+        let a = sample(1, 7);
+        let b = sample(1, 7);
+        assert_eq!(a.graph, b.graph);
+        let c = sample(2, 7);
+        assert!(c.graph != a.graph || c.blocks != a.blocks);
+    }
+
+    #[test]
+    fn all_sampled_graphs_validate() {
+        for arch in sample_dataset(42, 100) {
+            arch.graph
+                .validate()
+                .unwrap_or_else(|e| panic!("{}: {e}", arch.graph.name));
+        }
+    }
+
+    #[test]
+    fn spatial_resolution_halves_five_times() {
+        for arch in sample_dataset(7, 20) {
+            // Find the input shape of the head 1x1 conv (7x7 for 224 input).
+            let head_conv = &arch.graph.nodes[arch.graph.nodes.len() - 5];
+            let s = arch.graph.shape(head_conv.inputs[0]);
+            assert_eq!((s.h, s.w), (7, 7), "{}", arch.graph.name);
+        }
+    }
+
+    #[test]
+    fn head_channels_in_range() {
+        for arch in sample_dataset(3, 50) {
+            assert!((1200..=1800).contains(&arch.head_c));
+        }
+    }
+
+    #[test]
+    fn block_type_marginals_roughly_uniform() {
+        let archs = sample_dataset(11, 400);
+        let mut counts = [0usize; 5];
+        for a in &archs {
+            for blk in &a.blocks {
+                let i = match blk {
+                    BlockSpec::Conv { .. } => 0,
+                    BlockSpec::DwSeparable { .. } => 1,
+                    BlockSpec::Bottleneck { .. } => 2,
+                    BlockSpec::Pool { .. } => 3,
+                    BlockSpec::SplitEwConcat { .. } => 4,
+                };
+                counts[i] += 1;
+            }
+        }
+        let total: usize = counts.iter().sum();
+        for (i, &c) in counts.iter().enumerate() {
+            let frac = c as f64 / total as f64;
+            // Each type should appear with ~20% frequency (split blocks can
+            // degrade to pooling on indivisible channels).
+            assert!(
+                (0.10..0.32).contains(&frac),
+                "block type {i} frequency {frac:.3}; counts={counts:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn grouped_convs_appear_and_satisfy_divisibility() {
+        let archs = sample_dataset(13, 200);
+        let mut grouped = 0;
+        for a in &archs {
+            for n in &a.graph.nodes {
+                if let crate::graph::Op::Conv2D { groups, out_c, .. } = n.op {
+                    if groups > 1 {
+                        grouped += 1;
+                        let in_c = a.graph.shape(n.inputs[0]).c;
+                        assert_eq!(in_c % groups, 0);
+                        assert_eq!(out_c % groups, 0);
+                        assert_eq!(groups % 4, 0);
+                    }
+                }
+            }
+        }
+        // Uniform channel sampling makes 4k-divisibility fairly rare — the
+        // space still yields a steady supply of grouped configurations.
+        assert!(grouped > 25, "expected many grouped convs, got {grouped}");
+    }
+
+    #[test]
+    fn dataset_covers_all_major_op_types() {
+        let archs = sample_dataset(17, 100);
+        let mut seen = std::collections::HashSet::new();
+        for a in &archs {
+            for t in a.graph.op_type_histogram().keys() {
+                seen.insert(*t);
+            }
+        }
+        for t in [
+            OpType::Conv2D,
+            OpType::GroupedConv2D,
+            OpType::DepthwiseConv2D,
+            OpType::FullyConnected,
+            OpType::Pooling,
+            OpType::Mean,
+            OpType::ConcatSplit,
+            OpType::ElementWise,
+        ] {
+            assert!(seen.contains(&t), "missing {t:?}");
+        }
+    }
+}

@@ -1,0 +1,102 @@
+//! K-fold cross-validation and grid-search helpers shared by the predictors.
+
+use crate::util::{mape, Rng};
+
+/// Deterministic k-fold index split.
+pub fn kfold(n: usize, k: usize, seed: u64) -> Vec<(Vec<usize>, Vec<usize>)> {
+    let k = k.min(n).max(2);
+    let mut idx: Vec<usize> = (0..n).collect();
+    Rng::derive(seed, &[0xcf]).shuffle(&mut idx);
+    let mut folds = Vec::with_capacity(k);
+    let chunk = n.div_ceil(k);
+    for f in 0..k {
+        let lo = f * chunk;
+        let hi = ((f + 1) * chunk).min(n);
+        if lo >= hi {
+            continue;
+        }
+        let test: Vec<usize> = idx[lo..hi].to_vec();
+        let train: Vec<usize> = idx[..lo].iter().chain(&idx[hi..]).copied().collect();
+        folds.push((train, test));
+    }
+    folds
+}
+
+pub fn take<T: Clone>(xs: &[T], idx: &[usize]) -> Vec<T> {
+    idx.iter().map(|&i| xs[i].clone()).collect()
+}
+
+/// Grid search: evaluate `fit(param, train_x, train_y)` on each fold, score
+/// by MAPE, return the best parameter. Small datasets fall back to fewer
+/// folds automatically.
+pub fn grid_search<P: Clone, M, F>(
+    params: &[P],
+    x: &[Vec<f64>],
+    y: &[f64],
+    seed: u64,
+    fit: F,
+) -> P
+where
+    F: Fn(&P, &[Vec<f64>], &[f64]) -> M,
+    M: Fn(&[f64]) -> f64,
+{
+    assert!(!params.is_empty());
+    if x.len() < 10 || params.len() == 1 {
+        return params[0].clone();
+    }
+    let folds = kfold(x.len(), 5, seed);
+    let mut best = (f64::INFINITY, 0usize);
+    for (pi, p) in params.iter().enumerate() {
+        let mut errs = Vec::new();
+        for (tr, te) in &folds {
+            let xt = take(x, tr);
+            let yt = take(y, tr);
+            let model = fit(p, &xt, &yt);
+            let pred: Vec<f64> = te.iter().map(|&i| model(&x[i]).max(1e-9)).collect();
+            let actual: Vec<f64> = te.iter().map(|&i| y[i]).collect();
+            errs.push(mape(&pred, &actual));
+        }
+        let score = errs.iter().sum::<f64>() / errs.len() as f64;
+        if score < best.0 {
+            best = (score, pi);
+        }
+    }
+    params[best.1].clone()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn kfold_partitions() {
+        let folds = kfold(103, 5, 1);
+        assert_eq!(folds.len(), 5);
+        let mut all: Vec<usize> = folds.iter().flat_map(|(_, te)| te.clone()).collect();
+        all.sort_unstable();
+        assert_eq!(all, (0..103).collect::<Vec<_>>());
+        for (tr, te) in &folds {
+            assert_eq!(tr.len() + te.len(), 103);
+            assert!(te.iter().all(|i| !tr.contains(i)));
+        }
+    }
+
+    #[test]
+    fn kfold_handles_tiny_n() {
+        let folds = kfold(3, 5, 2);
+        assert!(!folds.is_empty());
+        let total: usize = folds.iter().map(|(_, te)| te.len()).sum();
+        assert_eq!(total, 3);
+    }
+
+    #[test]
+    fn grid_search_picks_correct_scale() {
+        // y = 2x; candidate scales {1.0, 2.0, 3.0}: fit = multiply by scale.
+        let x: Vec<Vec<f64>> = (1..60).map(|i| vec![i as f64]).collect();
+        let y: Vec<f64> = (1..60).map(|i| 2.0 * i as f64).collect();
+        let best = grid_search(&[1.0, 2.0, 3.0], &x, &y, 3, |&s, _xt, _yt| {
+            move |v: &[f64]| s * v[0]
+        });
+        assert_eq!(best, 2.0);
+    }
+}

@@ -1,0 +1,110 @@
+//! Random Forest: bagged regression trees with feature subsampling.
+//! Hyperparameters follow the paper (Section 4.2): number of trees in
+//! 1..10 and min samples to split in 2..50, tuned by 5-fold CV.
+
+use crate::predict::cv;
+use crate::predict::tree::{Tree, TreeParams};
+use crate::predict::Regressor;
+use crate::util::Rng;
+
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ForestParams {
+    pub n_trees: usize,
+    pub min_samples_split: usize,
+}
+
+pub struct RandomForest {
+    pub trees: Vec<Tree>,
+    pub params: ForestParams,
+}
+
+impl RandomForest {
+    pub fn fit(x: &[Vec<f64>], y: &[f64], params: ForestParams, seed: u64) -> RandomForest {
+        let n = x.len();
+        let d = x[0].len();
+        let max_features = ((d as f64).sqrt().ceil() as usize).max(1);
+        let mut trees = Vec::with_capacity(params.n_trees);
+        for t in 0..params.n_trees {
+            let mut rng = Rng::derive(seed, &[0xf0, t as u64]);
+            // Bootstrap sample.
+            let idx: Vec<usize> = (0..n).map(|_| rng.range_usize(0, n - 1)).collect();
+            let bx: Vec<Vec<f64>> = idx.iter().map(|&i| x[i].clone()).collect();
+            let by: Vec<f64> = idx.iter().map(|&i| y[i]).collect();
+            let tp = TreeParams {
+                max_depth: 24,
+                min_samples_split: params.min_samples_split,
+                max_features: if params.n_trees > 1 { Some(max_features) } else { None },
+            };
+            trees.push(Tree::fit(&bx, &by, None, tp, seed.wrapping_add(t as u64)));
+        }
+        RandomForest { trees, params }
+    }
+
+    /// Grid search over the paper's hyperparameter ranges.
+    pub fn fit_cv(x: &[Vec<f64>], y: &[f64], seed: u64) -> RandomForest {
+        let grid: Vec<ForestParams> = [1usize, 3, 5, 10]
+            .iter()
+            .flat_map(|&n_trees| {
+                [2usize, 8, 20, 50]
+                    .iter()
+                    .map(move |&mss| ForestParams { n_trees, min_samples_split: mss })
+            })
+            .collect();
+        let best = cv::grid_search(&grid, x, y, seed, |p, xt, yt| {
+            let m = RandomForest::fit(xt, yt, *p, seed);
+            move |v: &[f64]| m.predict_one(v)
+        });
+        RandomForest::fit(x, y, best, seed)
+    }
+}
+
+impl Regressor for RandomForest {
+    fn predict_one(&self, x: &[f64]) -> f64 {
+        let s: f64 = self.trees.iter().map(|t| t.predict_one(x)).sum();
+        s / self.trees.len() as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::mape;
+
+    #[test]
+    fn forest_fits_nonlinear_target() {
+        let (x, y) = crate::predict::toy_problem(500, 1);
+        let (xt, yt) = crate::predict::toy_problem(100, 2);
+        let f = RandomForest::fit(&x, &y, ForestParams { n_trees: 10, min_samples_split: 2 }, 3);
+        let pred: Vec<f64> = xt.iter().map(|v| f.predict_one(v)).collect();
+        assert!(mape(&pred, &yt) < 0.12, "mape={}", mape(&pred, &yt));
+    }
+
+    #[test]
+    fn more_trees_reduce_variance() {
+        let (x, y) = crate::predict::toy_problem(300, 4);
+        let (xt, yt) = crate::predict::toy_problem(100, 5);
+        let err = |n_trees: usize| {
+            let f = RandomForest::fit(&x, &y, ForestParams { n_trees, min_samples_split: 2 }, 6);
+            mape(&xt.iter().map(|v| f.predict_one(v)).collect::<Vec<_>>(), &yt)
+        };
+        assert!(err(10) < err(1) * 1.05, "10 trees {} vs 1 tree {}", err(10), err(1));
+    }
+
+    #[test]
+    fn cv_returns_valid_params() {
+        let (x, y) = crate::predict::toy_problem(200, 7);
+        let f = RandomForest::fit_cv(&x, &y, 8);
+        assert!((1..=10).contains(&f.params.n_trees));
+        assert!((2..=50).contains(&f.params.min_samples_split));
+    }
+
+    #[test]
+    fn deterministic_in_seed() {
+        let (x, y) = crate::predict::toy_problem(150, 9);
+        let a = RandomForest::fit(&x, &y, ForestParams { n_trees: 5, min_samples_split: 2 }, 42);
+        let b = RandomForest::fit(&x, &y, ForestParams { n_trees: 5, min_samples_split: 2 }, 42);
+        for v in x.iter().take(10) {
+            assert_eq!(a.predict_one(v), b.predict_one(v));
+        }
+    }
+}

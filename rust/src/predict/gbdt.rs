@@ -1,0 +1,163 @@
+//! Gradient-Boosted Decision Trees: least-squares boosting with shrinkage
+//! on 1/y²-weighted loss (percentage error). Hyperparameters per the paper
+//! (Section 4.2): number of boosting stages in 1..200 and min samples to
+//! split in 2..7, tuned by 5-fold CV.
+
+use crate::predict::cv;
+use crate::predict::tree::{Tree, TreeParams};
+use crate::predict::Regressor;
+
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct GbdtParams {
+    pub n_stages: usize,
+    pub min_samples_split: usize,
+    pub learning_rate: f64,
+    pub max_depth: usize,
+}
+
+impl Default for GbdtParams {
+    fn default() -> Self {
+        GbdtParams { n_stages: 100, min_samples_split: 2, learning_rate: 0.1, max_depth: 4 }
+    }
+}
+
+pub struct Gbdt {
+    pub init: f64,
+    pub trees: Vec<Tree>,
+    pub params: GbdtParams,
+}
+
+impl Gbdt {
+    pub fn fit(x: &[Vec<f64>], y: &[f64], params: GbdtParams, seed: u64) -> Gbdt {
+        let n = x.len();
+        let w: Vec<f64> = y.iter().map(|&yi| 1.0 / (yi * yi).max(1e-18)).collect();
+        let sw: f64 = w.iter().sum();
+        let init = w.iter().zip(y).map(|(wi, yi)| wi * yi).sum::<f64>() / sw;
+        let mut pred = vec![init; n];
+        let mut trees = Vec::with_capacity(params.n_stages);
+        let tp = TreeParams {
+            max_depth: params.max_depth,
+            min_samples_split: params.min_samples_split,
+            max_features: None,
+        };
+        for stage in 0..params.n_stages {
+            let resid: Vec<f64> = y.iter().zip(&pred).map(|(yi, pi)| yi - pi).collect();
+            // Weighted leaf means are the optimal step for weighted L2.
+            let t = Tree::fit(x, &resid, Some(&w), tp, seed.wrapping_add(stage as u64));
+            for (pi, xi) in pred.iter_mut().zip(x) {
+                *pi += params.learning_rate * t.predict_one(xi);
+            }
+            trees.push(t);
+        }
+        Gbdt { init, trees, params }
+    }
+
+    /// Grid search over the paper's ranges (stages 1..200, min split 2..7).
+    ///
+    /// Staged evaluation: boosting is incremental, so one 200-stage fit per
+    /// (fold, min_split) yields the CV error at *every* checkpoint — 2x5
+    /// full fits instead of 6x5 partial ones (EXPERIMENTS.md §Perf).
+    pub fn fit_cv(x: &[Vec<f64>], y: &[f64], seed: u64) -> Gbdt {
+        const CHECKPOINTS: [usize; 3] = [25, 100, 200];
+        const SPLITS: [usize; 2] = [2, 7];
+        if x.len() < 10 {
+            return Gbdt::fit(x, y, GbdtParams::default(), seed);
+        }
+        let folds = cv::kfold(x.len(), 5, seed);
+        let mut best = (f64::INFINITY, GbdtParams::default());
+        for &mss in &SPLITS {
+            // Accumulated |rel err| per checkpoint across folds.
+            let mut errs = [0.0f64; CHECKPOINTS.len()];
+            let mut counts = [0usize; CHECKPOINTS.len()];
+            for (tr, te) in &folds {
+                let xt = cv::take(x, tr);
+                let yt = cv::take(y, tr);
+                let params = GbdtParams {
+                    n_stages: *CHECKPOINTS.last().unwrap(),
+                    min_samples_split: mss,
+                    ..Default::default()
+                };
+                let model = Gbdt::fit(&xt, &yt, params, seed);
+                // Evaluate incrementally: running prediction per test row.
+                let mut preds: Vec<f64> = te.iter().map(|_| model.init).collect();
+                let mut stage = 0usize;
+                for (ci, &ck) in CHECKPOINTS.iter().enumerate() {
+                    while stage < ck.min(model.trees.len()) {
+                        for (p, &i) in preds.iter_mut().zip(te.iter()) {
+                            *p += model.params.learning_rate * model.trees[stage].predict_one(&x[i]);
+                        }
+                        stage += 1;
+                    }
+                    for (p, &i) in preds.iter().zip(te.iter()) {
+                        errs[ci] += ((p.max(1e-9) - y[i]) / y[i]).abs();
+                        counts[ci] += 1;
+                    }
+                }
+            }
+            for (ci, &ck) in CHECKPOINTS.iter().enumerate() {
+                let m = errs[ci] / counts[ci].max(1) as f64;
+                if m < best.0 {
+                    best = (
+                        m,
+                        GbdtParams { n_stages: ck, min_samples_split: mss, ..Default::default() },
+                    );
+                }
+            }
+        }
+        Gbdt::fit(x, y, best.1, seed)
+    }
+}
+
+impl Regressor for Gbdt {
+    fn predict_one(&self, x: &[f64]) -> f64 {
+        let mut p = self.init;
+        for t in &self.trees {
+            p += self.params.learning_rate * t.predict_one(x);
+        }
+        p
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::mape;
+
+    #[test]
+    fn gbdt_fits_roofline_target_well() {
+        let (x, y) = crate::predict::toy_problem(600, 1);
+        let (xt, yt) = crate::predict::toy_problem(150, 2);
+        let m = Gbdt::fit(&x, &y, GbdtParams::default(), 3);
+        let pred: Vec<f64> = xt.iter().map(|v| m.predict_one(v)).collect();
+        assert!(mape(&pred, &yt) < 0.08, "mape={}", mape(&pred, &yt));
+    }
+
+    #[test]
+    fn more_stages_fit_train_better() {
+        let (x, y) = crate::predict::toy_problem(300, 4);
+        let train_err = |stages: usize| {
+            let m = Gbdt::fit(&x, &y, GbdtParams { n_stages: stages, ..Default::default() }, 5);
+            mape(&x.iter().map(|v| m.predict_one(v)).collect::<Vec<_>>(), &y)
+        };
+        assert!(train_err(100) < train_err(5));
+    }
+
+    #[test]
+    fn cv_params_in_paper_ranges() {
+        let (x, y) = crate::predict::toy_problem(200, 6);
+        let m = Gbdt::fit_cv(&x, &y, 7);
+        assert!((1..=200).contains(&m.params.n_stages));
+        assert!((2..=7).contains(&m.params.min_samples_split));
+    }
+
+    #[test]
+    fn init_is_weighted_mean() {
+        let x = vec![vec![0.0]; 3];
+        let y = vec![1.0, 10.0, 100.0];
+        let m = Gbdt::fit(&x, &y, GbdtParams { n_stages: 0, ..Default::default() }, 0);
+        // weights 1, 0.01, 0.0001 -> weighted mean close to 1.2ish
+        let w: Vec<f64> = y.iter().map(|&v| 1.0 / (v * v)).collect();
+        let expect = w.iter().zip(&y).map(|(a, b)| a * b).sum::<f64>() / w.iter().sum::<f64>();
+        assert!((m.init - expect).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,294 @@
+//! The MLP latency predictor, executed through the AOT JAX/Pallas stack:
+//! `python/compile/model.py` defines the forward pass (whose dense layers
+//! are the L1 Pallas `fused_dense` kernel) and an Adam train step with the
+//! paper's relative-error loss; `aot.py` lowers both to HLO text once; this
+//! module drives training and inference from rust via PJRT (`runtime`).
+//!
+//! Hyperparameters follow Section 4.2 (layer count / width grid, Adam with
+//! lr in {5e-3, 5e-4, 5e-5}, early stopping on a 20% validation split),
+//! restricted to the AOT-compiled variants listed in `mlp_meta.json`.
+
+use crate::predict::Regressor;
+use crate::runtime::{literal_f32, to_vec_f32, Executable, Runtime};
+use crate::util::{mape, Json, Rng};
+use anyhow::{anyhow, Context, Result};
+use std::path::Path;
+
+/// One AOT-compiled MLP architecture variant.
+pub struct MlpVariant {
+    pub name: String,
+    pub layers: usize,
+    pub width: usize,
+    pub in_dim: usize,
+    pub batch: usize,
+    pub train: Executable,
+    pub forward: Executable,
+    /// Weight/bias tensor shapes in positional order.
+    pub param_shapes: Vec<Vec<i64>>,
+}
+
+/// Loaded artifacts + PJRT client shared by all MLP trainings.
+pub struct MlpContext {
+    pub runtime: Runtime,
+    pub variants: Vec<MlpVariant>,
+}
+
+impl MlpContext {
+    /// Load every variant listed in `mlp_meta.json`.
+    pub fn load(dir: impl AsRef<Path>) -> Result<MlpContext> {
+        let runtime = Runtime::cpu(&dir)?;
+        let meta = runtime.metadata("mlp_meta.json")?;
+        let mut variants = Vec::new();
+        for v in meta
+            .get("variants")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow!("mlp_meta.json missing variants"))?
+        {
+            let name = v.get("name").and_then(Json::as_str).context("variant name")?.to_string();
+            let layers = v.get("layers").and_then(Json::as_usize).context("layers")?;
+            let width = v.get("width").and_then(Json::as_usize).context("width")?;
+            let in_dim = v.get("in_dim").and_then(Json::as_usize).context("in_dim")?;
+            let batch = v.get("batch").and_then(Json::as_usize).context("batch")?;
+            let train = runtime.load(&format!("mlp_train_{name}.hlo.txt"))?;
+            let forward = runtime.load(&format!("mlp_forward_{name}.hlo.txt"))?;
+            let mut param_shapes: Vec<Vec<i64>> = Vec::new();
+            let mut fan_in = in_dim as i64;
+            for _ in 0..layers {
+                param_shapes.push(vec![fan_in, width as i64]);
+                param_shapes.push(vec![width as i64]);
+                fan_in = width as i64;
+            }
+            param_shapes.push(vec![fan_in, 1]);
+            param_shapes.push(vec![1]);
+            variants.push(MlpVariant { name, layers, width, in_dim, batch, train, forward, param_shapes });
+        }
+        if variants.is_empty() {
+            return Err(anyhow!("no MLP variants in mlp_meta.json"));
+        }
+        Ok(MlpContext { runtime, variants })
+    }
+}
+
+/// A trained MLP: the winning variant index + its weights (host copies).
+pub struct MlpModel<'c> {
+    ctx: &'c MlpContext,
+    variant: usize,
+    params: Vec<Vec<f32>>,
+}
+
+fn he_init(shapes: &[Vec<i64>], rng: &mut Rng) -> Vec<Vec<f32>> {
+    shapes
+        .iter()
+        .map(|s| {
+            let n: i64 = s.iter().product();
+            if s.len() == 1 {
+                vec![0.0; n as usize] // biases start at zero
+            } else {
+                let std = (2.0 / s[0] as f64).sqrt();
+                (0..n).map(|_| (rng.normal() * std) as f32).collect()
+            }
+        })
+        .collect()
+}
+
+/// Pad a feature row to `in_dim` (Table 3 vectors are shorter than the
+/// fixed AOT input width).
+fn pad_row(x: &[f64], in_dim: usize) -> Vec<f32> {
+    let mut v = vec![0f32; in_dim];
+    for (o, i) in v.iter_mut().zip(x) {
+        *o = *i as f32;
+    }
+    v
+}
+
+struct TrainData {
+    x: Vec<Vec<f32>>,
+    y: Vec<f32>,
+}
+
+impl<'c> MlpModel<'c> {
+    /// Train with grid search over variants and learning rates, early
+    /// stopping on a 20% validation split (paper Section 4.2).
+    pub fn fit(ctx: &'c MlpContext, x: &[Vec<f64>], y: &[f64], seed: u64) -> MlpModel<'c> {
+        let mut rng = Rng::derive(seed, &[0x31b]);
+        let n = x.len();
+        if n < 8 {
+            // Too little data for a validation split or meaningful SGD:
+            // train the first variant briefly on everything.
+            let tr = TrainData {
+                x: x.iter().map(|r| pad_row(r, ctx.variants[0].in_dim)).collect(),
+                y: y.iter().map(|&v| v as f32).collect(),
+            };
+            let params = train_variant(ctx, 0, &tr, 5e-3, seed).expect("MLP train step failed");
+            return MlpModel { ctx, variant: 0, params };
+        }
+        let mut idx: Vec<usize> = (0..n).collect();
+        rng.shuffle(&mut idx);
+        let n_val = (n / 5).max(1).min(n - 1);
+        let (val_idx, tr_idx) = idx.split_at(n_val);
+
+        let lrs = [5e-3f32, 5e-4];
+        let mut best: Option<(f64, usize, Vec<Vec<f32>>)> = None;
+        for (vi, variant) in ctx.variants.iter().enumerate() {
+            let tr = TrainData {
+                x: tr_idx.iter().map(|&i| pad_row(&x[i], variant.in_dim)).collect(),
+                y: tr_idx.iter().map(|&i| y[i] as f32).collect(),
+            };
+            let val_x: Vec<Vec<f64>> = val_idx.iter().map(|&i| x[i].clone()).collect();
+            let val_y: Vec<f64> = val_idx.iter().map(|&i| y[i]).collect();
+            for &lr in &lrs {
+                let params = train_variant(ctx, vi, &tr, lr, seed).expect("MLP train step failed");
+                let model = MlpModel { ctx, variant: vi, params };
+                let pred: Vec<f64> =
+                    model.predict_batch(&val_x).iter().map(|&p| (p as f64).max(1e-9)).collect();
+                let err = mape(&pred, &val_y);
+                if best.as_ref().map(|b| err < b.0).unwrap_or(true) {
+                    best = Some((err, vi, model.params));
+                }
+            }
+        }
+        let (_, variant, params) = best.unwrap();
+        MlpModel { ctx, variant, params }
+    }
+
+    /// Batched forward pass through the AOT executable.
+    pub fn predict_batch(&self, xs: &[Vec<f64>]) -> Vec<f32> {
+        let v = &self.ctx.variants[self.variant];
+        let b = v.batch;
+        let mut out = Vec::with_capacity(xs.len());
+        for chunk in xs.chunks(b) {
+            let mut flat = vec![0f32; b * v.in_dim];
+            for (r, row) in chunk.iter().enumerate() {
+                let p = pad_row(row, v.in_dim);
+                flat[r * v.in_dim..(r + 1) * v.in_dim].copy_from_slice(&p);
+            }
+            let mut inputs =
+                vec![literal_f32(&flat, &[b as i64, v.in_dim as i64]).expect("x literal")];
+            for (p, s) in self.params.iter().zip(&v.param_shapes) {
+                inputs.push(literal_f32(p, s).expect("param literal"));
+            }
+            let outs = v.forward.run(&inputs).expect("forward failed");
+            let pred = to_vec_f32(&outs[0]).expect("forward output");
+            out.extend_from_slice(&pred[..chunk.len()]);
+        }
+        out
+    }
+}
+
+/// Run the Adam training loop for one (variant, lr) configuration.
+fn train_variant(
+    ctx: &MlpContext,
+    vi: usize,
+    data: &TrainData,
+    lr: f32,
+    seed: u64,
+) -> Result<Vec<Vec<f32>>> {
+    let v = &ctx.variants[vi];
+    let b = v.batch;
+    let n = data.x.len();
+    let mut rng = Rng::derive(seed, &[0x714, vi as u64, lr.to_bits() as u64]);
+    let mut params = he_init(&v.param_shapes, &mut rng);
+    let mut m: Vec<Vec<f32>> = v.param_shapes.iter().map(|s| vec![0.0; s.iter().product::<i64>() as usize]).collect();
+    let mut vv: Vec<Vec<f32>> = m.clone();
+
+    // Hold out 20% of the *training* rows for early stopping.
+    let mut order: Vec<usize> = (0..n).collect();
+    rng.shuffle(&mut order);
+    let n_es = (n / 5).max(1).min(n.saturating_sub(1)).max(1);
+    let (es_idx, tr_idx) = order.split_at(n_es.min(n - 1).max(1));
+
+    let max_epochs = 200usize;
+    let patience = 50usize;
+    let wd = 1e-4f32;
+    let mut best_loss = f64::INFINITY;
+    let mut best_params = params.clone();
+    let mut since_best = 0usize;
+    let mut t_step = 0f32;
+
+    let steps_per_epoch = tr_idx.len().div_ceil(b).max(1);
+    for _epoch in 0..max_epochs {
+        for s in 0..steps_per_epoch {
+            t_step += 1.0;
+            // Assemble a batch (wrapping) with mask for padding rows.
+            let mut xb = vec![0f32; b * v.in_dim];
+            let mut yb = vec![1f32; b];
+            let mut mask = vec![0f32; b];
+            for r in 0..b {
+                let k = s * b + r;
+                if k >= tr_idx.len() {
+                    break;
+                }
+                let i = tr_idx[k];
+                xb[r * v.in_dim..(r + 1) * v.in_dim].copy_from_slice(&data.x[i]);
+                yb[r] = data.y[i];
+                mask[r] = 1.0;
+            }
+            let mut inputs = vec![
+                literal_f32(&xb, &[b as i64, v.in_dim as i64])?,
+                literal_f32(&yb, &[b as i64])?,
+                literal_f32(&mask, &[b as i64])?,
+                xla::Literal::scalar(t_step),
+                xla::Literal::scalar(lr),
+                xla::Literal::scalar(wd),
+            ];
+            for (p, sh) in params.iter().zip(&v.param_shapes) {
+                inputs.push(literal_f32(p, sh)?);
+            }
+            for (p, sh) in m.iter().zip(&v.param_shapes) {
+                inputs.push(literal_f32(p, sh)?);
+            }
+            for (p, sh) in vv.iter().zip(&v.param_shapes) {
+                inputs.push(literal_f32(p, sh)?);
+            }
+            let outs = v.train.run(&inputs)?;
+            // outs: [loss, params..., m..., v...]
+            let np = v.param_shapes.len();
+            if outs.len() != 1 + 3 * np {
+                return Err(anyhow!("train step returned {} outputs, expected {}", outs.len(), 1 + 3 * np));
+            }
+            for (k, p) in params.iter_mut().enumerate() {
+                *p = to_vec_f32(&outs[1 + k])?;
+            }
+            for (k, p) in m.iter_mut().enumerate() {
+                *p = to_vec_f32(&outs[1 + np + k])?;
+            }
+            for (k, p) in vv.iter_mut().enumerate() {
+                *p = to_vec_f32(&outs[1 + 2 * np + k])?;
+            }
+        }
+        // Early-stopping check on the held-out slice.
+        let model = MlpModel { ctx, variant: vi, params: params.clone() };
+        let es_x: Vec<Vec<f64>> = es_idx
+            .iter()
+            .map(|&i| data.x[i].iter().map(|&f| f as f64).collect())
+            .collect();
+        let pred = model.predict_batch(&es_x);
+        let mut loss = 0.0f64;
+        for (p, &i) in pred.iter().zip(es_idx) {
+            let e = (*p as f64 - data.y[i] as f64) / data.y[i].max(1e-9) as f64;
+            loss += e * e;
+        }
+        loss /= es_idx.len() as f64;
+        if loss < best_loss {
+            best_loss = loss;
+            best_params = params.clone();
+            since_best = 0;
+        } else {
+            since_best += 1;
+            if since_best * steps_per_epoch >= patience {
+                break;
+            }
+        }
+    }
+    Ok(best_params)
+}
+
+impl<'c> Regressor for MlpModel<'c> {
+    fn predict_one(&self, x: &[f64]) -> f64 {
+        self.predict_batch(std::slice::from_ref(&x.to_vec()))[0] as f64
+    }
+
+    fn predict(&self, xs: &[Vec<f64>]) -> Vec<f64> {
+        self.predict_batch(xs).into_iter().map(|p| p as f64).collect()
+    }
+}

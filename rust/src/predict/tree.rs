@@ -1,0 +1,307 @@
+//! CART regression tree with weighted squared loss (weights 1/y², aligning
+//! the split criterion with the paper's percentage-error objective). The
+//! building block for both `forest` (RF) and `gbdt`.
+
+/// Tree hyperparameters.
+#[derive(Debug, Clone, Copy)]
+pub struct TreeParams {
+    pub max_depth: usize,
+    pub min_samples_split: usize,
+    /// Number of features considered per split (None = all; RF uses sqrt).
+    pub max_features: Option<usize>,
+}
+
+impl Default for TreeParams {
+    fn default() -> Self {
+        TreeParams { max_depth: 16, min_samples_split: 2, max_features: None }
+    }
+}
+
+#[derive(Debug, Clone)]
+enum NodeKind {
+    Leaf { value: f64 },
+    Split { feature: usize, threshold: f64, left: usize, right: usize },
+}
+
+/// A fitted regression tree (nodes stored in a flat arena).
+#[derive(Debug, Clone)]
+pub struct Tree {
+    nodes: Vec<NodeKind>,
+}
+
+struct Builder<'a> {
+    x: &'a [Vec<f64>],
+    y: &'a [f64],
+    w: &'a [f64],
+    params: TreeParams,
+    nodes: Vec<NodeKind>,
+    rng_state: u64,
+}
+
+impl<'a> Builder<'a> {
+    fn next_rand(&mut self) -> u64 {
+        // splitmix64 step for feature subsampling
+        self.rng_state = self.rng_state.wrapping_add(0x9E3779B97F4A7C15);
+        let mut z = self.rng_state;
+        z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+        z ^ (z >> 31)
+    }
+
+    /// Build a node from per-feature presorted member lists (`sorted[f]` is
+    /// this node's members ordered by feature f). Sorting happens once at
+    /// the root; splits partition the lists stably in O(F·n) — the
+    /// classic presort optimization (EXPERIMENTS.md §Perf).
+    fn build(&mut self, sorted: Vec<Vec<u32>>, depth: usize) -> usize {
+        let idx = &sorted[0];
+        let n = idx.len();
+        let leaf_value = self.weighted_mean_u32(idx);
+        if depth >= self.params.max_depth || n < self.params.min_samples_split || n < 2 {
+            self.nodes.push(NodeKind::Leaf { value: leaf_value });
+            return self.nodes.len() - 1;
+        }
+
+        // Candidate features.
+        let d = self.x[0].len();
+        let mut feats: Vec<usize> = (0..d).collect();
+        if let Some(mf) = self.params.max_features {
+            // Fisher-Yates partial shuffle.
+            let mf = mf.min(d);
+            for i in 0..mf {
+                let j = i + (self.next_rand() as usize) % (d - i);
+                feats.swap(i, j);
+            }
+            feats.truncate(mf);
+        }
+
+        // Best split by weighted SSE reduction.
+        let sse = |sw: f64, swy: f64, swyy: f64| -> f64 {
+            if sw <= 0.0 {
+                0.0
+            } else {
+                swyy - swy * swy / sw
+            }
+        };
+        let (mut sw_t, mut swy_t, mut swyy_t) = (0.0, 0.0, 0.0);
+        for &i in idx.iter() {
+            let i = i as usize;
+            sw_t += self.w[i];
+            swy_t += self.w[i] * self.y[i];
+            swyy_t += self.w[i] * self.y[i] * self.y[i];
+        }
+        let total_sse = sse(sw_t, swy_t, swyy_t);
+        if total_sse <= swyy_t * 1e-12 {
+            // Constant target (up to catastrophic-cancellation noise).
+            self.nodes.push(NodeKind::Leaf { value: leaf_value });
+            return self.nodes.len() - 1;
+        }
+        // Numerically meaningful gains only.
+        let min_gain = (total_sse * 1e-9).max(1e-18);
+        let (mut best_gain, mut best_f, mut best_thr) = (min_gain, usize::MAX, 0.0f64);
+        for &f in &feats {
+            let order = &sorted[f];
+            // Prefix scans of w, w*y, w*y².
+            let (mut sw_l, mut swy_l, mut swyy_l) = (0.0, 0.0, 0.0);
+            for k in 0..n - 1 {
+                let i = order[k] as usize;
+                sw_l += self.w[i];
+                swy_l += self.w[i] * self.y[i];
+                swyy_l += self.w[i] * self.y[i] * self.y[i];
+                let xv = self.x[i][f];
+                let xn = self.x[order[k + 1] as usize][f];
+                if xn <= xv {
+                    continue; // ties: can't split here
+                }
+                let gain = total_sse
+                    - sse(sw_l, swy_l, swyy_l)
+                    - sse(sw_t - sw_l, swy_t - swy_l, swyy_t - swyy_l);
+                if gain > best_gain {
+                    best_gain = gain;
+                    best_f = f;
+                    best_thr = 0.5 * (xv + xn);
+                }
+            }
+        }
+
+        if best_f == usize::MAX {
+            self.nodes.push(NodeKind::Leaf { value: leaf_value });
+            return self.nodes.len() - 1;
+        }
+
+        // Stable partition of every feature's order by the split predicate.
+        let goes_left: Vec<bool> = {
+            // Membership via a bitmap over the full dataset.
+            let mut gl = vec![false; self.x.len()];
+            for &i in idx.iter() {
+                gl[i as usize] = self.x[i as usize][best_f] <= best_thr;
+            }
+            gl
+        };
+        let mut left_sorted: Vec<Vec<u32>> = Vec::with_capacity(d);
+        let mut right_sorted: Vec<Vec<u32>> = Vec::with_capacity(d);
+        for order in &sorted {
+            let mut l = Vec::with_capacity(n / 2);
+            let mut r = Vec::with_capacity(n / 2);
+            for &i in order {
+                if goes_left[i as usize] {
+                    l.push(i);
+                } else {
+                    r.push(i);
+                }
+            }
+            left_sorted.push(l);
+            right_sorted.push(r);
+        }
+        drop(sorted);
+        debug_assert!(!left_sorted[0].is_empty() && !right_sorted[0].is_empty());
+        let l = self.build(left_sorted, depth + 1);
+        let r = self.build(right_sorted, depth + 1);
+        self.nodes.push(NodeKind::Split { feature: best_f, threshold: best_thr, left: l, right: r });
+        self.nodes.len() - 1
+    }
+
+    fn weighted_mean_u32(&self, idx: &[u32]) -> f64 {
+        let mut sw = 0.0;
+        let mut swy = 0.0;
+        for &i in idx {
+            let i = i as usize;
+            sw += self.w[i];
+            swy += self.w[i] * self.y[i];
+        }
+        if sw > 0.0 {
+            swy / sw
+        } else {
+            0.0
+        }
+    }
+}
+
+impl Tree {
+    /// Fit on (x, y) with optional per-sample weights (default 1/y²).
+    pub fn fit(x: &[Vec<f64>], y: &[f64], w: Option<&[f64]>, params: TreeParams, seed: u64) -> Tree {
+        assert_eq!(x.len(), y.len());
+        assert!(!x.is_empty());
+        let default_w: Vec<f64>;
+        let w = match w {
+            Some(w) => w,
+            None => {
+                default_w = y.iter().map(|&yi| 1.0 / (yi * yi).max(1e-18)).collect();
+                &default_w
+            }
+        };
+        let mut b = Builder { x, y, w, params, nodes: Vec::new(), rng_state: seed ^ 0xABCD };
+        // Presort every feature once; node splits partition these stably.
+        let d = x[0].len();
+        let sorted: Vec<Vec<u32>> = (0..d)
+            .map(|f| {
+                let mut order: Vec<u32> = (0..x.len() as u32).collect();
+                order.sort_by(|&a, &b| {
+                    x[a as usize][f].partial_cmp(&x[b as usize][f]).unwrap()
+                });
+                order
+            })
+            .collect();
+        let root = b.build(sorted, 0);
+        debug_assert_eq!(root, b.nodes.len() - 1);
+        Tree { nodes: b.nodes }
+    }
+
+    pub fn predict_one(&self, x: &[f64]) -> f64 {
+        let mut i = self.nodes.len() - 1; // root is last-pushed
+        loop {
+            match &self.nodes[i] {
+                NodeKind::Leaf { value } => return *value,
+                NodeKind::Split { feature, threshold, left, right } => {
+                    i = if x[*feature] <= *threshold { *left } else { *right };
+                }
+            }
+        }
+    }
+
+    pub fn node_count(&self) -> usize {
+        self.nodes.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::{mape, Rng};
+
+    #[test]
+    fn memorizes_training_data_at_full_depth() {
+        let x: Vec<Vec<f64>> = (0..50).map(|i| vec![i as f64]).collect();
+        let y: Vec<f64> = (0..50).map(|i| (i * i + 1) as f64).collect();
+        let t = Tree::fit(&x, &y, None, TreeParams::default(), 0);
+        for (xi, &yi) in x.iter().zip(&y) {
+            let p = t.predict_one(xi);
+            assert!(
+                (p - yi).abs() <= 1e-9 * yi.abs().max(1.0),
+                "pred {p} vs {yi}"
+            );
+        }
+    }
+
+    #[test]
+    fn respects_max_depth() {
+        let x: Vec<Vec<f64>> = (0..256).map(|i| vec![i as f64]).collect();
+        let y: Vec<f64> = (0..256).map(|i| i as f64 + 1.0).collect();
+        let t = Tree::fit(
+            &x,
+            &y,
+            None,
+            TreeParams { max_depth: 3, ..Default::default() },
+            0,
+        );
+        // depth-3 binary tree: at most 2^4 - 1 nodes.
+        assert!(t.node_count() <= 15, "{}", t.node_count());
+    }
+
+    #[test]
+    fn min_samples_split_limits_growth() {
+        let x: Vec<Vec<f64>> = (0..100).map(|i| vec![i as f64]).collect();
+        let y: Vec<f64> = (0..100).map(|i| i as f64 + 1.0).collect();
+        let small = Tree::fit(&x, &y, None, TreeParams { min_samples_split: 50, ..Default::default() }, 0);
+        let big = Tree::fit(&x, &y, None, TreeParams::default(), 0);
+        assert!(small.node_count() < big.node_count());
+    }
+
+    #[test]
+    fn learns_step_function() {
+        // Piecewise-constant target: exactly what trees represent.
+        let mut rng = Rng::new(4);
+        let mut x = Vec::new();
+        let mut y = Vec::new();
+        for _ in 0..300 {
+            let a = rng.range_f64(0.0, 10.0);
+            x.push(vec![a]);
+            y.push(if a < 3.0 { 5.0 } else if a < 7.0 { 50.0 } else { 500.0 });
+        }
+        let t = Tree::fit(&x, &y, None, TreeParams { max_depth: 4, ..Default::default() }, 0);
+        let pred: Vec<f64> = x.iter().map(|v| t.predict_one(v)).collect();
+        assert!(mape(&pred, &y) < 0.02);
+    }
+
+    #[test]
+    fn handles_constant_target() {
+        let x: Vec<Vec<f64>> = (0..20).map(|i| vec![i as f64]).collect();
+        let y = vec![7.0; 20];
+        let t = Tree::fit(&x, &y, None, TreeParams::default(), 0);
+        assert_eq!(t.node_count(), 1);
+        assert!((t.predict_one(&[3.0]) - 7.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn feature_subsampling_changes_tree() {
+        let mut rng = Rng::new(5);
+        let x: Vec<Vec<f64>> = (0..200)
+            .map(|_| (0..6).map(|_| rng.range_f64(0.0, 1.0)).collect())
+            .collect();
+        let y: Vec<f64> = x.iter().map(|v| 1.0 + v.iter().sum::<f64>()).collect();
+        let p = TreeParams { max_features: Some(2), max_depth: 4, ..Default::default() };
+        let a = Tree::fit(&x, &y, None, p, 1);
+        let b = Tree::fit(&x, &y, None, p, 2);
+        let differs = x.iter().any(|v| a.predict_one(v) != b.predict_one(v));
+        assert!(differs, "different seeds should subsample different features");
+    }
+}

@@ -1,0 +1,199 @@
+//! Profiling harness — the analogue of the TFLite Model Benchmark Tool (CPU)
+//! and OpenCL command-queue timestamp collection (GPU) used in Section 4.3.1.
+//! Repeats each inference, aggregates per-op medians, and assembles training
+//! datasets for the per-op-type predictors.
+
+use crate::device;
+use crate::features::{bucket_of, cpu_bucket, features, kernel_features};
+use crate::graph::Graph;
+use crate::scenario::Scenario;
+use crate::tflite::{compile, KernelImpl};
+use crate::util::stats;
+
+/// One profiled op (CPU) or kernel (GPU): its predictor bucket, Table 3
+/// feature vector, and median measured latency.
+#[derive(Debug, Clone)]
+pub struct OpRecord {
+    pub op: usize,
+    pub bucket: String,
+    pub kernel: KernelImpl,
+    pub features: Vec<f64>,
+    pub latency_ms: f64,
+}
+
+/// Profile of one model under one scenario.
+#[derive(Debug, Clone)]
+pub struct ModelProfile {
+    pub model: String,
+    pub ops: Vec<OpRecord>,
+    /// Median end-to-end latency across runs.
+    pub end_to_end_ms: f64,
+    /// All end-to-end samples (for variance studies, Fig 32).
+    pub samples: Vec<f64>,
+}
+
+impl ModelProfile {
+    pub fn op_sum_ms(&self) -> f64 {
+        self.ops.iter().map(|o| o.latency_ms).sum()
+    }
+
+    /// Measured overhead: end-to-end minus op sum (the Fig 10 gap).
+    pub fn overhead_ms(&self) -> f64 {
+        self.end_to_end_ms - self.op_sum_ms()
+    }
+}
+
+/// Profile one model: `runs` repetitions, per-op median, end-to-end median.
+pub fn profile(sc: &Scenario, g: &Graph, seed: u64, runs: usize) -> ModelProfile {
+    assert!(runs >= 1);
+    let traces = device::exec::run_many(&sc.soc, g, &sc.target, seed, runs);
+    let n_ops = traces[0].per_op.len();
+    let mut ops = Vec::with_capacity(n_ops);
+    // Feature extraction is per-structure (identical across runs).
+    let feat: Vec<(String, KernelImpl, Vec<f64>)> = match &sc.target {
+        device::Target::Cpu { .. } => g
+            .nodes
+            .iter()
+            .map(|n| (cpu_bucket(n), KernelImpl::Generic, features(g, n)))
+            .collect(),
+        device::Target::Gpu { options } => {
+            let compiled = compile(g, sc.soc.gpu.kind, *options);
+            compiled
+                .kernels
+                .iter()
+                .map(|k| (bucket_of(g, k), k.impl_, kernel_features(g, k)))
+                .collect()
+        }
+    };
+    debug_assert_eq!(feat.len(), n_ops);
+    for i in 0..n_ops {
+        let lat: Vec<f64> = traces.iter().map(|t| t.per_op[i].latency_ms).collect();
+        let (bucket, kernel, f) = feat[i].clone();
+        ops.push(OpRecord {
+            op: traces[0].per_op[i].op,
+            bucket,
+            kernel,
+            features: f,
+            latency_ms: stats::median(&lat),
+        });
+    }
+    let samples: Vec<f64> = traces.iter().map(|t| t.end_to_end_ms).collect();
+    ModelProfile {
+        model: g.name.clone(),
+        ops,
+        end_to_end_ms: stats::median(&samples),
+        samples,
+    }
+}
+
+/// Profile a set of models in parallel (std threads; no rayon offline).
+pub fn profile_set(sc: &Scenario, graphs: &[Graph], seed: u64, runs: usize) -> Vec<ModelProfile> {
+    let nthreads = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4);
+    let chunk = graphs.len().div_ceil(nthreads.max(1));
+    if chunk == 0 {
+        return Vec::new();
+    }
+    let mut out: Vec<Option<ModelProfile>> = vec![None; graphs.len()];
+    std::thread::scope(|scope| {
+        for (ti, (gs, os)) in graphs.chunks(chunk).zip(out.chunks_mut(chunk)).enumerate() {
+            let sc = &*sc;
+            scope.spawn(move || {
+                let _ = ti;
+                for (g, o) in gs.iter().zip(os.iter_mut()) {
+                    *o = Some(profile(sc, g, seed, runs));
+                }
+            });
+        }
+    });
+    out.into_iter().map(|o| o.unwrap()).collect()
+}
+
+/// A per-bucket training dataset: feature rows + latency targets.
+#[derive(Debug, Clone, Default)]
+pub struct BucketData {
+    pub x: Vec<Vec<f64>>,
+    pub y: Vec<f64>,
+}
+
+/// Group profiled ops into per-bucket datasets (Section 4.2: one model per
+/// op type per scenario).
+pub fn bucket_datasets(
+    profiles: &[ModelProfile],
+) -> std::collections::BTreeMap<String, BucketData> {
+    let mut map: std::collections::BTreeMap<String, BucketData> = Default::default();
+    for p in profiles {
+        for o in &p.ops {
+            let e = map.entry(o.bucket.clone()).or_default();
+            e.x.push(o.features.clone());
+            e.y.push(o.latency_ms);
+        }
+    }
+    map
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::scenario;
+
+    #[test]
+    fn profile_is_deterministic() {
+        let sc = scenario::one_large_core("Snapdragon855");
+        let g = crate::zoo::mobilenets::mobilenet_v1(0.5);
+        let a = profile(&sc, &g, 42, 5);
+        let b = profile(&sc, &g, 42, 5);
+        assert_eq!(a.end_to_end_ms, b.end_to_end_ms);
+        assert_eq!(a.ops.len(), b.ops.len());
+    }
+
+    #[test]
+    fn gpu_profile_buckets_include_winograd_on_mali_only() {
+        let g = crate::zoo::resnets::resnet(16, 1.0);
+        let mali = Scenario::gpu(&crate::device::soc_by_name("Exynos9820").unwrap());
+        let adreno = Scenario::gpu(&crate::device::soc_by_name("Snapdragon855").unwrap());
+        let pm = profile(&mali, &g, 1, 3);
+        let pa = profile(&adreno, &g, 1, 3);
+        assert!(pm.ops.iter().any(|o| o.bucket == "Winograd"));
+        assert!(pa.ops.iter().all(|o| o.bucket != "Winograd"));
+    }
+
+    #[test]
+    fn overhead_positive_on_average() {
+        let sc = Scenario::gpu(&crate::device::soc_by_name("HelioP35").unwrap());
+        let g = crate::zoo::mobilenets::mobilenet_v2(0.5);
+        let p = profile(&sc, &g, 3, 7);
+        assert!(p.overhead_ms() > 0.0);
+    }
+
+    #[test]
+    fn bucket_datasets_cover_conv() {
+        let sc = scenario::one_large_core("HelioP35");
+        let graphs = vec![
+            crate::zoo::mobilenets::mobilenet_v1(0.25),
+            crate::zoo::resnets::resnet(10, 1.0),
+        ];
+        let profiles = profile_set(&sc, &graphs, 2, 3);
+        let data = bucket_datasets(&profiles);
+        assert!(data.contains_key("Conv2D"));
+        assert!(data.contains_key("DepthwiseConv2D"));
+        let conv = &data["Conv2D"];
+        assert_eq!(conv.x.len(), conv.y.len());
+        assert!(conv.x.len() > 10);
+        assert!(conv.y.iter().all(|&y| y > 0.0));
+    }
+
+    #[test]
+    fn profile_set_matches_sequential() {
+        let sc = scenario::one_large_core("Snapdragon710");
+        let graphs = vec![
+            crate::zoo::mobilenets::mobilenet_v1(0.25),
+            crate::zoo::mobilenets::mobilenet_v1(0.5),
+            crate::zoo::mobilenets::mobilenet_v1(0.75),
+        ];
+        let par = profile_set(&sc, &graphs, 5, 3);
+        for (g, p) in graphs.iter().zip(&par) {
+            let s = profile(&sc, g, 5, 3);
+            assert_eq!(p.end_to_end_ms, s.end_to_end_ms, "{}", g.name);
+        }
+    }
+}

@@ -1,0 +1,655 @@
+//! Section 5 evaluation figures and tables: prediction accuracy across ML
+//! methods (Fig 14/18, Tables 4/5 = Figs 21/22), hardware heterogeneity
+//! (Figs 15/16/30, 23/24/31), dataset shift (Fig 17), framework
+//! optimization ablations (Figs 19/20), variance (Fig 32), the MLP
+//! train-size anomaly (Fig 33), and Winograd applicability (Table 2).
+
+use crate::device::{socs, DataRep, Target};
+use crate::framework::{evaluate, DeductionMode, ScenarioPredictor};
+use crate::graph::Graph;
+use crate::predict::mlp::MlpContext;
+use crate::predict::Method;
+use crate::profiler::ModelProfile;
+use crate::report::{DataSet, ReportCtx};
+use crate::scenario::{cpu_combos, Scenario};
+use crate::tflite::{compile, select, CompileOptions};
+use crate::util::table::pct;
+use crate::util::{cov, mape, mean, Table};
+
+fn mlp_ctx(ctx: &ReportCtx) -> Option<MlpContext> {
+    let dir = ctx
+        .cfg
+        .artifacts
+        .clone()
+        .unwrap_or_else(crate::runtime::Runtime::default_dir);
+    if crate::runtime::Runtime::artifacts_available(&dir) {
+        MlpContext::load(&dir).ok()
+    } else {
+        None
+    }
+}
+
+fn methods_with_mlp(mlp: bool) -> Vec<Method> {
+    let mut m = Method::native().to_vec();
+    if mlp {
+        m.push(Method::Mlp);
+    }
+    m
+}
+
+/// Train+evaluate one (scenario, method) on a train/test profile split;
+/// returns (end-to-end MAPE, per-bucket MAPEs).
+fn eval_method(
+    sc: &Scenario,
+    train_p: &[ModelProfile],
+    test_g: &[Graph],
+    test_p: &[ModelProfile],
+    method: Method,
+    seed: u64,
+    mlp: Option<&MlpContext>,
+) -> crate::framework::Evaluation {
+    let pred =
+        ScenarioPredictor::train_from(sc, train_p, method, DeductionMode::Full, seed, mlp);
+    evaluate(&pred, test_g, test_p)
+}
+
+/// Fig 14: MAPE of each method, synthetic 900/100 split, averaged across
+/// platforms; end-to-end plus the four dominant op types.
+pub fn fig14_methods_synth(ctx: &mut ReportCtx) -> Vec<Table> {
+    let mlp = mlp_ctx(ctx);
+    let methods = methods_with_mlp(mlp.is_some());
+    let op_cols = ["Conv2D", "DepthwiseConv2D", "Mean", "Pooling"];
+    let mut cpu = Table::new(
+        "Fig 14a — MAPE on synthetic NAs, CPU (1 large core, avg across 4 platforms)",
+        &{
+            let mut h = vec!["method", "end-to-end"];
+            h.extend(op_cols);
+            h
+        },
+    );
+    let mut gpu = Table::new("Fig 14b — MAPE on synthetic NAs, GPU (avg across 4 platforms)", &{
+        let mut h = vec!["method", "end-to-end"];
+        h.extend(op_cols);
+        h
+    });
+    let (test_g_all, seed) = (ctx.synth_split().1.to_vec(), ctx.cfg.seed);
+    for &method in &methods {
+        for (is_gpu, table) in [(false, &mut cpu), (true, &mut gpu)] {
+            let mut e2e = Vec::new();
+            let mut per: std::collections::BTreeMap<&str, Vec<f64>> = Default::default();
+            for soc in socs() {
+                let sc = if is_gpu {
+                    Scenario::gpu(&soc)
+                } else {
+                    let mut counts = vec![0; soc.clusters.len()];
+                    counts[0] = 1;
+                    Scenario::cpu(&soc, counts, DataRep::Fp32)
+                };
+                let (tr, te) = ctx.synth_profiles_split(&sc);
+                let ev = eval_method(&sc, &tr, &test_g_all, &te, method, seed, mlp.as_ref());
+                e2e.push(ev.end_to_end_mape);
+                for c in op_cols {
+                    if let Some(&m) = ev.per_bucket_mape.get(*&c) {
+                        per.entry(c).or_default().push(m);
+                    }
+                }
+            }
+            let mut row = vec![method.name().to_string(), pct(mean(&e2e))];
+            for c in op_cols {
+                row.push(per.get(c).map(|v| pct(mean(v))).unwrap_or("-".into()));
+            }
+            table.row(row);
+        }
+    }
+    vec![cpu, gpu]
+}
+
+/// Fig 15 (30): GBDT end-to-end predictions per core combo, fp32 + int8.
+pub fn fig15_gbdt_multicore(ctx: &mut ReportCtx, full: bool) -> Vec<Table> {
+    let mut tables = Vec::new();
+    let test_g = ctx.synth_split().1.to_vec();
+    let seed = ctx.cfg.seed;
+    for soc in socs() {
+        let mut t = Table::new(
+            &format!(
+                "Fig {} — GBDT end-to-end MAPE per core combo (synthetic), {}",
+                if full { 30 } else { 15 },
+                soc.name
+            ),
+            &["combo", "fp32 MAPE", "int8 MAPE"],
+        );
+        let combos = cpu_combos(&soc);
+        let combos = if full { combos } else { combos.into_iter().take(6).collect() };
+        for counts in combos {
+            let mut row = vec![String::new()];
+            for rep in [DataRep::Fp32, DataRep::Int8] {
+                let sc = Scenario::cpu(&soc, counts.clone(), rep);
+                row[0] = sc.combo_label();
+                let (tr, te) = ctx.synth_profiles_split(&sc);
+                let ev = eval_method(&sc, &tr, &test_g, &te, Method::Gbdt, seed, None);
+                row.push(pct(ev.end_to_end_mape));
+            }
+            t.row(row);
+        }
+        tables.push(t);
+    }
+    tables
+}
+
+/// Fig 16: GBDT on the four GPUs, with Conv2D vs Winograd split.
+pub fn fig16_gbdt_gpu(ctx: &mut ReportCtx) -> Vec<Table> {
+    let mut t = Table::new(
+        "Fig 16 — GBDT on GPUs (synthetic): per-kernel and end-to-end MAPE",
+        &["gpu", "Conv2D", "Winograd", "DepthwiseConv2D", "end-to-end"],
+    );
+    let test_g = ctx.synth_split().1.to_vec();
+    let seed = ctx.cfg.seed;
+    for soc in socs() {
+        let sc = Scenario::gpu(&soc);
+        let (tr, te) = ctx.synth_profiles_split(&sc);
+        let ev = eval_method(&sc, &tr, &test_g, &te, Method::Gbdt, seed, None);
+        let get = |b: &str| ev.per_bucket_mape.get(b).map(|&m| pct(m)).unwrap_or("-".into());
+        t.row(vec![
+            soc.gpu.name.to_string(),
+            get("Conv2D"),
+            get("Winograd"),
+            get("DepthwiseConv2D"),
+            pct(ev.end_to_end_mape),
+        ]);
+    }
+    vec![t]
+}
+
+/// Fig 17: convolution latency-range distribution, synthetic vs zoo, and
+/// Lasso accuracy per range (Helio P35, 1 large core).
+pub fn fig17_conv_ranges(ctx: &mut ReportCtx) -> Vec<Table> {
+    let sc = crate::scenario::one_large_core("HelioP35");
+    let bins = [0.0, 10.0, 50.0, f64::INFINITY];
+    let bin_names = ["<10ms", "10-50ms", ">50ms"];
+    let mut a = Table::new(
+        "Fig 17a — % of end-to-end latency from convolutions by latency range (Helio P35, 1 large core)",
+        &["dataset", bin_names[0], bin_names[1], bin_names[2]],
+    );
+    for (set, name) in [(DataSet::Synth, "synthetic"), (DataSet::Zoo, "real-world")] {
+        let profs = ctx.profiles(&sc, set).to_vec();
+        let mut frac = [0.0f64; 3];
+        let mut total = 0.0;
+        for p in &profs {
+            for o in &p.ops {
+                if o.bucket == "Conv2D" || o.bucket == "GroupedConv2D" {
+                    let b = (0..3)
+                        .find(|&i| o.latency_ms >= bins[i] && o.latency_ms < bins[i + 1])
+                        .unwrap();
+                    frac[b] += o.latency_ms;
+                }
+            }
+            total += p.end_to_end_ms;
+        }
+        a.row(vec![
+            name.to_string(),
+            pct(frac[0] / total),
+            pct(frac[1] / total),
+            pct(frac[2] / total),
+        ]);
+    }
+    // 17b: Lasso per-range conv accuracy (trained on synthetic).
+    let (tr, _) = ctx.synth_profiles_split(&sc);
+    let pred = ScenarioPredictor::train_from(&sc, &tr, Method::Lasso, DeductionMode::Full, 1, None);
+    let mut b = Table::new(
+        "Fig 17b — Lasso conv MAPE by latency range (trained on synthetic)",
+        &["test set", bin_names[0], bin_names[1], bin_names[2]],
+    );
+    for (set, name) in [(DataSet::Synth, "synthetic"), (DataSet::Zoo, "real-world")] {
+        let profs = ctx.profiles(&sc, set).to_vec();
+        let model = pred.models.get("Conv2D").expect("conv model");
+        let mut per_bin: [(Vec<f64>, Vec<f64>); 3] = Default::default();
+        for p in &profs {
+            for o in &p.ops {
+                if o.bucket == "Conv2D" {
+                    let bi = (0..3)
+                        .find(|&i| o.latency_ms >= bins[i] && o.latency_ms < bins[i + 1])
+                        .unwrap();
+                    per_bin[bi].0.push(model.predict_raw(&o.features));
+                    per_bin[bi].1.push(o.latency_ms);
+                }
+            }
+        }
+        let cell = |i: usize| {
+            if per_bin[i].0.is_empty() {
+                "-".to_string()
+            } else {
+                pct(mape(&per_bin[i].0, &per_bin[i].1))
+            }
+        };
+        b.row(vec![name.to_string(), cell(0), cell(1), cell(2)]);
+    }
+    vec![a, b]
+}
+
+/// Fig 18: methods trained on synthetic, tested on the real-world zoo.
+pub fn fig18_methods_zoo(ctx: &mut ReportCtx) -> Vec<Table> {
+    let mlp = mlp_ctx(ctx);
+    let methods = methods_with_mlp(mlp.is_some());
+    let mut cpu = Table::new(
+        "Fig 18a — MAPE on real-world NAs (train: synthetic), CPU 1 large core (avg 4 platforms)",
+        &["method", "end-to-end"],
+    );
+    let mut gpu = Table::new(
+        "Fig 18b — MAPE on real-world NAs (train: synthetic), GPUs (avg 4 platforms)",
+        &["method", "end-to-end"],
+    );
+    let zoo_g = ctx.zoo().to_vec();
+    let seed = ctx.cfg.seed;
+    for &method in &methods {
+        for (is_gpu, table) in [(false, &mut cpu), (true, &mut gpu)] {
+            let mut e2e = Vec::new();
+            for soc in socs() {
+                let sc = if is_gpu {
+                    Scenario::gpu(&soc)
+                } else {
+                    let mut counts = vec![0; soc.clusters.len()];
+                    counts[0] = 1;
+                    Scenario::cpu(&soc, counts, DataRep::Fp32)
+                };
+                let (tr, _) = ctx.synth_profiles_split(&sc);
+                let te = ctx.profiles(&sc, DataSet::Zoo).to_vec();
+                let ev = eval_method(&sc, &tr, &zoo_g, &te, method, seed, mlp.as_ref());
+                e2e.push(ev.end_to_end_mape);
+            }
+            table.row(vec![method.name().to_string(), pct(mean(&e2e))]);
+        }
+    }
+    vec![cpu, gpu]
+}
+
+/// Fig 19: fusion deduction accuracy + error reduction from modeling fusion.
+pub fn fig19_fusion_ablation(ctx: &mut ReportCtx) -> Vec<Table> {
+    // 19a: deduced kernel counts match "measured" ones exactly (we run the
+    // same Algorithm C.1 the simulated device runs; the paper's deduction
+    // also matches closely).
+    let mut a = Table::new(
+        "Fig 19a — deduced vs measured kernel count (zoo, Mali G76)",
+        &["model", "measured kernels", "deduced kernels", "match"],
+    );
+    let e9820 = crate::device::soc_by_name("Exynos9820").unwrap();
+    let sg = Scenario::gpu(&e9820);
+    let zoo = ctx.zoo().to_vec();
+    let profs = ctx.profiles(&sg, DataSet::Zoo).to_vec();
+    let mut matches = 0;
+    for (g, p) in zoo.iter().zip(&profs) {
+        let deduced = compile(g, e9820.gpu.kind, CompileOptions::default()).kernels.len();
+        if deduced == p.ops.len() {
+            matches += 1;
+        }
+        if a.rows.len() < 8 {
+            a.row(vec![
+                g.name.clone(),
+                format!("{}", p.ops.len()),
+                format!("{deduced}"),
+                if deduced == p.ops.len() { "yes".into() } else { "NO".into() },
+            ]);
+        }
+    }
+    a.row(vec!["TOTAL".into(), format!("{}", zoo.len()), format!("{matches} match"), pct(matches as f64 / zoo.len() as f64)]);
+
+    // 19b/c: end-to-end MAPE with vs without fusion modeling, per GPU.
+    let mut b = Table::new(
+        "Fig 19b/c — end-to-end MAPE with vs without fusion modeling (zoo, GBDT)",
+        &["gpu", "with fusion (paper)", "w/o fusion", "error reduction"],
+    );
+    let seed = ctx.cfg.seed;
+    for soc in socs() {
+        let sc = Scenario::gpu(&soc);
+        let (tr, _) = ctx.synth_profiles_split(&sc);
+        let te = ctx.profiles(&sc, DataSet::Zoo).to_vec();
+        let full = ScenarioPredictor::train_from(&sc, &tr, Method::Gbdt, DeductionMode::Full, seed, None);
+        let ev_full = evaluate(&full, &zoo_slice(ctx), &te);
+        // The w/o-fusion baseline trains on unfused profiling runs.
+        let sc_nf = Scenario {
+            target: Target::Gpu { options: CompileOptions { fusion: false, ..Default::default() } },
+            id: format!("{}/gpu/nofusion", soc.name),
+            soc: soc.clone(),
+        };
+        let tr_nf = {
+            let n = ctx.cfg.n_train.min(ctx.synth().len().saturating_sub(1));
+            ctx.profiles(&sc_nf, DataSet::Synth)[..n].to_vec()
+        };
+        let nf = ScenarioPredictor::train_from(&sc_nf, &tr_nf, Method::Gbdt, DeductionMode::NoFusion, seed, None);
+        let ev_nf = evaluate(&nf, &zoo_slice(ctx), &te);
+        b.row(vec![
+            soc.gpu.name.to_string(),
+            pct(ev_full.end_to_end_mape),
+            pct(ev_nf.end_to_end_mape),
+            pct(ev_nf.end_to_end_mape - ev_full.end_to_end_mape),
+        ]);
+    }
+    vec![a, b]
+}
+
+fn zoo_slice(ctx: &ReportCtx) -> Vec<Graph> {
+    ctx.zoo().to_vec()
+}
+
+/// Fig 20: kernel-selection ablation on PowerVR GE8320.
+pub fn fig20_selection_ablation(ctx: &mut ReportCtx) -> Vec<Table> {
+    let p35 = crate::device::soc_by_name("HelioP35").unwrap();
+    let sc = Scenario::gpu(&p35);
+    let (tr, _) = ctx.synth_profiles_split(&sc);
+    let te = ctx.profiles(&sc, DataSet::Zoo).to_vec();
+    let zoo = ctx.zoo().to_vec();
+    let seed = ctx.cfg.seed;
+    // Restrict to NAs that actually use Winograd kernels on PowerVR.
+    let mut wino_g = Vec::new();
+    let mut wino_p = Vec::new();
+    for (g, p) in zoo.iter().zip(&te) {
+        if p.ops.iter().any(|o| o.bucket == "Winograd") {
+            wino_g.push(g.clone());
+            wino_p.push(p.clone());
+        }
+    }
+    let full = ScenarioPredictor::train_from(&sc, &tr, Method::Gbdt, DeductionMode::Full, seed, None);
+    let nosel =
+        ScenarioPredictor::train_from(&sc, &tr, Method::Gbdt, DeductionMode::NoSelection, seed, None);
+    let ev_full = evaluate(&full, &wino_g, &wino_p);
+    let ev_nosel = evaluate(&nosel, &wino_g, &wino_p);
+    let mut a = Table::new(
+        "Fig 20a — end-to-end MAPE on Winograd-using NAs, PowerVR GE8320 (GBDT)",
+        &["predictor", "MAPE"],
+    );
+    a.row(vec!["with kernel selection (paper)".into(), pct(ev_full.end_to_end_mape)]);
+    a.row(vec!["w/o kernel selection".into(), pct(ev_nosel.end_to_end_mape)]);
+
+    // 20b: Winograd-kernel prediction error under both predictors.
+    let mut b = Table::new(
+        "Fig 20b — Winograd-kernel MAPE with vs without selection modeling",
+        &["predictor", "Winograd-kernel MAPE"],
+    );
+    let wino_err = |pred: &ScenarioPredictor| -> f64 {
+        let mut ps = Vec::new();
+        let mut as_ = Vec::new();
+        for (g, p) in wino_g.iter().zip(&wino_p) {
+            let units = pred.predict_units(g);
+            if units.len() != p.ops.len() {
+                continue;
+            }
+            for (u, o) in units.iter().zip(&p.ops) {
+                if o.bucket == "Winograd" {
+                    ps.push(u.1);
+                    as_.push(o.latency_ms);
+                }
+            }
+        }
+        mape(&ps, &as_)
+    };
+    b.row(vec!["with selection".into(), pct(wino_err(&full))]);
+    b.row(vec!["w/o selection".into(), pct(wino_err(&nosel))]);
+    vec![a, b]
+}
+
+/// Figs 21/22 + Tables 4/5 helper: method x train-size sweep.
+///
+/// The MLP rows run only at >= default scale: the sweep retrains the AOT
+/// MLP hundreds of times (sizes x scenarios x buckets), which dwarfs the
+/// smoke budget; Figs 14/18/33 cover MLP behaviour at every scale.
+fn train_size_sweep(ctx: &mut ReportCtx, test: DataSet, title: &str) -> Vec<Table> {
+    let mlp = if ctx.cfg.n_synth >= 100 { mlp_ctx(ctx) } else { None };
+    let methods = methods_with_mlp(mlp.is_some());
+    let sizes = [30usize, 100, ctx.cfg.n_train];
+    let mut tables = Vec::new();
+    let mut t = Table::new(title, &{
+        let mut h = vec!["method", "train size"];
+        for soc in socs() {
+            h.push(Box::leak(format!("{} CPU", soc.name).into_boxed_str()) as &str);
+            h.push(Box::leak(format!("{} GPU", soc.name).into_boxed_str()) as &str);
+        }
+        h.push("avg CPU");
+        h.push("avg GPU");
+        h
+    });
+    let seed = ctx.cfg.seed;
+    for &method in &methods {
+        for &n in &sizes {
+            let n = n.min(ctx.cfg.n_train);
+            let mut row = vec![method.name().to_string(), format!("{n}")];
+            let mut cpu_all = Vec::new();
+            let mut gpu_all = Vec::new();
+            for soc in socs() {
+                for is_gpu in [false, true] {
+                    let sc = if is_gpu {
+                        Scenario::gpu(&soc)
+                    } else {
+                        let mut counts = vec![0; soc.clusters.len()];
+                        counts[0] = 1;
+                        Scenario::cpu(&soc, counts, DataRep::Fp32)
+                    };
+                    let (tr_full, te_synth) = ctx.synth_profiles_split(&sc);
+                    let tr = &tr_full[..n.min(tr_full.len())];
+                    let (te_g, te_p): (Vec<Graph>, Vec<ModelProfile>) = match test {
+                        DataSet::Synth => (ctx.synth_split().1.to_vec(), te_synth),
+                        DataSet::Zoo => {
+                            (ctx.zoo().to_vec(), ctx.profiles(&sc, DataSet::Zoo).to_vec())
+                        }
+                    };
+                    let ev = eval_method(&sc, tr, &te_g, &te_p, method, seed, mlp.as_ref());
+                    row.push(pct(ev.end_to_end_mape));
+                    if is_gpu {
+                        gpu_all.push(ev.end_to_end_mape);
+                    } else {
+                        cpu_all.push(ev.end_to_end_mape);
+                    }
+                }
+            }
+            row.push(pct(mean(&cpu_all)));
+            row.push(pct(mean(&gpu_all)));
+            t.row(row);
+        }
+    }
+    tables.push(t);
+    tables
+}
+
+/// Fig 21 + Table 4: train-size sweep, tested on synthetic NAs.
+pub fn fig21_train_size_synth(ctx: &mut ReportCtx) -> Vec<Table> {
+    train_size_sweep(
+        ctx,
+        DataSet::Synth,
+        "Fig 21 / Table 4 — end-to-end MAPE vs training-set size (synthetic test set; CPU = 1 large core)",
+    )
+}
+
+/// Fig 22 + Table 5: train-size sweep, tested on the real-world zoo.
+pub fn fig22_train_size_zoo(ctx: &mut ReportCtx) -> Vec<Table> {
+    train_size_sweep(
+        ctx,
+        DataSet::Zoo,
+        "Fig 22 / Table 5 — end-to-end MAPE vs training-set size (real-world test set; CPU = 1 large core)",
+    )
+}
+
+/// Fig 23 (31): Lasso with 30 training NAs, multicore combos, zoo test.
+pub fn fig23_lasso_multicore(ctx: &mut ReportCtx, full: bool) -> Vec<Table> {
+    let mut tables = Vec::new();
+    let zoo = ctx.zoo().to_vec();
+    let seed = ctx.cfg.seed;
+    for soc in socs() {
+        let mut t = Table::new(
+            &format!(
+                "Fig {} — Lasso (30 training NAs) end-to-end MAPE per combo (zoo), {}",
+                if full { 31 } else { 23 },
+                soc.name
+            ),
+            &["combo", "fp32 MAPE", "int8 MAPE"],
+        );
+        let combos = cpu_combos(&soc);
+        let combos = if full { combos } else { combos.into_iter().take(6).collect() };
+        for counts in combos {
+            let mut row = vec![String::new()];
+            for rep in [DataRep::Fp32, DataRep::Int8] {
+                let sc = Scenario::cpu(&soc, counts.clone(), rep);
+                row[0] = sc.combo_label();
+                let (tr_full, _) = ctx.synth_profiles_split(&sc);
+                let tr = &tr_full[..30.min(tr_full.len())];
+                let te = ctx.profiles(&sc, DataSet::Zoo).to_vec();
+                let ev = eval_method(&sc, tr, &zoo, &te, Method::Lasso, seed, None);
+                row.push(pct(ev.end_to_end_mape));
+            }
+            t.row(row);
+        }
+        tables.push(t);
+    }
+    tables
+}
+
+/// Fig 24: Lasso (30 NAs) on the four GPUs + feature-importance analysis.
+pub fn fig24_lasso_gpu(ctx: &mut ReportCtx) -> Vec<Table> {
+    let mut t = Table::new(
+        "Fig 24 — Lasso (30 training NAs) on GPUs (zoo test set)",
+        &["gpu", "end-to-end MAPE"],
+    );
+    let zoo = ctx.zoo().to_vec();
+    let seed = ctx.cfg.seed;
+    let mut imp = Table::new(
+        "Section 5.5.2 — top Lasso features for Conv2D / DepthwiseConv2D (feature index per Table 3)",
+        &["gpu", "bucket", "top-1 feature", "top-2 feature"],
+    );
+    // Table 3 conv feature names (kernel rows add fused-extras features).
+    let conv_names = [
+        "in_h", "in_w", "in_c", "out_h", "out_w", "filters", "stride", "kh", "kw", "in_size",
+        "out_size", "param_size", "FLOPs", "fused_extra_bytes", "fused_count",
+    ];
+    for soc in socs() {
+        let sc = Scenario::gpu(&soc);
+        let (tr_full, _) = ctx.synth_profiles_split(&sc);
+        let tr = &tr_full[..30.min(tr_full.len())];
+        let pred =
+            ScenarioPredictor::train_from(&sc, tr, Method::Lasso, DeductionMode::Full, seed, None);
+        let te = ctx.profiles(&sc, DataSet::Zoo).to_vec();
+        let ev = evaluate(&pred, &zoo, &te);
+        t.row(vec![soc.gpu.name.to_string(), pct(ev.end_to_end_mape)]);
+        for bucket in ["Conv2D", "DepthwiseConv2D"] {
+            if let Some(m) = pred.models.get(bucket) {
+                // Re-fit a plain Lasso to inspect weights (TrainedModel
+                // erases the concrete type).
+                let _ = m;
+            }
+        }
+        // Direct importance fit on the raw bucket data:
+        let data = crate::profiler::bucket_datasets(tr);
+        for bucket in ["Conv2D", "DepthwiseConv2D"] {
+            if let Some(d) = data.get(bucket) {
+                if d.x.len() > 5 {
+                    let s = crate::features::Standardizer::fit(&d.x);
+                    let l = crate::predict::lasso::Lasso::fit_cv(&s.transform_all(&d.x), &d.y, seed);
+                    let ims = l.importances();
+                    let nm = |i: usize| conv_names.get(i).copied().unwrap_or("?").to_string();
+                    imp.row(vec![
+                        soc.gpu.name.to_string(),
+                        bucket.to_string(),
+                        nm(ims[0].0),
+                        nm(ims[1].0),
+                    ]);
+                }
+            }
+        }
+    }
+    vec![t, imp]
+}
+
+/// Fig 32: coefficient of variation of end-to-end latency vs core count.
+pub fn fig32_cov(ctx: &mut ReportCtx) -> Vec<Table> {
+    let mut tables = Vec::new();
+    for soc in socs() {
+        let mut t = Table::new(
+            &format!("Fig 32 — CoV of end-to-end latency per combo (synthetic test NAs), {}", soc.name),
+            &["combo", "mean CoV", "max CoV"],
+        );
+        for counts in cpu_combos(&soc) {
+            let sc = Scenario::cpu(&soc, counts, DataRep::Fp32);
+            let profs = ctx.profiles(&sc, DataSet::Synth).to_vec();
+            let covs: Vec<f64> = profs.iter().take(60).map(|p| cov(&p.samples)).collect();
+            t.row(vec![
+                sc.combo_label(),
+                format!("{:.3}", mean(&covs)),
+                format!("{:.3}", covs.iter().cloned().fold(0.0, f64::max)),
+            ]);
+        }
+        tables.push(t);
+    }
+    tables
+}
+
+/// Fig 33: MLP per-op-type error vs train size (S855, 1 large core).
+pub fn fig33_mlp_train_size(ctx: &mut ReportCtx) -> Vec<Table> {
+    let Some(mlp) = mlp_ctx(ctx) else {
+        let mut t = Table::new("Fig 33 — MLP per-op error vs train size", &["status"]);
+        t.row(vec!["SKIPPED: artifacts/ not built (run `make artifacts`)".into()]);
+        return vec![t];
+    };
+    let sc = crate::scenario::one_large_core("Snapdragon855");
+    let (tr_full, te) = ctx.synth_profiles_split(&sc);
+    let test_g = ctx.synth_split().1.to_vec();
+    let seed = ctx.cfg.seed;
+    let mut t = Table::new(
+        "Fig 33 — MLP MAPE vs train size on Snapdragon855 (1 large core, synthetic)",
+        &["train size", "end-to-end", "Conv2D", "Concat/Split", "#concat/split samples"],
+    );
+    for &n in &[30usize, 100, ctx.cfg.n_train] {
+        let n = n.min(tr_full.len());
+        let tr = &tr_full[..n];
+        let pred =
+            ScenarioPredictor::train_from(&sc, tr, Method::Mlp, DeductionMode::Full, seed, Some(&mlp));
+        let ev = evaluate(&pred, &test_g, &te);
+        let samples: usize = tr
+            .iter()
+            .flat_map(|p| p.ops.iter())
+            .filter(|o| o.bucket == "Concat/Split")
+            .count();
+        let get = |b: &str| ev.per_bucket_mape.get(b).map(|&m| pct(m)).unwrap_or("-".into());
+        t.row(vec![
+            format!("{n}"),
+            pct(ev.end_to_end_mape),
+            get("Conv2D"),
+            get("Concat/Split"),
+            format!("{samples}"),
+        ]);
+    }
+    vec![t]
+}
+
+/// Table 2: Winograd applicability of the three ResNet16 convolutions.
+pub fn table2_winograd(_ctx: &mut ReportCtx) -> Vec<Table> {
+    let g = crate::zoo::resnets::resnet(16, 1.0);
+    let mut t = Table::new(
+        "Table 2 — Winograd applicability, ResNet16 convolutions (3x3, stride 1, 1 group)",
+        &["in_c", "out_c", "out_h", "src_depth", "dst_depth", "total_tiles", "Adreno", "Mali"],
+    );
+    let targets = [(64usize, 64usize, 56usize), (128, 128, 28), (256, 256, 14)];
+    for (in_c, out_c, out_h) in targets {
+        let node = g
+            .nodes
+            .iter()
+            .find(|n| {
+                if let crate::graph::Op::Conv2D { kh: 3, kw: 3, stride: 1, groups: 1, out_c: oc, .. } = n.op {
+                    g.shape(n.inputs[0]).c == in_c && oc == out_c && g.shape(n.outputs[0]).h == out_h
+                } else {
+                    false
+                }
+            })
+            .expect("ResNet16 conv present");
+        let info = select::conv_info(&g, node.id).unwrap();
+        let src_depth = info.input_channel.div_ceil(4);
+        let dst_depth = info.output_channel.div_ceil(4);
+        let tiles = info.output_height.div_ceil(4) * info.output_width.div_ceil(4);
+        t.row(vec![
+            format!("{in_c}"),
+            format!("{out_c}"),
+            format!("{out_h}"),
+            format!("{src_depth}"),
+            format!("{dst_depth}"),
+            format!("{tiles}"),
+            if select::check_winograd(crate::tflite::GpuKind::Adreno6xx, &info) { "Yes".into() } else { "No".to_string() },
+            if select::check_winograd(crate::tflite::GpuKind::Mali, &info) { "Yes".into() } else { "No".to_string() },
+        ]);
+    }
+    vec![t]
+}

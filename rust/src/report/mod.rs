@@ -1,0 +1,191 @@
+//! Figure/table regeneration — one function per table AND figure of the
+//! paper's evaluation (see DESIGN.md §6 for the experiment index). Each
+//! returns markdown [`Table`]s with the same rows/series the paper reports;
+//! `edgelat reproduce --figure N` prints them.
+//!
+//! Absolute milliseconds come from the simulated substrate, so the *shape*
+//! of each result (who wins, rough factors, crossovers) is the reproduction
+//! target, not the paper's absolute numbers (DESIGN.md §7).
+
+pub mod eval;
+pub mod study;
+
+use crate::graph::Graph;
+use crate::profiler::{profile_set, ModelProfile};
+use crate::scenario::Scenario;
+use crate::util::Table;
+use std::collections::HashMap;
+
+/// Configuration for a reproduction run. The defaults regenerate every
+/// figure at a scale that completes in minutes on a laptop; `full()` uses
+/// the paper's full 1000-architecture dataset.
+#[derive(Debug, Clone)]
+pub struct ReportConfig {
+    pub seed: u64,
+    /// Synthetic dataset size (paper: 1000).
+    pub n_synth: usize,
+    /// Synthetic train/test split (paper: 900/100).
+    pub n_train: usize,
+    /// Profiling repetitions per (model, scenario).
+    pub runs: usize,
+    /// Cap on zoo models (None = all 102).
+    pub zoo_cap: Option<usize>,
+    /// Artifact dir for MLP figures (None disables MLP rows).
+    pub artifacts: Option<std::path::PathBuf>,
+}
+
+impl Default for ReportConfig {
+    fn default() -> Self {
+        ReportConfig {
+            seed: 2022,
+            n_synth: 160,
+            n_train: 120,
+            runs: 5,
+            zoo_cap: None,
+            artifacts: None,
+        }
+    }
+}
+
+impl ReportConfig {
+    /// The paper-scale configuration (1000 synthetic NAs, 900/100 split).
+    pub fn full() -> Self {
+        ReportConfig { n_synth: 1000, n_train: 900, runs: 10, ..Default::default() }
+    }
+
+    /// A fast smoke configuration for tests.
+    pub fn smoke() -> Self {
+        ReportConfig { n_synth: 40, n_train: 30, runs: 3, zoo_cap: Some(20), ..Default::default() }
+    }
+}
+
+/// Shared state across figure functions: built graphs and profile caches
+/// (each (scenario, dataset) pair is profiled once per process).
+pub struct ReportCtx {
+    pub cfg: ReportConfig,
+    zoo: Vec<Graph>,
+    synth: Vec<Graph>,
+    profiles: HashMap<String, Vec<ModelProfile>>,
+}
+
+impl ReportCtx {
+    pub fn new(cfg: ReportConfig) -> ReportCtx {
+        let mut zoo = crate::zoo::all_graphs();
+        if let Some(cap) = cfg.zoo_cap {
+            zoo.truncate(cap);
+        }
+        let synth = crate::nas::sample_dataset(cfg.seed, cfg.n_synth)
+            .into_iter()
+            .map(|a| a.graph)
+            .collect();
+        ReportCtx { cfg, zoo, synth, profiles: HashMap::new() }
+    }
+
+    pub fn zoo(&self) -> &[Graph] {
+        &self.zoo
+    }
+
+    pub fn synth(&self) -> &[Graph] {
+        &self.synth
+    }
+
+    pub fn synth_split(&self) -> (&[Graph], &[Graph]) {
+        let n = self.cfg.n_train.min(self.synth.len().saturating_sub(1));
+        self.synth.split_at(n)
+    }
+
+    /// Profile a dataset under a scenario, cached by (scenario id, set tag).
+    pub fn profiles(&mut self, sc: &Scenario, set: DataSet) -> &[ModelProfile] {
+        let key = format!("{}#{:?}", sc.id, set);
+        if !self.profiles.contains_key(&key) {
+            let graphs: &[Graph] = match set {
+                DataSet::Zoo => &self.zoo,
+                DataSet::Synth => &self.synth,
+            };
+            let p = profile_set(sc, graphs, self.cfg.seed, self.cfg.runs);
+            self.profiles.insert(key.clone(), p);
+        }
+        &self.profiles[&key]
+    }
+
+    /// Split synthetic profiles consistently with `synth_split`.
+    pub fn synth_profiles_split(&mut self, sc: &Scenario) -> (Vec<ModelProfile>, Vec<ModelProfile>) {
+        let n = self.cfg.n_train.min(self.synth.len().saturating_sub(1));
+        let all = self.profiles(sc, DataSet::Synth).to_vec();
+        let (a, b) = all.split_at(n);
+        (a.to_vec(), b.to_vec())
+    }
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum DataSet {
+    Zoo,
+    Synth,
+}
+
+/// Figure/table registry: id -> generator.
+pub fn reproduce(id: &str, ctx: &mut ReportCtx) -> Vec<Table> {
+    match id {
+        "2" | "26" => study::fig02_multicore(ctx, id == "26"),
+        "3" => study::fig03_op_speedup(ctx),
+        "4" | "27" => study::fig04_quantization(ctx, id == "27"),
+        "5" => study::fig05_quant_opwise(ctx),
+        "6" | "28" => study::fig06_fusion(ctx, id == "28"),
+        "7" | "29" => study::fig07_fusion_opwise(ctx, id == "29"),
+        "8" => study::fig08_winograd(ctx),
+        "9" => study::fig09_grouped(ctx),
+        "10" => study::fig10_overhead(ctx),
+        "11" => study::fig11_breakdown_zoo(ctx),
+        "13" => study::fig13_breakdown_synth(ctx),
+        "14" => eval::fig14_methods_synth(ctx),
+        "15" | "30" => eval::fig15_gbdt_multicore(ctx, id == "30"),
+        "16" => eval::fig16_gbdt_gpu(ctx),
+        "17" => eval::fig17_conv_ranges(ctx),
+        "18" => eval::fig18_methods_zoo(ctx),
+        "19" => eval::fig19_fusion_ablation(ctx),
+        "20" => eval::fig20_selection_ablation(ctx),
+        "21" | "t4" | "table4" => eval::fig21_train_size_synth(ctx),
+        "22" | "t5" | "table5" => eval::fig22_train_size_zoo(ctx),
+        "23" | "31" => eval::fig23_lasso_multicore(ctx, id == "31"),
+        "24" => eval::fig24_lasso_gpu(ctx),
+        "25" => study::fig25_zoo_scatter(ctx),
+        "32" => eval::fig32_cov(ctx),
+        "33" => eval::fig33_mlp_train_size(ctx),
+        "t2" | "table2" => eval::table2_winograd(ctx),
+        other => panic!("unknown figure/table id '{other}' (see DESIGN.md §6)"),
+    }
+}
+
+/// All reproducible ids, in paper order.
+pub fn all_ids() -> Vec<&'static str> {
+    vec![
+        "2", "3", "4", "5", "6", "7", "8", "t2", "9", "10", "11", "13", "14", "15", "16", "17",
+        "18", "19", "20", "21", "22", "23", "24", "25", "26", "27", "28", "29", "30", "31", "32",
+        "33",
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ctx_builds_and_caches() {
+        let mut ctx = ReportCtx::new(ReportConfig::smoke());
+        assert_eq!(ctx.zoo().len(), 20);
+        assert_eq!(ctx.synth().len(), 40);
+        let sc = crate::scenario::one_large_core("HelioP35");
+        let a = ctx.profiles(&sc, DataSet::Zoo).len();
+        let b = ctx.profiles(&sc, DataSet::Zoo).len();
+        assert_eq!(a, b);
+        assert_eq!(a, 20);
+    }
+
+    #[test]
+    fn split_consistent() {
+        let ctx = ReportCtx::new(ReportConfig::smoke());
+        let (tr, te) = ctx.synth_split();
+        assert_eq!(tr.len(), 30);
+        assert_eq!(te.len(), 10);
+    }
+}

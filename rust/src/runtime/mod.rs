@@ -1,0 +1,129 @@
+//! PJRT runtime: loads AOT-compiled HLO artifacts (produced once by
+//! `python/compile/aot.py`, see `make artifacts`) and executes them on the
+//! CPU PJRT client. This is the only bridge to the L2/L1 JAX+Pallas code —
+//! Python never runs at prediction time.
+//!
+//! Interchange format is HLO *text* (not serialized proto): jax >= 0.5
+//! emits 64-bit instruction ids that xla_extension 0.5.1 rejects; the text
+//! parser reassigns ids (see /opt/xla-example/README.md).
+
+use anyhow::{anyhow, Context, Result};
+use std::path::{Path, PathBuf};
+
+/// A PJRT CPU client plus the artifact directory.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    artifact_dir: PathBuf,
+}
+
+/// A compiled executable; call [`Executable::run`] with positional inputs.
+pub struct Executable {
+    exe: xla::PjRtLoadedExecutable,
+    pub name: String,
+}
+
+impl Runtime {
+    /// Create a CPU PJRT client rooted at an artifact directory.
+    pub fn cpu(artifact_dir: impl AsRef<Path>) -> Result<Runtime> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Runtime { client, artifact_dir: artifact_dir.as_ref().to_path_buf() })
+    }
+
+    /// Default artifact dir: `$EDGELAT_ARTIFACTS` or `artifacts/`.
+    pub fn default_dir() -> PathBuf {
+        std::env::var("EDGELAT_ARTIFACTS")
+            .map(PathBuf::from)
+            .unwrap_or_else(|_| PathBuf::from("artifacts"))
+    }
+
+    pub fn artifact_path(&self, name: &str) -> PathBuf {
+        self.artifact_dir.join(name)
+    }
+
+    /// Load and compile an HLO-text artifact.
+    pub fn load(&self, name: &str) -> Result<Executable> {
+        let path = self.artifact_path(name);
+        let path_str = path
+            .to_str()
+            .ok_or_else(|| anyhow!("non-utf8 artifact path"))?;
+        let proto = xla::HloModuleProto::from_text_file(path_str)
+            .map_err(|e| anyhow!("parsing HLO text {path_str}: {e:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow!("compiling {name}: {e:?}"))?;
+        Ok(Executable { exe, name: name.to_string() })
+    }
+
+    /// Read artifact metadata (JSON emitted by aot.py).
+    pub fn metadata(&self, name: &str) -> Result<crate::util::Json> {
+        let s = std::fs::read_to_string(self.artifact_path(name))
+            .with_context(|| format!("reading {name}"))?;
+        crate::util::Json::parse(&s).map_err(|e| anyhow!("parsing {name}: {e}"))
+    }
+
+    /// Whether the artifact directory has been built.
+    pub fn artifacts_available(dir: impl AsRef<Path>) -> bool {
+        dir.as_ref().join("mlp_meta.json").exists()
+    }
+}
+
+impl Executable {
+    /// Execute with positional literal inputs; the jax functions are lowered
+    /// with `return_tuple=True`, so the single output tuple is unpacked into
+    /// a vector of literals.
+    pub fn run(&self, inputs: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+        let bufs = self
+            .exe
+            .execute::<xla::Literal>(inputs)
+            .map_err(|e| anyhow!("executing {}: {e:?}", self.name))?;
+        let lit = bufs[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetching result of {}: {e:?}", self.name))?;
+        lit.to_tuple().map_err(|e| anyhow!("untupling result of {}: {e:?}", self.name))
+    }
+}
+
+/// Build an f32 literal of the given shape from a flat slice.
+pub fn literal_f32(data: &[f32], dims: &[i64]) -> Result<xla::Literal> {
+    let expect: i64 = dims.iter().product();
+    if expect != data.len() as i64 {
+        return Err(anyhow!("literal shape {dims:?} wants {expect} elements, got {}", data.len()));
+    }
+    xla::Literal::vec1(data)
+        .reshape(dims)
+        .map_err(|e| anyhow!("reshape to {dims:?}: {e:?}"))
+}
+
+/// Extract a literal back to a flat f32 vector.
+pub fn to_vec_f32(lit: &xla::Literal) -> Result<Vec<f32>> {
+    lit.to_vec::<f32>().map_err(|e| anyhow!("literal to_vec: {e:?}"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // Integration tests that need built artifacts live in rust/tests/;
+    // here we only exercise the pure helpers.
+
+    #[test]
+    fn literal_roundtrip() {
+        let l = literal_f32(&[1.0, 2.0, 3.0, 4.0, 5.0, 6.0], &[2, 3]).unwrap();
+        assert_eq!(to_vec_f32(&l).unwrap(), vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+    }
+
+    #[test]
+    fn literal_shape_mismatch_errors() {
+        assert!(literal_f32(&[1.0, 2.0], &[3, 3]).is_err());
+    }
+
+    #[test]
+    fn default_dir_env_override() {
+        // No EDGELAT_ARTIFACTS set in tests -> "artifacts".
+        if std::env::var("EDGELAT_ARTIFACTS").is_err() {
+            assert_eq!(Runtime::default_dir(), PathBuf::from("artifacts"));
+        }
+    }
+}

@@ -1,0 +1,180 @@
+//! The 72 measurement scenarios of Section 4.3: for each of the 4 SoCs, a
+//! set of CPU core combinations x {fp32, int8} plus the GPU — 34 CPU combos
+//! x 2 representations + 4 GPUs = 72.
+
+use crate::device::{soc_by_name, CoreCombo, DataRep, Soc, Target};
+use crate::tflite::CompileOptions;
+
+/// One profiling/prediction scenario on a specific SoC.
+#[derive(Debug, Clone)]
+pub struct Scenario {
+    pub soc: Soc,
+    pub target: Target,
+    /// Stable id like "Snapdragon855/cpu/1L+3M/fp32" or "HelioP35/gpu".
+    pub id: String,
+}
+
+impl Scenario {
+    pub fn cpu(soc: &Soc, counts: Vec<usize>, rep: DataRep) -> Scenario {
+        let combo = CoreCombo::new(counts);
+        combo.validate(soc).expect("invalid combo");
+        let id = format!("{}/cpu/{}/{}", soc.name, combo.label(soc), rep.name());
+        Scenario { soc: soc.clone(), target: Target::Cpu { combo, rep }, id }
+    }
+
+    pub fn gpu(soc: &Soc) -> Scenario {
+        Scenario {
+            soc: soc.clone(),
+            target: Target::Gpu { options: CompileOptions::default() },
+            id: format!("{}/gpu", soc.name),
+        }
+    }
+
+    pub fn is_gpu(&self) -> bool {
+        matches!(self.target, Target::Gpu { .. })
+    }
+
+    /// The combo label ("1L+3M") for CPU scenarios, "gpu" otherwise.
+    pub fn combo_label(&self) -> String {
+        match &self.target {
+            Target::Cpu { combo, .. } => combo.label(&self.soc),
+            Target::Gpu { .. } => "gpu".into(),
+        }
+    }
+}
+
+/// Per-SoC CPU core combinations studied (Figs 2, 15, 23).
+pub fn cpu_combos(soc: &Soc) -> Vec<Vec<usize>> {
+    match soc.name {
+        // L=1 prime, M=3 gold, S=4 silver
+        "Snapdragon855" => vec![
+            vec![1, 0, 0],
+            vec![0, 1, 0],
+            vec![0, 2, 0],
+            vec![0, 3, 0],
+            vec![0, 0, 1],
+            vec![0, 0, 2],
+            vec![0, 0, 4],
+            vec![1, 1, 0],
+            vec![1, 3, 0],
+            vec![0, 1, 1],
+        ],
+        // L=2 gold, S=6 silver
+        "Snapdragon710" => vec![
+            vec![1, 0],
+            vec![2, 0],
+            vec![0, 1],
+            vec![0, 2],
+            vec![0, 4],
+            vec![0, 6],
+            vec![1, 1],
+        ],
+        // L=2 M4, M=2 A75, S=4 A55
+        "Exynos9820" => vec![
+            vec![1, 0, 0],
+            vec![2, 0, 0],
+            vec![0, 1, 0],
+            vec![0, 2, 0],
+            vec![0, 0, 1],
+            vec![0, 0, 2],
+            vec![0, 0, 4],
+            vec![1, 0, 1],
+            vec![1, 2, 0],
+            vec![2, 2, 4],
+        ],
+        // L=4 A53@2.3, S=4 A53@1.8
+        "HelioP35" => vec![
+            vec![1, 0],
+            vec![2, 0],
+            vec![4, 0],
+            vec![0, 1],
+            vec![0, 2],
+            vec![0, 4],
+            vec![4, 4],
+        ],
+        other => panic!("unknown soc {other}"),
+    }
+}
+
+/// All 72 scenarios across the 4 platforms.
+pub fn all_scenarios() -> Vec<Scenario> {
+    let mut v = Vec::new();
+    for soc in crate::device::socs() {
+        for counts in cpu_combos(&soc) {
+            for rep in [DataRep::Fp32, DataRep::Int8] {
+                v.push(Scenario::cpu(&soc, counts.clone(), rep));
+            }
+        }
+        v.push(Scenario::gpu(&soc));
+    }
+    v
+}
+
+/// The "default" NAS scenarios the headline results use: one large CPU core
+/// (fp32) per platform plus each GPU (Fig 14, Tables 4/5).
+pub fn headline_scenarios() -> Vec<Scenario> {
+    let mut v = Vec::new();
+    for soc in crate::device::socs() {
+        let mut counts = vec![0; soc.clusters.len()];
+        counts[0] = 1;
+        v.push(Scenario::cpu(&soc, counts, DataRep::Fp32));
+        v.push(Scenario::gpu(&soc));
+    }
+    v
+}
+
+/// Find a scenario by id.
+pub fn by_id(id: &str) -> Option<Scenario> {
+    all_scenarios().into_iter().find(|s| s.id == id)
+}
+
+/// Build a single-large-core fp32 scenario for a SoC by name.
+pub fn one_large_core(soc_name: &str) -> Scenario {
+    let soc = soc_by_name(soc_name).expect("unknown soc");
+    let mut counts = vec![0; soc.clusters.len()];
+    counts[0] = 1;
+    Scenario::cpu(&soc, counts, DataRep::Fp32)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn exactly_72_scenarios() {
+        let all = all_scenarios();
+        assert_eq!(all.len(), 72, "paper: 72 scenarios across 4 platforms");
+        let gpus = all.iter().filter(|s| s.is_gpu()).count();
+        assert_eq!(gpus, 4);
+    }
+
+    #[test]
+    fn ids_unique() {
+        let all = all_scenarios();
+        let mut ids: Vec<&str> = all.iter().map(|s| s.id.as_str()).collect();
+        ids.sort_unstable();
+        ids.dedup();
+        assert_eq!(ids.len(), 72);
+    }
+
+    #[test]
+    fn all_combos_valid() {
+        for soc in crate::device::socs() {
+            for c in cpu_combos(&soc) {
+                CoreCombo::new(c).validate(&soc).unwrap();
+            }
+        }
+    }
+
+    #[test]
+    fn headline_is_8() {
+        assert_eq!(headline_scenarios().len(), 8);
+    }
+
+    #[test]
+    fn by_id_roundtrip() {
+        for s in all_scenarios() {
+            assert!(by_id(&s.id).is_some(), "{}", s.id);
+        }
+    }
+}

@@ -1,0 +1,119 @@
+//! Simulation of TFLite GPU-delegate model compilation: kernel **fusion**
+//! (Algorithm C.1 of the paper, from `gpu_model.cc`) and kernel **selection**
+//! (Algorithm C.2: Winograd and GroupedConv2D applicability).
+//!
+//! This module is used twice, mirroring the paper's methodology:
+//! 1. inside the device simulator (`device::gpu`) as the *ground truth*
+//!    compilation a phone would perform, and
+//! 2. inside the prediction framework (`framework`) as the *kernel
+//!    deduction* step (Section 4.1) that predicts — without a device —
+//!    which kernels will run.
+
+pub mod fusion;
+pub mod select;
+
+pub use fusion::{fuse, FusedKernel};
+pub use select::{select_conv_kernel, GpuKind, KernelImpl};
+
+use crate::graph::Graph;
+
+/// Compilation options; the ablation benches (Figs 6, 8, 9, 19, 20) disable
+/// individual optimizations.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct CompileOptions {
+    /// Apply Algorithm C.1 kernel fusion.
+    pub fusion: bool,
+    /// Allow Winograd kernels where Algorithm C.2 admits them.
+    pub winograd: bool,
+    /// Allow the optimized single-kernel GroupedConv2D implementation.
+    pub grouped: bool,
+}
+
+impl Default for CompileOptions {
+    fn default() -> Self {
+        CompileOptions { fusion: true, winograd: true, grouped: true }
+    }
+}
+
+/// A GPU-compiled graph: the list of kernels actually dispatched.
+#[derive(Debug, Clone)]
+pub struct CompiledGraph {
+    pub kernels: Vec<FusedKernel>,
+    pub gpu: GpuKind,
+    pub options: CompileOptions,
+}
+
+/// Compile a graph for a GPU: fuse linkable ops, then select a kernel
+/// implementation for each convolution.
+pub fn compile(g: &Graph, gpu: GpuKind, options: CompileOptions) -> CompiledGraph {
+    let mut kernels = if options.fusion {
+        fuse(g)
+    } else {
+        fusion::no_fuse(g)
+    };
+    for k in &mut kernels {
+        k.impl_ = select::select_for_kernel(g, k, gpu, options);
+    }
+    CompiledGraph { kernels, gpu, options }
+}
+
+impl CompiledGraph {
+    /// Number of OpenCL kernel dispatches (naive grouped convolutions cost
+    /// `groups + 2` dispatches: per-group convs plus split and concat).
+    pub fn dispatch_count(&self) -> usize {
+        self.kernels
+            .iter()
+            .map(|k| match k.impl_ {
+                KernelImpl::NaiveGroupedConv2D { groups } => groups + 2,
+                _ => 1,
+            })
+            .sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::{ActKind, GraphBuilder, Padding};
+
+    #[test]
+    fn compile_reduces_kernels_vs_nodes() {
+        let mut b = GraphBuilder::new("t", 32, 32, 8);
+        let x = b.input_tensor();
+        let t = b.conv_act(x, 16, 3, 1, ActKind::Relu);
+        let t = b.conv_act(t, 16, 3, 1, ActKind::Relu);
+        let g = b.finish(vec![t]);
+        let c = compile(&g, GpuKind::Mali, CompileOptions::default());
+        assert_eq!(c.kernels.len(), 2); // two conv+relu fused kernels
+        let c0 = compile(&g, GpuKind::Mali, CompileOptions { fusion: false, ..Default::default() });
+        assert_eq!(c0.kernels.len(), 4);
+    }
+
+    #[test]
+    fn default_options_enable_everything() {
+        let o = CompileOptions::default();
+        assert!(o.fusion && o.winograd && o.grouped);
+    }
+
+    #[test]
+    fn dispatch_count_counts_naive_grouped() {
+        let mut b = GraphBuilder::new("t", 16, 16, 18);
+        let x = b.input_tensor();
+        // groups=3: dst_group_size = 18/3 = 6, not a multiple of 4 -> naive.
+        let t = b.grouped_conv(x, 18, 3, 1, 3);
+        let g = b.finish(vec![t]);
+        let c = compile(&g, GpuKind::Mali, CompileOptions::default());
+        assert_eq!(c.kernels.len(), 1);
+        assert_eq!(c.dispatch_count(), 5); // 3 convs + split + concat
+    }
+
+    #[test]
+    fn conv_padding_never_affects_compile() {
+        let mut b = GraphBuilder::new("t", 32, 32, 8);
+        let x = b.input_tensor();
+        let t = b.conv(x, 16, 3, 1, Padding::Valid);
+        let g = b.finish(vec![t]);
+        let c = compile(&g, GpuKind::PowerVR, CompileOptions::default());
+        assert_eq!(c.kernels.len(), 1);
+    }
+}

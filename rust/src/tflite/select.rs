@@ -1,0 +1,312 @@
+//! Kernel selection — Algorithm C.2 (TFLite GPU delegate): per-convolution
+//! choice among {GroupedConv2D, Winograd, Conv2D}, with hardware-dependent
+//! thresholds (Adreno is stricter than Mali/PowerVR; Table 2 of the paper).
+
+use crate::graph::{Graph, Op, OpType};
+use crate::tflite::fusion::FusedKernel;
+use crate::tflite::CompileOptions;
+
+/// GPU vendor families distinguished by TFLite's kernel-selection rules.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum GpuKind {
+    /// Adreno 600-series (both Adreno 640 and 616 in the paper's devices).
+    Adreno6xx,
+    /// Other Adreno generations.
+    Adreno,
+    Mali,
+    PowerVR,
+    /// Present in TFLite's rule set; unused by the paper's devices.
+    Amd,
+}
+
+impl GpuKind {
+    pub fn is_adreno(&self) -> bool {
+        matches!(self, GpuKind::Adreno6xx | GpuKind::Adreno)
+    }
+    pub fn name(&self) -> &'static str {
+        match self {
+            GpuKind::Adreno6xx => "Adreno6xx",
+            GpuKind::Adreno => "Adreno",
+            GpuKind::Mali => "Mali",
+            GpuKind::PowerVR => "PowerVR",
+            GpuKind::Amd => "AMD",
+        }
+    }
+}
+
+/// The implementation chosen for a compiled kernel.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum KernelImpl {
+    Conv2D,
+    Winograd,
+    /// Optimized single-kernel grouped convolution.
+    GroupedConv2D,
+    /// Naive grouped convolution: split + per-group Conv2D + concat.
+    NaiveGroupedConv2D { groups: usize },
+    DepthwiseConv2D,
+    FullyConnected,
+    /// Any non-convolution kernel; costed by the root op's type.
+    Generic,
+}
+
+impl KernelImpl {
+    pub fn name(&self) -> &'static str {
+        match self {
+            KernelImpl::Conv2D => "Conv2D",
+            KernelImpl::Winograd => "Winograd",
+            KernelImpl::GroupedConv2D => "GroupedConv2D",
+            KernelImpl::NaiveGroupedConv2D { .. } => "NaiveGroupedConv2D",
+            KernelImpl::DepthwiseConv2D => "DepthwiseConv2D",
+            KernelImpl::FullyConnected => "FullyConnected",
+            KernelImpl::Generic => "Generic",
+        }
+    }
+
+    /// The op-type bucket whose latency predictor handles this kernel
+    /// (Winograd and Conv2D get *separate* predictors — Section 5.4).
+    pub fn predictor_bucket(&self, root_type: OpType) -> &'static str {
+        match self {
+            KernelImpl::Conv2D => "Conv2D",
+            KernelImpl::Winograd => "Winograd",
+            KernelImpl::GroupedConv2D => "GroupedConv2D",
+            KernelImpl::NaiveGroupedConv2D { .. } => "NaiveGroupedConv2D",
+            KernelImpl::DepthwiseConv2D => "DepthwiseConv2D",
+            KernelImpl::FullyConnected => "FullyConnected",
+            KernelImpl::Generic => root_type.name(),
+        }
+    }
+}
+
+/// Convolution parameters extracted for the selection rules.
+#[derive(Debug, Clone, Copy)]
+pub struct ConvInfo {
+    pub input_channel: usize,
+    pub output_channel: usize,
+    pub output_height: usize,
+    pub output_width: usize,
+    pub kernel_h: usize,
+    pub kernel_w: usize,
+    pub stride: usize,
+    pub groups: usize,
+}
+
+/// `CheckGroupedConv2D` (Algorithm C.2 lines 6-10, implemented literally:
+/// `src_group_size = op_info.input_channel`,
+/// `dst_group_size = op_info.output_channel / op_info.group`).
+pub fn check_grouped_conv2d(info: &ConvInfo) -> bool {
+    if info.groups == 1 {
+        return false;
+    }
+    let src_group_size = info.input_channel;
+    let dst_group_size = info.output_channel / info.groups;
+    src_group_size % 4 == 0 && dst_group_size % 4 == 0
+}
+
+/// `CheckWinograd` (Algorithm C.2 lines 11-28).
+pub fn check_winograd(gpu: GpuKind, info: &ConvInfo) -> bool {
+    if info.groups != 1 || info.kernel_h != 3 || info.kernel_w != 3 || info.stride != 1 {
+        return false;
+    }
+    let src_depth = info.input_channel.div_ceil(4);
+    let dst_depth = info.output_channel.div_ceil(4);
+    match gpu {
+        g if g.is_adreno() => {
+            if src_depth < 32 || dst_depth < 32 {
+                return false;
+            }
+        }
+        GpuKind::Amd => {
+            if src_depth < 16 || dst_depth < 8 {
+                return false;
+            }
+        }
+        _ => {
+            if src_depth < 16 || dst_depth < 16 {
+                return false;
+            }
+        }
+    }
+    let total_tiles = info.output_height.div_ceil(4) * info.output_width.div_ceil(4);
+    match gpu {
+        GpuKind::Adreno6xx => total_tiles >= 128,
+        GpuKind::Adreno => total_tiles >= 64,
+        _ => total_tiles >= 32,
+    }
+}
+
+/// `SelectConv2DKernel` (Algorithm C.2 lines 1-5).
+pub fn select_conv_kernel(gpu: GpuKind, info: &ConvInfo, options: CompileOptions) -> KernelImpl {
+    if info.groups > 1 {
+        if options.grouped && check_grouped_conv2d(info) {
+            return KernelImpl::GroupedConv2D;
+        }
+        return KernelImpl::NaiveGroupedConv2D { groups: info.groups };
+    }
+    if options.winograd && check_winograd(gpu, info) {
+        return KernelImpl::Winograd;
+    }
+    KernelImpl::Conv2D
+}
+
+/// Extract `ConvInfo` from a graph node (convolutions only).
+pub fn conv_info(g: &Graph, op_id: usize) -> Option<ConvInfo> {
+    let node = &g.nodes[op_id];
+    match node.op {
+        Op::Conv2D { kh, kw, stride, out_c, groups, .. } => {
+            let i = g.shape(node.inputs[0]);
+            let o = g.shape(node.outputs[0]);
+            Some(ConvInfo {
+                input_channel: i.c,
+                output_channel: out_c,
+                output_height: o.h,
+                output_width: o.w,
+                kernel_h: kh,
+                kernel_w: kw,
+                stride,
+                groups,
+            })
+        }
+        _ => None,
+    }
+}
+
+/// Assign the kernel implementation for a fused kernel based on its root op.
+pub fn select_for_kernel(
+    g: &Graph,
+    k: &FusedKernel,
+    gpu: GpuKind,
+    options: CompileOptions,
+) -> KernelImpl {
+    let root = &g.nodes[k.root()];
+    match &root.op {
+        Op::Conv2D { .. } => {
+            let info = conv_info(g, k.root()).unwrap();
+            select_conv_kernel(gpu, &info, options)
+        }
+        Op::DepthwiseConv2D { .. } => KernelImpl::DepthwiseConv2D,
+        Op::FullyConnected { .. } => KernelImpl::FullyConnected,
+        _ => KernelImpl::Generic,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn info(in_c: usize, out_c: usize, out_h: usize) -> ConvInfo {
+        ConvInfo {
+            input_channel: in_c,
+            output_channel: out_c,
+            output_height: out_h,
+            output_width: out_h,
+            kernel_h: 3,
+            kernel_w: 3,
+            stride: 1,
+            groups: 1,
+        }
+    }
+
+    /// Table 2 of the paper: three ResNet16 convolutions.
+    #[test]
+    fn table2_row1() {
+        // in=64 out=64 out_h=56: src/dst_depth=16, total_tiles=196.
+        let i = info(64, 64, 56);
+        assert!(!check_winograd(GpuKind::Adreno6xx, &i)); // depth < 32
+        assert!(check_winograd(GpuKind::Mali, &i));
+        assert!(check_winograd(GpuKind::PowerVR, &i));
+    }
+
+    #[test]
+    fn table2_row2() {
+        // in=128 out=128 out_h=28: depth=32, total_tiles=49.
+        let i = info(128, 128, 28);
+        assert!(!check_winograd(GpuKind::Adreno6xx, &i)); // tiles < 128
+        assert!(check_winograd(GpuKind::Mali, &i));
+    }
+
+    #[test]
+    fn table2_row3() {
+        // in=256 out=256 out_h=14: depth=64, total_tiles=16 < 32.
+        let i = info(256, 256, 14);
+        assert!(!check_winograd(GpuKind::Adreno6xx, &i));
+        assert!(!check_winograd(GpuKind::Mali, &i));
+        assert!(!check_winograd(GpuKind::PowerVR, &i));
+    }
+
+    #[test]
+    fn winograd_requires_3x3_stride1_group1() {
+        let mut i = info(128, 128, 56);
+        assert!(check_winograd(GpuKind::Mali, &i));
+        i.stride = 2;
+        assert!(!check_winograd(GpuKind::Mali, &i));
+        i.stride = 1;
+        i.kernel_h = 5;
+        i.kernel_w = 5;
+        assert!(!check_winograd(GpuKind::Mali, &i));
+        i.kernel_h = 3;
+        i.kernel_w = 3;
+        i.groups = 2;
+        assert!(!check_winograd(GpuKind::Mali, &i));
+    }
+
+    #[test]
+    fn amd_thresholds() {
+        // AMD: src_depth >= 16, dst_depth >= 8.
+        let i = info(64, 32, 56);
+        assert!(check_winograd(GpuKind::Amd, &i));
+        assert!(!check_winograd(GpuKind::Mali, &i)); // dst_depth 8 < 16
+    }
+
+    #[test]
+    fn grouped_check_requires_mult4_group_sizes() {
+        let mut i = info(64, 64, 28);
+        i.groups = 4; // group sizes 16/16 -> optimized
+        assert!(check_grouped_conv2d(&i));
+        i.groups = 8; // 8/8 -> ok
+        assert!(check_grouped_conv2d(&i));
+        let mut j = info(24, 24, 28);
+        j.groups = 2; // 12/12 -> ok
+        assert!(check_grouped_conv2d(&j));
+        let mut k = info(6, 6, 28);
+        k.groups = 2; // 3/3 -> not multiple of 4
+        assert!(!check_grouped_conv2d(&k));
+    }
+
+    #[test]
+    fn select_priority_grouped_over_winograd() {
+        let mut i = info(128, 128, 56);
+        i.groups = 4;
+        let k = select_conv_kernel(GpuKind::Mali, &i, CompileOptions::default());
+        assert_eq!(k, KernelImpl::GroupedConv2D);
+    }
+
+    #[test]
+    fn options_disable_optimizations() {
+        let i = info(128, 128, 56);
+        let no_wino = CompileOptions { winograd: false, ..Default::default() };
+        assert_eq!(select_conv_kernel(GpuKind::Mali, &i, no_wino), KernelImpl::Conv2D);
+        let mut gi = info(64, 64, 28);
+        gi.groups = 4;
+        let no_grp = CompileOptions { grouped: false, ..Default::default() };
+        assert_eq!(
+            select_conv_kernel(GpuKind::Mali, &gi, no_grp),
+            KernelImpl::NaiveGroupedConv2D { groups: 4 }
+        );
+    }
+
+    #[test]
+    fn resnet16_winograd_on_mali_not_adreno() {
+        // End-to-end: the paper observes Winograd on Mali G76 but never on
+        // Adreno 640 for the zoo (Section 3.2.2 / Fig 11).
+        let g = crate::zoo::resnets::resnet(16, 1.0);
+        let count = |gpu: GpuKind| {
+            g.nodes
+                .iter()
+                .filter_map(|n| conv_info(&g, n.id))
+                .filter(|i| check_winograd(gpu, i))
+                .count()
+        };
+        assert!(count(GpuKind::Mali) > 0);
+        assert_eq!(count(GpuKind::Adreno6xx), 0);
+    }
+}

@@ -1,0 +1,12 @@
+//! Dependency-free utilities: deterministic PRNG, summary statistics, and a
+//! small JSON implementation (no serde in the offline crate set).
+
+pub mod json;
+pub mod prng;
+pub mod stats;
+pub mod table;
+
+pub use json::Json;
+pub use prng::Rng;
+pub use stats::{cov, mape, mean, median, rmspe, std_dev, BoxStats};
+pub use table::Table;

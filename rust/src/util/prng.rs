@@ -1,0 +1,234 @@
+//! Deterministic, dependency-free PRNG (xoshiro256** seeded via SplitMix64).
+//!
+//! Every stochastic component of the library (device noise, NAS sampling,
+//! train/test splits, model initialization) draws from this generator so that
+//! all figures and tables in EXPERIMENTS.md are exactly reproducible from the
+//! seeds recorded there.
+
+/// xoshiro256** generator. Small, fast, and high quality for simulation use.
+#[derive(Debug, Clone)]
+pub struct Rng {
+    s: [u64; 4],
+    /// Cached second normal deviate from Box-Muller.
+    spare_normal: Option<f64>,
+}
+
+#[inline]
+fn splitmix64(state: &mut u64) -> u64 {
+    *state = state.wrapping_add(0x9E37_79B9_7F4A_7C15);
+    let mut z = *state;
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
+impl Rng {
+    /// Create a generator from a 64-bit seed.
+    pub fn new(seed: u64) -> Self {
+        let mut sm = seed;
+        let s = [
+            splitmix64(&mut sm),
+            splitmix64(&mut sm),
+            splitmix64(&mut sm),
+            splitmix64(&mut sm),
+        ];
+        Rng { s, spare_normal: None }
+    }
+
+    /// Derive an independent stream from this seed and a stream label.
+    /// Used to give every (model, scenario, run) its own reproducible stream.
+    pub fn derive(seed: u64, labels: &[u64]) -> Self {
+        let mut h = seed ^ 0xD6E8_FEB8_6659_FD93;
+        for &l in labels {
+            let mut sm = h ^ l.wrapping_mul(0x2545_F491_4F6C_DD1D);
+            h = splitmix64(&mut sm);
+        }
+        Rng::new(h)
+    }
+
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        let r = self.s[1]
+            .wrapping_mul(5)
+            .rotate_left(7)
+            .wrapping_mul(9);
+        let t = self.s[1] << 17;
+        self.s[2] ^= self.s[0];
+        self.s[3] ^= self.s[1];
+        self.s[1] ^= self.s[2];
+        self.s[0] ^= self.s[3];
+        self.s[2] ^= t;
+        self.s[3] = self.s[3].rotate_left(45);
+        r
+    }
+
+    /// Uniform f64 in [0, 1).
+    #[inline]
+    pub fn f64(&mut self) -> f64 {
+        // 53 high bits -> [0,1)
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform f64 in [lo, hi).
+    #[inline]
+    pub fn range_f64(&mut self, lo: f64, hi: f64) -> f64 {
+        lo + (hi - lo) * self.f64()
+    }
+
+    /// Uniform usize in [lo, hi] (inclusive).
+    #[inline]
+    pub fn range_usize(&mut self, lo: usize, hi: usize) -> usize {
+        debug_assert!(lo <= hi);
+        let span = (hi - lo + 1) as u64;
+        lo + (self.next_u64() % span) as usize
+    }
+
+    /// Bernoulli draw.
+    #[inline]
+    pub fn bool(&mut self, p: f64) -> bool {
+        self.f64() < p
+    }
+
+    /// Pick a uniformly random element of a slice.
+    pub fn choice<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        &xs[self.range_usize(0, xs.len() - 1)]
+    }
+
+    /// Standard normal deviate (Box-Muller, with caching).
+    pub fn normal(&mut self) -> f64 {
+        if let Some(z) = self.spare_normal.take() {
+            return z;
+        }
+        loop {
+            let u1 = self.f64();
+            let u2 = self.f64();
+            if u1 <= f64::EPSILON {
+                continue;
+            }
+            let r = (-2.0 * u1.ln()).sqrt();
+            let theta = 2.0 * std::f64::consts::PI * u2;
+            self.spare_normal = Some(r * theta.sin());
+            return r * theta.cos();
+        }
+    }
+
+    /// Log-normal multiplicative factor with E[ln X] = 0 and Std[ln X] = sigma.
+    /// The mean is then exp(sigma^2/2) ~= 1 for small sigma; we recentre so the
+    /// *mean* is exactly 1, keeping simulated latencies unbiased.
+    pub fn lognormal_unit_mean(&mut self, sigma: f64) -> f64 {
+        let z = self.normal();
+        (sigma * z - 0.5 * sigma * sigma).exp()
+    }
+
+    /// Fisher-Yates shuffle.
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        for i in (1..xs.len()).rev() {
+            let j = self.range_usize(0, i);
+            xs.swap(i, j);
+        }
+    }
+
+    /// Sample k distinct indices from 0..n (k <= n), in random order.
+    pub fn sample_indices(&mut self, n: usize, k: usize) -> Vec<usize> {
+        let mut idx: Vec<usize> = (0..n).collect();
+        self.shuffle(&mut idx);
+        idx.truncate(k);
+        idx
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_streams() {
+        let mut a = Rng::new(42);
+        let mut b = Rng::new(42);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn derive_differs_by_label() {
+        let mut a = Rng::derive(7, &[1, 2]);
+        let mut b = Rng::derive(7, &[1, 3]);
+        let same = (0..16).all(|_| a.next_u64() == b.next_u64());
+        assert!(!same);
+    }
+
+    #[test]
+    fn uniform_bounds_and_mean() {
+        let mut r = Rng::new(1);
+        let mut acc = 0.0;
+        for _ in 0..20_000 {
+            let x = r.f64();
+            assert!((0.0..1.0).contains(&x));
+            acc += x;
+        }
+        let mean = acc / 20_000.0;
+        assert!((mean - 0.5).abs() < 0.01, "mean={mean}");
+    }
+
+    #[test]
+    fn range_usize_inclusive() {
+        let mut r = Rng::new(3);
+        let mut seen = [false; 5];
+        for _ in 0..1000 {
+            let v = r.range_usize(2, 6);
+            assert!((2..=6).contains(&v));
+            seen[v - 2] = true;
+        }
+        assert!(seen.iter().all(|&s| s));
+    }
+
+    #[test]
+    fn normal_moments() {
+        let mut r = Rng::new(9);
+        let n = 50_000;
+        let (mut m, mut v) = (0.0, 0.0);
+        for _ in 0..n {
+            let z = r.normal();
+            m += z;
+            v += z * z;
+        }
+        let mean = m / n as f64;
+        let var = v / n as f64 - mean * mean;
+        assert!(mean.abs() < 0.02, "mean={mean}");
+        assert!((var - 1.0).abs() < 0.05, "var={var}");
+    }
+
+    #[test]
+    fn lognormal_unit_mean_is_unbiased() {
+        let mut r = Rng::new(11);
+        let n = 100_000;
+        let mut acc = 0.0;
+        for _ in 0..n {
+            acc += r.lognormal_unit_mean(0.08);
+        }
+        let mean = acc / n as f64;
+        assert!((mean - 1.0).abs() < 0.01, "mean={mean}");
+    }
+
+    #[test]
+    fn shuffle_is_permutation() {
+        let mut r = Rng::new(5);
+        let mut xs: Vec<usize> = (0..50).collect();
+        r.shuffle(&mut xs);
+        let mut sorted = xs.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..50).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn sample_indices_distinct() {
+        let mut r = Rng::new(6);
+        let s = r.sample_indices(100, 30);
+        assert_eq!(s.len(), 30);
+        let mut t = s.clone();
+        t.sort_unstable();
+        t.dedup();
+        assert_eq!(t.len(), 30);
+    }
+}

@@ -1,0 +1,196 @@
+//! Summary statistics used throughout the evaluation harness: boxplot
+//! five-number summaries (matching the paper's plotting convention of
+//! 1.5x-IQR whiskers), MAPE, coefficient of variation.
+
+/// Five-number boxplot summary with 1.5x-IQR whiskers, the convention used
+/// by every boxplot figure in the paper (Figs 2, 4, 6, 8, 9, 15, 16, ...).
+#[derive(Debug, Clone, PartialEq)]
+pub struct BoxStats {
+    pub min: f64,
+    pub q1: f64,
+    pub median: f64,
+    pub q3: f64,
+    pub max: f64,
+    pub mean: f64,
+    /// Lower whisker: smallest datum >= q1 - 1.5*IQR.
+    pub whisker_lo: f64,
+    /// Upper whisker: largest datum <= q3 + 1.5*IQR.
+    pub whisker_hi: f64,
+    /// Data outside the whiskers.
+    pub outliers: Vec<f64>,
+    pub n: usize,
+}
+
+/// Linear-interpolation quantile (same as numpy's default) on a sorted slice.
+pub fn quantile_sorted(sorted: &[f64], q: f64) -> f64 {
+    assert!(!sorted.is_empty(), "quantile of empty slice");
+    if sorted.len() == 1 {
+        return sorted[0];
+    }
+    let pos = q.clamp(0.0, 1.0) * (sorted.len() - 1) as f64;
+    let lo = pos.floor() as usize;
+    let hi = pos.ceil() as usize;
+    let frac = pos - lo as f64;
+    sorted[lo] * (1.0 - frac) + sorted[hi] * frac
+}
+
+pub fn mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return f64::NAN;
+    }
+    xs.iter().sum::<f64>() / xs.len() as f64
+}
+
+pub fn median(xs: &[f64]) -> f64 {
+    let mut v = xs.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    quantile_sorted(&v, 0.5)
+}
+
+pub fn std_dev(xs: &[f64]) -> f64 {
+    if xs.len() < 2 {
+        return 0.0;
+    }
+    let m = mean(xs);
+    let var = xs.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / xs.len() as f64;
+    var.sqrt()
+}
+
+/// Coefficient of variation (std/mean) — Fig 32 of the paper.
+pub fn cov(xs: &[f64]) -> f64 {
+    std_dev(xs) / mean(xs)
+}
+
+impl BoxStats {
+    pub fn from(xs: &[f64]) -> BoxStats {
+        assert!(!xs.is_empty(), "BoxStats of empty slice");
+        let mut v = xs.to_vec();
+        v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let q1 = quantile_sorted(&v, 0.25);
+        let q3 = quantile_sorted(&v, 0.75);
+        let iqr = q3 - q1;
+        let lo_fence = q1 - 1.5 * iqr;
+        let hi_fence = q3 + 1.5 * iqr;
+        let whisker_lo = *v
+            .iter()
+            .find(|&&x| x >= lo_fence)
+            .unwrap_or(&v[0]);
+        let whisker_hi = *v
+            .iter()
+            .rev()
+            .find(|&&x| x <= hi_fence)
+            .unwrap_or(v.last().unwrap());
+        let outliers = v
+            .iter()
+            .copied()
+            .filter(|&x| x < lo_fence || x > hi_fence)
+            .collect();
+        BoxStats {
+            min: v[0],
+            q1,
+            median: quantile_sorted(&v, 0.5),
+            q3,
+            max: *v.last().unwrap(),
+            mean: mean(&v),
+            whisker_lo,
+            whisker_hi,
+            outliers,
+            n: v.len(),
+        }
+    }
+
+    /// Render as the compact one-line form used in figure reports.
+    pub fn render(&self) -> String {
+        format!(
+            "n={:<4} q1={:9.3} med={:9.3} q3={:9.3} whisk=[{:9.3},{:9.3}] mean={:9.3} outliers={}",
+            self.n, self.q1, self.median, self.q3, self.whisker_lo, self.whisker_hi, self.mean,
+            self.outliers.len()
+        )
+    }
+}
+
+/// Mean absolute percentage error — the paper's headline accuracy metric.
+pub fn mape(pred: &[f64], actual: &[f64]) -> f64 {
+    assert_eq!(pred.len(), actual.len());
+    assert!(!pred.is_empty());
+    let mut acc = 0.0;
+    for (p, a) in pred.iter().zip(actual) {
+        acc += ((p - a) / a).abs();
+    }
+    acc / pred.len() as f64
+}
+
+/// Root-mean-square percentage error (the training loss of Section 4.2).
+pub fn rmspe(pred: &[f64], actual: &[f64]) -> f64 {
+    assert_eq!(pred.len(), actual.len());
+    let mut acc = 0.0;
+    for (p, a) in pred.iter().zip(actual) {
+        let e = (p - a) / a;
+        acc += e * e;
+    }
+    (acc / pred.len() as f64).sqrt()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn quantiles_match_numpy_convention() {
+        let v = [1.0, 2.0, 3.0, 4.0];
+        assert!((quantile_sorted(&v, 0.25) - 1.75).abs() < 1e-12);
+        assert!((quantile_sorted(&v, 0.5) - 2.5).abs() < 1e-12);
+        assert!((quantile_sorted(&v, 0.75) - 3.25).abs() < 1e-12);
+    }
+
+    #[test]
+    fn box_stats_basic() {
+        let xs: Vec<f64> = (1..=100).map(|x| x as f64).collect();
+        let b = BoxStats::from(&xs);
+        assert_eq!(b.min, 1.0);
+        assert_eq!(b.max, 100.0);
+        assert!((b.median - 50.5).abs() < 1e-9);
+        assert!(b.outliers.is_empty());
+    }
+
+    #[test]
+    fn box_stats_detects_outliers() {
+        let mut xs: Vec<f64> = (1..=20).map(|x| x as f64).collect();
+        xs.push(1000.0);
+        let b = BoxStats::from(&xs);
+        assert_eq!(b.outliers, vec![1000.0]);
+        assert!(b.whisker_hi <= 20.0);
+    }
+
+    #[test]
+    fn mape_zero_for_exact() {
+        let p = [1.0, 2.0, 3.0];
+        assert_eq!(mape(&p, &p), 0.0);
+    }
+
+    #[test]
+    fn mape_value() {
+        let p = [110.0, 90.0];
+        let a = [100.0, 100.0];
+        assert!((mape(&p, &a) - 0.1).abs() < 1e-12);
+    }
+
+    #[test]
+    fn cov_of_constant_is_zero() {
+        assert_eq!(cov(&[5.0, 5.0, 5.0]), 0.0);
+    }
+
+    #[test]
+    fn rmspe_weights_large_errors_more() {
+        let a = [100.0, 100.0];
+        assert!(rmspe(&[120.0, 100.0], &a) > mape(&[120.0, 100.0], &a));
+    }
+
+    #[test]
+    fn single_element() {
+        let b = BoxStats::from(&[7.0]);
+        assert_eq!(b.median, 7.0);
+        assert_eq!(b.q1, 7.0);
+        assert_eq!(b.q3, 7.0);
+    }
+}

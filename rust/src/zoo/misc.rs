@@ -1,0 +1,533 @@
+//! Concat-heavy and branchy families: SqueezeNet/SqueezeResNet (fire
+//! modules), ShuffleNetV2 (split + concat units; channel shuffle is modeled
+//! as split/concat traffic, matching its memory-movement cost), DenseNet,
+//! PeleeNet, DLA, HarDNet, VoVNet, BN-Inception and HRNet-small.
+//!
+//! HRNet's bilinear upsampling has no counterpart in our op set; the
+//! high-resolution branches are kept parallel and fused with stride-2
+//! convolutions at the end, which preserves the op mix and latency scale
+//! (documented substitution; HRNet contributes 2 of the 102 models).
+
+use crate::graph::{EwKind, Graph, GraphBuilder, Padding, TensorId};
+
+/// SqueezeNet [29] fire module: squeeze 1x1 + expand (1x1 ‖ 3x3) + concat.
+fn fire(b: &mut GraphBuilder, x: TensorId, squeeze: usize, expand: usize) -> TensorId {
+    let s = b.conv(x, squeeze, 1, 1, Padding::Same);
+    let s = b.relu(s);
+    let e1 = b.conv(s, expand, 1, 1, Padding::Same);
+    let e1 = b.relu(e1);
+    let e3 = b.conv(s, expand, 3, 1, Padding::Same);
+    let e3 = b.relu(e3);
+    b.concat(vec![e1, e3])
+}
+
+pub fn squeezenet(v11: bool, residual: bool) -> Graph {
+    let name = match (v11, residual) {
+        (false, false) => "squeezenet_v1_0".to_string(),
+        (true, false) => "squeezenet_v1_1".to_string(),
+        (false, true) => "squeezeresnet_v1_0".to_string(),
+        (true, true) => "squeezeresnet_v1_1".to_string(),
+    };
+    let mut b = GraphBuilder::new(&name, 224, 224, 3);
+    let x = b.input_tensor();
+    let mut t = if v11 {
+        let t = b.conv(x, 64, 3, 2, Padding::Same);
+        b.relu(t)
+    } else {
+        let t = b.conv(x, 96, 7, 2, Padding::Same);
+        b.relu(t)
+    };
+    t = b.max_pool(t, 3, 2);
+    let cfg: &[(usize, usize, bool)] = if v11 {
+        // (squeeze, expand, pool after)
+        &[
+            (16, 64, false),
+            (16, 64, true),
+            (32, 128, false),
+            (32, 128, true),
+            (48, 192, false),
+            (48, 192, false),
+            (64, 256, false),
+            (64, 256, false),
+        ]
+    } else {
+        &[
+            (16, 64, false),
+            (16, 64, false),
+            (32, 128, true),
+            (32, 128, false),
+            (48, 192, true),
+            (48, 192, false),
+            (64, 256, false),
+            (64, 256, false),
+        ]
+    };
+    for (i, &(s, e, pool)) in cfg.iter().enumerate() {
+        let prev = t;
+        t = fire(&mut b, t, s, e);
+        // SqueezeResNet adds identity shortcuts around alternating fires.
+        if residual && i % 2 == 1 && b.shape(prev).c == b.shape(t).c {
+            t = b.add_t(prev, t);
+        }
+        if pool {
+            t = b.max_pool(t, 3, 2);
+        }
+    }
+    // Classifier: 1x1 conv to 1000 + global mean (as in the original).
+    t = b.conv(t, 1000, 1, 1, Padding::Same);
+    t = b.relu(t);
+    let t = b.mean(t);
+    let out = b.softmax(t);
+    b.finish(vec![out])
+}
+
+/// ShuffleNetV2 [39] unit. Channel shuffle is represented as the split +
+/// concat data movement it costs at inference time.
+fn shuffle_unit(b: &mut GraphBuilder, x: TensorId, out_c: usize, downsample: bool) -> TensorId {
+    if downsample {
+        // Both branches process the full input.
+        let left = b.dwconv(x, 3, 2);
+        let left = b.conv(left, out_c / 2, 1, 1, Padding::Same);
+        let left = b.relu(left);
+        let right = b.conv(x, out_c / 2, 1, 1, Padding::Same);
+        let right = b.relu(right);
+        let right = b.dwconv(right, 3, 2);
+        let right = b.conv(right, out_c / 2, 1, 1, Padding::Same);
+        let right = b.relu(right);
+        b.concat(vec![left, right])
+    } else {
+        let parts = b.split(x, 2);
+        let (left, right) = (parts[0], parts[1]);
+        let c = b.shape(right).c;
+        let r = b.conv(right, c, 1, 1, Padding::Same);
+        let r = b.relu(r);
+        let r = b.dwconv(r, 3, 1);
+        let r = b.conv(r, c, 1, 1, Padding::Same);
+        let r = b.relu(r);
+        b.concat(vec![left, r])
+    }
+}
+
+pub fn shufflenet_v2(width: f64) -> Graph {
+    let name = format!("shufflenetv2_w{}", (width * 100.0) as usize);
+    let stage_c: Vec<usize> = match (width * 100.0) as usize {
+        50 => vec![48, 96, 192, 1024],
+        100 => vec![116, 232, 464, 1024],
+        150 => vec![176, 352, 704, 1024],
+        200 => vec![244, 488, 976, 2048],
+        other => panic!("unsupported shufflenetv2 width {other}"),
+    };
+    let mut b = GraphBuilder::new(&name, 224, 224, 3);
+    let x = b.input_tensor();
+    let mut t = b.conv(x, 24, 3, 2, Padding::Same);
+    t = b.relu(t);
+    t = b.max_pool(t, 3, 2);
+    let repeats = [4usize, 8, 4];
+    for (si, &n) in repeats.iter().enumerate() {
+        // Make channels even for split(2).
+        let c = stage_c[si] / 2 * 2;
+        t = shuffle_unit(&mut b, t, c, true);
+        for _ in 1..n {
+            t = shuffle_unit(&mut b, t, c, false);
+        }
+    }
+    t = b.conv(t, stage_c[3], 1, 1, Padding::Same);
+    t = b.relu(t);
+    let out = b.head(t, 1000);
+    b.finish(vec![out])
+}
+
+/// DenseNet [28]: dense blocks concatenate every layer's output.
+pub fn densenet(variant: &str) -> Graph {
+    // (growth rate, per-stage layers, init channels)
+    let (k, stages, init): (usize, Vec<usize>, usize) = match variant {
+        "121" => (32, vec![6, 12, 24, 16], 64),
+        "169" => (32, vec![6, 12, 32, 32], 64),
+        "small" => (24, vec![4, 8, 12, 8], 48),
+        other => panic!("unsupported densenet variant {other}"),
+    };
+    let mut b = GraphBuilder::new(&format!("densenet{variant}"), 224, 224, 3);
+    let x = b.input_tensor();
+    let mut t = b.conv(x, init, 7, 2, Padding::Same);
+    t = b.relu(t);
+    t = b.max_pool(t, 3, 2);
+    for (si, &n) in stages.iter().enumerate() {
+        for _ in 0..n {
+            // Bottleneck dense layer: 1x1 (4k) + 3x3 (k), concat with input.
+            let y = b.conv(t, 4 * k, 1, 1, Padding::Same);
+            let y = b.relu(y);
+            let y = b.conv(y, k, 3, 1, Padding::Same);
+            let y = b.relu(y);
+            t = b.concat(vec![t, y]);
+        }
+        if si < stages.len() - 1 {
+            // Transition: 1x1 halving channels + 2x2 avg pool.
+            let c = b.shape(t).c / 2;
+            t = b.conv(t, c, 1, 1, Padding::Same);
+            t = b.relu(t);
+            t = b.avg_pool(t, 2, 2);
+        }
+    }
+    let out = b.head(t, 1000);
+    b.finish(vec![out])
+}
+
+/// PeleeNet [54]: two-way dense layers + stem block.
+pub fn peleenet(width: f64) -> Graph {
+    let name = format!("peleenet_w{}", (width * 100.0) as usize);
+    let sc = |c: usize| ((c as f64 * width) as usize / 8 * 8).max(8);
+    let mut b = GraphBuilder::new(&name, 224, 224, 3);
+    let x = b.input_tensor();
+    // Stem: conv s2, then two branches (conv s2 / maxpool) + concat + 1x1.
+    let mut t = b.conv(x, sc(32), 3, 2, Padding::Same);
+    t = b.relu(t);
+    let l = b.conv(t, sc(16), 1, 1, Padding::Same);
+    let l = b.relu(l);
+    let l = b.conv(l, sc(32), 3, 2, Padding::Same);
+    let l = b.relu(l);
+    let r = b.max_pool(t, 2, 2);
+    t = b.concat(vec![l, r]);
+    t = b.conv(t, sc(32), 1, 1, Padding::Same);
+    t = b.relu(t);
+    let k = sc(32);
+    let stages = [3usize, 4, 8, 6];
+    for (si, &n) in stages.iter().enumerate() {
+        for _ in 0..n {
+            // Two-way dense layer: both branches produce k/2 channels.
+            let half = (k / 2).max(8);
+            let a = b.conv(t, half * 2, 1, 1, Padding::Same);
+            let a = b.relu(a);
+            let a = b.conv(a, half, 3, 1, Padding::Same);
+            let a = b.relu(a);
+            let c2 = b.conv(t, half * 2, 1, 1, Padding::Same);
+            let c2 = b.relu(c2);
+            let c2 = b.conv(c2, half, 3, 1, Padding::Same);
+            let c2 = b.relu(c2);
+            let c2 = b.conv(c2, half, 3, 1, Padding::Same);
+            let c2 = b.relu(c2);
+            t = b.concat(vec![t, a, c2]);
+        }
+        // Transition
+        let c = b.shape(t).c;
+        t = b.conv(t, c, 1, 1, Padding::Same);
+        t = b.relu(t);
+        if si < stages.len() - 1 {
+            t = b.avg_pool(t, 2, 2);
+        }
+    }
+    let out = b.head(t, 1000);
+    b.finish(vec![out])
+}
+
+/// DLA [60]: iterative deep aggregation of basic residual blocks.
+pub fn dla(depth: usize) -> Graph {
+    let stages: Vec<usize> = match depth {
+        34 => vec![1, 2, 2, 1],
+        46 => vec![2, 2, 3, 1],
+        60 => vec![2, 3, 4, 1],
+        other => panic!("unsupported dla depth {other}"),
+    };
+    let mut b = GraphBuilder::new(&format!("dla{depth}"), 224, 224, 3);
+    let x = b.input_tensor();
+    let mut t = b.conv(x, 32, 7, 2, Padding::Same);
+    t = b.relu(t);
+    let base = [64usize, 128, 256, 512];
+    for (si, &n) in stages.iter().enumerate() {
+        let c = base[si];
+        let mut level_outputs: Vec<TensorId> = Vec::new();
+        for i in 0..n {
+            let stride = if i == 0 { 2 } else { 1 };
+            t = b.res_basic(t, c, stride);
+            level_outputs.push(t);
+        }
+        if level_outputs.len() > 1 {
+            // Aggregation node: concat level outputs + 1x1 conv back to c.
+            let cat = b.concat(level_outputs);
+            t = b.conv(cat, c, 1, 1, Padding::Same);
+            t = b.relu(t);
+        }
+    }
+    let out = b.head(t, 1000);
+    b.finish(vec![out])
+}
+
+/// HarDNet [9]: harmonic dense blocks — each layer concatenates a
+/// power-of-two pattern of predecessors.
+pub fn hardnet(depth: usize) -> Graph {
+    let (stages, k): (Vec<usize>, usize) = match depth {
+        39 => (vec![4, 4, 8, 4], 20),
+        68 => (vec![8, 8, 12, 8], 24),
+        other => panic!("unsupported hardnet depth {other}"),
+    };
+    let mut b = GraphBuilder::new(&format!("hardnet{depth}"), 224, 224, 3);
+    let x = b.input_tensor();
+    let mut t = b.conv(x, 48, 3, 2, Padding::Same);
+    t = b.relu(t);
+    t = b.max_pool(t, 3, 2);
+    for (si, &n) in stages.iter().enumerate() {
+        let mut outs: Vec<TensorId> = vec![t];
+        for i in 1..=n {
+            // Harmonic connection pattern: link to outs[i - 2^j] for 2^j | i.
+            let mut links: Vec<TensorId> = Vec::new();
+            let mut p = 1usize;
+            while p <= i {
+                if i % p == 0 {
+                    links.push(outs[i - p]);
+                }
+                p *= 2;
+            }
+            let inp = if links.len() > 1 {
+                b.concat(links)
+            } else {
+                links[0]
+            };
+            let y = b.conv(inp, k * (si + 1), 3, 1, Padding::Same);
+            let y = b.relu(y);
+            outs.push(y);
+        }
+        let cat = b.concat(outs.split_off(outs.len().saturating_sub(3)));
+        t = b.conv(cat, 128 * (si + 1), 1, 1, Padding::Same);
+        t = b.relu(t);
+        if si < stages.len() - 1 {
+            t = b.avg_pool(t, 2, 2);
+        }
+    }
+    let out = b.head(t, 1000);
+    b.finish(vec![out])
+}
+
+/// VoVNet [35]: one-shot aggregation (OSA) modules.
+pub fn vovnet(variant: &str) -> Graph {
+    let (stage_convs, stage_c, agg_c): (usize, Vec<usize>, Vec<usize>) = match variant {
+        "27slim" => (5, vec![64, 80, 96, 112], vec![128, 256, 384, 512]),
+        "39" => (5, vec![128, 160, 192, 224], vec![256, 512, 768, 1024]),
+        other => panic!("unsupported vovnet variant {other}"),
+    };
+    let mut b = GraphBuilder::new(&format!("vovnet{variant}"), 224, 224, 3);
+    let x = b.input_tensor();
+    let mut t = b.conv(x, 64, 3, 2, Padding::Same);
+    t = b.relu(t);
+    t = b.conv(t, 64, 3, 1, Padding::Same);
+    t = b.relu(t);
+    for si in 0..4 {
+        if si > 0 {
+            t = b.max_pool(t, 3, 2);
+        }
+        let mut outs: Vec<TensorId> = vec![t];
+        let mut cur = t;
+        for _ in 0..stage_convs {
+            cur = b.conv(cur, stage_c[si], 3, 1, Padding::Same);
+            cur = b.relu(cur);
+            outs.push(cur);
+        }
+        let cat = b.concat(outs);
+        t = b.conv(cat, agg_c[si], 1, 1, Padding::Same);
+        t = b.relu(t);
+    }
+    let out = b.head(t, 1000);
+    b.finish(vec![out])
+}
+
+/// BN-Inception [30]: inception modules with 1x1 / 3x3 / double-3x3 / pool
+/// branches.
+pub fn bn_inception() -> Graph {
+    let mut b = GraphBuilder::new("bninception", 224, 224, 3);
+    let x = b.input_tensor();
+    let mut t = b.conv(x, 64, 7, 2, Padding::Same);
+    t = b.relu(t);
+    t = b.max_pool(t, 3, 2);
+    t = b.conv(t, 64, 1, 1, Padding::Same);
+    t = b.relu(t);
+    t = b.conv(t, 192, 3, 1, Padding::Same);
+    t = b.relu(t);
+    t = b.max_pool(t, 3, 2);
+    // (b1x1, b3x3_reduce, b3x3, db3x3_reduce, db3x3, pool_proj, stride)
+    let cfg: &[(usize, usize, usize, usize, usize, usize, usize)] = &[
+        (64, 64, 64, 64, 96, 32, 1),
+        (64, 64, 96, 64, 96, 64, 1),
+        (0, 128, 160, 64, 96, 0, 2),
+        (224, 64, 96, 96, 128, 128, 1),
+        (192, 96, 128, 96, 128, 128, 1),
+        (160, 128, 160, 128, 160, 96, 1),
+        (96, 128, 192, 160, 192, 96, 1),
+        (0, 128, 192, 192, 256, 0, 2),
+        (352, 192, 320, 160, 224, 128, 1),
+        (352, 192, 320, 192, 224, 128, 1),
+    ];
+    for &(b1, r3, c3, rd3, cd3, pp, s) in cfg {
+        t = inception_block(&mut b, t, b1, r3, c3, rd3, cd3, pp, s);
+    }
+    let out = b.head(t, 1000);
+    b.finish(vec![out])
+}
+
+#[allow(clippy::too_many_arguments)]
+fn inception_block(
+    b: &mut GraphBuilder,
+    x: TensorId,
+    b1: usize,
+    r3: usize,
+    c3: usize,
+    rd3: usize,
+    cd3: usize,
+    pp: usize,
+    stride: usize,
+) -> TensorId {
+    let mut branches: Vec<TensorId> = Vec::new();
+    if b1 > 0 {
+        let t = b.conv(x, b1, 1, 1, Padding::Same);
+        branches.push(b.relu(t));
+    }
+    {
+        let t = b.conv(x, r3, 1, 1, Padding::Same);
+        let t = b.relu(t);
+        let t = b.conv(t, c3, 3, stride, Padding::Same);
+        branches.push(b.relu(t));
+    }
+    {
+        let t = b.conv(x, rd3, 1, 1, Padding::Same);
+        let t = b.relu(t);
+        let t = b.conv(t, cd3, 3, 1, Padding::Same);
+        let t = b.relu(t);
+        let t = b.conv(t, cd3, 3, stride, Padding::Same);
+        branches.push(b.relu(t));
+    }
+    {
+        let t = if stride == 1 {
+            b.avg_pool(x, 3, 1)
+        } else {
+            b.max_pool(x, 3, 2)
+        };
+        if pp > 0 {
+            let t = b.conv(t, pp, 1, 1, Padding::Same);
+            branches.push(b.relu(t));
+        } else {
+            branches.push(t);
+        }
+    }
+    b.concat(branches)
+}
+
+/// HRNet-small [53] (v1/v2): two parallel resolution branches with stride-2
+/// exchange units (upsampling substituted as documented in the module docs).
+pub fn hrnet_small(v2: bool) -> Graph {
+    let name = if v2 { "hrnet_w18_small_v2" } else { "hrnet_w18_small_v1" };
+    let mut b = GraphBuilder::new(name, 224, 224, 3);
+    let x = b.input_tensor();
+    let mut hi = b.conv(x, 64, 3, 2, Padding::Same);
+    hi = b.relu(hi);
+    hi = b.conv(hi, 64, 3, 2, Padding::Same);
+    hi = b.relu(hi);
+    let blocks = if v2 { 3 } else { 2 };
+    // Branch channels: hi-res 18, lo-res 36.
+    hi = b.res_basic(hi, 18, 1);
+    let mut lo = b.conv(hi, 36, 3, 2, Padding::Same);
+    lo = b.relu(lo);
+    for _ in 0..blocks {
+        hi = b.res_basic(hi, 18, 1);
+        lo = b.res_basic(lo, 36, 1);
+        // Exchange: hi->lo via stride-2 conv, fused into lo by addition.
+        let down = b.conv(hi, 36, 3, 2, Padding::Same);
+        lo = b.add_t(lo, down);
+    }
+    // Head: downsample hi to lo resolution, concat, classify.
+    let hi_down = b.conv(hi, 36, 3, 2, Padding::Same);
+    let cat = b.concat(vec![hi_down, lo]);
+    let t = b.conv(cat, 512, 1, 1, Padding::Same);
+    let t = b.relu(t);
+    let out = b.head(t, 1000);
+    b.finish(vec![out])
+}
+
+/// A few architectures include explicit PAD ops before strided convolutions
+/// (TFLite inserts these for SAME padding with stride > 1 on some convertors).
+/// This helper graph family exercises Pad in the dataset.
+pub fn padded_resnet10() -> Graph {
+    let mut b = GraphBuilder::new("resnet10_padded", 224, 224, 3);
+    let x = b.input_tensor();
+    let p = b.pad(x, 3);
+    let mut t = b.conv(p, 64, 7, 2, Padding::Valid);
+    t = b.relu(t);
+    t = b.max_pool(t, 3, 2);
+    for (c, s) in [(64, 1), (128, 2), (256, 2), (512, 2)] {
+        let pd = b.pad(t, 1);
+        let in_c = b.shape(t).c;
+        let y = b.conv(pd, c, 3, s, Padding::Valid);
+        let y = b.relu(y);
+        let y = b.conv(y, c, 3, 1, Padding::Same);
+        let short = if s != 1 || in_c != c {
+            b.conv(t, c, 1, s, Padding::Same)
+        } else {
+            t
+        };
+        t = b.ew(EwKind::Add, y, short);
+        t = b.relu(t);
+    }
+    let out = b.head(t, 1000);
+    b.finish(vec![out])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::OpType;
+
+    #[test]
+    fn squeezenet_fire_concats() {
+        let g = squeezenet(true, false);
+        g.validate().unwrap();
+        assert_eq!(g.op_type_histogram()[&OpType::ConcatSplit], 8);
+        let p = g.params();
+        assert!((900_000..1_800_000).contains(&p), "params={p}");
+    }
+
+    #[test]
+    fn squeezeresnet_has_adds() {
+        let g = squeezenet(true, true);
+        assert!(g.op_type_histogram().contains_key(&OpType::ElementWise));
+    }
+
+    #[test]
+    fn shufflenet_split_concat_units() {
+        let g = shufflenet_v2(1.0);
+        g.validate().unwrap();
+        let h = g.op_type_histogram();
+        // 13 non-downsample units have a split; every unit has a concat.
+        assert!(h[&OpType::ConcatSplit] >= 26, "{h:?}");
+    }
+
+    #[test]
+    fn densenet_channel_growth() {
+        let g = densenet("121");
+        g.validate().unwrap();
+        let p = g.params();
+        assert!((6_000_000..10_000_000).contains(&p), "params={p}");
+    }
+
+    #[test]
+    fn all_misc_validate() {
+        for g in [
+            squeezenet(false, false),
+            squeezenet(false, true),
+            peleenet(1.0),
+            dla(34),
+            dla(46),
+            hardnet(39),
+            hardnet(68),
+            vovnet("27slim"),
+            vovnet("39"),
+            bn_inception(),
+            hrnet_small(false),
+            hrnet_small(true),
+            padded_resnet10(),
+        ] {
+            g.validate().unwrap_or_else(|e| panic!("{}: {e}", g.name));
+        }
+    }
+
+    #[test]
+    fn padded_variant_has_pad_ops() {
+        let g = padded_resnet10();
+        assert!(g.op_type_histogram()[&OpType::Pad] >= 5);
+    }
+}

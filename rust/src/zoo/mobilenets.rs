@@ -1,0 +1,553 @@
+//! The inverted-residual family of real-world architectures: MobileNet
+//! V1/V2/V3, FD-MobileNet, MnasNet, EfficientNet, ProxylessNAS, SPNASNet,
+//! FBNet and GhostNet. Structures follow the original papers (and the
+//! imgclsmob reference implementations the paper profiled), with batch-norm
+//! folded into the preceding convolution, as TFLite does at conversion time.
+
+use crate::graph::{ActKind, Graph, GraphBuilder, Padding};
+
+/// Scale a channel count by a width multiplier, rounding to a multiple of 8
+/// (the divisor used by the official MobileNet implementations).
+pub fn scale_c(base: usize, w: f64) -> usize {
+    let v = (base as f64 * w).round() as usize;
+    ((v + 4) / 8 * 8).max(8)
+}
+
+/// MobileNetV1 [26]: 3x3 stem + 13 depthwise-separable blocks.
+pub fn mobilenet_v1(width: f64) -> Graph {
+    let name = format!("mobilenet_wd{}", (width * 100.0) as usize);
+    let mut b = GraphBuilder::new(&name, 224, 224, 3);
+    let x = b.input_tensor();
+    let mut t = b.conv_act(x, scale_c(32, width), 3, 2, ActKind::Relu);
+    let cfg: &[(usize, usize)] = &[
+        (64, 1),
+        (128, 2),
+        (128, 1),
+        (256, 2),
+        (256, 1),
+        (512, 2),
+        (512, 1),
+        (512, 1),
+        (512, 1),
+        (512, 1),
+        (512, 1),
+        (1024, 2),
+        (1024, 1),
+    ];
+    for &(c, s) in cfg {
+        t = b.dw_separable(t, scale_c(c, width), 3, s, ActKind::Relu);
+    }
+    let out = b.head(t, 1000);
+    b.finish(vec![out])
+}
+
+/// FD-MobileNet [44]: fast-downsampling MobileNet — reaches 7x7 early.
+pub fn fd_mobilenet(width: f64) -> Graph {
+    let name = format!("fdmobilenet_wd{}", (width * 100.0) as usize);
+    let mut b = GraphBuilder::new(&name, 224, 224, 3);
+    let x = b.input_tensor();
+    let mut t = b.conv_act(x, scale_c(32, width), 3, 2, ActKind::Relu);
+    let cfg: &[(usize, usize)] = &[
+        (64, 2),
+        (128, 2),
+        (128, 1),
+        (256, 2),
+        (256, 1),
+        (512, 2),
+        (512, 1),
+        (512, 1),
+        (512, 1),
+        (512, 1),
+        (512, 1),
+        (1024, 1),
+    ];
+    for &(c, s) in cfg {
+        t = b.dw_separable(t, scale_c(c, width), 3, s, ActKind::Relu);
+    }
+    let out = b.head(t, 1000);
+    b.finish(vec![out])
+}
+
+/// MobileNetV2 [46]: linear bottlenecks with expansion 6.
+pub fn mobilenet_v2(width: f64) -> Graph {
+    let name = format!("mobilenetv2_wd{}", (width * 100.0) as usize);
+    let mut b = GraphBuilder::new(&name, 224, 224, 3);
+    let x = b.input_tensor();
+    let mut t = b.conv_act(x, scale_c(32, width), 3, 2, ActKind::Relu6);
+    // (expansion, out_c, repeats, first stride)
+    let cfg: &[(usize, usize, usize, usize)] = &[
+        (1, 16, 1, 1),
+        (6, 24, 2, 2),
+        (6, 32, 3, 2),
+        (6, 64, 4, 2),
+        (6, 96, 3, 1),
+        (6, 160, 3, 2),
+        (6, 320, 1, 1),
+    ];
+    for &(e, c, n, s) in cfg {
+        for i in 0..n {
+            let stride = if i == 0 { s } else { 1 };
+            t = b.inverted_residual(t, scale_c(c, width), 3, stride, e, false, ActKind::Relu6);
+        }
+    }
+    let last = if width > 1.0 { scale_c(1280, width) } else { 1280 };
+    t = b.conv_act(t, last, 1, 1, ActKind::Relu6);
+    let out = b.head(t, 1000);
+    b.finish(vec![out])
+}
+
+/// MobileNetV3-Large [25]: mixed ReLU/h-swish, selective SE.
+pub fn mobilenet_v3_large(width: f64) -> Graph {
+    let name = format!("mobilenetv3_large_w{}", (width * 100.0) as usize);
+    let mut b = GraphBuilder::new(&name, 224, 224, 3);
+    let x = b.input_tensor();
+    let mut t = b.conv_act(x, scale_c(16, width), 3, 2, ActKind::HSwish);
+    // (kernel, expansion ratio x100, out_c, SE, act, stride)
+    let cfg: &[(usize, usize, usize, bool, ActKind, usize)] = &[
+        (3, 100, 16, false, ActKind::Relu, 1),
+        (3, 400, 24, false, ActKind::Relu, 2),
+        (3, 300, 24, false, ActKind::Relu, 1),
+        (5, 300, 40, true, ActKind::Relu, 2),
+        (5, 300, 40, true, ActKind::Relu, 1),
+        (5, 300, 40, true, ActKind::Relu, 1),
+        (3, 600, 80, false, ActKind::HSwish, 2),
+        (3, 250, 80, false, ActKind::HSwish, 1),
+        (3, 230, 80, false, ActKind::HSwish, 1),
+        (3, 230, 80, false, ActKind::HSwish, 1),
+        (3, 600, 112, true, ActKind::HSwish, 1),
+        (3, 600, 112, true, ActKind::HSwish, 1),
+        (5, 600, 160, true, ActKind::HSwish, 2),
+        (5, 600, 160, true, ActKind::HSwish, 1),
+        (5, 600, 160, true, ActKind::HSwish, 1),
+    ];
+    for &(k, e100, c, se, act, s) in cfg {
+        t = mbv3_block(&mut b, t, k, e100, scale_c(c, width), se, act, s);
+    }
+    t = b.conv_act(t, scale_c(960, width), 1, 1, ActKind::HSwish);
+    let out = b.head(t, 1000);
+    b.finish(vec![out])
+}
+
+/// MobileNetV3-Small [25].
+pub fn mobilenet_v3_small(width: f64) -> Graph {
+    let name = format!("mobilenetv3_small_w{}", (width * 100.0) as usize);
+    let mut b = GraphBuilder::new(&name, 224, 224, 3);
+    let x = b.input_tensor();
+    let mut t = b.conv_act(x, scale_c(16, width), 3, 2, ActKind::HSwish);
+    let cfg: &[(usize, usize, usize, bool, ActKind, usize)] = &[
+        (3, 100, 16, true, ActKind::Relu, 2),
+        (3, 450, 24, false, ActKind::Relu, 2),
+        (3, 367, 24, false, ActKind::Relu, 1),
+        (5, 400, 40, true, ActKind::HSwish, 2),
+        (5, 600, 40, true, ActKind::HSwish, 1),
+        (5, 600, 40, true, ActKind::HSwish, 1),
+        (5, 300, 48, true, ActKind::HSwish, 1),
+        (5, 300, 48, true, ActKind::HSwish, 1),
+        (5, 600, 96, true, ActKind::HSwish, 2),
+        (5, 600, 96, true, ActKind::HSwish, 1),
+        (5, 600, 96, true, ActKind::HSwish, 1),
+    ];
+    for &(k, e100, c, se, act, s) in cfg {
+        t = mbv3_block(&mut b, t, k, e100, scale_c(c, width), se, act, s);
+    }
+    t = b.conv_act(t, scale_c(576, width), 1, 1, ActKind::HSwish);
+    let out = b.head(t, 1000);
+    b.finish(vec![out])
+}
+
+/// MobileNetV3 building block with percentage expansion ratios.
+#[allow(clippy::too_many_arguments)]
+fn mbv3_block(
+    b: &mut GraphBuilder,
+    x: usize,
+    k: usize,
+    e100: usize,
+    out_c: usize,
+    se: bool,
+    act: ActKind,
+    stride: usize,
+) -> usize {
+    let in_c = b.shape(x).c;
+    let mid = ((in_c * e100 + 50) / 100).max(8);
+    let mut t = x;
+    if mid != in_c {
+        t = b.conv_act(t, mid, 1, 1, act);
+    }
+    t = b.dwconv(t, k, stride);
+    t = b.act(t, act);
+    if se {
+        t = b.se_block(t, 4);
+    }
+    t = b.conv(t, out_c, 1, 1, Padding::Same);
+    if stride == 1 && in_c == out_c {
+        t = b.add_t(x, t);
+    }
+    t
+}
+
+/// MnasNet [49]: A1 (with SE), B1 (no SE), Small.
+pub fn mnasnet(variant: &str) -> Graph {
+    let mut b = GraphBuilder::new(&format!("mnasnet_{variant}"), 224, 224, 3);
+    let x = b.input_tensor();
+    // (kernel, expansion, out_c, repeats, stride, SE)
+    let cfg: Vec<(usize, usize, usize, usize, usize, bool)> = match variant {
+        "a1" => vec![
+            (3, 1, 16, 1, 1, false),
+            (3, 6, 24, 2, 2, false),
+            (5, 3, 40, 3, 2, true),
+            (3, 6, 80, 4, 2, false),
+            (3, 6, 112, 2, 1, true),
+            (5, 6, 160, 3, 2, true),
+            (3, 6, 320, 1, 1, false),
+        ],
+        "b1" => vec![
+            (3, 1, 16, 1, 1, false),
+            (3, 3, 24, 3, 2, false),
+            (5, 3, 40, 3, 2, false),
+            (5, 6, 80, 3, 2, false),
+            (3, 6, 96, 2, 1, false),
+            (5, 6, 192, 4, 2, false),
+            (3, 6, 320, 1, 1, false),
+        ],
+        "small" => vec![
+            (3, 1, 8, 1, 1, false),
+            (3, 3, 16, 1, 2, false),
+            (3, 6, 16, 2, 2, false),
+            (5, 6, 32, 4, 2, true),
+            (3, 6, 32, 3, 1, true),
+            (5, 6, 88, 3, 2, true),
+            (3, 6, 144, 1, 1, false),
+        ],
+        other => panic!("unknown mnasnet variant {other}"),
+    };
+    let mut t = b.conv_act(x, 32, 3, 2, ActKind::Relu);
+    for (k, e, c, n, s, se) in cfg {
+        for i in 0..n {
+            let stride = if i == 0 { s } else { 1 };
+            t = b.inverted_residual(t, c, k, stride, e, se, ActKind::Relu);
+        }
+    }
+    t = b.conv_act(t, 1280, 1, 1, ActKind::Relu);
+    let out = b.head(t, 1000);
+    b.finish(vec![out])
+}
+
+/// EfficientNet [50] B0-B2 via compound scaling of MBConv stages.
+pub fn efficientnet(variant: &str) -> Graph {
+    let (wmul, dmul, res) = match variant {
+        "b0" => (1.0, 1.0, 224),
+        "b1" => (1.0, 1.1, 240),
+        "b2" => (1.1, 1.2, 260),
+        other => panic!("unknown efficientnet variant {other}"),
+    };
+    let mut b = GraphBuilder::new(&format!("efficientnet_{variant}"), res, res, 3);
+    let x = b.input_tensor();
+    let depth = |n: usize| -> usize { ((n as f64 * dmul).ceil()) as usize };
+    let mut t = b.conv_act(x, scale_c(32, wmul), 3, 2, ActKind::Swish);
+    // (kernel, expansion, out_c, repeats, stride) — SE everywhere in EfficientNet.
+    let cfg: &[(usize, usize, usize, usize, usize)] = &[
+        (3, 1, 16, 1, 1),
+        (3, 6, 24, 2, 2),
+        (5, 6, 40, 2, 2),
+        (3, 6, 80, 3, 2),
+        (5, 6, 112, 3, 1),
+        (5, 6, 192, 4, 2),
+        (3, 6, 320, 1, 1),
+    ];
+    for &(k, e, c, n, s) in cfg {
+        for i in 0..depth(n) {
+            let stride = if i == 0 { s } else { 1 };
+            t = b.inverted_residual(t, scale_c(c, wmul), k, stride, e, true, ActKind::Swish);
+        }
+    }
+    t = b.conv_act(t, scale_c(1280, wmul), 1, 1, ActKind::Swish);
+    let out = b.head(t, 1000);
+    b.finish(vec![out])
+}
+
+/// ProxylessNAS [8]: per-target searched MBConv stacks (kernel 3/5/7 mix).
+pub fn proxylessnas(target: &str) -> Graph {
+    let mut b = GraphBuilder::new(&format!("proxylessnas_{target}"), 224, 224, 3);
+    let x = b.input_tensor();
+    let mut t = b.conv_act(x, 32, 3, 2, ActKind::Relu6);
+    // (kernel, expansion, out_c, stride) flattened block list per target.
+    let cfg: Vec<(usize, usize, usize, usize)> = match target {
+        "cpu" => vec![
+            (3, 1, 24, 1),
+            (3, 6, 32, 2),
+            (3, 3, 32, 1),
+            (3, 3, 32, 1),
+            (3, 6, 48, 2),
+            (3, 3, 48, 1),
+            (5, 3, 48, 1),
+            (3, 6, 88, 2),
+            (3, 3, 88, 1),
+            (5, 3, 104, 1),
+            (3, 3, 104, 1),
+            (3, 3, 104, 1),
+            (5, 6, 216, 2),
+            (5, 3, 216, 1),
+            (5, 3, 216, 1),
+            (5, 6, 360, 1),
+        ],
+        "gpu" => vec![
+            (3, 1, 24, 1),
+            (5, 3, 40, 2),
+            (7, 3, 56, 2),
+            (3, 3, 56, 1),
+            (7, 6, 112, 2),
+            (5, 3, 112, 1),
+            (5, 3, 128, 1),
+            (3, 3, 128, 1),
+            (7, 6, 256, 2),
+            (7, 6, 256, 1),
+            (7, 3, 256, 1),
+            (5, 6, 432, 1),
+        ],
+        "mobile" => vec![
+            (3, 1, 16, 1),
+            (5, 3, 32, 2),
+            (3, 3, 32, 1),
+            (7, 3, 40, 2),
+            (3, 3, 40, 1),
+            (5, 6, 80, 2),
+            (5, 3, 80, 1),
+            (5, 3, 80, 1),
+            (5, 3, 96, 1),
+            (5, 3, 96, 1),
+            (7, 6, 192, 2),
+            (7, 6, 192, 1),
+            (7, 3, 192, 1),
+            (7, 6, 320, 1),
+        ],
+        other => panic!("unknown proxylessnas target {other}"),
+    };
+    for (k, e, c, s) in cfg {
+        t = b.inverted_residual(t, c, k, s, e, false, ActKind::Relu6);
+    }
+    t = b.conv_act(t, 1280, 1, 1, ActKind::Relu6);
+    let out = b.head(t, 1000);
+    b.finish(vec![out])
+}
+
+/// Single-Path NAS [47].
+pub fn spnasnet(width: f64) -> Graph {
+    let name = format!("spnasnet_w{}", (width * 100.0) as usize);
+    let mut b = GraphBuilder::new(&name, 224, 224, 3);
+    let x = b.input_tensor();
+    let mut t = b.conv_act(x, scale_c(32, width), 3, 2, ActKind::Relu);
+    let cfg: &[(usize, usize, usize, usize, usize)] = &[
+        (3, 1, 16, 1, 1),
+        (3, 3, 24, 3, 2),
+        (5, 3, 40, 4, 2),
+        (5, 6, 80, 4, 2),
+        (5, 6, 96, 4, 1),
+        (5, 6, 192, 4, 2),
+        (3, 6, 320, 1, 1),
+    ];
+    for &(k, e, c, n, s) in cfg {
+        for i in 0..n {
+            let stride = if i == 0 { s } else { 1 };
+            t = b.inverted_residual(t, scale_c(c, width), k, stride, e, false, ActKind::Relu);
+        }
+    }
+    t = b.conv_act(t, 1280, 1, 1, ActKind::Relu);
+    let out = b.head(t, 1000);
+    b.finish(vec![out])
+}
+
+/// FBNet-C [56].
+pub fn fbnet_c(width: f64) -> Graph {
+    let name = format!("fbnet_cb_w{}", (width * 100.0) as usize);
+    let mut b = GraphBuilder::new(&name, 224, 224, 3);
+    let x = b.input_tensor();
+    let mut t = b.conv_act(x, scale_c(16, width), 3, 2, ActKind::Relu);
+    let cfg: &[(usize, usize, usize, usize)] = &[
+        (3, 1, 16, 1),
+        (3, 6, 24, 2),
+        (3, 1, 24, 1),
+        (3, 1, 24, 1),
+        (5, 6, 32, 2),
+        (5, 3, 32, 1),
+        (3, 6, 32, 1),
+        (5, 6, 64, 2),
+        (5, 3, 64, 1),
+        (5, 6, 64, 1),
+        (3, 6, 112, 1),
+        (5, 6, 112, 1),
+        (5, 3, 112, 1),
+        (5, 6, 184, 2),
+        (5, 6, 184, 1),
+        (5, 6, 184, 1),
+        (3, 6, 352, 1),
+    ];
+    for &(k, e, c, s) in cfg {
+        t = b.inverted_residual(t, scale_c(c, width), k, s, e, false, ActKind::Relu);
+    }
+    t = b.conv_act(t, 1984, 1, 1, ActKind::Relu);
+    let out = b.head(t, 1000);
+    b.finish(vec![out])
+}
+
+/// GhostNet [22]: ghost modules = primary 1x1 conv producing half the
+/// channels + cheap depthwise producing the other half, concatenated.
+pub fn ghostnet(width: f64) -> Graph {
+    let name = format!("ghostnet_w{}", (width * 100.0) as usize);
+    let mut b = GraphBuilder::new(&name, 224, 224, 3);
+    let x = b.input_tensor();
+    let mut t = b.conv_act(x, scale_c(16, width), 3, 2, ActKind::Relu);
+    // (kernel, mid_c, out_c, SE, stride)
+    let cfg: &[(usize, usize, usize, bool, usize)] = &[
+        (3, 16, 16, false, 1),
+        (3, 48, 24, false, 2),
+        (3, 72, 24, false, 1),
+        (5, 72, 40, true, 2),
+        (5, 120, 40, true, 1),
+        (3, 240, 80, false, 2),
+        (3, 200, 80, false, 1),
+        (3, 184, 80, false, 1),
+        (3, 184, 80, false, 1),
+        (3, 480, 112, true, 1),
+        (3, 672, 112, true, 1),
+        (5, 672, 160, true, 2),
+        (5, 960, 160, false, 1),
+        (5, 960, 160, true, 1),
+    ];
+    for &(k, mid, c, se, s) in cfg {
+        t = ghost_bottleneck(&mut b, t, k, scale_c(mid, width), scale_c(c, width), se, s);
+    }
+    t = b.conv_act(t, scale_c(960, width), 1, 1, ActKind::Relu);
+    let out = b.head(t, 1000);
+    b.finish(vec![out])
+}
+
+fn ghost_module(b: &mut GraphBuilder, x: usize, out_c: usize, relu: bool) -> usize {
+    let primary = (out_c + 1) / 2;
+    let mut p = b.conv(x, primary, 1, 1, Padding::Same);
+    if relu {
+        p = b.relu(p);
+    }
+    let mut cheap = b.dwconv(p, 3, 1);
+    if relu {
+        cheap = b.relu(cheap);
+    }
+    let cat = b.concat(vec![p, cheap]);
+    // Trim to out_c if odd — our channel counts are even, so concat is exact.
+    debug_assert_eq!(b.shape(cat).c, 2 * primary);
+    cat
+}
+
+fn ghost_bottleneck(
+    b: &mut GraphBuilder,
+    x: usize,
+    k: usize,
+    mid_c: usize,
+    out_c: usize,
+    se: bool,
+    stride: usize,
+) -> usize {
+    let in_c = b.shape(x).c;
+    let mut t = ghost_module(b, x, mid_c, true);
+    if stride == 2 {
+        t = b.dwconv(t, k, 2);
+    }
+    if se {
+        t = b.se_block(t, 4);
+    }
+    t = ghost_module(b, t, out_c, false);
+    let t_c = b.shape(t).c;
+    if stride == 1 && in_c == t_c {
+        b.add_t(x, t)
+    } else {
+        // Shortcut: dwconv + 1x1 conv to match.
+        let s = b.dwconv(x, k, stride);
+        let s = b.conv(s, t_c, 1, 1, Padding::Same);
+        b.add_t(s, t)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::OpType;
+
+    #[test]
+    fn mobilenet_v1_structure() {
+        let g = mobilenet_v1(1.0);
+        g.validate().unwrap();
+        let h = g.op_type_histogram();
+        assert_eq!(h[&OpType::DepthwiseConv2D], 13);
+        // 13 pointwise convs + stem
+        assert_eq!(h[&OpType::Conv2D], 14);
+        // ~4.2M params at width 1.0
+        let p = g.params();
+        assert!((3_000_000..6_000_000).contains(&p), "params={p}");
+    }
+
+    #[test]
+    fn mobilenet_v1_width_monotonic() {
+        let p25 = mobilenet_v1(0.25).params();
+        let p50 = mobilenet_v1(0.5).params();
+        let p100 = mobilenet_v1(1.0).params();
+        assert!(p25 < p50 && p50 < p100);
+    }
+
+    #[test]
+    fn mobilenet_v2_params_in_range() {
+        let g = mobilenet_v2(1.0);
+        g.validate().unwrap();
+        let p = g.params();
+        assert!((2_500_000..4_500_000).contains(&p), "params={p}");
+    }
+
+    #[test]
+    fn mobilenet_v3_has_se_and_hswish() {
+        let g = mobilenet_v3_large(1.0);
+        g.validate().unwrap();
+        assert!(g.nodes.iter().any(|n| matches!(
+            n.op,
+            crate::graph::Op::Activation { kind: ActKind::HSwish }
+        )));
+        assert!(g.nodes.iter().any(|n| matches!(
+            n.op,
+            crate::graph::Op::Activation { kind: ActKind::Sigmoid }
+        )));
+    }
+
+    #[test]
+    fn efficientnet_scales_up() {
+        let b0 = efficientnet("b0");
+        let b2 = efficientnet("b2");
+        assert!(b2.flops() > b0.flops());
+        assert!(b2.params() > b0.params());
+    }
+
+    #[test]
+    fn ghostnet_has_concats() {
+        let g = ghostnet(1.0);
+        g.validate().unwrap();
+        assert!(g.op_type_histogram()[&OpType::ConcatSplit] >= 20);
+    }
+
+    #[test]
+    fn all_families_validate() {
+        for g in [
+            mobilenet_v1(0.25),
+            fd_mobilenet(0.5),
+            mobilenet_v2(0.75),
+            mobilenet_v3_small(1.0),
+            mnasnet("a1"),
+            mnasnet("b1"),
+            mnasnet("small"),
+            efficientnet("b1"),
+            proxylessnas("cpu"),
+            proxylessnas("gpu"),
+            proxylessnas("mobile"),
+            spnasnet(1.0),
+            fbnet_c(1.0),
+            ghostnet(0.5),
+        ] {
+            g.validate().unwrap_or_else(|e| panic!("{}: {e}", g.name));
+        }
+    }
+}

@@ -1,0 +1,397 @@
+//! The residual family: ResNet (incl. reduced-depth/width variants used on
+//! mobile), PreResNet, SE-ResNet/SE-PreResNet, ResNeXt, RegNetX (grouped
+//! convolutions), DiracNetV2 (residual-free) and BagNet (small receptive
+//! fields). ResNet16 here is the network whose three convolutions appear in
+//! Table 2 of the paper (Winograd applicability).
+
+use crate::graph::{Graph, GraphBuilder, Padding};
+use crate::zoo::mobilenets::scale_c;
+
+/// Stage plan per imgclsmob-style reduced ResNets.
+fn resnet_stages(depth: usize) -> (Vec<usize>, bool) {
+    // (blocks per stage, bottleneck?)
+    match depth {
+        10 => (vec![1, 1, 1, 1], false),
+        12 => (vec![2, 1, 1, 1], false),
+        14 => (vec![2, 2, 1, 1], false),
+        16 => (vec![2, 2, 2, 1], false),
+        18 => (vec![2, 2, 2, 2], false),
+        26 => (vec![2, 2, 2, 2], true),
+        34 => (vec![3, 4, 6, 3], false),
+        50 => (vec![3, 4, 6, 3], true),
+        other => panic!("unsupported resnet depth {other}"),
+    }
+}
+
+/// ResNet [23] with optional width scale (the paper's mobile study includes
+/// width-scaled variants, e.g. ResNet18 at 0.25).
+pub fn resnet(depth: usize, width: f64) -> Graph {
+    let name = if (width - 1.0).abs() < 1e-9 {
+        format!("resnet{depth}")
+    } else {
+        format!("resnet{depth}_wd{}", (width * 100.0) as usize)
+    };
+    let (stages, bottleneck) = resnet_stages(depth);
+    let mut b = GraphBuilder::new(&name, 224, 224, 3);
+    let x = b.input_tensor();
+    let mut t = b.conv(x, scale_c(64, width), 7, 2, Padding::Same);
+    t = b.relu(t);
+    t = b.max_pool(t, 3, 2);
+    let base = [64usize, 128, 256, 512];
+    for (si, &n) in stages.iter().enumerate() {
+        let c = scale_c(base[si], width);
+        for i in 0..n {
+            let stride = if si > 0 && i == 0 { 2 } else { 1 };
+            t = if bottleneck {
+                b.res_bottleneck(t, c, c * 4, stride, 1, false)
+            } else {
+                b.res_basic(t, c, stride)
+            };
+        }
+    }
+    let out = b.head(t, 1000);
+    b.finish(vec![out])
+}
+
+/// PreResNet [24]: pre-activation ordering — activation precedes each conv.
+pub fn preresnet(depth: usize) -> Graph {
+    let (stages, bottleneck) = resnet_stages(depth);
+    let mut b = GraphBuilder::new(&format!("preresnet{depth}"), 224, 224, 3);
+    let x = b.input_tensor();
+    let mut t = b.conv(x, 64, 7, 2, Padding::Same);
+    t = b.relu(t);
+    t = b.max_pool(t, 3, 2);
+    let base = [64usize, 128, 256, 512];
+    for (si, &n) in stages.iter().enumerate() {
+        let c = base[si];
+        for i in 0..n {
+            let stride = if si > 0 && i == 0 { 2 } else { 1 };
+            t = preres_block(&mut b, t, c, stride, bottleneck);
+        }
+    }
+    t = b.relu(t);
+    let out = b.head(t, 1000);
+    b.finish(vec![out])
+}
+
+fn preres_block(b: &mut GraphBuilder, x: usize, c: usize, stride: usize, bottleneck: bool) -> usize {
+    let in_c = b.shape(x).c;
+    let out_c = if bottleneck { c * 4 } else { c };
+    let pre = b.relu(x);
+    let t = if bottleneck {
+        let t = b.conv(pre, c, 1, 1, Padding::Same);
+        let t = b.relu(t);
+        let t = b.conv(t, c, 3, stride, Padding::Same);
+        let t = b.relu(t);
+        b.conv(t, out_c, 1, 1, Padding::Same)
+    } else {
+        let t = b.conv(pre, c, 3, stride, Padding::Same);
+        let t = b.relu(t);
+        b.conv(t, c, 3, 1, Padding::Same)
+    };
+    let short = if stride != 1 || in_c != out_c {
+        b.conv(pre, out_c, 1, stride, Padding::Same)
+    } else {
+        x
+    };
+    b.add_t(t, short)
+}
+
+/// SE-ResNet [27].
+pub fn se_resnet(depth: usize) -> Graph {
+    let (stages, bottleneck) = resnet_stages(depth);
+    let mut b = GraphBuilder::new(&format!("seresnet{depth}"), 224, 224, 3);
+    let x = b.input_tensor();
+    let mut t = b.conv(x, 64, 7, 2, Padding::Same);
+    t = b.relu(t);
+    t = b.max_pool(t, 3, 2);
+    let base = [64usize, 128, 256, 512];
+    for (si, &n) in stages.iter().enumerate() {
+        let c = base[si];
+        for i in 0..n {
+            let stride = if si > 0 && i == 0 { 2 } else { 1 };
+            t = if bottleneck {
+                b.res_bottleneck(t, c, c * 4, stride, 1, true)
+            } else {
+                // basic block + SE before the residual add
+                let in_c = b.shape(t).c;
+                let y = b.conv(t, c, 3, stride, Padding::Same);
+                let y = b.relu(y);
+                let y = b.conv(y, c, 3, 1, Padding::Same);
+                let y = b.se_block(y, 16);
+                let short = if stride != 1 || in_c != c {
+                    b.conv(t, c, 1, stride, Padding::Same)
+                } else {
+                    t
+                };
+                let y = b.add_t(y, short);
+                b.relu(y)
+            };
+        }
+    }
+    let out = b.head(t, 1000);
+    b.finish(vec![out])
+}
+
+/// SE-PreResNet [27].
+pub fn se_preresnet(depth: usize) -> Graph {
+    let g = preresnet(depth);
+    // Rebuild with SE: simplest faithful approach is a dedicated builder.
+    let (stages, bottleneck) = resnet_stages(depth);
+    let mut b = GraphBuilder::new(&format!("sepreresnet{depth}"), 224, 224, 3);
+    let x = b.input_tensor();
+    let mut t = b.conv(x, 64, 7, 2, Padding::Same);
+    t = b.relu(t);
+    t = b.max_pool(t, 3, 2);
+    let base = [64usize, 128, 256, 512];
+    for (si, &n) in stages.iter().enumerate() {
+        for i in 0..n {
+            let stride = if si > 0 && i == 0 { 2 } else { 1 };
+            let pre_out = preres_block(&mut b, t, base[si], stride, bottleneck);
+            t = b.se_block(pre_out, 16);
+        }
+    }
+    t = b.relu(t);
+    let out = b.head(t, 1000);
+    drop(g);
+    b.finish(vec![out])
+}
+
+/// ResNeXt [58]: bottlenecks with 32-way grouped 3x3 convolutions.
+pub fn resnext(depth: usize) -> Graph {
+    let stages: Vec<usize> = match depth {
+        26 => vec![2, 2, 2, 2],
+        38 => vec![3, 3, 3, 3],
+        other => panic!("unsupported resnext depth {other}"),
+    };
+    let mut b = GraphBuilder::new(&format!("resnext{depth}_32x4d"), 224, 224, 3);
+    let x = b.input_tensor();
+    let mut t = b.conv(x, 64, 7, 2, Padding::Same);
+    t = b.relu(t);
+    t = b.max_pool(t, 3, 2);
+    let base = [128usize, 256, 512, 1024];
+    for (si, &n) in stages.iter().enumerate() {
+        for i in 0..n {
+            let stride = if si > 0 && i == 0 { 2 } else { 1 };
+            t = b.res_bottleneck(t, base[si], base[si] * 2, stride, 32, false);
+        }
+    }
+    let out = b.head(t, 1000);
+    b.finish(vec![out])
+}
+
+/// RegNetX [45]: stages of bottleneck blocks with fixed group width.
+pub fn regnetx(variant: &str) -> Graph {
+    // (stage widths, stage depths, group width) from the RegNetX design space.
+    let (widths, depths, gw): (Vec<usize>, Vec<usize>, usize) = match variant {
+        "002" => (vec![24, 56, 152, 368], vec![1, 1, 4, 7], 8),
+        "004" => (vec![32, 64, 160, 384], vec![1, 2, 7, 12], 16),
+        "006" => (vec![48, 96, 240, 528], vec![1, 3, 5, 7], 24),
+        "008" => (vec![64, 128, 288, 672], vec![1, 3, 7, 5], 16),
+        "016" => (vec![72, 168, 408, 912], vec![2, 4, 10, 2], 24),
+        "032" => (vec![96, 192, 432, 1008], vec![2, 6, 15, 2], 48),
+        other => panic!("unsupported regnetx variant {other}"),
+    };
+    let mut b = GraphBuilder::new(&format!("regnetx{variant}"), 224, 224, 3);
+    let x = b.input_tensor();
+    let mut t = b.conv(x, 32, 3, 2, Padding::Same);
+    t = b.relu(t);
+    for (si, (&w, &d)) in widths.iter().zip(&depths).enumerate() {
+        for i in 0..d {
+            let stride = if i == 0 { 2 } else { 1 };
+            let groups = (w / gw).max(1);
+            t = regnet_block(&mut b, t, w, stride, groups);
+            let _ = si;
+        }
+    }
+    let out = b.head(t, 1000);
+    b.finish(vec![out])
+}
+
+fn regnet_block(b: &mut GraphBuilder, x: usize, w: usize, stride: usize, groups: usize) -> usize {
+    let in_c = b.shape(x).c;
+    let t = b.conv(x, w, 1, 1, Padding::Same);
+    let t = b.relu(t);
+    let t = if groups > 1 {
+        b.grouped_conv(t, w, 3, stride, groups)
+    } else {
+        b.conv(t, w, 3, stride, Padding::Same)
+    };
+    let t = b.relu(t);
+    let t = b.conv(t, w, 1, 1, Padding::Same);
+    let short = if stride != 1 || in_c != w {
+        b.conv(x, w, 1, stride, Padding::Same)
+    } else {
+        x
+    };
+    let t = b.add_t(t, short);
+    b.relu(t)
+}
+
+/// DiracNetV2 [61]: plain (residual-free) deep conv stacks.
+pub fn diracnet_v2(depth: usize) -> Graph {
+    let stages: Vec<usize> = match depth {
+        18 => vec![4, 4, 4, 4],
+        34 => vec![6, 8, 12, 6],
+        other => panic!("unsupported diracnet depth {other}"),
+    };
+    let mut b = GraphBuilder::new(&format!("diracnet{depth}v2"), 224, 224, 3);
+    let x = b.input_tensor();
+    let mut t = b.conv(x, 64, 7, 2, Padding::Same);
+    t = b.relu(t);
+    t = b.max_pool(t, 3, 2);
+    let base = [64usize, 128, 256, 512];
+    for (si, &n) in stages.iter().enumerate() {
+        for _ in 0..n {
+            t = b.conv(t, base[si], 3, 1, Padding::Same);
+            t = b.relu(t);
+        }
+        if si < 3 {
+            t = b.max_pool(t, 2, 2);
+        }
+    }
+    let out = b.head(t, 1000);
+    b.finish(vec![out])
+}
+
+/// BagNet [5]: ResNet50-style bottlenecks where most 3x3s are 1x1s and
+/// convolutions use VALID padding, limiting the receptive field.
+pub fn bagnet(rf: usize) -> Graph {
+    // rf in {9, 17}: number of stages that get a real 3x3.
+    let threes = match rf {
+        9 => 2,
+        17 => 3,
+        other => panic!("unsupported bagnet rf {other}"),
+    };
+    let mut b = GraphBuilder::new(&format!("bagnet{rf}"), 224, 224, 3);
+    let x = b.input_tensor();
+    let mut t = b.conv(x, 64, 1, 1, Padding::Same);
+    t = b.conv(t, 64, 3, 2, Padding::Valid);
+    t = b.relu(t);
+    let stages = [3usize, 4, 6, 3];
+    let base = [64usize, 128, 256, 512];
+    for (si, &n) in stages.iter().enumerate() {
+        for i in 0..n {
+            let stride = if si > 0 && i == 0 { 2 } else { 1 };
+            let k = if i == 0 && si < threes { 3 } else { 1 };
+            t = bagnet_block(&mut b, t, base[si], stride, k);
+        }
+    }
+    let out = b.head(t, 1000);
+    b.finish(vec![out])
+}
+
+fn bagnet_block(b: &mut GraphBuilder, x: usize, c: usize, stride: usize, k: usize) -> usize {
+    let in_c = b.shape(x).c;
+    let out_c = c * 4;
+    let t = b.conv(x, c, 1, 1, Padding::Same);
+    let t = b.relu(t);
+    let t = b.conv(t, c, k, stride, Padding::Same);
+    let t = b.relu(t);
+    let t = b.conv(t, out_c, 1, 1, Padding::Same);
+    let short = if stride != 1 || in_c != out_c {
+        b.conv(x, out_c, 1, stride, Padding::Same)
+    } else {
+        x
+    };
+    let t = b.add_t(t, short);
+    b.relu(t)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::{Op, OpType};
+
+    #[test]
+    fn resnet18_structure() {
+        let g = resnet(18, 1.0);
+        g.validate().unwrap();
+        // 11.7M params canonical
+        let p = g.params();
+        assert!((10_000_000..13_500_000).contains(&p), "params={p}");
+    }
+
+    #[test]
+    fn resnet16_has_table2_convs() {
+        // Table 2 of the paper: ResNet16 contains 3x3/stride-1/group-1 convs
+        // with (in=64,out=64,out_h=56), (128,128,28), (256,256,14).
+        let g = resnet(16, 1.0);
+        let mut found = [false; 3];
+        for n in &g.nodes {
+            if let Op::Conv2D { kh: 3, kw: 3, stride: 1, groups: 1, out_c, .. } = n.op {
+                let i = g.shape(n.inputs[0]);
+                let o = g.shape(n.outputs[0]);
+                if i.c == 64 && out_c == 64 && o.h == 56 {
+                    found[0] = true;
+                }
+                if i.c == 128 && out_c == 128 && o.h == 28 {
+                    found[1] = true;
+                }
+                if i.c == 256 && out_c == 256 && o.h == 14 {
+                    found[2] = true;
+                }
+            }
+        }
+        assert_eq!(found, [true; 3], "ResNet16 missing Table 2 convolutions");
+    }
+
+    #[test]
+    fn width_scaling_reduces_params() {
+        assert!(resnet(18, 0.25).params() < resnet(18, 1.0).params() / 8);
+    }
+
+    #[test]
+    fn resnext_uses_grouped_convs() {
+        let g = resnext(26);
+        g.validate().unwrap();
+        assert!(g.op_type_histogram()[&OpType::GroupedConv2D] >= 8);
+    }
+
+    #[test]
+    fn regnetx_group_widths() {
+        let g = regnetx("004");
+        g.validate().unwrap();
+        let grouped = g
+            .nodes
+            .iter()
+            .filter_map(|n| match n.op {
+                Op::Conv2D { groups, .. } if groups > 1 => Some(groups),
+                _ => None,
+            })
+            .count();
+        assert!(grouped >= 10, "regnetx004 should be dominated by grouped convs");
+    }
+
+    #[test]
+    fn se_variants_have_sigmoid() {
+        for g in [se_resnet(10), se_preresnet(10)] {
+            g.validate().unwrap();
+            assert!(g
+                .nodes
+                .iter()
+                .any(|n| matches!(n.op, Op::Activation { kind: crate::graph::ActKind::Sigmoid })));
+        }
+    }
+
+    #[test]
+    fn diracnet_has_no_residual_adds() {
+        let g = diracnet_v2(18);
+        assert!(!g
+            .nodes
+            .iter()
+            .any(|n| matches!(n.op, Op::ElementWise { kind: crate::graph::EwKind::Add, .. })));
+    }
+
+    #[test]
+    fn all_resnet_depths_validate() {
+        for d in [10, 12, 14, 16, 18, 26, 34, 50] {
+            resnet(d, 1.0).validate().unwrap();
+        }
+        for d in [10, 18, 26, 34] {
+            preresnet(d).validate().unwrap();
+        }
+        bagnet(9).validate().unwrap();
+        bagnet(17).validate().unwrap();
+    }
+}

@@ -1,0 +1,143 @@
+//! Integration: the three-layer stack. The AOT artifacts (JAX L2 lowering
+//! of the Pallas L1 fused_dense kernels) are loaded and executed from rust
+//! via PJRT, and the MLP latency predictor trains and predicts end-to-end.
+//!
+//! Requires `make artifacts`; tests are skipped (not failed) when the
+//! artifact directory is absent so `cargo test` works pre-build.
+
+use edgelat::predict::mlp::MlpContext;
+use edgelat::predict::{train, Method};
+use edgelat::runtime::{literal_f32, to_vec_f32, Runtime};
+use edgelat::util::{mape, Rng};
+
+fn artifact_dir() -> Option<std::path::PathBuf> {
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if Runtime::artifacts_available(&dir) {
+        Some(dir)
+    } else {
+        eprintln!("SKIP: artifacts/ not built (run `make artifacts`)");
+        None
+    }
+}
+
+#[test]
+fn forward_executable_runs_and_matches_shapes() {
+    let Some(dir) = artifact_dir() else { return };
+    let ctx = MlpContext::load(&dir).expect("loading MLP artifacts");
+    assert!(ctx.variants.len() >= 2);
+    let v = &ctx.variants[0];
+    assert_eq!(v.in_dim, 24);
+    assert_eq!(v.batch, 256);
+    // Zero weights -> zero predictions.
+    let x = vec![0.5f32; v.batch * v.in_dim];
+    let mut inputs = vec![literal_f32(&x, &[v.batch as i64, v.in_dim as i64]).unwrap()];
+    for s in &v.param_shapes {
+        let n: i64 = s.iter().product();
+        inputs.push(literal_f32(&vec![0f32; n as usize], s).unwrap());
+    }
+    let out = v.forward.run(&inputs).expect("forward");
+    assert_eq!(out.len(), 1);
+    let pred = to_vec_f32(&out[0]).unwrap();
+    assert_eq!(pred.len(), v.batch);
+    assert!(pred.iter().all(|&p| p == 0.0));
+}
+
+#[test]
+fn train_step_reduces_loss_from_rust() {
+    let Some(dir) = artifact_dir() else { return };
+    let ctx = MlpContext::load(&dir).expect("loading MLP artifacts");
+    let v = &ctx.variants[0];
+    let np = v.param_shapes.len();
+    let mut rng = Rng::new(7);
+    // He-init params, zero moments.
+    let mut params: Vec<Vec<f32>> = v
+        .param_shapes
+        .iter()
+        .map(|s| {
+            let n: i64 = s.iter().product();
+            if s.len() == 1 {
+                vec![0.0; n as usize]
+            } else {
+                let std = (2.0 / s[0] as f64).sqrt();
+                (0..n).map(|_| (rng.normal() * std) as f32).collect()
+            }
+        })
+        .collect();
+    let mut m: Vec<Vec<f32>> =
+        v.param_shapes.iter().map(|s| vec![0.0; s.iter().product::<i64>() as usize]).collect();
+    let mut vv = m.clone();
+    // Synthetic target: y = 2 + |3*x0 + x1|.
+    let mut xb = vec![0f32; v.batch * v.in_dim];
+    let mut yb = vec![0f32; v.batch];
+    for r in 0..v.batch {
+        let a = rng.range_f64(-1.0, 1.0) as f32;
+        let b = rng.range_f64(-1.0, 1.0) as f32;
+        xb[r * v.in_dim] = a;
+        xb[r * v.in_dim + 1] = b;
+        yb[r] = 2.0 + (3.0 * a + b).abs();
+    }
+    let mask = vec![1f32; v.batch];
+    let mut first_loss = None;
+    let mut last_loss = 0f32;
+    for t in 1..=60 {
+        let mut inputs = vec![
+            literal_f32(&xb, &[v.batch as i64, v.in_dim as i64]).unwrap(),
+            literal_f32(&yb, &[v.batch as i64]).unwrap(),
+            literal_f32(&mask, &[v.batch as i64]).unwrap(),
+            xla::Literal::scalar(t as f32),
+            xla::Literal::scalar(5e-3f32),
+            xla::Literal::scalar(1e-4f32),
+        ];
+        for (p, s) in params.iter().chain(&m).chain(&vv).zip(
+            v.param_shapes.iter().cycle(),
+        ) {
+            inputs.push(literal_f32(p, s).unwrap());
+        }
+        let outs = v.train.run(&inputs).expect("train step");
+        assert_eq!(outs.len(), 1 + 3 * np);
+        let loss = to_vec_f32(&outs[0]).unwrap()[0];
+        if first_loss.is_none() {
+            first_loss = Some(loss);
+        }
+        last_loss = loss;
+        for (k, p) in params.iter_mut().enumerate() {
+            *p = to_vec_f32(&outs[1 + k]).unwrap();
+        }
+        for (k, p) in m.iter_mut().enumerate() {
+            *p = to_vec_f32(&outs[1 + np + k]).unwrap();
+        }
+        for (k, p) in vv.iter_mut().enumerate() {
+            *p = to_vec_f32(&outs[1 + 2 * np + k]).unwrap();
+        }
+    }
+    let first = first_loss.unwrap();
+    assert!(
+        last_loss < first * 0.5,
+        "loss did not fall: first={first} last={last_loss}"
+    );
+}
+
+#[test]
+fn mlp_predictor_fits_toy_latency_problem() {
+    let Some(dir) = artifact_dir() else { return };
+    let ctx = MlpContext::load(&dir).expect("loading MLP artifacts");
+    // Same toy roofline problem the native predictors are tested on.
+    let mut rng = Rng::new(3);
+    let gen = |rng: &mut Rng, n: usize| {
+        let mut x = Vec::new();
+        let mut y = Vec::new();
+        for _ in 0..n {
+            let flops = rng.range_f64(1.0, 100.0);
+            let mem = rng.range_f64(1.0, 100.0);
+            x.push(vec![flops, mem]);
+            y.push((0.8 * flops).max(0.5 * mem) + 1.0);
+        }
+        (x, y)
+    };
+    let (x, y) = gen(&mut rng, 400);
+    let (xt, yt) = gen(&mut rng, 100);
+    let model = train(Method::Mlp, &x, &y, 11, Some(&ctx));
+    let pred: Vec<f64> = xt.iter().map(|v| model.predict_raw(v)).collect();
+    let err = mape(&pred, &yt);
+    assert!(err < 0.25, "MLP toy MAPE {err}");
+}

@@ -1,0 +1,253 @@
+//! Property-based tests over randomized inputs (seeded, dependency-free —
+//! the offline crate set has no proptest, so cases are generated with the
+//! library's own PRNG; failures print the offending seed for replay).
+//!
+//! Invariants covered: graph validity and model-file round-trips over the
+//! whole NAS space, Algorithm C.1 fusion conservation laws, kernel-selection
+//! consistency, feature-vector alignment (what the per-bucket trainers
+//! require), simulator sanity (positivity, determinism, monotonicity), and
+//! predictor numeric hygiene.
+
+use edgelat::device::{CoreCombo, DataRep, Target};
+use edgelat::features::{features, kernel_features};
+use edgelat::graph::modelfile::{from_model_file, to_model_file};
+use edgelat::predict::{train, Method};
+use edgelat::tflite::{compile, fusion, CompileOptions, GpuKind};
+use edgelat::util::Rng;
+
+const CASES: usize = 60;
+
+#[test]
+fn prop_sampled_graphs_always_validate() {
+    for seed in 0..CASES as u64 {
+        let arch = edgelat::nas::sample(seed, seed as usize * 7);
+        arch.graph
+            .validate()
+            .unwrap_or_else(|e| panic!("seed {seed}: {e}"));
+        assert!(arch.graph.flops() > 0, "seed {seed}");
+    }
+}
+
+#[test]
+fn prop_model_file_roundtrip_identity() {
+    for seed in 0..CASES as u64 {
+        let g = edgelat::nas::sample(seed ^ 0xfeed, 3).graph;
+        let back = from_model_file(&to_model_file(&g)).unwrap_or_else(|e| panic!("seed {seed}: {e}"));
+        assert_eq!(g, back, "seed {seed}");
+    }
+}
+
+#[test]
+fn prop_fusion_conserves_ops_and_only_absorbs_linkables() {
+    for seed in 0..CASES as u64 {
+        let g = edgelat::nas::sample(seed ^ 0xabc, 11).graph;
+        let kernels = fusion::fuse(&g);
+        // Conservation: every op in exactly one kernel.
+        let mut seen: Vec<usize> = kernels.iter().flat_map(|k| k.ops.iter().copied()).collect();
+        seen.sort_unstable();
+        assert_eq!(seen, (0..g.nodes.len()).collect::<Vec<_>>(), "seed {seed}");
+        // Absorbed ops are linkable; kernel count <= node count.
+        assert!(kernels.len() <= g.nodes.len());
+        for k in &kernels {
+            for &op in k.fused_ops() {
+                assert!(g.nodes[op].op.is_linkable(), "seed {seed}: op {op}");
+            }
+            // Root of a multi-op kernel feeds its first fused op as input 0.
+            if let Some(&first_fused) = k.fused_ops().first() {
+                let root_out = g.nodes[k.ops[0]].outputs[0];
+                assert_eq!(
+                    g.nodes[first_fused].inputs[0], root_out,
+                    "seed {seed}: fusion chain broken"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_fusion_deterministic() {
+    for seed in 0..20u64 {
+        let g = edgelat::nas::sample(seed, 5).graph;
+        let a = fusion::fuse(&g);
+        let b = fusion::fuse(&g);
+        assert_eq!(a.len(), b.len());
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.ops, y.ops, "seed {seed}");
+        }
+    }
+}
+
+#[test]
+fn prop_kernel_selection_respects_gates() {
+    for seed in 0..CASES as u64 {
+        let g = edgelat::nas::sample(seed ^ 0x5e1, 2).graph;
+        for gpu in [GpuKind::Adreno6xx, GpuKind::Mali, GpuKind::PowerVR] {
+            let c = compile(&g, gpu, CompileOptions::default());
+            for k in &c.kernels {
+                match k.impl_ {
+                    edgelat::tflite::KernelImpl::Winograd => {
+                        let info = edgelat::tflite::select::conv_info(&g, k.root()).unwrap();
+                        assert!(edgelat::tflite::select::check_winograd(gpu, &info));
+                        assert_eq!(info.kernel_h, 3);
+                        assert_eq!(info.stride, 1);
+                        assert_eq!(info.groups, 1);
+                    }
+                    edgelat::tflite::KernelImpl::GroupedConv2D => {
+                        let info = edgelat::tflite::select::conv_info(&g, k.root()).unwrap();
+                        assert!(info.groups > 1);
+                        assert!(edgelat::tflite::select::check_grouped_conv2d(&info));
+                    }
+                    _ => {}
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_feature_rows_align_within_buckets() {
+    // All rows routed to the same predictor bucket must have the same
+    // dimension — the exact precondition of ScenarioPredictor::train_from.
+    use std::collections::HashMap;
+    let mut cpu_dims: HashMap<String, usize> = HashMap::new();
+    let mut gpu_dims: HashMap<String, usize> = HashMap::new();
+    let mut graphs: Vec<_> =
+        (0..30).map(|i| edgelat::nas::sample(99, i).graph).collect();
+    graphs.extend(edgelat::zoo::all_graphs().into_iter().take(20));
+    for g in &graphs {
+        for n in &g.nodes {
+            let b = edgelat::features::cpu_bucket(n);
+            let d = features(g, n).len();
+            let e = cpu_dims.entry(b.clone()).or_insert(d);
+            assert_eq!(*e, d, "cpu bucket {b} in {}", g.name);
+        }
+        for gpu in [GpuKind::Adreno6xx, GpuKind::Mali] {
+            for k in compile(g, gpu, CompileOptions::default()).kernels {
+                let b = edgelat::features::bucket_of(g, &k);
+                let d = kernel_features(g, &k).len();
+                let e = gpu_dims.entry(b.clone()).or_insert(d);
+                assert_eq!(*e, d, "gpu bucket {b} in {}", g.name);
+            }
+        }
+    }
+    assert!(cpu_dims.len() >= 6, "{cpu_dims:?}");
+}
+
+#[test]
+fn prop_features_finite_nonnegative() {
+    for seed in 0..CASES as u64 {
+        let g = edgelat::nas::sample(seed ^ 0xf00, 1).graph;
+        for n in &g.nodes {
+            for (i, f) in features(&g, n).iter().enumerate() {
+                assert!(f.is_finite() && *f >= 0.0, "seed {seed} op {} feat {i}", n.id);
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_simulator_positive_and_deterministic() {
+    let socs = edgelat::device::socs();
+    for seed in 0..20u64 {
+        let g = edgelat::nas::sample(seed, 4).graph;
+        let soc = &socs[(seed % 4) as usize];
+        let mut counts = vec![0; soc.clusters.len()];
+        counts[0] = 1;
+        let targets = [
+            Target::Cpu { combo: CoreCombo::new(counts), rep: DataRep::Fp32 },
+            Target::Gpu { options: CompileOptions::default() },
+        ];
+        for t in &targets {
+            let a = edgelat::device::run(soc, &g, t, seed, 0);
+            let b = edgelat::device::run(soc, &g, t, seed, 0);
+            assert_eq!(a.end_to_end_ms, b.end_to_end_ms, "seed {seed}");
+            assert!(a.end_to_end_ms > 0.0);
+            assert!(a.per_op.iter().all(|o| o.latency_ms > 0.0), "seed {seed}");
+        }
+    }
+}
+
+#[test]
+fn prop_noisefree_cost_monotone_in_homogeneous_cores() {
+    // For substantial parallel ops on homogeneous cores, more cores never
+    // hurt (Insight 1's degradation is hetero-only). Tiny ops are
+    // sync-dominated — on real devices too — so the property applies above
+    // a 0.2 ms floor.
+    use edgelat::device::cost::cpu_op_ms;
+    let soc = edgelat::device::soc_by_name("HelioP35").unwrap();
+    let mut checked = 0usize;
+    for seed in 0..30u64 {
+        let g = edgelat::nas::sample(seed ^ 0x77, 6).graph;
+        for n in g.nodes.iter().filter(|n| n.op.cpu_parallel()) {
+            let one = cpu_op_ms(&soc, &g, n, &CoreCombo::new(vec![1, 0]), DataRep::Fp32, 0);
+            if one < 0.2 {
+                continue;
+            }
+            checked += 1;
+            let mut prev = one;
+            for k in 2..=4usize {
+                let combo = CoreCombo::new(vec![k, 0]);
+                let ms = cpu_op_ms(&soc, &g, n, &combo, DataRep::Fp32, 0);
+                assert!(
+                    ms <= prev * 1.05,
+                    "seed {seed} op {}: {k} cores {ms} vs {prev}",
+                    n.id
+                );
+                prev = ms;
+            }
+        }
+    }
+    assert!(checked > 100, "property exercised on only {checked} ops");
+}
+
+#[test]
+fn prop_predictors_numerically_sane_on_random_data() {
+    let mut rng = Rng::new(5);
+    for case in 0..6u64 {
+        let n = 40 + (case as usize) * 17;
+        let mut x = Vec::new();
+        let mut y = Vec::new();
+        for _ in 0..n {
+            x.push(vec![
+                rng.range_f64(0.0, 1e7),
+                rng.range_f64(0.0, 1e3),
+                rng.range_f64(1.0, 7.0),
+            ]);
+            y.push(rng.range_f64(1e-3, 1e3));
+        }
+        for m in Method::native() {
+            let model = train(*m, &x, &y, case, None);
+            for v in x.iter().take(10) {
+                let p = model.predict_raw(v);
+                assert!(p.is_finite() && p > 0.0, "{} case {case}: {p}", m.name());
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_lasso_weights_nonnegative_always() {
+    let mut rng = Rng::new(9);
+    for case in 0..10u64 {
+        let n = 60;
+        let mut x = Vec::new();
+        let mut y = Vec::new();
+        for _ in 0..n {
+            let row: Vec<f64> = (0..5).map(|_| rng.range_f64(-10.0, 10.0)).collect();
+            y.push(rng.range_f64(0.1, 100.0));
+            x.push(row);
+        }
+        let s = edgelat::features::Standardizer::fit(&x);
+        let l = edgelat::predict::lasso::Lasso::fit(&s.transform_all(&x), &y, 1e-3);
+        assert!(l.weights.iter().all(|&w| w >= 0.0), "case {case}: {:?}", l.weights);
+    }
+}
+
+#[test]
+fn prop_gpu_dispatch_count_at_least_kernels() {
+    for seed in 0..CASES as u64 {
+        let g = edgelat::nas::sample(seed ^ 0x9d, 8).graph;
+        let c = compile(&g, GpuKind::PowerVR, CompileOptions::default());
+        assert!(c.dispatch_count() >= c.kernels.len(), "seed {seed}");
+    }
+}
