@@ -4,12 +4,14 @@
 //! device-in-the-loop measurement, then validate the winners on the device.
 //!
 //! Accuracy is proxied by log-FLOPs (a standing NAS heuristic); the point of
-//! the example is the *latency* side: candidate evaluation via predictors is
+//! the example is the *latency* side: candidates are scored by a loaded
+//! `LatencyEngine` at NAS-search rate — train once, `predict_batch` many —
 //! ~1000x cheaper than profiling each candidate.
 //!
 //! Run: `cargo run --release --example nas_latency_constrained`
 
-use edgelat::framework::{DeductionMode, ScenarioPredictor};
+use edgelat::engine::{EngineBuilder, PredictRequest, PredictorBundle};
+use edgelat::framework::DeductionMode;
 use edgelat::predict::Method;
 use edgelat::profiler::{profile, profile_set};
 use edgelat::scenario::Scenario;
@@ -23,33 +25,37 @@ fn main() {
     println!("NAS under a {budget_ms} ms budget on {}", sc.id);
 
     // One-time profiling + predictor training (30 architectures — the
-    // paper's minimal-data regime, Section 5.5).
+    // paper's minimal-data regime, Section 5.5), frozen into a bundle and
+    // loaded into the serving engine.
     let train: Vec<_> =
         edgelat::nas::sample_dataset(seed, 30).into_iter().map(|a| a.graph).collect();
     let profiles = profile_set(&sc, &train, seed, 5);
-    let pred = ScenarioPredictor::train_from(
-        &sc,
-        &profiles,
-        Method::Lasso,
-        DeductionMode::Full,
-        seed,
-        None,
-    );
+    let bundle = PredictorBundle::train(&sc, &profiles, Method::Lasso, DeductionMode::Full, seed)
+        .expect("training bundle");
+    let engine = EngineBuilder::new().bundle(bundle).build().expect("building engine");
 
-    // Search: score 400 candidates by predicted latency.
+    // Search: score 400 candidates by predicted latency, batched across
+    // threads on the loaded engine.
     let t0 = Instant::now();
-    let candidates = edgelat::nas::sample_dataset(seed ^ 0xbeef, 400);
+    let candidates: Vec<edgelat::graph::Graph> = edgelat::nas::sample_dataset(seed ^ 0xbeef, 400)
+        .into_iter()
+        .map(|a| a.graph)
+        .collect();
+    let reqs: Vec<PredictRequest> =
+        candidates.iter().map(|g| PredictRequest::new(g, sc.id.clone())).collect();
+    let responses = engine.predict_batch(&reqs);
     let mut feasible: Vec<(f64, f64, String, edgelat::graph::Graph)> = Vec::new();
-    for c in candidates {
-        let lat = pred.predict(&c.graph);
+    for (g, resp) in candidates.iter().zip(responses) {
+        let lat = resp.expect("served prediction").e2e_ms;
         if lat <= budget_ms {
-            let acc_proxy = (c.graph.flops() as f64).ln();
-            feasible.push((acc_proxy, lat, c.graph.name.clone(), c.graph));
+            let acc_proxy = (g.flops() as f64).ln();
+            feasible.push((acc_proxy, lat, g.name.clone(), g.clone()));
         }
     }
     feasible.sort_by(|a, b| b.0.partial_cmp(&a.0).unwrap());
     println!(
-        "scored 400 candidates in {:.2}s; {} within budget",
+        "scored {} candidates in {:.2}s (predict_batch on the loaded engine); {} within budget",
+        candidates.len(),
         t0.elapsed().as_secs_f64(),
         feasible.len()
     );

@@ -1,10 +1,13 @@
 //! Quickstart: predict MobileNetV2's inference latency on a Pixel 4 without
-//! touching the device, exactly as the paper's framework does (Section 4):
-//! profile a small set of synthetic NAS architectures once, train per-op
-//! predictors, then predict a new model from its model file alone.
+//! touching the device, exactly as the paper's framework does (Section 4) —
+//! and with the serving workflow this crate is built around: profile a small
+//! set of synthetic NAS architectures once, train per-op predictors, freeze
+//! them into a bundle file, then serve predictions from the loaded bundle
+//! without ever retraining.
 //!
 //! Run: `cargo run --release --example quickstart`
 
+use edgelat::engine::{EngineBuilder, PredictRequest, PredictorBundle};
 use edgelat::framework::{DeductionMode, ScenarioPredictor};
 use edgelat::predict::Method;
 use edgelat::profiler::{profile, profile_set};
@@ -24,7 +27,7 @@ fn main() {
     println!("profiling {} synthetic architectures ...", train.len());
     let profiles = profile_set(&sc, &train, seed, 5);
 
-    // 3. Train per-op-type GBDT latency predictors.
+    // 3. Train per-op-type GBDT latency predictors — once.
     let pred = ScenarioPredictor::train_from(
         &sc,
         &profiles,
@@ -35,14 +38,36 @@ fn main() {
     );
     println!("trained {} per-op models; T_overhead = {:.2} ms", pred.models.len(), pred.t_overhead_ms);
 
-    // 4. Predict an unseen real-world model — no device access needed.
-    let target = edgelat::zoo::by_name("mobilenetv2_wd100").unwrap();
-    let predicted = pred.predict(&target);
+    // 4. Freeze the trained predictor into a deployable bundle file
+    //    (`edgelat train --out` does the same from the CLI).
+    let bundle = PredictorBundle::from_predictor(&pred).expect("native models serialize");
+    let path = std::env::temp_dir().join("edgelat_quickstart_bundle.json");
+    bundle.save(&path).expect("writing bundle");
+    println!("serialized predictor -> {}", path.display());
 
-    // 5. Compare against a "measurement" on the simulated device.
+    // 5. Serve: load the bundle into an owned, Send + Sync engine and
+    //    predict an unseen real-world model — no device, no retraining.
+    let engine = EngineBuilder::new()
+        .bundle_file(&path)
+        .expect("loading bundle")
+        .build()
+        .expect("building engine");
+    let target = edgelat::zoo::by_name("mobilenetv2_wd100").unwrap();
+    let resp = engine
+        .predict(&PredictRequest::new(&target, sc.id.clone()))
+        .expect("serving prediction");
+
+    // 6. Compare against a "measurement" on the simulated device, and
+    //    check the served prediction matches the in-memory predictor.
     let measured = profile(&sc, &target, seed, 10).end_to_end_ms;
+    let in_memory = pred.predict(&target);
+    assert_eq!(
+        resp.e2e_ms.to_bits(),
+        in_memory.to_bits(),
+        "loaded bundle must reproduce the in-memory predictor exactly"
+    );
     println!("\nMobileNetV2 on {}:", sc.id);
-    println!("  predicted: {predicted:8.2} ms");
+    println!("  predicted: {:8.2} ms  (served from bundle)", resp.e2e_ms);
     println!("  measured:  {measured:8.2} ms");
-    println!("  error:     {:8.2} %", ((predicted - measured) / measured).abs() * 100.0);
+    println!("  error:     {:8.2} %", ((resp.e2e_ms - measured) / measured).abs() * 100.0);
 }

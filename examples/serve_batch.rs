@@ -1,0 +1,97 @@
+//! Serving throughput demo: train once, serialize, load, `predict_batch`
+//! over 120 NAS samples — versus the old workflow of re-profiling and
+//! retraining on every `predict` invocation.
+//!
+//! This is the acceptance demo for the engine layer: a loaded engine must
+//! serve a 100+-graph batch at least 5x faster than sequential
+//! train-and-predict calls (in practice the gap is orders of magnitude,
+//! which is exactly why NAS search needs the train-once/serve split).
+//!
+//! Run: `cargo run --release --example serve_batch`
+
+use edgelat::engine::{EngineBuilder, PredictRequest, PredictorBundle};
+use edgelat::framework::{DeductionMode, ScenarioPredictor};
+use edgelat::predict::Method;
+use edgelat::profiler::profile_set;
+use edgelat::scenario::one_large_core;
+use std::time::Instant;
+
+fn main() {
+    let seed = 11;
+    let sc = one_large_core("Snapdragon855");
+    println!("scenario: {}", sc.id);
+
+    // --- Train once (30 NAs, the paper's minimal-data regime) and freeze.
+    let train: Vec<_> =
+        edgelat::nas::sample_dataset(seed, 30).into_iter().map(|a| a.graph).collect();
+    let t0 = Instant::now();
+    let profiles = profile_set(&sc, &train, seed, 3);
+    let pred = ScenarioPredictor::train_from(
+        &sc,
+        &profiles,
+        Method::Gbdt,
+        DeductionMode::Full,
+        seed,
+        None,
+    );
+    let train_once_s = t0.elapsed().as_secs_f64();
+    let bundle = PredictorBundle::from_predictor(&pred).expect("bundle");
+    let path = std::env::temp_dir().join("edgelat_serve_batch_bundle.json");
+    bundle.save(&path).expect("writing bundle");
+    println!("one-time profile+train: {train_once_s:.2}s -> {}", path.display());
+
+    // --- Load and serve a 120-graph batch.
+    let engine = EngineBuilder::new()
+        .bundle_file(&path)
+        .expect("loading bundle")
+        .build()
+        .expect("building engine");
+    let workload: Vec<_> =
+        edgelat::nas::sample_dataset(seed ^ 0x5eed, 120).into_iter().map(|a| a.graph).collect();
+    let reqs: Vec<PredictRequest> =
+        workload.iter().map(|g| PredictRequest::new(g, sc.id.clone())).collect();
+    let t1 = Instant::now();
+    let responses = engine.predict_batch(&reqs);
+    let batch_s = t1.elapsed().as_secs_f64();
+    let served = responses.iter().filter(|r| r.is_ok()).count();
+    assert_eq!(served, workload.len(), "every request must be served");
+    println!(
+        "predict_batch: {} graphs in {:.4}s ({:.0} predictions/s)",
+        served,
+        batch_s,
+        served as f64 / batch_s.max(1e-9)
+    );
+
+    // --- Baseline: the old retrain-per-call workflow (`edgelat predict`
+    // used to re-profile and retrain on every invocation). Measure a few
+    // calls and scale the per-call mean to the full batch size.
+    let k = 3usize.min(workload.len());
+    let t2 = Instant::now();
+    for g in workload.iter().take(k) {
+        let p = profile_set(&sc, &train, seed, 3);
+        let fresh = ScenarioPredictor::train_from(
+            &sc,
+            &p,
+            Method::Gbdt,
+            DeductionMode::Full,
+            seed,
+            None,
+        );
+        std::hint::black_box(fresh.predict(g));
+    }
+    let per_call_s = t2.elapsed().as_secs_f64() / k as f64;
+    let sequential_s = per_call_s * workload.len() as f64;
+    println!(
+        "retrain-per-call baseline: {per_call_s:.2}s/call measured over {k} calls \
+         -> {sequential_s:.1}s for {} calls",
+        workload.len()
+    );
+
+    let speedup = sequential_s / batch_s.max(1e-9);
+    println!("\nspeedup of loaded-engine predict_batch over retrain-per-call: {speedup:.0}x");
+    assert!(
+        speedup >= 5.0,
+        "engine serving must be at least 5x faster than retrain-per-call (got {speedup:.1}x)"
+    );
+    println!("OK: train-once/serve beats retrain-per-call by >=5x");
+}

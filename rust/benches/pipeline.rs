@@ -130,4 +130,27 @@ fn main() {
     bench("framework/predict mobilenet_v2 end-to-end", 500, || {
         std::hint::black_box(pred.predict(&mv2));
     });
+
+    // Serving engine: load-once batch prediction (the train-once/serve
+    // split; compare against `framework/train ScenarioPredictor` above,
+    // which is what the old retrain-per-call `predict` paid per query).
+    let bundle =
+        edgelat::engine::PredictorBundle::from_predictor(&pred).expect("bundle from predictor");
+    let engine = edgelat::engine::EngineBuilder::new()
+        .bundle(bundle)
+        .build()
+        .expect("engine build");
+    let serve: Vec<_> =
+        edgelat::nas::sample_dataset(9, 100).into_iter().map(|a| a.graph).collect();
+    bench("engine/predict_batch 100 NAs (loaded engine)", 10, || {
+        let reqs: Vec<edgelat::engine::PredictRequest> = serve
+            .iter()
+            .map(|g| edgelat::engine::PredictRequest::new(g, sc_cpu.id.clone()))
+            .collect();
+        std::hint::black_box(engine.predict_batch(&reqs));
+    });
+    bench("engine/predict mobilenet_v2 (deduction memoized)", 2000, || {
+        let req = edgelat::engine::PredictRequest::new(&mv2, sc_cpu.id.clone());
+        std::hint::black_box(engine.predict(&req).expect("served"));
+    });
 }

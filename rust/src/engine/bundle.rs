@@ -1,0 +1,200 @@
+//! The versioned on-disk format for a trained predictor: scenario id,
+//! method, deduction mode, `T_overhead`/fallback metadata, and every
+//! per-bucket model (standardizer + Lasso/RF/GBDT weights) serialized via
+//! `util::json`. All floats round-trip bit-exactly (shortest-repr emit +
+//! exact parse), so a loaded bundle reproduces the in-memory predictor's
+//! outputs bit-identically.
+
+use crate::engine::EngineError;
+use crate::framework::{DeductionMode, ScenarioPredictor};
+use crate::predict::{BucketModel, Method, TrainedModel};
+use crate::profiler::ModelProfile;
+use crate::scenario::Scenario;
+use crate::util::Json;
+use std::collections::BTreeMap;
+use std::path::Path;
+
+/// Identifies a predictor-bundle JSON document.
+pub const BUNDLE_FORMAT: &str = "edgelat.predictor_bundle";
+/// Schema version this build writes and reads.
+pub const BUNDLE_VERSION: u64 = 1;
+
+/// A serialized trained predictor for one (scenario, method, mode).
+#[derive(Clone)]
+pub struct PredictorBundle {
+    pub scenario_id: String,
+    pub method: Method,
+    pub mode: DeductionMode,
+    /// Estimated framework overhead (mean end-to-end minus op-sum gap).
+    pub t_overhead_ms: f64,
+    /// Global mean op latency, used for buckets unseen during training.
+    pub fallback_ms: f64,
+    pub models: BTreeMap<String, BucketModel>,
+}
+
+impl PredictorBundle {
+    /// Train a bundle from profiles with one of the native methods. The
+    /// convenience path behind `edgelat train`.
+    pub fn train(
+        sc: &Scenario,
+        profiles: &[ModelProfile],
+        method: Method,
+        mode: DeductionMode,
+        seed: u64,
+    ) -> Result<PredictorBundle, EngineError> {
+        if method == Method::Mlp {
+            return Err(EngineError::Unsupported(
+                "bundles hold the native methods (lasso|rf|gbdt); the MLP stays \
+                 engine-external (PJRT handles are not serializable)"
+                    .into(),
+            ));
+        }
+        let pred = ScenarioPredictor::train_from(sc, profiles, method, mode, seed, None);
+        PredictorBundle::from_predictor(&pred)
+    }
+
+    /// Extract the owned models from a trained predictor. Fails for MLP
+    /// predictors, whose models are engine-external.
+    pub fn from_predictor(pred: &ScenarioPredictor<'_>) -> Result<PredictorBundle, EngineError> {
+        let mut models = BTreeMap::new();
+        for (bucket, m) in &pred.models {
+            let owned = m.as_owned().ok_or_else(|| {
+                EngineError::Unsupported(format!(
+                    "bucket '{bucket}' uses a non-serializable model (MLP); only \
+                     Lasso/RF/GBDT predictors can be bundled"
+                ))
+            })?;
+            models.insert(bucket.clone(), owned.clone());
+        }
+        Ok(PredictorBundle {
+            scenario_id: pred.scenario.id.clone(),
+            method: pred.method,
+            mode: pred.mode,
+            t_overhead_ms: pred.t_overhead_ms,
+            fallback_ms: pred.fallback_ms,
+            models,
+        })
+    }
+
+    /// Reassemble a full `ScenarioPredictor` (owned models, `'static`) by
+    /// resolving the scenario id against this build's scenario table.
+    /// `to_`: an expensive borrowed→owned conversion (the models clone).
+    pub fn to_predictor(&self) -> Result<ScenarioPredictor<'static>, EngineError> {
+        let scenario = crate::scenario::by_id(&self.scenario_id)
+            .ok_or_else(|| EngineError::UnknownScenario(self.scenario_id.clone()))?;
+        let models: BTreeMap<String, TrainedModel<'static>> = self
+            .models
+            .iter()
+            .map(|(b, m)| (b.clone(), TrainedModel::Owned(m.clone())))
+            .collect();
+        Ok(ScenarioPredictor::from_parts(
+            scenario,
+            self.method,
+            self.mode,
+            models,
+            self.t_overhead_ms,
+            self.fallback_ms,
+        ))
+    }
+
+    /// Feature-vector width per bucket — metadata derived from the trained
+    /// standardizers (shares its source of truth with `features::*_DIM`).
+    pub fn feature_dims(&self) -> BTreeMap<String, usize> {
+        self.models.iter().map(|(b, m)| (b.clone(), m.feature_dim())).collect()
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut buckets = BTreeMap::new();
+        for (b, m) in &self.models {
+            buckets.insert(b.clone(), m.to_json());
+        }
+        Json::obj(vec![
+            ("format", Json::str(BUNDLE_FORMAT)),
+            ("version", Json::Num(BUNDLE_VERSION as f64)),
+            ("scenario", Json::str(self.scenario_id.clone())),
+            ("method", Json::str(self.method.name())),
+            ("mode", Json::str(self.mode.name())),
+            ("t_overhead_ms", Json::Num(self.t_overhead_ms)),
+            ("fallback_ms", Json::Num(self.fallback_ms)),
+            ("buckets", Json::Obj(buckets)),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Result<PredictorBundle, String> {
+        let format = j.req_str("format")?;
+        if format != BUNDLE_FORMAT {
+            return Err(format!(
+                "not a predictor bundle (format '{format}', expected '{BUNDLE_FORMAT}')"
+            ));
+        }
+        let version = j.req_f64("version")? as u64;
+        if version != BUNDLE_VERSION {
+            return Err(format!(
+                "unsupported bundle version {version} (this build reads version {BUNDLE_VERSION})"
+            ));
+        }
+        let scenario_id = j.req_str("scenario")?.to_string();
+        let method_name = j.req_str("method")?;
+        let method = Method::parse(method_name)
+            .ok_or_else(|| format!("unknown method '{method_name}'"))?;
+        let mode_name = j.req_str("mode")?;
+        let mode = DeductionMode::parse(mode_name)
+            .ok_or_else(|| format!("unknown deduction mode '{mode_name}'"))?;
+        let t_overhead_ms = j.req_f64("t_overhead_ms")?;
+        let fallback_ms = j.req_f64("fallback_ms")?;
+        if !t_overhead_ms.is_finite() || !fallback_ms.is_finite() {
+            return Err("non-finite t_overhead_ms/fallback_ms".into());
+        }
+        let Json::Obj(bmap) = j.req("buckets")? else {
+            return Err("'buckets' is not an object".into());
+        };
+        let mut models = BTreeMap::new();
+        for (b, mj) in bmap {
+            let m = BucketModel::from_json(mj).map_err(|e| format!("bucket '{b}': {e}"))?;
+            if m.model.method() != method {
+                return Err(format!(
+                    "bucket '{b}' holds a {} model but the bundle method is {}",
+                    m.model.method().name(),
+                    method.name()
+                ));
+            }
+            models.insert(b.clone(), m);
+        }
+        if models.is_empty() {
+            return Err("bundle has no bucket models".into());
+        }
+        Ok(PredictorBundle { scenario_id, method, mode, t_overhead_ms, fallback_ms, models })
+    }
+
+    /// Write the bundle as compact JSON.
+    pub fn save(&self, path: impl AsRef<Path>) -> Result<(), EngineError> {
+        let path = path.as_ref();
+        std::fs::write(path, self.to_json().to_string())
+            .map_err(|e| EngineError::Io(format!("writing {}: {e}", path.display())))
+    }
+
+    /// Load and validate a bundle file.
+    pub fn load(path: impl AsRef<Path>) -> Result<PredictorBundle, EngineError> {
+        let path = path.as_ref();
+        let s = std::fs::read_to_string(path)
+            .map_err(|e| EngineError::Io(format!("reading {}: {e}", path.display())))?;
+        let j = Json::parse(&s)
+            .map_err(|e| EngineError::Parse(format!("{}: {e}", path.display())))?;
+        PredictorBundle::from_json(&j)
+            .map_err(|e| EngineError::Parse(format!("{}: {e}", path.display())))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn from_json_requires_format_and_version() {
+        let err = PredictorBundle::from_json(&Json::parse("{}").unwrap()).unwrap_err();
+        assert!(err.contains("format"), "{err}");
+        let j = Json::obj(vec![("format", Json::str("something.else"))]);
+        let err = PredictorBundle::from_json(&j).unwrap_err();
+        assert!(err.contains("not a predictor bundle"), "{err}");
+    }
+}

@@ -1,0 +1,341 @@
+//! The serving-oriented engine layer: train once, serialize, load,
+//! batch-predict.
+//!
+//! The paper's predictor is trained from a small one-time profiling run and
+//! then queried cheaply for thousands of candidate architectures during NAS
+//! (Section 1). `framework::ScenarioPredictor` is the training-side view of
+//! that pipeline; this module is the serving side:
+//!
+//! - [`PredictorBundle`]: a versioned, JSON-serialized trained predictor
+//!   (per-bucket Lasso/RF/GBDT models + standardizers + `T_overhead` and
+//!   fallback metadata) — the deployable artifact written by
+//!   `edgelat train` and read by `edgelat predict --bundle`.
+//! - [`LatencyEngine`]: an owned, `Send + Sync` facade built via
+//!   [`EngineBuilder`] from one or more bundles (multi-scenario). It
+//!   memoizes kernel deduction per graph fingerprint (compilation is pure
+//!   in the graph) and serves typed [`PredictRequest`]s; [`predict_batch`]
+//!   fans requests out across `std::thread` for throughput.
+//!
+//! The MLP predictor stays engine-external: it holds PJRT handles, so it is
+//! neither serializable nor `Send`; it remains available through
+//! `framework::ScenarioPredictor` behind the `Regressor` trait.
+//!
+//! [`predict_batch`]: LatencyEngine::predict_batch
+
+pub mod bundle;
+
+pub use bundle::{PredictorBundle, BUNDLE_FORMAT, BUNDLE_VERSION};
+
+use crate::framework::{deduce_units, DeductionMode};
+use crate::graph::Graph;
+use crate::predict::{BucketModel, Method};
+use crate::scenario::Scenario;
+use std::collections::{BTreeMap, HashMap};
+use std::fmt;
+use std::sync::{Arc, Mutex};
+
+/// Errors from bundle I/O and engine serving.
+#[derive(Debug, Clone)]
+pub enum EngineError {
+    /// Filesystem failure reading/writing a bundle.
+    Io(String),
+    /// Malformed bundle contents (bad JSON, schema, or version).
+    Parse(String),
+    /// The bundle names a scenario this build does not know.
+    UnknownScenario(String),
+    /// No loaded bundle matches the request.
+    NoPredictor { scenario_id: String, method: Option<Method> },
+    /// Operation not supported (e.g. serializing an MLP predictor).
+    Unsupported(String),
+}
+
+impl fmt::Display for EngineError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            EngineError::Io(e) => write!(f, "bundle I/O error: {e}"),
+            EngineError::Parse(e) => write!(f, "bundle parse error: {e}"),
+            EngineError::UnknownScenario(id) => {
+                write!(f, "unknown scenario '{id}' (see `edgelat list scenarios`)")
+            }
+            EngineError::NoPredictor { scenario_id, method } => match method {
+                Some(m) => write!(
+                    f,
+                    "no loaded predictor for scenario '{scenario_id}' with method {}",
+                    m.name()
+                ),
+                None => write!(f, "no loaded predictor for scenario '{scenario_id}'"),
+            },
+            EngineError::Unsupported(e) => write!(f, "unsupported: {e}"),
+        }
+    }
+}
+
+impl std::error::Error for EngineError {}
+
+/// One prediction request against a loaded engine.
+#[derive(Debug, Clone)]
+pub struct PredictRequest<'g> {
+    pub graph: &'g Graph,
+    pub scenario_id: String,
+    /// Restrict to a bundle trained with this method; `None` picks the
+    /// first loaded bundle for the scenario.
+    pub method: Option<Method>,
+}
+
+impl<'g> PredictRequest<'g> {
+    pub fn new(graph: &'g Graph, scenario_id: impl Into<String>) -> PredictRequest<'g> {
+        PredictRequest { graph, scenario_id: scenario_id.into(), method: None }
+    }
+
+    pub fn with_method(mut self, method: Method) -> PredictRequest<'g> {
+        self.method = Some(method);
+        self
+    }
+}
+
+/// A served prediction: end-to-end estimate plus its decomposition.
+#[derive(Debug, Clone)]
+pub struct PredictResponse {
+    /// `T_overhead + Σ_c f*_c(x_c)` (Section 4.2).
+    pub e2e_ms: f64,
+    /// Per-unit (bucket, predicted ms), in execution order.
+    pub per_unit: Vec<(String, f64)>,
+    /// Framework-overhead component of `e2e_ms`.
+    pub t_overhead_ms: f64,
+    /// Units predicted with the global-mean fallback (bucket unseen during
+    /// training).
+    pub fallback_units: usize,
+}
+
+/// One loaded bundle, resolved against this build's scenario table.
+struct EnginePredictor {
+    scenario: Scenario,
+    method: Method,
+    mode: DeductionMode,
+    t_overhead_ms: f64,
+    fallback_ms: f64,
+    models: BTreeMap<String, BucketModel>,
+}
+
+/// Builder for [`LatencyEngine`]: collect bundles, then `build()`.
+#[derive(Default)]
+pub struct EngineBuilder {
+    bundles: Vec<PredictorBundle>,
+    threads: Option<usize>,
+}
+
+impl EngineBuilder {
+    pub fn new() -> EngineBuilder {
+        EngineBuilder { bundles: Vec::new(), threads: None }
+    }
+
+    /// Add an in-memory bundle (e.g. freshly trained).
+    pub fn bundle(mut self, b: PredictorBundle) -> EngineBuilder {
+        self.bundles.push(b);
+        self
+    }
+
+    /// Load and add a bundle file written by `edgelat train`.
+    pub fn bundle_file(self, path: impl AsRef<std::path::Path>) -> Result<EngineBuilder, EngineError> {
+        let b = PredictorBundle::load(path)?;
+        Ok(self.bundle(b))
+    }
+
+    /// Worker threads for `predict_batch` (default: available parallelism).
+    pub fn threads(mut self, n: usize) -> EngineBuilder {
+        self.threads = Some(n.max(1));
+        self
+    }
+
+    pub fn build(self) -> Result<LatencyEngine, EngineError> {
+        if self.bundles.is_empty() {
+            return Err(EngineError::Unsupported(
+                "an engine needs at least one predictor bundle".into(),
+            ));
+        }
+        let mut predictors = Vec::with_capacity(self.bundles.len());
+        for b in self.bundles {
+            // The builder is consumed, so the model maps move in for free.
+            let scenario = crate::scenario::by_id(&b.scenario_id)
+                .ok_or_else(|| EngineError::UnknownScenario(b.scenario_id.clone()))?;
+            predictors.push(EnginePredictor {
+                scenario,
+                method: b.method,
+                mode: b.mode,
+                t_overhead_ms: b.t_overhead_ms,
+                fallback_ms: b.fallback_ms,
+                models: b.models,
+            });
+        }
+        // Deduction only depends on (scenario, mode), not on the trained
+        // method — predictors sharing both share one cache slot.
+        let dedup: Vec<usize> = (0..predictors.len())
+            .map(|i| {
+                (0..i)
+                    .find(|&j| {
+                        predictors[j].scenario.id == predictors[i].scenario.id
+                            && predictors[j].mode == predictors[i].mode
+                    })
+                    .unwrap_or(i)
+            })
+            .collect();
+        let threads = self.threads.unwrap_or_else(|| {
+            std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4)
+        });
+        Ok(LatencyEngine { predictors, dedup, threads, unit_cache: Mutex::new(HashMap::new()) })
+    }
+}
+
+/// An owned, `Send + Sync` latency-prediction engine serving one or more
+/// scenarios from loaded [`PredictorBundle`]s.
+pub struct LatencyEngine {
+    predictors: Vec<EnginePredictor>,
+    /// `dedup[i]` is the canonical predictor index whose (scenario, mode)
+    /// matches predictor `i` — same-deduction predictors share cache slots.
+    dedup: Vec<usize>,
+    threads: usize,
+    /// Kernel deduction memo: (canonical predictor index, graph
+    /// fingerprint) → deduced units. Compilation/fusion is pure in the
+    /// graph, so repeated queries for the same architecture (NAS search,
+    /// figure regeneration) skip straight to the per-bucket model
+    /// evaluations. Bounded by [`UNIT_CACHE_CAP`].
+    unit_cache: Mutex<HashMap<(usize, u64), Arc<Vec<(String, Vec<f64>)>>>>,
+}
+
+/// Cap on memoized deductions; a long-lived engine serving an unbounded
+/// stream of distinct graphs must not grow without limit. On overflow the
+/// memo is simply cleared (it is a pure cache — only warmth is lost).
+const UNIT_CACHE_CAP: usize = 4096;
+
+impl LatencyEngine {
+    pub fn builder() -> EngineBuilder {
+        EngineBuilder::new()
+    }
+
+    /// Scenario ids with at least one loaded predictor, in load order.
+    pub fn scenario_ids(&self) -> Vec<&str> {
+        self.predictors.iter().map(|p| p.scenario.id.as_str()).collect()
+    }
+
+    /// Number of loaded predictors.
+    pub fn len(&self) -> usize {
+        self.predictors.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.predictors.is_empty()
+    }
+
+    fn find(
+        &self,
+        scenario_id: &str,
+        method: Option<Method>,
+    ) -> Result<(usize, &EnginePredictor), EngineError> {
+        for (i, p) in self.predictors.iter().enumerate() {
+            if p.scenario.id == scenario_id && method.map(|m| m == p.method).unwrap_or(true) {
+                return Ok((i, p));
+            }
+        }
+        Err(EngineError::NoPredictor { scenario_id: scenario_id.to_string(), method })
+    }
+
+    fn units_for(&self, idx: usize, p: &EnginePredictor, g: &Graph) -> Arc<Vec<(String, Vec<f64>)>> {
+        let key = (self.dedup[idx], g.fingerprint());
+        if let Some(u) = self.unit_cache.lock().unwrap().get(&key) {
+            return u.clone();
+        }
+        // Deduce outside the lock; a racing duplicate computes the same
+        // value (deduction is pure), and the first insert wins.
+        let units = Arc::new(deduce_units(&p.scenario, p.mode, g));
+        let mut cache = self.unit_cache.lock().unwrap();
+        if cache.len() >= UNIT_CACHE_CAP {
+            cache.clear();
+        }
+        cache.entry(key).or_insert_with(|| units.clone());
+        units
+    }
+
+    /// Serve one prediction.
+    pub fn predict(&self, req: &PredictRequest) -> Result<PredictResponse, EngineError> {
+        let (idx, p) = self.find(&req.scenario_id, req.method)?;
+        let units = self.units_for(idx, p, req.graph);
+        let mut per_unit = Vec::with_capacity(units.len());
+        let mut fallback_units = 0usize;
+        let mut sum = 0.0;
+        for (bucket, f) in units.iter() {
+            let ms = match p.models.get(bucket) {
+                Some(m) => m.predict_raw(f),
+                None => {
+                    fallback_units += 1;
+                    p.fallback_ms
+                }
+            };
+            sum += ms;
+            per_unit.push((bucket.clone(), ms));
+        }
+        Ok(PredictResponse {
+            e2e_ms: p.t_overhead_ms + sum,
+            per_unit,
+            t_overhead_ms: p.t_overhead_ms,
+            fallback_units,
+        })
+    }
+
+    /// Serve a batch of predictions, fanned out across `std::thread`
+    /// workers (no rayon offline). Results preserve request order; each
+    /// slot carries its own error so one bad request doesn't poison the
+    /// batch.
+    pub fn predict_batch(
+        &self,
+        reqs: &[PredictRequest],
+    ) -> Vec<Result<PredictResponse, EngineError>> {
+        if reqs.is_empty() {
+            return Vec::new();
+        }
+        let nthreads = self.threads.min(reqs.len()).max(1);
+        let chunk = reqs.len().div_ceil(nthreads);
+        let mut out: Vec<Option<Result<PredictResponse, EngineError>>> =
+            (0..reqs.len()).map(|_| None).collect();
+        std::thread::scope(|scope| {
+            for (rs, os) in reqs.chunks(chunk).zip(out.chunks_mut(chunk)) {
+                scope.spawn(move || {
+                    for (r, o) in rs.iter().zip(os.iter_mut()) {
+                        *o = Some(self.predict(r));
+                    }
+                });
+            }
+        });
+        out.into_iter().map(|o| o.expect("predict_batch slot filled")).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn engine_is_send_and_sync() {
+        fn assert_send_sync<T: Send + Sync>() {}
+        assert_send_sync::<LatencyEngine>();
+        assert_send_sync::<PredictorBundle>();
+        assert_send_sync::<PredictResponse>();
+        assert_send_sync::<EngineError>();
+    }
+
+    #[test]
+    fn empty_builder_is_rejected() {
+        let err = EngineBuilder::new().build().unwrap_err();
+        assert!(err.to_string().contains("at least one"), "{err}");
+    }
+
+    #[test]
+    fn error_display_names_the_scenario() {
+        let e = EngineError::NoPredictor {
+            scenario_id: "X/gpu".into(),
+            method: Some(Method::Gbdt),
+        };
+        let s = e.to_string();
+        assert!(s.contains("X/gpu") && s.contains("GBDT"), "{s}");
+        assert!(EngineError::UnknownScenario("Y".into()).to_string().contains("Y"));
+    }
+}

@@ -5,6 +5,36 @@
 
 use crate::graph::{Graph, Node, Op, OpType};
 use crate::tflite::FusedKernel;
+use crate::util::Json;
+
+/// Feature-vector width of a conv-family op row (Table 3): 9 shape
+/// parameters + in/out sizes + params + FLOPs. The single source of truth
+/// for the truncate-and-pad logic in `framework` and for bundle metadata.
+pub const CONV_FEATURE_DIM: usize = 13;
+/// Conv rows gain a group-count column when `groups > 1`.
+pub const GROUPED_CONV_FEATURE_DIM: usize = CONV_FEATURE_DIM + 1;
+/// Extra features appended to fused GPU kernel rows (extra-input size +
+/// fused-op count, see [`kernel_features`]).
+pub const FUSED_KERNEL_EXTRA_FEATURES: usize = 2;
+/// Width of a fused GPU conv kernel row.
+pub const CONV_KERNEL_FEATURE_DIM: usize = CONV_FEATURE_DIM + FUSED_KERNEL_EXTRA_FEATURES;
+
+/// Truncate or zero-pad a feature row to exactly `dim` entries.
+pub fn pad_features(v: &mut Vec<f64>, dim: usize) {
+    v.truncate(dim);
+    while v.len() < dim {
+        v.push(0.0);
+    }
+}
+
+/// Conform a kernel feature row to the merged-Conv2D layout used by the
+/// NoSelection ablation: drop selection-specific tail features (the group
+/// count) and re-pad to the fused conv kernel width so rows from the
+/// Conv2D / Winograd / GroupedConv2D buckets align.
+pub fn conform_conv_kernel_row(v: &mut Vec<f64>) {
+    v.truncate(CONV_FEATURE_DIM);
+    pad_features(v, CONV_KERNEL_FEATURE_DIM);
+}
 
 /// Predictor bucket name for an op or kernel: one ML model is trained per
 /// bucket per scenario. GPU convolutions split into Conv2D / Winograd /
@@ -121,15 +151,16 @@ pub fn kernel_features(g: &Graph, k: &FusedKernel) -> Vec<f64> {
     v
 }
 
-/// Number of features for each bucket (kernel features = op features + 2).
+/// Number of features for each bucket (kernel features = op features +
+/// [`FUSED_KERNEL_EXTRA_FEATURES`]).
 pub fn feature_dim(op_type: OpType, grouped: bool) -> usize {
     match op_type {
-        OpType::Conv2D | OpType::DepthwiseConv2D => 13,
+        OpType::Conv2D | OpType::DepthwiseConv2D => CONV_FEATURE_DIM,
         OpType::GroupedConv2D => {
             if grouped {
-                14
+                GROUPED_CONV_FEATURE_DIM
             } else {
-                13
+                CONV_FEATURE_DIM
             }
         }
         OpType::FullyConnected => 4,
@@ -196,6 +227,35 @@ impl Standardizer {
     pub fn transform_all(&self, rows: &[Vec<f64>]) -> Vec<Vec<f64>> {
         rows.iter().map(|r| self.transform(r)).collect()
     }
+
+    /// Serialize for `engine::bundle` (mean/std round-trip bit-exactly).
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("mean", Json::from_f64s(&self.mean)),
+            ("std", Json::from_f64s(&self.std)),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Result<Standardizer, String> {
+        let mean = j.req_f64_arr("mean")?;
+        let std = j.req_f64_arr("std")?;
+        if mean.is_empty() || mean.len() != std.len() {
+            return Err(format!(
+                "standardizer: mean/std length mismatch ({} vs {})",
+                mean.len(),
+                std.len()
+            ));
+        }
+        // A corrupted bundle must fail here, not serve inf/NaN predictions:
+        // transform divides by std, and fit() never produces std <= 0.
+        if mean.iter().any(|m| !m.is_finite()) {
+            return Err("standardizer: non-finite mean".into());
+        }
+        if std.iter().any(|s| !s.is_finite() || *s <= 0.0) {
+            return Err("standardizer: std values must be finite and positive".into());
+        }
+        Ok(Standardizer { mean, std })
+    }
 }
 
 #[cfg(test)]
@@ -211,9 +271,9 @@ mod tests {
         let t = b.conv(x, 64, 3, 1, Padding::Same);
         let g = b.finish(vec![t]);
         let f = features(&g, &g.nodes[0]);
-        assert_eq!(f.len(), 13);
+        assert_eq!(f.len(), CONV_FEATURE_DIM);
         // flops is last and positive
-        assert!(f[12] > 0.0);
+        assert!(f[CONV_FEATURE_DIM - 1] > 0.0);
         assert_eq!(f[2], 32.0); // in_c
         assert_eq!(f[5], 64.0); // out_c (filters)
     }
@@ -225,8 +285,8 @@ mod tests {
         let t = b.grouped_conv(x, 64, 3, 1, 4);
         let g = b.finish(vec![t]);
         let f = features(&g, &g.nodes[0]);
-        assert_eq!(f.len(), 14);
-        assert_eq!(f[13], 4.0);
+        assert_eq!(f.len(), GROUPED_CONV_FEATURE_DIM);
+        assert_eq!(f[CONV_FEATURE_DIM], 4.0);
     }
 
     #[test]
@@ -240,10 +300,52 @@ mod tests {
         let ks = compile(&g, GpuKind::Mali, CompileOptions::default()).kernels;
         assert_eq!(ks.len(), 1);
         let f = kernel_features(&g, &ks[0]);
-        // conv features (13) + extra-input size + fused count
-        assert_eq!(f.len(), 15);
-        assert_eq!(f[13], 8.0 * 8.0 * 8.0); // the shortcut tensor
-        assert_eq!(f[14], 2.0); // add + relu fused
+        // conv features + extra-input size + fused count
+        assert_eq!(f.len(), CONV_KERNEL_FEATURE_DIM);
+        assert_eq!(f[CONV_FEATURE_DIM], 8.0 * 8.0 * 8.0); // the shortcut tensor
+        assert_eq!(f[CONV_FEATURE_DIM + 1], 2.0); // add + relu fused
+    }
+
+    #[test]
+    fn pad_features_truncates_and_pads() {
+        let mut v = vec![1.0, 2.0, 3.0];
+        pad_features(&mut v, 5);
+        assert_eq!(v, vec![1.0, 2.0, 3.0, 0.0, 0.0]);
+        pad_features(&mut v, 2);
+        assert_eq!(v, vec![1.0, 2.0]);
+    }
+
+    #[test]
+    fn conform_conv_kernel_row_aligns_grouped_rows() {
+        // A grouped-conv kernel row (14 op features + 2 fused extras) must
+        // conform to the merged Conv2D layout: group count and fused extras
+        // dropped, zero-padded back to the fused conv kernel width.
+        let mut v: Vec<f64> = (1..=16).map(|i| i as f64).collect();
+        conform_conv_kernel_row(&mut v);
+        assert_eq!(v.len(), CONV_KERNEL_FEATURE_DIM);
+        assert_eq!(v[CONV_FEATURE_DIM - 1], 13.0);
+        assert_eq!(&v[CONV_FEATURE_DIM..], &[0.0, 0.0]);
+    }
+
+    #[test]
+    fn standardizer_json_roundtrip_bit_identical() {
+        let rows: Vec<Vec<f64>> = (0..40)
+            .map(|i| vec![i as f64 * 0.37, (i * i) as f64 * 0.011, 5.0])
+            .collect();
+        let s = Standardizer::fit(&rows);
+        let back =
+            Standardizer::from_json(&Json::parse(&s.to_json().to_string()).unwrap()).unwrap();
+        for (a, b) in s.mean.iter().zip(&back.mean) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        for (a, b) in s.std.iter().zip(&back.std) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        // Mismatched lengths rejected.
+        assert!(Standardizer::from_json(
+            &Json::parse(r#"{"mean":[1,2],"std":[1]}"#).unwrap()
+        )
+        .is_err());
     }
 
     #[test]

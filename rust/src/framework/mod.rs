@@ -7,8 +7,12 @@
 //! from one-time profiling data (Section 4.2); (4) report
 //! `T_overhead + Σ_c f*_c(x_c)`, where `T_overhead` is the mean measured
 //! gap between end-to-end latency and the op sum on the training set.
+//!
+//! [`ScenarioPredictor`] is the training-side view; for the train-once /
+//! serialize / load / batch-predict serving path built on top of it, see
+//! `crate::engine` ([`deduce_units`] is shared by both).
 
-use crate::features::{bucket_of, cpu_bucket, features, kernel_features};
+use crate::features::{bucket_of, conform_conv_kernel_row, cpu_bucket, features, kernel_features};
 use crate::graph::Graph;
 use crate::predict::{mlp::MlpContext, train, Method, TrainedModel};
 use crate::profiler::{bucket_datasets, ModelProfile};
@@ -28,6 +32,26 @@ pub enum DeductionMode {
     NoFusion,
     /// Ignore kernel selection: all convolutions use the Conv2D bucket.
     NoSelection,
+}
+
+impl DeductionMode {
+    /// Stable name used by the CLI and bundle files.
+    pub fn name(&self) -> &'static str {
+        match self {
+            DeductionMode::Full => "full",
+            DeductionMode::NoFusion => "nofusion",
+            DeductionMode::NoSelection => "noselection",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<DeductionMode> {
+        match s.to_ascii_lowercase().as_str() {
+            "full" => Some(DeductionMode::Full),
+            "nofusion" | "no_fusion" => Some(DeductionMode::NoFusion),
+            "noselection" | "no_selection" => Some(DeductionMode::NoSelection),
+            _ => None,
+        }
+    }
 }
 
 /// A trained end-to-end predictor for one scenario.
@@ -54,7 +78,66 @@ fn ablate_bucket(bucket: &str, mode: DeductionMode) -> String {
     }
 }
 
+/// Deduce the predicted units of a graph under a scenario: features + bucket
+/// for every op (CPU) or deduced kernel (GPU, fusion + selection per
+/// Section 4.1). Pure in (scenario, mode, graph) — the serving engine
+/// memoizes it by graph fingerprint.
+pub fn deduce_units(sc: &Scenario, mode: DeductionMode, g: &Graph) -> Vec<(String, Vec<f64>)> {
+    match &sc.target {
+        Target::Cpu { .. } => g
+            .nodes
+            .iter()
+            .map(|n| (cpu_bucket(n), features(g, n)))
+            .collect(),
+        Target::Gpu { options } => {
+            let opts = match mode {
+                DeductionMode::Full => *options,
+                DeductionMode::NoFusion => CompileOptions { fusion: false, ..*options },
+                DeductionMode::NoSelection => *options,
+            };
+            let kernels = if opts.fusion {
+                compile(g, sc.soc.gpu.kind, opts).kernels
+            } else {
+                let mut ks = fusion::no_fuse(g);
+                for k in &mut ks {
+                    k.impl_ = crate::tflite::select::select_for_kernel(
+                        g,
+                        k,
+                        sc.soc.gpu.kind,
+                        opts,
+                    );
+                }
+                ks
+            };
+            kernels
+                .iter()
+                .map(|k| {
+                    let b = ablate_bucket(&bucket_of(g, k), mode);
+                    let mut f = kernel_features(g, k);
+                    if mode == DeductionMode::NoSelection {
+                        conform_conv_kernel_row(&mut f);
+                    }
+                    (b, f)
+                })
+                .collect()
+        }
+    }
+}
+
 impl<'a> ScenarioPredictor<'a> {
+    /// Assemble a predictor from already-trained parts — the path used when
+    /// loading a serialized `engine::PredictorBundle`.
+    pub fn from_parts(
+        scenario: Scenario,
+        method: Method,
+        mode: DeductionMode,
+        models: BTreeMap<String, TrainedModel<'a>>,
+        t_overhead_ms: f64,
+        fallback_ms: f64,
+    ) -> ScenarioPredictor<'a> {
+        ScenarioPredictor { scenario, method, mode, models, t_overhead_ms, fallback_ms }
+    }
+
     /// Train per-bucket models from profiles of the training architectures.
     pub fn train_from(
         scenario: &Scenario,
@@ -70,16 +153,10 @@ impl<'a> ScenarioPredictor<'a> {
             let mut merged = crate::profiler::BucketData::default();
             for b in ["Conv2D", "Winograd", "GroupedConv2D", "NaiveGroupedConv2D"] {
                 if let Some(d) = data.remove(b) {
-                    // Drop the group-count feature where present so rows align.
+                    // Drop the group-count feature where present so rows
+                    // align (same conform as prediction-time deduction).
                     for (mut x, y) in d.x.into_iter().zip(d.y) {
-                        x.truncate(crate::features::feature_dim(
-                            crate::graph::OpType::Conv2D,
-                            false,
-                        ));
-                        // kernel rows carry 2 extra fused-features; re-pad.
-                        while x.len() < 15 {
-                            x.push(0.0);
-                        }
+                        conform_conv_kernel_row(&mut x);
                         merged.x.push(x);
                         merged.y.push(y);
                     }
@@ -112,48 +189,7 @@ impl<'a> ScenarioPredictor<'a> {
     /// Features + bucket for every predicted unit of a graph under this
     /// scenario (CPU: ops; GPU: deduced kernels).
     pub fn units(&self, g: &Graph) -> Vec<(String, Vec<f64>)> {
-        match &self.scenario.target {
-            Target::Cpu { .. } => g
-                .nodes
-                .iter()
-                .map(|n| (cpu_bucket(n), features(g, n)))
-                .collect(),
-            Target::Gpu { options } => {
-                let opts = match self.mode {
-                    DeductionMode::Full => *options,
-                    DeductionMode::NoFusion => CompileOptions { fusion: false, ..*options },
-                    DeductionMode::NoSelection => *options,
-                };
-                let kernels = if opts.fusion {
-                    compile(g, self.scenario.soc.gpu.kind, opts).kernels
-                } else {
-                    let mut ks = fusion::no_fuse(g);
-                    for k in &mut ks {
-                        k.impl_ = crate::tflite::select::select_for_kernel(
-                            g,
-                            k,
-                            self.scenario.soc.gpu.kind,
-                            opts,
-                        );
-                    }
-                    ks
-                };
-                kernels
-                    .iter()
-                    .map(|k| {
-                        let b = ablate_bucket(&bucket_of(g, k), self.mode);
-                        let mut f = kernel_features(g, k);
-                        if self.mode == DeductionMode::NoSelection {
-                            f.truncate(13);
-                            while f.len() < 15 {
-                                f.push(0.0);
-                            }
-                        }
-                        (b, f)
-                    })
-                    .collect()
-            }
-        }
+        deduce_units(&self.scenario, self.mode, g)
     }
 
     /// Predict the latency of each unit.
@@ -195,20 +231,21 @@ pub fn evaluate(
     let mut e2e_meas = Vec::new();
     let mut bucket_pred: BTreeMap<String, (Vec<f64>, Vec<f64>)> = BTreeMap::new();
     for (g, p) in test_graphs.iter().zip(test_profiles) {
-        let e = pred.predict(g);
+        // One deduction pass per graph: the unit predictions also yield the
+        // end-to-end sum (the old predict + predict_units pair deduced the
+        // kernels twice).
+        let units = pred.predict_units(g);
+        let e = pred.t_overhead_ms + units.iter().map(|(_, ms)| ms).sum::<f64>();
         predictions.push((g.name.clone(), e, p.end_to_end_ms));
         e2e_pred.push(e);
         e2e_meas.push(p.end_to_end_ms);
         // Per-unit comparison: deduced units must align with measured ops
         // when the deduction mode matches the device compilation (Full).
-        if pred.mode == DeductionMode::Full {
-            let units = pred.predict_units(g);
-            if units.len() == p.ops.len() {
-                for ((b, pm), o) in units.iter().zip(&p.ops) {
-                    let e = bucket_pred.entry(b.clone()).or_default();
-                    e.0.push(*pm);
-                    e.1.push(o.latency_ms);
-                }
+        if pred.mode == DeductionMode::Full && units.len() == p.ops.len() {
+            for ((b, pm), o) in units.iter().zip(&p.ops) {
+                let e = bucket_pred.entry(b.clone()).or_default();
+                e.0.push(*pm);
+                e.1.push(o.latency_ms);
             }
         }
     }

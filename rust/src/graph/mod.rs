@@ -88,6 +88,48 @@ impl Graph {
             .sum()
     }
 
+    /// Structural fingerprint (FNV-1a over ops, shapes and connectivity).
+    /// Excludes the model name, so renamed copies of the same architecture
+    /// hash alike; `engine::LatencyEngine` uses it to memoize kernel
+    /// deduction. Stable within a process run (in-memory cache key only —
+    /// not a persisted format).
+    pub fn fingerprint(&self) -> u64 {
+        fn eat(h: u64, bytes: &[u8]) -> u64 {
+            let mut h = h;
+            for &b in bytes {
+                h ^= b as u64;
+                h = h.wrapping_mul(0x0000_0100_0000_01b3);
+            }
+            h
+        }
+        let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+        h = eat(h, &(self.tensors.len() as u64).to_le_bytes());
+        for t in &self.tensors {
+            for d in [t.shape.h, t.shape.w, t.shape.c] {
+                h = eat(h, &(d as u64).to_le_bytes());
+            }
+        }
+        for n in &self.nodes {
+            h = eat(h, format!("{:?}", n.op).as_bytes());
+            for &i in &n.inputs {
+                h = eat(h, &(i as u64).to_le_bytes());
+            }
+            h = eat(h, b"|");
+            for &o in &n.outputs {
+                h = eat(h, &(o as u64).to_le_bytes());
+            }
+            h = eat(h, b";");
+        }
+        for &t in &self.inputs {
+            h = eat(h, &(t as u64).to_le_bytes());
+        }
+        h = eat(h, b"#");
+        for &t in &self.outputs {
+            h = eat(h, &(t as u64).to_le_bytes());
+        }
+        h
+    }
+
     /// Count of nodes per coarse op type.
     pub fn op_type_histogram(&self) -> HashMap<OpType, usize> {
         let mut h = HashMap::new();
@@ -309,6 +351,23 @@ mod tests {
     fn grouped_conv_divisibility_enforced() {
         let op = Op::Conv2D { kh: 3, kw: 3, stride: 1, padding: Padding::Same, out_c: 32, groups: 5 };
         assert!(infer_shapes(&op, &[Shape::new(8, 8, 30)]).is_err());
+    }
+
+    #[test]
+    fn fingerprint_ignores_name_but_not_structure() {
+        let g1 = tiny_graph();
+        let mut g2 = tiny_graph();
+        g2.name = "renamed".into();
+        assert_eq!(g1.fingerprint(), g2.fingerprint());
+        // A structural change must move the fingerprint.
+        let mut b = GraphBuilder::new("tiny", 8, 8, 3);
+        let x = b.input_tensor();
+        let t = b.conv(x, 32, 3, 2, Padding::Same); // 32 filters, not 16
+        let t = b.relu(t);
+        let t = b.mean(t);
+        let t = b.fc(t, 10);
+        let g3 = b.finish(vec![t]);
+        assert_ne!(g1.fingerprint(), g3.fingerprint());
     }
 
     #[test]

@@ -6,11 +6,20 @@
 //! big.LITTLE CPU + mobile-GPU substrate (see DESIGN.md for the hardware
 //! substitution argument).
 //!
-//! Architecture (three layers):
-//! - **L3 (this crate)**: computational-graph IR, real-world model zoo, NAS
-//!   sampler, TFLite compile simulation (kernel fusion/selection), device
-//!   simulator, profiler, feature extraction, Lasso/RF/GBDT predictors, and
-//!   the end-to-end prediction framework + evaluation harness.
+//! Architecture (three layers, with the top layer split into an offline
+//! training path and an online serving path):
+//! - **L3 offline (this crate)**: computational-graph IR (`graph`),
+//!   real-world model zoo (`zoo`), NAS sampler (`nas`), TFLite compile
+//!   simulation — kernel fusion/selection (`tflite`) — device simulator
+//!   (`device`), profiler (`profiler`), feature extraction (`features`),
+//!   Lasso/RF/GBDT/MLP predictors (`predict`), and the end-to-end training
+//!   + evaluation framework (`framework`, `report`).
+//! - **L3 serving (`engine`)**: the train-once / serialize / load /
+//!   batch-predict layer. A trained predictor becomes a versioned
+//!   `PredictorBundle` file; a `Send + Sync` `LatencyEngine` loads one or
+//!   more bundles, memoizes kernel deduction per graph fingerprint, and
+//!   serves `PredictRequest`s — single or batched across threads — at NAS
+//!   search rate without retraining.
 //! - **L2 (python/compile/model.py, build-time only)**: the MLP latency
 //!   predictor's forward/backward in JAX, AOT-lowered to HLO text.
 //! - **L1 (python/compile/kernels/, build-time only)**: the MLP's fused
@@ -18,9 +27,12 @@
 //!   oracle.
 //!
 //! The rust binary executes the AOT-compiled MLP via the PJRT C API
-//! (`runtime`); Python never runs on the request path.
+//! (`runtime`); Python never runs on the request path. The MLP stays
+//! engine-external (PJRT handles are neither serializable nor `Send`);
+//! the serving engine covers the three native methods.
 
 pub mod device;
+pub mod engine;
 pub mod graph;
 pub mod features;
 pub mod framework;

@@ -4,18 +4,20 @@
 //!   reproduce   regenerate paper figures/tables (see DESIGN.md §6)
 //!   generate    emit model files (zoo / synthetic NAS samples)
 //!   profile     profile a model under a scenario on the simulated device
-//!   evaluate    train + evaluate a predictor for a scenario
+//!   train       train a predictor once and serialize it as a bundle
+//!   evaluate    train (or load) + evaluate a predictor for a scenario
 //!   predict     end-to-end latency prediction for a model file
 //!   list        list scenarios / zoo models
 //!
 //! Arg parsing is hand-rolled: the offline crate set has no clap.
 
+use edgelat::engine::{EngineBuilder, PredictRequest, PredictorBundle};
 use edgelat::framework::{evaluate, DeductionMode, ScenarioPredictor};
 use edgelat::graph::modelfile;
 use edgelat::predict::Method;
 use edgelat::profiler::{profile, profile_set};
 use edgelat::report::{all_ids, reproduce, ReportConfig, ReportCtx};
-use edgelat::scenario::{all_scenarios, by_id};
+use edgelat::scenario::{all_scenarios, by_id, Scenario};
 use edgelat::util::table::ms;
 
 fn main() {
@@ -26,6 +28,7 @@ fn main() {
         "reproduce" => cmd_reproduce(rest),
         "generate" => cmd_generate(rest),
         "profile" => cmd_profile(rest),
+        "train" => cmd_train(rest),
         "evaluate" => cmd_evaluate(rest),
         "predict" => cmd_predict(rest),
         "list" => cmd_list(rest),
@@ -46,9 +49,17 @@ USAGE:
   edgelat reproduce [--figure ID | --all] [--full|--smoke] [--seed S] [--csv DIR]
   edgelat generate  [--zoo | --synth N] [--seed S] --out DIR
   edgelat profile   --model NAME --scenario ID [--runs R] [--seed S]
-  edgelat evaluate  --scenario ID --method {{lasso|rf|gbdt|mlp}} [--train N] [--test {{synth|zoo}}]
-  edgelat predict   --model-file PATH --scenario ID [--method M] [--train N]
+  edgelat train     --scenario ID --method {{lasso|rf|gbdt}} --out BUNDLE.json
+                    [--mode {{full|nofusion|noselection}}] [--train N] [--runs R] [--seed S]
+  edgelat evaluate  --scenario ID [--method {{lasso|rf|gbdt|mlp}} | --bundle BUNDLE.json]
+                    [--train N] [--test {{synth|zoo}}] [--seed S] [--out BUNDLE.json]
+  edgelat predict   --model-file PATH [--bundle BUNDLE.json | --scenario ID [--method M]
+                    [--train N] [--seed S] [--out BUNDLE.json]]
   edgelat list      {{scenarios|models|figures}}
+
+The train-once/serve workflow: `train` profiles synthetic NAs once and writes
+a serialized predictor bundle; `predict --bundle` / `evaluate --bundle` then
+serve from it without re-profiling or retraining.
 
 Figures/tables: {}",
         all_ids().join(" ")
@@ -64,16 +75,82 @@ fn has(rest: &[String], name: &str) -> bool {
 }
 
 fn parse_method(s: &str) -> Method {
-    match s.to_lowercase().as_str() {
-        "lasso" => Method::Lasso,
-        "rf" | "randomforest" => Method::RandomForest,
-        "gbdt" => Method::Gbdt,
-        "mlp" => Method::Mlp,
-        other => {
-            eprintln!("unknown method '{other}'");
+    Method::parse(s).unwrap_or_else(|| {
+        eprintln!("unknown method '{s}' (lasso|rf|gbdt|mlp)");
+        std::process::exit(2);
+    })
+}
+
+// Shared flag parsers: every subcommand that trains reads the same seed /
+// training-set-size / repetition defaults, so `predict` and `evaluate`
+// cannot drift apart again.
+const DEFAULT_SEED: u64 = 2022;
+const DEFAULT_TRAIN: usize = 120;
+const DEFAULT_RUNS: usize = 5;
+
+fn seed_flag(rest: &[String]) -> u64 {
+    flag(rest, "--seed").map(|s| s.parse().expect("--seed u64")).unwrap_or(DEFAULT_SEED)
+}
+
+fn train_flag(rest: &[String]) -> usize {
+    flag(rest, "--train").map(|s| s.parse().expect("--train N")).unwrap_or(DEFAULT_TRAIN)
+}
+
+fn runs_flag(rest: &[String]) -> usize {
+    flag(rest, "--runs").map(|s| s.parse().expect("--runs R")).unwrap_or(DEFAULT_RUNS)
+}
+
+fn mode_flag(rest: &[String]) -> DeductionMode {
+    match flag(rest, "--mode") {
+        None => DeductionMode::Full,
+        Some(s) => DeductionMode::parse(&s).unwrap_or_else(|| {
+            eprintln!("unknown mode '{s}' (full|nofusion|noselection)");
             std::process::exit(2);
-        }
+        }),
     }
+}
+
+fn scenario_flag(rest: &[String]) -> Scenario {
+    let sc_id = flag(rest, "--scenario").unwrap_or_else(|| {
+        eprintln!("need --scenario ID (see `edgelat list scenarios`)");
+        std::process::exit(2);
+    });
+    by_id(&sc_id).unwrap_or_else(|| {
+        eprintln!("unknown scenario '{sc_id}' (see `edgelat list scenarios`)");
+        std::process::exit(2);
+    })
+}
+
+/// Profile `n` synthetic NAS architectures and train a scenario predictor —
+/// the shared one-time training path behind `train`, `evaluate`, `predict`.
+fn train_predictor(
+    sc: &Scenario,
+    method: Method,
+    mode: DeductionMode,
+    n_train: usize,
+    seed: u64,
+    runs: usize,
+) -> ScenarioPredictor<'static> {
+    let train_g: Vec<_> =
+        edgelat::nas::sample_dataset(seed, n_train).into_iter().map(|a| a.graph).collect();
+    let tr_p = profile_set(sc, &train_g, seed, runs);
+    ScenarioPredictor::train_from(sc, &tr_p, method, mode, seed, None)
+}
+
+/// Honor `--out BUNDLE.json` after training. The flag is an explicit
+/// request, so failing to produce the bundle is a hard error (exit 2),
+/// consistent with `edgelat train`.
+fn maybe_save_bundle(rest: &[String], pred: &ScenarioPredictor) {
+    let Some(out) = flag(rest, "--out") else { return };
+    let b = PredictorBundle::from_predictor(pred).unwrap_or_else(|e| {
+        eprintln!("cannot save bundle {out}: {e}");
+        std::process::exit(2);
+    });
+    b.save(&out).unwrap_or_else(|e| {
+        eprintln!("writing bundle {out}: {e}");
+        std::process::exit(2);
+    });
+    println!("wrote bundle {out} ({} bucket models)", b.models.len());
 }
 
 fn report_config(rest: &[String]) -> ReportConfig {
@@ -130,7 +207,7 @@ fn cmd_reproduce(rest: &[String]) {
 fn cmd_generate(rest: &[String]) {
     let out = flag(rest, "--out").unwrap_or_else(|| "models".into());
     std::fs::create_dir_all(&out).expect("mkdir out");
-    let seed: u64 = flag(rest, "--seed").map(|s| s.parse().unwrap()).unwrap_or(2022);
+    let seed = seed_flag(rest);
     let graphs = if let Some(n) = flag(rest, "--synth") {
         edgelat::nas::sample_dataset(seed, n.parse().expect("--synth N"))
             .into_iter()
@@ -148,9 +225,8 @@ fn cmd_generate(rest: &[String]) {
 
 fn cmd_profile(rest: &[String]) {
     let name = flag(rest, "--model").expect("--model NAME");
-    let sc_id = flag(rest, "--scenario").expect("--scenario ID");
     let runs: usize = flag(rest, "--runs").map(|s| s.parse().unwrap()).unwrap_or(10);
-    let seed: u64 = flag(rest, "--seed").map(|s| s.parse().unwrap()).unwrap_or(2022);
+    let seed = seed_flag(rest);
     let g = edgelat::zoo::by_name(&name)
         .or_else(|| {
             std::fs::read_to_string(&name).ok().and_then(|s| modelfile::from_model_file(&s).ok())
@@ -159,10 +235,7 @@ fn cmd_profile(rest: &[String]) {
             eprintln!("model '{name}' not in zoo and not a readable model file");
             std::process::exit(2);
         });
-    let sc = by_id(&sc_id).unwrap_or_else(|| {
-        eprintln!("unknown scenario '{sc_id}' (see `edgelat list scenarios`)");
-        std::process::exit(2);
-    });
+    let sc = scenario_flag(rest);
     let p = profile(&sc, &g, seed, runs);
     println!("model: {}  scenario: {}  runs: {runs}", p.model, sc.id);
     println!(
@@ -180,20 +253,65 @@ fn cmd_profile(rest: &[String]) {
     }
 }
 
-fn cmd_evaluate(rest: &[String]) {
-    let sc_id = flag(rest, "--scenario").expect("--scenario ID");
+fn cmd_train(rest: &[String]) {
+    let sc = scenario_flag(rest);
+    let out = flag(rest, "--out").unwrap_or_else(|| {
+        eprintln!("need --out BUNDLE.json");
+        std::process::exit(2);
+    });
     let method = parse_method(&flag(rest, "--method").unwrap_or_else(|| "gbdt".into()));
-    let n_train: usize = flag(rest, "--train").map(|s| s.parse().unwrap()).unwrap_or(120);
+    if method == Method::Mlp {
+        eprintln!("bundles hold the native methods (lasso|rf|gbdt); the MLP stays engine-external");
+        std::process::exit(2);
+    }
+    let (n_train, seed, runs) = (train_flag(rest), seed_flag(rest), runs_flag(rest));
+    let mode = mode_flag(rest);
+    let t0 = std::time::Instant::now();
+    let pred = train_predictor(&sc, method, mode, n_train, seed, runs);
+    let bundle = PredictorBundle::from_predictor(&pred).unwrap_or_else(|e| {
+        eprintln!("{e}");
+        std::process::exit(2);
+    });
+    bundle.save(&out).unwrap_or_else(|e| {
+        eprintln!("writing bundle {out}: {e}");
+        std::process::exit(2);
+    });
+    println!(
+        "trained {} on {} ({} NAs, {} runs) in {:.1}s",
+        method.name(),
+        sc.id,
+        n_train,
+        runs,
+        t0.elapsed().as_secs_f64()
+    );
+    println!(
+        "wrote {out}: {} bucket models, T_overhead {} ms",
+        bundle.models.len(),
+        ms(bundle.t_overhead_ms)
+    );
+    for (b, d) in bundle.feature_dims() {
+        println!("  {b:<24} {d} features");
+    }
+}
+
+fn cmd_evaluate(rest: &[String]) {
+    let sc = scenario_flag(rest);
     let test = flag(rest, "--test").unwrap_or_else(|| "synth".into());
-    let seed: u64 = flag(rest, "--seed").map(|s| s.parse().unwrap()).unwrap_or(2022);
-    let sc = by_id(&sc_id).expect("unknown scenario");
+    let (n_train, seed, runs) = (train_flag(rest), seed_flag(rest), runs_flag(rest));
+    let bundle_path = flag(rest, "--bundle");
     let train_g: Vec<_> = edgelat::nas::sample_dataset(seed, n_train + 40)
         .into_iter()
         .map(|a| a.graph)
         .collect();
     let (tr_g, te_synth) = train_g.split_at(n_train);
-    let tr_p = profile_set(&sc, tr_g, seed, 5);
-    let mlp_ctx = if method == Method::Mlp {
+    let method = parse_method(&flag(rest, "--method").unwrap_or_else(|| "gbdt".into()));
+    // Fail before the minutes of profiling/training, not after: an MLP
+    // predictor can never satisfy a requested --out bundle.
+    if method == Method::Mlp && bundle_path.is_none() && flag(rest, "--out").is_some() {
+        eprintln!("--out: bundles hold the native methods (lasso|rf|gbdt); the MLP is not serializable");
+        std::process::exit(2);
+    }
+    let mlp_ctx = if method == Method::Mlp && bundle_path.is_none() {
         Some(
             edgelat::predict::mlp::MlpContext::load(edgelat::runtime::Runtime::default_dir())
                 .expect("MLP needs artifacts (make artifacts)"),
@@ -201,28 +319,67 @@ fn cmd_evaluate(rest: &[String]) {
     } else {
         None
     };
-    let pred = ScenarioPredictor::train_from(
-        &sc,
-        &tr_p,
-        method,
-        DeductionMode::Full,
-        seed,
-        mlp_ctx.as_ref(),
-    );
+    let pred = if let Some(bp) = &bundle_path {
+        // Serve from a bundle: no profiling of training NAs, no retraining.
+        let b = PredictorBundle::load(bp).unwrap_or_else(|e| {
+            eprintln!("loading bundle {bp}: {e}");
+            std::process::exit(2);
+        });
+        if b.scenario_id != sc.id {
+            eprintln!("bundle {bp} was trained for scenario {} (got --scenario {})", b.scenario_id, sc.id);
+            std::process::exit(2);
+        }
+        // --method must not silently disagree with what the bundle holds.
+        if flag(rest, "--method").is_some() && method != b.method {
+            eprintln!(
+                "bundle {bp} holds {} models but --method {} was requested; drop --method or retrain",
+                b.method.name(),
+                method.name()
+            );
+            std::process::exit(2);
+        }
+        if test != "zoo" {
+            // The bundle does not record its training seed/size, so the
+            // synthetic test split drawn here may overlap the NAs the
+            // bundle was trained on if the seeds coincide.
+            eprintln!(
+                "note: synthetic test NAs are drawn with --seed {seed}; if the bundle was \
+                 trained from the same seed, held-out MAPE may be optimistic (use --test zoo \
+                 or a different --seed for a clean split)"
+            );
+        }
+        b.to_predictor().unwrap_or_else(|e| {
+            eprintln!("{e}");
+            std::process::exit(2);
+        })
+    } else {
+        let tr_p = profile_set(&sc, tr_g, seed, runs);
+        ScenarioPredictor::train_from(
+            &sc,
+            &tr_p,
+            method,
+            DeductionMode::Full,
+            seed,
+            mlp_ctx.as_ref(),
+        )
+    };
     let (te_g, te_p): (Vec<_>, Vec<_>) = if test == "zoo" {
         let g = edgelat::zoo::all_graphs();
-        let p = profile_set(&sc, &g, seed, 5);
+        let p = profile_set(&sc, &g, seed, runs);
         (g, p)
     } else {
-        let p = profile_set(&sc, te_synth, seed, 5);
+        let p = profile_set(&sc, te_synth, seed, runs);
         (te_synth.to_vec(), p)
     };
     let ev = evaluate(&pred, &te_g, &te_p);
     println!(
-        "scenario {}  method {}  train {}  test {} ({} NAs)",
+        "scenario {}  method {}{}  test {} ({} NAs)",
         sc.id,
-        method.name(),
-        n_train,
+        pred.method.name(),
+        match &bundle_path {
+            Some(bp) => format!("  bundle {bp}"),
+            None => format!("  train {n_train}"),
+        },
         test,
         te_g.len()
     );
@@ -231,26 +388,76 @@ fn cmd_evaluate(rest: &[String]) {
     for (b, m) in &ev.per_bucket_mape {
         println!("  {b:<24} MAPE {:.2}%", m * 100.0);
     }
+    maybe_save_bundle(rest, &pred);
 }
 
 fn cmd_predict(rest: &[String]) {
     let path = flag(rest, "--model-file").expect("--model-file PATH");
-    let sc_id = flag(rest, "--scenario").expect("--scenario ID");
-    let method = parse_method(&flag(rest, "--method").unwrap_or_else(|| "gbdt".into()));
-    let n_train: usize = flag(rest, "--train").map(|s| s.parse().unwrap()).unwrap_or(120);
-    let seed: u64 = 2022;
     let s = std::fs::read_to_string(&path).expect("reading model file");
     let g = modelfile::from_model_file(&s).expect("parsing model file");
-    let sc = by_id(&sc_id).expect("unknown scenario");
-    let train_g: Vec<_> =
-        edgelat::nas::sample_dataset(seed, n_train).into_iter().map(|a| a.graph).collect();
-    let tr_p = profile_set(&sc, &train_g, seed, 5);
-    let pred = ScenarioPredictor::train_from(&sc, &tr_p, method, DeductionMode::Full, seed, None);
+
+    if let Some(bp) = flag(rest, "--bundle") {
+        // Serving path: load the trained predictor, no re-profiling or
+        // retraining on this invocation.
+        let bundle = PredictorBundle::load(&bp).unwrap_or_else(|e| {
+            eprintln!("loading bundle {bp}: {e}");
+            std::process::exit(2);
+        });
+        // --out is an explicit request even here: re-save the loaded
+        // bundle (a validated copy) rather than silently ignoring it.
+        if let Some(out) = flag(rest, "--out") {
+            bundle.save(&out).unwrap_or_else(|e| {
+                eprintln!("writing bundle {out}: {e}");
+                std::process::exit(2);
+            });
+            println!("wrote bundle {out} ({} bucket models)", bundle.models.len());
+        }
+        let engine = EngineBuilder::new().bundle(bundle).build().unwrap_or_else(|e| {
+            eprintln!("{e}");
+            std::process::exit(2);
+        });
+        // Default to the bundle's own scenario; --scenario can override
+        // (useful once multiple bundles are loaded). An explicit --method
+        // is enforced by the engine rather than silently ignored.
+        let sc_id = flag(rest, "--scenario")
+            .unwrap_or_else(|| engine.scenario_ids()[0].to_string());
+        let mut req = PredictRequest::new(&g, sc_id.clone());
+        if let Some(m) = flag(rest, "--method") {
+            req = req.with_method(parse_method(&m));
+        }
+        let resp = engine.predict(&req).unwrap_or_else(|e| {
+            eprintln!("{e}");
+            std::process::exit(2);
+        });
+        println!(
+            "{}: predicted end-to-end latency on {} = {} ms  (bundle {bp}, no retraining)",
+            g.name,
+            sc_id,
+            ms(resp.e2e_ms)
+        );
+        for (b, m) in resp.per_unit.iter().take(30) {
+            println!("  {b:<24} {} ms", ms(*m));
+        }
+        if resp.per_unit.len() > 30 {
+            println!("  ... ({} more units)", resp.per_unit.len() - 30);
+        }
+        if resp.fallback_units > 0 {
+            println!("note: {} unit(s) fell back to the global mean (bucket unseen in training)", resp.fallback_units);
+        }
+        return;
+    }
+
+    // Train-in-place path (one-off): same shared flags as `evaluate`.
+    let sc = scenario_flag(rest);
+    let method = parse_method(&flag(rest, "--method").unwrap_or_else(|| "gbdt".into()));
+    let (n_train, seed, runs) = (train_flag(rest), seed_flag(rest), runs_flag(rest));
+    let pred = train_predictor(&sc, method, DeductionMode::Full, n_train, seed, runs);
     let e = pred.predict(&g);
     println!("{}: predicted end-to-end latency on {} = {} ms", g.name, sc.id, ms(e));
     for (b, m) in pred.predict_units(&g).iter().take(30) {
         println!("  {b:<24} {} ms", ms(*m));
     }
+    maybe_save_bundle(rest, &pred);
 }
 
 fn cmd_list(rest: &[String]) {

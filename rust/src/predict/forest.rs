@@ -5,7 +5,7 @@
 use crate::predict::cv;
 use crate::predict::tree::{Tree, TreeParams};
 use crate::predict::Regressor;
-use crate::util::Rng;
+use crate::util::{Json, Rng};
 
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct ForestParams {
@@ -13,6 +13,7 @@ pub struct ForestParams {
     pub min_samples_split: usize,
 }
 
+#[derive(Debug, Clone)]
 pub struct RandomForest {
     pub trees: Vec<Tree>,
     pub params: ForestParams,
@@ -56,6 +57,37 @@ impl RandomForest {
         });
         RandomForest::fit(x, y, best, seed)
     }
+
+    /// Serialize for `engine::bundle`.
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("kind", Json::str("rf")),
+            ("n_trees", Json::Num(self.params.n_trees as f64)),
+            ("min_samples_split", Json::Num(self.params.min_samples_split as f64)),
+            ("trees", Json::Arr(self.trees.iter().map(Tree::to_json).collect())),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Result<RandomForest, String> {
+        let trees: Vec<Tree> = j
+            .req("trees")?
+            .as_arr()
+            .ok_or("rf: 'trees' is not an array")?
+            .iter()
+            .enumerate()
+            .map(|(i, t)| Tree::from_json(t).map_err(|e| format!("rf tree {i}: {e}")))
+            .collect::<Result<_, _>>()?;
+        if trees.is_empty() {
+            return Err("rf: no trees".into());
+        }
+        Ok(RandomForest {
+            trees,
+            params: ForestParams {
+                n_trees: j.req_usize("n_trees")?,
+                min_samples_split: j.req_usize("min_samples_split")?,
+            },
+        })
+    }
 }
 
 impl Regressor for RandomForest {
@@ -96,6 +128,19 @@ mod tests {
         let f = RandomForest::fit_cv(&x, &y, 8);
         assert!((1..=10).contains(&f.params.n_trees));
         assert!((2..=50).contains(&f.params.min_samples_split));
+    }
+
+    #[test]
+    fn json_roundtrip_is_bit_identical() {
+        let (x, y) = crate::predict::toy_problem(200, 13);
+        let f = RandomForest::fit(&x, &y, ForestParams { n_trees: 4, min_samples_split: 4 }, 5);
+        let back =
+            RandomForest::from_json(&Json::parse(&f.to_json().to_string()).unwrap()).unwrap();
+        assert_eq!(back.params, f.params);
+        assert_eq!(back.trees.len(), f.trees.len());
+        for v in x.iter().take(30) {
+            assert_eq!(f.predict_one(v).to_bits(), back.predict_one(v).to_bits());
+        }
     }
 
     #[test]

@@ -6,6 +6,7 @@
 use crate::predict::cv;
 use crate::predict::tree::{Tree, TreeParams};
 use crate::predict::Regressor;
+use crate::util::Json;
 
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct GbdtParams {
@@ -21,6 +22,7 @@ impl Default for GbdtParams {
     }
 }
 
+#[derive(Debug, Clone)]
 pub struct Gbdt {
     pub init: f64,
     pub trees: Vec<Tree>,
@@ -106,6 +108,51 @@ impl Gbdt {
         }
         Gbdt::fit(x, y, best.1, seed)
     }
+
+    /// Serialize for `engine::bundle` (init/shrinkage/trees round-trip
+    /// bit-exactly, so boosted predictions are reproduced bit-identically).
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("kind", Json::str("gbdt")),
+            ("init", Json::Num(self.init)),
+            ("n_stages", Json::Num(self.params.n_stages as f64)),
+            ("min_samples_split", Json::Num(self.params.min_samples_split as f64)),
+            ("learning_rate", Json::Num(self.params.learning_rate)),
+            ("max_depth", Json::Num(self.params.max_depth as f64)),
+            ("trees", Json::Arr(self.trees.iter().map(Tree::to_json).collect())),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Result<Gbdt, String> {
+        let trees: Vec<Tree> = j
+            .req("trees")?
+            .as_arr()
+            .ok_or("gbdt: 'trees' is not an array")?
+            .iter()
+            .enumerate()
+            .map(|(i, t)| Tree::from_json(t).map_err(|e| format!("gbdt tree {i}: {e}")))
+            .collect::<Result<_, _>>()?;
+        if trees.is_empty() {
+            // fit_cv always boosts at least one stage; an empty ensemble
+            // means a truncated/corrupted bundle, not a trained model.
+            return Err("gbdt: no trees".into());
+        }
+        let init = j.req_f64("init")?;
+        let learning_rate = j.req_f64("learning_rate")?;
+        if !init.is_finite() || !learning_rate.is_finite() {
+            return Err("gbdt: non-finite init/learning_rate".into());
+        }
+        Ok(Gbdt {
+            init,
+            trees,
+            params: GbdtParams {
+                n_stages: j.req_usize("n_stages")?,
+                min_samples_split: j.req_usize("min_samples_split")?,
+                learning_rate,
+                max_depth: j.req_usize("max_depth")?,
+            },
+        })
+    }
 }
 
 impl Regressor for Gbdt {
@@ -148,6 +195,18 @@ mod tests {
         let m = Gbdt::fit_cv(&x, &y, 7);
         assert!((1..=200).contains(&m.params.n_stages));
         assert!((2..=7).contains(&m.params.min_samples_split));
+    }
+
+    #[test]
+    fn json_roundtrip_is_bit_identical() {
+        let (x, y) = crate::predict::toy_problem(150, 14);
+        let m = Gbdt::fit(&x, &y, GbdtParams { n_stages: 30, ..Default::default() }, 9);
+        let back = Gbdt::from_json(&Json::parse(&m.to_json().to_string()).unwrap()).unwrap();
+        assert_eq!(back.init.to_bits(), m.init.to_bits());
+        assert_eq!(back.trees.len(), m.trees.len());
+        for v in x.iter().take(30) {
+            assert_eq!(m.predict_one(v).to_bits(), back.predict_one(v).to_bits());
+        }
     }
 
     #[test]

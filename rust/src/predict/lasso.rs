@@ -4,6 +4,7 @@
 //! descent. The alpha hyperparameter is grid-searched over [1e-5, 1e2].
 
 use crate::predict::{cv, Regressor};
+use crate::util::Json;
 
 #[derive(Debug, Clone)]
 pub struct Lasso {
@@ -100,6 +101,28 @@ impl Lasso {
             move |v: &[f64]| m.predict_one(v)
         });
         Lasso::fit(x, y, best)
+    }
+
+    /// Serialize for `engine::bundle` (weights round-trip bit-exactly).
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("kind", Json::str("lasso")),
+            ("weights", Json::from_f64s(&self.weights)),
+            ("intercept", Json::Num(self.intercept)),
+            ("alpha", Json::Num(self.alpha)),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Result<Lasso, String> {
+        let weights = j.req_f64_arr("weights")?;
+        if weights.is_empty() {
+            return Err("lasso: empty weight vector".into());
+        }
+        let intercept = j.req_f64("intercept")?;
+        if weights.iter().any(|w| !w.is_finite()) || !intercept.is_finite() {
+            return Err("lasso: non-finite weights/intercept".into());
+        }
+        Ok(Lasso { weights, intercept, alpha: j.req_f64("alpha")? })
     }
 
     /// Feature importance = weight magnitude (features are standardized, so
@@ -208,6 +231,20 @@ mod tests {
         let s = Standardizer::fit(&x);
         let m = Lasso::fit_cv(&s.transform_all(&x), &y, 7);
         assert!(m.alpha <= 1e-1, "alpha={}", m.alpha);
+    }
+
+    #[test]
+    fn json_roundtrip_is_bit_identical() {
+        let (x, y) = linear_data(120, 11);
+        let s = Standardizer::fit(&x);
+        let xs = s.transform_all(&x);
+        let m = Lasso::fit(&xs, &y, 1e-4);
+        let back =
+            Lasso::from_json(&Json::parse(&m.to_json().to_string()).unwrap()).unwrap();
+        assert_eq!(back.intercept.to_bits(), m.intercept.to_bits());
+        for v in xs.iter().take(20) {
+            assert_eq!(m.predict_one(v).to_bits(), back.predict_one(v).to_bits());
+        }
     }
 
     #[test]

@@ -15,12 +15,13 @@ pub mod mlp;
 pub mod tree;
 
 use crate::features::Standardizer;
-
+use crate::util::Json;
 
 /// A trained regressor over standardized feature vectors.
 ///
-/// Not `Send`: the MLP variant holds PJRT handles. Training and evaluation
-/// parallelism lives in the profiler (pure simulation), not in the models.
+/// Implementations need not be `Send`: the MLP variant holds PJRT handles.
+/// The serving path (`engine`) only uses the owned [`NativeModel`] variants,
+/// which are `Send + Sync`.
 pub trait Regressor {
     fn predict_one(&self, x: &[f64]) -> f64;
 
@@ -57,29 +58,196 @@ impl Method {
     pub fn native() -> &'static [Method] {
         &[Method::Lasso, Method::RandomForest, Method::Gbdt]
     }
+
+    /// Parse a method name as accepted by the CLI and bundle files.
+    pub fn parse(s: &str) -> Option<Method> {
+        match s.to_ascii_lowercase().as_str() {
+            "lasso" => Some(Method::Lasso),
+            "rf" | "randomforest" | "random_forest" => Some(Method::RandomForest),
+            "gbdt" => Some(Method::Gbdt),
+            "mlp" => Some(Method::Mlp),
+            _ => None,
+        }
+    }
 }
 
-/// A trained per-bucket model: standardizer + regressor + target floor.
-/// The lifetime ties MLP models to their PJRT context.
-pub struct TrainedModel<'a> {
+/// An owned, serializable regressor — the three from-scratch methods. Unlike
+/// the MLP (PJRT handles), these are plain data: `Send + Sync`, cloneable,
+/// and JSON round-trippable, which is what lets `engine::PredictorBundle`
+/// persist a trained predictor and serve it without retraining.
+#[derive(Clone)]
+pub enum NativeModel {
+    Lasso(lasso::Lasso),
+    RandomForest(forest::RandomForest),
+    Gbdt(gbdt::Gbdt),
+}
+
+impl NativeModel {
+    pub fn method(&self) -> Method {
+        match self {
+            NativeModel::Lasso(_) => Method::Lasso,
+            NativeModel::RandomForest(_) => Method::RandomForest,
+            NativeModel::Gbdt(_) => Method::Gbdt,
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        match self {
+            NativeModel::Lasso(m) => m.to_json(),
+            NativeModel::RandomForest(m) => m.to_json(),
+            NativeModel::Gbdt(m) => m.to_json(),
+        }
+    }
+
+    /// Dispatch on the `kind` tag written by each model's `to_json`.
+    pub fn from_json(j: &Json) -> Result<NativeModel, String> {
+        match j.req_str("kind")? {
+            "lasso" => lasso::Lasso::from_json(j).map(NativeModel::Lasso),
+            "rf" => forest::RandomForest::from_json(j).map(NativeModel::RandomForest),
+            "gbdt" => gbdt::Gbdt::from_json(j).map(NativeModel::Gbdt),
+            other => Err(format!("unknown model kind '{other}'")),
+        }
+    }
+}
+
+impl Regressor for NativeModel {
+    fn predict_one(&self, x: &[f64]) -> f64 {
+        match self {
+            NativeModel::Lasso(m) => m.predict_one(x),
+            NativeModel::RandomForest(m) => m.predict_one(x),
+            NativeModel::Gbdt(m) => m.predict_one(x),
+        }
+    }
+}
+
+/// An owned trained per-bucket model: standardizer + native regressor +
+/// target floor. The deployable unit of the serving engine.
+#[derive(Clone)]
+pub struct BucketModel {
     pub standardizer: Standardizer,
-    pub inner: Box<dyn Regressor + 'a>,
+    pub model: NativeModel,
     /// Predictions are clamped to this floor (a fraction of the smallest
     /// training latency) — latency is positive.
     pub floor: f64,
 }
 
-impl<'a> TrainedModel<'a> {
+impl BucketModel {
     pub fn predict_raw(&self, x: &[f64]) -> f64 {
         let xs = self.standardizer.transform(x);
-        self.inner.predict_one(&xs).max(self.floor)
+        self.model.predict_one(&xs).max(self.floor)
+    }
+
+    /// Feature-vector width this model was trained on.
+    pub fn feature_dim(&self) -> usize {
+        self.standardizer.mean.len()
+    }
+
+    /// Train an owned model with one of the native methods.
+    ///
+    /// Panics if `method == Method::Mlp` — the MLP stays engine-external
+    /// behind the [`Regressor`] trait (see [`train`]).
+    pub fn train_native(method: Method, x: &[Vec<f64>], y: &[f64], seed: u64) -> BucketModel {
+        assert_eq!(x.len(), y.len());
+        assert!(!x.is_empty(), "cannot train on empty dataset");
+        let standardizer = Standardizer::fit(x);
+        let xs = standardizer.transform_all(x);
+        let floor = y.iter().copied().fold(f64::INFINITY, f64::min) * 0.1;
+        let model = match method {
+            Method::Lasso => NativeModel::Lasso(lasso::Lasso::fit_cv(&xs, y, seed)),
+            Method::RandomForest => {
+                NativeModel::RandomForest(forest::RandomForest::fit_cv(&xs, y, seed))
+            }
+            Method::Gbdt => NativeModel::Gbdt(gbdt::Gbdt::fit_cv(&xs, y, seed)),
+            Method::Mlp => panic!("MLP is not a native serializable model"),
+        };
+        BucketModel { standardizer, model, floor }
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("dim", Json::Num(self.feature_dim() as f64)),
+            ("floor", Json::Num(self.floor)),
+            ("standardizer", self.standardizer.to_json()),
+            ("model", self.model.to_json()),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Result<BucketModel, String> {
+        let standardizer = Standardizer::from_json(j.req("standardizer")?)?;
+        let floor = j.req_f64("floor")?;
+        if !floor.is_finite() {
+            return Err("non-finite floor".into());
+        }
+        let model = NativeModel::from_json(j.req("model")?)?;
+        let dim = j.req_usize("dim")?;
+        if standardizer.mean.len() != dim {
+            return Err(format!(
+                "feature dim mismatch: standardizer has {}, metadata says {dim}",
+                standardizer.mean.len()
+            ));
+        }
+        match &model {
+            NativeModel::Lasso(l) => {
+                if l.weights.len() != dim {
+                    return Err(format!(
+                        "feature dim mismatch: lasso has {} weights, metadata says {dim}",
+                        l.weights.len()
+                    ));
+                }
+            }
+            // Tree splits must index inside the feature vector, or a
+            // corrupted bundle would panic at prediction time.
+            NativeModel::RandomForest(forest::RandomForest { trees, .. })
+            | NativeModel::Gbdt(gbdt::Gbdt { trees, .. }) => {
+                if let Some(mf) = trees.iter().filter_map(|t| t.max_feature_index()).max() {
+                    if mf >= dim {
+                        return Err(format!(
+                            "feature dim mismatch: a tree splits on feature {mf}, metadata says {dim}"
+                        ));
+                    }
+                }
+            }
+        }
+        Ok(BucketModel { standardizer, model, floor })
+    }
+}
+
+/// A trained per-bucket model as used by `framework::ScenarioPredictor`:
+/// either an owned serializable [`BucketModel`], or an engine-external
+/// regressor (the MLP, whose lifetime ties it to its PJRT context).
+pub enum TrainedModel<'a> {
+    Owned(BucketModel),
+    External {
+        standardizer: Standardizer,
+        inner: Box<dyn Regressor + 'a>,
+        floor: f64,
+    },
+}
+
+impl<'a> TrainedModel<'a> {
+    pub fn predict_raw(&self, x: &[f64]) -> f64 {
+        match self {
+            TrainedModel::Owned(m) => m.predict_raw(x),
+            TrainedModel::External { standardizer, inner, floor } => {
+                let xs = standardizer.transform(x);
+                inner.predict_one(&xs).max(*floor)
+            }
+        }
+    }
+
+    /// The owned serializable model, if this is not an MLP.
+    pub fn as_owned(&self) -> Option<&BucketModel> {
+        match self {
+            TrainedModel::Owned(m) => Some(m),
+            TrainedModel::External { .. } => None,
+        }
     }
 }
 
 /// Train a model of the given method on (features, latency) data.
 ///
 /// `mlp_ctx` supplies the PJRT runtime context when `method == Mlp`; the
-/// native methods ignore it.
+/// native methods ignore it and produce owned serializable models.
 pub fn train<'a>(
     method: Method,
     x: &[Vec<f64>],
@@ -89,19 +257,15 @@ pub fn train<'a>(
 ) -> TrainedModel<'a> {
     assert_eq!(x.len(), y.len());
     assert!(!x.is_empty(), "cannot train on empty dataset");
-    let standardizer = Standardizer::fit(x);
-    let xs = standardizer.transform_all(x);
-    let floor = y.iter().copied().fold(f64::INFINITY, f64::min) * 0.1;
-    let inner: Box<dyn Regressor + 'a> = match method {
-        Method::Lasso => Box::new(lasso::Lasso::fit_cv(&xs, y, seed)),
-        Method::RandomForest => Box::new(forest::RandomForest::fit_cv(&xs, y, seed)),
-        Method::Gbdt => Box::new(gbdt::Gbdt::fit_cv(&xs, y, seed)),
-        Method::Mlp => {
-            let ctx = mlp_ctx.expect("MLP training requires an MlpContext (artifacts)");
-            Box::new(mlp::MlpModel::fit(ctx, &xs, y, seed))
-        }
-    };
-    TrainedModel { standardizer, inner, floor }
+    if method == Method::Mlp {
+        let standardizer = Standardizer::fit(x);
+        let xs = standardizer.transform_all(x);
+        let floor = y.iter().copied().fold(f64::INFINITY, f64::min) * 0.1;
+        let ctx = mlp_ctx.expect("MLP training requires an MlpContext (artifacts)");
+        let inner: Box<dyn Regressor + 'a> = Box::new(mlp::MlpModel::fit(ctx, &xs, y, seed));
+        return TrainedModel::External { standardizer, inner, floor };
+    }
+    TrainedModel::Owned(BucketModel::train_native(method, x, y, seed))
 }
 
 /// Generate a synthetic regression problem for predictor unit tests:
@@ -166,6 +330,58 @@ mod tests {
         // Extreme extrapolation must not go negative.
         let p = model.predict_raw(&[-1e6, -1e6, -1e6]);
         assert!(p > 0.0);
+    }
+
+    #[test]
+    fn method_parse_roundtrips_names() {
+        for m in Method::all() {
+            assert_eq!(Method::parse(m.name()), Some(*m), "{}", m.name());
+        }
+        assert_eq!(Method::parse("randomforest"), Some(Method::RandomForest));
+        assert_eq!(Method::parse("nope"), None);
+    }
+
+    #[test]
+    fn native_training_yields_owned_models() {
+        let (x, y) = toy_problem(120, 21);
+        for m in Method::native() {
+            let model = train(*m, &x, &y, 3, None);
+            let owned = model.as_owned().expect("native methods are owned");
+            assert_eq!(owned.model.method(), *m);
+            assert_eq!(owned.feature_dim(), 3);
+        }
+    }
+
+    #[test]
+    fn bucket_model_json_roundtrip_bit_identical() {
+        let (x, y) = toy_problem(200, 22);
+        for m in Method::native() {
+            let model = BucketModel::train_native(*m, &x, &y, 5);
+            let text = model.to_json().to_string();
+            let back =
+                BucketModel::from_json(&crate::util::Json::parse(&text).unwrap()).unwrap();
+            assert_eq!(back.floor.to_bits(), model.floor.to_bits());
+            for v in x.iter().take(25) {
+                assert_eq!(
+                    model.predict_raw(v).to_bits(),
+                    back.predict_raw(v).to_bits(),
+                    "{}",
+                    m.name()
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn bucket_model_rejects_dim_mismatch() {
+        let (x, y) = toy_problem(60, 23);
+        let model = BucketModel::train_native(Method::Lasso, &x, &y, 1);
+        let mut j = model.to_json();
+        if let crate::util::Json::Obj(m) = &mut j {
+            m.insert("dim".into(), crate::util::Json::Num(99.0));
+        }
+        let err = BucketModel::from_json(&j).unwrap_err();
+        assert!(err.contains("dim mismatch"), "{err}");
     }
 
     #[test]

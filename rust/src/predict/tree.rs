@@ -2,6 +2,8 @@
 //! the split criterion with the paper's percentage-error objective). The
 //! building block for both `forest` (RF) and `gbdt`.
 
+use crate::util::Json;
+
 /// Tree hyperparameters.
 #[derive(Debug, Clone, Copy)]
 pub struct TreeParams {
@@ -221,6 +223,98 @@ impl Tree {
     pub fn node_count(&self) -> usize {
         self.nodes.len()
     }
+
+    /// Largest feature index referenced by any split (`None` for a pure
+    /// leaf). Bundle loading uses this to reject trees that would index
+    /// past the feature vector at prediction time.
+    pub fn max_feature_index(&self) -> Option<usize> {
+        self.nodes
+            .iter()
+            .filter_map(|n| match n {
+                NodeKind::Split { feature, .. } => Some(*feature),
+                NodeKind::Leaf { .. } => None,
+            })
+            .max()
+    }
+
+    /// Serialize the node arena for `engine::bundle`: each node is a compact
+    /// array, `[0, value]` for leaves and `[1, feature, threshold, left,
+    /// right]` for splits. f64 values round-trip bit-exactly through
+    /// `util::json` (shortest-repr emit + exact parse).
+    pub fn to_json(&self) -> Json {
+        Json::Arr(
+            self.nodes
+                .iter()
+                .map(|n| match n {
+                    NodeKind::Leaf { value } => {
+                        Json::Arr(vec![Json::Num(0.0), Json::Num(*value)])
+                    }
+                    NodeKind::Split { feature, threshold, left, right } => Json::Arr(vec![
+                        Json::Num(1.0),
+                        Json::Num(*feature as f64),
+                        Json::Num(*threshold),
+                        Json::Num(*left as f64),
+                        Json::Num(*right as f64),
+                    ]),
+                })
+                .collect(),
+        )
+    }
+
+    /// Rebuild a tree from [`Tree::to_json`] output. Child indices are
+    /// validated against the arena invariant (children precede parents; the
+    /// root is last), so a corrupted bundle fails here with a clear error
+    /// instead of looping at prediction time.
+    pub fn from_json(j: &Json) -> Result<Tree, String> {
+        let arr = j.as_arr().ok_or("tree: expected a node array")?;
+        if arr.is_empty() {
+            return Err("tree: empty node array".into());
+        }
+        let mut nodes = Vec::with_capacity(arr.len());
+        for (i, nj) in arr.iter().enumerate() {
+            let v = nj
+                .as_arr()
+                .ok_or_else(|| format!("tree node {i}: expected an array"))?;
+            let num = |k: usize| -> Result<f64, String> {
+                v.get(k)
+                    .and_then(Json::as_f64)
+                    .ok_or_else(|| format!("tree node {i}: field {k} is not a number"))
+            };
+            let tag = num(0)? as i64;
+            let node = match (tag, v.len()) {
+                (0, 2) => {
+                    let value = num(1)?;
+                    if !value.is_finite() {
+                        return Err(format!("tree node {i}: non-finite leaf value"));
+                    }
+                    NodeKind::Leaf { value }
+                }
+                (1, 5) => {
+                    let feature = num(1)? as usize;
+                    let threshold = num(2)?;
+                    if !threshold.is_finite() {
+                        return Err(format!("tree node {i}: non-finite threshold"));
+                    }
+                    let left = num(3)? as usize;
+                    let right = num(4)? as usize;
+                    if left >= i || right >= i {
+                        return Err(format!(
+                            "tree node {i}: child index out of order (left {left}, right {right})"
+                        ));
+                    }
+                    NodeKind::Split { feature, threshold, left, right }
+                }
+                _ => {
+                    return Err(format!(
+                        "tree node {i}: malformed (tag {tag}, {} fields)",
+                        v.len()
+                    ))
+                }
+            };
+            nodes.push(node);
+        }
+        Ok(Tree { nodes })
+    }
 }
 
 #[cfg(test)]
@@ -289,6 +383,32 @@ mod tests {
         let t = Tree::fit(&x, &y, None, TreeParams::default(), 0);
         assert_eq!(t.node_count(), 1);
         assert!((t.predict_one(&[3.0]) - 7.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn json_roundtrip_is_bit_identical() {
+        let (x, y) = crate::predict::toy_problem(200, 12);
+        let t = Tree::fit(&x, &y, None, TreeParams::default(), 3);
+        let back = Tree::from_json(&Json::parse(&t.to_json().to_string()).unwrap()).unwrap();
+        assert_eq!(back.node_count(), t.node_count());
+        for v in x.iter().take(50) {
+            assert_eq!(t.predict_one(v).to_bits(), back.predict_one(v).to_bits());
+        }
+    }
+
+    #[test]
+    fn from_json_rejects_malformed_nodes() {
+        // Not an array.
+        assert!(Tree::from_json(&Json::parse("{}").unwrap()).is_err());
+        // Empty arena.
+        assert!(Tree::from_json(&Json::parse("[]").unwrap()).is_err());
+        // Split whose child points at itself/forward: would loop at predict.
+        let err =
+            Tree::from_json(&Json::parse("[[0,1.0],[1,0,0.5,1,0]]").unwrap()).unwrap_err();
+        assert!(err.contains("child index"), "{err}");
+        // Bad tag / arity.
+        assert!(Tree::from_json(&Json::parse("[[2,1.0]]").unwrap()).is_err());
+        assert!(Tree::from_json(&Json::parse("[[0,1.0,2.0]]").unwrap()).is_err());
     }
 
     #[test]

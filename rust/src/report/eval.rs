@@ -526,21 +526,16 @@ pub fn fig24_lasso_gpu(ctx: &mut ReportCtx) -> Vec<Table> {
         let te = ctx.profiles(&sc, DataSet::Zoo).to_vec();
         let ev = evaluate(&pred, &zoo, &te);
         t.row(vec![soc.gpu.name.to_string(), pct(ev.end_to_end_mape)]);
+        // The owned-model redesign makes trained models inspectable: pull
+        // the fitted Lasso straight out of the bucket model instead of
+        // re-fitting on the raw bucket data.
         for bucket in ["Conv2D", "DepthwiseConv2D"] {
-            if let Some(m) = pred.models.get(bucket) {
-                // Re-fit a plain Lasso to inspect weights (TrainedModel
-                // erases the concrete type).
-                let _ = m;
-            }
-        }
-        // Direct importance fit on the raw bucket data:
-        let data = crate::profiler::bucket_datasets(tr);
-        for bucket in ["Conv2D", "DepthwiseConv2D"] {
-            if let Some(d) = data.get(bucket) {
-                if d.x.len() > 5 {
-                    let s = crate::features::Standardizer::fit(&d.x);
-                    let l = crate::predict::lasso::Lasso::fit_cv(&s.transform_all(&d.x), &d.y, seed);
-                    let ims = l.importances();
+            let Some(owned) = pred.models.get(bucket).and_then(|m| m.as_owned()) else {
+                continue;
+            };
+            if let crate::predict::NativeModel::Lasso(l) = &owned.model {
+                let ims = l.importances();
+                if ims.len() >= 2 {
                     let nm = |i: usize| conv_names.get(i).copied().unwrap_or("?").to_string();
                     imp.row(vec![
                         soc.gpu.name.to_string(),

@@ -59,6 +59,50 @@ impl Json {
         }
     }
 
+    /// Build a number array from an f64 slice (bundle serialization).
+    pub fn from_f64s(v: &[f64]) -> Json {
+        Json::Arr(v.iter().map(|&x| Json::Num(x)).collect())
+    }
+
+    /// Required-key accessors with descriptive errors, used by the trained-
+    /// model (de)serializers in `predict` and `engine::bundle`.
+    pub fn req(&self, key: &str) -> Result<&Json, String> {
+        self.get(key).ok_or_else(|| format!("missing key '{key}'"))
+    }
+
+    pub fn req_f64(&self, key: &str) -> Result<f64, String> {
+        self.req(key)?
+            .as_f64()
+            .ok_or_else(|| format!("key '{key}' is not a number"))
+    }
+
+    pub fn req_usize(&self, key: &str) -> Result<usize, String> {
+        let x = self.req_f64(key)?;
+        if x < 0.0 || x.fract() != 0.0 {
+            return Err(format!("key '{key}' is not a non-negative integer"));
+        }
+        Ok(x as usize)
+    }
+
+    pub fn req_str(&self, key: &str) -> Result<&str, String> {
+        self.req(key)?
+            .as_str()
+            .ok_or_else(|| format!("key '{key}' is not a string"))
+    }
+
+    pub fn req_f64_arr(&self, key: &str) -> Result<Vec<f64>, String> {
+        let arr = self
+            .req(key)?
+            .as_arr()
+            .ok_or_else(|| format!("key '{key}' is not an array"))?;
+        arr.iter()
+            .map(|x| {
+                x.as_f64()
+                    .ok_or_else(|| format!("key '{key}' has a non-number element"))
+            })
+            .collect()
+    }
+
     /// Serialize to a compact JSON string.
     pub fn to_string(&self) -> String {
         let mut out = String::new();
@@ -349,6 +393,40 @@ mod tests {
     fn empty_containers() {
         assert_eq!(Json::parse("[]").unwrap(), Json::Arr(vec![]));
         assert_eq!(Json::parse("{}").unwrap(), Json::Obj(BTreeMap::new()));
+    }
+
+    #[test]
+    fn f64_roundtrip_is_bit_exact() {
+        // Rust's shortest-repr Display + parse::<f64> round-trips exactly;
+        // bundle serialization relies on this for bit-identical predictions.
+        // (-0.0 is the one exception: the integer fast-path emits "0", which
+        // parses back as +0.0 — arithmetic-identical in every sum/compare.)
+        let vals = [
+            0.1,
+            1.0 / 3.0,
+            -1.75,
+            std::f64::consts::PI,
+            1.23e-17,
+            98765.43210987654,
+            f64::MIN_POSITIVE,
+        ];
+        let j = Json::from_f64s(&vals);
+        let back = Json::parse(&j.to_string()).unwrap();
+        for (a, b) in vals.iter().zip(back.as_arr().unwrap()) {
+            assert_eq!(a.to_bits(), b.as_f64().unwrap().to_bits(), "{a}");
+        }
+    }
+
+    #[test]
+    fn req_accessors_report_missing_and_mistyped_keys() {
+        let j = Json::parse(r#"{"a": 1.5, "s": "x", "v": [1, 2.5], "bad": ["x"]}"#).unwrap();
+        assert_eq!(j.req_f64("a").unwrap(), 1.5);
+        assert_eq!(j.req_str("s").unwrap(), "x");
+        assert_eq!(j.req_f64_arr("v").unwrap(), vec![1.0, 2.5]);
+        assert!(j.req("nope").unwrap_err().contains("nope"));
+        assert!(j.req_f64("s").unwrap_err().contains("not a number"));
+        assert!(j.req_usize("a").is_err());
+        assert!(j.req_f64_arr("bad").unwrap_err().contains("non-number"));
     }
 
     #[test]

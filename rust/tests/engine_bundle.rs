@@ -1,0 +1,204 @@
+//! Integration: the serving engine layer. Train → serialize → deserialize →
+//! predictions bit-identical for every native method; corrupted and
+//! version-mismatched bundles rejected with clear errors; the loaded
+//! engine matches the in-memory predictor, single and batched.
+
+use edgelat::engine::{EngineBuilder, PredictRequest, PredictorBundle};
+use edgelat::framework::{DeductionMode, ScenarioPredictor};
+use edgelat::graph::Graph;
+use edgelat::predict::Method;
+use edgelat::profiler::{profile_set, ModelProfile};
+use edgelat::scenario::Scenario;
+use edgelat::util::Json;
+
+fn training_set(sc: &Scenario, n: usize, seed: u64) -> (Vec<Graph>, Vec<ModelProfile>) {
+    let graphs: Vec<Graph> =
+        edgelat::nas::sample_dataset(seed, n).into_iter().map(|a| a.graph).collect();
+    let profiles = profile_set(sc, &graphs, seed, 3);
+    (graphs, profiles)
+}
+
+fn probe_graphs(seed: u64, n: usize) -> Vec<Graph> {
+    edgelat::nas::sample_dataset(seed, n).into_iter().map(|a| a.graph).collect()
+}
+
+#[test]
+fn bundle_roundtrip_bit_identical_for_all_native_methods() {
+    let sc = edgelat::scenario::one_large_core("HelioP35");
+    let (_, profiles) = training_set(&sc, 16, 100);
+    let probes = probe_graphs(200, 8);
+    for &method in Method::native() {
+        let pred =
+            ScenarioPredictor::train_from(&sc, &profiles, method, DeductionMode::Full, 3, None);
+        let bundle = PredictorBundle::from_predictor(&pred).expect("bundle");
+        // Serialize to text and back — the full on-disk path.
+        let text = bundle.to_json().to_string();
+        let back = PredictorBundle::from_json(&Json::parse(&text).unwrap()).unwrap();
+        let pred2 = back.to_predictor().expect("rebuild predictor");
+        assert_eq!(pred2.t_overhead_ms.to_bits(), pred.t_overhead_ms.to_bits());
+        for g in &probes {
+            let a = pred.predict(g);
+            let b = pred2.predict(g);
+            assert_eq!(
+                a.to_bits(),
+                b.to_bits(),
+                "{} on {}: {a} vs {b}",
+                method.name(),
+                g.name
+            );
+        }
+    }
+}
+
+#[test]
+fn gpu_bundle_roundtrip_bit_identical() {
+    // GPU scenarios exercise kernel deduction (fusion + selection) and the
+    // fused-kernel feature extras; the round-trip must hold there too.
+    let soc = edgelat::device::soc_by_name("Exynos9820").unwrap();
+    let sc = Scenario::gpu(&soc);
+    let (_, profiles) = training_set(&sc, 12, 300);
+    let pred =
+        ScenarioPredictor::train_from(&sc, &profiles, Method::Lasso, DeductionMode::Full, 1, None);
+    let bundle = PredictorBundle::from_predictor(&pred).expect("bundle");
+    let back =
+        PredictorBundle::from_json(&Json::parse(&bundle.to_json().to_string()).unwrap()).unwrap();
+    let pred2 = back.to_predictor().unwrap();
+    for g in probe_graphs(400, 6) {
+        assert_eq!(pred.predict(&g).to_bits(), pred2.predict(&g).to_bits(), "{}", g.name);
+    }
+}
+
+#[test]
+fn bundle_file_roundtrip_via_save_and_load() {
+    let sc = edgelat::scenario::one_large_core("Snapdragon710");
+    let (_, profiles) = training_set(&sc, 12, 500);
+    let pred =
+        ScenarioPredictor::train_from(&sc, &profiles, Method::Gbdt, DeductionMode::Full, 2, None);
+    let bundle = PredictorBundle::from_predictor(&pred).expect("bundle");
+    let path = std::env::temp_dir()
+        .join(format!("edgelat_test_bundle_{}.json", std::process::id()));
+    bundle.save(&path).expect("save");
+    let engine = EngineBuilder::new()
+        .bundle_file(&path)
+        .expect("load bundle file")
+        .build()
+        .expect("build engine");
+    let g = probe_graphs(600, 1).pop().unwrap();
+    let resp = engine.predict(&PredictRequest::new(&g, sc.id.clone())).expect("served");
+    assert_eq!(resp.e2e_ms.to_bits(), pred.predict(&g).to_bits());
+    let _ = std::fs::remove_file(&path);
+}
+
+#[test]
+fn corrupted_and_mismatched_bundles_rejected_with_clear_errors() {
+    // Not JSON at all.
+    assert!(Json::parse("definitely not json").is_err());
+    // JSON but not a bundle.
+    let err = PredictorBundle::from_json(&Json::parse("{}").unwrap()).unwrap_err();
+    assert!(err.contains("format"), "{err}");
+    // Wrong format tag.
+    let err = PredictorBundle::from_json(
+        &Json::parse(r#"{"format":"something.else","version":1}"#).unwrap(),
+    )
+    .unwrap_err();
+    assert!(err.contains("not a predictor bundle"), "{err}");
+
+    // A real bundle with a bumped version must be rejected, naming the
+    // version in the error.
+    let sc = edgelat::scenario::one_large_core("HelioP35");
+    let (_, profiles) = training_set(&sc, 10, 700);
+    let bundle =
+        PredictorBundle::train(&sc, &profiles, Method::Lasso, DeductionMode::Full, 1).unwrap();
+    let mut j = bundle.to_json();
+    if let Json::Obj(m) = &mut j {
+        m.insert("version".into(), Json::Num(999.0));
+    }
+    let err = PredictorBundle::from_json(&j).unwrap_err();
+    assert!(err.contains("version 999"), "{err}");
+
+    // Truncated document (corrupted file) fails to parse.
+    let text = bundle.to_json().to_string();
+    assert!(Json::parse(&text[..text.len() / 2]).is_err());
+
+    // A bucket whose model kind disagrees with the bundle method.
+    let mut j = bundle.to_json();
+    if let Json::Obj(m) = &mut j {
+        m.insert("method".into(), Json::str("gbdt"));
+    }
+    let err = PredictorBundle::from_json(&j).unwrap_err();
+    assert!(err.contains("bundle method"), "{err}");
+
+    // MLP bundles are unsupported, with a message that says why.
+    let err = PredictorBundle::train(&sc, &profiles, Method::Mlp, DeductionMode::Full, 1)
+        .unwrap_err();
+    assert!(err.to_string().contains("MLP"), "{err}");
+}
+
+#[test]
+fn engine_serves_multiple_scenarios_and_batch_matches_sequential() {
+    let sc_cpu = edgelat::scenario::one_large_core("Snapdragon855");
+    let soc = edgelat::device::soc_by_name("Snapdragon855").unwrap();
+    let sc_gpu = Scenario::gpu(&soc);
+    let (_, p_cpu) = training_set(&sc_cpu, 12, 900);
+    let (_, p_gpu) = training_set(&sc_gpu, 12, 900);
+    let b_cpu =
+        PredictorBundle::train(&sc_cpu, &p_cpu, Method::Gbdt, DeductionMode::Full, 4).unwrap();
+    let b_gpu =
+        PredictorBundle::train(&sc_gpu, &p_gpu, Method::Gbdt, DeductionMode::Full, 4).unwrap();
+    let engine = EngineBuilder::new().bundle(b_cpu).bundle(b_gpu).threads(4).build().unwrap();
+    assert_eq!(engine.len(), 2);
+    assert_eq!(engine.scenario_ids(), vec![sc_cpu.id.as_str(), sc_gpu.id.as_str()]);
+
+    let probes = probe_graphs(1000, 10);
+    let mut reqs: Vec<PredictRequest> = Vec::new();
+    for g in &probes {
+        reqs.push(PredictRequest::new(g, sc_cpu.id.clone()));
+        reqs.push(PredictRequest::new(g, sc_gpu.id.clone()).with_method(Method::Gbdt));
+    }
+    let batch = engine.predict_batch(&reqs);
+    assert_eq!(batch.len(), reqs.len());
+    for (req, out) in reqs.iter().zip(&batch) {
+        let batch_resp = out.as_ref().expect("batch slot served");
+        let seq_resp = engine.predict(req).expect("sequential serve");
+        assert_eq!(batch_resp.e2e_ms.to_bits(), seq_resp.e2e_ms.to_bits());
+        assert_eq!(batch_resp.per_unit.len(), seq_resp.per_unit.len());
+        assert!(batch_resp.e2e_ms.is_finite() && batch_resp.e2e_ms > 0.0);
+        assert!(batch_resp.e2e_ms >= batch_resp.t_overhead_ms);
+    }
+
+    // Unknown scenario / method surfaces as a per-slot error, not a panic.
+    let g = &probes[0];
+    let bad = engine.predict(&PredictRequest::new(g, "NoSuch/gpu"));
+    assert!(bad.unwrap_err().to_string().contains("NoSuch/gpu"));
+    let bad = engine.predict(&PredictRequest::new(g, sc_cpu.id.clone()).with_method(Method::Lasso));
+    assert!(bad.unwrap_err().to_string().contains("Lasso"));
+}
+
+#[test]
+fn engine_memoized_deduction_is_consistent() {
+    // Repeated queries for the same graph must hit the deduction cache and
+    // return identical responses.
+    let sc = edgelat::scenario::one_large_core("Exynos9820");
+    let (_, profiles) = training_set(&sc, 10, 1100);
+    let bundle =
+        PredictorBundle::train(&sc, &profiles, Method::Lasso, DeductionMode::Full, 5).unwrap();
+    let engine = EngineBuilder::new().bundle(bundle).build().unwrap();
+    let g = probe_graphs(1200, 1).pop().unwrap();
+    let req = PredictRequest::new(&g, sc.id.clone());
+    let first = engine.predict(&req).unwrap();
+    for _ in 0..5 {
+        let again = engine.predict(&req).unwrap();
+        assert_eq!(first.e2e_ms.to_bits(), again.e2e_ms.to_bits());
+    }
+}
+
+#[test]
+fn unknown_scenario_in_bundle_rejected_at_build() {
+    let sc = edgelat::scenario::one_large_core("HelioP35");
+    let (_, profiles) = training_set(&sc, 10, 1300);
+    let mut bundle =
+        PredictorBundle::train(&sc, &profiles, Method::Lasso, DeductionMode::Full, 6).unwrap();
+    bundle.scenario_id = "Imaginary/cpu/1L/fp32".into();
+    let err = EngineBuilder::new().bundle(bundle).build().unwrap_err();
+    assert!(err.to_string().contains("Imaginary"), "{err}");
+}
