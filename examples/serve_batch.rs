@@ -62,6 +62,28 @@ fn main() {
         served as f64 / batch_s.max(1e-9)
     );
 
+    // --- Second pass over the same workload: the sharded deduction memo
+    // is warm, so the engine skips kernel deduction entirely.
+    let t_warm = Instant::now();
+    let responses_warm = engine.predict_batch(&reqs);
+    let warm_s = t_warm.elapsed().as_secs_f64();
+    assert_eq!(responses_warm.iter().filter(|r| r.is_ok()).count(), served);
+    let stats = engine.cache_stats();
+    println!(
+        "warm-cache predict_batch: {:.4}s ({:.0} predictions/s); deduction memo: \
+         {} hits / {} misses across {} shards",
+        warm_s,
+        served as f64 / warm_s.max(1e-9),
+        stats.hits,
+        stats.misses,
+        engine.cache_shards()
+    );
+    assert!(
+        stats.hits >= served as u64,
+        "second pass must be served from the memo ({} hits)",
+        stats.hits
+    );
+
     // --- Baseline: the old retrain-per-call workflow (`edgelat predict`
     // used to re-profile and retrain on every invocation). Measure a few
     // calls and scale the per-call mean to the full batch size.

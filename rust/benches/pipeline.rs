@@ -8,40 +8,15 @@
 //! train/inference.
 
 use edgelat::device::{DataRep, Target};
+use edgelat::exec_pool::ExecPool;
 use edgelat::predict::{train, Method};
-use edgelat::profiler::{bucket_datasets, profile_set};
+use edgelat::profiler::{bucket_datasets, profile_set, profile_set_with};
 use edgelat::scenario::{one_large_core, Scenario};
 use edgelat::tflite::{compile, CompileOptions};
-use std::time::Instant;
+use edgelat::util::timing::time_named;
 
-fn bench<F: FnMut()>(name: &str, iters: usize, mut f: F) {
-    // Warmup.
-    for _ in 0..iters.div_ceil(10).max(1) {
-        f();
-    }
-    let mut samples = Vec::with_capacity(iters);
-    for _ in 0..iters {
-        let t0 = Instant::now();
-        f();
-        samples.push(t0.elapsed().as_secs_f64());
-    }
-    samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
-    let mean: f64 = samples.iter().sum::<f64>() / samples.len() as f64;
-    let fmt = |s: f64| {
-        if s >= 1.0 {
-            format!("{s:9.3} s ")
-        } else if s >= 1e-3 {
-            format!("{:9.3} ms", s * 1e3)
-        } else {
-            format!("{:9.3} µs", s * 1e6)
-        }
-    };
-    println!(
-        "{name:<44} mean {}  min {}  p50 {}  (n={iters})",
-        fmt(mean),
-        fmt(samples[0]),
-        fmt(samples[samples.len() / 2])
-    );
+fn bench<F: FnMut()>(name: &str, iters: usize, f: F) {
+    println!("{}", time_named(name, iters, f).render());
 }
 
 fn main() {
@@ -153,4 +128,35 @@ fn main() {
         let req = edgelat::engine::PredictRequest::new(&mv2, sc_cpu.id.clone());
         std::hint::black_box(engine.predict(&req).expect("served"));
     });
+
+    // Worker-pool substrate: raw fan-out overhead, and the scenario-sweep
+    // pattern (profile K scenarios concurrently, each sequential inside)
+    // used by the report prefetcher and `edgelat bench`.
+    let nums: Vec<u64> = (0..10_000).collect();
+    bench("exec_pool/map 10k trivial items", 50, || {
+        std::hint::black_box(ExecPool::default().map(&nums, |_, &x| x.wrapping_mul(x)));
+    });
+    let sweep_sc: Vec<Scenario> = edgelat::scenario::all_scenarios().into_iter().take(6).collect();
+    let sweep_g: Vec<_> =
+        edgelat::nas::sample_dataset(5, 10).into_iter().map(|a| a.graph).collect();
+    let seq = ExecPool::new(1);
+    bench("sweep/profile 6 scenarios x 10 NAs sequential", 3, || {
+        for sc in &sweep_sc {
+            std::hint::black_box(profile_set_with(&seq, sc, &sweep_g, 5, 3));
+        }
+    });
+    let pool = ExecPool::default();
+    bench("sweep/profile 6 scenarios x 10 NAs pooled", 3, || {
+        std::hint::black_box(
+            pool.map(&sweep_sc, |_, sc| profile_set_with(&seq, sc, &sweep_g, 5, 3)),
+        );
+    });
+    let stats = engine.cache_stats();
+    println!(
+        "(engine deduction memo: {} hits / {} misses / {} evictions across {} shards)",
+        stats.hits,
+        stats.misses,
+        stats.evictions,
+        engine.cache_shards()
+    );
 }

@@ -1,0 +1,257 @@
+//! `edgelat bench` — machine-readable benchmarks of the serving hot
+//! paths, written as `BENCH_pipeline.json`.
+//!
+//! Times the pipeline stages the worker-pool subsystem accelerates:
+//! kernel deduction, one-time predictor training, single-predict,
+//! engine `predict_batch`, and parallel scenario-sweep profiling. The
+//! emitted JSON is the artifact the CI bench job uploads and gates on
+//! (`scripts/bench_gate.py`). Gated quantities are **ratios between
+//! workloads measured back-to-back in the same process** (e.g.
+//! batch-predict vs a single-predict loop over the same requests), never
+//! absolute wall-clock, so the gate is robust to runner speed.
+
+use crate::engine::{EngineBuilder, PredictRequest, PredictorBundle};
+use crate::exec_pool::ExecPool;
+use crate::framework::{deduce_units, DeductionMode, ScenarioPredictor};
+use crate::graph::Graph;
+use crate::predict::Method;
+use crate::profiler::profile_set_with;
+use crate::scenario::{all_scenarios, one_large_core, Scenario};
+use crate::util::timing::{time_named, Sample};
+use crate::util::Json;
+use std::hint::black_box;
+
+/// Workload sizes for one bench run.
+#[derive(Debug, Clone)]
+pub struct BenchConfig {
+    /// Label recorded in the artifact ("quick" | "full" | "custom").
+    pub label: &'static str,
+    /// Graphs served through the engine batch benches.
+    pub n_batch: usize,
+    /// Training NAs profiled for the one-time train.
+    pub n_train: usize,
+    /// Profiling repetitions per (model, scenario).
+    pub runs: usize,
+    /// Timed iterations per benchmark.
+    pub iters: usize,
+    /// Scenarios in the sweep-throughput comparison.
+    pub n_sweep: usize,
+    /// Graphs profiled per sweep scenario.
+    pub sweep_graphs: usize,
+    /// Workload seed (timings vary; the workload itself must not).
+    pub seed: u64,
+    /// Worker threads (engine pool and sweep pool).
+    pub threads: usize,
+}
+
+fn default_threads() -> usize {
+    // Single source of truth: size the bench exactly like the pools it
+    // measures.
+    ExecPool::default().threads()
+}
+
+impl BenchConfig {
+    /// CI smoke scale: completes in well under a minute on a laptop.
+    pub fn quick() -> BenchConfig {
+        BenchConfig {
+            label: "quick",
+            n_batch: 64,
+            n_train: 12,
+            runs: 2,
+            iters: 3,
+            n_sweep: 6,
+            sweep_graphs: 8,
+            seed: 2022,
+            threads: default_threads(),
+        }
+    }
+
+    /// Default scale for local measurement.
+    pub fn full() -> BenchConfig {
+        BenchConfig {
+            label: "full",
+            n_batch: 256,
+            n_train: 40,
+            runs: 5,
+            iters: 8,
+            n_sweep: 12,
+            sweep_graphs: 16,
+            seed: 2022,
+            threads: default_threads(),
+        }
+    }
+}
+
+fn sample_json(s: &Sample) -> Json {
+    Json::obj(vec![
+        ("name", Json::str(s.name.clone())),
+        ("iters", Json::num(s.iters as f64)),
+        ("mean_s", Json::num(s.mean_s)),
+        ("min_s", Json::num(s.min_s)),
+        ("p50_s", Json::num(s.p50_s)),
+    ])
+}
+
+fn nas_graphs(seed: u64, n: usize) -> Vec<Graph> {
+    crate::nas::sample_dataset(seed, n).into_iter().map(|a| a.graph).collect()
+}
+
+fn bench_line(samples: &mut Vec<Sample>, s: Sample) {
+    println!("{}", s.render());
+    samples.push(s);
+}
+
+/// Run the suite and return the `BENCH_pipeline.json` document. Prints a
+/// human-readable line per bench as it goes.
+pub fn run(cfg: &BenchConfig) -> Json {
+    let mut samples: Vec<Sample> = Vec::new();
+    let sc_cpu = one_large_core("Snapdragon855");
+    let soc = crate::device::soc_by_name("Snapdragon855").expect("known soc");
+    let sc_gpu = Scenario::gpu(&soc);
+    let pool = ExecPool::new(cfg.threads);
+    let mv2 = crate::zoo::mobilenets::mobilenet_v2(1.0);
+
+    // --- Kernel deduction (GPU: fusion + selection), the memoized unit.
+    bench_line(
+        &mut samples,
+        time_named("deduce/mobilenet_v2 gpu full", cfg.iters * 10, || {
+            black_box(deduce_units(&sc_gpu, DeductionMode::Full, &mv2));
+        }),
+    );
+
+    // --- One-time profile + train.
+    let train_g = nas_graphs(cfg.seed, cfg.n_train);
+    let profiles = profile_set_with(&pool, &sc_cpu, &train_g, cfg.seed, cfg.runs);
+    bench_line(
+        &mut samples,
+        time_named("train/gbdt scenario predictor", cfg.iters, || {
+            black_box(ScenarioPredictor::train_from(
+                &sc_cpu,
+                &profiles,
+                Method::Gbdt,
+                DeductionMode::Full,
+                cfg.seed,
+                None,
+            ));
+        }),
+    );
+
+    // --- Serving: single-predict loop vs pooled predict_batch over the
+    // same requests on the same loaded engine. Warmup fills the sharded
+    // deduction memo, so both sides measure the serve path proper and the
+    // ratio isolates the pool + cache behaviour the CI gate watches.
+    let pred = ScenarioPredictor::train_from(
+        &sc_cpu,
+        &profiles,
+        Method::Gbdt,
+        DeductionMode::Full,
+        cfg.seed,
+        None,
+    );
+    let bundle = PredictorBundle::from_predictor(&pred).expect("native bundle");
+    let engine = EngineBuilder::new().bundle(bundle).threads(cfg.threads).build().expect("engine");
+    let workload = nas_graphs(cfg.seed ^ 0xbe9c, cfg.n_batch);
+    let reqs: Vec<PredictRequest> =
+        workload.iter().map(|g| PredictRequest::new(g, sc_cpu.id.clone())).collect();
+    let single = time_named("serve/single-predict x batch", cfg.iters, || {
+        for r in &reqs {
+            black_box(engine.predict(r).expect("served"));
+        }
+    });
+    bench_line(&mut samples, single.clone());
+    let batch = time_named("serve/predict_batch", cfg.iters, || {
+        black_box(engine.predict_batch(&reqs));
+    });
+    bench_line(&mut samples, batch.clone());
+    let batch_speedup = single.mean_s / batch.mean_s.max(1e-12);
+
+    // --- Scenario-sweep throughput: profiling K scenarios one at a time
+    // vs fanned out on the pool (the report prefetch pattern).
+    let sweep_scenarios: Vec<Scenario> =
+        all_scenarios().into_iter().take(cfg.n_sweep).collect();
+    let sweep_g = nas_graphs(cfg.seed ^ 0x57ee, cfg.sweep_graphs);
+    let seq = ExecPool::new(1);
+    let sweep_iters = (cfg.iters / 2).max(1);
+    let sweep_seq = time_named("sweep/profile scenarios sequential", sweep_iters, || {
+        for sc in &sweep_scenarios {
+            black_box(profile_set_with(&seq, sc, &sweep_g, cfg.seed, cfg.runs));
+        }
+    });
+    bench_line(&mut samples, sweep_seq.clone());
+    let sweep_par = time_named("sweep/profile scenarios pooled", sweep_iters, || {
+        black_box(pool.map(&sweep_scenarios, |_, sc| {
+            profile_set_with(&seq, sc, &sweep_g, cfg.seed, cfg.runs)
+        }));
+    });
+    bench_line(&mut samples, sweep_par.clone());
+    let sweep_speedup = sweep_seq.mean_s / sweep_par.mean_s.max(1e-12);
+
+    let cache = engine.cache_stats();
+    Json::obj(vec![
+        ("format", Json::str("edgelat.bench")),
+        ("version", Json::num(1.0)),
+        ("profile", Json::str(cfg.label)),
+        ("threads", Json::num(cfg.threads as f64)),
+        ("benches", Json::Arr(samples.iter().map(sample_json).collect())),
+        (
+            "derived",
+            Json::obj(vec![
+                ("batch_predict_speedup", Json::num(batch_speedup)),
+                ("sweep_parallel_speedup", Json::num(sweep_speedup)),
+                (
+                    "deduction_cache",
+                    Json::obj(vec![
+                        ("hits", Json::num(cache.hits as f64)),
+                        ("misses", Json::num(cache.misses as f64)),
+                        ("evictions", Json::num(cache.evictions as f64)),
+                        ("shards", Json::num(engine.cache_shards() as f64)),
+                    ]),
+                ),
+            ]),
+        ),
+    ])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_emits_a_valid_gateable_artifact() {
+        // Tiny sizes: this validates the artifact contract, not timings.
+        let cfg = BenchConfig {
+            label: "custom",
+            n_batch: 6,
+            n_train: 4,
+            runs: 1,
+            iters: 1,
+            n_sweep: 2,
+            sweep_graphs: 2,
+            seed: 7,
+            threads: 2,
+        };
+        let doc = run(&cfg);
+        // The document round-trips through the JSON emitter/parser.
+        let doc = Json::parse(&doc.to_string()).expect("valid JSON");
+        assert_eq!(doc.req_str("format").unwrap(), "edgelat.bench");
+        assert_eq!(doc.req_usize("version").unwrap(), 1);
+        assert_eq!(doc.req_str("profile").unwrap(), "custom");
+        assert_eq!(doc.req_usize("threads").unwrap(), 2);
+        let benches = doc.req("benches").unwrap().as_arr().expect("array");
+        assert!(benches.len() >= 6, "expected all pipeline benches, got {}", benches.len());
+        for b in benches {
+            assert!(b.req_str("name").is_ok());
+            let mean = b.req_f64("mean_s").unwrap();
+            assert!(mean.is_finite() && mean >= 0.0);
+        }
+        let derived = doc.req("derived").unwrap();
+        let speedup = derived.req_f64("batch_predict_speedup").unwrap();
+        assert!(speedup.is_finite() && speedup > 0.0, "speedup={speedup}");
+        assert!(derived.req_f64("sweep_parallel_speedup").unwrap().is_finite());
+        let cache = derived.req("deduction_cache").unwrap();
+        // The serve benches queried the same graphs repeatedly: the
+        // sharded memo must have seen real hits.
+        assert!(cache.req_f64("hits").unwrap() > 0.0);
+        assert!(cache.req_f64("misses").unwrap() > 0.0);
+    }
+}

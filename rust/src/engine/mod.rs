@@ -26,13 +26,14 @@ pub mod bundle;
 
 pub use bundle::{PredictorBundle, BUNDLE_FORMAT, BUNDLE_VERSION};
 
+use crate::exec_pool::{CacheStats, ExecPool, ShardedCache};
 use crate::framework::{deduce_units, DeductionMode};
 use crate::graph::Graph;
 use crate::predict::{BucketModel, Method};
 use crate::scenario::Scenario;
-use std::collections::{BTreeMap, HashMap};
+use std::collections::BTreeMap;
 use std::fmt;
-use std::sync::{Arc, Mutex};
+use std::sync::Arc;
 
 /// Errors from bundle I/O and engine serving.
 #[derive(Debug, Clone)]
@@ -179,12 +180,19 @@ impl EngineBuilder {
                     .unwrap_or(i)
             })
             .collect();
-        let threads = self.threads.unwrap_or_else(|| {
-            std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4)
-        });
-        Ok(LatencyEngine { predictors, dedup, threads, unit_cache: Mutex::new(HashMap::new()) })
+        let pool = self.threads.map(ExecPool::new).unwrap_or_default();
+        Ok(LatencyEngine {
+            predictors,
+            dedup,
+            pool,
+            unit_cache: ShardedCache::new(UNIT_CACHE_SHARDS, UNIT_CACHE_CAP),
+        })
     }
 }
+
+/// Memoized deduction of one graph under one (scenario, mode): bucket +
+/// feature row per predicted unit, shared between concurrent readers.
+type DeducedUnits = Arc<Vec<(String, Vec<f64>)>>;
 
 /// An owned, `Send + Sync` latency-prediction engine serving one or more
 /// scenarios from loaded [`PredictorBundle`]s.
@@ -193,19 +201,26 @@ pub struct LatencyEngine {
     /// `dedup[i]` is the canonical predictor index whose (scenario, mode)
     /// matches predictor `i` — same-deduction predictors share cache slots.
     dedup: Vec<usize>,
-    threads: usize,
+    /// Shared worker pool behind [`predict_batch`](Self::predict_batch).
+    pool: ExecPool,
     /// Kernel deduction memo: (canonical predictor index, graph
     /// fingerprint) → deduced units. Compilation/fusion is pure in the
     /// graph, so repeated queries for the same architecture (NAS search,
     /// figure regeneration) skip straight to the per-bucket model
-    /// evaluations. Bounded by [`UNIT_CACHE_CAP`].
-    unit_cache: Mutex<HashMap<(usize, u64), Arc<Vec<(String, Vec<f64>)>>>>,
+    /// evaluations. Sharded ([`UNIT_CACHE_SHARDS`] locks) so concurrent
+    /// batch workers stop serializing on one global mutex; bounded by
+    /// [`UNIT_CACHE_CAP`] with per-shard eviction (an overflow costs one
+    /// shard's warmth, not the whole cache's).
+    unit_cache: ShardedCache<(usize, u64), DeducedUnits>,
 }
 
 /// Cap on memoized deductions; a long-lived engine serving an unbounded
-/// stream of distinct graphs must not grow without limit. On overflow the
-/// memo is simply cleared (it is a pure cache — only warmth is lost).
+/// stream of distinct graphs must not grow without limit (it is a pure
+/// cache — eviction only loses warmth).
 const UNIT_CACHE_CAP: usize = 4096;
+
+/// Lock shards for the deduction memo.
+const UNIT_CACHE_SHARDS: usize = 16;
 
 impl LatencyEngine {
     pub fn builder() -> EngineBuilder {
@@ -239,20 +254,30 @@ impl LatencyEngine {
         Err(EngineError::NoPredictor { scenario_id: scenario_id.to_string(), method })
     }
 
-    fn units_for(&self, idx: usize, p: &EnginePredictor, g: &Graph) -> Arc<Vec<(String, Vec<f64>)>> {
+    fn units_for(&self, idx: usize, p: &EnginePredictor, g: &Graph) -> DeducedUnits {
         let key = (self.dedup[idx], g.fingerprint());
-        if let Some(u) = self.unit_cache.lock().unwrap().get(&key) {
-            return u.clone();
+        if let Some(u) = self.unit_cache.get(&key) {
+            return u;
         }
-        // Deduce outside the lock; a racing duplicate computes the same
+        // Deduce outside any lock; a racing duplicate computes the same
         // value (deduction is pure), and the first insert wins.
         let units = Arc::new(deduce_units(&p.scenario, p.mode, g));
-        let mut cache = self.unit_cache.lock().unwrap();
-        if cache.len() >= UNIT_CACHE_CAP {
-            cache.clear();
-        }
-        cache.entry(key).or_insert_with(|| units.clone());
-        units
+        self.unit_cache.insert(key, units)
+    }
+
+    /// Hit/miss/eviction counters of the sharded kernel-deduction memo.
+    pub fn cache_stats(&self) -> CacheStats {
+        self.unit_cache.stats()
+    }
+
+    /// Lock shards of the kernel-deduction memo.
+    pub fn cache_shards(&self) -> usize {
+        self.unit_cache.shard_count()
+    }
+
+    /// Worker threads used by [`predict_batch`](Self::predict_batch).
+    pub fn threads(&self) -> usize {
+        self.pool.threads()
     }
 
     /// Serve one prediction.
@@ -281,31 +306,15 @@ impl LatencyEngine {
         })
     }
 
-    /// Serve a batch of predictions, fanned out across `std::thread`
-    /// workers (no rayon offline). Results preserve request order; each
-    /// slot carries its own error so one bad request doesn't poison the
-    /// batch.
+    /// Serve a batch of predictions, fanned out on the shared
+    /// [`ExecPool`] (chunked work queue — uneven graph sizes balance
+    /// across workers). Results preserve request order; each slot carries
+    /// its own error so one bad request doesn't poison the batch.
     pub fn predict_batch(
         &self,
         reqs: &[PredictRequest],
     ) -> Vec<Result<PredictResponse, EngineError>> {
-        if reqs.is_empty() {
-            return Vec::new();
-        }
-        let nthreads = self.threads.min(reqs.len()).max(1);
-        let chunk = reqs.len().div_ceil(nthreads);
-        let mut out: Vec<Option<Result<PredictResponse, EngineError>>> =
-            (0..reqs.len()).map(|_| None).collect();
-        std::thread::scope(|scope| {
-            for (rs, os) in reqs.chunks(chunk).zip(out.chunks_mut(chunk)) {
-                scope.spawn(move || {
-                    for (r, o) in rs.iter().zip(os.iter_mut()) {
-                        *o = Some(self.predict(r));
-                    }
-                });
-            }
-        });
-        out.into_iter().map(|o| o.expect("predict_batch slot filled")).collect()
+        self.pool.map(reqs, |_, r| self.predict(r))
     }
 }
 

@@ -1,0 +1,216 @@
+//! N-way sharded memo cache.
+//!
+//! A single `Mutex<HashMap>` memo serializes every concurrent reader on
+//! one lock — exactly the hot path `LatencyEngine::predict_batch` fans
+//! out. [`ShardedCache`] splits the key space across N independently
+//! locked shards (shard = hash of key), so concurrent lookups of distinct
+//! keys proceed in parallel, and overflow evicts **one shard** instead of
+//! clearing the whole cache — a full batch keeps (N-1)/N of its warmth.
+
+use std::collections::hash_map::DefaultHasher;
+use std::collections::HashMap;
+use std::hash::{Hash, Hasher};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+/// Cumulative cache counters (monotonic since construction).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct CacheStats {
+    /// `get` calls that found the key.
+    pub hits: u64,
+    /// `get` calls that did not.
+    pub misses: u64,
+    /// Entries dropped by per-shard overflow clears.
+    pub evictions: u64,
+}
+
+/// A concurrent memo: per-shard `Mutex<HashMap>` with per-shard capacity.
+///
+/// Values are cloned out (use `Arc<V>` for anything non-trivial). The
+/// intended usage for an expensive pure computation is get → compute
+/// **outside any lock** → [`insert`](ShardedCache::insert); a racing
+/// duplicate computes the same value and the first insert wins, so every
+/// caller observes one canonical value per key.
+#[derive(Debug)]
+pub struct ShardedCache<K, V> {
+    shards: Vec<Mutex<HashMap<K, V>>>,
+    per_shard_cap: usize,
+    hits: AtomicU64,
+    misses: AtomicU64,
+    evictions: AtomicU64,
+}
+
+impl<K: Hash + Eq, V: Clone> ShardedCache<K, V> {
+    /// A cache with `shards` independent locks and `capacity` total
+    /// entries (split evenly; both clamped to at least 1).
+    pub fn new(shards: usize, capacity: usize) -> ShardedCache<K, V> {
+        let n = shards.max(1);
+        ShardedCache {
+            shards: (0..n).map(|_| Mutex::new(HashMap::new())).collect(),
+            per_shard_cap: (capacity / n).max(1),
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+            evictions: AtomicU64::new(0),
+        }
+    }
+
+    fn shard_of(&self, key: &K) -> usize {
+        // DefaultHasher with fixed keys: deterministic across calls within
+        // a process, which is all shard routing needs.
+        let mut h = DefaultHasher::new();
+        key.hash(&mut h);
+        (h.finish() as usize) % self.shards.len()
+    }
+
+    /// Look up a key, counting the hit or miss.
+    pub fn get(&self, key: &K) -> Option<V> {
+        let shard = self.shards[self.shard_of(key)].lock().unwrap();
+        let found = shard.get(key).cloned();
+        drop(shard);
+        match found {
+            Some(_) => self.hits.fetch_add(1, Ordering::Relaxed),
+            None => self.misses.fetch_add(1, Ordering::Relaxed),
+        };
+        found
+    }
+
+    /// Insert a value, returning the canonical one: if another thread
+    /// raced the same key in first, *its* value is kept and returned
+    /// (first insert wins). When the target shard is at capacity it is
+    /// cleared — only that shard; the other N-1 keep their entries.
+    pub fn insert(&self, key: K, value: V) -> V {
+        let mut shard = self.shards[self.shard_of(&key)].lock().unwrap();
+        if shard.len() >= self.per_shard_cap && !shard.contains_key(&key) {
+            self.evictions.fetch_add(shard.len() as u64, Ordering::Relaxed);
+            shard.clear();
+        }
+        shard.entry(key).or_insert(value).clone()
+    }
+
+    /// Total entries across all shards (a point-in-time sum).
+    pub fn len(&self) -> usize {
+        self.shards.iter().map(|s| s.lock().unwrap().len()).sum()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Number of shards (independent locks).
+    pub fn shard_count(&self) -> usize {
+        self.shards.len()
+    }
+
+    /// Total capacity (per-shard cap x shard count).
+    pub fn capacity(&self) -> usize {
+        self.per_shard_cap * self.shards.len()
+    }
+
+    /// Snapshot of the cumulative counters.
+    pub fn stats(&self) -> CacheStats {
+        CacheStats {
+            hits: self.hits.load(Ordering::Relaxed),
+            misses: self.misses.load(Ordering::Relaxed),
+            evictions: self.evictions.load(Ordering::Relaxed),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn get_counts_hits_and_misses() {
+        let c: ShardedCache<u32, u32> = ShardedCache::new(4, 64);
+        assert_eq!(c.get(&1), None);
+        c.insert(1, 10);
+        assert_eq!(c.get(&1), Some(10));
+        assert_eq!(c.get(&2), None);
+        let st = c.stats();
+        assert_eq!(st.hits, 1);
+        assert_eq!(st.misses, 2);
+        assert_eq!(st.evictions, 0);
+    }
+
+    #[test]
+    fn first_insert_wins_on_races() {
+        let c: ShardedCache<u32, u32> = ShardedCache::new(2, 16);
+        assert_eq!(c.insert(7, 70), 70);
+        // A "racing" duplicate insert must observe the canonical value.
+        assert_eq!(c.insert(7, 999), 70);
+        assert_eq!(c.get(&7), Some(70));
+        assert_eq!(c.len(), 1);
+    }
+
+    #[test]
+    fn single_shard_eviction_is_a_full_clear_at_capacity() {
+        let c: ShardedCache<u64, u64> = ShardedCache::new(1, 8);
+        for k in 0..8 {
+            c.insert(k, k);
+        }
+        assert_eq!(c.len(), 8);
+        assert_eq!(c.stats().evictions, 0);
+        c.insert(100, 100);
+        assert_eq!(c.stats().evictions, 8);
+        assert_eq!(c.len(), 1);
+        assert_eq!(c.get(&100), Some(100));
+    }
+
+    #[test]
+    fn eviction_clears_one_shard_not_the_whole_cache() {
+        let c: ShardedCache<u64, u64> = ShardedCache::new(4, 16); // 4 per shard
+        let mut k = 0u64;
+        loop {
+            let len_before = c.len();
+            let ev_before = c.stats().evictions;
+            c.insert(k, k);
+            let evicted = c.stats().evictions - ev_before;
+            if evicted > 0 {
+                // A global clear would have dropped ~len_before entries;
+                // a per-shard clear drops at most one shard's worth.
+                assert!(evicted <= 4, "evicted {evicted} > one shard");
+                assert_eq!(c.len(), len_before - evicted as usize + 1);
+                assert!(!c.is_empty());
+                return;
+            }
+            k += 1;
+            assert!(k < 10_000, "eviction never triggered");
+        }
+    }
+
+    #[test]
+    fn concurrent_inserts_and_gets_are_consistent() {
+        use std::sync::Arc;
+        let c: Arc<ShardedCache<u64, u64>> = Arc::new(ShardedCache::new(8, 1 << 20));
+        std::thread::scope(|scope| {
+            for t in 0..8u64 {
+                let c = Arc::clone(&c);
+                scope.spawn(move || {
+                    for k in 0..500u64 {
+                        let canonical = c.insert(k, k * 1000 + t);
+                        // Whatever thread won, every observer agrees on
+                        // one value derived from the key.
+                        assert_eq!(canonical / 1000, k);
+                        assert_eq!(c.get(&k), Some(canonical));
+                    }
+                });
+            }
+        });
+        assert_eq!(c.len(), 500);
+        for k in 0..500u64 {
+            let v = c.get(&k).unwrap();
+            assert_eq!(v / 1000, k);
+        }
+    }
+
+    #[test]
+    fn capacity_and_shard_accessors() {
+        let c: ShardedCache<u8, u8> = ShardedCache::new(0, 0);
+        assert_eq!(c.shard_count(), 1);
+        assert_eq!(c.capacity(), 1);
+        let c: ShardedCache<u8, u8> = ShardedCache::new(16, 4096);
+        assert_eq!(c.shard_count(), 16);
+        assert_eq!(c.capacity(), 4096);
+    }
+}

@@ -1,0 +1,214 @@
+//! Shared worker-pool subsystem for the repo's hot fan-out paths.
+//!
+//! The paper's value proposition is cheap prediction at NAS scale —
+//! thousands of candidate architectures across 72 hardware scenarios
+//! (Section 4.3) — so every layer above the device simulator has a fan-out
+//! loop: the engine's `predict_batch`, the profiler's per-graph profiling,
+//! and the multi-scenario figure sweeps in `report`. Before this module
+//! each of those either ran sequentially or hand-rolled its own
+//! `std::thread::scope`; they now share one substrate:
+//!
+//! - [`ExecPool`]: a scoped worker pool (no rayon in the offline crate
+//!   set). Work is claimed in chunks from an atomic queue head, so uneven
+//!   per-item cost (graphs differ wildly in op count) balances across
+//!   workers without per-item contention. Results are collected **in input
+//!   order**, and a fallible job simply maps to `R = Result<_, _>` so each
+//!   slot carries its own error — one bad item never poisons the batch.
+//! - [`ShardedCache`]: an N-way sharded memo (per-shard locks keyed by
+//!   hash, per-shard capacity with per-shard eviction) so concurrent
+//!   readers stop serializing on a single global `Mutex<HashMap>`. The
+//!   engine's kernel-deduction memo is the flagship user.
+//!
+//! Everything here is `std`-only and deterministic in its outputs: a
+//! `map` over pure per-item work returns bit-identical results for any
+//! thread count, which the profiler and figure-sweep tests assert.
+
+pub mod cache;
+
+pub use cache::{CacheStats, ShardedCache};
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+/// A scoped worker pool over `std::thread`. Cheap to construct (it holds
+/// only a thread count; workers are spawned per `map` inside a
+/// `thread::scope`), so it can live in a long-lived engine or be built on
+/// the fly for a one-off sweep.
+#[derive(Debug, Clone)]
+pub struct ExecPool {
+    threads: usize,
+}
+
+impl Default for ExecPool {
+    fn default() -> ExecPool {
+        ExecPool::with_default_parallelism()
+    }
+}
+
+impl ExecPool {
+    /// A pool with exactly `threads` workers (clamped to at least 1).
+    pub fn new(threads: usize) -> ExecPool {
+        ExecPool { threads: threads.max(1) }
+    }
+
+    /// A pool sized to the machine's available parallelism.
+    pub fn with_default_parallelism() -> ExecPool {
+        ExecPool::new(std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4))
+    }
+
+    /// Worker count.
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    /// Apply `f` to every item and return the results **in input order**.
+    ///
+    /// `f` receives `(index, &item)` and must be pure per item for the
+    /// output to be independent of the thread count (every caller in this
+    /// crate satisfies that; the profiler/report tests assert it).
+    ///
+    /// Per-item errors: instantiate `R = Result<T, E>` — each output slot
+    /// then carries its own error and the batch always completes. A panic
+    /// inside `f`, by contrast, propagates out of `map`.
+    pub fn map<T, R, F>(&self, items: &[T], f: F) -> Vec<R>
+    where
+        T: Sync,
+        R: Send,
+        F: Fn(usize, &T) -> R + Sync,
+    {
+        let n = items.len();
+        if n == 0 {
+            return Vec::new();
+        }
+        let workers = self.threads.min(n);
+        if workers <= 1 {
+            return items.iter().enumerate().map(|(i, t)| f(i, t)).collect();
+        }
+        // Chunked work queue: workers claim `chunk` indices at a time from
+        // a shared head. Chunks ~4x smaller than an even split keep slow
+        // items from stranding a worker while the rest idle.
+        let chunk = (n / (workers * 4)).max(1);
+        let next = AtomicUsize::new(0);
+        let f = &f;
+        let items_ref = items;
+        let per_worker: Vec<Vec<(usize, R)>> = std::thread::scope(|scope| {
+            let handles: Vec<_> = (0..workers)
+                .map(|_| {
+                    let next = &next;
+                    scope.spawn(move || {
+                        let mut local: Vec<(usize, R)> = Vec::new();
+                        loop {
+                            let start = next.fetch_add(chunk, Ordering::Relaxed);
+                            if start >= n {
+                                break;
+                            }
+                            let end = (start + chunk).min(n);
+                            for i in start..end {
+                                local.push((i, f(i, &items_ref[i])));
+                            }
+                        }
+                        local
+                    })
+                })
+                .collect();
+            handles.into_iter().map(|h| h.join().expect("exec_pool worker panicked")).collect()
+        });
+        // Ordered collection: scatter each worker's (index, result) pairs
+        // back into input order.
+        let mut slots: Vec<Option<R>> = (0..n).map(|_| None).collect();
+        for (i, r) in per_worker.into_iter().flatten() {
+            debug_assert!(slots[i].is_none(), "index {i} claimed twice");
+            slots[i] = Some(r);
+        }
+        slots
+            .into_iter()
+            .map(|s| s.expect("every index claimed exactly once"))
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn empty_input_yields_empty_output() {
+        let out: Vec<u32> = ExecPool::new(8).map(&[] as &[u32], |_, &x| x);
+        assert!(out.is_empty());
+    }
+
+    #[test]
+    fn order_preserved_for_any_thread_count() {
+        let items: Vec<usize> = (0..257).collect();
+        for threads in [1, 2, 3, 7, 32, 400] {
+            let out = ExecPool::new(threads).map(&items, |i, &x| {
+                assert_eq!(i, x, "index/item alignment");
+                x * x
+            });
+            assert_eq!(out.len(), items.len());
+            for (i, v) in out.iter().enumerate() {
+                assert_eq!(*v, i * i, "threads={threads}");
+            }
+        }
+    }
+
+    #[test]
+    fn each_item_processed_exactly_once() {
+        let calls = AtomicUsize::new(0);
+        let items: Vec<u32> = (0..1000).collect();
+        let out = ExecPool::new(5).map(&items, |_, &x| {
+            calls.fetch_add(1, Ordering::Relaxed);
+            x
+        });
+        assert_eq!(calls.load(Ordering::Relaxed), 1000);
+        assert_eq!(out, items);
+    }
+
+    #[test]
+    fn per_item_error_slots_do_not_poison_the_batch() {
+        let items: Vec<u32> = (0..50).collect();
+        let out: Vec<Result<u32, String>> = ExecPool::new(4).map(&items, |_, &x| {
+            if x % 7 == 0 {
+                Err(format!("bad item {x}"))
+            } else {
+                Ok(x * 2)
+            }
+        });
+        for (i, slot) in out.iter().enumerate() {
+            let x = i as u32;
+            match slot {
+                Ok(v) => {
+                    assert_ne!(x % 7, 0);
+                    assert_eq!(*v, x * 2);
+                }
+                Err(e) => {
+                    assert_eq!(x % 7, 0);
+                    assert!(e.contains(&format!("{x}")), "{e}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn uneven_work_is_balanced_and_complete() {
+        // Item cost varies by orders of magnitude; chunked claiming must
+        // still cover every index once and keep ordering.
+        let items: Vec<usize> = (0..64).collect();
+        let out = ExecPool::new(8).map(&items, |_, &x| {
+            let spins: u64 = if x % 16 == 0 { 20_000 } else { 10 };
+            let mut acc = x as u64;
+            for i in 0..spins {
+                acc = acc.wrapping_mul(6364136223846793005).wrapping_add(i);
+            }
+            std::hint::black_box(acc);
+            x + 1
+        });
+        assert_eq!(out, (1..=64).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn zero_threads_clamps_to_one() {
+        let pool = ExecPool::new(0);
+        assert_eq!(pool.threads(), 1);
+        assert_eq!(pool.map(&[1, 2, 3], |_, &x| x + 1), vec![2, 3, 4]);
+    }
+}

@@ -20,6 +20,14 @@
 //!   more bundles, memoizes kernel deduction per graph fingerprint, and
 //!   serves `PredictRequest`s — single or batched across threads — at NAS
 //!   search rate without retraining.
+//! - **Concurrency substrate (`exec_pool`)**: the shared worker-pool
+//!   subsystem behind every hot fan-out — a scoped pool with a chunked
+//!   atomic work queue, ordered result collection, and per-item error
+//!   slots, plus an N-way sharded memo cache. `engine::predict_batch`,
+//!   `profiler::profile_set`, and the multi-scenario figure sweeps
+//!   (`report::sweep`) all run on it; `bench` (the `edgelat bench`
+//!   subcommand) measures those paths and emits the machine-readable
+//!   `BENCH_pipeline.json` that CI gates on.
 //! - **L2 (python/compile/model.py, build-time only)**: the MLP latency
 //!   predictor's forward/backward in JAX, AOT-lowered to HLO text.
 //! - **L1 (python/compile/kernels/, build-time only)**: the MLP's fused
@@ -31,8 +39,10 @@
 //! engine-external (PJRT handles are neither serializable nor `Send`);
 //! the serving engine covers the three native methods.
 
+pub mod bench;
 pub mod device;
 pub mod engine;
+pub mod exec_pool;
 pub mod graph;
 pub mod features;
 pub mod framework;

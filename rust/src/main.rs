@@ -7,6 +7,7 @@
 //!   train       train a predictor once and serialize it as a bundle
 //!   evaluate    train (or load) + evaluate a predictor for a scenario
 //!   predict     end-to-end latency prediction for a model file
+//!   bench       time the pipeline hot paths, write BENCH_pipeline.json
 //!   list        list scenarios / zoo models
 //!
 //! Arg parsing is hand-rolled: the offline crate set has no clap.
@@ -31,6 +32,7 @@ fn main() {
         "train" => cmd_train(rest),
         "evaluate" => cmd_evaluate(rest),
         "predict" => cmd_predict(rest),
+        "bench" => cmd_bench(rest),
         "list" => cmd_list(rest),
         "help" | "--help" | "-h" => usage(),
         other => {
@@ -55,6 +57,7 @@ USAGE:
                     [--train N] [--test {{synth|zoo}}] [--seed S] [--out BUNDLE.json]
   edgelat predict   --model-file PATH [--bundle BUNDLE.json | --scenario ID [--method M]
                     [--train N] [--seed S] [--out BUNDLE.json]]
+  edgelat bench     [--quick] [--threads N] [--out BENCH_pipeline.json]
   edgelat list      {{scenarios|models|figures}}
 
 The train-once/serve workflow: `train` profiles synthetic NAs once and writes
@@ -458,6 +461,35 @@ fn cmd_predict(rest: &[String]) {
         println!("  {b:<24} {} ms", ms(*m));
     }
     maybe_save_bundle(rest, &pred);
+}
+
+fn cmd_bench(rest: &[String]) {
+    let mut cfg = if has(rest, "--quick") {
+        edgelat::bench::BenchConfig::quick()
+    } else {
+        edgelat::bench::BenchConfig::full()
+    };
+    if let Some(t) = flag(rest, "--threads") {
+        cfg.threads = t.parse().expect("--threads N");
+    }
+    let out = flag(rest, "--out").unwrap_or_else(|| "BENCH_pipeline.json".into());
+    let t0 = std::time::Instant::now();
+    println!("== edgelat bench ({}, {} threads) ==", cfg.label, cfg.threads);
+    let doc = edgelat::bench::run(&cfg);
+    std::fs::write(&out, doc.to_string()).unwrap_or_else(|e| {
+        eprintln!("writing {out}: {e}");
+        std::process::exit(2);
+    });
+    let derived = doc.req("derived").expect("bench derived section");
+    println!(
+        "\nbatch-predict speedup vs single-predict loop: {:.2}x",
+        derived.req_f64("batch_predict_speedup").unwrap_or(f64::NAN)
+    );
+    println!(
+        "scenario-sweep speedup vs sequential:         {:.2}x",
+        derived.req_f64("sweep_parallel_speedup").unwrap_or(f64::NAN)
+    );
+    println!("wrote {out} in {:.1}s", t0.elapsed().as_secs_f64());
 }
 
 fn cmd_list(rest: &[String]) {

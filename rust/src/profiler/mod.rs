@@ -4,6 +4,7 @@
 //! datasets for the per-op-type predictors.
 
 use crate::device;
+use crate::exec_pool::ExecPool;
 use crate::features::{bucket_of, cpu_bucket, features, kernel_features};
 use crate::graph::Graph;
 use crate::scenario::Scenario;
@@ -86,26 +87,27 @@ pub fn profile(sc: &Scenario, g: &Graph, seed: u64, runs: usize) -> ModelProfile
     }
 }
 
-/// Profile a set of models in parallel (std threads; no rayon offline).
+/// Profile a set of models in parallel on a machine-sized [`ExecPool`].
 pub fn profile_set(sc: &Scenario, graphs: &[Graph], seed: u64, runs: usize) -> Vec<ModelProfile> {
-    let nthreads = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4);
-    let chunk = graphs.len().div_ceil(nthreads.max(1));
-    if chunk == 0 {
-        return Vec::new();
-    }
-    let mut out: Vec<Option<ModelProfile>> = vec![None; graphs.len()];
-    std::thread::scope(|scope| {
-        for (ti, (gs, os)) in graphs.chunks(chunk).zip(out.chunks_mut(chunk)).enumerate() {
-            let sc = &*sc;
-            scope.spawn(move || {
-                let _ = ti;
-                for (g, o) in gs.iter().zip(os.iter_mut()) {
-                    *o = Some(profile(sc, g, seed, runs));
-                }
-            });
-        }
-    });
-    out.into_iter().map(|o| o.unwrap()).collect()
+    profile_set_with(&ExecPool::default(), sc, graphs, seed, runs)
+}
+
+/// Profile a set of models on a caller-provided pool. The scenario-sweep
+/// prefetcher profiles many scenarios concurrently and hands each one a
+/// slice of the machine (`ExecPool::new(1)` = fully sequential).
+///
+/// Every graph keeps the same per-graph seed derivation as the sequential
+/// loop (`profile(sc, g, seed, runs)` is pure per graph), so the result is
+/// bit-identical for any thread count — asserted by
+/// `profile_set_matches_sequential`.
+pub fn profile_set_with(
+    pool: &ExecPool,
+    sc: &Scenario,
+    graphs: &[Graph],
+    seed: u64,
+    runs: usize,
+) -> Vec<ModelProfile> {
+    pool.map(graphs, |_, g| profile(sc, g, seed, runs))
 }
 
 /// A per-bucket training dataset: feature rows + latency targets.
@@ -189,11 +191,37 @@ mod tests {
             crate::zoo::mobilenets::mobilenet_v1(0.25),
             crate::zoo::mobilenets::mobilenet_v1(0.5),
             crate::zoo::mobilenets::mobilenet_v1(0.75),
+            crate::zoo::resnets::resnet(10, 1.0),
+            crate::zoo::mobilenets::mobilenet_v2(0.5),
         ];
+        // Bit-identical across thread counts, not just for end-to-end:
+        // every per-op latency, feature row, and raw sample must match the
+        // fully sequential pool. The per-graph seed derivation is the same
+        // in all cases.
+        let seq = profile_set_with(&ExecPool::new(1), &sc, &graphs, 5, 3);
+        for pool in [ExecPool::new(3), ExecPool::default()] {
+            let par = profile_set_with(&pool, &sc, &graphs, 5, 3);
+            assert_eq!(par.len(), seq.len());
+            for (p, s) in par.iter().zip(&seq) {
+                assert_eq!(p.model, s.model);
+                assert_eq!(p.end_to_end_ms.to_bits(), s.end_to_end_ms.to_bits(), "{}", p.model);
+                assert_eq!(p.samples.len(), s.samples.len());
+                for (a, b) in p.samples.iter().zip(&s.samples) {
+                    assert_eq!(a.to_bits(), b.to_bits(), "{}", p.model);
+                }
+                assert_eq!(p.ops.len(), s.ops.len(), "{}", p.model);
+                for (po, so) in p.ops.iter().zip(&s.ops) {
+                    assert_eq!(po.bucket, so.bucket);
+                    assert_eq!(po.latency_ms.to_bits(), so.latency_ms.to_bits());
+                    assert_eq!(po.features, so.features);
+                }
+            }
+        }
+        // The convenience wrapper (machine-sized pool) agrees too.
         let par = profile_set(&sc, &graphs, 5, 3);
         for (g, p) in graphs.iter().zip(&par) {
             let s = profile(&sc, g, 5, 3);
-            assert_eq!(p.end_to_end_ms, s.end_to_end_ms, "{}", g.name);
+            assert_eq!(p.end_to_end_ms.to_bits(), s.end_to_end_ms.to_bits(), "{}", g.name);
         }
     }
 }

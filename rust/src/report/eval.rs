@@ -4,13 +4,13 @@
 //! optimization ablations (Figs 19/20), variance (Fig 32), the MLP
 //! train-size anomaly (Fig 33), and Winograd applicability (Table 2).
 
-use crate::device::{socs, DataRep, Target};
-use crate::framework::{evaluate, DeductionMode, ScenarioPredictor};
+use crate::device::{socs, DataRep, Soc, Target};
+use crate::framework::{evaluate, DeductionMode, Evaluation, ScenarioPredictor};
 use crate::graph::Graph;
 use crate::predict::mlp::MlpContext;
 use crate::predict::Method;
 use crate::profiler::ModelProfile;
-use crate::report::{DataSet, ReportCtx};
+use crate::report::{sweep, DataSet, ReportCtx};
 use crate::scenario::{cpu_combos, Scenario};
 use crate::tflite::{compile, select, CompileOptions};
 use crate::util::table::pct;
@@ -53,87 +53,158 @@ fn eval_method(
     evaluate(&pred, test_g, test_p)
 }
 
+/// The headline per-platform scenario of Figs 14/18: the GPU, or one
+/// large CPU core (fp32).
+fn fig_scenario(soc: &Soc, is_gpu: bool) -> Scenario {
+    if is_gpu {
+        Scenario::gpu(soc)
+    } else {
+        let mut counts = vec![0; soc.clusters.len()];
+        counts[0] = 1;
+        Scenario::cpu(soc, counts, DataRep::Fp32)
+    }
+}
+
+/// One Fig 14 table row: a method's MAPE averaged over the platforms'
+/// evaluations, end-to-end plus the dominant op columns.
+fn fig14_row(table: &mut Table, method: Method, evs: &[Evaluation], op_cols: &[&str]) {
+    let e2e: Vec<f64> = evs.iter().map(|e| e.end_to_end_mape).collect();
+    let mut row = vec![method.name().to_string(), pct(mean(&e2e))];
+    for c in op_cols {
+        let per: Vec<f64> = evs.iter().filter_map(|e| e.per_bucket_mape.get(*c).copied()).collect();
+        row.push(if per.is_empty() { "-".into() } else { pct(mean(&per)) });
+    }
+    table.row(row);
+}
+
 /// Fig 14: MAPE of each method, synthetic 900/100 split, averaged across
 /// platforms; end-to-end plus the four dominant op types.
 pub fn fig14_methods_synth(ctx: &mut ReportCtx) -> Vec<Table> {
     let mlp = mlp_ctx(ctx);
-    let methods = methods_with_mlp(mlp.is_some());
     let op_cols = ["Conv2D", "DepthwiseConv2D", "Mean", "Pooling"];
-    let mut cpu = Table::new(
-        "Fig 14a — MAPE on synthetic NAs, CPU (1 large core, avg across 4 platforms)",
-        &{
-            let mut h = vec!["method", "end-to-end"];
-            h.extend(op_cols);
-            h
-        },
-    );
-    let mut gpu = Table::new("Fig 14b — MAPE on synthetic NAs, GPU (avg across 4 platforms)", &{
+    let header = {
         let mut h = vec!["method", "end-to-end"];
         h.extend(op_cols);
         h
-    });
+    };
+    let mut cpu = Table::new(
+        "Fig 14a — MAPE on synthetic NAs, CPU (1 large core, avg across 4 platforms)",
+        &header,
+    );
+    let mut gpu =
+        Table::new("Fig 14b — MAPE on synthetic NAs, GPU (avg across 4 platforms)", &header);
     let (test_g_all, seed) = (ctx.synth_split().1.to_vec(), ctx.cfg.seed);
-    for &method in &methods {
-        for (is_gpu, table) in [(false, &mut cpu), (true, &mut gpu)] {
-            let mut e2e = Vec::new();
-            let mut per: std::collections::BTreeMap<&str, Vec<f64>> = Default::default();
+    // One sweep cell per (native method, target, platform): every cell is
+    // an independent train+evaluate, so the shared pool runs them all
+    // concurrently. MLP rows (artifact-gated; the PJRT context is not
+    // shareable across threads) run sequentially afterwards, which also
+    // keeps them last in each table exactly as before.
+    let mut cells: Vec<(Method, bool, Scenario)> = Vec::new();
+    for &method in Method::native() {
+        for is_gpu in [false, true] {
             for soc in socs() {
-                let sc = if is_gpu {
-                    Scenario::gpu(&soc)
-                } else {
-                    let mut counts = vec![0; soc.clusters.len()];
-                    counts[0] = 1;
-                    Scenario::cpu(&soc, counts, DataRep::Fp32)
-                };
+                cells.push((method, is_gpu, fig_scenario(&soc, is_gpu)));
+            }
+        }
+    }
+    let evs = sweep::run(
+        ctx,
+        &cells,
+        |(_, _, sc)| vec![(sc.clone(), DataSet::Synth)],
+        |ctx, (method, _, sc)| {
+            let (tr, te) = ctx.synth_profiles_split_cached(sc);
+            eval_method(sc, tr, &test_g_all, te, *method, seed, None)
+        },
+    );
+    let n_soc = socs().len();
+    for (group, chunk) in evs.chunks(n_soc).enumerate() {
+        let (method, is_gpu, _) = &cells[group * n_soc];
+        fig14_row(if *is_gpu { &mut gpu } else { &mut cpu }, *method, chunk, &op_cols);
+    }
+    if let Some(mlp) = &mlp {
+        for is_gpu in [false, true] {
+            let mut evs = Vec::new();
+            for soc in socs() {
+                let sc = fig_scenario(&soc, is_gpu);
                 let (tr, te) = ctx.synth_profiles_split(&sc);
-                let ev = eval_method(&sc, &tr, &test_g_all, &te, method, seed, mlp.as_ref());
-                e2e.push(ev.end_to_end_mape);
-                for c in op_cols {
-                    if let Some(&m) = ev.per_bucket_mape.get(*&c) {
-                        per.entry(c).or_default().push(m);
-                    }
-                }
+                evs.push(eval_method(&sc, &tr, &test_g_all, &te, Method::Mlp, seed, Some(mlp)));
             }
-            let mut row = vec![method.name().to_string(), pct(mean(&e2e))];
-            for c in op_cols {
-                row.push(per.get(c).map(|v| pct(mean(v))).unwrap_or("-".into()));
-            }
-            table.row(row);
+            fig14_row(if is_gpu { &mut gpu } else { &mut cpu }, Method::Mlp, &evs, &op_cols);
         }
     }
     vec![cpu, gpu]
 }
 
-/// Fig 15 (30): GBDT end-to-end predictions per core combo, fp32 + int8.
-pub fn fig15_gbdt_multicore(ctx: &mut ReportCtx, full: bool) -> Vec<Table> {
-    let mut tables = Vec::new();
-    let test_g = ctx.synth_split().1.to_vec();
-    let seed = ctx.cfg.seed;
+/// One multicore-sweep cell: a platform's core combo in both data
+/// representations (one output table row).
+struct ComboCell {
+    soc_name: String,
+    fp32: Scenario,
+    int8: Scenario,
+}
+
+/// The (platform x core combo) cells of Figs 15/30 and 23/31, in table
+/// order.
+fn combo_cells(full: bool) -> Vec<ComboCell> {
+    let mut cells = Vec::new();
     for soc in socs() {
-        let mut t = Table::new(
-            &format!(
-                "Fig {} — GBDT end-to-end MAPE per core combo (synthetic), {}",
-                if full { 30 } else { 15 },
-                soc.name
-            ),
-            &["combo", "fp32 MAPE", "int8 MAPE"],
-        );
         let combos = cpu_combos(&soc);
         let combos = if full { combos } else { combos.into_iter().take(6).collect() };
         for counts in combos {
-            let mut row = vec![String::new()];
-            for rep in [DataRep::Fp32, DataRep::Int8] {
-                let sc = Scenario::cpu(&soc, counts.clone(), rep);
-                row[0] = sc.combo_label();
-                let (tr, te) = ctx.synth_profiles_split(&sc);
-                let ev = eval_method(&sc, &tr, &test_g, &te, Method::Gbdt, seed, None);
-                row.push(pct(ev.end_to_end_mape));
-            }
-            t.row(row);
+            cells.push(ComboCell {
+                soc_name: soc.name.to_string(),
+                fp32: Scenario::cpu(&soc, counts.clone(), DataRep::Fp32),
+                int8: Scenario::cpu(&soc, counts, DataRep::Int8),
+            });
         }
-        tables.push(t);
+    }
+    cells
+}
+
+/// Group per-cell rows into one table per platform (cells arrive in
+/// platform order, so tables materialize in order too).
+fn combo_tables(
+    cells: &[ComboCell],
+    rows: Vec<Vec<String>>,
+    title: impl Fn(&str) -> String,
+) -> Vec<Table> {
+    let mut tables: Vec<Table> = Vec::new();
+    let mut last_soc: Option<&str> = None;
+    for (cell, row) in cells.iter().zip(rows) {
+        if last_soc != Some(cell.soc_name.as_str()) {
+            tables.push(Table::new(&title(&cell.soc_name), &["combo", "fp32 MAPE", "int8 MAPE"]));
+            last_soc = Some(cell.soc_name.as_str());
+        }
+        tables.last_mut().expect("table exists for current soc").row(row);
     }
     tables
+}
+
+/// Fig 15 (30): GBDT end-to-end predictions per core combo, fp32 + int8.
+pub fn fig15_gbdt_multicore(ctx: &mut ReportCtx, full: bool) -> Vec<Table> {
+    let test_g = ctx.synth_split().1.to_vec();
+    let seed = ctx.cfg.seed;
+    let cells = combo_cells(full);
+    let rows = sweep::run(
+        ctx,
+        &cells,
+        |c| vec![(c.fp32.clone(), DataSet::Synth), (c.int8.clone(), DataSet::Synth)],
+        |ctx, c| {
+            let mut row = vec![c.fp32.combo_label()];
+            for sc in [&c.fp32, &c.int8] {
+                let (tr, te) = ctx.synth_profiles_split_cached(sc);
+                let ev = eval_method(sc, tr, &test_g, te, Method::Gbdt, seed, None);
+                row.push(pct(ev.end_to_end_mape));
+            }
+            row
+        },
+    );
+    combo_tables(&cells, rows, |soc| {
+        format!(
+            "Fig {} — GBDT end-to-end MAPE per core combo (synthetic), {soc}",
+            if full { 30 } else { 15 }
+        )
+    })
 }
 
 /// Fig 16: GBDT on the four GPUs, with Conv2D vs Winograd split.
@@ -244,13 +315,7 @@ pub fn fig18_methods_zoo(ctx: &mut ReportCtx) -> Vec<Table> {
         for (is_gpu, table) in [(false, &mut cpu), (true, &mut gpu)] {
             let mut e2e = Vec::new();
             for soc in socs() {
-                let sc = if is_gpu {
-                    Scenario::gpu(&soc)
-                } else {
-                    let mut counts = vec![0; soc.clusters.len()];
-                    counts[0] = 1;
-                    Scenario::cpu(&soc, counts, DataRep::Fp32)
-                };
+                let sc = fig_scenario(&soc, is_gpu);
                 let (tr, _) = ctx.synth_profiles_split(&sc);
                 let te = ctx.profiles(&sc, DataSet::Zoo).to_vec();
                 let ev = eval_method(&sc, &tr, &zoo_g, &te, method, seed, mlp.as_ref());
@@ -415,13 +480,7 @@ fn train_size_sweep(ctx: &mut ReportCtx, test: DataSet, title: &str) -> Vec<Tabl
             let mut gpu_all = Vec::new();
             for soc in socs() {
                 for is_gpu in [false, true] {
-                    let sc = if is_gpu {
-                        Scenario::gpu(&soc)
-                    } else {
-                        let mut counts = vec![0; soc.clusters.len()];
-                        counts[0] = 1;
-                        Scenario::cpu(&soc, counts, DataRep::Fp32)
-                    };
+                    let sc = fig_scenario(&soc, is_gpu);
                     let (tr_full, te_synth) = ctx.synth_profiles_split(&sc);
                     let tr = &tr_full[..n.min(tr_full.len())];
                     let (te_g, te_p): (Vec<Graph>, Vec<ModelProfile>) = match test {
@@ -468,36 +527,38 @@ pub fn fig22_train_size_zoo(ctx: &mut ReportCtx) -> Vec<Table> {
 
 /// Fig 23 (31): Lasso with 30 training NAs, multicore combos, zoo test.
 pub fn fig23_lasso_multicore(ctx: &mut ReportCtx, full: bool) -> Vec<Table> {
-    let mut tables = Vec::new();
     let zoo = ctx.zoo().to_vec();
     let seed = ctx.cfg.seed;
-    for soc in socs() {
-        let mut t = Table::new(
-            &format!(
-                "Fig {} — Lasso (30 training NAs) end-to-end MAPE per combo (zoo), {}",
-                if full { 31 } else { 23 },
-                soc.name
-            ),
-            &["combo", "fp32 MAPE", "int8 MAPE"],
-        );
-        let combos = cpu_combos(&soc);
-        let combos = if full { combos } else { combos.into_iter().take(6).collect() };
-        for counts in combos {
-            let mut row = vec![String::new()];
-            for rep in [DataRep::Fp32, DataRep::Int8] {
-                let sc = Scenario::cpu(&soc, counts.clone(), rep);
-                row[0] = sc.combo_label();
-                let (tr_full, _) = ctx.synth_profiles_split(&sc);
+    let cells = combo_cells(full);
+    let rows = sweep::run(
+        ctx,
+        &cells,
+        |c| {
+            vec![
+                (c.fp32.clone(), DataSet::Synth),
+                (c.fp32.clone(), DataSet::Zoo),
+                (c.int8.clone(), DataSet::Synth),
+                (c.int8.clone(), DataSet::Zoo),
+            ]
+        },
+        |ctx, c| {
+            let mut row = vec![c.fp32.combo_label()];
+            for sc in [&c.fp32, &c.int8] {
+                let (tr_full, _) = ctx.synth_profiles_split_cached(sc);
                 let tr = &tr_full[..30.min(tr_full.len())];
-                let te = ctx.profiles(&sc, DataSet::Zoo).to_vec();
-                let ev = eval_method(&sc, tr, &zoo, &te, Method::Lasso, seed, None);
+                let te = ctx.profiles_cached(sc, DataSet::Zoo);
+                let ev = eval_method(sc, tr, &zoo, te, Method::Lasso, seed, None);
                 row.push(pct(ev.end_to_end_mape));
             }
-            t.row(row);
-        }
-        tables.push(t);
-    }
-    tables
+            row
+        },
+    );
+    combo_tables(&cells, rows, |soc| {
+        format!(
+            "Fig {} — Lasso (30 training NAs) end-to-end MAPE per combo (zoo), {soc}",
+            if full { 31 } else { 23 }
+        )
+    })
 }
 
 /// Fig 24: Lasso (30 NAs) on the four GPUs + feature-importance analysis.

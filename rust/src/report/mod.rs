@@ -9,9 +9,11 @@
 
 pub mod eval;
 pub mod study;
+pub mod sweep;
 
+use crate::exec_pool::ExecPool;
 use crate::graph::Graph;
-use crate::profiler::{profile_set, ModelProfile};
+use crate::profiler::{profile_set, profile_set_with, ModelProfile};
 use crate::scenario::Scenario;
 use crate::util::Table;
 use std::collections::HashMap;
@@ -96,7 +98,7 @@ impl ReportCtx {
 
     /// Profile a dataset under a scenario, cached by (scenario id, set tag).
     pub fn profiles(&mut self, sc: &Scenario, set: DataSet) -> &[ModelProfile] {
-        let key = format!("{}#{:?}", sc.id, set);
+        let key = profile_key(sc, set);
         if !self.profiles.contains_key(&key) {
             let graphs: &[Graph] = match set {
                 DataSet::Zoo => &self.zoo,
@@ -108,13 +110,72 @@ impl ReportCtx {
         &self.profiles[&key]
     }
 
+    /// Fill the profile cache for every listed (scenario, dataset) pair,
+    /// computing the missing ones **in parallel across scenarios** on the
+    /// shared pool. Each scenario's own graphs are profiled on an inner
+    /// pool sized so outer x inner ≈ the machine: a wide sweep gets one
+    /// worker per scenario, a single missing scenario still fans out over
+    /// its graphs. Results are bit-identical to on-demand [`profiles`]
+    /// (per-graph profiling is pure), so figures built from prefetched
+    /// caches match their sequential counterparts exactly.
+    ///
+    /// [`profiles`]: Self::profiles
+    pub fn prefetch_profiles(&mut self, pairs: &[(Scenario, DataSet)]) {
+        let mut seen = std::collections::HashSet::new();
+        let missing: Vec<(Scenario, DataSet)> = pairs
+            .iter()
+            .filter(|(sc, set)| {
+                let key = profile_key(sc, *set);
+                !self.profiles.contains_key(&key) && seen.insert(key)
+            })
+            .cloned()
+            .collect();
+        if missing.is_empty() {
+            return;
+        }
+        let pool = ExecPool::default();
+        let inner = ExecPool::new(pool.threads().div_ceil(missing.len().min(pool.threads())));
+        let computed = pool.map(&missing, |_, (sc, set)| {
+            let graphs: &[Graph] = match set {
+                DataSet::Zoo => &self.zoo,
+                DataSet::Synth => &self.synth,
+            };
+            profile_set_with(&inner, sc, graphs, self.cfg.seed, self.cfg.runs)
+        });
+        for ((sc, set), p) in missing.iter().zip(computed) {
+            self.profiles.insert(profile_key(sc, *set), p);
+        }
+    }
+
+    /// Read-only profile access for parallel sweep evaluation (shared
+    /// `&self` across pool workers). Panics if the pair was never
+    /// profiled — sweep cells must declare their needs so
+    /// [`prefetch_profiles`](Self::prefetch_profiles) runs first.
+    pub fn profiles_cached(&self, sc: &Scenario, set: DataSet) -> &[ModelProfile] {
+        self.profiles
+            .get(&profile_key(sc, set))
+            .unwrap_or_else(|| panic!("profiles for {} ({set:?}) not prefetched", sc.id))
+            .as_slice()
+    }
+
     /// Split synthetic profiles consistently with `synth_split`.
     pub fn synth_profiles_split(&mut self, sc: &Scenario) -> (Vec<ModelProfile>, Vec<ModelProfile>) {
-        let n = self.cfg.n_train.min(self.synth.len().saturating_sub(1));
-        let all = self.profiles(sc, DataSet::Synth).to_vec();
-        let (a, b) = all.split_at(n);
+        self.profiles(sc, DataSet::Synth);
+        let (a, b) = self.synth_profiles_split_cached(sc);
         (a.to_vec(), b.to_vec())
     }
+
+    /// Borrowed variant of [`synth_profiles_split`](Self::synth_profiles_split)
+    /// for prefetched scenarios — no cloning, usable from sweep workers.
+    pub fn synth_profiles_split_cached(&self, sc: &Scenario) -> (&[ModelProfile], &[ModelProfile]) {
+        let n = self.cfg.n_train.min(self.synth.len().saturating_sub(1));
+        self.profiles_cached(sc, DataSet::Synth).split_at(n)
+    }
+}
+
+/// Cache key of one (scenario, dataset) profile set.
+fn profile_key(sc: &Scenario, set: DataSet) -> String {
+    format!("{}#{set:?}", sc.id)
 }
 
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
@@ -179,6 +240,40 @@ mod tests {
         let b = ctx.profiles(&sc, DataSet::Zoo).len();
         assert_eq!(a, b);
         assert_eq!(a, 20);
+    }
+
+    #[test]
+    fn prefetch_profiles_matches_on_demand() {
+        let cfg = ReportConfig {
+            n_synth: 8,
+            n_train: 6,
+            runs: 2,
+            zoo_cap: Some(3),
+            ..Default::default()
+        };
+        let mut pre = ReportCtx::new(cfg.clone());
+        let mut lazy = ReportCtx::new(cfg);
+        let sc1 = crate::scenario::one_large_core("HelioP35");
+        let sc2 = crate::scenario::one_large_core("Snapdragon855");
+        pre.prefetch_profiles(&[
+            (sc1.clone(), DataSet::Synth),
+            (sc1.clone(), DataSet::Synth), // duplicates are computed once
+            (sc2.clone(), DataSet::Zoo),
+        ]);
+        for (sc, set) in [(&sc1, DataSet::Synth), (&sc2, DataSet::Zoo)] {
+            let a = pre.profiles_cached(sc, set).to_vec();
+            let b = lazy.profiles(sc, set);
+            assert_eq!(a.len(), b.len());
+            for (x, y) in a.iter().zip(b) {
+                assert_eq!(x.end_to_end_ms.to_bits(), y.end_to_end_ms.to_bits(), "{}", x.model);
+                assert_eq!(x.ops.len(), y.ops.len());
+            }
+        }
+        // Prefetching again is a no-op (already cached).
+        pre.prefetch_profiles(&[(sc1.clone(), DataSet::Synth)]);
+        let (tr, te) = pre.synth_profiles_split_cached(&sc1);
+        assert_eq!(tr.len(), 6);
+        assert_eq!(te.len(), 2);
     }
 
     #[test]

@@ -1,0 +1,93 @@
+//! Parallel scenario-sweep driver for the multi-scenario figures.
+//!
+//! The heterogeneity figures (15/30, 23/31) and the method comparison
+//! (14) evaluate an independent train+test cell per (scenario, method) —
+//! up to 68 CPU combos x 2 representations at `--full` scale. Each cell is
+//! pure in its inputs, so the sweep runs in two pool passes:
+//!
+//! 1. **Prefetch**: every profile set any cell needs is computed in
+//!    parallel across scenarios ([`ReportCtx::prefetch_profiles`]).
+//! 2. **Evaluate**: cells run concurrently against the now-read-only
+//!    cache, results collected in cell order.
+//!
+//! Ordered collection + pure cells ⇒ the produced tables are *identical*
+//! to the sequential loops they replaced (asserted below), just faster.
+
+use crate::exec_pool::ExecPool;
+use crate::report::{DataSet, ReportCtx};
+use crate::scenario::Scenario;
+
+/// Run `eval` over every cell on the shared pool, returning results in
+/// cell order. `needs` declares which (scenario, dataset) profile sets a
+/// cell reads; they are prefetched before evaluation so cells can use the
+/// borrowed `_cached` accessors on a shared `&ReportCtx`.
+pub fn run<C, R, N, F>(ctx: &mut ReportCtx, cells: &[C], needs: N, eval: F) -> Vec<R>
+where
+    C: Sync,
+    R: Send,
+    N: Fn(&C) -> Vec<(Scenario, DataSet)>,
+    F: Fn(&ReportCtx, &C) -> R + Sync,
+{
+    let pairs: Vec<(Scenario, DataSet)> = cells.iter().flat_map(|c| needs(c)).collect();
+    ctx.prefetch_profiles(&pairs);
+    let ctx: &ReportCtx = ctx;
+    ExecPool::default().map(cells, |_, c| eval(ctx, c))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::framework::{evaluate, DeductionMode, ScenarioPredictor};
+    use crate::predict::Method;
+    use crate::report::ReportConfig;
+    use crate::scenario::one_large_core;
+
+    /// The acceptance property for the parallelized figure sweeps: the
+    /// sweep driver produces bit-identical numbers to the plain sequential
+    /// loop over the same cells (same profiles, same training, same
+    /// evaluation), regardless of pool scheduling.
+    #[test]
+    fn sweep_matches_sequential_evaluation() {
+        let cfg = ReportConfig {
+            n_synth: 10,
+            n_train: 8,
+            runs: 2,
+            zoo_cap: Some(2),
+            ..Default::default()
+        };
+        let socs = crate::device::socs();
+        let cells: Vec<Scenario> = vec![
+            one_large_core("HelioP35"),
+            one_large_core("Snapdragon855"),
+            Scenario::gpu(&socs[0]),
+        ];
+        let seed = cfg.seed;
+
+        let cell_eval = |ctx: &ReportCtx, sc: &Scenario| -> f64 {
+            let (tr, te) = ctx.synth_profiles_split_cached(sc);
+            let test_g = ctx.synth_split().1.to_vec();
+            let pred =
+                ScenarioPredictor::train_from(sc, tr, Method::Gbdt, DeductionMode::Full, seed, None);
+            evaluate(&pred, &test_g, te).end_to_end_mape
+        };
+
+        // Parallel: through the sweep driver.
+        let mut ctx = ReportCtx::new(cfg.clone());
+        let par = run(&mut ctx, &cells, |sc| vec![(sc.clone(), DataSet::Synth)], cell_eval);
+
+        // Sequential reference: a fresh context, cells one at a time.
+        let mut ctx_seq = ReportCtx::new(cfg);
+        let seq: Vec<f64> = cells
+            .iter()
+            .map(|sc| {
+                ctx_seq.profiles(sc, DataSet::Synth);
+                cell_eval(&ctx_seq, sc)
+            })
+            .collect();
+
+        assert_eq!(par.len(), seq.len());
+        for ((sc, a), b) in cells.iter().zip(&par).zip(&seq) {
+            assert_eq!(a.to_bits(), b.to_bits(), "{}: parallel {a} vs sequential {b}", sc.id);
+        }
+    }
+}

@@ -124,8 +124,26 @@ pub fn headline_scenarios() -> Vec<Scenario> {
 }
 
 /// Find a scenario by id.
+///
+/// Backed by a lazily-built index: the old implementation rebuilt all 72
+/// scenarios per lookup, which made multi-bundle `EngineBuilder::build`
+/// (one `by_id` call per bundle) and CLI flag parsing quadratic.
 pub fn by_id(id: &str) -> Option<Scenario> {
-    all_scenarios().into_iter().find(|s| s.id == id)
+    let (all, by_id) = scenario_index();
+    by_id.get(id).map(|&i| all[i].clone())
+}
+
+fn scenario_index(
+) -> &'static (Vec<Scenario>, std::collections::HashMap<String, usize>) {
+    static INDEX: std::sync::OnceLock<(
+        Vec<Scenario>,
+        std::collections::HashMap<String, usize>,
+    )> = std::sync::OnceLock::new();
+    INDEX.get_or_init(|| {
+        let all = all_scenarios();
+        let by_id = all.iter().enumerate().map(|(i, s)| (s.id.clone(), i)).collect();
+        (all, by_id)
+    })
 }
 
 /// Build a single-large-core fp32 scenario for a SoC by name.
@@ -174,7 +192,15 @@ mod tests {
     #[test]
     fn by_id_roundtrip() {
         for s in all_scenarios() {
-            assert!(by_id(&s.id).is_some(), "{}", s.id);
+            let found = by_id(&s.id).unwrap_or_else(|| panic!("{}", s.id));
+            assert_eq!(found.id, s.id);
+            assert_eq!(found.soc.name, s.soc.name);
         }
+    }
+
+    #[test]
+    fn by_id_unknown_is_none() {
+        assert!(by_id("NoSuchSoc/cpu/1L/fp32").is_none());
+        assert!(by_id("").is_none());
     }
 }

@@ -1,10 +1,12 @@
-//! Dependency-free utilities: deterministic PRNG, summary statistics, and a
-//! small JSON implementation (no serde in the offline crate set).
+//! Dependency-free utilities: deterministic PRNG, summary statistics, a
+//! small JSON implementation (no serde in the offline crate set), and the
+//! wall-clock timing harness shared by `cargo bench` and `edgelat bench`.
 
 pub mod json;
 pub mod prng;
 pub mod stats;
 pub mod table;
+pub mod timing;
 
 pub use json::Json;
 pub use prng::Rng;

@@ -1,0 +1,85 @@
+//! Shared wall-clock micro-benchmark harness (no criterion in the offline
+//! crate set): warmup + N timed iterations, mean/min/p50 per run. Used by
+//! `cargo bench --bench pipeline` and the `edgelat bench` subcommand.
+
+use std::time::Instant;
+
+/// Timing summary of one benchmarked operation.
+#[derive(Debug, Clone)]
+pub struct Sample {
+    pub name: String,
+    pub iters: usize,
+    pub mean_s: f64,
+    pub min_s: f64,
+    pub p50_s: f64,
+}
+
+impl Sample {
+    /// One human-readable report line.
+    pub fn render(&self) -> String {
+        format!(
+            "{:<44} mean {}  min {}  p50 {}  (n={})",
+            self.name,
+            fmt_secs(self.mean_s),
+            fmt_secs(self.min_s),
+            fmt_secs(self.p50_s),
+            self.iters
+        )
+    }
+}
+
+/// Format a duration in s/ms/µs with a stable width.
+pub fn fmt_secs(s: f64) -> String {
+    if s >= 1.0 {
+        format!("{s:9.3} s ")
+    } else if s >= 1e-3 {
+        format!("{:9.3} ms", s * 1e3)
+    } else {
+        format!("{:9.3} µs", s * 1e6)
+    }
+}
+
+/// Time `f`: ~iters/10 warmup calls, then `iters` timed calls.
+pub fn time_named<F: FnMut()>(name: &str, iters: usize, mut f: F) -> Sample {
+    let iters = iters.max(1);
+    for _ in 0..iters.div_ceil(10).max(1) {
+        f();
+    }
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        f();
+        samples.push(t0.elapsed().as_secs_f64());
+    }
+    samples.sort_by(|a, b| a.partial_cmp(b).expect("durations are finite"));
+    Sample {
+        name: name.to_string(),
+        iters,
+        mean_s: samples.iter().sum::<f64>() / samples.len() as f64,
+        min_s: samples[0],
+        p50_s: samples[samples.len() / 2],
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sample_statistics_are_consistent() {
+        let mut calls = 0usize;
+        let s = time_named("noop", 10, || calls += 1);
+        assert_eq!(s.iters, 10);
+        assert!(calls >= 10, "timed calls + warmup, got {calls}");
+        assert!(s.min_s <= s.p50_s && s.p50_s >= 0.0);
+        assert!(s.mean_s >= s.min_s);
+        assert!(s.render().contains("noop"));
+    }
+
+    #[test]
+    fn fmt_secs_picks_sensible_units() {
+        assert!(fmt_secs(2.5).contains("s"));
+        assert!(fmt_secs(2.5e-3).contains("ms"));
+        assert!(fmt_secs(2.5e-6).contains("µs"));
+    }
+}

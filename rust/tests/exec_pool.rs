@@ -1,0 +1,153 @@
+//! Integration: the shared worker-pool subsystem and the sharded engine
+//! cache — ordered batch results with per-slot errors, memo hit/miss
+//! accounting through the serving engine, and parallel == sequential
+//! equivalence for profiling.
+
+use edgelat::engine::{EngineBuilder, LatencyEngine, PredictRequest, PredictorBundle};
+use edgelat::exec_pool::{ExecPool, ShardedCache};
+use edgelat::framework::DeductionMode;
+use edgelat::graph::Graph;
+use edgelat::predict::Method;
+use edgelat::profiler::{profile_set, profile_set_with};
+use edgelat::scenario::{one_large_core, Scenario};
+
+fn nas_graphs(seed: u64, n: usize) -> Vec<Graph> {
+    edgelat::nas::sample_dataset(seed, n).into_iter().map(|a| a.graph).collect()
+}
+
+fn small_engine(sc: &Scenario, seed: u64, threads: usize) -> (LatencyEngine, Vec<Graph>) {
+    let graphs = nas_graphs(seed, 8);
+    let profiles = profile_set(sc, &graphs, seed, 2);
+    let bundle =
+        PredictorBundle::train(sc, &profiles, Method::Gbdt, DeductionMode::Full, 1).unwrap();
+    let engine = EngineBuilder::new().bundle(bundle).threads(threads).build().unwrap();
+    (engine, graphs)
+}
+
+#[test]
+fn predict_batch_preserves_order_and_per_slot_errors() {
+    let sc = one_large_core("HelioP35");
+    let (engine, graphs) = small_engine(&sc, 77, 4);
+    // Interleave good requests with unknown-scenario and wrong-method
+    // ones: every slot must line up with its request, and the bad slots
+    // must carry their own errors without poisoning the good ones.
+    let reqs: Vec<PredictRequest> = graphs
+        .iter()
+        .enumerate()
+        .map(|(i, g)| match i % 3 {
+            0 => PredictRequest::new(g, sc.id.clone()),
+            1 => PredictRequest::new(g, "NoSuch/cpu/1L/fp32"),
+            _ => PredictRequest::new(g, sc.id.clone()).with_method(Method::Lasso),
+        })
+        .collect();
+    let out = engine.predict_batch(&reqs);
+    assert_eq!(out.len(), reqs.len());
+    for (i, slot) in out.iter().enumerate() {
+        match i % 3 {
+            0 => {
+                let resp = slot.as_ref().expect("good request served");
+                let seq = engine.predict(&reqs[i]).expect("sequential serve");
+                assert_eq!(resp.e2e_ms.to_bits(), seq.e2e_ms.to_bits(), "slot {i}");
+                assert_eq!(resp.per_unit.len(), seq.per_unit.len());
+            }
+            1 => {
+                let err = slot.as_ref().expect_err("unknown scenario must error");
+                assert!(err.to_string().contains("NoSuch"), "slot {i}: {err}");
+            }
+            _ => {
+                let err = slot.as_ref().expect_err("wrong method must error");
+                assert!(err.to_string().contains("Lasso"), "slot {i}: {err}");
+            }
+        }
+    }
+}
+
+#[test]
+fn predict_batch_is_identical_for_any_thread_count() {
+    let sc = one_large_core("Snapdragon710");
+    let graphs = nas_graphs(31, 10);
+    let profiles = profile_set(&sc, &graphs, 31, 2);
+    let bundle =
+        PredictorBundle::train(&sc, &profiles, Method::Lasso, DeductionMode::Full, 2).unwrap();
+    let mut outputs: Vec<Vec<u64>> = Vec::new();
+    for threads in [1usize, 2, 8] {
+        let engine = EngineBuilder::new()
+            .bundle(bundle.clone())
+            .threads(threads)
+            .build()
+            .unwrap();
+        let reqs: Vec<PredictRequest> =
+            graphs.iter().map(|g| PredictRequest::new(g, sc.id.clone())).collect();
+        outputs.push(
+            engine
+                .predict_batch(&reqs)
+                .into_iter()
+                .map(|r| r.expect("served").e2e_ms.to_bits())
+                .collect(),
+        );
+    }
+    assert_eq!(outputs[0], outputs[1]);
+    assert_eq!(outputs[0], outputs[2]);
+}
+
+#[test]
+fn engine_cache_stats_count_hits_misses_and_sharing() {
+    let sc = one_large_core("Exynos9820");
+    let (engine, graphs) = small_engine(&sc, 55, 2);
+    let g = &graphs[0];
+    let s0 = engine.cache_stats();
+    assert_eq!((s0.hits, s0.misses), (0, 0), "fresh engine");
+    let req = PredictRequest::new(g, sc.id.clone());
+    engine.predict(&req).unwrap();
+    let s1 = engine.cache_stats();
+    assert_eq!(s1.misses, 1, "first deduction is a miss");
+    assert_eq!(s1.hits, 0);
+    for _ in 0..3 {
+        engine.predict(&req).unwrap();
+    }
+    let s2 = engine.cache_stats();
+    assert_eq!(s2.misses, 1, "same graph never re-deduces");
+    assert_eq!(s2.hits, 3);
+    // A whole batch over distinct graphs: one miss per distinct graph.
+    let reqs: Vec<PredictRequest> =
+        graphs.iter().map(|x| PredictRequest::new(x, sc.id.clone())).collect();
+    engine.predict_batch(&reqs);
+    let s3 = engine.cache_stats();
+    assert_eq!(s3.misses as usize, graphs.len(), "one deduction per distinct graph");
+    engine.predict_batch(&reqs);
+    let s4 = engine.cache_stats();
+    assert_eq!(s4.misses, s3.misses, "warm batch is all hits");
+    assert_eq!(s4.hits, s3.hits + reqs.len() as u64);
+}
+
+#[test]
+fn sharded_cache_keeps_other_shards_warm_on_eviction() {
+    let cache: ShardedCache<u64, u64> = ShardedCache::new(4, 64);
+    assert_eq!(cache.shard_count(), 4);
+    assert_eq!(cache.capacity(), 64);
+    for k in 0..1000u64 {
+        cache.insert(k, k * 2);
+    }
+    let st = cache.stats();
+    assert!(st.evictions > 0, "1000 inserts into capacity 64 must evict");
+    // Per-shard clears leave the rest of the cache populated.
+    assert!(!cache.is_empty());
+    assert!(cache.len() <= 64);
+}
+
+#[test]
+fn pool_map_equivalence_across_thread_counts_on_real_profiling() {
+    let sc = one_large_core("Snapdragon855");
+    let graphs = nas_graphs(91, 6);
+    let seq = profile_set_with(&ExecPool::new(1), &sc, &graphs, 9, 2);
+    let par = profile_set_with(&ExecPool::new(6), &sc, &graphs, 9, 2);
+    assert_eq!(seq.len(), par.len());
+    for (a, b) in seq.iter().zip(&par) {
+        assert_eq!(a.model, b.model);
+        assert_eq!(a.end_to_end_ms.to_bits(), b.end_to_end_ms.to_bits(), "{}", a.model);
+        assert_eq!(a.ops.len(), b.ops.len());
+        for (x, y) in a.ops.iter().zip(&b.ops) {
+            assert_eq!(x.latency_ms.to_bits(), y.latency_ms.to_bits());
+        }
+    }
+}

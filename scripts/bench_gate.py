@@ -1,0 +1,66 @@
+#!/usr/bin/env python3
+"""CI gate over the `edgelat bench` artifact (BENCH_pipeline.json).
+
+Fails on a >2x slowdown of engine batch-predict relative to the
+single-predict-per-item loop measured in the same process (i.e.
+batch_predict_speedup < 0.5). The check is a ratio between two workloads
+timed back-to-back on the same machine, not an absolute wall-clock
+threshold, so it is robust to runner speed while still catching a
+batch-path regression — e.g. the worker pool serializing on a global
+lock, or per-request thread-spawn costs dwarfing the work.
+
+Usage: bench_gate.py [BENCH_pipeline.json]
+"""
+
+import json
+import math
+import sys
+
+# Batch-predict may be at most 2x slower than predicting the same
+# requests one at a time; on multi-core runners it should be faster.
+MIN_BATCH_SPEEDUP = 0.5
+
+
+def fail(msg: str) -> int:
+    print(f"FAIL: {msg}", file=sys.stderr)
+    return 1
+
+
+def main() -> int:
+    path = sys.argv[1] if len(sys.argv) > 1 else "BENCH_pipeline.json"
+    try:
+        with open(path) as f:
+            doc = json.load(f)
+    except (OSError, json.JSONDecodeError) as e:
+        return fail(f"cannot read {path}: {e}")
+
+    if doc.get("format") != "edgelat.bench":
+        return fail(f"{path} is not an edgelat bench artifact")
+    if doc.get("version") != 1:
+        return fail(f"unknown bench artifact version {doc.get('version')!r}")
+
+    derived = doc.get("derived", {})
+    speedup = derived.get("batch_predict_speedup")
+    if not isinstance(speedup, (int, float)) or not math.isfinite(speedup) or speedup <= 0:
+        return fail(f"missing/invalid batch_predict_speedup in {path}: {speedup!r}")
+
+    if speedup < MIN_BATCH_SPEEDUP:
+        return fail(
+            f"predict_batch is {1.0 / speedup:.2f}x slower than the "
+            f"single-predict loop (allowed: {1.0 / MIN_BATCH_SPEEDUP:.0f}x)"
+        )
+
+    sweep = derived.get("sweep_parallel_speedup")
+    sweep_txt = f"{sweep:.2f}x" if isinstance(sweep, (int, float)) else repr(sweep)
+    cache = derived.get("deduction_cache", {})
+    print(
+        f"OK: batch_predict_speedup={speedup:.2f}x "
+        f"(threshold {MIN_BATCH_SPEEDUP}), "
+        f"sweep_parallel_speedup={sweep_txt}, "
+        f"cache hits/misses={cache.get('hits')}/{cache.get('misses')}"
+    )
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
