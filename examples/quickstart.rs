@@ -36,7 +36,7 @@ fn main() {
         seed,
         None,
     );
-    println!("trained {} per-op models; T_overhead = {:.2} ms", pred.models.len(), pred.t_overhead_ms);
+    println!("trained {} per-op models; T_overhead = {:.2} ms", pred.model_count(), pred.t_overhead_ms);
 
     // 4. Freeze the trained predictor into a deployable bundle file
     //    (`edgelat train --out` does the same from the CLI).

@@ -1,9 +1,11 @@
 //! `edgelat bench` — machine-readable benchmarks of the serving hot
 //! paths, written as `BENCH_pipeline.json`.
 //!
-//! Times the pipeline stages the worker-pool subsystem accelerates:
-//! kernel deduction, one-time predictor training, single-predict,
-//! engine `predict_batch`, and parallel scenario-sweep profiling. The
+//! Times the pipeline stages the worker-pool and plan-IR subsystems
+//! accelerate: kernel deduction (string-keyed reference vs `plan::lower`
+//! into the dense IR), one-time predictor training, single-predict,
+//! engine `predict_batch`, predict-over-plan, and parallel scenario-sweep
+//! profiling, plus the engine's plan-cache hit/miss counters. The
 //! emitted JSON is the artifact the CI bench job uploads and gates on
 //! (`scripts/bench_gate.py`). Gated quantities are **ratios between
 //! workloads measured back-to-back in the same process** (e.g.
@@ -14,6 +16,7 @@ use crate::engine::{EngineBuilder, PredictRequest, PredictorBundle};
 use crate::exec_pool::ExecPool;
 use crate::framework::{deduce_units, DeductionMode, ScenarioPredictor};
 use crate::graph::Graph;
+use crate::plan::{self, LoweredGraph};
 use crate::predict::Method;
 use crate::profiler::profile_set_with;
 use crate::scenario::{all_scenarios, one_large_core, Scenario};
@@ -111,13 +114,20 @@ pub fn run(cfg: &BenchConfig) -> Json {
     let pool = ExecPool::new(cfg.threads);
     let mv2 = crate::zoo::mobilenets::mobilenet_v2(1.0);
 
-    // --- Kernel deduction (GPU: fusion + selection), the memoized unit.
+    // --- Kernel deduction (GPU: fusion + selection): the string-keyed
+    // reference path vs lowering into the dense plan IR (the memoized
+    // unit the engine actually caches).
     bench_line(
         &mut samples,
         time_named("deduce/mobilenet_v2 gpu full", cfg.iters * 10, || {
             black_box(deduce_units(&sc_gpu, DeductionMode::Full, &mv2));
         }),
     );
+    let lower_s = time_named("lower/mobilenet_v2 gpu full", cfg.iters * 10, || {
+        black_box(plan::lower(&sc_gpu, DeductionMode::Full, &mv2));
+    });
+    bench_line(&mut samples, lower_s.clone());
+    let mv2_plan_units = plan::lower(&sc_gpu, DeductionMode::Full, &mv2).len();
 
     // --- One-time profile + train.
     let train_g = nas_graphs(cfg.seed, cfg.n_train);
@@ -165,6 +175,18 @@ pub fn run(cfg: &BenchConfig) -> Json {
     bench_line(&mut samples, batch.clone());
     let batch_speedup = single.mean_s / batch.mean_s.max(1e-12);
 
+    // --- Predict-over-plan: the featurize-once hot path. The plans are
+    // pre-lowered, so this isolates the dense BucketId model scan the
+    // plan IR buys over per-request deduction.
+    let plans: Vec<LoweredGraph> = workload.iter().map(|g| pred.lower(g)).collect();
+    let plan_scan = time_named("serve/predict_plan x batch", cfg.iters, || {
+        for pl in &plans {
+            black_box(pred.predict_plan(pl));
+        }
+    });
+    bench_line(&mut samples, plan_scan.clone());
+    let plan_scan_speedup = single.mean_s / plan_scan.mean_s.max(1e-12);
+
     // --- Scenario-sweep throughput: profiling K scenarios one at a time
     // vs fanned out on the pool (the report prefetch pattern).
     let sweep_scenarios: Vec<Scenario> =
@@ -197,9 +219,23 @@ pub fn run(cfg: &BenchConfig) -> Json {
             "derived",
             Json::obj(vec![
                 ("batch_predict_speedup", Json::num(batch_speedup)),
+                ("plan_predict_speedup", Json::num(plan_scan_speedup)),
                 ("sweep_parallel_speedup", Json::num(sweep_speedup)),
                 (
-                    "deduction_cache",
+                    // Lowering throughput: graphs (and plan units) lowered
+                    // per second at the single-graph bench's rate.
+                    "lowering",
+                    Json::obj(vec![
+                        ("graphs_per_s", Json::num(1.0 / lower_s.mean_s.max(1e-12))),
+                        (
+                            "units_per_s",
+                            Json::num(mv2_plan_units as f64 / lower_s.mean_s.max(1e-12)),
+                        ),
+                        ("units_per_graph", Json::num(mv2_plan_units as f64)),
+                    ]),
+                ),
+                (
+                    "plan_cache",
                     Json::obj(vec![
                         ("hits", Json::num(cache.hits as f64)),
                         ("misses", Json::num(cache.misses as f64)),
@@ -238,17 +274,26 @@ mod tests {
         assert_eq!(doc.req_str("profile").unwrap(), "custom");
         assert_eq!(doc.req_usize("threads").unwrap(), 2);
         let benches = doc.req("benches").unwrap().as_arr().expect("array");
-        assert!(benches.len() >= 6, "expected all pipeline benches, got {}", benches.len());
+        assert!(benches.len() >= 8, "expected all pipeline benches, got {}", benches.len());
         for b in benches {
             assert!(b.req_str("name").is_ok());
             let mean = b.req_f64("mean_s").unwrap();
             assert!(mean.is_finite() && mean >= 0.0);
         }
+        // The lowering stage is present by name (the gate's artifact
+        // contract).
+        assert!(benches
+            .iter()
+            .any(|b| b.req_str("name").unwrap().starts_with("lower/")));
         let derived = doc.req("derived").unwrap();
         let speedup = derived.req_f64("batch_predict_speedup").unwrap();
         assert!(speedup.is_finite() && speedup > 0.0, "speedup={speedup}");
+        assert!(derived.req_f64("plan_predict_speedup").unwrap().is_finite());
         assert!(derived.req_f64("sweep_parallel_speedup").unwrap().is_finite());
-        let cache = derived.req("deduction_cache").unwrap();
+        let lowering = derived.req("lowering").unwrap();
+        assert!(lowering.req_f64("graphs_per_s").unwrap() > 0.0);
+        assert!(lowering.req_f64("units_per_graph").unwrap() > 0.0);
+        let cache = derived.req("plan_cache").unwrap();
         // The serve benches queried the same graphs repeatedly: the
         // sharded memo must have seen real hits.
         assert!(cache.req_f64("hits").unwrap() > 0.0);

@@ -1,9 +1,12 @@
 //! The versioned on-disk format for a trained predictor: scenario id,
-//! method, deduction mode, `T_overhead`/fallback metadata, and every
-//! per-bucket model (standardizer + Lasso/RF/GBDT weights) serialized via
-//! `util::json`. All floats round-trip bit-exactly (shortest-repr emit +
-//! exact parse), so a loaded bundle reproduces the in-memory predictor's
-//! outputs bit-identically.
+//! method, deduction mode, `T_overhead`/fallback metadata, the bucket
+//! intern table (`plan::BucketInterner` names in id order — models load
+//! by name and re-intern against the reading build's table; the
+//! serialized table lets the loader reject symbols that no longer
+//! resolve), and every per-bucket model (standardizer + Lasso/RF/GBDT weights)
+//! serialized via `util::json`. All floats round-trip bit-exactly
+//! (shortest-repr emit + exact parse), so a loaded bundle reproduces the
+//! in-memory predictor's outputs bit-identically.
 
 use crate::engine::EngineError;
 use crate::framework::{DeductionMode, ScenarioPredictor};
@@ -16,8 +19,10 @@ use std::path::Path;
 
 /// Identifies a predictor-bundle JSON document.
 pub const BUNDLE_FORMAT: &str = "edgelat.predictor_bundle";
-/// Schema version this build writes and reads.
-pub const BUNDLE_VERSION: u64 = 1;
+/// Schema version this build writes and reads. v2 added the `interner`
+/// bucket symbol table (v1 bundles predate the plan IR and are rejected;
+/// retrain with `edgelat train`).
+pub const BUNDLE_VERSION: u64 = 2;
 
 /// A serialized trained predictor for one (scenario, method, mode).
 #[derive(Clone)]
@@ -57,14 +62,14 @@ impl PredictorBundle {
     /// predictors, whose models are engine-external.
     pub fn from_predictor(pred: &ScenarioPredictor<'_>) -> Result<PredictorBundle, EngineError> {
         let mut models = BTreeMap::new();
-        for (bucket, m) in &pred.models {
+        for (bucket, m) in pred.models() {
             let owned = m.as_owned().ok_or_else(|| {
                 EngineError::Unsupported(format!(
                     "bucket '{bucket}' uses a non-serializable model (MLP); only \
                      Lasso/RF/GBDT predictors can be bundled"
                 ))
             })?;
-            models.insert(bucket.clone(), owned.clone());
+            models.insert(bucket.to_string(), owned.clone());
         }
         Ok(PredictorBundle {
             scenario_id: pred.scenario.id.clone(),
@@ -82,6 +87,13 @@ impl PredictorBundle {
     pub fn to_predictor(&self) -> Result<ScenarioPredictor<'static>, EngineError> {
         let scenario = crate::scenario::by_id(&self.scenario_id)
             .ok_or_else(|| EngineError::UnknownScenario(self.scenario_id.clone()))?;
+        // Validate bucket symbols up front (fields are pub, so a bundle
+        // need not have come through `from_json`): an unresolvable name is
+        // an error here, the same as in `EngineBuilder::build`, not a
+        // panic inside the dense-table interning.
+        for b in self.models.keys() {
+            crate::engine::resolve_bundle_bucket(&self.scenario_id, b)?;
+        }
         let models: BTreeMap<String, TrainedModel<'static>> = self
             .models
             .iter()
@@ -108,6 +120,9 @@ impl PredictorBundle {
         for (b, m) in &self.models {
             buckets.insert(b.clone(), m.to_json());
         }
+        // The intern table, names in BucketId order: the id ↔ name mapping
+        // every model key resolves through on load.
+        let interner = crate::plan::interner().names().iter().map(|&n| Json::str(n)).collect();
         Json::obj(vec![
             ("format", Json::str(BUNDLE_FORMAT)),
             ("version", Json::Num(BUNDLE_VERSION as f64)),
@@ -116,6 +131,7 @@ impl PredictorBundle {
             ("mode", Json::str(self.mode.name())),
             ("t_overhead_ms", Json::Num(self.t_overhead_ms)),
             ("fallback_ms", Json::Num(self.fallback_ms)),
+            ("interner", Json::Arr(interner)),
             ("buckets", Json::Obj(buckets)),
         ])
     }
@@ -145,11 +161,27 @@ impl PredictorBundle {
         if !t_overhead_ms.is_finite() || !fallback_ms.is_finite() {
             return Err("non-finite t_overhead_ms/fallback_ms".into());
         }
+        // The serialized bucket symbol table: every model key must appear
+        // in it AND resolve in this build's interner. Models re-intern by
+        // name, so a bundle from a diverged build fails loudly here
+        // instead of silently mapping models onto the wrong buckets.
+        let Json::Arr(tbl) = j.req("interner")? else {
+            return Err("'interner' is not an array".into());
+        };
+        let mut table = Vec::with_capacity(tbl.len());
+        for (i, n) in tbl.iter().enumerate() {
+            let name = n.as_str().ok_or_else(|| format!("interner[{i}] is not a string"))?;
+            table.push(name.to_string());
+        }
         let Json::Obj(bmap) = j.req("buckets")? else {
             return Err("'buckets' is not an object".into());
         };
         let mut models = BTreeMap::new();
         for (b, mj) in bmap {
+            if !table.iter().any(|n| n == b) {
+                return Err(format!("bucket '{b}' missing from the bundle's intern table"));
+            }
+            crate::engine::resolve_bundle_bucket(&scenario_id, b).map_err(|e| e.to_string())?;
             let m = BucketModel::from_json(mj).map_err(|e| format!("bucket '{b}': {e}"))?;
             if m.model.method() != method {
                 return Err(format!(

@@ -12,9 +12,11 @@
 //!   `edgelat train` and read by `edgelat predict --bundle`.
 //! - [`LatencyEngine`]: an owned, `Send + Sync` facade built via
 //!   [`EngineBuilder`] from one or more bundles (multi-scenario). It
-//!   memoizes kernel deduction per graph fingerprint (compilation is pure
-//!   in the graph) and serves typed [`PredictRequest`]s; [`predict_batch`]
-//!   fans requests out across `std::thread` for throughput.
+//!   memoizes the lowered plan (`plan::LoweredGraph`) per graph
+//!   fingerprint (lowering is pure in the graph) and serves typed
+//!   [`PredictRequest`]s by scanning the plan against dense
+//!   `BucketId`-indexed model tables; [`predict_batch`] fans requests out
+//!   across `std::thread` for throughput.
 //!
 //! The MLP predictor stays engine-external: it holds PJRT handles, so it is
 //! neither serializable nor `Send`; it remains available through
@@ -27,11 +29,11 @@ pub mod bundle;
 pub use bundle::{PredictorBundle, BUNDLE_FORMAT, BUNDLE_VERSION};
 
 use crate::exec_pool::{CacheStats, ExecPool, ShardedCache};
-use crate::framework::{deduce_units, DeductionMode};
+use crate::framework::DeductionMode;
 use crate::graph::Graph;
+use crate::plan::{self, LoweredGraph};
 use crate::predict::{BucketModel, Method};
 use crate::scenario::Scenario;
-use std::collections::BTreeMap;
 use std::fmt;
 use std::sync::Arc;
 
@@ -73,6 +75,22 @@ impl fmt::Display for EngineError {
 
 impl std::error::Error for EngineError {}
 
+/// Resolve a bundle's bucket symbol against the build's intern table — the
+/// one copy of the check (and message) every bundle-loading path uses:
+/// [`PredictorBundle::from_json`], [`PredictorBundle::to_predictor`], and
+/// [`EngineBuilder::build`].
+pub(crate) fn resolve_bundle_bucket(
+    scenario_id: &str,
+    bucket: &str,
+) -> Result<plan::BucketId, EngineError> {
+    plan::interner().resolve(bucket).ok_or_else(|| {
+        EngineError::Parse(format!(
+            "bundle for '{scenario_id}' holds a model for bucket '{bucket}', which this \
+             build's intern table does not know"
+        ))
+    })
+}
+
 /// One prediction request against a loaded engine.
 #[derive(Debug, Clone)]
 pub struct PredictRequest<'g> {
@@ -99,8 +117,9 @@ impl<'g> PredictRequest<'g> {
 pub struct PredictResponse {
     /// `T_overhead + Σ_c f*_c(x_c)` (Section 4.2).
     pub e2e_ms: f64,
-    /// Per-unit (bucket, predicted ms), in execution order.
-    pub per_unit: Vec<(String, f64)>,
+    /// Per-unit (bucket, predicted ms), in execution order. Bucket names
+    /// come straight from the interner table — no per-unit allocation.
+    pub per_unit: Vec<(&'static str, f64)>,
     /// Framework-overhead component of `e2e_ms`.
     pub t_overhead_ms: f64,
     /// Units predicted with the global-mean fallback (bucket unseen during
@@ -109,13 +128,15 @@ pub struct PredictResponse {
 }
 
 /// One loaded bundle, resolved against this build's scenario table.
+/// Models sit in a dense table indexed by `plan::BucketId` — the serve
+/// loop never hashes a bucket string.
 struct EnginePredictor {
     scenario: Scenario,
     method: Method,
     mode: DeductionMode,
     t_overhead_ms: f64,
     fallback_ms: f64,
-    models: BTreeMap<String, BucketModel>,
+    models: Vec<Option<BucketModel>>,
 }
 
 /// Builder for [`LatencyEngine`]: collect bundles, then `build()`.
@@ -154,18 +175,26 @@ impl EngineBuilder {
                 "an engine needs at least one predictor bundle".into(),
             ));
         }
+        let it = plan::interner();
         let mut predictors = Vec::with_capacity(self.bundles.len());
         for b in self.bundles {
-            // The builder is consumed, so the model maps move in for free.
+            // The builder is consumed, so the models move in for free.
             let scenario = crate::scenario::by_id(&b.scenario_id)
                 .ok_or_else(|| EngineError::UnknownScenario(b.scenario_id.clone()))?;
+            // Intern the by-name bundle models into the dense table the
+            // serve loop indexes by `BucketId`.
+            let mut models: Vec<Option<BucketModel>> = (0..it.len()).map(|_| None).collect();
+            for (bucket, m) in b.models {
+                let id = resolve_bundle_bucket(&b.scenario_id, &bucket)?;
+                models[id.index()] = Some(m);
+            }
             predictors.push(EnginePredictor {
                 scenario,
                 method: b.method,
                 mode: b.mode,
                 t_overhead_ms: b.t_overhead_ms,
                 fallback_ms: b.fallback_ms,
-                models: b.models,
+                models,
             });
         }
         // Deduction only depends on (scenario, mode), not on the trained
@@ -185,42 +214,42 @@ impl EngineBuilder {
             predictors,
             dedup,
             pool,
-            unit_cache: ShardedCache::new(UNIT_CACHE_SHARDS, UNIT_CACHE_CAP),
+            plan_cache: ShardedCache::new(PLAN_CACHE_SHARDS, PLAN_CACHE_CAP),
         })
     }
 }
 
-/// Memoized deduction of one graph under one (scenario, mode): bucket +
-/// feature row per predicted unit, shared between concurrent readers.
-type DeducedUnits = Arc<Vec<(String, Vec<f64>)>>;
+/// Memoized lowering of one graph under one (scenario, mode): the dense
+/// plan IR, shared between concurrent readers.
+type CachedPlan = Arc<LoweredGraph>;
 
 /// An owned, `Send + Sync` latency-prediction engine serving one or more
 /// scenarios from loaded [`PredictorBundle`]s.
 pub struct LatencyEngine {
     predictors: Vec<EnginePredictor>,
     /// `dedup[i]` is the canonical predictor index whose (scenario, mode)
-    /// matches predictor `i` — same-deduction predictors share cache slots.
+    /// matches predictor `i` — same-lowering predictors share cache slots.
     dedup: Vec<usize>,
     /// Shared worker pool behind [`predict_batch`](Self::predict_batch).
     pool: ExecPool,
-    /// Kernel deduction memo: (canonical predictor index, graph
-    /// fingerprint) → deduced units. Compilation/fusion is pure in the
-    /// graph, so repeated queries for the same architecture (NAS search,
-    /// figure regeneration) skip straight to the per-bucket model
-    /// evaluations. Sharded ([`UNIT_CACHE_SHARDS`] locks) so concurrent
-    /// batch workers stop serializing on one global mutex; bounded by
-    /// [`UNIT_CACHE_CAP`] with per-shard eviction (an overflow costs one
+    /// Plan memo: (canonical predictor index, graph fingerprint) →
+    /// [`LoweredGraph`]. Lowering is pure in the graph, so repeated
+    /// queries for the same architecture (NAS search, figure regeneration)
+    /// skip straight to the per-bucket model evaluations over the cached
+    /// plan. Sharded ([`PLAN_CACHE_SHARDS`] locks) so concurrent batch
+    /// workers stop serializing on one global mutex; bounded by
+    /// [`PLAN_CACHE_CAP`] with per-shard eviction (an overflow costs one
     /// shard's warmth, not the whole cache's).
-    unit_cache: ShardedCache<(usize, u64), DeducedUnits>,
+    plan_cache: ShardedCache<(usize, u64), CachedPlan>,
 }
 
-/// Cap on memoized deductions; a long-lived engine serving an unbounded
+/// Cap on memoized plans; a long-lived engine serving an unbounded
 /// stream of distinct graphs must not grow without limit (it is a pure
 /// cache — eviction only loses warmth).
-const UNIT_CACHE_CAP: usize = 4096;
+const PLAN_CACHE_CAP: usize = 4096;
 
-/// Lock shards for the deduction memo.
-const UNIT_CACHE_SHARDS: usize = 16;
+/// Lock shards for the plan memo.
+const PLAN_CACHE_SHARDS: usize = 16;
 
 impl LatencyEngine {
     pub fn builder() -> EngineBuilder {
@@ -254,25 +283,25 @@ impl LatencyEngine {
         Err(EngineError::NoPredictor { scenario_id: scenario_id.to_string(), method })
     }
 
-    fn units_for(&self, idx: usize, p: &EnginePredictor, g: &Graph) -> DeducedUnits {
+    fn plan_for(&self, idx: usize, p: &EnginePredictor, g: &Graph) -> CachedPlan {
         let key = (self.dedup[idx], g.fingerprint());
-        if let Some(u) = self.unit_cache.get(&key) {
+        if let Some(u) = self.plan_cache.get(&key) {
             return u;
         }
-        // Deduce outside any lock; a racing duplicate computes the same
-        // value (deduction is pure), and the first insert wins.
-        let units = Arc::new(deduce_units(&p.scenario, p.mode, g));
-        self.unit_cache.insert(key, units)
+        // Lower outside any lock; a racing duplicate computes the same
+        // value (lowering is pure), and the first insert wins.
+        let plan = Arc::new(plan::lower(&p.scenario, p.mode, g));
+        self.plan_cache.insert(key, plan)
     }
 
-    /// Hit/miss/eviction counters of the sharded kernel-deduction memo.
+    /// Hit/miss/eviction counters of the sharded plan memo.
     pub fn cache_stats(&self) -> CacheStats {
-        self.unit_cache.stats()
+        self.plan_cache.stats()
     }
 
-    /// Lock shards of the kernel-deduction memo.
+    /// Lock shards of the plan memo.
     pub fn cache_shards(&self) -> usize {
-        self.unit_cache.shard_count()
+        self.plan_cache.shard_count()
     }
 
     /// Worker threads used by [`predict_batch`](Self::predict_batch).
@@ -280,23 +309,28 @@ impl LatencyEngine {
         self.pool.threads()
     }
 
-    /// Serve one prediction.
+    /// Serve one prediction: fetch (or build) the memoized plan, then scan
+    /// it against the dense `BucketId`-indexed model table. One reusable
+    /// standardization scratch buffer; no bucket strings, no `HashMap`
+    /// lookups per unit.
     pub fn predict(&self, req: &PredictRequest) -> Result<PredictResponse, EngineError> {
         let (idx, p) = self.find(&req.scenario_id, req.method)?;
-        let units = self.units_for(idx, p, req.graph);
-        let mut per_unit = Vec::with_capacity(units.len());
+        let it = plan::interner();
+        let pl = self.plan_for(idx, p, req.graph);
+        let mut per_unit = Vec::with_capacity(pl.len());
         let mut fallback_units = 0usize;
         let mut sum = 0.0;
-        for (bucket, f) in units.iter() {
-            let ms = match p.models.get(bucket) {
-                Some(m) => m.predict_raw(f),
+        let mut scratch = Vec::new();
+        for (b, row) in pl.iter() {
+            let ms = match &p.models[b.index()] {
+                Some(m) => m.predict_raw_with(row, &mut scratch),
                 None => {
                     fallback_units += 1;
                     p.fallback_ms
                 }
             };
             sum += ms;
-            per_unit.push((bucket.clone(), ms));
+            per_unit.push((it.name(b), ms));
         }
         Ok(PredictResponse {
             e2e_ms: p.t_overhead_ms + sum,

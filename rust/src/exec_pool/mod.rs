@@ -110,7 +110,16 @@ impl ExecPool {
                     })
                 })
                 .collect();
-            handles.into_iter().map(|h| h.join().expect("exec_pool worker panicked")).collect()
+            handles
+                .into_iter()
+                .map(|h| match h.join() {
+                    Ok(local) => local,
+                    // Re-raise the worker's own panic payload so the
+                    // original message/location reaches the caller instead
+                    // of a generic pool error.
+                    Err(payload) => std::panic::resume_unwind(payload),
+                })
+                .collect()
         });
         // Ordered collection: scatter each worker's (index, result) pairs
         // back into input order.

@@ -38,15 +38,26 @@ pub fn conform_conv_kernel_row(v: &mut Vec<f64>) {
 
 /// Predictor bucket name for an op or kernel: one ML model is trained per
 /// bucket per scenario. GPU convolutions split into Conv2D / Winograd /
-/// GroupedConv2D per the selected kernel (Section 5.4).
-pub fn bucket_of(g: &Graph, k: &FusedKernel) -> String {
+/// GroupedConv2D per the selected kernel (Section 5.4). The bucket universe
+/// is static — `plan::BucketInterner` assigns every name a dense id.
+pub fn bucket_name_of(g: &Graph, k: &FusedKernel) -> &'static str {
     let root_type = g.nodes[k.root()].op.op_type();
-    k.impl_.predictor_bucket(root_type).to_string()
+    k.impl_.predictor_bucket(root_type)
+}
+
+/// Owned-`String` variant of [`bucket_name_of`] for string-keyed callers.
+pub fn bucket_of(g: &Graph, k: &FusedKernel) -> String {
+    bucket_name_of(g, k).to_string()
 }
 
 /// Bucket for a CPU op (no kernel selection on CPU).
+pub fn cpu_bucket_name(node: &Node) -> &'static str {
+    node.op.op_type().name()
+}
+
+/// Owned-`String` variant of [`cpu_bucket_name`].
 pub fn cpu_bucket(node: &Node) -> String {
-    node.op.op_type().name().to_string()
+    cpu_bucket_name(node).to_string()
 }
 
 /// Feature vector of an op (Table 3 layout per op category).
@@ -217,11 +228,19 @@ impl Standardizer {
     }
 
     pub fn transform(&self, x: &[f64]) -> Vec<f64> {
-        x.iter()
-            .zip(&self.mean)
-            .zip(&self.std)
-            .map(|((x, m), s)| (x - m) / s)
-            .collect()
+        let mut out = Vec::with_capacity(x.len());
+        self.transform_into(x, &mut out);
+        out
+    }
+
+    /// Standardize into a caller-provided buffer — the allocation-free
+    /// variant the predict-over-plan hot paths reuse one scratch `Vec`
+    /// across every unit of a [`LoweredGraph`](crate::plan::LoweredGraph).
+    /// Identical arithmetic to [`transform`](Self::transform), so results
+    /// are bit-identical.
+    pub fn transform_into(&self, x: &[f64], out: &mut Vec<f64>) {
+        out.clear();
+        out.extend(x.iter().zip(&self.mean).zip(&self.std).map(|((x, m), s)| (x - m) / s));
     }
 
     pub fn transform_all(&self, rows: &[Vec<f64>]) -> Vec<Vec<f64>> {
@@ -357,6 +376,23 @@ mod tests {
         assert!(mean0.abs() < 1e-9);
         // constant feature: std fallback 1.0, transformed to 0
         assert!(t.iter().all(|r| r[1].abs() < 1e-9));
+    }
+
+    #[test]
+    fn transform_into_bit_identical_and_reuses_buffer() {
+        let rows: Vec<Vec<f64>> = (0..50)
+            .map(|i| vec![i as f64 * 1.7, (i % 7) as f64, i as f64 * -0.3])
+            .collect();
+        let s = Standardizer::fit(&rows);
+        let mut scratch = Vec::new();
+        for r in &rows {
+            let a = s.transform(r);
+            s.transform_into(r, &mut scratch);
+            assert_eq!(a.len(), scratch.len());
+            for (x, y) in a.iter().zip(&scratch) {
+                assert_eq!(x.to_bits(), y.to_bits());
+            }
+        }
     }
 
     #[test]

@@ -10,14 +10,21 @@
 //!
 //! [`ScenarioPredictor`] is the training-side view; for the train-once /
 //! serialize / load / batch-predict serving path built on top of it, see
-//! `crate::engine` ([`deduce_units`] is shared by both).
+//! `crate::engine`. Both predict over the lowered-plan IR (`crate::plan`):
+//! lower a graph once with [`plan::lower`], then evaluate per-bucket models
+//! against the dense plan ([`ScenarioPredictor::predict_plan`]);
+//! [`deduce_units`] is the string-keyed reference path kept for parity
+//! testing and compatibility.
 
-use crate::features::{bucket_of, conform_conv_kernel_row, cpu_bucket, features, kernel_features};
+use crate::features::{
+    bucket_name_of, conform_conv_kernel_row, cpu_bucket, features, kernel_features,
+};
 use crate::graph::Graph;
+use crate::plan::{self, BucketId, LoweredGraph};
 use crate::predict::{mlp::MlpContext, train, Method, TrainedModel};
 use crate::profiler::{bucket_datasets, ModelProfile};
 use crate::scenario::Scenario;
-use crate::tflite::{compile, fusion, CompileOptions};
+use crate::tflite::{compile, CompileOptions};
 use crate::util::{mape, mean};
 use crate::device::Target;
 use std::collections::BTreeMap;
@@ -55,11 +62,22 @@ impl DeductionMode {
 }
 
 /// A trained end-to-end predictor for one scenario.
+///
+/// Per-bucket models live in a dense table indexed by
+/// [`plan::BucketId`] — the predict hot path ([`predict_plan`]) does no
+/// string hashing and no bucket-name clones. The string-keyed accessors
+/// ([`model_named`], [`models`]) resolve through the interner.
+///
+/// [`predict_plan`]: Self::predict_plan
+/// [`model_named`]: Self::model_named
+/// [`models`]: Self::models
 pub struct ScenarioPredictor<'a> {
     pub scenario: Scenario,
     pub method: Method,
     pub mode: DeductionMode,
-    pub models: BTreeMap<String, TrainedModel<'a>>,
+    /// Dense per-bucket model table, indexed by `BucketId`
+    /// (`len == plan::interner().len()`).
+    models: Vec<Option<TrainedModel<'a>>>,
     /// Estimated framework overhead (mean end-to-end minus op-sum gap).
     pub t_overhead_ms: f64,
     /// Buckets seen at prediction time with no trained model (counted, and
@@ -67,21 +85,29 @@ pub struct ScenarioPredictor<'a> {
     pub fallback_ms: f64,
 }
 
-/// Merge Winograd/Conv2D buckets for the NoSelection ablation.
-fn ablate_bucket(bucket: &str, mode: DeductionMode) -> String {
-    if mode == DeductionMode::NoSelection
-        && matches!(bucket, "Winograd" | "GroupedConv2D" | "NaiveGroupedConv2D")
-    {
-        "Conv2D".to_string()
-    } else {
-        bucket.to_string()
+/// Intern a by-name model map into the dense `BucketId`-indexed table.
+fn dense_models<'a>(named: BTreeMap<String, TrainedModel<'a>>) -> Vec<Option<TrainedModel<'a>>> {
+    let it = plan::interner();
+    let mut models: Vec<Option<TrainedModel<'a>>> = (0..it.len()).map(|_| None).collect();
+    for (bucket, m) in named {
+        let id = it
+            .resolve(&bucket)
+            .unwrap_or_else(|| panic!("bucket '{bucket}' not in the interner table"));
+        models[id.index()] = Some(m);
     }
+    models
 }
 
 /// Deduce the predicted units of a graph under a scenario: features + bucket
 /// for every op (CPU) or deduced kernel (GPU, fusion + selection per
-/// Section 4.1). Pure in (scenario, mode, graph) — the serving engine
-/// memoizes it by graph fingerprint.
+/// Section 4.1). Pure in (scenario, mode, graph).
+///
+/// This is the string-keyed **reference** implementation; every hot path
+/// now goes through [`plan::lower`], which packs the same units into the
+/// dense [`LoweredGraph`] IR. The unit *derivation* (compile, features,
+/// ablate, conform) is shared — the IR differs only in packing — and
+/// `tests/properties.rs` asserts the two agree bit-for-bit across all 72
+/// scenarios and every deduction mode.
 pub fn deduce_units(sc: &Scenario, mode: DeductionMode, g: &Graph) -> Vec<(String, Vec<f64>)> {
     match &sc.target {
         Target::Cpu { .. } => g
@@ -91,28 +117,16 @@ pub fn deduce_units(sc: &Scenario, mode: DeductionMode, g: &Graph) -> Vec<(Strin
             .collect(),
         Target::Gpu { options } => {
             let opts = match mode {
-                DeductionMode::Full => *options,
+                DeductionMode::Full | DeductionMode::NoSelection => *options,
                 DeductionMode::NoFusion => CompileOptions { fusion: false, ..*options },
-                DeductionMode::NoSelection => *options,
             };
-            let kernels = if opts.fusion {
-                compile(g, sc.soc.gpu.kind, opts).kernels
-            } else {
-                let mut ks = fusion::no_fuse(g);
-                for k in &mut ks {
-                    k.impl_ = crate::tflite::select::select_for_kernel(
-                        g,
-                        k,
-                        sc.soc.gpu.kind,
-                        opts,
-                    );
-                }
-                ks
-            };
-            kernels
+            // `compile` runs no_fuse + per-kernel selection when fusion is
+            // off, so one call covers the NoFusion ablation too.
+            compile(g, sc.soc.gpu.kind, opts)
+                .kernels
                 .iter()
                 .map(|k| {
-                    let b = ablate_bucket(&bucket_of(g, k), mode);
+                    let b = plan::ablate(bucket_name_of(g, k), mode).to_string();
                     let mut f = kernel_features(g, k);
                     if mode == DeductionMode::NoSelection {
                         conform_conv_kernel_row(&mut f);
@@ -127,6 +141,11 @@ pub fn deduce_units(sc: &Scenario, mode: DeductionMode, g: &Graph) -> Vec<(Strin
 impl<'a> ScenarioPredictor<'a> {
     /// Assemble a predictor from already-trained parts — the path used when
     /// loading a serialized `engine::PredictorBundle`.
+    ///
+    /// Panics if a model is keyed by a bucket name the interner does not
+    /// know; the bundle load paths (`from_json`, `to_predictor`,
+    /// `EngineBuilder::build`) validate names first and surface an error
+    /// instead.
     pub fn from_parts(
         scenario: Scenario,
         method: Method,
@@ -135,7 +154,14 @@ impl<'a> ScenarioPredictor<'a> {
         t_overhead_ms: f64,
         fallback_ms: f64,
     ) -> ScenarioPredictor<'a> {
-        ScenarioPredictor { scenario, method, mode, models, t_overhead_ms, fallback_ms }
+        ScenarioPredictor {
+            scenario,
+            method,
+            mode,
+            models: dense_models(models),
+            t_overhead_ms,
+            fallback_ms,
+        }
     }
 
     /// Train per-bucket models from profiles of the training architectures.
@@ -180,35 +206,96 @@ impl<'a> ScenarioPredictor<'a> {
             scenario: scenario.clone(),
             method,
             mode,
-            models,
+            models: dense_models(models),
             t_overhead_ms: mean(&gaps).max(0.0),
             fallback_ms: mean(&all_lat),
         }
     }
 
-    /// Features + bucket for every predicted unit of a graph under this
-    /// scenario (CPU: ops; GPU: deduced kernels).
-    pub fn units(&self, g: &Graph) -> Vec<(String, Vec<f64>)> {
-        deduce_units(&self.scenario, self.mode, g)
+    /// The trained model for a bucket id, if any.
+    pub fn model(&self, b: BucketId) -> Option<&TrainedModel<'a>> {
+        self.models[b.index()].as_ref()
     }
 
-    /// Predict the latency of each unit.
-    pub fn predict_units(&self, g: &Graph) -> Vec<(String, f64)> {
-        self.units(g)
-            .into_iter()
-            .map(|(bucket, f)| {
-                let ms = match self.models.get(&bucket) {
-                    Some(m) => m.predict_raw(&f),
-                    None => self.fallback_ms,
-                };
-                (bucket, ms)
+    /// String-keyed model lookup (resolved through the interner) — for
+    /// inspection paths like the Lasso feature-importance report, not for
+    /// the predict loop.
+    pub fn model_named(&self, bucket: &str) -> Option<&TrainedModel<'a>> {
+        plan::interner().resolve(bucket).and_then(|b| self.model(b))
+    }
+
+    /// Iterate the trained per-bucket models in bucket-id order.
+    pub fn models(&self) -> impl Iterator<Item = (&'static str, &TrainedModel<'a>)> + '_ {
+        let it = plan::interner();
+        self.models
+            .iter()
+            .enumerate()
+            .filter_map(move |(i, m)| m.as_ref().map(|m| (it.names()[i], m)))
+    }
+
+    /// Number of buckets with a trained model.
+    pub fn model_count(&self) -> usize {
+        self.models.iter().filter(|m| m.is_some()).count()
+    }
+
+    /// Lower a graph under this predictor's (scenario, mode) — the
+    /// featurize-once half of the serve path. The returned plan can be
+    /// evaluated by any predictor sharing the same (scenario, mode).
+    pub fn lower(&self, g: &Graph) -> LoweredGraph {
+        plan::lower(&self.scenario, self.mode, g)
+    }
+
+    /// Per-unit latency predictions over an already-lowered plan, in
+    /// execution order. The hot-path primitive: dense `BucketId` model
+    /// indexing, one shared standardization scratch buffer, no strings.
+    pub fn predict_plan_rows(&self, p: &LoweredGraph) -> Vec<f64> {
+        let mut scratch = Vec::new();
+        p.iter()
+            .map(|(b, row)| match &self.models[b.index()] {
+                Some(m) => m.predict_raw_with(row, &mut scratch),
+                None => self.fallback_ms,
             })
+            .collect()
+    }
+
+    /// End-to-end prediction over an already-lowered plan:
+    /// `T_overhead + Σ f*_c(x_c)` (Section 4.2).
+    pub fn predict_plan(&self, p: &LoweredGraph) -> f64 {
+        let mut scratch = Vec::new();
+        let mut sum = 0.0;
+        for (b, row) in p.iter() {
+            sum += match &self.models[b.index()] {
+                Some(m) => m.predict_raw_with(row, &mut scratch),
+                None => self.fallback_ms,
+            };
+        }
+        self.t_overhead_ms + sum
+    }
+
+    /// Features + bucket for every predicted unit of a graph under this
+    /// scenario (CPU: ops; GPU: deduced kernels). String-keyed
+    /// compatibility shim over [`lower`](Self::lower).
+    pub fn units(&self, g: &Graph) -> Vec<(String, Vec<f64>)> {
+        self.lower(g).to_units()
+    }
+
+    /// Predict the latency of each unit. Compatibility shim: lowers once
+    /// and resolves bucket names through the interner (the predict loop
+    /// itself is the id-indexed plan path).
+    pub fn predict_units(&self, g: &Graph) -> Vec<(String, f64)> {
+        let it = plan::interner();
+        let p = self.lower(g);
+        let rows = self.predict_plan_rows(&p);
+        p.buckets()
+            .iter()
+            .zip(rows)
+            .map(|(&b, ms)| (it.name(b).to_string(), ms))
             .collect()
     }
 
     /// End-to-end prediction: `T_overhead + Σ f*_c(x_c)` (Section 4.2).
     pub fn predict(&self, g: &Graph) -> f64 {
-        self.t_overhead_ms + self.predict_units(g).iter().map(|(_, ms)| ms).sum::<f64>()
+        self.predict_plan(&self.lower(g))
     }
 }
 
@@ -219,31 +306,48 @@ pub struct Evaluation {
     pub predictions: Vec<(String, f64, f64)>, // (model, predicted, measured)
 }
 
-/// Evaluate a scenario predictor against measured test profiles.
+/// Evaluate a scenario predictor against measured test profiles. Lowers
+/// each test graph once; callers that already hold plans (the report
+/// sweeps share one plan set across Lasso/RF/GBDT) use
+/// [`evaluate_lowered`] directly.
 pub fn evaluate(
     pred: &ScenarioPredictor,
     test_graphs: &[Graph],
     test_profiles: &[ModelProfile],
 ) -> Evaluation {
+    let plans: Vec<LoweredGraph> = test_graphs.iter().map(|g| pred.lower(g)).collect();
+    evaluate_lowered(pred, test_graphs, &plans, test_profiles)
+}
+
+/// Evaluate over already-lowered plans (`plans[i]` is `test_graphs[i]`
+/// lowered under the predictor's (scenario, mode)). The prediction loop is
+/// the id-indexed plan path — no per-unit bucket strings.
+pub fn evaluate_lowered(
+    pred: &ScenarioPredictor,
+    test_graphs: &[Graph],
+    plans: &[LoweredGraph],
+    test_profiles: &[ModelProfile],
+) -> Evaluation {
     assert_eq!(test_graphs.len(), test_profiles.len());
+    assert_eq!(test_graphs.len(), plans.len());
+    let it = plan::interner();
     let mut predictions = Vec::new();
     let mut e2e_pred = Vec::new();
     let mut e2e_meas = Vec::new();
-    let mut bucket_pred: BTreeMap<String, (Vec<f64>, Vec<f64>)> = BTreeMap::new();
-    for (g, p) in test_graphs.iter().zip(test_profiles) {
-        // One deduction pass per graph: the unit predictions also yield the
-        // end-to-end sum (the old predict + predict_units pair deduced the
-        // kernels twice).
-        let units = pred.predict_units(g);
-        let e = pred.t_overhead_ms + units.iter().map(|(_, ms)| ms).sum::<f64>();
+    let mut bucket_pred: BTreeMap<&'static str, (Vec<f64>, Vec<f64>)> = BTreeMap::new();
+    for ((g, pl), p) in test_graphs.iter().zip(plans).zip(test_profiles) {
+        // One lowering per graph yields both the per-unit rows and the
+        // end-to-end sum.
+        let rows = pred.predict_plan_rows(pl);
+        let e = pred.t_overhead_ms + rows.iter().sum::<f64>();
         predictions.push((g.name.clone(), e, p.end_to_end_ms));
         e2e_pred.push(e);
         e2e_meas.push(p.end_to_end_ms);
         // Per-unit comparison: deduced units must align with measured ops
         // when the deduction mode matches the device compilation (Full).
-        if pred.mode == DeductionMode::Full && units.len() == p.ops.len() {
-            for ((b, pm), o) in units.iter().zip(&p.ops) {
-                let e = bucket_pred.entry(b.clone()).or_default();
+        if pred.mode == DeductionMode::Full && pl.len() == p.ops.len() {
+            for (i, (pm, o)) in rows.iter().zip(&p.ops).enumerate() {
+                let e = bucket_pred.entry(it.name(pl.bucket(i))).or_default();
                 e.0.push(*pm);
                 e.1.push(o.latency_ms);
             }
@@ -251,7 +355,7 @@ pub fn evaluate(
     }
     let per_bucket_mape = bucket_pred
         .into_iter()
-        .map(|(b, (p, a))| (b, mape(&p, &a)))
+        .map(|(b, (p, a))| (b.to_string(), mape(&p, &a)))
         .collect();
     Evaluation {
         end_to_end_mape: mape(&e2e_pred, &e2e_meas),

@@ -14,10 +14,21 @@
 //!   (`device`), profiler (`profiler`), feature extraction (`features`),
 //!   Lasso/RF/GBDT/MLP predictors (`predict`), and the end-to-end training
 //!   + evaluation framework (`framework`, `report`).
+//! - **Lowered-plan IR (`plan`)**: the shared representation between
+//!   deduction and prediction. A `BucketInterner` fixes the closed bucket
+//!   universe into dense `BucketId`s; `plan::lower(scenario, mode, graph)`
+//!   deduces the predicted units once and packs them into a `LoweredGraph`
+//!   (execution-ordered `BucketId`s + one flat `f64` feature arena with
+//!   row offsets). Predictors evaluate plans with `BucketId`-indexed model
+//!   tables — no bucket strings or `HashMap` lookups on the predict hot
+//!   path; plans are cached by the engine and shared across model
+//!   families by the report sweeps. Bundles serialize the intern table;
+//!   models re-intern by name on load, and a bundle whose symbols no
+//!   longer resolve is rejected.
 //! - **L3 serving (`engine`)**: the train-once / serialize / load /
 //!   batch-predict layer. A trained predictor becomes a versioned
 //!   `PredictorBundle` file; a `Send + Sync` `LatencyEngine` loads one or
-//!   more bundles, memoizes kernel deduction per graph fingerprint, and
+//!   more bundles, memoizes the lowered plan per graph fingerprint, and
 //!   serves `PredictRequest`s — single or batched across threads — at NAS
 //!   search rate without retraining.
 //! - **Concurrency substrate (`exec_pool`)**: the shared worker-pool
@@ -47,6 +58,7 @@ pub mod graph;
 pub mod features;
 pub mod framework;
 pub mod nas;
+pub mod plan;
 pub mod predict;
 pub mod profiler;
 pub mod report;

@@ -486,9 +486,19 @@ fn cmd_bench(rest: &[String]) {
         derived.req_f64("batch_predict_speedup").unwrap_or(f64::NAN)
     );
     println!(
+        "predict-over-plan speedup vs single-predict:  {:.2}x",
+        derived.req_f64("plan_predict_speedup").unwrap_or(f64::NAN)
+    );
+    println!(
         "scenario-sweep speedup vs sequential:         {:.2}x",
         derived.req_f64("sweep_parallel_speedup").unwrap_or(f64::NAN)
     );
+    if let Ok(lowering) = derived.req("lowering") {
+        println!(
+            "plan lowering throughput:                     {:.0} graphs/s",
+            lowering.req_f64("graphs_per_s").unwrap_or(f64::NAN)
+        );
+    }
     println!("wrote {out} in {:.1}s", t0.elapsed().as_secs_f64());
 }
 

@@ -1,0 +1,310 @@
+//! The lowered-plan IR: the dense, id-keyed representation of "what will
+//! this graph execute under this scenario".
+//!
+//! The paper's framework predicts `T_overhead + Σ_c f*_c(x_c)` over deduced
+//! per-kernel units (Section 4). Deduction is pure in (scenario, mode,
+//! graph), so serving systems should pay for it once per architecture and
+//! then evaluate any number of per-bucket models against the result —
+//! the same featurize-once/predict-many amortization MAPLE-Edge-style
+//! runtime predictors and NAS predictor pipelines use. This module makes
+//! that representation first-class instead of an ad-hoc
+//! `Vec<(String, Vec<f64>)>`:
+//!
+//! - [`BucketId`] / [`BucketInterner`]: a fixed symbol table mapping bucket
+//!   names ("Conv2D", "Winograd", ...) to dense `u32` ids. The bucket
+//!   universe is closed (the 12 op types plus the two GPU-only kernel
+//!   buckets), so ids are stable across processes and builds of the same
+//!   table; `engine::PredictorBundle` serializes the table so a loaded
+//!   bundle can verify its buckets resolve to the same symbols.
+//! - [`LoweredGraph`]: execution-ordered units, each a `BucketId`, the
+//!   selected [`KernelImpl`], and one row in a single flat `f64` feature
+//!   arena (row boundaries in `offsets`). No strings, no per-unit `Vec`s —
+//!   a plan is cheap to share (`Arc`) and cheap to scan.
+//! - [`lower`]: the single entry point that deduces and packs a plan.
+//!
+//! `framework::deduce_units` remains as the string-keyed reference
+//! implementation; `tests/properties.rs` asserts `lower` matches it
+//! bit-for-bit across all 72 scenarios and every deduction mode.
+
+use crate::device::Target;
+use crate::features::{
+    bucket_name_of, conform_conv_kernel_row, cpu_bucket_name, features, kernel_features,
+};
+use crate::framework::DeductionMode;
+use crate::graph::Graph;
+use crate::scenario::Scenario;
+use crate::tflite::{compile, CompileOptions, KernelImpl};
+use std::collections::HashMap;
+use std::sync::OnceLock;
+
+/// Dense id of a predictor bucket in the [`BucketInterner`] table.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct BucketId(u32);
+
+impl BucketId {
+    /// Index into tables laid out by the interner (e.g. per-bucket model
+    /// vectors).
+    pub fn index(self) -> usize {
+        self.0 as usize
+    }
+
+    /// The raw id value.
+    pub fn raw(self) -> u32 {
+        self.0
+    }
+}
+
+/// Bucket string ↔ [`BucketId`] symbol table.
+///
+/// The universe is closed: every bucket a plan can mention is either an
+/// [`OpType`](crate::graph::OpType) name or one of the two GPU-only kernel
+/// buckets (`Winograd`, `NaiveGroupedConv2D`). [`interner`] exposes the
+/// build-wide table; all `BucketId`s in this crate refer to it.
+pub struct BucketInterner {
+    names: Vec<&'static str>,
+    index: HashMap<&'static str, u32>,
+}
+
+impl BucketInterner {
+    /// The full bucket universe, in stable id order: the 12 op types of
+    /// Table 3 followed by the kernel-selection-only buckets.
+    pub fn builtin() -> BucketInterner {
+        let mut names: Vec<&'static str> =
+            crate::graph::OpType::all().iter().map(|t| t.name()).collect();
+        names.push("Winograd");
+        names.push("NaiveGroupedConv2D");
+        let index = names.iter().enumerate().map(|(i, &n)| (n, i as u32)).collect();
+        BucketInterner { names, index }
+    }
+
+    /// Number of interned buckets (the width of dense per-bucket tables).
+    pub fn len(&self) -> usize {
+        self.names.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.names.is_empty()
+    }
+
+    /// Resolve a bucket name to its id.
+    pub fn resolve(&self, name: &str) -> Option<BucketId> {
+        self.index.get(name).map(|&i| BucketId(i))
+    }
+
+    /// The name of an interned bucket.
+    pub fn name(&self, id: BucketId) -> &'static str {
+        self.names[id.index()]
+    }
+
+    /// All bucket names in id order — the serialized form of the table.
+    /// `engine::PredictorBundle` writes this so a loader can check that
+    /// the bundle's bucket symbols all resolve in the reading build
+    /// (resolution itself is by name; ids are re-derived from this table).
+    pub fn names(&self) -> &[&'static str] {
+        &self.names
+    }
+}
+
+/// The build-wide bucket symbol table.
+pub fn interner() -> &'static BucketInterner {
+    static TABLE: OnceLock<BucketInterner> = OnceLock::new();
+    TABLE.get_or_init(BucketInterner::builtin)
+}
+
+/// A lowered execution plan: the predicted units of one graph under one
+/// (scenario, deduction mode), in execution order, over a flat feature
+/// arena. Built once by [`lower`], then scanned by every model family —
+/// no bucket strings and no per-unit allocations at predict time.
+#[derive(Debug, Clone, PartialEq)]
+pub struct LoweredGraph {
+    buckets: Vec<BucketId>,
+    impls: Vec<KernelImpl>,
+    /// Flat feature arena; unit `i`'s row is `features[offsets[i] as
+    /// usize..offsets[i + 1] as usize]`.
+    features: Vec<f64>,
+    offsets: Vec<u32>,
+}
+
+impl LoweredGraph {
+    fn with_capacity(units: usize) -> LoweredGraph {
+        let mut offsets = Vec::with_capacity(units + 1);
+        offsets.push(0);
+        LoweredGraph {
+            buckets: Vec::with_capacity(units),
+            impls: Vec::with_capacity(units),
+            features: Vec::with_capacity(units * 8),
+            offsets,
+        }
+    }
+
+    fn push(&mut self, bucket: BucketId, impl_: KernelImpl, row: &[f64]) {
+        self.buckets.push(bucket);
+        self.impls.push(impl_);
+        self.features.extend_from_slice(row);
+        self.offsets.push(self.features.len() as u32);
+    }
+
+    /// Number of predicted units.
+    pub fn len(&self) -> usize {
+        self.buckets.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.buckets.is_empty()
+    }
+
+    /// Bucket of unit `i`.
+    pub fn bucket(&self, i: usize) -> BucketId {
+        self.buckets[i]
+    }
+
+    /// All unit buckets, in execution order.
+    pub fn buckets(&self) -> &[BucketId] {
+        &self.buckets
+    }
+
+    /// Selected kernel implementation of unit `i` (`Generic` on CPU).
+    pub fn kernel(&self, i: usize) -> KernelImpl {
+        self.impls[i]
+    }
+
+    /// Feature row of unit `i`, borrowed from the arena.
+    pub fn row(&self, i: usize) -> &[f64] {
+        &self.features[self.offsets[i] as usize..self.offsets[i + 1] as usize]
+    }
+
+    /// Iterate `(bucket, feature row)` in execution order.
+    pub fn iter(&self) -> impl Iterator<Item = (BucketId, &[f64])> + '_ {
+        self.buckets.iter().enumerate().map(|(i, &b)| (b, self.row(i)))
+    }
+
+    /// Total length of the feature arena (all rows, concatenated).
+    pub fn arena_len(&self) -> usize {
+        self.features.len()
+    }
+
+    /// Expand back into the string-keyed tuple form — the compatibility
+    /// bridge to pre-plan APIs. Allocates; not for hot paths.
+    pub fn to_units(&self) -> Vec<(String, Vec<f64>)> {
+        let it = interner();
+        (0..self.len())
+            .map(|i| (it.name(self.bucket(i)).to_string(), self.row(i).to_vec()))
+            .collect()
+    }
+}
+
+/// Merge the selection-split convolution buckets for the NoSelection
+/// ablation. The single copy of the rule — the string-keyed reference
+/// path (`framework::deduce_units`) delegates here too.
+pub(crate) fn ablate(name: &'static str, mode: DeductionMode) -> &'static str {
+    if mode == DeductionMode::NoSelection
+        && matches!(name, "Winograd" | "GroupedConv2D" | "NaiveGroupedConv2D")
+    {
+        "Conv2D"
+    } else {
+        name
+    }
+}
+
+/// Lower a graph under a scenario: deduce the predicted units (CPU ops, or
+/// GPU kernels via fusion + selection per Section 4.1) and pack them into a
+/// [`LoweredGraph`]. Pure in (scenario, mode, graph); `engine` memoizes the
+/// result per graph fingerprint and `report` shares one plan across all
+/// model families.
+pub fn lower(sc: &Scenario, mode: DeductionMode, g: &Graph) -> LoweredGraph {
+    let it = interner();
+    match &sc.target {
+        Target::Cpu { .. } => {
+            let mut plan = LoweredGraph::with_capacity(g.nodes.len());
+            for n in &g.nodes {
+                let b = it.resolve(cpu_bucket_name(n)).expect("op-type bucket interned");
+                plan.push(b, KernelImpl::Generic, &features(g, n));
+            }
+            plan
+        }
+        Target::Gpu { options } => {
+            let opts = match mode {
+                DeductionMode::Full | DeductionMode::NoSelection => *options,
+                DeductionMode::NoFusion => CompileOptions { fusion: false, ..*options },
+            };
+            // `compile` runs no_fuse + per-kernel selection when fusion is
+            // off, which is exactly the NoFusion ablation's deduction.
+            let kernels = compile(g, sc.soc.gpu.kind, opts).kernels;
+            let mut plan = LoweredGraph::with_capacity(kernels.len());
+            for k in &kernels {
+                let name = ablate(bucket_name_of(g, k), mode);
+                let mut f = kernel_features(g, k);
+                if mode == DeductionMode::NoSelection {
+                    conform_conv_kernel_row(&mut f);
+                }
+                let b = it.resolve(name).expect("kernel bucket interned");
+                plan.push(b, k.impl_, &f);
+            }
+            plan
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::scenario;
+
+    #[test]
+    fn interner_covers_the_closed_bucket_universe() {
+        let it = interner();
+        assert_eq!(it.len(), crate::graph::OpType::all().len() + 2);
+        // Round-trip every name.
+        for (i, &name) in it.names().iter().enumerate() {
+            let id = it.resolve(name).unwrap();
+            assert_eq!(id.index(), i);
+            assert_eq!(it.name(id), name);
+        }
+        // Op-type names and the kernel-only buckets are all present.
+        for t in crate::graph::OpType::all() {
+            assert!(it.resolve(t.name()).is_some(), "{}", t.name());
+        }
+        assert!(it.resolve("Winograd").is_some());
+        assert!(it.resolve("NaiveGroupedConv2D").is_some());
+        assert!(it.resolve("NoSuchBucket").is_none());
+    }
+
+    #[test]
+    fn lower_matches_reference_deduction_cpu_and_gpu() {
+        let graphs = [
+            crate::zoo::mobilenets::mobilenet_v2(0.5),
+            crate::zoo::resnets::resnet(10, 1.0),
+        ];
+        let socs = crate::device::socs();
+        let scenarios = [scenario::one_large_core("Snapdragon855"), Scenario::gpu(&socs[0])];
+        for sc in &scenarios {
+            for g in &graphs {
+                for mode in
+                    [DeductionMode::Full, DeductionMode::NoFusion, DeductionMode::NoSelection]
+                {
+                    let plan = lower(sc, mode, g);
+                    let reference = crate::framework::deduce_units(sc, mode, g);
+                    assert_eq!(plan.len(), reference.len(), "{} {}", sc.id, g.name);
+                    assert_eq!(plan.to_units(), reference, "{} {}", sc.id, g.name);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn rows_are_arena_slices_with_consistent_offsets() {
+        let sc = scenario::one_large_core("HelioP35");
+        let g = crate::zoo::mobilenets::mobilenet_v1(0.25);
+        let plan = lower(&sc, DeductionMode::Full, &g);
+        assert_eq!(plan.len(), g.nodes.len());
+        let total: usize = (0..plan.len()).map(|i| plan.row(i).len()).sum();
+        assert_eq!(total, plan.arena_len());
+        for (i, (b, row)) in plan.iter().enumerate() {
+            assert_eq!(b, plan.bucket(i));
+            assert_eq!(row, plan.row(i));
+            assert!(!row.is_empty());
+        }
+        // CPU plans select no GPU kernels.
+        assert!((0..plan.len()).all(|i| plan.kernel(i) == KernelImpl::Generic));
+    }
+}

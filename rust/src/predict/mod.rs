@@ -133,8 +133,17 @@ pub struct BucketModel {
 
 impl BucketModel {
     pub fn predict_raw(&self, x: &[f64]) -> f64 {
-        let xs = self.standardizer.transform(x);
-        self.model.predict_one(&xs).max(self.floor)
+        let mut scratch = Vec::with_capacity(x.len());
+        self.predict_raw_with(x, &mut scratch)
+    }
+
+    /// [`predict_raw`](Self::predict_raw) with a caller-provided
+    /// standardization buffer — the plan hot paths reuse one scratch `Vec`
+    /// across every unit instead of allocating per prediction. Bit-identical
+    /// to the allocating variant.
+    pub fn predict_raw_with(&self, x: &[f64], scratch: &mut Vec<f64>) -> f64 {
+        self.standardizer.transform_into(x, scratch);
+        self.model.predict_one(scratch).max(self.floor)
     }
 
     /// Feature-vector width this model was trained on.
@@ -226,11 +235,18 @@ pub enum TrainedModel<'a> {
 
 impl<'a> TrainedModel<'a> {
     pub fn predict_raw(&self, x: &[f64]) -> f64 {
+        let mut scratch = Vec::with_capacity(x.len());
+        self.predict_raw_with(x, &mut scratch)
+    }
+
+    /// Scratch-buffer variant of [`predict_raw`](Self::predict_raw); see
+    /// [`BucketModel::predict_raw_with`].
+    pub fn predict_raw_with(&self, x: &[f64], scratch: &mut Vec<f64>) -> f64 {
         match self {
-            TrainedModel::Owned(m) => m.predict_raw(x),
+            TrainedModel::Owned(m) => m.predict_raw_with(x, scratch),
             TrainedModel::External { standardizer, inner, floor } => {
-                let xs = standardizer.transform(x);
-                inner.predict_one(&xs).max(*floor)
+                standardizer.transform_into(x, scratch);
+                inner.predict_one(scratch).max(*floor)
             }
         }
     }

@@ -5,10 +5,10 @@
 
 use crate::device;
 use crate::exec_pool::ExecPool;
-use crate::features::{bucket_of, cpu_bucket, features, kernel_features};
 use crate::graph::Graph;
+use crate::plan;
 use crate::scenario::Scenario;
-use crate::tflite::{compile, KernelImpl};
+use crate::tflite::KernelImpl;
 use crate::util::stats;
 
 /// One profiled op (CPU) or kernel (GPU): its predictor bucket, Table 3
@@ -50,31 +50,19 @@ pub fn profile(sc: &Scenario, g: &Graph, seed: u64, runs: usize) -> ModelProfile
     let traces = device::exec::run_many(&sc.soc, g, &sc.target, seed, runs);
     let n_ops = traces[0].per_op.len();
     let mut ops = Vec::with_capacity(n_ops);
-    // Feature extraction is per-structure (identical across runs).
-    let feat: Vec<(String, KernelImpl, Vec<f64>)> = match &sc.target {
-        device::Target::Cpu { .. } => g
-            .nodes
-            .iter()
-            .map(|n| (cpu_bucket(n), KernelImpl::Generic, features(g, n)))
-            .collect(),
-        device::Target::Gpu { options } => {
-            let compiled = compile(g, sc.soc.gpu.kind, *options);
-            compiled
-                .kernels
-                .iter()
-                .map(|k| (bucket_of(g, k), k.impl_, kernel_features(g, k)))
-                .collect()
-        }
-    };
-    debug_assert_eq!(feat.len(), n_ops);
+    // Structure is per-graph (identical across runs): lower once through
+    // the plan IR — the same deduction the predictors evaluate against, so
+    // profiled units and predicted units align by construction.
+    let lowered = plan::lower(sc, crate::framework::DeductionMode::Full, g);
+    let it = plan::interner();
+    debug_assert_eq!(lowered.len(), n_ops);
     for i in 0..n_ops {
         let lat: Vec<f64> = traces.iter().map(|t| t.per_op[i].latency_ms).collect();
-        let (bucket, kernel, f) = feat[i].clone();
         ops.push(OpRecord {
             op: traces[0].per_op[i].op,
-            bucket,
-            kernel,
-            features: f,
+            bucket: it.name(lowered.bucket(i)).to_string(),
+            kernel: lowered.kernel(i),
+            features: lowered.row(i).to_vec(),
             latency_ms: stats::median(&lat),
         });
     }

@@ -5,7 +5,9 @@
 //! train-size anomaly (Fig 33), and Winograd applicability (Table 2).
 
 use crate::device::{socs, DataRep, Soc, Target};
-use crate::framework::{evaluate, DeductionMode, Evaluation, ScenarioPredictor};
+use crate::framework::{
+    evaluate, evaluate_lowered, DeductionMode, Evaluation, ScenarioPredictor,
+};
 use crate::graph::Graph;
 use crate::predict::mlp::MlpContext;
 use crate::predict::Method;
@@ -38,11 +40,14 @@ fn methods_with_mlp(mlp: bool) -> Vec<Method> {
 }
 
 /// Train+evaluate one (scenario, method) on a train/test profile split;
-/// returns (end-to-end MAPE, per-bucket MAPEs).
+/// returns (end-to-end MAPE, per-bucket MAPEs). The test plans come from
+/// the context's shared plan cache, so every model family evaluated for
+/// the same (scenario, dataset) reuses one lowering.
 fn eval_method(
+    ctx: &ReportCtx,
     sc: &Scenario,
     train_p: &[ModelProfile],
-    test_g: &[Graph],
+    test: DataSet,
     test_p: &[ModelProfile],
     method: Method,
     seed: u64,
@@ -50,7 +55,8 @@ fn eval_method(
 ) -> crate::framework::Evaluation {
     let pred =
         ScenarioPredictor::train_from(sc, train_p, method, DeductionMode::Full, seed, mlp);
-    evaluate(&pred, test_g, test_p)
+    let plans = ctx.test_plans(sc, DeductionMode::Full, test);
+    evaluate_lowered(&pred, ctx.test_graphs(test), &plans, test_p)
 }
 
 /// The headline per-platform scenario of Figs 14/18: the GPU, or one
@@ -93,12 +99,14 @@ pub fn fig14_methods_synth(ctx: &mut ReportCtx) -> Vec<Table> {
     );
     let mut gpu =
         Table::new("Fig 14b — MAPE on synthetic NAs, GPU (avg across 4 platforms)", &header);
-    let (test_g_all, seed) = (ctx.synth_split().1.to_vec(), ctx.cfg.seed);
+    let seed = ctx.cfg.seed;
     // One sweep cell per (native method, target, platform): every cell is
     // an independent train+evaluate, so the shared pool runs them all
-    // concurrently. MLP rows (artifact-gated; the PJRT context is not
-    // shareable across threads) run sequentially afterwards, which also
-    // keeps them last in each table exactly as before.
+    // concurrently; the three methods hitting the same scenario share one
+    // lowered plan set through the context's plan cache. MLP rows
+    // (artifact-gated; the PJRT context is not shareable across threads)
+    // run sequentially afterwards, which also keeps them last in each
+    // table exactly as before.
     let mut cells: Vec<(Method, bool, Scenario)> = Vec::new();
     for &method in Method::native() {
         for is_gpu in [false, true] {
@@ -113,7 +121,7 @@ pub fn fig14_methods_synth(ctx: &mut ReportCtx) -> Vec<Table> {
         |(_, _, sc)| vec![(sc.clone(), DataSet::Synth)],
         |ctx, (method, _, sc)| {
             let (tr, te) = ctx.synth_profiles_split_cached(sc);
-            eval_method(sc, tr, &test_g_all, te, *method, seed, None)
+            eval_method(ctx, sc, tr, DataSet::Synth, te, *method, seed, None)
         },
     );
     let n_soc = socs().len();
@@ -127,7 +135,16 @@ pub fn fig14_methods_synth(ctx: &mut ReportCtx) -> Vec<Table> {
             for soc in socs() {
                 let sc = fig_scenario(&soc, is_gpu);
                 let (tr, te) = ctx.synth_profiles_split(&sc);
-                evs.push(eval_method(&sc, &tr, &test_g_all, &te, Method::Mlp, seed, Some(mlp)));
+                evs.push(eval_method(
+                    ctx,
+                    &sc,
+                    &tr,
+                    DataSet::Synth,
+                    &te,
+                    Method::Mlp,
+                    seed,
+                    Some(mlp),
+                ));
             }
             fig14_row(if is_gpu { &mut gpu } else { &mut cpu }, Method::Mlp, &evs, &op_cols);
         }
@@ -182,7 +199,6 @@ fn combo_tables(
 
 /// Fig 15 (30): GBDT end-to-end predictions per core combo, fp32 + int8.
 pub fn fig15_gbdt_multicore(ctx: &mut ReportCtx, full: bool) -> Vec<Table> {
-    let test_g = ctx.synth_split().1.to_vec();
     let seed = ctx.cfg.seed;
     let cells = combo_cells(full);
     let rows = sweep::run(
@@ -193,7 +209,7 @@ pub fn fig15_gbdt_multicore(ctx: &mut ReportCtx, full: bool) -> Vec<Table> {
             let mut row = vec![c.fp32.combo_label()];
             for sc in [&c.fp32, &c.int8] {
                 let (tr, te) = ctx.synth_profiles_split_cached(sc);
-                let ev = eval_method(sc, tr, &test_g, te, Method::Gbdt, seed, None);
+                let ev = eval_method(ctx, sc, tr, DataSet::Synth, te, Method::Gbdt, seed, None);
                 row.push(pct(ev.end_to_end_mape));
             }
             row
@@ -213,12 +229,11 @@ pub fn fig16_gbdt_gpu(ctx: &mut ReportCtx) -> Vec<Table> {
         "Fig 16 — GBDT on GPUs (synthetic): per-kernel and end-to-end MAPE",
         &["gpu", "Conv2D", "Winograd", "DepthwiseConv2D", "end-to-end"],
     );
-    let test_g = ctx.synth_split().1.to_vec();
     let seed = ctx.cfg.seed;
     for soc in socs() {
         let sc = Scenario::gpu(&soc);
         let (tr, te) = ctx.synth_profiles_split(&sc);
-        let ev = eval_method(&sc, &tr, &test_g, &te, Method::Gbdt, seed, None);
+        let ev = eval_method(ctx, &sc, &tr, DataSet::Synth, &te, Method::Gbdt, seed, None);
         let get = |b: &str| ev.per_bucket_mape.get(b).map(|&m| pct(m)).unwrap_or("-".into());
         t.row(vec![
             soc.gpu.name.to_string(),
@@ -272,7 +287,7 @@ pub fn fig17_conv_ranges(ctx: &mut ReportCtx) -> Vec<Table> {
     );
     for (set, name) in [(DataSet::Synth, "synthetic"), (DataSet::Zoo, "real-world")] {
         let profs = ctx.profiles(&sc, set).to_vec();
-        let model = pred.models.get("Conv2D").expect("conv model");
+        let model = pred.model_named("Conv2D").expect("conv model");
         let mut per_bin: [(Vec<f64>, Vec<f64>); 3] = Default::default();
         for p in &profs {
             for o in &p.ops {
@@ -309,7 +324,6 @@ pub fn fig18_methods_zoo(ctx: &mut ReportCtx) -> Vec<Table> {
         "Fig 18b — MAPE on real-world NAs (train: synthetic), GPUs (avg 4 platforms)",
         &["method", "end-to-end"],
     );
-    let zoo_g = ctx.zoo().to_vec();
     let seed = ctx.cfg.seed;
     for &method in &methods {
         for (is_gpu, table) in [(false, &mut cpu), (true, &mut gpu)] {
@@ -318,7 +332,7 @@ pub fn fig18_methods_zoo(ctx: &mut ReportCtx) -> Vec<Table> {
                 let sc = fig_scenario(&soc, is_gpu);
                 let (tr, _) = ctx.synth_profiles_split(&sc);
                 let te = ctx.profiles(&sc, DataSet::Zoo).to_vec();
-                let ev = eval_method(&sc, &tr, &zoo_g, &te, method, seed, mlp.as_ref());
+                let ev = eval_method(ctx, &sc, &tr, DataSet::Zoo, &te, method, seed, mlp.as_ref());
                 e2e.push(ev.end_to_end_mape);
             }
             table.row(vec![method.name().to_string(), pct(mean(&e2e))]);
@@ -433,13 +447,15 @@ pub fn fig20_selection_ablation(ctx: &mut ReportCtx) -> Vec<Table> {
         let mut ps = Vec::new();
         let mut as_ = Vec::new();
         for (g, p) in wino_g.iter().zip(&wino_p) {
-            let units = pred.predict_units(g);
-            if units.len() != p.ops.len() {
+            // Lower once per graph; per-unit rows come off the plan with
+            // no bucket strings in the loop.
+            let rows = pred.predict_plan_rows(&pred.lower(g));
+            if rows.len() != p.ops.len() {
                 continue;
             }
-            for (u, o) in units.iter().zip(&p.ops) {
+            for (pm, o) in rows.iter().zip(&p.ops) {
                 if o.bucket == "Winograd" {
-                    ps.push(u.1);
+                    ps.push(*pm);
                     as_.push(o.latency_ms);
                 }
             }
@@ -483,13 +499,11 @@ fn train_size_sweep(ctx: &mut ReportCtx, test: DataSet, title: &str) -> Vec<Tabl
                     let sc = fig_scenario(&soc, is_gpu);
                     let (tr_full, te_synth) = ctx.synth_profiles_split(&sc);
                     let tr = &tr_full[..n.min(tr_full.len())];
-                    let (te_g, te_p): (Vec<Graph>, Vec<ModelProfile>) = match test {
-                        DataSet::Synth => (ctx.synth_split().1.to_vec(), te_synth),
-                        DataSet::Zoo => {
-                            (ctx.zoo().to_vec(), ctx.profiles(&sc, DataSet::Zoo).to_vec())
-                        }
+                    let te_p: Vec<ModelProfile> = match test {
+                        DataSet::Synth => te_synth,
+                        DataSet::Zoo => ctx.profiles(&sc, DataSet::Zoo).to_vec(),
                     };
-                    let ev = eval_method(&sc, tr, &te_g, &te_p, method, seed, mlp.as_ref());
+                    let ev = eval_method(ctx, &sc, tr, test, &te_p, method, seed, mlp.as_ref());
                     row.push(pct(ev.end_to_end_mape));
                     if is_gpu {
                         gpu_all.push(ev.end_to_end_mape);
@@ -527,7 +541,6 @@ pub fn fig22_train_size_zoo(ctx: &mut ReportCtx) -> Vec<Table> {
 
 /// Fig 23 (31): Lasso with 30 training NAs, multicore combos, zoo test.
 pub fn fig23_lasso_multicore(ctx: &mut ReportCtx, full: bool) -> Vec<Table> {
-    let zoo = ctx.zoo().to_vec();
     let seed = ctx.cfg.seed;
     let cells = combo_cells(full);
     let rows = sweep::run(
@@ -547,7 +560,7 @@ pub fn fig23_lasso_multicore(ctx: &mut ReportCtx, full: bool) -> Vec<Table> {
                 let (tr_full, _) = ctx.synth_profiles_split_cached(sc);
                 let tr = &tr_full[..30.min(tr_full.len())];
                 let te = ctx.profiles_cached(sc, DataSet::Zoo);
-                let ev = eval_method(sc, tr, &zoo, te, Method::Lasso, seed, None);
+                let ev = eval_method(ctx, sc, tr, DataSet::Zoo, te, Method::Lasso, seed, None);
                 row.push(pct(ev.end_to_end_mape));
             }
             row
@@ -591,7 +604,7 @@ pub fn fig24_lasso_gpu(ctx: &mut ReportCtx) -> Vec<Table> {
         // the fitted Lasso straight out of the bucket model instead of
         // re-fitting on the raw bucket data.
         for bucket in ["Conv2D", "DepthwiseConv2D"] {
-            let Some(owned) = pred.models.get(bucket).and_then(|m| m.as_owned()) else {
+            let Some(owned) = pred.model_named(bucket).and_then(|m| m.as_owned()) else {
                 continue;
             };
             if let crate::predict::NativeModel::Lasso(l) = &owned.model {

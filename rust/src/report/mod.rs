@@ -12,11 +12,14 @@ pub mod study;
 pub mod sweep;
 
 use crate::exec_pool::ExecPool;
+use crate::framework::DeductionMode;
 use crate::graph::Graph;
+use crate::plan::{self, LoweredGraph};
 use crate::profiler::{profile_set, profile_set_with, ModelProfile};
 use crate::scenario::Scenario;
 use crate::util::Table;
 use std::collections::HashMap;
+use std::sync::{Arc, Mutex};
 
 /// Configuration for a reproduction run. The defaults regenerate every
 /// figure at a scale that completes in minutes on a laptop; `full()` uses
@@ -68,6 +71,12 @@ pub struct ReportCtx {
     zoo: Vec<Graph>,
     synth: Vec<Graph>,
     profiles: HashMap<String, Vec<ModelProfile>>,
+    /// Lowered test plans, keyed by (scenario id, mode, dataset): each
+    /// (scenario, graph) is lowered once and the plan is shared across all
+    /// model families of a figure (Lasso/RF/GBDT rows re-use one plan set
+    /// instead of re-deducing per family). `Mutex` + `Arc` so sweep
+    /// workers can fill and read it through a shared `&ReportCtx`.
+    plans: Mutex<HashMap<String, Arc<Vec<LoweredGraph>>>>,
 }
 
 impl ReportCtx {
@@ -80,7 +89,7 @@ impl ReportCtx {
             .into_iter()
             .map(|a| a.graph)
             .collect();
-        ReportCtx { cfg, zoo, synth, profiles: HashMap::new() }
+        ReportCtx { cfg, zoo, synth, profiles: HashMap::new(), plans: Mutex::new(HashMap::new()) }
     }
 
     pub fn zoo(&self) -> &[Graph] {
@@ -156,6 +165,42 @@ impl ReportCtx {
             .get(&profile_key(sc, set))
             .unwrap_or_else(|| panic!("profiles for {} ({set:?}) not prefetched", sc.id))
             .as_slice()
+    }
+
+    /// The test graphs a dataset evaluates against: the held-out synthetic
+    /// split, or the (possibly capped) zoo.
+    pub fn test_graphs(&self, set: DataSet) -> &[Graph] {
+        match set {
+            DataSet::Synth => self.synth_split().1,
+            DataSet::Zoo => &self.zoo,
+        }
+    }
+
+    /// Lowered plans for the test graphs of `set` under (scenario, mode),
+    /// computed once and shared: every model family of a figure row (and
+    /// every sweep cell hitting the same scenario) evaluates against the
+    /// same `Arc`'d plan set. Takes `&self` so sweep workers can call it
+    /// concurrently; a racing duplicate lowers the same pure value and the
+    /// first insert wins.
+    pub fn test_plans(
+        &self,
+        sc: &Scenario,
+        mode: DeductionMode,
+        set: DataSet,
+    ) -> Arc<Vec<LoweredGraph>> {
+        let key = format!("{}#{}#{set:?}", sc.id, mode.name());
+        if let Some(p) = self.plans.lock().expect("plan cache lock").get(&key) {
+            return p.clone();
+        }
+        let lowered = Arc::new(
+            self.test_graphs(set).iter().map(|g| plan::lower(sc, mode, g)).collect::<Vec<_>>(),
+        );
+        self.plans.lock().expect("plan cache lock").entry(key).or_insert(lowered).clone()
+    }
+
+    /// Number of cached (scenario, mode, dataset) plan sets.
+    pub fn plans_cached(&self) -> usize {
+        self.plans.lock().expect("plan cache lock").len()
     }
 
     /// Split synthetic profiles consistently with `synth_split`.
@@ -274,6 +319,26 @@ mod tests {
         let (tr, te) = pre.synth_profiles_split_cached(&sc1);
         assert_eq!(tr.len(), 6);
         assert_eq!(te.len(), 2);
+    }
+
+    #[test]
+    fn test_plans_lower_once_and_share() {
+        let ctx = ReportCtx::new(ReportConfig::smoke());
+        let sc = crate::scenario::one_large_core("HelioP35");
+        let a = ctx.test_plans(&sc, DeductionMode::Full, DataSet::Synth);
+        let b = ctx.test_plans(&sc, DeductionMode::Full, DataSet::Synth);
+        // Same Arc: the second caller (another model family, another sweep
+        // cell) reuses the first lowering.
+        assert!(Arc::ptr_eq(&a, &b));
+        assert_eq!(a.len(), ctx.test_graphs(DataSet::Synth).len());
+        assert_eq!(ctx.plans_cached(), 1);
+        let z = ctx.test_plans(&sc, DeductionMode::Full, DataSet::Zoo);
+        assert_eq!(z.len(), ctx.zoo().len());
+        assert_eq!(ctx.plans_cached(), 2);
+        // A different mode lowers separately (ablations change deduction).
+        let n = ctx.test_plans(&sc, DeductionMode::NoFusion, DataSet::Synth);
+        assert!(!Arc::ptr_eq(&a, &n));
+        assert_eq!(ctx.plans_cached(), 3);
     }
 
     #[test]

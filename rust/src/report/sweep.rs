@@ -8,7 +8,10 @@
 //! 1. **Prefetch**: every profile set any cell needs is computed in
 //!    parallel across scenarios ([`ReportCtx::prefetch_profiles`]).
 //! 2. **Evaluate**: cells run concurrently against the now-read-only
-//!    cache, results collected in cell order.
+//!    cache, results collected in cell order. Cells evaluating the same
+//!    (scenario, dataset) share one lowered plan set through
+//!    [`ReportCtx::test_plans`] — the test graphs are lowered once, not
+//!    once per model family.
 //!
 //! Ordered collection + pure cells ⇒ the produced tables are *identical*
 //! to the sequential loops they replaced (asserted below), just faster.

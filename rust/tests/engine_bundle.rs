@@ -175,6 +175,66 @@ fn engine_serves_multiple_scenarios_and_batch_matches_sequential() {
 }
 
 #[test]
+fn bundle_serializes_the_intern_table_and_rejects_unknown_buckets() {
+    let sc = edgelat::scenario::one_large_core("HelioP35");
+    let (_, profiles) = training_set(&sc, 10, 1500);
+    let bundle =
+        PredictorBundle::train(&sc, &profiles, Method::Lasso, DeductionMode::Full, 2).unwrap();
+    let j = bundle.to_json();
+
+    // The serialized table is the build's interner, names in BucketId
+    // order — the symbol set every model key must resolve against.
+    let table = j.req("interner").unwrap().as_arr().expect("interner array");
+    let it = edgelat::plan::interner();
+    assert_eq!(table.len(), it.len());
+    for (i, n) in table.iter().enumerate() {
+        assert_eq!(n.as_str().unwrap(), it.names()[i]);
+    }
+
+    // A model keyed by a bucket absent from the table is rejected.
+    let mut tampered = bundle.to_json();
+    if let Json::Obj(m) = &mut tampered {
+        let Some(Json::Obj(buckets)) = m.get_mut("buckets") else { panic!("buckets obj") };
+        let (k, v) = buckets
+            .iter()
+            .next()
+            .map(|(k, v)| (k.clone(), v.clone()))
+            .expect("at least one bucket model");
+        buckets.remove(&k);
+        buckets.insert("MysteryKernel".into(), v);
+    }
+    let err = PredictorBundle::from_json(&tampered).unwrap_err();
+    assert!(err.contains("MysteryKernel"), "{err}");
+
+    // A bundle with no table at all (e.g. a pre-plan v1 file with a bumped
+    // version) is rejected by the schema, naming the missing field.
+    let mut no_table = bundle.to_json();
+    if let Json::Obj(m) = &mut no_table {
+        m.remove("interner");
+    }
+    let err = PredictorBundle::from_json(&no_table).unwrap_err();
+    assert!(err.contains("interner"), "{err}");
+}
+
+#[test]
+fn engine_per_unit_buckets_are_interned_names() {
+    let sc = edgelat::scenario::one_large_core("Snapdragon855");
+    let (_, profiles) = training_set(&sc, 10, 1700);
+    let bundle =
+        PredictorBundle::train(&sc, &profiles, Method::Gbdt, DeductionMode::Full, 3).unwrap();
+    let engine = EngineBuilder::new().bundle(bundle).build().unwrap();
+    let g = probe_graphs(1800, 1).pop().unwrap();
+    let resp = engine.predict(&PredictRequest::new(&g, sc.id.clone())).unwrap();
+    assert_eq!(resp.per_unit.len(), g.nodes.len());
+    let it = edgelat::plan::interner();
+    for (b, ms) in &resp.per_unit {
+        // &'static str straight out of the symbol table.
+        assert!(it.resolve(b).is_some(), "{b}");
+        assert!(ms.is_finite() && *ms > 0.0);
+    }
+}
+
+#[test]
 fn engine_memoized_deduction_is_consistent() {
     // Repeated queries for the same graph must hit the deduction cache and
     // return identical responses.

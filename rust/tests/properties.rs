@@ -5,8 +5,11 @@
 //! Invariants covered: graph validity and model-file round-trips over the
 //! whole NAS space, Algorithm C.1 fusion conservation laws, kernel-selection
 //! consistency, feature-vector alignment (what the per-bucket trainers
-//! require), simulator sanity (positivity, determinism, monotonicity), and
-//! predictor numeric hygiene.
+//! require), simulator sanity (positivity, determinism, monotonicity),
+//! predictor numeric hygiene, `Graph::fingerprint` stability/sensitivity
+//! (the plan-cache key), and lowered-plan parity: `plan::lower` ==
+//! `framework::deduce_units` across all 72 scenarios, and plan-path
+//! predictions bit-identical to the string-keyed path.
 
 use edgelat::device::{CoreCombo, DataRep, Target};
 use edgelat::features::{features, kernel_features};
@@ -249,5 +252,170 @@ fn prop_gpu_dispatch_count_at_least_kernels() {
         let g = edgelat::nas::sample(seed ^ 0x9d, 8).graph;
         let c = compile(&g, GpuKind::PowerVR, CompileOptions::default());
         assert!(c.dispatch_count() >= c.kernels.len(), "seed {seed}");
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Graph::fingerprint properties — the engine's plan-cache key must be stable
+// under renaming and sensitive to any structural edit.
+
+#[test]
+fn prop_fingerprint_stable_under_node_renaming_across_zoo() {
+    for g in edgelat::zoo::all_graphs() {
+        let mut renamed = g.clone();
+        renamed.name = format!("renamed__{}", g.name);
+        assert_eq!(
+            g.fingerprint(),
+            renamed.fingerprint(),
+            "{}: renamed copy must hash alike",
+            g.name
+        );
+    }
+}
+
+#[test]
+fn prop_fingerprint_sensitive_to_shape_edits() {
+    for g in edgelat::zoo::all_graphs().into_iter().take(20) {
+        let mut edited = g.clone();
+        // Widen one tensor by a channel: a different architecture.
+        edited.tensors[0].shape.c += 1;
+        assert_ne!(g.fingerprint(), edited.fingerprint(), "{}: shape edit", g.name);
+    }
+}
+
+#[test]
+fn prop_fingerprint_sensitive_to_op_edits() {
+    let mut edited_any = 0;
+    for g in edgelat::zoo::all_graphs() {
+        let mut edited = g.clone();
+        let Some(n) =
+            edited.nodes.iter_mut().find(|n| matches!(n.op, edgelat::graph::Op::Conv2D { .. }))
+        else {
+            continue;
+        };
+        if let edgelat::graph::Op::Conv2D { stride, .. } = &mut n.op {
+            *stride += 1;
+        }
+        assert_ne!(g.fingerprint(), edited.fingerprint(), "{}: op edit", g.name);
+        edited_any += 1;
+    }
+    assert!(edited_any > 0, "zoo should contain standard convolutions");
+}
+
+#[test]
+fn prop_fingerprint_sensitive_to_connectivity_edits() {
+    for seed in 0..CASES as u64 {
+        let g = edgelat::nas::sample(seed ^ 0x51ab, 9).graph;
+        let mut edited = g.clone();
+        // Rewire one consumer to a different (existing) tensor.
+        let Some(n) = edited.nodes.iter_mut().find(|n| !n.inputs.is_empty()) else {
+            continue;
+        };
+        let t = n.inputs[0];
+        n.inputs[0] = if t == 0 { 1 } else { t - 1 };
+        assert_ne!(g.fingerprint(), edited.fingerprint(), "seed {seed}: rewire");
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Plan parity — `plan::lower` must agree with the string-keyed reference
+// deduction (`framework::deduce_units`) everywhere: all 72 scenarios, every
+// deduction mode, representative zoo models. Feature rows must be
+// bit-identical (the plan IR is a re-packing, not a re-derivation).
+
+#[test]
+fn prop_plan_lower_matches_deduce_units_all_72_scenarios() {
+    let graphs = [
+        edgelat::zoo::mobilenets::mobilenet_v2(0.5),
+        edgelat::zoo::resnets::resnet(10, 1.0),
+        edgelat::nas::sample(0x91a4, 7).graph,
+    ];
+    let it = edgelat::plan::interner();
+    let scenarios = edgelat::scenario::all_scenarios();
+    assert_eq!(scenarios.len(), 72, "the paper's 72 measurement scenarios");
+    for sc in &scenarios {
+        for g in &graphs {
+            for mode in [
+                edgelat::framework::DeductionMode::Full,
+                edgelat::framework::DeductionMode::NoFusion,
+                edgelat::framework::DeductionMode::NoSelection,
+            ] {
+                let plan = edgelat::plan::lower(sc, mode, g);
+                let reference = edgelat::framework::deduce_units(sc, mode, g);
+                assert_eq!(plan.len(), reference.len(), "{} {} {mode:?}", sc.id, g.name);
+                for (i, (rb, rf)) in reference.iter().enumerate() {
+                    assert_eq!(it.name(plan.bucket(i)), rb, "{} {} unit {i}", sc.id, g.name);
+                    let row = plan.row(i);
+                    assert_eq!(row.len(), rf.len(), "{} {} unit {i}", sc.id, g.name);
+                    for (a, b) in row.iter().zip(rf) {
+                        assert_eq!(
+                            a.to_bits(),
+                            b.to_bits(),
+                            "{} {} unit {i}: {a} vs {b}",
+                            sc.id,
+                            g.name
+                        );
+                    }
+                }
+            }
+        }
+    }
+}
+
+// Lowered-path predictions must be bit-identical to the pre-refactor
+// string-keyed path: reconstruct the old predict loop (deduce_units +
+// by-name model lookup + per-unit predict_raw, summed in unit order) and
+// compare against `predict`/`predict_plan`.
+
+#[test]
+fn prop_plan_predictions_bit_identical_to_string_keyed_path() {
+    use edgelat::framework::{deduce_units, DeductionMode, ScenarioPredictor};
+    let socs = edgelat::device::socs();
+    let scenarios = [
+        edgelat::scenario::one_large_core("Snapdragon855"),
+        edgelat::scenario::Scenario::gpu(&socs[0]),
+    ];
+    let train: Vec<_> = edgelat::nas::sample_dataset(77, 14)
+        .into_iter()
+        .map(|a| a.graph)
+        .collect();
+    let probes: Vec<_> = edgelat::nas::sample_dataset(1077, 6)
+        .into_iter()
+        .map(|a| a.graph)
+        .collect();
+    for sc in &scenarios {
+        let profiles = edgelat::profiler::profile_set(sc, &train, 7, 3);
+        for &method in edgelat::predict::Method::native() {
+            let pred = ScenarioPredictor::train_from(
+                sc,
+                &profiles,
+                method,
+                DeductionMode::Full,
+                1,
+                None,
+            );
+            for g in &probes {
+                // The pre-refactor string-keyed serve loop, verbatim
+                // (per-unit sum first, T_overhead added last — the same
+                // float-addition order as the original `predict`).
+                let mut sum = 0.0;
+                for (bucket, f) in deduce_units(sc, DeductionMode::Full, g) {
+                    sum += match pred.model_named(&bucket) {
+                        Some(m) => m.predict_raw(&f),
+                        None => pred.fallback_ms,
+                    };
+                }
+                let reference = pred.t_overhead_ms + sum;
+                let plan_path = pred.predict(g);
+                assert_eq!(
+                    plan_path.to_bits(),
+                    reference.to_bits(),
+                    "{} {} on {}: {plan_path} vs {reference}",
+                    sc.id,
+                    method.name(),
+                    g.name
+                );
+            }
+        }
     }
 }

@@ -1,13 +1,18 @@
 #!/usr/bin/env python3
 """CI gate over the `edgelat bench` artifact (BENCH_pipeline.json).
 
-Fails on a >2x slowdown of engine batch-predict relative to the
-single-predict-per-item loop measured in the same process (i.e.
-batch_predict_speedup < 0.5). The check is a ratio between two workloads
-timed back-to-back on the same machine, not an absolute wall-clock
-threshold, so it is robust to runner speed while still catching a
-batch-path regression — e.g. the worker pool serializing on a global
-lock, or per-request thread-spawn costs dwarfing the work.
+Fails on:
+- a >2x slowdown of engine batch-predict relative to the
+  single-predict-per-item loop measured in the same process
+  (batch_predict_speedup < 0.5), e.g. the worker pool serializing on a
+  global lock or per-request thread-spawn costs dwarfing the work;
+- a regressed parallel scenario sweep (sweep_parallel_speedup < 0.8):
+  profiling K scenarios fanned out on the pool must not be meaningfully
+  slower than doing them one at a time, whatever the runner's core count.
+
+Both checks are ratios between two workloads timed back-to-back on the
+same machine, never absolute wall-clock thresholds, so they are robust to
+runner speed while still catching structural regressions.
 
 Usage: bench_gate.py [BENCH_pipeline.json]
 """
@@ -20,10 +25,22 @@ import sys
 # requests one at a time; on multi-core runners it should be faster.
 MIN_BATCH_SPEEDUP = 0.5
 
+# The pooled scenario sweep must stay within 25% of sequential even on a
+# single-core runner (where the honest ratio is ~1.0); on multi-core
+# runners it is well above 1. Below this, the sweep pool itself regressed.
+MIN_SWEEP_SPEEDUP = 0.8
+
 
 def fail(msg: str) -> int:
     print(f"FAIL: {msg}", file=sys.stderr)
     return 1
+
+
+def ratio(derived: dict, key: str, path: str):
+    value = derived.get(key)
+    if not isinstance(value, (int, float)) or not math.isfinite(value) or value <= 0:
+        return None, fail(f"missing/invalid {key} in {path}: {value!r}")
+    return value, None
 
 
 def main() -> int:
@@ -40,24 +57,39 @@ def main() -> int:
         return fail(f"unknown bench artifact version {doc.get('version')!r}")
 
     derived = doc.get("derived", {})
-    speedup = derived.get("batch_predict_speedup")
-    if not isinstance(speedup, (int, float)) or not math.isfinite(speedup) or speedup <= 0:
-        return fail(f"missing/invalid batch_predict_speedup in {path}: {speedup!r}")
-
+    speedup, err = ratio(derived, "batch_predict_speedup", path)
+    if err is not None:
+        return err
     if speedup < MIN_BATCH_SPEEDUP:
         return fail(
             f"predict_batch is {1.0 / speedup:.2f}x slower than the "
             f"single-predict loop (allowed: {1.0 / MIN_BATCH_SPEEDUP:.0f}x)"
         )
 
-    sweep = derived.get("sweep_parallel_speedup")
-    sweep_txt = f"{sweep:.2f}x" if isinstance(sweep, (int, float)) else repr(sweep)
-    cache = derived.get("deduction_cache", {})
+    sweep, err = ratio(derived, "sweep_parallel_speedup", path)
+    if err is not None:
+        return err
+    if sweep < MIN_SWEEP_SPEEDUP:
+        return fail(
+            f"pooled scenario sweep is {1.0 / sweep:.2f}x slower than "
+            f"sequential (allowed: {1.0 / MIN_SWEEP_SPEEDUP:.2f}x)"
+        )
+
+    lowering = derived.get("lowering", {})
+    graphs_per_s = lowering.get("graphs_per_s")
+    lowering_txt = (
+        f"{graphs_per_s:.0f} graphs/s"
+        if isinstance(graphs_per_s, (int, float))
+        else repr(graphs_per_s)
+    )
+    cache = derived.get("plan_cache", {})
     print(
         f"OK: batch_predict_speedup={speedup:.2f}x "
         f"(threshold {MIN_BATCH_SPEEDUP}), "
-        f"sweep_parallel_speedup={sweep_txt}, "
-        f"cache hits/misses={cache.get('hits')}/{cache.get('misses')}"
+        f"sweep_parallel_speedup={sweep:.2f}x "
+        f"(threshold {MIN_SWEEP_SPEEDUP}), "
+        f"lowering={lowering_txt}, "
+        f"plan cache hits/misses={cache.get('hits')}/{cache.get('misses')}"
     )
     return 0
 
