@@ -4,8 +4,10 @@
 //! Times the pipeline stages the worker-pool and plan-IR subsystems
 //! accelerate: kernel deduction (string-keyed reference vs `plan::lower`
 //! into the dense IR), one-time predictor training, single-predict,
-//! engine `predict_batch`, predict-over-plan, and parallel scenario-sweep
-//! profiling, plus the engine's plan-cache hit/miss counters. The
+//! engine `predict_batch`, predict-over-plan, parallel scenario-sweep
+//! profiling, and the evolutionary NAS-search loop (candidates/s plus the
+//! plan-cache hit rate it sustains), plus the engine's plan-cache
+//! hit/miss counters. The
 //! emitted JSON is the artifact the CI bench job uploads and gates on
 //! (`scripts/bench_gate.py`). Gated quantities are **ratios between
 //! workloads measured back-to-back in the same process** (e.g.
@@ -41,6 +43,10 @@ pub struct BenchConfig {
     pub n_sweep: usize,
     /// Graphs profiled per sweep scenario.
     pub sweep_graphs: usize,
+    /// Population of the NAS-search throughput stage.
+    pub search_pop: usize,
+    /// Generations of the NAS-search throughput stage.
+    pub search_gens: usize,
     /// Workload seed (timings vary; the workload itself must not).
     pub seed: u64,
     /// Worker threads (engine pool and sweep pool).
@@ -64,6 +70,8 @@ impl BenchConfig {
             iters: 3,
             n_sweep: 6,
             sweep_graphs: 8,
+            search_pop: 10,
+            search_gens: 3,
             seed: 2022,
             threads: default_threads(),
         }
@@ -79,6 +87,8 @@ impl BenchConfig {
             iters: 8,
             n_sweep: 12,
             sweep_graphs: 16,
+            search_pop: 24,
+            search_gens: 5,
             seed: 2022,
             threads: default_threads(),
         }
@@ -208,6 +218,34 @@ pub fn run(cfg: &BenchConfig) -> Json {
     bench_line(&mut samples, sweep_par.clone());
     let sweep_speedup = sweep_seq.mean_s / sweep_par.mean_s.max(1e-12);
 
+    // --- NAS-search throughput: the predictor-in-the-loop workload the
+    // paper motivates, driving the loaded engine generation by generation.
+    // Candidates/s counts engine predictions served; elite survivors
+    // re-scored across generations land in the fingerprint-keyed plan
+    // cache, so the stage also isolates the cache's hit rate under
+    // realistic sustained traffic.
+    let search_cfg = crate::search::SearchConfig {
+        seed: cfg.seed,
+        population: cfg.search_pop,
+        generations: cfg.search_gens,
+        ..crate::search::SearchConfig::quick()
+    };
+    let search_ids = [sc_cpu.id.clone()];
+    let cache_before = engine.cache_stats();
+    let mut search_evaluated = 0usize;
+    let search_s = time_named("search/evolve x generations", (cfg.iters / 2).max(1), || {
+        let outcome =
+            crate::search::run(&engine, &search_ids, &search_cfg).expect("search served");
+        search_evaluated = outcome.candidates_evaluated;
+        black_box(outcome);
+    });
+    bench_line(&mut samples, search_s.clone());
+    let cache_after = engine.cache_stats();
+    let search_hits = cache_after.hits - cache_before.hits;
+    let search_misses = cache_after.misses - cache_before.misses;
+    let search_hit_rate = search_hits as f64 / (search_hits + search_misses).max(1) as f64;
+    let candidates_per_s = search_evaluated as f64 / search_s.mean_s.max(1e-12);
+
     let cache = engine.cache_stats();
     Json::obj(vec![
         ("format", Json::str("edgelat.bench")),
@@ -232,6 +270,16 @@ pub fn run(cfg: &BenchConfig) -> Json {
                             Json::num(mv2_plan_units as f64 / lower_s.mean_s.max(1e-12)),
                         ),
                         ("units_per_graph", Json::num(mv2_plan_units as f64)),
+                    ]),
+                ),
+                (
+                    // NAS-search throughput over the loaded engine: the
+                    // `search --quick` CI smoke gates on candidates/s > 0.
+                    "search",
+                    Json::obj(vec![
+                        ("candidates_per_s", Json::num(candidates_per_s)),
+                        ("evaluated", Json::num(search_evaluated as f64)),
+                        ("plan_cache_hit_rate", Json::num(search_hit_rate)),
                     ]),
                 ),
                 (
@@ -263,6 +311,8 @@ mod tests {
             iters: 1,
             n_sweep: 2,
             sweep_graphs: 2,
+            search_pop: 4,
+            search_gens: 2,
             seed: 7,
             threads: 2,
         };
@@ -274,7 +324,7 @@ mod tests {
         assert_eq!(doc.req_str("profile").unwrap(), "custom");
         assert_eq!(doc.req_usize("threads").unwrap(), 2);
         let benches = doc.req("benches").unwrap().as_arr().expect("array");
-        assert!(benches.len() >= 8, "expected all pipeline benches, got {}", benches.len());
+        assert!(benches.len() >= 9, "expected all pipeline benches, got {}", benches.len());
         for b in benches {
             assert!(b.req_str("name").is_ok());
             let mean = b.req_f64("mean_s").unwrap();
@@ -293,6 +343,16 @@ mod tests {
         let lowering = derived.req("lowering").unwrap();
         assert!(lowering.req_f64("graphs_per_s").unwrap() > 0.0);
         assert!(lowering.req_f64("units_per_graph").unwrap() > 0.0);
+        // The NAS-search stage: throughput is positive and the hit rate
+        // is a real rate — the generation loop re-scores elite survivors,
+        // and the warmup run primes every plan, so hits must occur.
+        let search = derived.req("search").unwrap();
+        assert!(search.req_f64("candidates_per_s").unwrap() > 0.0);
+        assert!(search.req_f64("evaluated").unwrap() > 0.0);
+        let hit_rate = search.req_f64("plan_cache_hit_rate").unwrap();
+        assert!((0.0..=1.0).contains(&hit_rate), "hit_rate={hit_rate}");
+        assert!(hit_rate > 0.0, "search stage must hit the plan cache");
+        assert!(benches.iter().any(|b| b.req_str("name").unwrap().starts_with("search/")));
         let cache = derived.req("plan_cache").unwrap();
         // The serve benches queried the same graphs repeatedly: the
         // sharded memo must have seen real hits.

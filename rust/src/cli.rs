@@ -1,0 +1,264 @@
+//! Hand-rolled CLI flag parsing (the offline crate set has no clap),
+//! extracted from `main.rs` so every parser is a plain testable function.
+//!
+//! Parsers return `Result<_, String>` instead of exiting; the binary maps
+//! errors to `exit(2)` in one place. A flag that is *present* but
+//! malformed — missing its value, non-numeric, out of range — is always
+//! an error, never a silent fall-back to the default (the old `main.rs`
+//! helpers silently defaulted on `--seed` with no value following it).
+
+use crate::framework::DeductionMode;
+use crate::predict::Method;
+use crate::scenario::{by_id, Scenario};
+
+/// Shared defaults: every subcommand that trains reads the same seed /
+/// training-set-size / repetition defaults, so `predict`, `evaluate` and
+/// `search` cannot drift apart.
+pub const DEFAULT_SEED: u64 = 2022;
+pub const DEFAULT_TRAIN: usize = 120;
+pub const DEFAULT_RUNS: usize = 5;
+
+/// The value following `name`, or `None` when the flag is absent.
+/// A present flag with no following value is an error.
+pub fn flag(rest: &[String], name: &str) -> Result<Option<String>, String> {
+    match rest.iter().position(|a| a == name) {
+        None => Ok(None),
+        Some(i) => match rest.get(i + 1) {
+            Some(v) => Ok(Some(v.clone())),
+            None => Err(format!("flag {name} needs a value")),
+        },
+    }
+}
+
+/// Presence of a boolean flag.
+pub fn has(rest: &[String], name: &str) -> bool {
+    rest.iter().any(|a| a == name)
+}
+
+/// Parse a `u64`-valued flag with a default.
+pub fn u64_flag(rest: &[String], name: &str, default: u64) -> Result<u64, String> {
+    match flag(rest, name)? {
+        None => Ok(default),
+        Some(s) => s.parse().map_err(|_| format!("{name} expects an unsigned integer, got '{s}'")),
+    }
+}
+
+/// Parse a `usize`-valued flag with a default.
+pub fn usize_flag(rest: &[String], name: &str, default: usize) -> Result<usize, String> {
+    match flag(rest, name)? {
+        None => Ok(default),
+        Some(s) => s.parse().map_err(|_| format!("{name} expects an unsigned integer, got '{s}'")),
+    }
+}
+
+/// Parse an optional `f64`-valued flag (no default; absent is `None`).
+/// The value must be finite and positive — every current use is a
+/// latency budget in milliseconds.
+pub fn positive_f64_flag(rest: &[String], name: &str) -> Result<Option<f64>, String> {
+    match flag(rest, name)? {
+        None => Ok(None),
+        Some(s) => {
+            let v: f64 =
+                s.parse().map_err(|_| format!("{name} expects a number, got '{s}'"))?;
+            if !v.is_finite() || v <= 0.0 {
+                return Err(format!("{name} must be a positive number, got '{s}'"));
+            }
+            Ok(Some(v))
+        }
+    }
+}
+
+pub fn seed_flag(rest: &[String]) -> Result<u64, String> {
+    u64_flag(rest, "--seed", DEFAULT_SEED)
+}
+
+pub fn train_flag(rest: &[String]) -> Result<usize, String> {
+    let n = usize_flag(rest, "--train", DEFAULT_TRAIN)?;
+    if n == 0 {
+        return Err("--train needs at least one training architecture".into());
+    }
+    Ok(n)
+}
+
+pub fn runs_flag(rest: &[String]) -> Result<usize, String> {
+    let n = usize_flag(rest, "--runs", DEFAULT_RUNS)?;
+    if n == 0 {
+        return Err("--runs needs at least one profiling repetition".into());
+    }
+    Ok(n)
+}
+
+/// Worker-thread count: absent means "pool default" (`None`); `--threads 0`
+/// is accepted and clamps to 1, matching `ExecPool::new` — a pool always
+/// has at least one worker, it never means "no execution".
+pub fn threads_flag(rest: &[String]) -> Result<Option<usize>, String> {
+    match flag(rest, "--threads")? {
+        None => Ok(None),
+        Some(s) => {
+            let n: usize = s
+                .parse()
+                .map_err(|_| format!("--threads expects an unsigned integer, got '{s}'"))?;
+            Ok(Some(n.max(1)))
+        }
+    }
+}
+
+/// `--method`, when present; `None` when the flag is absent (callers that
+/// must distinguish "defaulted" from "explicitly requested" — bundle
+/// mismatch checks, optional request restriction — use this directly).
+pub fn method_flag_opt(rest: &[String]) -> Result<Option<Method>, String> {
+    match flag(rest, "--method")? {
+        None => Ok(None),
+        Some(s) => match Method::parse(&s) {
+            Some(m) => Ok(Some(m)),
+            None => Err(format!("unknown method '{s}' (lasso|rf|gbdt|mlp)")),
+        },
+    }
+}
+
+pub fn method_flag(rest: &[String], default: Method) -> Result<Method, String> {
+    Ok(method_flag_opt(rest)?.unwrap_or(default))
+}
+
+pub fn mode_flag(rest: &[String]) -> Result<DeductionMode, String> {
+    match flag(rest, "--mode")? {
+        None => Ok(DeductionMode::Full),
+        Some(s) => DeductionMode::parse(&s)
+            .ok_or_else(|| format!("unknown mode '{s}' (full|nofusion|noselection)")),
+    }
+}
+
+/// The single required `--scenario ID`, resolved against the build's
+/// scenario table.
+pub fn scenario_flag(rest: &[String]) -> Result<Scenario, String> {
+    let id = flag(rest, "--scenario")?
+        .ok_or("need --scenario ID (see `edgelat list scenarios`)")?;
+    by_id(&id).ok_or_else(|| format!("unknown scenario '{id}' (see `edgelat list scenarios`)"))
+}
+
+/// A comma-separated scenario list (`--scenario A,B,C`), each id resolved
+/// and order preserved. Duplicates are rejected — the search would
+/// otherwise silently double-count a device.
+pub fn scenario_list_flag(rest: &[String]) -> Result<Vec<Scenario>, String> {
+    let raw = flag(rest, "--scenario")?
+        .ok_or("need --scenario ID[,ID...] (see `edgelat list scenarios`)")?;
+    let mut out: Vec<Scenario> = Vec::new();
+    for id in raw.split(',').map(str::trim) {
+        if id.is_empty() {
+            return Err(format!("--scenario has an empty id in '{raw}'"));
+        }
+        if out.iter().any(|s| s.id == id) {
+            return Err(format!("--scenario lists '{id}' twice"));
+        }
+        out.push(
+            by_id(id)
+                .ok_or_else(|| format!("unknown scenario '{id}' (see `edgelat list scenarios`)"))?,
+        );
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn args(xs: &[&str]) -> Vec<String> {
+        xs.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn flag_returns_value_or_absence() {
+        let rest = args(&["--seed", "7", "--quick"]);
+        assert_eq!(flag(&rest, "--seed").unwrap(), Some("7".into()));
+        assert_eq!(flag(&rest, "--runs").unwrap(), None);
+        assert!(has(&rest, "--quick"));
+        assert!(!has(&rest, "--slow"));
+    }
+
+    #[test]
+    fn present_flag_without_value_is_rejected() {
+        let rest = args(&["--out", "x.json", "--seed"]);
+        let err = flag(&rest, "--seed").unwrap_err();
+        assert!(err.contains("--seed"), "{err}");
+        assert!(seed_flag(&rest).is_err());
+    }
+
+    #[test]
+    fn numeric_flags_parse_and_default() {
+        let rest = args(&["--seed", "99", "--train", "10", "--runs", "3"]);
+        assert_eq!(seed_flag(&rest).unwrap(), 99);
+        assert_eq!(train_flag(&rest).unwrap(), 10);
+        assert_eq!(runs_flag(&rest).unwrap(), 3);
+        let none = args(&[]);
+        assert_eq!(seed_flag(&none).unwrap(), DEFAULT_SEED);
+        assert_eq!(train_flag(&none).unwrap(), DEFAULT_TRAIN);
+        assert_eq!(runs_flag(&none).unwrap(), DEFAULT_RUNS);
+    }
+
+    #[test]
+    fn bad_numeric_inputs_are_rejected_not_defaulted() {
+        for bad in ["abc", "-5", "1.5", ""] {
+            let rest = args(&["--seed", bad]);
+            let err = seed_flag(&rest).unwrap_err();
+            assert!(err.contains("--seed"), "{bad}: {err}");
+        }
+        assert!(train_flag(&args(&["--train", "0"])).is_err());
+        assert!(runs_flag(&args(&["--runs", "0"])).is_err());
+    }
+
+    #[test]
+    fn threads_zero_clamps_to_one_worker() {
+        // The documented edge case: `--threads 0` is not an error and not
+        // a zero-worker pool — it resolves to one worker, the same
+        // clamping `ExecPool::new(0)` applies.
+        assert_eq!(threads_flag(&args(&["--threads", "0"])).unwrap(), Some(1));
+        assert_eq!(threads_flag(&args(&["--threads", "4"])).unwrap(), Some(4));
+        assert_eq!(threads_flag(&args(&[])).unwrap(), None);
+        assert!(threads_flag(&args(&["--threads", "many"])).is_err());
+        assert!(threads_flag(&args(&["--threads"])).is_err());
+    }
+
+    #[test]
+    fn method_and_mode_flags() {
+        let rf = method_flag(&args(&["--method", "rf"]), Method::Gbdt).unwrap();
+        assert_eq!(rf, Method::RandomForest);
+        assert_eq!(method_flag(&args(&[]), Method::Gbdt).unwrap(), Method::Gbdt);
+        assert!(method_flag(&args(&["--method", "svm"]), Method::Gbdt).is_err());
+        // The optional variant distinguishes absent from defaulted.
+        assert_eq!(method_flag_opt(&args(&[])).unwrap(), None);
+        assert_eq!(method_flag_opt(&args(&["--method", "lasso"])).unwrap(), Some(Method::Lasso));
+        assert!(method_flag_opt(&args(&["--method", "svm"])).is_err());
+        assert_eq!(mode_flag(&args(&["--mode", "nofusion"])).unwrap(), DeductionMode::NoFusion);
+        assert!(mode_flag(&args(&["--mode", "??"])).is_err());
+    }
+
+    #[test]
+    fn budget_flag_requires_positive_finite() {
+        let b = positive_f64_flag(&args(&["--budget", "55.5"]), "--budget").unwrap();
+        assert_eq!(b, Some(55.5));
+        assert_eq!(positive_f64_flag(&args(&[]), "--budget").unwrap(), None);
+        for bad in ["-1", "0", "nan", "inf", "soon"] {
+            assert!(
+                positive_f64_flag(&args(&["--budget", bad]), "--budget").is_err(),
+                "{bad} accepted"
+            );
+        }
+    }
+
+    #[test]
+    fn scenario_flags_resolve_against_the_table() {
+        let sc = scenario_flag(&args(&["--scenario", "HelioP35/gpu"])).unwrap();
+        assert_eq!(sc.id, "HelioP35/gpu");
+        assert!(scenario_flag(&args(&["--scenario", "Nope/gpu"])).is_err());
+        assert!(scenario_flag(&args(&[])).is_err());
+        let list = scenario_list_flag(&args(&["--scenario", "HelioP35/gpu,Snapdragon855/gpu"]))
+            .unwrap();
+        assert_eq!(list.len(), 2);
+        assert_eq!(list[0].id, "HelioP35/gpu");
+        assert_eq!(list[1].id, "Snapdragon855/gpu");
+        // Duplicates, empty segments, and unknown ids are rejected.
+        assert!(scenario_list_flag(&args(&["--scenario", "HelioP35/gpu,HelioP35/gpu"])).is_err());
+        assert!(scenario_list_flag(&args(&["--scenario", "HelioP35/gpu,,X"])).is_err());
+        assert!(scenario_list_flag(&args(&["--scenario", "X/gpu"])).is_err());
+    }
+}

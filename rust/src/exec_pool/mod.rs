@@ -60,6 +60,20 @@ impl ExecPool {
         self.threads
     }
 
+    /// Workers actually spawned for a `map` over `n` items: never more
+    /// than `n`, so a pool sized for big batches does not pay spawn cost
+    /// for idle workers on tiny inputs (an 8-thread pool mapping 2 items
+    /// spawns 2). With 0 or 1 items (or 1 thread) `map` runs inline and
+    /// spawns nothing.
+    pub fn workers_for(&self, n: usize) -> usize {
+        let w = self.threads.min(n);
+        if w <= 1 {
+            0
+        } else {
+            w
+        }
+    }
+
     /// Apply `f` to every item and return the results **in input order**.
     ///
     /// `f` receives `(index, &item)` and must be pure per item for the
@@ -79,8 +93,10 @@ impl ExecPool {
         if n == 0 {
             return Vec::new();
         }
-        let workers = self.threads.min(n);
-        if workers <= 1 {
+        // Sizing rule lives in `workers_for` (tested directly): more
+        // threads than items must not spawn idle workers.
+        let workers = self.workers_for(n);
+        if workers == 0 {
             return items.iter().enumerate().map(|(i, t)| f(i, t)).collect();
         }
         // Chunked work queue: workers claim `chunk` indices at a time from
@@ -219,5 +235,42 @@ mod tests {
         let pool = ExecPool::new(0);
         assert_eq!(pool.threads(), 1);
         assert_eq!(pool.map(&[1, 2, 3], |_, &x| x + 1), vec![2, 3, 4]);
+    }
+
+    #[test]
+    fn more_threads_than_items_spawns_no_idle_workers() {
+        let pool = ExecPool::new(64);
+        assert_eq!(pool.workers_for(0), 0, "empty input spawns nothing");
+        assert_eq!(pool.workers_for(1), 0, "single item runs inline");
+        assert_eq!(pool.workers_for(2), 2);
+        assert_eq!(pool.workers_for(3), 3);
+        assert_eq!(pool.workers_for(64), 64);
+        assert_eq!(pool.workers_for(1000), 64, "capped by the pool size");
+        assert_eq!(ExecPool::new(1).workers_for(100), 0, "one thread runs inline");
+        // The cap is observable: no worker thread ever runs `f` for a
+        // single-item map (it executes on the caller's thread).
+        let caller = std::thread::current().id();
+        let out = pool.map(&[7], |_, &x| {
+            assert_eq!(std::thread::current().id(), caller);
+            x * 2
+        });
+        assert_eq!(out, vec![14]);
+    }
+
+    #[test]
+    fn tiny_inputs_are_thread_count_invariant() {
+        // Regression pin for the idle-worker fix: results over tiny inputs
+        // are bit-identical for every thread count, including counts far
+        // above the item count.
+        for items in [vec![3.5f64], vec![1.25, 2.5], vec![0.1, 0.2, 0.3]] {
+            let expect: Vec<f64> = items.iter().map(|x| (x * 1.7).sin()).collect();
+            for threads in [1, 2, 3, 8, 64, 1024] {
+                let got = ExecPool::new(threads).map(&items, |_, x| (x * 1.7).sin());
+                assert_eq!(got.len(), expect.len());
+                for (g, e) in got.iter().zip(&expect) {
+                    assert_eq!(g.to_bits(), e.to_bits(), "threads={threads}");
+                }
+            }
+        }
     }
 }

@@ -31,6 +31,14 @@
 //!   more bundles, memoizes the lowered plan per graph fingerprint, and
 //!   serves `PredictRequest`s — single or batched across threads — at NAS
 //!   search rate without retraining.
+//! - **Search (`search`)**: the latency-constrained evolutionary NAS
+//!   search that drives the serving stack at scale — genomes over the
+//!   Section 4.3.2 block space realized via `nas::SynthArch::rebuild`
+//!   (divisibility repaired in context), whole generations scored with one
+//!   `predict_batch` per scenario (elite survivors hit the fingerprint-
+//!   keyed plan cache), per-scenario Pareto fronts (predicted latency vs.
+//!   accuracy proxy) and a cross-device Spearman summary. Deterministic in
+//!   the seed and thread-count-invariant; `edgelat search` is the CLI.
 //! - **Concurrency substrate (`exec_pool`)**: the shared worker-pool
 //!   subsystem behind every hot fan-out — a scoped pool with a chunked
 //!   atomic work queue, ordered result collection, and per-item error
@@ -51,6 +59,7 @@
 //! the serving engine covers the three native methods.
 
 pub mod bench;
+pub mod cli;
 pub mod device;
 pub mod engine;
 pub mod exec_pool;
@@ -64,6 +73,7 @@ pub mod profiler;
 pub mod report;
 pub mod runtime;
 pub mod scenario;
+pub mod search;
 pub mod tflite;
 pub mod util;
 pub mod zoo;

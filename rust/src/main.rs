@@ -7,18 +7,22 @@
 //!   train       train a predictor once and serialize it as a bundle
 //!   evaluate    train (or load) + evaluate a predictor for a scenario
 //!   predict     end-to-end latency prediction for a model file
+//!   search      latency-constrained NAS search served by the engine
 //!   bench       time the pipeline hot paths, write BENCH_pipeline.json
 //!   list        list scenarios / zoo models
 //!
-//! Arg parsing is hand-rolled: the offline crate set has no clap.
+//! Flag parsing lives in `edgelat::cli` (hand-rolled — the offline crate
+//! set has no clap) so every parser is unit-tested; this binary only maps
+//! parse errors to `exit(2)`.
 
+use edgelat::cli;
 use edgelat::engine::{EngineBuilder, PredictRequest, PredictorBundle};
 use edgelat::framework::{evaluate, DeductionMode, ScenarioPredictor};
 use edgelat::graph::modelfile;
 use edgelat::predict::Method;
 use edgelat::profiler::{profile, profile_set};
 use edgelat::report::{all_ids, reproduce, ReportConfig, ReportCtx};
-use edgelat::scenario::{all_scenarios, by_id, Scenario};
+use edgelat::scenario::{all_scenarios, Scenario};
 use edgelat::util::table::ms;
 
 fn main() {
@@ -32,6 +36,7 @@ fn main() {
         "train" => cmd_train(rest),
         "evaluate" => cmd_evaluate(rest),
         "predict" => cmd_predict(rest),
+        "search" => cmd_search(rest),
         "bench" => cmd_bench(rest),
         "list" => cmd_list(rest),
         "help" | "--help" | "-h" => usage(),
@@ -57,75 +62,35 @@ USAGE:
                     [--train N] [--test {{synth|zoo}}] [--seed S] [--out BUNDLE.json]
   edgelat predict   --model-file PATH [--bundle BUNDLE.json | --scenario ID [--method M]
                     [--train N] [--seed S] [--out BUNDLE.json]]
+  edgelat search    --scenario ID[,ID...] [--budget MS] [--seed S] [--method M]
+                    [--population P] [--generations G] [--train N] [--runs R]
+                    [--threads N] [--quick] [--out FRONT.json]
   edgelat bench     [--quick] [--threads N] [--out BENCH_pipeline.json]
   edgelat list      {{scenarios|models|figures}}
 
 The train-once/serve workflow: `train` profiles synthetic NAs once and writes
 a serialized predictor bundle; `predict --bundle` / `evaluate --bundle` then
-serve from it without re-profiling or retraining.
+serve from it without re-profiling or retraining. `search` runs the paper's
+motivating workload end to end: an evolutionary latency-constrained NAS
+search scored entirely by the serving engine (per-scenario Pareto fronts of
+predicted latency vs. accuracy proxy, byte-reproducible for a fixed seed).
 
 Figures/tables: {}",
         all_ids().join(" ")
     );
 }
 
-fn flag(rest: &[String], name: &str) -> Option<String> {
-    rest.iter().position(|a| a == name).and_then(|i| rest.get(i + 1).cloned())
-}
-
-fn has(rest: &[String], name: &str) -> bool {
-    rest.iter().any(|a| a == name)
-}
-
-fn parse_method(s: &str) -> Method {
-    Method::parse(s).unwrap_or_else(|| {
-        eprintln!("unknown method '{s}' (lasso|rf|gbdt|mlp)");
-        std::process::exit(2);
-    })
-}
-
-// Shared flag parsers: every subcommand that trains reads the same seed /
-// training-set-size / repetition defaults, so `predict` and `evaluate`
-// cannot drift apart again.
-const DEFAULT_SEED: u64 = 2022;
-const DEFAULT_TRAIN: usize = 120;
-const DEFAULT_RUNS: usize = 5;
-
-fn seed_flag(rest: &[String]) -> u64 {
-    flag(rest, "--seed").map(|s| s.parse().expect("--seed u64")).unwrap_or(DEFAULT_SEED)
-}
-
-fn train_flag(rest: &[String]) -> usize {
-    flag(rest, "--train").map(|s| s.parse().expect("--train N")).unwrap_or(DEFAULT_TRAIN)
-}
-
-fn runs_flag(rest: &[String]) -> usize {
-    flag(rest, "--runs").map(|s| s.parse().expect("--runs R")).unwrap_or(DEFAULT_RUNS)
-}
-
-fn mode_flag(rest: &[String]) -> DeductionMode {
-    match flag(rest, "--mode") {
-        None => DeductionMode::Full,
-        Some(s) => DeductionMode::parse(&s).unwrap_or_else(|| {
-            eprintln!("unknown mode '{s}' (full|nofusion|noselection)");
-            std::process::exit(2);
-        }),
-    }
-}
-
-fn scenario_flag(rest: &[String]) -> Scenario {
-    let sc_id = flag(rest, "--scenario").unwrap_or_else(|| {
-        eprintln!("need --scenario ID (see `edgelat list scenarios`)");
-        std::process::exit(2);
-    });
-    by_id(&sc_id).unwrap_or_else(|| {
-        eprintln!("unknown scenario '{sc_id}' (see `edgelat list scenarios`)");
+/// Map a flag-parse error to the CLI exit contract (message + exit 2).
+fn or_die<T>(r: Result<T, String>) -> T {
+    r.unwrap_or_else(|e| {
+        eprintln!("{e}");
         std::process::exit(2);
     })
 }
 
 /// Profile `n` synthetic NAS architectures and train a scenario predictor —
-/// the shared one-time training path behind `train`, `evaluate`, `predict`.
+/// the shared one-time training path behind `train`, `evaluate`, `predict`,
+/// `search`.
 fn train_predictor(
     sc: &Scenario,
     method: Method,
@@ -144,7 +109,7 @@ fn train_predictor(
 /// request, so failing to produce the bundle is a hard error (exit 2),
 /// consistent with `edgelat train`.
 fn maybe_save_bundle(rest: &[String], pred: &ScenarioPredictor) {
-    let Some(out) = flag(rest, "--out") else { return };
+    let Some(out) = or_die(cli::flag(rest, "--out")) else { return };
     let b = PredictorBundle::from_predictor(pred).unwrap_or_else(|e| {
         eprintln!("cannot save bundle {out}: {e}");
         std::process::exit(2);
@@ -157,16 +122,14 @@ fn maybe_save_bundle(rest: &[String], pred: &ScenarioPredictor) {
 }
 
 fn report_config(rest: &[String]) -> ReportConfig {
-    let mut cfg = if has(rest, "--full") {
+    let mut cfg = if cli::has(rest, "--full") {
         ReportConfig::full()
-    } else if has(rest, "--smoke") {
+    } else if cli::has(rest, "--smoke") {
         ReportConfig::smoke()
     } else {
         ReportConfig::default()
     };
-    if let Some(s) = flag(rest, "--seed") {
-        cfg.seed = s.parse().expect("--seed u64");
-    }
+    cfg.seed = or_die(cli::u64_flag(rest, "--seed", cfg.seed));
     let dir = edgelat::runtime::Runtime::default_dir();
     if edgelat::runtime::Runtime::artifacts_available(&dir) {
         cfg.artifacts = Some(dir);
@@ -176,10 +139,12 @@ fn report_config(rest: &[String]) -> ReportConfig {
 
 fn cmd_reproduce(rest: &[String]) {
     let cfg = report_config(rest);
-    let csv_dir = flag(rest, "--csv");
-    let ids: Vec<String> = if has(rest, "--all") {
+    let csv_dir = or_die(cli::flag(rest, "--csv"));
+    let ids: Vec<String> = if cli::has(rest, "--all") {
         all_ids().iter().map(|s| s.to_string()).collect()
-    } else if let Some(f) = flag(rest, "--figure").or_else(|| flag(rest, "--table")) {
+    } else if let Some(f) =
+        or_die(cli::flag(rest, "--figure")).or_else(|| or_die(cli::flag(rest, "--table")))
+    {
         vec![f]
     } else {
         eprintln!("need --figure ID or --all");
@@ -208,10 +173,10 @@ fn cmd_reproduce(rest: &[String]) {
 }
 
 fn cmd_generate(rest: &[String]) {
-    let out = flag(rest, "--out").unwrap_or_else(|| "models".into());
+    let out = or_die(cli::flag(rest, "--out")).unwrap_or_else(|| "models".into());
     std::fs::create_dir_all(&out).expect("mkdir out");
-    let seed = seed_flag(rest);
-    let graphs = if let Some(n) = flag(rest, "--synth") {
+    let seed = or_die(cli::seed_flag(rest));
+    let graphs = if let Some(n) = or_die(cli::flag(rest, "--synth")) {
         edgelat::nas::sample_dataset(seed, n.parse().expect("--synth N"))
             .into_iter()
             .map(|a| a.graph)
@@ -227,9 +192,12 @@ fn cmd_generate(rest: &[String]) {
 }
 
 fn cmd_profile(rest: &[String]) {
-    let name = flag(rest, "--model").expect("--model NAME");
-    let runs: usize = flag(rest, "--runs").map(|s| s.parse().unwrap()).unwrap_or(10);
-    let seed = seed_flag(rest);
+    let name = or_die(cli::flag(rest, "--model")).unwrap_or_else(|| {
+        eprintln!("need --model NAME");
+        std::process::exit(2);
+    });
+    let runs = or_die(cli::usize_flag(rest, "--runs", 10));
+    let seed = or_die(cli::seed_flag(rest));
     let g = edgelat::zoo::by_name(&name)
         .or_else(|| {
             std::fs::read_to_string(&name).ok().and_then(|s| modelfile::from_model_file(&s).ok())
@@ -238,7 +206,7 @@ fn cmd_profile(rest: &[String]) {
             eprintln!("model '{name}' not in zoo and not a readable model file");
             std::process::exit(2);
         });
-    let sc = scenario_flag(rest);
+    let sc = or_die(cli::scenario_flag(rest));
     let p = profile(&sc, &g, seed, runs);
     println!("model: {}  scenario: {}  runs: {runs}", p.model, sc.id);
     println!(
@@ -257,18 +225,22 @@ fn cmd_profile(rest: &[String]) {
 }
 
 fn cmd_train(rest: &[String]) {
-    let sc = scenario_flag(rest);
-    let out = flag(rest, "--out").unwrap_or_else(|| {
+    let sc = or_die(cli::scenario_flag(rest));
+    let out = or_die(cli::flag(rest, "--out")).unwrap_or_else(|| {
         eprintln!("need --out BUNDLE.json");
         std::process::exit(2);
     });
-    let method = parse_method(&flag(rest, "--method").unwrap_or_else(|| "gbdt".into()));
+    let method = or_die(cli::method_flag(rest, Method::Gbdt));
     if method == Method::Mlp {
         eprintln!("bundles hold the native methods (lasso|rf|gbdt); the MLP stays engine-external");
         std::process::exit(2);
     }
-    let (n_train, seed, runs) = (train_flag(rest), seed_flag(rest), runs_flag(rest));
-    let mode = mode_flag(rest);
+    let (n_train, seed, runs) = (
+        or_die(cli::train_flag(rest)),
+        or_die(cli::seed_flag(rest)),
+        or_die(cli::runs_flag(rest)),
+    );
+    let mode = or_die(cli::mode_flag(rest));
     let t0 = std::time::Instant::now();
     let pred = train_predictor(&sc, method, mode, n_train, seed, runs);
     let bundle = PredictorBundle::from_predictor(&pred).unwrap_or_else(|e| {
@@ -298,19 +270,27 @@ fn cmd_train(rest: &[String]) {
 }
 
 fn cmd_evaluate(rest: &[String]) {
-    let sc = scenario_flag(rest);
-    let test = flag(rest, "--test").unwrap_or_else(|| "synth".into());
-    let (n_train, seed, runs) = (train_flag(rest), seed_flag(rest), runs_flag(rest));
-    let bundle_path = flag(rest, "--bundle");
+    let sc = or_die(cli::scenario_flag(rest));
+    let test = or_die(cli::flag(rest, "--test")).unwrap_or_else(|| "synth".into());
+    let (n_train, seed, runs) = (
+        or_die(cli::train_flag(rest)),
+        or_die(cli::seed_flag(rest)),
+        or_die(cli::runs_flag(rest)),
+    );
+    let bundle_path = or_die(cli::flag(rest, "--bundle"));
     let train_g: Vec<_> = edgelat::nas::sample_dataset(seed, n_train + 40)
         .into_iter()
         .map(|a| a.graph)
         .collect();
     let (tr_g, te_synth) = train_g.split_at(n_train);
-    let method = parse_method(&flag(rest, "--method").unwrap_or_else(|| "gbdt".into()));
+    let requested_method = or_die(cli::method_flag_opt(rest));
+    let method = requested_method.unwrap_or(Method::Gbdt);
     // Fail before the minutes of profiling/training, not after: an MLP
     // predictor can never satisfy a requested --out bundle.
-    if method == Method::Mlp && bundle_path.is_none() && flag(rest, "--out").is_some() {
+    if method == Method::Mlp
+        && bundle_path.is_none()
+        && or_die(cli::flag(rest, "--out")).is_some()
+    {
         eprintln!("--out: bundles hold the native methods (lasso|rf|gbdt); the MLP is not serializable");
         std::process::exit(2);
     }
@@ -333,7 +313,7 @@ fn cmd_evaluate(rest: &[String]) {
             std::process::exit(2);
         }
         // --method must not silently disagree with what the bundle holds.
-        if flag(rest, "--method").is_some() && method != b.method {
+        if requested_method.is_some() && method != b.method {
             eprintln!(
                 "bundle {bp} holds {} models but --method {} was requested; drop --method or retrain",
                 b.method.name(),
@@ -395,11 +375,14 @@ fn cmd_evaluate(rest: &[String]) {
 }
 
 fn cmd_predict(rest: &[String]) {
-    let path = flag(rest, "--model-file").expect("--model-file PATH");
+    let path = or_die(cli::flag(rest, "--model-file")).unwrap_or_else(|| {
+        eprintln!("need --model-file PATH");
+        std::process::exit(2);
+    });
     let s = std::fs::read_to_string(&path).expect("reading model file");
     let g = modelfile::from_model_file(&s).expect("parsing model file");
 
-    if let Some(bp) = flag(rest, "--bundle") {
+    if let Some(bp) = or_die(cli::flag(rest, "--bundle")) {
         // Serving path: load the trained predictor, no re-profiling or
         // retraining on this invocation.
         let bundle = PredictorBundle::load(&bp).unwrap_or_else(|e| {
@@ -408,7 +391,7 @@ fn cmd_predict(rest: &[String]) {
         });
         // --out is an explicit request even here: re-save the loaded
         // bundle (a validated copy) rather than silently ignoring it.
-        if let Some(out) = flag(rest, "--out") {
+        if let Some(out) = or_die(cli::flag(rest, "--out")) {
             bundle.save(&out).unwrap_or_else(|e| {
                 eprintln!("writing bundle {out}: {e}");
                 std::process::exit(2);
@@ -422,11 +405,11 @@ fn cmd_predict(rest: &[String]) {
         // Default to the bundle's own scenario; --scenario can override
         // (useful once multiple bundles are loaded). An explicit --method
         // is enforced by the engine rather than silently ignored.
-        let sc_id = flag(rest, "--scenario")
+        let sc_id = or_die(cli::flag(rest, "--scenario"))
             .unwrap_or_else(|| engine.scenario_ids()[0].to_string());
         let mut req = PredictRequest::new(&g, sc_id.clone());
-        if let Some(m) = flag(rest, "--method") {
-            req = req.with_method(parse_method(&m));
+        if let Some(m) = or_die(cli::method_flag_opt(rest)) {
+            req = req.with_method(m);
         }
         let resp = engine.predict(&req).unwrap_or_else(|e| {
             eprintln!("{e}");
@@ -451,9 +434,13 @@ fn cmd_predict(rest: &[String]) {
     }
 
     // Train-in-place path (one-off): same shared flags as `evaluate`.
-    let sc = scenario_flag(rest);
-    let method = parse_method(&flag(rest, "--method").unwrap_or_else(|| "gbdt".into()));
-    let (n_train, seed, runs) = (train_flag(rest), seed_flag(rest), runs_flag(rest));
+    let sc = or_die(cli::scenario_flag(rest));
+    let method = or_die(cli::method_flag(rest, Method::Gbdt));
+    let (n_train, seed, runs) = (
+        or_die(cli::train_flag(rest)),
+        or_die(cli::seed_flag(rest)),
+        or_die(cli::runs_flag(rest)),
+    );
     let pred = train_predictor(&sc, method, DeductionMode::Full, n_train, seed, runs);
     let e = pred.predict(&g);
     println!("{}: predicted end-to-end latency on {} = {} ms", g.name, sc.id, ms(e));
@@ -463,16 +450,134 @@ fn cmd_predict(rest: &[String]) {
     maybe_save_bundle(rest, &pred);
 }
 
+fn cmd_search(rest: &[String]) {
+    let scenarios = or_die(cli::scenario_list_flag(rest));
+    let method = or_die(cli::method_flag(rest, Method::Gbdt));
+    if method == Method::Mlp {
+        eprintln!("search serves from engine bundles (lasso|rf|gbdt); the MLP is engine-external");
+        std::process::exit(2);
+    }
+    let quick = cli::has(rest, "--quick");
+    let mut cfg = if quick {
+        edgelat::search::SearchConfig::quick()
+    } else {
+        edgelat::search::SearchConfig::full()
+    };
+    cfg.seed = or_die(cli::seed_flag(rest));
+    // Bad sizes are rejected, not clamped — same contract as --train/--runs.
+    cfg.population = or_die(cli::usize_flag(rest, "--population", cfg.population));
+    if cfg.population < 2 {
+        eprintln!("--population needs at least 2 candidates");
+        std::process::exit(2);
+    }
+    cfg.generations = or_die(cli::usize_flag(rest, "--generations", cfg.generations));
+    if cfg.generations == 0 {
+        eprintln!("--generations needs at least 1 generation");
+        std::process::exit(2);
+    }
+    cfg.budget_ms = or_die(cli::positive_f64_flag(rest, "--budget"));
+    let n_train = or_die(cli::usize_flag(rest, "--train", if quick { 16 } else { 40 })).max(1);
+    let runs = or_die(cli::usize_flag(rest, "--runs", if quick { 2 } else { 3 })).max(1);
+    let threads = or_die(cli::threads_flag(rest));
+    let out_path = or_die(cli::flag(rest, "--out"));
+    let mode = or_die(cli::mode_flag(rest));
+
+    // One-time profiling + training per scenario, frozen into bundles and
+    // loaded into a single multi-scenario engine.
+    let t0 = std::time::Instant::now();
+    let mut builder = EngineBuilder::new();
+    for sc in &scenarios {
+        let pred = train_predictor(sc, method, mode, n_train, cfg.seed, runs);
+        let bundle = PredictorBundle::from_predictor(&pred).unwrap_or_else(|e| {
+            eprintln!("{e}");
+            std::process::exit(2);
+        });
+        builder = builder.bundle(bundle);
+    }
+    if let Some(t) = threads {
+        builder = builder.threads(t);
+    }
+    let engine = builder.build().unwrap_or_else(|e| {
+        eprintln!("{e}");
+        std::process::exit(2);
+    });
+    let train_s = t0.elapsed().as_secs_f64();
+
+    let ids: Vec<String> = scenarios.iter().map(|s| s.id.clone()).collect();
+    let t1 = std::time::Instant::now();
+    let outcome = edgelat::search::run(&engine, &ids, &cfg).unwrap_or_else(|e| {
+        eprintln!("{e}");
+        std::process::exit(2);
+    });
+    let search_s = t1.elapsed().as_secs_f64();
+
+    println!(
+        "search: {} candidate evaluations over {} scenario(s), population {}, {} generations{}",
+        outcome.candidates_evaluated,
+        ids.len(),
+        cfg.population,
+        cfg.generations,
+        match cfg.budget_ms {
+            Some(b) => format!(", budget {b} ms"),
+            None => ", unconstrained".into(),
+        }
+    );
+    for s in &outcome.scenarios {
+        println!(
+            "\n[{}] front {} pts, {}/{} feasible evaluations",
+            s.scenario_id,
+            s.front.len(),
+            s.feasible,
+            s.evaluated
+        );
+        for p in s.front.iter().take(10) {
+            println!(
+                "  {:<12} {:>10} ms  proxy {:>7.2}  flops {:>13}",
+                p.name,
+                ms(p.latency_ms),
+                p.proxy,
+                p.flops
+            );
+        }
+        if s.front.len() > 10 {
+            println!("  ... ({} more points)", s.front.len() - 10);
+        }
+    }
+    if !outcome.rank_correlation.is_empty() {
+        println!("\ncross-device rank correlation (Spearman over the shared gen-0 population):");
+        for (a, b, r) in &outcome.rank_correlation {
+            println!("  {a:<32} vs {b:<32} rho {r:.3}");
+        }
+    }
+    let st = engine.cache_stats();
+    let hit_rate = st.hits as f64 / (st.hits + st.misses).max(1) as f64;
+    eprintln!(
+        "trained {} bundle(s) in {train_s:.1}s; searched in {search_s:.1}s \
+         ({:.0} candidates/s, plan-cache hit rate {:.0}%)",
+        ids.len(),
+        outcome.candidates_evaluated as f64 / search_s.max(1e-9),
+        hit_rate * 100.0
+    );
+    if let Some(out) = out_path {
+        let doc = edgelat::search::report_json(&cfg, &outcome);
+        std::fs::write(&out, doc.to_string()).unwrap_or_else(|e| {
+            eprintln!("writing {out}: {e}");
+            std::process::exit(2);
+        });
+        println!("\nwrote {out}");
+    }
+}
+
 fn cmd_bench(rest: &[String]) {
-    let mut cfg = if has(rest, "--quick") {
+    let mut cfg = if cli::has(rest, "--quick") {
         edgelat::bench::BenchConfig::quick()
     } else {
         edgelat::bench::BenchConfig::full()
     };
-    if let Some(t) = flag(rest, "--threads") {
-        cfg.threads = t.parse().expect("--threads N");
+    if let Some(t) = or_die(cli::threads_flag(rest)) {
+        cfg.threads = t;
     }
-    let out = flag(rest, "--out").unwrap_or_else(|| "BENCH_pipeline.json".into());
+    let out = or_die(cli::flag(rest, "--out")).unwrap_or_else(|| "BENCH_pipeline.json".into());
     let t0 = std::time::Instant::now();
     println!("== edgelat bench ({}, {} threads) ==", cfg.label, cfg.threads);
     let doc = edgelat::bench::run(&cfg);
@@ -497,6 +602,12 @@ fn cmd_bench(rest: &[String]) {
         println!(
             "plan lowering throughput:                     {:.0} graphs/s",
             lowering.req_f64("graphs_per_s").unwrap_or(f64::NAN)
+        );
+    }
+    if let Ok(search) = derived.req("search") {
+        println!(
+            "NAS search throughput:                        {:.0} candidates/s",
+            search.req_f64("candidates_per_s").unwrap_or(f64::NAN)
         );
     }
     println!("wrote {out} in {:.1}s", t0.elapsed().as_secs_f64());

@@ -40,12 +40,26 @@ pub struct SynthArch {
 /// Unary element-wise ops that are numerically safe on activations.
 const BRANCH_EW: [EwKind; 4] = [EwKind::Abs, EwKind::Neg, EwKind::Square, EwKind::Copy];
 
-fn sample_channels(rng: &mut Rng, i: usize) -> usize {
+/// The element-wise kinds a split branch may apply — exported so the
+/// search mutation operators draw from the same set as the sampler.
+pub fn branch_ew_kinds() -> &'static [EwKind] {
+    &BRANCH_EW
+}
+
+/// Output-channel sampling range for block position `i` (0-based; 9 means
+/// the head conv). The marginals of Section 4.3.2, shared with the search
+/// mutation operators so mutated channels stay inside the space.
+pub fn channel_range(i: usize) -> (usize, usize) {
     match i {
-        0..=4 => rng.range_usize(8, 80),
-        5..=8 => rng.range_usize(80, 400),
-        _ => rng.range_usize(1200, 1800),
+        0..=4 => (8, 80),
+        5..=8 => (80, 400),
+        _ => (1200, 1800),
     }
+}
+
+fn sample_channels(rng: &mut Rng, i: usize) -> usize {
+    let (lo, hi) = channel_range(i);
+    rng.range_usize(lo, hi)
 }
 
 /// Largest group count of the form 4k (k<=16) dividing both channel counts,
@@ -158,6 +172,65 @@ fn apply_block(b: &mut GraphBuilder, t: TensorId, spec: &BlockSpec, halve: bool)
                 t
             }
         }
+    }
+}
+
+/// Deterministically repair a block spec so it satisfies the space's
+/// divisibility constraints for the given input channel count. The repair
+/// rules mirror [`sample_block`]: grouped convolutions round `out_c` up to
+/// a multiple of 4 and fit the group count with [`fit_groups`]; splits fit
+/// the way count with [`fit_split`] and degrade to 1x1 average pooling
+/// when the channels do not divide. Specs that already satisfy the
+/// constraints come back unchanged, so rebuilding a sampled architecture
+/// reproduces it exactly (asserted in tests).
+pub fn repair_block(spec: &BlockSpec, in_c: usize) -> BlockSpec {
+    match spec {
+        BlockSpec::Conv { k, groups, out_c } if *groups > 1 => {
+            let out_c4 = out_c.div_ceil(4) * 4;
+            let g = fit_groups(*groups, in_c, out_c4);
+            if g > 1 {
+                BlockSpec::Conv { k: *k, groups: g, out_c: out_c4 }
+            } else {
+                BlockSpec::Conv { k: *k, groups: 1, out_c: *out_c }
+            }
+        }
+        BlockSpec::SplitEwConcat { ways, ew } => {
+            let w = fit_split(*ways, in_c);
+            if w < 2 {
+                BlockSpec::Pool { avg: true, k: 1 }
+            } else {
+                BlockSpec::SplitEwConcat { ways: w, ew: *ew }
+            }
+        }
+        other => other.clone(),
+    }
+}
+
+impl SynthArch {
+    /// Build a synthetic architecture from an explicit spec sequence — the
+    /// spec→graph path the latency-constrained search (`crate::search`)
+    /// uses to realize mutated/crossed-over candidates. Each block is
+    /// repaired against the actual input channel count at its position
+    /// (mutations upstream can break a downstream block's divisibility),
+    /// and the repaired specs are what the returned arch records, so
+    /// `rebuild(rebuild(..).blocks)` is a fixpoint. `head_c` is clamped to
+    /// the space's U[1200, 1800] head range.
+    pub fn rebuild(index: usize, blocks: &[BlockSpec], head_c: usize) -> SynthArch {
+        assert_eq!(blocks.len(), 9, "a synthetic architecture has 9 blocks");
+        let head_c = head_c.clamp(1200, 1800);
+        let mut b = GraphBuilder::new(&format!("synth_{index:04}"), 224, 224, 3);
+        let mut t = b.input_tensor();
+        let mut repaired = Vec::with_capacity(9);
+        for (i, spec) in blocks.iter().enumerate() {
+            let in_c = b.shape(t).c;
+            let spec = repair_block(spec, in_c);
+            t = apply_block(&mut b, t, &spec, i % 2 == 0);
+            repaired.push(spec);
+        }
+        t = b.conv(t, head_c, 1, 1, Padding::Same);
+        t = b.relu(t);
+        let out = b.head(t, 1000);
+        SynthArch { index, blocks: repaired, head_c, graph: b.finish(vec![out]) }
     }
 }
 
@@ -275,6 +348,47 @@ mod tests {
         // Uniform channel sampling makes 4k-divisibility fairly rare — the
         // space still yields a steady supply of grouped configurations.
         assert!(grouped > 25, "expected many grouped convs, got {grouped}");
+    }
+
+    #[test]
+    fn rebuild_reproduces_sampled_architectures() {
+        // The spec→graph path must be a faithful inverse of the sampler:
+        // rebuilding a sampled arch from its recorded specs yields the
+        // same specs (repair is identity on valid specs) and same graph.
+        for arch in sample_dataset(29, 60) {
+            let r = SynthArch::rebuild(arch.index, &arch.blocks, arch.head_c);
+            assert_eq!(r.blocks, arch.blocks, "synth_{:04}", arch.index);
+            assert_eq!(r.head_c, arch.head_c);
+            assert_eq!(r.graph, arch.graph, "synth_{:04}", arch.index);
+        }
+    }
+
+    #[test]
+    fn rebuild_repairs_invalid_specs() {
+        // Force constraint violations: a grouped conv whose groups cannot
+        // divide the incoming 3 channels, and a split over them.
+        let blocks = vec![
+            BlockSpec::SplitEwConcat { ways: 4, ew: EwKind::Abs }, // in_c=3: degrade
+            BlockSpec::Conv { k: 3, groups: 8, out_c: 30 },
+            BlockSpec::Conv { k: 5, groups: 1, out_c: 33 },
+            BlockSpec::SplitEwConcat { ways: 3, ew: EwKind::Neg }, // 33 % 3 == 0: keep
+            BlockSpec::Pool { avg: false, k: 3 },
+            BlockSpec::Bottleneck { k: 5, expand: 3, se: true, out_c: 100 },
+            BlockSpec::DwSeparable { k: 7, out_c: 200 },
+            BlockSpec::Conv { k: 3, groups: 4, out_c: 300 }, // 200%4==0, 300→300
+            BlockSpec::Pool { avg: true, k: 1 },
+        ];
+        let arch = SynthArch::rebuild(7, &blocks, 5000);
+        arch.graph.validate().unwrap();
+        assert_eq!(arch.head_c, 1800, "head clamped into range");
+        // Block 0 degraded to pooling (3 channels split 4 ways impossible).
+        assert_eq!(arch.blocks[0], BlockSpec::Pool { avg: true, k: 1 });
+        // Block 3 kept its 3-way split (33 divisible by 3).
+        assert!(matches!(arch.blocks[3], BlockSpec::SplitEwConcat { ways: 3, .. }));
+        // Rebuild over repaired specs is a fixpoint.
+        let again = SynthArch::rebuild(7, &arch.blocks, arch.head_c);
+        assert_eq!(again.blocks, arch.blocks);
+        assert_eq!(again.graph, arch.graph);
     }
 
     #[test]

@@ -1,0 +1,455 @@
+//! Latency-constrained evolutionary search over the synthetic NAS space —
+//! the predictor-in-the-loop workload the paper's framework exists for
+//! (Section 1: evaluate huge candidate sets without measuring each one).
+//!
+//! The repo could *sample* the Section 4.3.2 space (`nas::sample_dataset`)
+//! but never *search* it; this module closes the loop on top of the
+//! serving stack:
+//!
+//! - Candidates are genomes (`Vec<BlockSpec>` + head width) realized
+//!   through `nas::SynthArch::rebuild`, which repairs the space's
+//!   divisibility constraints in context — variation operators
+//!   ([`ops`]) never produce an invalid graph.
+//! - Every generation is scored with **one** `LatencyEngine::predict_batch`
+//!   call over the `ExecPool`; plans are memoized by graph fingerprint in
+//!   the engine's sharded cache, so elite survivors re-scored in later
+//!   generations are cache hits, not re-lowerings.
+//! - Selection is (μ+λ)-style with tournament parents: feasible
+//!   candidates (predicted latency within budget) rank by accuracy proxy,
+//!   infeasible ones rank by latency (pressure toward feasibility).
+//! - Multi-scenario mode evolves one population per scenario and reports
+//!   a per-scenario Pareto front (latency vs. proxy) over everything
+//!   evaluated, plus a cross-device Spearman summary over the shared
+//!   generation-0 population — the "one proxy device" question of
+//!   PAPERS.md, answered from our own predictors.
+//!
+//! Everything is deterministic in `SearchConfig::seed`: the engine's
+//! batch results are thread-count-invariant, the PRNG streams derive from
+//! the seed, and all orderings carry total tie-breakers — `edgelat
+//! search` output is byte-reproducible (asserted in `tests/search.rs`).
+
+pub mod ops;
+pub mod pareto;
+
+pub use ops::accuracy_proxy;
+pub use pareto::{dominates, pareto_front, FrontPoint};
+
+use crate::engine::{EngineError, LatencyEngine, PredictRequest};
+use crate::nas::{BlockSpec, SynthArch};
+use crate::util::{spearman, Json, Rng};
+
+/// Knobs of one search run. All sizes are clamped to sane minima by
+/// [`run`]; determinism depends only on the field values.
+#[derive(Debug, Clone)]
+pub struct SearchConfig {
+    pub seed: u64,
+    /// Candidates per generation (≥ 2).
+    pub population: usize,
+    /// Generations including the sampled generation 0 (≥ 1).
+    pub generations: usize,
+    /// Latency constraint in ms; `None` searches unconstrained.
+    pub budget_ms: Option<f64>,
+    /// Top-ranked survivors copied unchanged into the next generation.
+    pub elite: usize,
+    /// Tournament size for parent selection.
+    pub tournament: usize,
+    /// Per-block (and head-width) mutation probability.
+    pub mutation_rate: f64,
+    /// Probability an offspring is a two-parent crossover.
+    pub crossover_rate: f64,
+}
+
+impl SearchConfig {
+    /// Smoke scale: completes in seconds on a warm engine.
+    pub fn quick() -> SearchConfig {
+        SearchConfig {
+            seed: 2022,
+            population: 12,
+            generations: 3,
+            budget_ms: None,
+            elite: 2,
+            tournament: 3,
+            mutation_rate: 0.3,
+            crossover_rate: 0.5,
+        }
+    }
+
+    /// Default scale for a real search.
+    pub fn full() -> SearchConfig {
+        SearchConfig { population: 32, generations: 8, elite: 4, ..SearchConfig::quick() }
+    }
+}
+
+/// One candidate scored on one scenario. Carries its genome so callers
+/// can rebuild the winning architectures (`SynthArch::rebuild`).
+#[derive(Debug, Clone)]
+pub struct Scored {
+    pub name: String,
+    pub blocks: Vec<BlockSpec>,
+    pub head_c: usize,
+    /// Engine-predicted end-to-end latency.
+    pub latency_ms: f64,
+    pub proxy: f64,
+    pub flops: u64,
+    pub params: u64,
+    pub fingerprint: u64,
+    /// Within the latency budget (always true when unconstrained).
+    pub feasible: bool,
+}
+
+impl Scored {
+    fn point(&self) -> FrontPoint {
+        FrontPoint {
+            name: self.name.clone(),
+            latency_ms: self.latency_ms,
+            proxy: self.proxy,
+            flops: self.flops,
+            params: self.params,
+            fingerprint: self.fingerprint,
+        }
+    }
+}
+
+/// The per-scenario outcome: the Pareto front over everything evaluated,
+/// plus the final population (best-first under the search ranking).
+#[derive(Debug, Clone)]
+pub struct ScenarioSearch {
+    pub scenario_id: String,
+    /// Non-dominated (latency ↑ is worse, proxy ↑ is better) subset of
+    /// every candidate evaluated for this scenario.
+    pub front: Vec<FrontPoint>,
+    /// Predictions served for this scenario (population × generations).
+    pub evaluated: usize,
+    /// Evaluations that satisfied the latency budget.
+    pub feasible: usize,
+    /// Final population, ranked best-first.
+    pub survivors: Vec<Scored>,
+}
+
+/// A whole run: per-scenario searches plus the cross-device summary.
+#[derive(Debug, Clone)]
+pub struct SearchOutcome {
+    pub scenarios: Vec<ScenarioSearch>,
+    /// Pairwise Spearman rank correlation of predicted latency over the
+    /// shared generation-0 population — how well one device's predictor
+    /// ranks candidates for another.
+    pub rank_correlation: Vec<(String, String, f64)>,
+    /// Total predictions served across scenarios and generations.
+    pub candidates_evaluated: usize,
+}
+
+#[derive(Clone)]
+struct Genome {
+    blocks: Vec<BlockSpec>,
+    head_c: usize,
+}
+
+/// Rank best-first: feasible before infeasible; feasible by proxy
+/// descending, infeasible by latency ascending; fingerprint then name as
+/// total tie-breakers so the order (hence the whole run) is deterministic.
+fn rank(pop: &mut [Scored]) {
+    pop.sort_by(|a, b| {
+        b.feasible
+            .cmp(&a.feasible)
+            .then_with(|| {
+                if a.feasible {
+                    b.proxy.total_cmp(&a.proxy)
+                } else {
+                    a.latency_ms.total_cmp(&b.latency_ms)
+                }
+            })
+            .then_with(|| a.fingerprint.cmp(&b.fingerprint))
+            .then_with(|| a.name.cmp(&b.name))
+    });
+}
+
+/// Tournament pick over a best-first-ranked population: the best (lowest
+/// index) of `k` uniform draws.
+fn tournament_pick(rng: &mut Rng, n: usize, k: usize) -> usize {
+    (0..k).map(|_| rng.range_usize(0, n - 1)).min().expect("k >= 1")
+}
+
+/// Stable FNV-1a label of a scenario id for RNG-stream derivation: the
+/// per-scenario stream depends on the scenario itself, never on its
+/// position in the request list, so adding a comparison device to a run
+/// cannot change an existing device's search trajectory.
+fn stream_label(id: &str) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for b in id.as_bytes() {
+        h ^= *b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+/// The one place an architecture plus an engine prediction becomes a
+/// [`Scored`] — generation 0 and every later generation go through it, so
+/// scoring semantics (feasibility rule, proxy, identity fields) cannot
+/// diverge between the two paths.
+fn to_scored(a: &SynthArch, latency_ms: f64, budget_ms: Option<f64>) -> Scored {
+    Scored {
+        name: a.graph.name.clone(),
+        blocks: a.blocks.clone(),
+        head_c: a.head_c,
+        latency_ms,
+        proxy: accuracy_proxy(&a.graph),
+        flops: a.graph.flops(),
+        params: a.graph.params(),
+        fingerprint: a.graph.fingerprint(),
+        feasible: budget_ms.map(|b| latency_ms <= b).unwrap_or(true),
+    }
+}
+
+/// Score one realized population on one scenario with a single
+/// `predict_batch` call. Fails on the first serving error (unknown
+/// scenario / method mismatch poisons the whole search, not one slot).
+fn score(
+    engine: &LatencyEngine,
+    scenario_id: &str,
+    archs: &[SynthArch],
+    budget_ms: Option<f64>,
+) -> Result<Vec<Scored>, EngineError> {
+    let reqs: Vec<PredictRequest> =
+        archs.iter().map(|a| PredictRequest::new(&a.graph, scenario_id)).collect();
+    let resps = engine.predict_batch(&reqs);
+    archs
+        .iter()
+        .zip(resps)
+        .map(|(a, r)| Ok(to_scored(a, r?.e2e_ms, budget_ms)))
+        .collect()
+}
+
+/// Run the search against a loaded engine for one or more of its
+/// scenarios. Generation 0 is sampled from the space (`nas::sample`, so
+/// the same seed draws the same initial population for every scenario —
+/// that shared set is what the rank-correlation summary compares); later
+/// generations are bred per scenario by elitism + tournament selection +
+/// crossover + mutation, realized through `SynthArch::rebuild`.
+pub fn run(
+    engine: &LatencyEngine,
+    scenario_ids: &[String],
+    cfg: &SearchConfig,
+) -> Result<SearchOutcome, EngineError> {
+    assert!(!scenario_ids.is_empty(), "search needs at least one scenario");
+    let pop_n = cfg.population.max(2);
+    let gens = cfg.generations.max(1);
+    let elite = cfg.elite.clamp(1, pop_n - 1);
+    let tour = cfg.tournament.max(1);
+
+    // Generation 0, shared across scenarios; scored for every scenario in
+    // one cross-scenario batch (pop × scenarios requests on the pool).
+    let init: Vec<SynthArch> = (0..pop_n).map(|i| crate::nas::sample(cfg.seed, i)).collect();
+    let mut gen0: Vec<Vec<Scored>> = Vec::with_capacity(scenario_ids.len());
+    {
+        let reqs: Vec<PredictRequest> = scenario_ids
+            .iter()
+            .flat_map(|sid| init.iter().map(move |a| PredictRequest::new(&a.graph, sid.clone())))
+            .collect();
+        let mut resps = engine.predict_batch(&reqs).into_iter();
+        for _sid in scenario_ids {
+            let mut scored = Vec::with_capacity(pop_n);
+            for a in &init {
+                let r = resps.next().expect("one response per request")?;
+                scored.push(to_scored(a, r.e2e_ms, cfg.budget_ms));
+            }
+            gen0.push(scored);
+        }
+    }
+
+    // Cross-device summary over the shared generation-0 latencies.
+    let mut rank_correlation = Vec::new();
+    for i in 0..scenario_ids.len() {
+        for j in (i + 1)..scenario_ids.len() {
+            let a: Vec<f64> = gen0[i].iter().map(|s| s.latency_ms).collect();
+            let b: Vec<f64> = gen0[j].iter().map(|s| s.latency_ms).collect();
+            rank_correlation.push((
+                scenario_ids[i].clone(),
+                scenario_ids[j].clone(),
+                spearman(&a, &b),
+            ));
+        }
+    }
+
+    let mut candidates_evaluated = pop_n * scenario_ids.len();
+    let mut scenarios = Vec::with_capacity(scenario_ids.len());
+    for (sid, first) in scenario_ids.iter().zip(gen0) {
+        // Each scenario evolves on its own id-derived stream, so its
+        // result is independent of how many sibling scenarios the call
+        // carries and of its position among them (asserted in
+        // `tests/search.rs`).
+        let mut rng = Rng::derive(cfg.seed, &[0x5ea7c4, stream_label(sid)]);
+        let mut archive: Vec<FrontPoint> = first.iter().map(Scored::point).collect();
+        let mut feasible = first.iter().filter(|s| s.feasible).count();
+        let mut evaluated = pop_n;
+        let mut pop = first;
+        rank(&mut pop);
+        // Per-scenario birth counter; generation 0 used ids 0..pop_n.
+        let mut next_id = pop_n;
+        for _gen in 1..gens {
+            let mut genomes: Vec<Genome> = pop[..elite]
+                .iter()
+                .map(|s| Genome { blocks: s.blocks.clone(), head_c: s.head_c })
+                .collect();
+            while genomes.len() < pop_n {
+                let pa = tournament_pick(&mut rng, pop_n, tour);
+                let (blocks, head_c) = if rng.bool(cfg.crossover_rate) {
+                    let pb = tournament_pick(&mut rng, pop_n, tour);
+                    ops::crossover(
+                        &mut rng,
+                        (&pop[pa].blocks, pop[pa].head_c),
+                        (&pop[pb].blocks, pop[pb].head_c),
+                    )
+                } else {
+                    (pop[pa].blocks.clone(), pop[pa].head_c)
+                };
+                let (blocks, head_c) = ops::mutate(&mut rng, &blocks, head_c, cfg.mutation_rate);
+                genomes.push(Genome { blocks, head_c });
+            }
+            // Realize and score the whole generation in one batch. Elites
+            // rebuild to structurally identical graphs (rebuild is a
+            // fixpoint on repaired specs), so their plans come out of the
+            // engine's fingerprint-keyed cache.
+            let archs: Vec<SynthArch> = genomes
+                .iter()
+                .map(|g| {
+                    let a = SynthArch::rebuild(next_id, &g.blocks, g.head_c);
+                    next_id += 1;
+                    a
+                })
+                .collect();
+            let scored = score(engine, sid, &archs, cfg.budget_ms)?;
+            evaluated += scored.len();
+            feasible += scored.iter().filter(|s| s.feasible).count();
+            archive.extend(scored.iter().map(Scored::point));
+            pop = scored;
+            rank(&mut pop);
+        }
+        scenarios.push(ScenarioSearch {
+            scenario_id: sid.clone(),
+            front: pareto_front(&archive),
+            evaluated,
+            feasible,
+            survivors: pop,
+        });
+        candidates_evaluated += evaluated - pop_n;
+    }
+
+    Ok(SearchOutcome { scenarios, rank_correlation, candidates_evaluated })
+}
+
+/// The `edgelat search` JSON artifact. Deterministic for a fixed config:
+/// object keys are sorted by the emitter, arrays follow input order, and
+/// no wall-clock values are included (timing goes to stderr, keeping the
+/// artifact byte-reproducible). Spearman of degenerate pairs (constant
+/// latencies) serializes as `null`.
+pub fn report_json(cfg: &SearchConfig, out: &SearchOutcome) -> Json {
+    let scenarios = out
+        .scenarios
+        .iter()
+        .map(|s| {
+            Json::obj(vec![
+                ("scenario", Json::str(s.scenario_id.clone())),
+                ("evaluated", Json::num(s.evaluated as f64)),
+                ("feasible", Json::num(s.feasible as f64)),
+                ("front", Json::Arr(s.front.iter().map(FrontPoint::to_json).collect())),
+            ])
+        })
+        .collect();
+    let corr = out
+        .rank_correlation
+        .iter()
+        .map(|(a, b, r)| {
+            Json::obj(vec![
+                ("a", Json::str(a.clone())),
+                ("b", Json::str(b.clone())),
+                ("spearman", if r.is_finite() { Json::Num(*r) } else { Json::Null }),
+            ])
+        })
+        .collect();
+    Json::obj(vec![
+        ("format", Json::str("edgelat.search")),
+        ("version", Json::num(1.0)),
+        ("seed", Json::num(cfg.seed as f64)),
+        ("population", Json::num(cfg.population as f64)),
+        ("generations", Json::num(cfg.generations as f64)),
+        ("budget_ms", cfg.budget_ms.map(Json::Num).unwrap_or(Json::Null)),
+        ("candidates_evaluated", Json::num(out.candidates_evaluated as f64)),
+        ("scenarios", Json::Arr(scenarios)),
+        ("rank_correlation", Json::Arr(corr)),
+    ])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn scored(name: &str, lat: f64, proxy: f64, feasible: bool, fp: u64) -> Scored {
+        Scored {
+            name: name.into(),
+            blocks: Vec::new(),
+            head_c: 1200,
+            latency_ms: lat,
+            proxy,
+            flops: 1,
+            params: 1,
+            fingerprint: fp,
+            feasible,
+        }
+    }
+
+    #[test]
+    fn ranking_prefers_feasible_then_proxy_then_latency() {
+        let mut pop = vec![
+            scored("slow_infeasible", 90.0, 9.0, false, 1),
+            scored("fast_infeasible", 70.0, 1.0, false, 2),
+            scored("weak_feasible", 10.0, 2.0, true, 3),
+            scored("strong_feasible", 20.0, 8.0, true, 4),
+        ];
+        rank(&mut pop);
+        let names: Vec<&str> = pop.iter().map(|s| s.name.as_str()).collect();
+        assert_eq!(
+            names,
+            ["strong_feasible", "weak_feasible", "fast_infeasible", "slow_infeasible"]
+        );
+    }
+
+    #[test]
+    fn ranking_breaks_exact_ties_deterministically() {
+        let mut a = vec![
+            scored("x", 10.0, 5.0, true, 2),
+            scored("y", 10.0, 5.0, true, 1),
+        ];
+        let mut b = a.clone();
+        b.reverse();
+        rank(&mut a);
+        rank(&mut b);
+        let na: Vec<&str> = a.iter().map(|s| s.name.as_str()).collect();
+        let nb: Vec<&str> = b.iter().map(|s| s.name.as_str()).collect();
+        assert_eq!(na, nb);
+        assert_eq!(na, ["y", "x"], "fingerprint breaks the tie");
+    }
+
+    #[test]
+    fn tournament_pick_is_best_of_k() {
+        let mut rng = Rng::new(7);
+        for _ in 0..200 {
+            let i = tournament_pick(&mut rng, 10, 3);
+            assert!(i < 10);
+        }
+        // k = n draws with a tiny population still terminate and stay in
+        // range; k=1 is a uniform pick.
+        let mut rng = Rng::new(8);
+        assert!(tournament_pick(&mut rng, 2, 1) < 2);
+    }
+
+    #[test]
+    fn quick_and_full_configs_are_sane() {
+        for cfg in [SearchConfig::quick(), SearchConfig::full()] {
+            assert!(cfg.population >= 2);
+            assert!(cfg.generations >= 1);
+            assert!(cfg.elite < cfg.population);
+            assert!((0.0..=1.0).contains(&cfg.mutation_rate));
+            assert!((0.0..=1.0).contains(&cfg.crossover_rate));
+        }
+    }
+}

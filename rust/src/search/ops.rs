@@ -1,0 +1,215 @@
+//! Variation operators over `BlockSpec` genomes, plus the cheap accuracy
+//! proxy the search optimizes against its latency constraint.
+//!
+//! Operators act purely at the spec level: they never look at channel
+//! divisibility, because `nas::SynthArch::rebuild` repairs every block
+//! against the channel count actually flowing into it at realization time
+//! (a mutation upstream can change what is divisible downstream). All
+//! randomness comes from the caller's `Rng`, so a seeded search is fully
+//! deterministic.
+
+use crate::graph::Graph;
+use crate::nas::{branch_ew_kinds, channel_range, BlockSpec};
+use crate::util::Rng;
+
+/// Probability that a block mutation resamples the whole block instead of
+/// tweaking one parameter of the existing one.
+const RESAMPLE_P: f64 = 0.2;
+
+/// Cheap accuracy proxy (higher is better): log-FLOPs plus half
+/// log-params. Log-FLOPs is the standing NAS capacity heuristic (the
+/// repo's `nas_latency_constrained` example uses it alone); the parameter
+/// term breaks ties between architectures that buy the same compute with
+/// very different widths. Pure in the graph, so it is free at search
+/// scale — the expensive objective is the latency side, served by the
+/// engine.
+pub fn accuracy_proxy(g: &Graph) -> f64 {
+    (g.flops().max(1) as f64).ln() + 0.5 * (g.params().max(1) as f64).ln()
+}
+
+/// Sample a fresh block spec for position `i`, uniform over the space's
+/// block types and parameter marginals (Section 4.3.2). Divisibility is
+/// *not* enforced here — rebuild repairs it in context.
+pub fn random_block(rng: &mut Rng, i: usize) -> BlockSpec {
+    let (lo, hi) = channel_range(i);
+    let out_c = rng.range_usize(lo, hi);
+    match rng.range_usize(0, 4) {
+        0 => {
+            let k = *rng.choice(&[3usize, 5, 7]);
+            let groups = if rng.bool(0.5) { 4 * rng.range_usize(1, 16) } else { 1 };
+            BlockSpec::Conv { k, groups, out_c }
+        }
+        1 => BlockSpec::DwSeparable { k: *rng.choice(&[3usize, 5, 7]), out_c },
+        2 => BlockSpec::Bottleneck {
+            k: *rng.choice(&[3usize, 5, 7]),
+            expand: *rng.choice(&[1usize, 3, 6]),
+            se: rng.bool(0.5),
+            out_c,
+        },
+        3 => BlockSpec::Pool { avg: rng.bool(0.5), k: *rng.choice(&[1usize, 3]) },
+        _ => BlockSpec::SplitEwConcat {
+            ways: rng.range_usize(2, 4),
+            ew: *rng.choice(branch_ew_kinds()),
+        },
+    }
+}
+
+/// Mutate one block: with probability [`RESAMPLE_P`] resample it
+/// entirely, otherwise perturb a single parameter (kernel size, channel
+/// count, expansion, SE flag, pool kind, split arity, branch op).
+pub fn mutate_block(rng: &mut Rng, spec: &BlockSpec, i: usize) -> BlockSpec {
+    if rng.bool(RESAMPLE_P) {
+        return random_block(rng, i);
+    }
+    let (lo, hi) = channel_range(i);
+    match spec {
+        BlockSpec::Conv { k, groups, out_c } => match rng.range_usize(0, 2) {
+            0 => {
+                BlockSpec::Conv { k: *rng.choice(&[3usize, 5, 7]), groups: *groups, out_c: *out_c }
+            }
+            1 => BlockSpec::Conv { k: *k, groups: *groups, out_c: rng.range_usize(lo, hi) },
+            _ => {
+                // Toggle grouping: plain ↔ a fresh 4k group count.
+                let groups = if *groups > 1 { 1 } else { 4 * rng.range_usize(1, 16) };
+                BlockSpec::Conv { k: *k, groups, out_c: *out_c }
+            }
+        },
+        BlockSpec::DwSeparable { k, out_c } => {
+            if rng.bool(0.5) {
+                BlockSpec::DwSeparable { k: *rng.choice(&[3usize, 5, 7]), out_c: *out_c }
+            } else {
+                BlockSpec::DwSeparable { k: *k, out_c: rng.range_usize(lo, hi) }
+            }
+        }
+        BlockSpec::Bottleneck { k, expand, se, out_c } => match rng.range_usize(0, 3) {
+            0 => BlockSpec::Bottleneck {
+                k: *rng.choice(&[3usize, 5, 7]),
+                expand: *expand,
+                se: *se,
+                out_c: *out_c,
+            },
+            1 => BlockSpec::Bottleneck {
+                k: *k,
+                expand: *rng.choice(&[1usize, 3, 6]),
+                se: *se,
+                out_c: *out_c,
+            },
+            2 => BlockSpec::Bottleneck { k: *k, expand: *expand, se: !*se, out_c: *out_c },
+            _ => BlockSpec::Bottleneck {
+                k: *k,
+                expand: *expand,
+                se: *se,
+                out_c: rng.range_usize(lo, hi),
+            },
+        },
+        BlockSpec::Pool { avg, k } => {
+            if rng.bool(0.5) {
+                BlockSpec::Pool { avg: !*avg, k: *k }
+            } else {
+                BlockSpec::Pool { avg: *avg, k: *rng.choice(&[1usize, 3]) }
+            }
+        }
+        BlockSpec::SplitEwConcat { ways, ew } => {
+            if rng.bool(0.5) {
+                BlockSpec::SplitEwConcat { ways: rng.range_usize(2, 4), ew: *ew }
+            } else {
+                BlockSpec::SplitEwConcat { ways: *ways, ew: *rng.choice(branch_ew_kinds()) }
+            }
+        }
+    }
+}
+
+/// Mutate a genome: each block independently with probability `rate`, and
+/// the head width with probability `rate` (resampled from its range).
+pub fn mutate(
+    rng: &mut Rng,
+    blocks: &[BlockSpec],
+    head_c: usize,
+    rate: f64,
+) -> (Vec<BlockSpec>, usize) {
+    let out: Vec<BlockSpec> = blocks
+        .iter()
+        .enumerate()
+        .map(|(i, b)| if rng.bool(rate) { mutate_block(rng, b, i) } else { b.clone() })
+        .collect();
+    let head = if rng.bool(rate) {
+        let (lo, hi) = channel_range(9);
+        rng.range_usize(lo, hi)
+    } else {
+        head_c
+    };
+    (out, head)
+}
+
+/// One-point crossover: blocks before the cut come from parent `a`, the
+/// rest (and the head width) from parent `b`.
+pub fn crossover(
+    rng: &mut Rng,
+    a: (&[BlockSpec], usize),
+    b: (&[BlockSpec], usize),
+) -> (Vec<BlockSpec>, usize) {
+    debug_assert_eq!(a.0.len(), b.0.len());
+    let cut = rng.range_usize(1, a.0.len() - 1);
+    let mut blocks = a.0[..cut].to_vec();
+    blocks.extend_from_slice(&b.0[cut..]);
+    (blocks, b.1)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nas::SynthArch;
+
+    #[test]
+    fn operators_are_deterministic_in_the_seed() {
+        let base = crate::nas::sample(3, 0);
+        for seed in [1u64, 99] {
+            let mut r1 = Rng::new(seed);
+            let mut r2 = Rng::new(seed);
+            let m1 = mutate(&mut r1, &base.blocks, base.head_c, 0.5);
+            let m2 = mutate(&mut r2, &base.blocks, base.head_c, 0.5);
+            assert_eq!(m1, m2);
+        }
+    }
+
+    #[test]
+    fn mutated_genomes_always_rebuild_into_valid_graphs() {
+        let mut rng = Rng::new(41);
+        let mut arch = crate::nas::sample(41, 0);
+        for step in 0..60 {
+            let (blocks, head) = mutate(&mut rng, &arch.blocks, arch.head_c, 0.6);
+            arch = SynthArch::rebuild(step, &blocks, head);
+            arch.graph.validate().unwrap_or_else(|e| panic!("step {step}: {e}"));
+        }
+    }
+
+    #[test]
+    fn crossover_mixes_both_parents() {
+        let a = crate::nas::sample(7, 1);
+        let b = crate::nas::sample(7, 2);
+        let mut rng = Rng::new(5);
+        let (blocks, head) = crossover(&mut rng, (&a.blocks, a.head_c), (&b.blocks, b.head_c));
+        assert_eq!(blocks.len(), 9);
+        assert_eq!(head, b.head_c);
+        // The child realizes into a valid graph.
+        SynthArch::rebuild(0, &blocks, head).graph.validate().unwrap();
+    }
+
+    #[test]
+    fn zero_rate_mutation_is_identity() {
+        let a = crate::nas::sample(11, 3);
+        let mut rng = Rng::new(1);
+        let (blocks, head) = mutate(&mut rng, &a.blocks, a.head_c, 0.0);
+        assert_eq!(blocks, a.blocks);
+        assert_eq!(head, a.head_c);
+    }
+
+    #[test]
+    fn accuracy_proxy_monotone_in_capacity() {
+        // A wider model of the same family has more FLOPs and params.
+        let small = crate::zoo::mobilenets::mobilenet_v2(0.5);
+        let big = crate::zoo::mobilenets::mobilenet_v2(1.0);
+        assert!(accuracy_proxy(&big) > accuracy_proxy(&small));
+        assert!(accuracy_proxy(&small).is_finite());
+    }
+}

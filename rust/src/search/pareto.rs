@@ -1,0 +1,119 @@
+//! Pareto-front bookkeeping for the latency-constrained search: the
+//! latency/accuracy-proxy trade-off curve each scenario reports.
+
+use crate::util::Json;
+use std::collections::HashSet;
+
+/// One evaluated candidate on (or considered for) a scenario's front.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FrontPoint {
+    /// Candidate name (`synth_NNNN`, birth order across the whole run).
+    pub name: String,
+    /// Engine-predicted end-to-end latency on the scenario.
+    pub latency_ms: f64,
+    /// Accuracy proxy ([`ops::accuracy_proxy`](super::ops::accuracy_proxy)).
+    pub proxy: f64,
+    pub flops: u64,
+    pub params: u64,
+    /// Structural graph fingerprint — the dedup key (mutation can breed
+    /// the same architecture twice under different names).
+    pub fingerprint: u64,
+}
+
+/// `p` dominates `q`: no worse on both objectives (latency ↓, proxy ↑)
+/// and strictly better on at least one.
+pub fn dominates(p: &FrontPoint, q: &FrontPoint) -> bool {
+    p.latency_ms <= q.latency_ms
+        && p.proxy >= q.proxy
+        && (p.latency_ms < q.latency_ms || p.proxy > q.proxy)
+}
+
+/// The non-dominated subset of `points`, deduplicated by graph
+/// fingerprint (first occurrence wins — candidates are fed in birth
+/// order) and sorted by (latency ↑, proxy ↓, name) so the output is
+/// deterministic for any evaluation order.
+pub fn pareto_front(points: &[FrontPoint]) -> Vec<FrontPoint> {
+    let mut seen = HashSet::new();
+    let uniq: Vec<&FrontPoint> =
+        points.iter().filter(|p| seen.insert(p.fingerprint)).collect();
+    let mut front: Vec<FrontPoint> = Vec::new();
+    for p in &uniq {
+        if !uniq.iter().any(|q| dominates(q, p)) {
+            front.push((*p).clone());
+        }
+    }
+    front.sort_by(|a, b| {
+        a.latency_ms
+            .total_cmp(&b.latency_ms)
+            .then(b.proxy.total_cmp(&a.proxy))
+            .then(a.name.cmp(&b.name))
+    });
+    front
+}
+
+impl FrontPoint {
+    /// The JSON row of the `edgelat search` front output.
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("name", Json::str(self.name.clone())),
+            ("latency_ms", Json::Num(self.latency_ms)),
+            ("proxy", Json::Num(self.proxy)),
+            ("flops", Json::num(self.flops as f64)),
+            ("params", Json::num(self.params as f64)),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn p(name: &str, lat: f64, proxy: f64, fp: u64) -> FrontPoint {
+        FrontPoint {
+            name: name.into(),
+            latency_ms: lat,
+            proxy,
+            flops: 1,
+            params: 1,
+            fingerprint: fp,
+        }
+    }
+
+    #[test]
+    fn front_is_non_dominated_and_sorted() {
+        let pts = vec![
+            p("a", 10.0, 5.0, 1),
+            p("b", 20.0, 9.0, 2),
+            p("c", 15.0, 4.0, 3), // dominated by a
+            p("d", 5.0, 2.0, 4),
+            p("e", 20.0, 8.0, 5), // dominated by b
+        ];
+        let front = pareto_front(&pts);
+        let names: Vec<&str> = front.iter().map(|f| f.name.as_str()).collect();
+        assert_eq!(names, ["d", "a", "b"]);
+        for x in &front {
+            assert!(!front.iter().any(|y| dominates(y, x)), "{} dominated", x.name);
+        }
+    }
+
+    #[test]
+    fn duplicate_fingerprints_collapse() {
+        let pts = vec![p("a", 10.0, 5.0, 1), p("b", 10.0, 5.0, 1), p("c", 30.0, 1.0, 2)];
+        let front = pareto_front(&pts);
+        assert_eq!(front.len(), 1);
+        assert_eq!(front[0].name, "a");
+    }
+
+    #[test]
+    fn equal_points_with_distinct_structure_both_survive() {
+        // Neither strictly dominates the other.
+        let pts = vec![p("a", 10.0, 5.0, 1), p("b", 10.0, 5.0, 2)];
+        assert_eq!(pareto_front(&pts).len(), 2);
+    }
+
+    #[test]
+    fn single_point_is_its_own_front() {
+        let pts = vec![p("solo", 3.0, 3.0, 9)];
+        assert_eq!(pareto_front(&pts), pts);
+    }
+}

@@ -16,7 +16,7 @@ use crate::tflite::select::KernelImpl;
 use std::collections::HashSet;
 
 /// A (possibly fused) GPU kernel.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq, Eq)]
 pub struct FusedKernel {
     /// All original graph ops in this kernel, in execution order. The first
     /// is the kernel "root" whose cost dominates.
@@ -57,8 +57,17 @@ pub fn no_fuse(g: &Graph) -> Vec<FusedKernel> {
 /// Algorithm C.1: single pass over the nodes in topological order, merging
 /// each node into its unique linkable consumer where the conditions hold.
 pub fn fuse(g: &Graph) -> Vec<FusedKernel> {
-    // Virtual node list, initially one per graph node.
-    let mut vnodes: Vec<Option<FusedKernel>> = no_fuse(g).into_iter().map(Some).collect();
+    merge_pass(g, no_fuse(g))
+}
+
+/// One `MergeNodes` pass over an existing kernel list. `fuse` is
+/// `merge_pass(g, no_fuse(g))`; exposing the pass itself lets the
+/// integration property tests assert it is a **fixpoint** — running it
+/// again over an already-merged list changes nothing (greedy chain
+/// absorption along the visit order leaves no mergeable pair behind).
+pub fn merge_pass(g: &Graph, kernels: Vec<FusedKernel>) -> Vec<FusedKernel> {
+    // Virtual node list, initially one per input kernel.
+    let mut vnodes: Vec<Option<FusedKernel>> = kernels.into_iter().map(Some).collect();
     // Map tensor -> index of the vnode that currently *consumes-as-merged* …
     // simpler: we mimic the algorithm directly over the vnode list.
     let mut ready: HashSet<TensorId> = g.inputs.iter().copied().collect();
@@ -122,15 +131,22 @@ pub fn fuse(g: &Graph) -> Vec<FusedKernel> {
 }
 
 /// `IsLinkable` for a (possibly already merged) vnode: TFLite checks the
-/// type of the candidate node, which for merged vnodes is the type of the
-/// most recently absorbed op — merged vnodes were absorbed *into* a linkable
-/// node, so the last op's linkability is the correct check.
+/// type of the candidate *node*, and a merged vnode's type is its root
+/// op's type (the cost-dominant op everything else was linked onto).
+/// During the first pass the distinction is invisible — when a producer is
+/// visited, its position-0 consumer is always still unmerged (for the
+/// consumer to be merged already, the node absorbed into it would have to
+/// sit upstream of the producer being visited, which contradicts the
+/// visit order) — but checking the root is what
+/// makes the pass a fixpoint: a chain kernel like `[conv, relu]` must not
+/// be absorbable into a predecessor just because it *ends* in a linkable
+/// op. `tests/fusion_properties.rs` asserts the fixpoint across the NAS
+/// space.
 fn is_linkable(g: &Graph, vn: &FusedKernel) -> bool {
     if vn.dst.len() != 1 {
         return false;
     }
-    let last = *vn.ops.last().unwrap();
-    g.nodes[last].op.is_linkable()
+    g.nodes[vn.root()].op.is_linkable()
 }
 
 #[cfg(test)]

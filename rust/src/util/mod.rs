@@ -10,5 +10,5 @@ pub mod timing;
 
 pub use json::Json;
 pub use prng::Rng;
-pub use stats::{cov, mape, mean, median, rmspe, std_dev, BoxStats};
+pub use stats::{cov, mape, mean, median, rmspe, spearman, std_dev, BoxStats};
 pub use table::Table;

@@ -120,6 +120,50 @@ pub fn mape(pred: &[f64], actual: &[f64]) -> f64 {
     acc / pred.len() as f64
 }
 
+/// Average ranks (1-based) with ties sharing their mean rank — the
+/// fractional-ranking convention Spearman's rho assumes.
+fn average_ranks(xs: &[f64]) -> Vec<f64> {
+    let mut idx: Vec<usize> = (0..xs.len()).collect();
+    idx.sort_by(|&a, &b| xs[a].total_cmp(&xs[b]));
+    let mut ranks = vec![0.0; xs.len()];
+    let mut i = 0;
+    while i < idx.len() {
+        let mut j = i;
+        while j + 1 < idx.len() && xs[idx[j + 1]] == xs[idx[i]] {
+            j += 1;
+        }
+        // Positions i..=j (0-based) share the mean of ranks i+1..=j+1.
+        let r = (i + j) as f64 / 2.0 + 1.0;
+        for &k in &idx[i..=j] {
+            ranks[k] = r;
+        }
+        i = j + 1;
+    }
+    ranks
+}
+
+/// Spearman rank correlation (Pearson over fractional ranks, tie-aware).
+/// Used by the multi-scenario search to answer the "one proxy device"
+/// question: does ranking candidates by device A's predicted latency agree
+/// with device B's? Returns NaN for fewer than 2 points or a constant side.
+pub fn spearman(a: &[f64], b: &[f64]) -> f64 {
+    assert_eq!(a.len(), b.len());
+    if a.len() < 2 {
+        return f64::NAN;
+    }
+    let (ra, rb) = (average_ranks(a), average_ranks(b));
+    let (ma, mb) = (mean(&ra), mean(&rb));
+    let mut num = 0.0;
+    let mut va = 0.0;
+    let mut vb = 0.0;
+    for (x, y) in ra.iter().zip(&rb) {
+        num += (x - ma) * (y - mb);
+        va += (x - ma) * (x - ma);
+        vb += (y - mb) * (y - mb);
+    }
+    num / (va.sqrt() * vb.sqrt())
+}
+
 /// Root-mean-square percentage error (the training loss of Section 4.2).
 pub fn rmspe(pred: &[f64], actual: &[f64]) -> f64 {
     assert_eq!(pred.len(), actual.len());
@@ -184,6 +228,33 @@ mod tests {
     fn rmspe_weights_large_errors_more() {
         let a = [100.0, 100.0];
         assert!(rmspe(&[120.0, 100.0], &a) > mape(&[120.0, 100.0], &a));
+    }
+
+    #[test]
+    fn spearman_perfect_monotone_is_one() {
+        let a: Vec<f64> = (0..20).map(|i| i as f64).collect();
+        let b: Vec<f64> = a.iter().map(|x| x * x + 3.0).collect(); // monotone, nonlinear
+        assert!((spearman(&a, &b) - 1.0).abs() < 1e-12);
+        let rev: Vec<f64> = a.iter().map(|x| -x).collect();
+        assert!((spearman(&a, &rev) + 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn spearman_handles_ties_with_average_ranks() {
+        // Classic tie case: rho of [1,2,2,3] vs [1,2,3,4] via fractional
+        // ranks [1, 2.5, 2.5, 4].
+        let a = [1.0, 2.0, 2.0, 3.0];
+        let b = [1.0, 2.0, 3.0, 4.0];
+        let r = spearman(&a, &b);
+        assert!((r - 0.9486832980505138).abs() < 1e-12, "r={r}");
+        // Symmetric.
+        assert_eq!(r.to_bits(), spearman(&b, &a).to_bits());
+    }
+
+    #[test]
+    fn spearman_degenerate_inputs_are_nan() {
+        assert!(spearman(&[1.0], &[2.0]).is_nan());
+        assert!(spearman(&[5.0, 5.0, 5.0], &[1.0, 2.0, 3.0]).is_nan());
     }
 
     #[test]

@@ -1,0 +1,114 @@
+//! Property tests for `tflite::fusion` (Algorithm C.1) from the
+//! integration tree, driven by the synthetic NAS space — the graphs the
+//! GPU deduction path actually sees at search scale:
+//!
+//! 1. the fused kernel list preserves topological validity (every op in
+//!    exactly one kernel, ops in ascending order inside a kernel, and the
+//!    list executable front-to-back);
+//! 2. fusion never increases the kernel count;
+//! 3. the merge pass is idempotent — fusing twice equals fusing once.
+
+use edgelat::graph::Graph;
+use edgelat::tflite::fusion::{merge_pass, no_fuse};
+use edgelat::tflite::{fuse, FusedKernel};
+use std::collections::HashSet;
+
+fn nas_graphs(seed: u64, n: usize) -> Vec<Graph> {
+    edgelat::nas::sample_dataset(seed, n).into_iter().map(|a| a.graph).collect()
+}
+
+fn subject_graphs() -> Vec<Graph> {
+    let mut graphs = nas_graphs(2022, 40);
+    graphs.push(edgelat::zoo::mobilenets::mobilenet_v2(1.0));
+    graphs.push(edgelat::zoo::resnets::resnet(18, 1.0));
+    graphs
+}
+
+/// Every original op appears in exactly one kernel, ops inside a kernel
+/// are in ascending topological (node-id) order, and walking the kernel
+/// list front-to-back never reads a tensor that has not been produced.
+fn assert_topologically_valid(g: &Graph, kernels: &[FusedKernel]) {
+    let mut seen_ops: Vec<usize> = Vec::new();
+    let mut ready: HashSet<usize> = g.inputs.iter().copied().collect();
+    for k in kernels {
+        assert!(!k.ops.is_empty(), "{}: empty kernel", g.name);
+        assert!(
+            k.ops.windows(2).all(|w| w[0] < w[1]),
+            "{}: kernel ops out of order: {:?}",
+            g.name,
+            k.ops
+        );
+        seen_ops.extend(&k.ops);
+        for &s in &k.src {
+            assert!(
+                ready.contains(&s),
+                "{}: kernel rooted at op {} reads tensor {s} before it is produced",
+                g.name,
+                k.root()
+            );
+        }
+        ready.extend(k.dst.iter().copied());
+    }
+    seen_ops.sort_unstable();
+    let expect: Vec<usize> = (0..g.nodes.len()).collect();
+    assert_eq!(seen_ops, expect, "{}: op multiset not preserved", g.name);
+}
+
+#[test]
+fn fused_graphs_preserve_topological_validity() {
+    for g in subject_graphs() {
+        assert_topologically_valid(&g, &fuse(&g));
+    }
+}
+
+#[test]
+fn fusion_never_increases_unit_count() {
+    for g in subject_graphs() {
+        let unfused = no_fuse(&g);
+        let fused = fuse(&g);
+        assert!(
+            fused.len() <= unfused.len(),
+            "{}: {} fused kernels > {} unfused",
+            g.name,
+            fused.len(),
+            unfused.len()
+        );
+        assert_eq!(unfused.len(), g.nodes.len());
+    }
+}
+
+#[test]
+fn merge_pass_is_idempotent_across_the_nas_space() {
+    for g in subject_graphs() {
+        let once = fuse(&g);
+        let twice = merge_pass(&g, once.clone());
+        assert_eq!(
+            twice, once,
+            "{}: a second merge pass changed the kernel list",
+            g.name
+        );
+    }
+}
+
+#[test]
+fn no_fuse_is_one_kernel_per_node_and_fuse_actually_merges() {
+    // Sanity anchors for the properties above: the trivial compilation is
+    // the identity partition, and the NAS space contains real fusion
+    // opportunities (conv/dwconv + activation chains everywhere).
+    let graphs = nas_graphs(7, 20);
+    let mut merged_any = 0usize;
+    for g in &graphs {
+        let unfused = no_fuse(g);
+        for (i, k) in unfused.iter().enumerate() {
+            assert_eq!(k.ops, vec![i]);
+        }
+        if fuse(g).len() < unfused.len() {
+            merged_any += 1;
+        }
+    }
+    assert!(
+        merged_any >= graphs.len() / 2,
+        "fusion merged something in only {merged_any}/{} graphs",
+        graphs.len()
+    );
+}

@@ -1,0 +1,132 @@
+//! Golden-trace regression fixture: a committed `PredictorBundle`
+//! (`tests/data/golden_bundle.json`) plus its expected per-unit
+//! predictions (`tests/data/golden_expected.json`) over a fixed graph.
+//!
+//! The bundle's Lasso models are constructed so every prediction is exact
+//! integer arithmetic in f64 (identity standardizers, one unit weight on
+//! a shape-derived feature), so the assertions are **bit-identical**, not
+//! approximate. Any silent numeric drift — in bundle (de)serialization,
+//! the standardizer, the Lasso scan, plan lowering order, bucket
+//! assignment, fallback handling, or the engine serve path — trips this
+//! test. Intentional format changes must update the fixture files.
+
+use edgelat::engine::{EngineBuilder, PredictRequest, PredictorBundle};
+use edgelat::graph::{EwKind, Graph, GraphBuilder, Padding};
+use edgelat::predict::Method;
+use edgelat::util::Json;
+use std::path::PathBuf;
+
+/// Locate a fixture under `tests/data/`, robust to where the build
+/// harness roots the manifest (repo root or `rust/`).
+fn data_path(name: &str) -> PathBuf {
+    let root = PathBuf::from(env!("CARGO_MANIFEST_DIR"));
+    for cand in [root.join("rust/tests/data").join(name), root.join("tests/data").join(name)] {
+        if cand.exists() {
+            return cand;
+        }
+    }
+    panic!("fixture {name} not found under {}", root.display());
+}
+
+fn read_json(name: &str) -> Json {
+    let text = std::fs::read_to_string(data_path(name)).expect("readable fixture");
+    Json::parse(&text).expect("fixture parses")
+}
+
+/// The fixed graph the expected predictions were computed for. One unit
+/// per op on the CPU scenario; the ElementWise op has no bucket model in
+/// the bundle and must take the fallback path.
+fn golden_graph() -> Graph {
+    let mut b = GraphBuilder::new("golden", 8, 8, 4);
+    let x = b.input_tensor();
+    let t = b.conv(x, 8, 3, 1, Padding::Same);
+    let t = b.relu(t);
+    let t = b.ew_const(EwKind::Abs, t);
+    let t = b.avg_pool(t, 3, 2);
+    let t = b.mean(t);
+    let t = b.fc(t, 10);
+    let t = b.softmax(t);
+    b.finish(vec![t])
+}
+
+fn expected_units(expected: &Json) -> Vec<(String, f64)> {
+    expected
+        .req("per_unit")
+        .unwrap()
+        .as_arr()
+        .unwrap()
+        .iter()
+        .map(|row| {
+            let row = row.as_arr().unwrap();
+            (row[0].as_str().unwrap().to_string(), row[1].as_f64().unwrap())
+        })
+        .collect()
+}
+
+#[test]
+fn golden_bundle_loads_and_reserializes_bit_identically() {
+    let parsed = read_json("golden_bundle.json");
+    let bundle = PredictorBundle::load(data_path("golden_bundle.json")).expect("bundle loads");
+    assert_eq!(bundle.scenario_id, "Snapdragon855/cpu/1L/fp32");
+    assert_eq!(bundle.method, Method::Lasso);
+    assert_eq!(bundle.t_overhead_ms.to_bits(), 2.0f64.to_bits());
+    assert_eq!(bundle.fallback_ms.to_bits(), 3.0f64.to_bits());
+    assert_eq!(bundle.models.len(), 6);
+    // Load → re-serialize must reproduce the stored document exactly
+    // (both sides normalized through the same emitter, so this compares
+    // values and structure, not whitespace).
+    assert_eq!(
+        bundle.to_json().to_string(),
+        parsed.to_string(),
+        "re-serialized bundle drifted from the committed fixture"
+    );
+}
+
+#[test]
+fn golden_predictions_are_bit_identical_via_the_predictor() {
+    let bundle = PredictorBundle::load(data_path("golden_bundle.json")).unwrap();
+    let expected = read_json("golden_expected.json");
+    let g = golden_graph();
+    let pred = bundle.to_predictor().expect("predictor assembles");
+    let units = pred.predict_units(&g);
+    let want = expected_units(&expected);
+    assert_eq!(units.len(), want.len(), "unit count drifted");
+    for (i, ((gb, gv), (wb, wv))) in units.iter().zip(&want).enumerate() {
+        assert_eq!(gb, wb, "unit {i} bucket");
+        assert_eq!(gv.to_bits(), wv.to_bits(), "unit {i} ({gb}): got {gv}, want {wv}");
+    }
+    let e2e = pred.predict(&g);
+    assert_eq!(e2e.to_bits(), expected.req_f64("e2e_ms").unwrap().to_bits(), "e2e {e2e}");
+    assert_eq!(
+        pred.t_overhead_ms.to_bits(),
+        expected.req_f64("t_overhead_ms").unwrap().to_bits()
+    );
+}
+
+#[test]
+fn golden_predictions_are_bit_identical_via_the_engine() {
+    let bundle = PredictorBundle::load(data_path("golden_bundle.json")).unwrap();
+    let expected = read_json("golden_expected.json");
+    let g = golden_graph();
+    let engine = EngineBuilder::new().bundle(bundle).threads(2).build().expect("engine");
+    let req = PredictRequest::new(&g, "Snapdragon855/cpu/1L/fp32");
+    let resp = engine.predict(&req).expect("served");
+    assert_eq!(resp.e2e_ms.to_bits(), expected.req_f64("e2e_ms").unwrap().to_bits());
+    assert_eq!(
+        resp.fallback_units,
+        expected.req_usize("fallback_units").unwrap(),
+        "the ElementWise unit must take the fallback path"
+    );
+    let want = expected_units(&expected);
+    assert_eq!(resp.per_unit.len(), want.len());
+    for ((gb, gv), (wb, wv)) in resp.per_unit.iter().zip(&want) {
+        assert_eq!(*gb, wb.as_str());
+        assert_eq!(gv.to_bits(), wv.to_bits(), "{gb}");
+    }
+    // Batch serving returns the same bits as single serving.
+    let batch = engine.predict_batch(&[req.clone(), req.clone()]);
+    for slot in batch {
+        let r = slot.expect("batch slot served");
+        assert_eq!(r.e2e_ms.to_bits(), resp.e2e_ms.to_bits());
+    }
+}

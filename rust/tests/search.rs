@@ -1,0 +1,245 @@
+//! Integration tests for the latency-constrained NAS search subsystem:
+//! seed/thread-count reproducibility (byte-level, on the JSON artifact),
+//! Pareto-front non-dominance, budget enforcement against the engine's
+//! own predictions, elitism monotonicity, and plan-cache traffic.
+//!
+//! The engines here serve hand-built constant/linear Lasso bundles
+//! (identity standardizer, unit or zero weights), so tests run at search
+//! speed without any profiling or training — exactly the serving-side
+//! contract `search::run` depends on.
+
+use edgelat::engine::{EngineBuilder, LatencyEngine, PredictorBundle};
+use edgelat::features::Standardizer;
+use edgelat::framework::DeductionMode;
+use edgelat::nas::SynthArch;
+use edgelat::predict::{lasso::Lasso, BucketModel, Method, NativeModel};
+use edgelat::search::{self, dominates, SearchConfig};
+use std::collections::BTreeMap;
+
+/// A bundle whose every bucket predicts `intercept + w * x0` — constant
+/// per-unit latency when `w == 0`, first-feature-proportional when not.
+/// Identity standardizer over one feature, so predictions are exact.
+fn linear_bundle(sc_id: &str, intercept: f64, w: f64) -> PredictorBundle {
+    let mut models = BTreeMap::new();
+    for name in edgelat::plan::interner().names() {
+        models.insert(
+            name.to_string(),
+            BucketModel {
+                standardizer: Standardizer { mean: vec![0.0], std: vec![1.0] },
+                model: NativeModel::Lasso(Lasso {
+                    weights: vec![w],
+                    intercept,
+                    alpha: 0.0,
+                }),
+                floor: 0.0,
+            },
+        );
+    }
+    PredictorBundle {
+        scenario_id: sc_id.into(),
+        method: Method::Lasso,
+        mode: DeductionMode::Full,
+        t_overhead_ms: 1.0,
+        fallback_ms: intercept.max(0.5),
+        models,
+    }
+}
+
+const SC_A: &str = "Snapdragon855/cpu/1L/fp32";
+const SC_B: &str = "HelioP35/cpu/1L/fp32";
+const SC_C: &str = "Exynos9820/cpu/1L/fp32";
+
+fn engine(threads: usize) -> LatencyEngine {
+    EngineBuilder::new()
+        .bundle(linear_bundle(SC_A, 0.5, 0.0))
+        .bundle(linear_bundle(SC_B, 0.0, 0.01))
+        .bundle(linear_bundle(SC_C, 0.5, 0.0))
+        .threads(threads)
+        .build()
+        .expect("engine")
+}
+
+fn cfg(budget: Option<f64>) -> SearchConfig {
+    SearchConfig {
+        seed: 77,
+        population: 10,
+        generations: 4,
+        budget_ms: budget,
+        elite: 2,
+        tournament: 3,
+        mutation_rate: 0.35,
+        crossover_rate: 0.5,
+    }
+}
+
+#[test]
+fn fixed_seed_output_is_byte_reproducible_across_runs_and_thread_counts() {
+    let ids = vec![SC_A.to_string(), SC_B.to_string()];
+    let c = cfg(Some(40.0));
+    let mut artifacts = Vec::new();
+    for threads in [1usize, 2, 8] {
+        let eng = engine(threads);
+        let out = search::run(&eng, &ids, &c).expect("search runs");
+        artifacts.push(search::report_json(&c, &out).to_string());
+    }
+    // Same engine, second run: also identical.
+    let eng = engine(3);
+    let a = search::report_json(&c, &search::run(&eng, &ids, &c).unwrap()).to_string();
+    let b = search::report_json(&c, &search::run(&eng, &ids, &c).unwrap()).to_string();
+    artifacts.push(a);
+    artifacts.push(b);
+    for w in artifacts.windows(2) {
+        assert_eq!(w[0], w[1], "search artifact not byte-reproducible");
+    }
+    // And it is valid JSON with the declared format tag.
+    let doc = edgelat::util::Json::parse(&artifacts[0]).expect("valid JSON");
+    assert_eq!(doc.req_str("format").unwrap(), "edgelat.search");
+    assert_eq!(doc.req_usize("version").unwrap(), 1);
+}
+
+#[test]
+fn every_reported_front_is_non_dominated() {
+    let ids = vec![SC_A.to_string(), SC_B.to_string()];
+    let eng = engine(4);
+    let out = search::run(&eng, &ids, &cfg(None)).unwrap();
+    assert_eq!(out.scenarios.len(), 2);
+    for s in &out.scenarios {
+        assert!(!s.front.is_empty(), "{}: empty front", s.scenario_id);
+        for p in &s.front {
+            assert!(
+                !s.front.iter().any(|q| dominates(q, p)),
+                "{}: {} is dominated",
+                s.scenario_id,
+                p.name
+            );
+            assert!(p.latency_ms.is_finite() && p.proxy.is_finite());
+        }
+        // Sorted by latency ascending (deterministic render order).
+        assert!(s
+            .front
+            .windows(2)
+            .all(|w| w[0].latency_ms <= w[1].latency_ms));
+    }
+}
+
+#[test]
+fn survivors_respect_the_budget_per_the_engines_own_predictions() {
+    let ids = vec![SC_A.to_string()];
+    let eng = engine(4);
+    let budget = 40.0;
+    let out = search::run(&eng, &ids, &cfg(Some(budget))).unwrap();
+    let s = &out.scenarios[0];
+    let mut checked = 0usize;
+    for surv in &s.survivors {
+        // Rebuild the survivor from its genome and re-serve it: the
+        // recorded latency must be the engine's own prediction, bit for
+        // bit, and feasible survivors must sit within the budget.
+        let arch = SynthArch::rebuild(0, &surv.blocks, surv.head_c);
+        assert_eq!(arch.graph.fingerprint(), surv.fingerprint, "{}", surv.name);
+        let req = edgelat::engine::PredictRequest::new(&arch.graph, SC_A);
+        let resp = eng.predict(&req).expect("served");
+        assert_eq!(
+            resp.e2e_ms.to_bits(),
+            surv.latency_ms.to_bits(),
+            "{}: recorded latency is not the engine's prediction",
+            surv.name
+        );
+        assert_eq!(surv.feasible, surv.latency_ms <= budget, "{}", surv.name);
+        if surv.feasible {
+            assert!(surv.latency_ms <= budget);
+            checked += 1;
+        }
+    }
+    // The constant-per-unit engine prices these graphs well inside 40ms,
+    // so the budget is satisfiable and feasible survivors must exist.
+    assert!(checked > 0, "no feasible survivor to check");
+    assert_eq!(s.evaluated, 10 * 4);
+    assert!(s.feasible <= s.evaluated);
+}
+
+#[test]
+fn elitism_never_loses_the_best_feasible_candidate() {
+    // With unconstrained search, the final best survivor's proxy must be
+    // at least generation 0's best: elites are copied forward and
+    // re-scored to identical predictions.
+    let ids = vec![SC_A.to_string()];
+    let eng = engine(2);
+    let c = cfg(None);
+    let out = search::run(&eng, &ids, &c).unwrap();
+    let gen0_best = (0..c.population)
+        .map(|i| search::accuracy_proxy(&edgelat::nas::sample(c.seed, i).graph))
+        .fold(f64::NEG_INFINITY, f64::max);
+    let final_best = out.scenarios[0].survivors[0].proxy;
+    assert!(
+        final_best >= gen0_best,
+        "final best {final_best} < generation-0 best {gen0_best}"
+    );
+}
+
+#[test]
+fn repeat_survivors_hit_the_plan_cache_across_generations() {
+    let ids = vec![SC_A.to_string()];
+    let eng = engine(4);
+    let before = eng.cache_stats();
+    search::run(&eng, &ids, &cfg(None)).unwrap();
+    let after = eng.cache_stats();
+    assert!(
+        after.hits > before.hits,
+        "elite re-scoring produced no plan-cache hits (hits {} -> {})",
+        before.hits,
+        after.hits
+    );
+    assert!(after.misses > before.misses, "fresh candidates must miss once");
+}
+
+#[test]
+fn cross_device_rank_correlation_covers_every_pair() {
+    let ids = vec![SC_A.to_string(), SC_B.to_string(), SC_C.to_string()];
+    let eng = engine(4);
+    let out = search::run(&eng, &ids, &cfg(None)).unwrap();
+    assert_eq!(out.rank_correlation.len(), 3, "3 scenarios -> 3 pairs");
+    for (a, b, rho) in &out.rank_correlation {
+        assert_ne!(a, b);
+        assert!(
+            rho.is_nan() || (-1.0..=1.0).contains(rho),
+            "{a} vs {b}: rho={rho}"
+        );
+    }
+    // SC_A and SC_C serve identical constant bundles: identical latencies,
+    // perfect rank agreement.
+    let ac = out
+        .rank_correlation
+        .iter()
+        .find(|(a, b, _)| a == SC_A && b == SC_C)
+        .expect("A-C pair present");
+    assert!((ac.2 - 1.0).abs() < 1e-12, "identical devices must correlate at 1.0, got {}", ac.2);
+}
+
+#[test]
+fn a_scenarios_result_is_independent_of_its_position_in_the_list() {
+    // The per-scenario RNG stream derives from the scenario id, not its
+    // index: searching B alone and searching A,B together must produce
+    // the same result for B (adding a comparison device cannot change an
+    // existing device's search trajectory).
+    let c = cfg(Some(40.0));
+    let solo = search::run(&engine(2), &[SC_B.to_string()], &c).unwrap();
+    let multi =
+        search::run(&engine(4), &[SC_A.to_string(), SC_B.to_string()], &c).unwrap();
+    let solo_b = &solo.scenarios[0];
+    let multi_b = &multi.scenarios[1];
+    assert_eq!(multi_b.scenario_id, SC_B);
+    assert_eq!(solo_b.front, multi_b.front, "B's Pareto front moved with its position");
+    assert_eq!(solo_b.evaluated, multi_b.evaluated);
+    assert_eq!(solo_b.feasible, multi_b.feasible);
+    let lat = |s: &edgelat::search::ScenarioSearch| -> Vec<u64> {
+        s.survivors.iter().map(|x| x.latency_ms.to_bits()).collect()
+    };
+    assert_eq!(lat(solo_b), lat(multi_b));
+}
+
+#[test]
+fn unknown_scenario_fails_the_whole_search() {
+    let eng = engine(2);
+    let err = search::run(&eng, &["NoSuch/gpu".to_string()], &cfg(None));
+    assert!(err.is_err(), "unknown scenario must not silently return an empty front");
+}

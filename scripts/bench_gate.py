@@ -8,7 +8,10 @@ Fails on:
   global lock or per-request thread-spawn costs dwarfing the work;
 - a regressed parallel scenario sweep (sweep_parallel_speedup < 0.8):
   profiling K scenarios fanned out on the pool must not be meaningfully
-  slower than doing them one at a time, whatever the runner's core count.
+  slower than doing them one at a time, whatever the runner's core count;
+- a broken NAS-search stage (search.candidates_per_s <= 0, or a hit rate
+  outside [0, 1]): the search loop must actually serve candidates through
+  the engine, and its plan-cache accounting must be a real rate.
 
 Both checks are ratios between two workloads timed back-to-back on the
 same machine, never absolute wall-clock thresholds, so they are robust to
@@ -75,6 +78,20 @@ def main() -> int:
             f"sequential (allowed: {1.0 / MIN_SWEEP_SPEEDUP:.2f}x)"
         )
 
+    search = derived.get("search")
+    if not isinstance(search, dict):
+        return fail(f"missing derived.search section in {path}")
+    cps = search.get("candidates_per_s")
+    if not isinstance(cps, (int, float)) or not math.isfinite(cps) or cps <= 0:
+        return fail(f"search candidates_per_s must be > 0, got {cps!r}")
+    hit_rate = search.get("plan_cache_hit_rate")
+    if (
+        not isinstance(hit_rate, (int, float))
+        or not math.isfinite(hit_rate)
+        or not 0.0 <= hit_rate <= 1.0
+    ):
+        return fail(f"search plan_cache_hit_rate must be in [0, 1], got {hit_rate!r}")
+
     lowering = derived.get("lowering", {})
     graphs_per_s = lowering.get("graphs_per_s")
     lowering_txt = (
@@ -89,6 +106,8 @@ def main() -> int:
         f"sweep_parallel_speedup={sweep:.2f}x "
         f"(threshold {MIN_SWEEP_SPEEDUP}), "
         f"lowering={lowering_txt}, "
+        f"search={cps:.0f} candidates/s "
+        f"(plan-cache hit rate {hit_rate:.2f}), "
         f"plan cache hits/misses={cache.get('hits')}/{cache.get('misses')}"
     )
     return 0
