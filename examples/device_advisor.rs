@@ -4,11 +4,15 @@
 //! alone, and show the counterintuitive cases (heterogeneous combos that
 //! *hurt*, element-wise quantization penalties).
 //!
-//! Run: `cargo run --release --example device_advisor -- [model-name]`
+//! Run: `cargo run --release --example device_advisor -- [model-name] [spec.json ...]`
+//!
+//! Any extra arguments are device-spec JSON files registered on top of the
+//! builtin SoCs — the advisor then covers your device too (try
+//! `examples/specs/custom_soc.json`).
 
-use edgelat::device::{socs, DataRep};
+use edgelat::device::DataRep;
 use edgelat::profiler::profile;
-use edgelat::scenario::{cpu_combos, Scenario};
+use edgelat::scenario::{Registry, Scenario};
 
 fn main() {
     let name = std::env::args().nth(1).unwrap_or_else(|| "mobilenetv3_large_w100".into());
@@ -16,18 +20,29 @@ fn main() {
         eprintln!("unknown zoo model '{name}' (see `edgelat list models`)");
         std::process::exit(2);
     });
+    let mut reg = Registry::with_builtin();
+    for spec_path in std::env::args().skip(2) {
+        match reg.load_spec_file(&spec_path) {
+            Ok(soc) => println!("registered custom device {soc} from {spec_path}"),
+            Err(e) => {
+                eprintln!("{e}");
+                std::process::exit(2);
+            }
+        }
+    }
     println!(
         "advisor for {name}: {:.1}M params, {:.2} GFLOPs\n",
         g.params() as f64 / 1e6,
         g.flops() as f64 / 1e9
     );
     let seed = 42;
-    for soc in socs() {
+    for soc in reg.socs() {
         println!("=== {} ({}) ===", soc.name, soc.platform);
         let mut rows: Vec<(String, f64)> = Vec::new();
-        for counts in cpu_combos(&soc) {
+        for counts in reg.combos(&soc.name).expect("registered soc") {
             for rep in [DataRep::Fp32, DataRep::Int8] {
-                let sc = Scenario::cpu(&soc, counts.clone(), rep);
+                let sc = Scenario::cpu(&soc, counts.clone(), rep)
+                    .expect("combo from the SoC's own spec");
                 let ms = profile(&sc, &g, seed, 7).end_to_end_ms;
                 rows.push((format!("cpu {} {}", sc.combo_label(), rep.name()), ms));
             }

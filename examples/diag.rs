@@ -10,7 +10,7 @@ use edgelat::scenario::one_large_core;
 
 fn main() {
     let graphs: Vec<_> = edgelat::nas::sample_dataset(2022, 120).into_iter().map(|a| a.graph).collect();
-    let sc = one_large_core("Snapdragon855");
+    let sc = one_large_core("Snapdragon855").expect("builtin soc");
     let profiles = profile_set(&sc, &graphs, 2022, 5);
     let data = bucket_datasets(&profiles);
     for bucket in ["Conv2D", "FullyConnected", "DepthwiseConv2D"] {

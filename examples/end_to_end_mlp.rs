@@ -33,7 +33,7 @@ fn main() {
 
     // L3: collect a real training workload from the simulated device.
     let seed = 2022;
-    let sc = one_large_core("Snapdragon855");
+    let sc = one_large_core("Snapdragon855").expect("builtin soc");
     let graphs: Vec<_> =
         edgelat::nas::sample_dataset(seed, 80).into_iter().map(|a| a.graph).collect();
     println!("profiling {} synthetic NAs on {} ...", graphs.len(), sc.id);

@@ -21,7 +21,8 @@ fn main() {
     let seed = 7;
     let budget_ms = 60.0;
     let soc = edgelat::device::soc_by_name("Exynos9820").unwrap();
-    let sc = Scenario::cpu(&soc, vec![1, 0, 0], edgelat::device::DataRep::Fp32);
+    let sc = Scenario::cpu(&soc, vec![1, 0, 0], edgelat::device::DataRep::Fp32)
+        .expect("1L is a valid Exynos9820 combo");
     println!("NAS under a {budget_ms} ms budget on {}", sc.id);
 
     // One-time profiling + predictor training (30 architectures — the

@@ -17,7 +17,8 @@ fn main() {
     let seed = 2022;
     // 1. Target scenario: Pixel 4 (Snapdragon 855), one large CPU core, fp32.
     let soc = edgelat::device::soc_by_name("Snapdragon855").unwrap();
-    let sc = Scenario::cpu(&soc, vec![1, 0, 0], edgelat::device::DataRep::Fp32);
+    let sc = Scenario::cpu(&soc, vec![1, 0, 0], edgelat::device::DataRep::Fp32)
+        .expect("1L is a valid Snapdragon855 combo");
     println!("scenario: {}", sc.id);
 
     // 2. One-time training-data collection: profile 60 synthetic NAS

@@ -18,7 +18,7 @@ use std::time::Instant;
 
 fn main() {
     let seed = 11;
-    let sc = one_large_core("Snapdragon855");
+    let sc = one_large_core("Snapdragon855").expect("builtin soc");
     println!("scenario: {}", sc.id);
 
     // --- Train once (30 NAs, the paper's minimal-data regime) and freeze.

@@ -24,7 +24,7 @@ fn main() {
     let mv2 = edgelat::zoo::mobilenets::mobilenet_v2(1.0);
     let r18 = edgelat::zoo::resnets::resnet(18, 1.0);
     let soc = edgelat::device::soc_by_name("Snapdragon855").unwrap();
-    let sc_cpu = one_large_core("Snapdragon855");
+    let sc_cpu = one_large_core("Snapdragon855").expect("builtin soc");
     let sc_gpu = Scenario::gpu(&soc);
 
     bench("graph/build mobilenet_v2", 200, || {

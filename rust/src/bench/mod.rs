@@ -21,7 +21,7 @@ use crate::graph::Graph;
 use crate::plan::{self, LoweredGraph};
 use crate::predict::Method;
 use crate::profiler::profile_set_with;
-use crate::scenario::{all_scenarios, one_large_core, Scenario};
+use crate::scenario::{Registry, Scenario};
 use crate::util::timing::{time_named, Sample};
 use crate::util::Json;
 use std::hint::black_box;
@@ -118,7 +118,26 @@ fn bench_line(samples: &mut Vec<Sample>, s: Sample) {
 /// human-readable line per bench as it goes.
 pub fn run(cfg: &BenchConfig) -> Json {
     let mut samples: Vec<Sample> = Vec::new();
-    let sc_cpu = one_large_core("Snapdragon855");
+
+    // --- Registry build: parse the committed device specs and materialize
+    // every scenario + the id index. Each iteration re-parses the JSON
+    // text into a fresh registry (`Registry::with_builtin` would hit the
+    // `builtin_specs()` OnceLock after the first build), so the measured
+    // rate is the true cold startup cost of the open device universe;
+    // the gate checks the built registry actually yields scenarios.
+    let spec_texts: Vec<String> =
+        Registry::builtin().specs().iter().map(|s| s.to_json().to_string()).collect();
+    let registry_s = time_named("registry/build from specs", cfg.iters * 10, || {
+        let mut r = Registry::new();
+        for text in &spec_texts {
+            r.load_spec_json(text).expect("builtin spec text re-registers");
+        }
+        black_box(r);
+    });
+    bench_line(&mut samples, registry_s.clone());
+    let registry = Registry::with_builtin();
+
+    let sc_cpu = registry.one_large_core("Snapdragon855").expect("builtin soc");
     let soc = crate::device::soc_by_name("Snapdragon855").expect("known soc");
     let sc_gpu = Scenario::gpu(&soc);
     let pool = ExecPool::new(cfg.threads);
@@ -200,7 +219,7 @@ pub fn run(cfg: &BenchConfig) -> Json {
     // --- Scenario-sweep throughput: profiling K scenarios one at a time
     // vs fanned out on the pool (the report prefetch pattern).
     let sweep_scenarios: Vec<Scenario> =
-        all_scenarios().into_iter().take(cfg.n_sweep).collect();
+        registry.all().iter().take(cfg.n_sweep).map(|s| (**s).clone()).collect();
     let sweep_g = nas_graphs(cfg.seed ^ 0x57ee, cfg.sweep_graphs);
     let seq = ExecPool::new(1);
     let sweep_iters = (cfg.iters / 2).max(1);
@@ -256,6 +275,20 @@ pub fn run(cfg: &BenchConfig) -> Json {
         (
             "derived",
             Json::obj(vec![
+                (
+                    // The open device universe: scenarios and SoCs the
+                    // built registry serves, plus its build rate. The CI
+                    // gate fails on a registry reporting 0 scenarios.
+                    "registry",
+                    Json::obj(vec![
+                        ("scenarios", Json::num(registry.scenario_count() as f64)),
+                        ("socs", Json::num(registry.soc_count() as f64)),
+                        (
+                            "builds_per_s",
+                            Json::num(1.0 / registry_s.mean_s.max(1e-12)),
+                        ),
+                    ]),
+                ),
                 ("batch_predict_speedup", Json::num(batch_speedup)),
                 ("plan_predict_speedup", Json::num(plan_scan_speedup)),
                 ("sweep_parallel_speedup", Json::num(sweep_speedup)),
@@ -324,7 +357,7 @@ mod tests {
         assert_eq!(doc.req_str("profile").unwrap(), "custom");
         assert_eq!(doc.req_usize("threads").unwrap(), 2);
         let benches = doc.req("benches").unwrap().as_arr().expect("array");
-        assert!(benches.len() >= 9, "expected all pipeline benches, got {}", benches.len());
+        assert!(benches.len() >= 10, "expected all pipeline benches, got {}", benches.len());
         for b in benches {
             assert!(b.req_str("name").is_ok());
             let mean = b.req_f64("mean_s").unwrap();
@@ -336,6 +369,13 @@ mod tests {
             .iter()
             .any(|b| b.req_str("name").unwrap().starts_with("lower/")));
         let derived = doc.req("derived").unwrap();
+        // The registry-build stage: the open device universe must actually
+        // materialize (the gate fails on 0 scenarios).
+        assert!(benches.iter().any(|b| b.req_str("name").unwrap().starts_with("registry/")));
+        let registry = derived.req("registry").unwrap();
+        assert_eq!(registry.req_usize("scenarios").unwrap(), 72);
+        assert_eq!(registry.req_usize("socs").unwrap(), 4);
+        assert!(registry.req_f64("builds_per_s").unwrap() > 0.0);
         let speedup = derived.req_f64("batch_predict_speedup").unwrap();
         assert!(speedup.is_finite() && speedup > 0.0, "speedup={speedup}");
         assert!(derived.req_f64("plan_predict_speedup").unwrap().is_finite());

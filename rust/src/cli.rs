@@ -9,7 +9,8 @@
 
 use crate::framework::DeductionMode;
 use crate::predict::Method;
-use crate::scenario::{by_id, Scenario};
+use crate::scenario::{Registry, Scenario};
+use std::sync::Arc;
 
 /// Shared defaults: every subcommand that trains reads the same seed /
 /// training-set-size / repetition defaults, so `predict`, `evaluate` and
@@ -28,6 +29,27 @@ pub fn flag(rest: &[String], name: &str) -> Result<Option<String>, String> {
             None => Err(format!("flag {name} needs a value")),
         },
     }
+}
+
+/// Every value of a repeatable flag, in order. Each occurrence must carry
+/// a value.
+pub fn flag_all(rest: &[String], name: &str) -> Result<Vec<String>, String> {
+    let mut out = Vec::new();
+    let mut i = 0;
+    while i < rest.len() {
+        if rest[i] == name {
+            match rest.get(i + 1) {
+                Some(v) => {
+                    out.push(v.clone());
+                    i += 2;
+                }
+                None => return Err(format!("flag {name} needs a value")),
+            }
+        } else {
+            i += 1;
+        }
+    }
+    Ok(out)
 }
 
 /// Presence of a boolean flag.
@@ -128,21 +150,34 @@ pub fn mode_flag(rest: &[String]) -> Result<DeductionMode, String> {
     }
 }
 
-/// The single required `--scenario ID`, resolved against the build's
-/// scenario table.
-pub fn scenario_flag(rest: &[String]) -> Result<Scenario, String> {
+/// The scenario registry a subcommand resolves against: the builtin
+/// devices plus every `--device-spec FILE.json` (repeatable) registered on
+/// top. Errors name the offending file.
+pub fn registry_flag(rest: &[String]) -> Result<Registry, String> {
+    let mut reg = Registry::with_builtin();
+    for path in flag_all(rest, "--device-spec")? {
+        reg.load_spec_file(&path).map_err(|e| e.to_string())?;
+    }
+    Ok(reg)
+}
+
+/// The single required `--scenario ID`, resolved against the given
+/// registry (builtin + any `--device-spec` registrations). Hands out the
+/// registry's shared `Arc` — no per-flag `Scenario` clone.
+pub fn scenario_flag(rest: &[String], reg: &Registry) -> Result<Arc<Scenario>, String> {
     let id = flag(rest, "--scenario")?
         .ok_or("need --scenario ID (see `edgelat list scenarios`)")?;
-    by_id(&id).ok_or_else(|| format!("unknown scenario '{id}' (see `edgelat list scenarios`)"))
+    reg.by_id(&id)
+        .ok_or_else(|| format!("unknown scenario '{id}' (see `edgelat list scenarios`)"))
 }
 
 /// A comma-separated scenario list (`--scenario A,B,C`), each id resolved
 /// and order preserved. Duplicates are rejected — the search would
 /// otherwise silently double-count a device.
-pub fn scenario_list_flag(rest: &[String]) -> Result<Vec<Scenario>, String> {
+pub fn scenario_list_flag(rest: &[String], reg: &Registry) -> Result<Vec<Arc<Scenario>>, String> {
     let raw = flag(rest, "--scenario")?
         .ok_or("need --scenario ID[,ID...] (see `edgelat list scenarios`)")?;
-    let mut out: Vec<Scenario> = Vec::new();
+    let mut out: Vec<Arc<Scenario>> = Vec::new();
     for id in raw.split(',').map(str::trim) {
         if id.is_empty() {
             return Err(format!("--scenario has an empty id in '{raw}'"));
@@ -151,7 +186,7 @@ pub fn scenario_list_flag(rest: &[String]) -> Result<Vec<Scenario>, String> {
             return Err(format!("--scenario lists '{id}' twice"));
         }
         out.push(
-            by_id(id)
+            reg.by_id(id)
                 .ok_or_else(|| format!("unknown scenario '{id}' (see `edgelat list scenarios`)"))?,
         );
     }
@@ -246,19 +281,63 @@ mod tests {
     }
 
     #[test]
-    fn scenario_flags_resolve_against_the_table() {
-        let sc = scenario_flag(&args(&["--scenario", "HelioP35/gpu"])).unwrap();
+    fn scenario_flags_resolve_against_the_registry() {
+        let reg = Registry::builtin();
+        let sc = scenario_flag(&args(&["--scenario", "HelioP35/gpu"]), reg).unwrap();
         assert_eq!(sc.id, "HelioP35/gpu");
-        assert!(scenario_flag(&args(&["--scenario", "Nope/gpu"])).is_err());
-        assert!(scenario_flag(&args(&[])).is_err());
-        let list = scenario_list_flag(&args(&["--scenario", "HelioP35/gpu,Snapdragon855/gpu"]))
-            .unwrap();
+        assert!(scenario_flag(&args(&["--scenario", "Nope/gpu"]), reg).is_err());
+        assert!(scenario_flag(&args(&[]), reg).is_err());
+        let list =
+            scenario_list_flag(&args(&["--scenario", "HelioP35/gpu,Snapdragon855/gpu"]), reg)
+                .unwrap();
         assert_eq!(list.len(), 2);
         assert_eq!(list[0].id, "HelioP35/gpu");
         assert_eq!(list[1].id, "Snapdragon855/gpu");
         // Duplicates, empty segments, and unknown ids are rejected.
-        assert!(scenario_list_flag(&args(&["--scenario", "HelioP35/gpu,HelioP35/gpu"])).is_err());
-        assert!(scenario_list_flag(&args(&["--scenario", "HelioP35/gpu,,X"])).is_err());
-        assert!(scenario_list_flag(&args(&["--scenario", "X/gpu"])).is_err());
+        assert!(
+            scenario_list_flag(&args(&["--scenario", "HelioP35/gpu,HelioP35/gpu"]), reg).is_err()
+        );
+        assert!(scenario_list_flag(&args(&["--scenario", "HelioP35/gpu,,X"]), reg).is_err());
+        assert!(scenario_list_flag(&args(&["--scenario", "X/gpu"]), reg).is_err());
+    }
+
+    #[test]
+    fn flag_all_collects_every_occurrence() {
+        let rest = args(&["--device-spec", "a.json", "--seed", "1", "--device-spec", "b.json"]);
+        assert_eq!(flag_all(&rest, "--device-spec").unwrap(), vec!["a.json", "b.json"]);
+        assert_eq!(flag_all(&args(&[]), "--device-spec").unwrap(), Vec::<String>::new());
+        assert!(flag_all(&args(&["--device-spec"]), "--device-spec").is_err());
+        let trailing = args(&["--device-spec", "a", "--device-spec"]);
+        assert!(flag_all(&trailing, "--device-spec").is_err());
+    }
+
+    #[test]
+    fn registry_flag_loads_device_specs() {
+        // No flag: exactly the builtin universe.
+        let reg = registry_flag(&args(&[])).unwrap();
+        assert_eq!(reg.scenario_count(), 72);
+        // A missing file errors, naming the path.
+        let err = registry_flag(&args(&["--device-spec", "/no/such/spec.json"])).unwrap_err();
+        assert!(err.contains("/no/such/spec.json"), "{err}");
+        // A real spec file extends the universe and its scenarios resolve.
+        let mut spec = crate::device::builtin_specs()[3].clone();
+        spec.soc.name = "CliTestSoc".into();
+        let path = std::env::temp_dir()
+            .join(format!("edgelat_cli_spec_{}.json", std::process::id()));
+        std::fs::write(&path, spec.to_json().to_string()).unwrap();
+        let rest = args(&["--device-spec", path.to_str().unwrap()]);
+        let reg = registry_flag(&rest).unwrap();
+        assert_eq!(reg.soc_count(), 5);
+        let sc = scenario_flag(
+            &args(&["--device-spec", path.to_str().unwrap(), "--scenario", "CliTestSoc/gpu"]),
+            &reg,
+        )
+        .unwrap();
+        assert_eq!(sc.soc.name, "CliTestSoc");
+        // An invalid spec file errors, naming the path.
+        std::fs::write(&path, "{}").unwrap();
+        let err = registry_flag(&rest).unwrap_err();
+        assert!(err.contains("edgelat_cli_spec"), "{err}");
+        let _ = std::fs::remove_file(&path);
     }
 }

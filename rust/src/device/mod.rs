@@ -9,8 +9,12 @@
 pub mod cost;
 pub mod exec;
 pub mod noise;
+pub mod spec;
 
 pub use exec::{run, OpTrace, RunTrace, Target};
+pub use spec::{
+    builtin_specs, soc_from_json, soc_to_json, validate_soc, SocSpec, SPEC_FORMAT, SPEC_VERSION,
+};
 
 use crate::tflite::GpuKind;
 
@@ -30,13 +34,33 @@ impl ClusterKind {
             ClusterKind::Small => 'S',
         }
     }
+
+    /// Stable name used by device-spec files.
+    pub fn name(&self) -> &'static str {
+        match self {
+            ClusterKind::Large => "large",
+            ClusterKind::Medium => "medium",
+            ClusterKind::Small => "small",
+        }
+    }
+
+    /// Inverse of [`name`](Self::name); also accepts the figure letters
+    /// (`L`/`M`/`S`). Case-insensitive.
+    pub fn parse(s: &str) -> Option<ClusterKind> {
+        match s.to_ascii_lowercase().as_str() {
+            "large" | "l" => Some(ClusterKind::Large),
+            "medium" | "m" => Some(ClusterKind::Medium),
+            "small" | "s" => Some(ClusterKind::Small),
+            _ => None,
+        }
+    }
 }
 
 /// A homogeneous CPU core cluster sharing one clock domain.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct CoreCluster {
     pub kind: ClusterKind,
-    pub name: &'static str,
+    pub name: String,
     pub count: usize,
     pub ghz: f64,
     /// Peak fp32 FLOPs per cycle per core (NEON FMA width).
@@ -57,10 +81,10 @@ impl CoreCluster {
 }
 
 /// A mobile GPU with TFLite-relevant performance parameters.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct GpuSpec {
     pub kind: GpuKind,
-    pub name: &'static str,
+    pub name: String,
     /// Effective peak GFLOPS (fp16/fp32 mixed as TFLite GPU delegate uses).
     pub gflops: f64,
     /// Memory bandwidth available to the GPU (GB/s).
@@ -76,11 +100,13 @@ pub struct GpuSpec {
     pub run_sigma: f64,
 }
 
-/// A system-on-chip: CPU clusters (fastest first) + GPU (Table 1).
-#[derive(Debug, Clone)]
+/// A system-on-chip: CPU clusters (fastest first) + GPU. The paper's four
+/// devices (Table 1) ship as committed spec files (see [`spec`]); any other
+/// SoC is described the same way and registered at runtime.
+#[derive(Debug, Clone, PartialEq)]
 pub struct Soc {
-    pub name: &'static str,
-    pub platform: &'static str,
+    pub name: String,
+    pub platform: String,
     pub clusters: Vec<CoreCluster>,
     pub gpu: GpuSpec,
     /// CPU-side memory bandwidth (GB/s), shared across cores.
@@ -189,6 +215,15 @@ impl DataRep {
             DataRep::Int8 => "int8",
         }
     }
+
+    /// Inverse of [`name`](Self::name), for bundle/spec descriptors.
+    pub fn parse(s: &str) -> Option<DataRep> {
+        match s.to_ascii_lowercase().as_str() {
+            "fp32" => Some(DataRep::Fp32),
+            "int8" => Some(DataRep::Int8),
+            _ => None,
+        }
+    }
     pub fn bytes(&self) -> f64 {
         match self {
             DataRep::Fp32 => 4.0,
@@ -197,132 +232,17 @@ impl DataRep {
     }
 }
 
-/// The four platforms of Table 1.
+/// The four platforms of Table 1, built from the committed spec files
+/// (`device/specs/*.json`) — the device table is data, not code. Compat
+/// shim; the open-universe API is `scenario::Registry`.
 pub fn socs() -> Vec<Soc> {
-    vec![
-        // Google Pixel 4 — Snapdragon 855: 1x Kryo 485 Prime 2.84 GHz,
-        // 3x Kryo 485 Gold 2.42 GHz, 4x Kryo 485 Silver 1.80 GHz; Adreno 640.
-        Soc {
-            name: "Snapdragon855",
-            platform: "Google Pixel 4",
-            clusters: vec![
-                CoreCluster { kind: ClusterKind::Large, name: "Kryo 485 Prime", count: 1, ghz: 2.84, flops_per_cycle: 16.0, int8_speedup: 3.0, stream_gbps: 8.50 },
-                CoreCluster { kind: ClusterKind::Medium, name: "Kryo 485 Gold", count: 3, ghz: 2.42, flops_per_cycle: 16.0, int8_speedup: 3.0, stream_gbps: 7.00 },
-                CoreCluster { kind: ClusterKind::Small, name: "Kryo 485 Silver", count: 4, ghz: 1.80, flops_per_cycle: 8.0, int8_speedup: 2.4, stream_gbps: 4.00 },
-            ],
-            gpu: GpuSpec {
-                kind: GpuKind::Adreno6xx,
-                name: "Adreno 640",
-                gflops: 900.0,
-                mem_gbps: 28.0,
-                dispatch_us: 28.0,
-                overhead_ms: 3.2,
-                overhead_sigma: 0.10,
-                run_sigma: 0.035,
-            },
-            mem_gbps: 28.0,
-            cpu_op_overhead_us: 3.0,
-            cpu_overhead_ms: 0.7,
-            hetero_sync_mult: 2.6,
-            quant_ew_penalty: 2.55,
-            noise_base: 0.012,
-            noise_per_small_core: 0.016,
-            noise_per_extra_core: 0.006,
-        },
-        // Xiaomi Mi 8 SE — Snapdragon 710: 2x Kryo 360 Gold 2.2 GHz,
-        // 6x Kryo 360 Silver 1.7 GHz; Adreno 616.
-        Soc {
-            name: "Snapdragon710",
-            platform: "Xiaomi Mi 8 SE",
-            clusters: vec![
-                CoreCluster { kind: ClusterKind::Large, name: "Kryo 360 Gold", count: 2, ghz: 2.2, flops_per_cycle: 16.0, int8_speedup: 2.6, stream_gbps: 6.50 },
-                CoreCluster { kind: ClusterKind::Small, name: "Kryo 360 Silver", count: 6, ghz: 1.7, flops_per_cycle: 8.0, int8_speedup: 2.2, stream_gbps: 3.50 },
-            ],
-            gpu: GpuSpec {
-                kind: GpuKind::Adreno6xx,
-                name: "Adreno 616",
-                gflops: 380.0,
-                mem_gbps: 13.0,
-                dispatch_us: 34.0,
-                overhead_ms: 4.1,
-                overhead_sigma: 0.08,
-                run_sigma: 0.022,
-            },
-            mem_gbps: 13.0,
-            cpu_op_overhead_us: 4.0,
-            cpu_overhead_ms: 0.9,
-            hetero_sync_mult: 2.4,
-            quant_ew_penalty: 2.35,
-            noise_base: 0.012,
-            noise_per_small_core: 0.013,
-            noise_per_extra_core: 0.005,
-        },
-        // Samsung Galaxy S10 — Exynos 9820: 2x M4 2.73 GHz, 2x A75 2.31 GHz,
-        // 4x A55 1.95 GHz; Mali G76.
-        Soc {
-            name: "Exynos9820",
-            platform: "Samsung Galaxy S10",
-            clusters: vec![
-                CoreCluster { kind: ClusterKind::Large, name: "M4 Cheetah", count: 2, ghz: 2.73, flops_per_cycle: 24.0, int8_speedup: 2.8, stream_gbps: 9.00 },
-                CoreCluster { kind: ClusterKind::Medium, name: "Cortex-A75", count: 2, ghz: 2.31, flops_per_cycle: 16.0, int8_speedup: 2.8, stream_gbps: 6.50 },
-                CoreCluster { kind: ClusterKind::Small, name: "Cortex-A55", count: 4, ghz: 1.95, flops_per_cycle: 8.0, int8_speedup: 2.3, stream_gbps: 3.75 },
-            ],
-            gpu: GpuSpec {
-                kind: GpuKind::Mali,
-                name: "Mali G76",
-                gflops: 780.0,
-                mem_gbps: 28.0,
-                dispatch_us: 42.0,
-                overhead_ms: 5.6,
-                overhead_sigma: 0.18,
-                run_sigma: 0.045,
-            },
-            mem_gbps: 28.0,
-            cpu_op_overhead_us: 3.2,
-            cpu_overhead_ms: 0.8,
-            // Exynos inter-cluster communication is notoriously costly
-            // (Section 5.2: hetero combos show the worst variability here).
-            hetero_sync_mult: 3.4,
-            quant_ew_penalty: 2.60,
-            noise_base: 0.014,
-            noise_per_small_core: 0.022,
-            noise_per_extra_core: 0.008,
-        },
-        // Samsung Galaxy A03s — Helio P35: 4x A53 2.3 GHz + 4x A53 1.8 GHz;
-        // PowerVR GE8320. Both clusters are Cortex-A53 (Section 5.5.2).
-        Soc {
-            name: "HelioP35",
-            platform: "Samsung Galaxy A03s",
-            clusters: vec![
-                CoreCluster { kind: ClusterKind::Large, name: "Cortex-A53 @2.3", count: 4, ghz: 2.3, flops_per_cycle: 8.0, int8_speedup: 1.9, stream_gbps: 4.00 },
-                CoreCluster { kind: ClusterKind::Small, name: "Cortex-A53 @1.8", count: 4, ghz: 1.8, flops_per_cycle: 8.0, int8_speedup: 1.9, stream_gbps: 3.25 },
-            ],
-            gpu: GpuSpec {
-                kind: GpuKind::PowerVR,
-                name: "PowerVR GE8320",
-                gflops: 55.0,
-                mem_gbps: 6.5,
-                dispatch_us: 60.0,
-                overhead_ms: 7.5,
-                overhead_sigma: 0.20,
-                run_sigma: 0.016,
-            },
-            mem_gbps: 6.5,
-            cpu_op_overhead_us: 7.0,
-            cpu_overhead_ms: 1.4,
-            // Same microarchitecture in both clusters: cheap migration.
-            hetero_sync_mult: 1.6,
-            quant_ew_penalty: 2.2,
-            noise_base: 0.012,
-            noise_per_small_core: 0.012,
-            noise_per_extra_core: 0.006,
-        },
-    ]
+    builtin_specs().iter().map(|s| s.soc.clone()).collect()
 }
 
-/// Look up a SoC by name.
+/// Look up a builtin SoC by name. Compat shim over [`builtin_specs`];
+/// runtime-registered devices live in a `scenario::Registry`.
 pub fn soc_by_name(name: &str) -> Option<Soc> {
-    socs().into_iter().find(|s| s.name == name)
+    builtin_specs().iter().find(|s| s.soc.name == name).map(|s| s.soc.clone())
 }
 
 #[cfg(test)]

@@ -1,0 +1,432 @@
+//! The versioned device-spec schema: a SoC as *data*, not code.
+//!
+//! The paper's central challenge is hardware heterogeneity — predictors must
+//! extend to new devices with only small amounts of profiling data (Sections
+//! 1, 5.2) — so the device universe cannot be a hard-coded enum. A
+//! [`SocSpec`] is the complete description of one SoC (CPU clusters with
+//! frequency/throughput/bandwidth cost-model parameters, the GPU block, and
+//! the studied core combinations) serialized as a small JSON document.
+//! The paper's four SoCs (Table 1) are committed as spec files under
+//! `device/specs/` and parsed once at startup ([`builtin_specs`]); a new
+//! device is a JSON file registered via `scenario::Registry::load_spec_json`
+//! (or `--device-spec` on the CLI), never a source patch.
+//!
+//! All numeric fields round-trip bit-exactly through `util::Json` (shortest
+//! repr emit + exact parse), so scenarios and lowered plans built from a
+//! re-serialized spec are bit-identical to the original — asserted by
+//! `tests/device_registry.rs`.
+
+use crate::device::{ClusterKind, CoreCluster, CoreCombo, GpuSpec, Soc};
+use crate::tflite::GpuKind;
+use crate::util::Json;
+
+/// Identifies a device-spec JSON document.
+pub const SPEC_FORMAT: &str = "edgelat.device_spec";
+/// Schema version this build writes and reads.
+pub const SPEC_VERSION: u64 = 1;
+
+/// A complete, self-describing SoC: the simulator/cost-model parameters
+/// ([`Soc`]) plus the CPU core combinations studied for it (the combos that
+/// become scenarios, per Figs 2/15/23).
+#[derive(Debug, Clone, PartialEq)]
+pub struct SocSpec {
+    pub soc: Soc,
+    /// Studied core combos, `combos[i][k]` = cores from `soc.clusters[k]`.
+    pub combos: Vec<Vec<usize>>,
+}
+
+/// Serialize a [`Soc`] (without combos/format envelope) — shared between
+/// [`SocSpec::to_json`] and the v3 predictor-bundle descriptor, which embeds
+/// the SoC so a bundle for a never-seen device loads without its spec file.
+pub fn soc_to_json(soc: &Soc) -> Json {
+    let clusters = soc
+        .clusters
+        .iter()
+        .map(|c| {
+            Json::obj(vec![
+                ("kind", Json::str(c.kind.name())),
+                ("name", Json::str(c.name.clone())),
+                ("count", Json::num(c.count as f64)),
+                ("ghz", Json::Num(c.ghz)),
+                ("flops_per_cycle", Json::Num(c.flops_per_cycle)),
+                ("int8_speedup", Json::Num(c.int8_speedup)),
+                ("stream_gbps", Json::Num(c.stream_gbps)),
+            ])
+        })
+        .collect();
+    let gpu = Json::obj(vec![
+        ("kind", Json::str(soc.gpu.kind.name())),
+        ("name", Json::str(soc.gpu.name.clone())),
+        ("gflops", Json::Num(soc.gpu.gflops)),
+        ("mem_gbps", Json::Num(soc.gpu.mem_gbps)),
+        ("dispatch_us", Json::Num(soc.gpu.dispatch_us)),
+        ("overhead_ms", Json::Num(soc.gpu.overhead_ms)),
+        ("overhead_sigma", Json::Num(soc.gpu.overhead_sigma)),
+        ("run_sigma", Json::Num(soc.gpu.run_sigma)),
+    ]);
+    Json::obj(vec![
+        ("name", Json::str(soc.name.clone())),
+        ("platform", Json::str(soc.platform.clone())),
+        ("clusters", Json::Arr(clusters)),
+        ("gpu", gpu),
+        ("mem_gbps", Json::Num(soc.mem_gbps)),
+        ("cpu_op_overhead_us", Json::Num(soc.cpu_op_overhead_us)),
+        ("cpu_overhead_ms", Json::Num(soc.cpu_overhead_ms)),
+        ("hetero_sync_mult", Json::Num(soc.hetero_sync_mult)),
+        ("quant_ew_penalty", Json::Num(soc.quant_ew_penalty)),
+        ("noise_base", Json::Num(soc.noise_base)),
+        ("noise_per_small_core", Json::Num(soc.noise_per_small_core)),
+        ("noise_per_extra_core", Json::Num(soc.noise_per_extra_core)),
+    ])
+}
+
+/// Parse a [`Soc`] from the object emitted by [`soc_to_json`]. Structural
+/// errors only; semantic validation lives in [`SocSpec::validate`].
+pub fn soc_from_json(j: &Json) -> Result<Soc, String> {
+    let name = j.req_str("name")?.to_string();
+    let platform = j.req_str("platform")?.to_string();
+    let Json::Arr(cl) = j.req("clusters")? else {
+        return Err("'clusters' is not an array".into());
+    };
+    let mut clusters = Vec::with_capacity(cl.len());
+    for (i, c) in cl.iter().enumerate() {
+        let kind_name = c.req_str("kind").map_err(|e| format!("clusters[{i}]: {e}"))?;
+        let kind = ClusterKind::parse(kind_name).ok_or_else(|| {
+            format!("clusters[{i}]: unknown kind '{kind_name}' (large|medium|small)")
+        })?;
+        clusters.push(CoreCluster {
+            kind,
+            name: c.req_str("name").map_err(|e| format!("clusters[{i}]: {e}"))?.to_string(),
+            count: c.req_usize("count").map_err(|e| format!("clusters[{i}]: {e}"))?,
+            ghz: c.req_f64("ghz").map_err(|e| format!("clusters[{i}]: {e}"))?,
+            flops_per_cycle: c
+                .req_f64("flops_per_cycle")
+                .map_err(|e| format!("clusters[{i}]: {e}"))?,
+            int8_speedup: c.req_f64("int8_speedup").map_err(|e| format!("clusters[{i}]: {e}"))?,
+            stream_gbps: c.req_f64("stream_gbps").map_err(|e| format!("clusters[{i}]: {e}"))?,
+        });
+    }
+    let gj = j.req("gpu")?;
+    let gpu_kind_name = gj.req_str("kind").map_err(|e| format!("gpu: {e}"))?;
+    let gpu = GpuSpec {
+        kind: GpuKind::parse(gpu_kind_name).ok_or_else(|| {
+            format!("gpu: unknown kind '{gpu_kind_name}' (Adreno6xx|Adreno|Mali|PowerVR|AMD)")
+        })?,
+        name: gj.req_str("name").map_err(|e| format!("gpu: {e}"))?.to_string(),
+        gflops: gj.req_f64("gflops").map_err(|e| format!("gpu: {e}"))?,
+        mem_gbps: gj.req_f64("mem_gbps").map_err(|e| format!("gpu: {e}"))?,
+        dispatch_us: gj.req_f64("dispatch_us").map_err(|e| format!("gpu: {e}"))?,
+        overhead_ms: gj.req_f64("overhead_ms").map_err(|e| format!("gpu: {e}"))?,
+        overhead_sigma: gj.req_f64("overhead_sigma").map_err(|e| format!("gpu: {e}"))?,
+        run_sigma: gj.req_f64("run_sigma").map_err(|e| format!("gpu: {e}"))?,
+    };
+    Ok(Soc {
+        name,
+        platform,
+        clusters,
+        gpu,
+        mem_gbps: j.req_f64("mem_gbps")?,
+        cpu_op_overhead_us: j.req_f64("cpu_op_overhead_us")?,
+        cpu_overhead_ms: j.req_f64("cpu_overhead_ms")?,
+        hetero_sync_mult: j.req_f64("hetero_sync_mult")?,
+        quant_ew_penalty: j.req_f64("quant_ew_penalty")?,
+        noise_base: j.req_f64("noise_base")?,
+        noise_per_small_core: j.req_f64("noise_per_small_core")?,
+        noise_per_extra_core: j.req_f64("noise_per_extra_core")?,
+    })
+}
+
+impl SocSpec {
+    pub fn new(soc: Soc, combos: Vec<Vec<usize>>) -> SocSpec {
+        SocSpec { soc, combos }
+    }
+
+    /// Scenarios this spec yields when registered: combos x {fp32, int8}
+    /// plus the GPU.
+    pub fn scenario_count(&self) -> usize {
+        self.combos.len() * 2 + 1
+    }
+
+    pub fn to_json(&self) -> Json {
+        let Json::Obj(mut m) = soc_to_json(&self.soc) else {
+            unreachable!("soc_to_json emits an object")
+        };
+        m.insert("format".into(), Json::str(SPEC_FORMAT));
+        m.insert("version".into(), Json::Num(SPEC_VERSION as f64));
+        m.insert(
+            "combos".into(),
+            Json::Arr(
+                self.combos
+                    .iter()
+                    .map(|c| Json::Arr(c.iter().map(|&n| Json::num(n as f64)).collect()))
+                    .collect(),
+            ),
+        );
+        Json::Obj(m)
+    }
+
+    /// Parse and validate a spec document.
+    pub fn from_json(j: &Json) -> Result<SocSpec, String> {
+        let format = j.req_str("format")?;
+        if format != SPEC_FORMAT {
+            return Err(format!(
+                "not a device spec (format '{format}', expected '{SPEC_FORMAT}')"
+            ));
+        }
+        let version = j.req_usize("version")? as u64;
+        if version != SPEC_VERSION {
+            return Err(format!(
+                "unsupported device-spec version {version} (this build reads version {SPEC_VERSION})"
+            ));
+        }
+        let soc = soc_from_json(j)?;
+        let Json::Arr(cj) = j.req("combos")? else {
+            return Err("'combos' is not an array".into());
+        };
+        let mut combos = Vec::with_capacity(cj.len());
+        for (i, c) in cj.iter().enumerate() {
+            combos.push(c.usize_arr().map_err(|e| format!("combos[{i}] {e}"))?);
+        }
+        let spec = SocSpec { soc, combos };
+        spec.validate()?;
+        Ok(spec)
+    }
+
+    /// Semantic validation: the SoC parameters ([`validate_soc`]), plus
+    /// every combo realizable and the combo set free of duplicate scenario
+    /// labels.
+    pub fn validate(&self) -> Result<(), String> {
+        let soc = &self.soc;
+        validate_soc(soc)?;
+        if self.combos.is_empty() {
+            return Err(format!("soc '{}': no studied core combos", soc.name));
+        }
+        let mut labels = Vec::with_capacity(self.combos.len());
+        for c in &self.combos {
+            let combo = CoreCombo::new(c.clone());
+            combo.validate(soc).map_err(|e| format!("soc '{}': combo {c:?}: {e}", soc.name))?;
+            let label = combo.label(soc);
+            if labels.contains(&label) {
+                return Err(format!(
+                    "soc '{}': combo {c:?} duplicates scenario label '{label}'",
+                    soc.name
+                ));
+            }
+            labels.push(label);
+        }
+        Ok(())
+    }
+}
+
+/// Validate a [`Soc`]'s parameters: every field in its physical range and
+/// clusters fastest-first (scenario headline/`one_large_core` assume
+/// `clusters[0]` is the fastest). Shared by [`SocSpec::validate`] and the
+/// v3 predictor-bundle loader, which validates the embedded device
+/// descriptor the same way a spec file is validated.
+pub fn validate_soc(soc: &Soc) -> Result<(), String> {
+    if soc.name.is_empty() {
+        return Err("soc name is empty".into());
+    }
+    for bad in ['/', ',', '#'] {
+        if soc.name.contains(bad) {
+            return Err(format!(
+                "soc name '{}' contains '{bad}' (reserved by scenario ids and CLI lists)",
+                soc.name
+            ));
+        }
+    }
+    if soc.platform.is_empty() {
+        return Err(format!("soc '{}': platform is empty", soc.name));
+    }
+    if soc.clusters.is_empty() {
+        return Err(format!("soc '{}': no CPU clusters", soc.name));
+    }
+    let pos = |v: f64, what: &str| -> Result<(), String> {
+        if !v.is_finite() || v <= 0.0 {
+            return Err(format!(
+                "soc '{}': {what} must be a positive finite number, got {v}",
+                soc.name
+            ));
+        }
+        Ok(())
+    };
+    let nonneg = |v: f64, what: &str| -> Result<(), String> {
+        if !v.is_finite() || v < 0.0 {
+            return Err(format!(
+                "soc '{}': {what} must be a non-negative finite number, got {v}",
+                soc.name
+            ));
+        }
+        Ok(())
+    };
+    for (i, c) in soc.clusters.iter().enumerate() {
+        if c.name.is_empty() {
+            return Err(format!("soc '{}': clusters[{i}] name is empty", soc.name));
+        }
+        if c.count == 0 || c.count > 64 {
+            return Err(format!(
+                "soc '{}': cluster '{}' has {} cores (want 1..=64)",
+                soc.name, c.name, c.count
+            ));
+        }
+        pos(c.ghz, "cluster ghz")?;
+        pos(c.flops_per_cycle, "cluster flops_per_cycle")?;
+        pos(c.int8_speedup, "cluster int8_speedup")?;
+        pos(c.stream_gbps, "cluster stream_gbps")?;
+    }
+    for w in soc.clusters.windows(2) {
+        if w[0].peak_gflops() < w[1].peak_gflops() {
+            return Err(format!(
+                "soc '{}': clusters must be listed fastest-first ('{}' is slower than '{}')",
+                soc.name, w[0].name, w[1].name
+            ));
+        }
+    }
+    if soc.gpu.name.is_empty() {
+        return Err(format!("soc '{}': gpu name is empty", soc.name));
+    }
+    pos(soc.gpu.gflops, "gpu gflops")?;
+    pos(soc.gpu.mem_gbps, "gpu mem_gbps")?;
+    pos(soc.gpu.dispatch_us, "gpu dispatch_us")?;
+    nonneg(soc.gpu.overhead_ms, "gpu overhead_ms")?;
+    nonneg(soc.gpu.overhead_sigma, "gpu overhead_sigma")?;
+    nonneg(soc.gpu.run_sigma, "gpu run_sigma")?;
+    pos(soc.mem_gbps, "mem_gbps")?;
+    pos(soc.cpu_op_overhead_us, "cpu_op_overhead_us")?;
+    nonneg(soc.cpu_overhead_ms, "cpu_overhead_ms")?;
+    if !soc.hetero_sync_mult.is_finite() || soc.hetero_sync_mult < 1.0 {
+        return Err(format!(
+            "soc '{}': hetero_sync_mult must be >= 1 (a penalty multiplier), got {}",
+            soc.name, soc.hetero_sync_mult
+        ));
+    }
+    if !soc.quant_ew_penalty.is_finite() || soc.quant_ew_penalty < 1.0 {
+        return Err(format!(
+            "soc '{}': quant_ew_penalty must be >= 1, got {}",
+            soc.name, soc.quant_ew_penalty
+        ));
+    }
+    nonneg(soc.noise_base, "noise_base")?;
+    nonneg(soc.noise_per_small_core, "noise_per_small_core")?;
+    nonneg(soc.noise_per_extra_core, "noise_per_extra_core")?;
+    Ok(())
+}
+
+/// The four committed Table 1 specs, file name + contents (baked in via
+/// `include_str!` so the binary needs no data directory).
+const BUILTIN_SPEC_FILES: [(&str, &str); 4] = [
+    ("snapdragon855.json", include_str!("specs/snapdragon855.json")),
+    ("snapdragon710.json", include_str!("specs/snapdragon710.json")),
+    ("exynos9820.json", include_str!("specs/exynos9820.json")),
+    ("helio_p35.json", include_str!("specs/helio_p35.json")),
+];
+
+/// The paper's four SoCs, parsed and validated once from the committed spec
+/// files. Panics only on a corrupted build (the specs ship inside the
+/// binary and are covered by tests).
+pub fn builtin_specs() -> &'static [SocSpec] {
+    static SPECS: std::sync::OnceLock<Vec<SocSpec>> = std::sync::OnceLock::new();
+    SPECS.get_or_init(|| {
+        BUILTIN_SPEC_FILES
+            .iter()
+            .map(|(file, text)| {
+                let j = Json::parse(text)
+                    .unwrap_or_else(|e| panic!("builtin device spec {file}: {e}"));
+                SocSpec::from_json(&j)
+                    .unwrap_or_else(|e| panic!("builtin device spec {file}: {e}"))
+            })
+            .collect()
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builtin_specs_parse_and_validate() {
+        let specs = builtin_specs();
+        assert_eq!(specs.len(), 4);
+        let names: Vec<&str> = specs.iter().map(|s| s.soc.name.as_str()).collect();
+        assert_eq!(
+            names,
+            ["Snapdragon855", "Snapdragon710", "Exynos9820", "HelioP35"]
+        );
+        // 34 CPU combos x 2 reps + 4 GPUs = 72 scenarios (Section 4.3).
+        let total: usize = specs.iter().map(|s| s.scenario_count()).sum();
+        assert_eq!(total, 72);
+    }
+
+    #[test]
+    fn spec_json_roundtrip_is_exact() {
+        for spec in builtin_specs() {
+            let text = spec.to_json().to_string();
+            let back = SocSpec::from_json(&Json::parse(&text).unwrap()).unwrap();
+            // PartialEq over every f64 — bit-exact via the emitter/parser.
+            assert_eq!(&back, spec, "{}", spec.soc.name);
+        }
+    }
+
+    #[test]
+    fn invalid_specs_are_rejected_with_reasons() {
+        let base = builtin_specs()[0].clone();
+
+        let mut slash = base.clone();
+        slash.soc.name = "My/Soc".into();
+        assert!(slash.validate().unwrap_err().contains("reserved"));
+
+        let mut dup = base.clone();
+        let first = dup.combos[0].clone();
+        dup.combos.push(first);
+        assert!(dup.validate().unwrap_err().contains("duplicates"));
+
+        let mut empty = base.clone();
+        empty.combos.clear();
+        assert!(empty.validate().unwrap_err().contains("combos"));
+
+        let mut overdrawn = base.clone();
+        overdrawn.combos.push(vec![9, 0, 0]);
+        assert!(overdrawn.validate().is_err());
+
+        let mut slow_first = base.clone();
+        slow_first.clusters_reverse();
+        assert!(slow_first.validate().unwrap_err().contains("fastest-first"));
+
+        let mut bad_ghz = base.clone();
+        bad_ghz.soc.clusters[0].ghz = -1.0;
+        assert!(bad_ghz.validate().unwrap_err().contains("ghz"));
+
+        let mut bad_sync = base;
+        bad_sync.soc.hetero_sync_mult = 0.5;
+        assert!(bad_sync.validate().unwrap_err().contains("hetero_sync_mult"));
+    }
+
+    impl SocSpec {
+        /// Test helper: reverse cluster order (and combo arity with it).
+        fn clusters_reverse(&mut self) {
+            self.soc.clusters.reverse();
+            for c in &mut self.combos {
+                c.reverse();
+            }
+        }
+    }
+
+    #[test]
+    fn from_json_rejects_wrong_envelope() {
+        let err = SocSpec::from_json(&Json::parse("{}").unwrap()).unwrap_err();
+        assert!(err.contains("format"), "{err}");
+        let j = Json::obj(vec![("format", Json::str("something.else"))]);
+        assert!(SocSpec::from_json(&j).unwrap_err().contains("not a device spec"));
+        let mut v9 = builtin_specs()[0].to_json();
+        if let Json::Obj(m) = &mut v9 {
+            m.insert("version".into(), Json::Num(9.0));
+        }
+        assert!(SocSpec::from_json(&v9).unwrap_err().contains("version 9"));
+        let mut bad_gpu = builtin_specs()[0].to_json();
+        if let Json::Obj(m) = &mut bad_gpu {
+            let Some(Json::Obj(g)) = m.get_mut("gpu") else { panic!() };
+            g.insert("kind".into(), Json::str("Voodoo3"));
+        }
+        assert!(SocSpec::from_json(&bad_gpu).unwrap_err().contains("Voodoo3"));
+    }
+}

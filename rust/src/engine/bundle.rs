@@ -1,4 +1,6 @@
-//! The versioned on-disk format for a trained predictor: scenario id,
+//! The versioned on-disk format for a trained predictor: the **full
+//! scenario descriptor** (embedded SoC spec + target — a v3 bundle is
+//! self-describing and loads on builds that have never seen its device),
 //! method, deduction mode, `T_overhead`/fallback metadata, the bucket
 //! intern table (`plan::BucketInterner` names in id order — models load
 //! by name and re-intern against the reading build's table; the
@@ -8,26 +10,34 @@
 //! (shortest-repr emit + exact parse), so a loaded bundle reproduces the
 //! in-memory predictor's outputs bit-identically.
 
+use crate::device::{soc_from_json, soc_to_json, validate_soc, CoreCombo, DataRep, Soc, Target};
 use crate::engine::EngineError;
 use crate::framework::{DeductionMode, ScenarioPredictor};
 use crate::predict::{BucketModel, Method, TrainedModel};
 use crate::profiler::ModelProfile;
-use crate::scenario::Scenario;
+use crate::scenario::{Registry, Scenario};
+use crate::tflite::CompileOptions;
 use crate::util::Json;
 use std::collections::BTreeMap;
 use std::path::Path;
 
 /// Identifies a predictor-bundle JSON document.
 pub const BUNDLE_FORMAT: &str = "edgelat.predictor_bundle";
-/// Schema version this build writes and reads. v2 added the `interner`
-/// bucket symbol table (v1 bundles predate the plan IR and are rejected;
-/// retrain with `edgelat train`).
-pub const BUNDLE_VERSION: u64 = 2;
+/// Schema version this build writes. v3 embeds the full scenario
+/// descriptor (`device` + `target`), so a bundle trained on a
+/// runtime-registered SoC loads anywhere — no spec file, no registry
+/// needed at load time. (v2 added the `interner` symbol table; v1 bundles
+/// predate the plan IR and are rejected; retrain with `edgelat train`.)
+pub const BUNDLE_VERSION: u64 = 3;
+/// Oldest version this build still reads: v2 bundles carry only a
+/// scenario id, resolved against the builtin registry on load.
+pub const BUNDLE_COMPAT_VERSION: u64 = 2;
 
 /// A serialized trained predictor for one (scenario, method, mode).
 #[derive(Clone)]
 pub struct PredictorBundle {
-    pub scenario_id: String,
+    /// The full scenario (SoC + target), embedded in the v3 document.
+    pub scenario: Scenario,
     pub method: Method,
     pub mode: DeductionMode,
     /// Estimated framework overhead (mean end-to-end minus op-sum gap).
@@ -35,6 +45,100 @@ pub struct PredictorBundle {
     /// Global mean op latency, used for buckets unseen during training.
     pub fallback_ms: f64,
     pub models: BTreeMap<String, BucketModel>,
+}
+
+/// The target half of the scenario descriptor.
+fn target_to_json(t: &Target) -> Json {
+    match t {
+        Target::Cpu { combo, rep } => Json::obj(vec![
+            ("kind", Json::str("cpu")),
+            (
+                "counts",
+                Json::Arr(combo.counts.iter().map(|&c| Json::num(c as f64)).collect()),
+            ),
+            ("rep", Json::str(rep.name())),
+        ]),
+        Target::Gpu { options } => Json::obj(vec![
+            ("kind", Json::str("gpu")),
+            ("fusion", Json::Bool(options.fusion)),
+            ("winograd", Json::Bool(options.winograd)),
+            ("grouped", Json::Bool(options.grouped)),
+        ]),
+    }
+}
+
+/// Rebuild a scenario from an embedded SoC, target descriptor, and stored
+/// id. Structural parsing only — semantic checks (SoC ranges, combo
+/// realizability, id consistency) live in one place,
+/// [`validate_bundle_scenario`], which every loading path runs.
+fn scenario_from_descriptor(soc: Soc, target: &Json, id: &str) -> Result<Scenario, String> {
+    let target = match target.req_str("kind")? {
+        "cpu" => {
+            let counts =
+                target.req("counts")?.usize_arr().map_err(|e| format!("target counts{e}"))?;
+            let rep_name = target.req_str("rep")?;
+            let rep = DataRep::parse(rep_name)
+                .ok_or_else(|| format!("unknown data representation '{rep_name}'"))?;
+            Target::Cpu { combo: CoreCombo::new(counts), rep }
+        }
+        "gpu" => Target::Gpu {
+            options: CompileOptions {
+                fusion: target_bool(target, "fusion")?,
+                winograd: target_bool(target, "winograd")?,
+                grouped: target_bool(target, "grouped")?,
+            },
+        },
+        other => return Err(format!("unknown target kind '{other}' (cpu|gpu)")),
+    };
+    Ok(Scenario { id: id.to_string(), soc, target })
+}
+
+fn target_bool(target: &Json, key: &str) -> Result<bool, String> {
+    match target.req(key)? {
+        Json::Bool(b) => Ok(*b),
+        _ => Err(format!("target '{key}' is not a boolean")),
+    }
+}
+
+/// Validate a bundle's scenario the way the v3 loader validates an embedded
+/// descriptor: SoC parameters in range and, for CPU targets, a combo the
+/// clusters can realize. Bundle fields are `pub`, so a programmatically
+/// assembled bundle need not have come through `from_json` — every loading
+/// path ([`PredictorBundle::to_predictor`], `EngineBuilder::build`) checks
+/// here first instead of letting a bad descriptor panic inside the cost
+/// model (mirrors the bucket-symbol check just below).
+pub(crate) fn validate_bundle_scenario(sc: &Scenario) -> Result<(), EngineError> {
+    validate_soc(&sc.soc)
+        .map_err(|e| EngineError::Parse(format!("bundle for '{}': {e}", sc.id)))?;
+    match &sc.target {
+        Target::Cpu { combo, rep } => {
+            // Re-derive through the one id-owning constructor (validates
+            // the combo too) — same rule as `scenario_from_descriptor`:
+            // the id must agree with the device/target, or the engine
+            // would serve one device's cost model under another's id.
+            let derived = Scenario::cpu(&sc.soc, combo.counts.clone(), *rep)
+                .map_err(|e| EngineError::Parse(format!("bundle for '{}': {e}", sc.id)))?;
+            if sc.id != derived.id {
+                return Err(EngineError::Parse(format!(
+                    "bundle scenario id '{}' disagrees with its device/target ('{}')",
+                    sc.id, derived.id
+                )));
+            }
+        }
+        Target::Gpu { .. } => {
+            // "{soc}/gpu" exactly, or "{soc}/gpu/<ablation>" — nothing
+            // else ("{soc}/gpux" is a tampered id, not an ablation).
+            let prefix = format!("{}/gpu", sc.soc.name);
+            let tail = sc.id.strip_prefix(&prefix);
+            if !matches!(tail, Some(t) if t.is_empty() || t.starts_with('/')) {
+                return Err(EngineError::Parse(format!(
+                    "bundle scenario id '{}' does not match its device '{}'",
+                    sc.id, sc.soc.name
+                )));
+            }
+        }
+    }
+    Ok(())
 }
 
 impl PredictorBundle {
@@ -72,7 +176,7 @@ impl PredictorBundle {
             models.insert(bucket.to_string(), owned.clone());
         }
         Ok(PredictorBundle {
-            scenario_id: pred.scenario.id.clone(),
+            scenario: pred.scenario.clone(),
             method: pred.method,
             mode: pred.mode,
             t_overhead_ms: pred.t_overhead_ms,
@@ -81,18 +185,23 @@ impl PredictorBundle {
         })
     }
 
-    /// Reassemble a full `ScenarioPredictor` (owned models, `'static`) by
-    /// resolving the scenario id against this build's scenario table.
+    /// The scenario id this bundle serves.
+    pub fn scenario_id(&self) -> &str {
+        &self.scenario.id
+    }
+
+    /// Reassemble a full `ScenarioPredictor` (owned models, `'static`) from
+    /// the embedded scenario descriptor — no registry or spec file needed.
     /// `to_`: an expensive borrowed→owned conversion (the models clone).
     pub fn to_predictor(&self) -> Result<ScenarioPredictor<'static>, EngineError> {
-        let scenario = crate::scenario::by_id(&self.scenario_id)
-            .ok_or_else(|| EngineError::UnknownScenario(self.scenario_id.clone()))?;
-        // Validate bucket symbols up front (fields are pub, so a bundle
-        // need not have come through `from_json`): an unresolvable name is
-        // an error here, the same as in `EngineBuilder::build`, not a
-        // panic inside the dense-table interning.
+        // Validate the scenario and bucket symbols up front (fields are
+        // pub, so a bundle need not have come through `from_json`): an
+        // invalid descriptor or unresolvable name is an error here, the
+        // same as in `EngineBuilder::build`, not a panic inside the cost
+        // model or the dense-table interning.
+        validate_bundle_scenario(&self.scenario)?;
         for b in self.models.keys() {
-            crate::engine::resolve_bundle_bucket(&self.scenario_id, b)?;
+            crate::engine::resolve_bundle_bucket(&self.scenario.id, b)?;
         }
         let models: BTreeMap<String, TrainedModel<'static>> = self
             .models
@@ -100,7 +209,7 @@ impl PredictorBundle {
             .map(|(b, m)| (b.clone(), TrainedModel::Owned(m.clone())))
             .collect();
         Ok(ScenarioPredictor::from_parts(
-            scenario,
+            self.scenario.clone(),
             self.method,
             self.mode,
             models,
@@ -126,7 +235,12 @@ impl PredictorBundle {
         Json::obj(vec![
             ("format", Json::str(BUNDLE_FORMAT)),
             ("version", Json::Num(BUNDLE_VERSION as f64)),
-            ("scenario", Json::str(self.scenario_id.clone())),
+            ("scenario", Json::str(self.scenario.id.clone())),
+            // The self-describing device descriptor: the spec-shaped SoC
+            // block plus the concrete target — what makes the bundle load
+            // on a build/process that never registered this device.
+            ("device", soc_to_json(&self.scenario.soc)),
+            ("target", target_to_json(&self.scenario.target)),
             ("method", Json::str(self.method.name())),
             ("mode", Json::str(self.mode.name())),
             ("t_overhead_ms", Json::Num(self.t_overhead_ms)),
@@ -143,13 +257,36 @@ impl PredictorBundle {
                 "not a predictor bundle (format '{format}', expected '{BUNDLE_FORMAT}')"
             ));
         }
-        let version = j.req_f64("version")? as u64;
-        if version != BUNDLE_VERSION {
+        let version = j.req_usize("version")? as u64;
+        if !(BUNDLE_COMPAT_VERSION..=BUNDLE_VERSION).contains(&version) {
             return Err(format!(
-                "unsupported bundle version {version} (this build reads version {BUNDLE_VERSION})"
+                "unsupported bundle version {version} (this build reads versions \
+                 {BUNDLE_COMPAT_VERSION}..={BUNDLE_VERSION})"
             ));
         }
         let scenario_id = j.req_str("scenario")?.to_string();
+        let scenario = if version >= 3 {
+            // Self-describing: rebuild the scenario from the embedded
+            // descriptor, then run the one shared semantic check (SoC
+            // ranges like a spec file, combo realizability, id
+            // consistency).
+            let soc = soc_from_json(j.req("device")?).map_err(|e| format!("device: {e}"))?;
+            let sc = scenario_from_descriptor(soc, j.req("target")?, &scenario_id)?;
+            validate_bundle_scenario(&sc).map_err(|e| e.to_string())?;
+            sc
+        } else {
+            // v2: id only — resolve against the builtin registry.
+            Registry::builtin()
+                .by_id(&scenario_id)
+                .map(|s| (*s).clone())
+                .ok_or_else(|| {
+                    format!(
+                        "v2 bundle is for scenario '{scenario_id}', which is not in the builtin \
+                         registry; re-save it (or retrain) to get a v3 bundle that embeds its \
+                         device descriptor"
+                    )
+                })?
+        };
         let method_name = j.req_str("method")?;
         let method = Method::parse(method_name)
             .ok_or_else(|| format!("unknown method '{method_name}'"))?;
@@ -195,17 +332,17 @@ impl PredictorBundle {
         if models.is_empty() {
             return Err("bundle has no bucket models".into());
         }
-        Ok(PredictorBundle { scenario_id, method, mode, t_overhead_ms, fallback_ms, models })
+        Ok(PredictorBundle { scenario, method, mode, t_overhead_ms, fallback_ms, models })
     }
 
-    /// Write the bundle as compact JSON.
+    /// Write the bundle as compact JSON. I/O errors name the path.
     pub fn save(&self, path: impl AsRef<Path>) -> Result<(), EngineError> {
         let path = path.as_ref();
         std::fs::write(path, self.to_json().to_string())
             .map_err(|e| EngineError::Io(format!("writing {}: {e}", path.display())))
     }
 
-    /// Load and validate a bundle file.
+    /// Load and validate a bundle file. I/O and parse errors name the path.
     pub fn load(path: impl AsRef<Path>) -> Result<PredictorBundle, EngineError> {
         let path = path.as_ref();
         let s = std::fs::read_to_string(path)
@@ -228,5 +365,38 @@ mod tests {
         let j = Json::obj(vec![("format", Json::str("something.else"))]);
         let err = PredictorBundle::from_json(&j).unwrap_err();
         assert!(err.contains("not a predictor bundle"), "{err}");
+    }
+
+    #[test]
+    fn target_descriptor_roundtrips() {
+        for sc in [
+            crate::scenario::one_large_core("Exynos9820").unwrap(),
+            Scenario::gpu(&crate::device::soc_by_name("HelioP35").unwrap()),
+        ] {
+            let t = target_to_json(&sc.target);
+            let back = scenario_from_descriptor(sc.soc.clone(), &t, &sc.id).unwrap();
+            assert_eq!(back, sc);
+            validate_bundle_scenario(&back).expect("round-tripped scenario validates");
+        }
+        // A tampered id is rejected for CPU targets (the id is derivable).
+        let sc = crate::scenario::one_large_core("Exynos9820").unwrap();
+        let t = target_to_json(&sc.target);
+        let back =
+            scenario_from_descriptor(sc.soc.clone(), &t, "Exynos9820/cpu/2M/fp32").unwrap();
+        let err = validate_bundle_scenario(&back).unwrap_err();
+        assert!(err.to_string().contains("disagrees"), "{err}");
+        // A GPU id must belong to the embedded device: exactly "{soc}/gpu"
+        // or an ablation suffix after '/', never a sibling like "gpux".
+        let g = Scenario::gpu(&sc.soc);
+        let t = target_to_json(&g.target);
+        for bad in ["OtherSoc/gpu", "Exynos9820/gpux", "Exynos9820/gp"] {
+            let back = scenario_from_descriptor(sc.soc.clone(), &t, bad).unwrap();
+            let err = validate_bundle_scenario(&back).unwrap_err();
+            assert!(err.to_string().contains("does not match"), "{bad}: {err}");
+        }
+        for good in ["Exynos9820/gpu", "Exynos9820/gpu/nofusion"] {
+            let back = scenario_from_descriptor(sc.soc.clone(), &t, good).unwrap();
+            validate_bundle_scenario(&back).unwrap_or_else(|e| panic!("{good}: {e}"));
+        }
     }
 }

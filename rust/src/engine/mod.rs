@@ -26,7 +26,7 @@
 
 pub mod bundle;
 
-pub use bundle::{PredictorBundle, BUNDLE_FORMAT, BUNDLE_VERSION};
+pub use bundle::{PredictorBundle, BUNDLE_COMPAT_VERSION, BUNDLE_FORMAT, BUNDLE_VERSION};
 
 use crate::exec_pool::{CacheStats, ExecPool, ShardedCache};
 use crate::framework::DeductionMode;
@@ -44,7 +44,9 @@ pub enum EngineError {
     Io(String),
     /// Malformed bundle contents (bad JSON, schema, or version).
     Parse(String),
-    /// The bundle names a scenario this build does not know.
+    /// A scenario id that resolves in no loaded registry. v3 bundles embed
+    /// their scenario so loading never hits this; it remains for callers
+    /// resolving ids (CLI flags, v2-era tooling).
     UnknownScenario(String),
     /// No loaded bundle matches the request.
     NoPredictor { scenario_id: String, method: Option<Method> },
@@ -131,7 +133,7 @@ pub struct PredictResponse {
 /// Models sit in a dense table indexed by `plan::BucketId` — the serve
 /// loop never hashes a bucket string.
 struct EnginePredictor {
-    scenario: Scenario,
+    scenario: Arc<Scenario>,
     method: Method,
     mode: DeductionMode,
     t_overhead_ms: f64,
@@ -178,14 +180,19 @@ impl EngineBuilder {
         let it = plan::interner();
         let mut predictors = Vec::with_capacity(self.bundles.len());
         for b in self.bundles {
-            // The builder is consumed, so the models move in for free.
-            let scenario = crate::scenario::by_id(&b.scenario_id)
-                .ok_or_else(|| EngineError::UnknownScenario(b.scenario_id.clone()))?;
+            // The builder is consumed, so the models — and the bundle's
+            // embedded scenario descriptor — move in for free. No registry
+            // lookup, no `Scenario` clone: a bundle trained on a device
+            // this build never saw resolves against itself. Fields are
+            // pub, so re-validate the descriptor before it reaches the
+            // cost model (same contract as `to_predictor`).
+            bundle::validate_bundle_scenario(&b.scenario)?;
+            let scenario = Arc::new(b.scenario);
             // Intern the by-name bundle models into the dense table the
             // serve loop indexes by `BucketId`.
             let mut models: Vec<Option<BucketModel>> = (0..it.len()).map(|_| None).collect();
             for (bucket, m) in b.models {
-                let id = resolve_bundle_bucket(&b.scenario_id, &bucket)?;
+                let id = resolve_bundle_bucket(&scenario.id, &bucket)?;
                 models[id.index()] = Some(m);
             }
             predictors.push(EnginePredictor {
@@ -198,12 +205,15 @@ impl EngineBuilder {
             });
         }
         // Deduction only depends on (scenario, mode), not on the trained
-        // method — predictors sharing both share one cache slot.
+        // method — predictors sharing both share one cache slot. Compared
+        // structurally (SoC parameters + target), not by id: two embedded
+        // descriptors claiming the same id but different cost-model
+        // parameters must not share lowered plans.
         let dedup: Vec<usize> = (0..predictors.len())
             .map(|i| {
                 (0..i)
                     .find(|&j| {
-                        predictors[j].scenario.id == predictors[i].scenario.id
+                        predictors[j].scenario == predictors[i].scenario
                             && predictors[j].mode == predictors[i].mode
                     })
                     .unwrap_or(i)

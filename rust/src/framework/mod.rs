@@ -378,7 +378,7 @@ mod tests {
     fn cpu_predictor_achieves_low_mape_in_distribution() {
         // Default NAS setting (Section 5.1): train and test from the same
         // space; GBDT should land in single-digit MAPE.
-        let sc = scenario::one_large_core("Snapdragon855");
+        let sc = scenario::one_large_core("Snapdragon855").unwrap();
         let graphs = train_graphs(60);
         let profiles = profile_set(&sc, &graphs, 7, 5);
         let (tr_g, te_g) = graphs.split_at(45);

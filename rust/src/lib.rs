@@ -14,6 +14,19 @@
 //!   (`device`), profiler (`profiler`), feature extraction (`features`),
 //!   Lasso/RF/GBDT/MLP predictors (`predict`), and the end-to-end training
 //!   + evaluation framework (`framework`, `report`).
+//! - **Open device universe (`device::spec` + `scenario::Registry`)**: a
+//!   SoC is *data*, not code — a versioned JSON device spec (clusters,
+//!   frequencies, bandwidth/cost-model parameters, GPU block, studied core
+//!   combos). The paper's four Table 1 devices ship as committed spec
+//!   files (`device/specs/*.json`, parsed once at startup and reproducing
+//!   the 72 scenarios bit-identically); any new device registers at
+//!   runtime via `Registry::load_spec_json` / `--device-spec FILE.json`.
+//!   The `Registry` is the single source of scenario truth — fallible,
+//!   typed lookups (`ScenarioError`), `Arc`-shared scenarios, and it
+//!   threads through the profiler, the report context (`ReportCtx`), the
+//!   search CLI, and the bench suite. Predictor bundles (v3) embed the
+//!   full scenario descriptor, so a bundle trained on a never-seen device
+//!   loads and serves anywhere without its spec file.
 //! - **Lowered-plan IR (`plan`)**: the shared representation between
 //!   deduction and prediction. A `BucketInterner` fixes the closed bucket
 //!   universe into dense `BucketId`s; `plan::lower(scenario, mode, graph)`

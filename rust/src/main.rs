@@ -9,6 +9,7 @@
 //!   predict     end-to-end latency prediction for a model file
 //!   search      latency-constrained NAS search served by the engine
 //!   bench       time the pipeline hot paths, write BENCH_pipeline.json
+//!   devices     list/show/validate device specs (the open SoC universe)
 //!   list        list scenarios / zoo models
 //!
 //! Flag parsing lives in `edgelat::cli` (hand-rolled — the offline crate
@@ -22,7 +23,7 @@ use edgelat::graph::modelfile;
 use edgelat::predict::Method;
 use edgelat::profiler::{profile, profile_set};
 use edgelat::report::{all_ids, reproduce, ReportConfig, ReportCtx};
-use edgelat::scenario::{all_scenarios, Scenario};
+use edgelat::scenario::{Registry, Scenario};
 use edgelat::util::table::ms;
 
 fn main() {
@@ -38,6 +39,7 @@ fn main() {
         "predict" => cmd_predict(rest),
         "search" => cmd_search(rest),
         "bench" => cmd_bench(rest),
+        "devices" => cmd_devices(rest),
         "list" => cmd_list(rest),
         "help" | "--help" | "-h" => usage(),
         other => {
@@ -66,7 +68,14 @@ USAGE:
                     [--population P] [--generations G] [--train N] [--runs R]
                     [--threads N] [--quick] [--out FRONT.json]
   edgelat bench     [--quick] [--threads N] [--out BENCH_pipeline.json]
+  edgelat devices   list | show SOC | validate --spec FILE.json [--spec ...]
   edgelat list      {{scenarios|models|figures}}
+
+Bring your own device: reproduce/profile/train/evaluate/predict/search/list
+accept `--device-spec FILE.json` (repeatable) to register SoCs on top of
+the four builtin Table 1 devices — every scenario of a registered SoC is
+addressable by id, and a bundle trained for it embeds the full device
+descriptor, so it loads and serves anywhere without the spec file.
 
 The train-once/serve workflow: `train` profiles synthetic NAs once and writes
 a serialized predictor bundle; `predict --bundle` / `evaluate --bundle` then
@@ -150,7 +159,10 @@ fn cmd_reproduce(rest: &[String]) {
         eprintln!("need --figure ID or --all");
         std::process::exit(2);
     };
-    let mut ctx = ReportCtx::new(cfg);
+    // Figures sweep whatever universe is registered: builtin by default,
+    // plus any --device-spec registrations.
+    let reg = or_die(cli::registry_flag(rest));
+    let mut ctx = ReportCtx::with_registry(cfg, std::sync::Arc::new(reg));
     for id in ids {
         let start = std::time::Instant::now();
         let tables = reproduce(&id, &mut ctx);
@@ -206,7 +218,8 @@ fn cmd_profile(rest: &[String]) {
             eprintln!("model '{name}' not in zoo and not a readable model file");
             std::process::exit(2);
         });
-    let sc = or_die(cli::scenario_flag(rest));
+    let reg = or_die(cli::registry_flag(rest));
+    let sc = or_die(cli::scenario_flag(rest, &reg));
     let p = profile(&sc, &g, seed, runs);
     println!("model: {}  scenario: {}  runs: {runs}", p.model, sc.id);
     println!(
@@ -225,7 +238,8 @@ fn cmd_profile(rest: &[String]) {
 }
 
 fn cmd_train(rest: &[String]) {
-    let sc = or_die(cli::scenario_flag(rest));
+    let reg = or_die(cli::registry_flag(rest));
+    let sc = or_die(cli::scenario_flag(rest, &reg));
     let out = or_die(cli::flag(rest, "--out")).unwrap_or_else(|| {
         eprintln!("need --out BUNDLE.json");
         std::process::exit(2);
@@ -270,7 +284,8 @@ fn cmd_train(rest: &[String]) {
 }
 
 fn cmd_evaluate(rest: &[String]) {
-    let sc = or_die(cli::scenario_flag(rest));
+    let reg = or_die(cli::registry_flag(rest));
+    let sc = or_die(cli::scenario_flag(rest, &reg));
     let test = or_die(cli::flag(rest, "--test")).unwrap_or_else(|| "synth".into());
     let (n_train, seed, runs) = (
         or_die(cli::train_flag(rest)),
@@ -308,8 +323,24 @@ fn cmd_evaluate(rest: &[String]) {
             eprintln!("loading bundle {bp}: {e}");
             std::process::exit(2);
         });
-        if b.scenario_id != sc.id {
-            eprintln!("bundle {bp} was trained for scenario {} (got --scenario {})", b.scenario_id, sc.id);
+        if b.scenario_id() != sc.id {
+            eprintln!(
+                "bundle {bp} was trained for scenario {} (got --scenario {})",
+                b.scenario_id(),
+                sc.id
+            );
+            std::process::exit(2);
+        }
+        // v3 bundles embed their device, so an id match alone is not
+        // enough: ground truth below is profiled on the registry's device,
+        // and a same-named SoC with different cost-model parameters would
+        // silently measure a device mismatch.
+        if b.scenario != *sc {
+            eprintln!(
+                "bundle {bp} embeds a device descriptor for '{}' that disagrees with this \
+                 registry's parameters; evaluate with the matching --device-spec",
+                b.scenario_id()
+            );
             std::process::exit(2);
         }
         // --method must not silently disagree with what the bundle holds.
@@ -434,7 +465,8 @@ fn cmd_predict(rest: &[String]) {
     }
 
     // Train-in-place path (one-off): same shared flags as `evaluate`.
-    let sc = or_die(cli::scenario_flag(rest));
+    let reg = or_die(cli::registry_flag(rest));
+    let sc = or_die(cli::scenario_flag(rest, &reg));
     let method = or_die(cli::method_flag(rest, Method::Gbdt));
     let (n_train, seed, runs) = (
         or_die(cli::train_flag(rest)),
@@ -451,7 +483,8 @@ fn cmd_predict(rest: &[String]) {
 }
 
 fn cmd_search(rest: &[String]) {
-    let scenarios = or_die(cli::scenario_list_flag(rest));
+    let reg = or_die(cli::registry_flag(rest));
+    let scenarios = or_die(cli::scenario_list_flag(rest, &reg));
     let method = or_die(cli::method_flag(rest, Method::Gbdt));
     if method == Method::Mlp {
         eprintln!("search serves from engine bundles (lasso|rf|gbdt); the MLP is engine-external");
@@ -613,10 +646,81 @@ fn cmd_bench(rest: &[String]) {
     println!("wrote {out} in {:.1}s", t0.elapsed().as_secs_f64());
 }
 
+/// `edgelat devices` — inspect and validate the open device universe.
+fn cmd_devices(rest: &[String]) {
+    // A leading flag is not a subcommand: `devices --device-spec f.json`
+    // defaults to `list` over the extended universe.
+    let sub = rest.first().filter(|a| !a.starts_with("--")).map(|s| s.as_str());
+    match sub.unwrap_or("list") {
+        "list" => {
+            let reg = or_die(cli::registry_flag(rest));
+            println!(
+                "{:<16} {:<22} {:>8} {:>7} {:>10}  gpu",
+                "soc", "platform", "clusters", "combos", "scenarios"
+            );
+            for spec in reg.specs() {
+                println!(
+                    "{:<16} {:<22} {:>8} {:>7} {:>10}  {}",
+                    spec.soc.name,
+                    spec.soc.platform,
+                    spec.soc.clusters.len(),
+                    spec.combos.len(),
+                    spec.scenario_count(),
+                    spec.soc.gpu.name
+                );
+            }
+        }
+        "show" => {
+            let name = rest.get(1).filter(|a| !a.starts_with("--")).unwrap_or_else(|| {
+                eprintln!("need a SoC name: edgelat devices show SOC [--device-spec F.json]");
+                std::process::exit(2);
+            });
+            let reg = or_die(cli::registry_flag(rest));
+            let spec = reg.spec(name).unwrap_or_else(|| {
+                eprintln!("unknown SoC '{name}' (see `edgelat devices list`)");
+                std::process::exit(2);
+            });
+            println!("{}", spec.to_json().to_string());
+        }
+        "validate" => {
+            // Validate spec files standalone: parse + schema + semantic
+            // checks + a registration dry-run into a fresh registry, so a
+            // committed builtin spec validates too (no duplicate clash).
+            let paths = or_die(cli::flag_all(rest, "--spec"));
+            if paths.is_empty() {
+                eprintln!("need --spec FILE.json (repeatable)");
+                std::process::exit(2);
+            }
+            let mut failed = false;
+            for path in &paths {
+                let mut fresh = Registry::new();
+                match fresh.load_spec_file(path) {
+                    Ok(name) => {
+                        println!("OK   {path}: {name} ({} scenarios)", fresh.scenario_count())
+                    }
+                    Err(e) => {
+                        eprintln!("FAIL {e}");
+                        failed = true;
+                    }
+                }
+            }
+            if failed {
+                std::process::exit(2);
+            }
+        }
+        other => {
+            eprintln!("unknown devices subcommand '{other}' (list|show|validate)");
+            std::process::exit(2);
+        }
+    }
+}
+
 fn cmd_list(rest: &[String]) {
-    match rest.first().map(|s| s.as_str()).unwrap_or("scenarios") {
+    let sub = rest.first().filter(|a| !a.starts_with("--")).map(|s| s.as_str());
+    match sub.unwrap_or("scenarios") {
         "scenarios" => {
-            for s in all_scenarios() {
+            let reg = or_die(cli::registry_flag(rest));
+            for s in reg.all() {
                 println!("{}", s.id);
             }
         }

@@ -276,7 +276,8 @@ mod tests {
             crate::zoo::resnets::resnet(10, 1.0),
         ];
         let socs = crate::device::socs();
-        let scenarios = [scenario::one_large_core("Snapdragon855"), Scenario::gpu(&socs[0])];
+        let scenarios =
+            [scenario::one_large_core("Snapdragon855").unwrap(), Scenario::gpu(&socs[0])];
         for sc in &scenarios {
             for g in &graphs {
                 for mode in
@@ -293,7 +294,7 @@ mod tests {
 
     #[test]
     fn rows_are_arena_slices_with_consistent_offsets() {
-        let sc = scenario::one_large_core("HelioP35");
+        let sc = scenario::one_large_core("HelioP35").unwrap();
         let g = crate::zoo::mobilenets::mobilenet_v1(0.25);
         let plan = lower(&sc, DeductionMode::Full, &g);
         assert_eq!(plan.len(), g.nodes.len());

@@ -7,7 +7,7 @@ use crate::device;
 use crate::exec_pool::ExecPool;
 use crate::graph::Graph;
 use crate::plan;
-use crate::scenario::Scenario;
+use crate::scenario::{Registry, Scenario, ScenarioError};
 use crate::tflite::KernelImpl;
 use crate::util::stats;
 
@@ -98,6 +98,19 @@ pub fn profile_set_with(
     pool.map(graphs, |_, g| profile(sc, g, seed, runs))
 }
 
+/// Profile a model under a scenario resolved by id against a [`Registry`]
+/// — the registry-threaded entry point (CLI, services, custom devices). An
+/// unknown id is a typed error, never a panic.
+pub fn profile_by_id(
+    reg: &Registry,
+    scenario_id: &str,
+    g: &Graph,
+    seed: u64,
+    runs: usize,
+) -> Result<ModelProfile, ScenarioError> {
+    Ok(profile(&reg.resolve(scenario_id)?, g, seed, runs))
+}
+
 /// A per-bucket training dataset: feature rows + latency targets.
 #[derive(Debug, Clone, Default)]
 pub struct BucketData {
@@ -128,7 +141,7 @@ mod tests {
 
     #[test]
     fn profile_is_deterministic() {
-        let sc = scenario::one_large_core("Snapdragon855");
+        let sc = scenario::one_large_core("Snapdragon855").unwrap();
         let g = crate::zoo::mobilenets::mobilenet_v1(0.5);
         let a = profile(&sc, &g, 42, 5);
         let b = profile(&sc, &g, 42, 5);
@@ -157,7 +170,7 @@ mod tests {
 
     #[test]
     fn bucket_datasets_cover_conv() {
-        let sc = scenario::one_large_core("HelioP35");
+        let sc = scenario::one_large_core("HelioP35").unwrap();
         let graphs = vec![
             crate::zoo::mobilenets::mobilenet_v1(0.25),
             crate::zoo::resnets::resnet(10, 1.0),
@@ -174,7 +187,7 @@ mod tests {
 
     #[test]
     fn profile_set_matches_sequential() {
-        let sc = scenario::one_large_core("Snapdragon710");
+        let sc = scenario::one_large_core("Snapdragon710").unwrap();
         let graphs = vec![
             crate::zoo::mobilenets::mobilenet_v1(0.25),
             crate::zoo::mobilenets::mobilenet_v1(0.5),

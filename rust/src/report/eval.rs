@@ -4,7 +4,7 @@
 //! optimization ablations (Figs 19/20), variance (Fig 32), the MLP
 //! train-size anomaly (Fig 33), and Winograd applicability (Table 2).
 
-use crate::device::{socs, DataRep, Soc, Target};
+use crate::device::{DataRep, Soc, Target};
 use crate::framework::{
     evaluate, evaluate_lowered, DeductionMode, Evaluation, ScenarioPredictor,
 };
@@ -13,7 +13,7 @@ use crate::predict::mlp::MlpContext;
 use crate::predict::Method;
 use crate::profiler::ModelProfile;
 use crate::report::{sweep, DataSet, ReportCtx};
-use crate::scenario::{cpu_combos, Scenario};
+use crate::scenario::{Registry, Scenario};
 use crate::tflite::{compile, select, CompileOptions};
 use crate::util::table::pct;
 use crate::util::{cov, mape, mean, Table};
@@ -68,6 +68,7 @@ fn fig_scenario(soc: &Soc, is_gpu: bool) -> Scenario {
         let mut counts = vec![0; soc.clusters.len()];
         counts[0] = 1;
         Scenario::cpu(soc, counts, DataRep::Fp32)
+            .expect("one large core is valid on every registered SoC")
     }
 }
 
@@ -110,7 +111,7 @@ pub fn fig14_methods_synth(ctx: &mut ReportCtx) -> Vec<Table> {
     let mut cells: Vec<(Method, bool, Scenario)> = Vec::new();
     for &method in Method::native() {
         for is_gpu in [false, true] {
-            for soc in socs() {
+            for soc in ctx.socs() {
                 cells.push((method, is_gpu, fig_scenario(&soc, is_gpu)));
             }
         }
@@ -124,7 +125,7 @@ pub fn fig14_methods_synth(ctx: &mut ReportCtx) -> Vec<Table> {
             eval_method(ctx, sc, tr, DataSet::Synth, te, *method, seed, None)
         },
     );
-    let n_soc = socs().len();
+    let n_soc = ctx.socs().len();
     for (group, chunk) in evs.chunks(n_soc).enumerate() {
         let (method, is_gpu, _) = &cells[group * n_soc];
         fig14_row(if *is_gpu { &mut gpu } else { &mut cpu }, *method, chunk, &op_cols);
@@ -132,7 +133,7 @@ pub fn fig14_methods_synth(ctx: &mut ReportCtx) -> Vec<Table> {
     if let Some(mlp) = &mlp {
         for is_gpu in [false, true] {
             let mut evs = Vec::new();
-            for soc in socs() {
+            for soc in ctx.socs() {
                 let sc = fig_scenario(&soc, is_gpu);
                 let (tr, te) = ctx.synth_profiles_split(&sc);
                 evs.push(eval_method(
@@ -161,17 +162,20 @@ struct ComboCell {
 }
 
 /// The (platform x core combo) cells of Figs 15/30 and 23/31, in table
-/// order.
-fn combo_cells(full: bool) -> Vec<ComboCell> {
+/// order, over the context's registered device universe.
+fn combo_cells(reg: &Registry, full: bool) -> Vec<ComboCell> {
     let mut cells = Vec::new();
-    for soc in socs() {
-        let combos = cpu_combos(&soc);
-        let combos = if full { combos } else { combos.into_iter().take(6).collect() };
+    for soc in reg.socs() {
+        let combos = reg.combos(&soc.name).expect("iterating registered SoCs");
+        let combos: Vec<Vec<usize>> =
+            if full { combos } else { combos.into_iter().take(6).collect() };
         for counts in combos {
             cells.push(ComboCell {
                 soc_name: soc.name.to_string(),
-                fp32: Scenario::cpu(&soc, counts.clone(), DataRep::Fp32),
-                int8: Scenario::cpu(&soc, counts, DataRep::Int8),
+                fp32: Scenario::cpu(&soc, counts.clone(), DataRep::Fp32)
+                    .expect("combo drawn from the SoC's own cluster table"),
+                int8: Scenario::cpu(&soc, counts, DataRep::Int8)
+                    .expect("combo drawn from the SoC's own cluster table"),
             });
         }
     }
@@ -200,7 +204,7 @@ fn combo_tables(
 /// Fig 15 (30): GBDT end-to-end predictions per core combo, fp32 + int8.
 pub fn fig15_gbdt_multicore(ctx: &mut ReportCtx, full: bool) -> Vec<Table> {
     let seed = ctx.cfg.seed;
-    let cells = combo_cells(full);
+    let cells = combo_cells(ctx.registry(), full);
     let rows = sweep::run(
         ctx,
         &cells,
@@ -230,7 +234,7 @@ pub fn fig16_gbdt_gpu(ctx: &mut ReportCtx) -> Vec<Table> {
         &["gpu", "Conv2D", "Winograd", "DepthwiseConv2D", "end-to-end"],
     );
     let seed = ctx.cfg.seed;
-    for soc in socs() {
+    for soc in ctx.socs() {
         let sc = Scenario::gpu(&soc);
         let (tr, te) = ctx.synth_profiles_split(&sc);
         let ev = eval_method(ctx, &sc, &tr, DataSet::Synth, &te, Method::Gbdt, seed, None);
@@ -246,10 +250,22 @@ pub fn fig16_gbdt_gpu(ctx: &mut ReportCtx) -> Vec<Table> {
     vec![t]
 }
 
+/// A one-row SKIPPED table for figures pinned to a specific paper device
+/// that the context's registry does not contain (a custom-only universe
+/// built via `ReportCtx::with_registry` is valid; these figures just have
+/// nothing to measure there).
+fn skipped_missing_soc(title: &str, soc: &str) -> Vec<Table> {
+    let mut t = Table::new(title, &["status"]);
+    t.row(vec![format!("SKIPPED: SoC '{soc}' is not in this context's registry")]);
+    vec![t]
+}
+
 /// Fig 17: convolution latency-range distribution, synthetic vs zoo, and
 /// Lasso accuracy per range (Helio P35, 1 large core).
 pub fn fig17_conv_ranges(ctx: &mut ReportCtx) -> Vec<Table> {
-    let sc = crate::scenario::one_large_core("HelioP35");
+    let Ok(sc) = ctx.registry().one_large_core("HelioP35") else {
+        return skipped_missing_soc("Fig 17 — conv latency ranges (Helio P35)", "HelioP35");
+    };
     let bins = [0.0, 10.0, 50.0, f64::INFINITY];
     let bin_names = ["<10ms", "10-50ms", ">50ms"];
     let mut a = Table::new(
@@ -328,7 +344,7 @@ pub fn fig18_methods_zoo(ctx: &mut ReportCtx) -> Vec<Table> {
     for &method in &methods {
         for (is_gpu, table) in [(false, &mut cpu), (true, &mut gpu)] {
             let mut e2e = Vec::new();
-            for soc in socs() {
+            for soc in ctx.socs() {
                 let sc = fig_scenario(&soc, is_gpu);
                 let (tr, _) = ctx.synth_profiles_split(&sc);
                 let te = ctx.profiles(&sc, DataSet::Zoo).to_vec();
@@ -377,7 +393,7 @@ pub fn fig19_fusion_ablation(ctx: &mut ReportCtx) -> Vec<Table> {
         &["gpu", "with fusion (paper)", "w/o fusion", "error reduction"],
     );
     let seed = ctx.cfg.seed;
-    for soc in socs() {
+    for soc in ctx.socs() {
         let sc = Scenario::gpu(&soc);
         let (tr, _) = ctx.synth_profiles_split(&sc);
         let te = ctx.profiles(&sc, DataSet::Zoo).to_vec();
@@ -479,7 +495,7 @@ fn train_size_sweep(ctx: &mut ReportCtx, test: DataSet, title: &str) -> Vec<Tabl
     let mut tables = Vec::new();
     let mut t = Table::new(title, &{
         let mut h = vec!["method", "train size"];
-        for soc in socs() {
+        for soc in ctx.socs() {
             h.push(Box::leak(format!("{} CPU", soc.name).into_boxed_str()) as &str);
             h.push(Box::leak(format!("{} GPU", soc.name).into_boxed_str()) as &str);
         }
@@ -494,7 +510,7 @@ fn train_size_sweep(ctx: &mut ReportCtx, test: DataSet, title: &str) -> Vec<Tabl
             let mut row = vec![method.name().to_string(), format!("{n}")];
             let mut cpu_all = Vec::new();
             let mut gpu_all = Vec::new();
-            for soc in socs() {
+            for soc in ctx.socs() {
                 for is_gpu in [false, true] {
                     let sc = fig_scenario(&soc, is_gpu);
                     let (tr_full, te_synth) = ctx.synth_profiles_split(&sc);
@@ -542,7 +558,7 @@ pub fn fig22_train_size_zoo(ctx: &mut ReportCtx) -> Vec<Table> {
 /// Fig 23 (31): Lasso with 30 training NAs, multicore combos, zoo test.
 pub fn fig23_lasso_multicore(ctx: &mut ReportCtx, full: bool) -> Vec<Table> {
     let seed = ctx.cfg.seed;
-    let cells = combo_cells(full);
+    let cells = combo_cells(ctx.registry(), full);
     let rows = sweep::run(
         ctx,
         &cells,
@@ -591,7 +607,7 @@ pub fn fig24_lasso_gpu(ctx: &mut ReportCtx) -> Vec<Table> {
         "in_h", "in_w", "in_c", "out_h", "out_w", "filters", "stride", "kh", "kw", "in_size",
         "out_size", "param_size", "FLOPs", "fused_extra_bytes", "fused_count",
     ];
-    for soc in socs() {
+    for soc in ctx.socs() {
         let sc = Scenario::gpu(&soc);
         let (tr_full, _) = ctx.synth_profiles_split(&sc);
         let tr = &tr_full[..30.min(tr_full.len())];
@@ -627,13 +643,14 @@ pub fn fig24_lasso_gpu(ctx: &mut ReportCtx) -> Vec<Table> {
 /// Fig 32: coefficient of variation of end-to-end latency vs core count.
 pub fn fig32_cov(ctx: &mut ReportCtx) -> Vec<Table> {
     let mut tables = Vec::new();
-    for soc in socs() {
+    for soc in ctx.socs() {
         let mut t = Table::new(
             &format!("Fig 32 — CoV of end-to-end latency per combo (synthetic test NAs), {}", soc.name),
             &["combo", "mean CoV", "max CoV"],
         );
-        for counts in cpu_combos(&soc) {
-            let sc = Scenario::cpu(&soc, counts, DataRep::Fp32);
+        for counts in ctx.combos(&soc) {
+            let sc = Scenario::cpu(&soc, counts, DataRep::Fp32)
+                .expect("combo drawn from the SoC's own cluster table");
             let profs = ctx.profiles(&sc, DataSet::Synth).to_vec();
             let covs: Vec<f64> = profs.iter().take(60).map(|p| cov(&p.samples)).collect();
             t.row(vec![
@@ -654,7 +671,9 @@ pub fn fig33_mlp_train_size(ctx: &mut ReportCtx) -> Vec<Table> {
         t.row(vec!["SKIPPED: artifacts/ not built (run `make artifacts`)".into()]);
         return vec![t];
     };
-    let sc = crate::scenario::one_large_core("Snapdragon855");
+    let Ok(sc) = ctx.registry().one_large_core("Snapdragon855") else {
+        return skipped_missing_soc("Fig 33 — MLP per-op error vs train size", "Snapdragon855");
+    };
     let (tr_full, te) = ctx.synth_profiles_split(&sc);
     let test_g = ctx.synth_split().1.to_vec();
     let seed = ctx.cfg.seed;

@@ -11,12 +11,13 @@ pub mod eval;
 pub mod study;
 pub mod sweep;
 
+use crate::device::Soc;
 use crate::exec_pool::ExecPool;
 use crate::framework::DeductionMode;
 use crate::graph::Graph;
 use crate::plan::{self, LoweredGraph};
 use crate::profiler::{profile_set, profile_set_with, ModelProfile};
-use crate::scenario::Scenario;
+use crate::scenario::{Registry, Scenario};
 use crate::util::Table;
 use std::collections::HashMap;
 use std::sync::{Arc, Mutex};
@@ -68,6 +69,10 @@ impl ReportConfig {
 /// (each (scenario, dataset) pair is profiled once per process).
 pub struct ReportCtx {
     pub cfg: ReportConfig,
+    /// The device universe the figures sweep: builtin by default, but any
+    /// registry works — register a custom SoC and every per-SoC figure
+    /// includes it.
+    registry: Arc<Registry>,
     zoo: Vec<Graph>,
     synth: Vec<Graph>,
     profiles: HashMap<String, Vec<ModelProfile>>,
@@ -81,6 +86,12 @@ pub struct ReportCtx {
 
 impl ReportCtx {
     pub fn new(cfg: ReportConfig) -> ReportCtx {
+        ReportCtx::with_registry(cfg, Arc::new(Registry::with_builtin()))
+    }
+
+    /// Build a context over a caller-supplied device universe — the path
+    /// for regenerating figures with runtime-registered SoCs included.
+    pub fn with_registry(cfg: ReportConfig, registry: Arc<Registry>) -> ReportCtx {
         let mut zoo = crate::zoo::all_graphs();
         if let Some(cap) = cfg.zoo_cap {
             zoo.truncate(cap);
@@ -89,7 +100,32 @@ impl ReportCtx {
             .into_iter()
             .map(|a| a.graph)
             .collect();
-        ReportCtx { cfg, zoo, synth, profiles: HashMap::new(), plans: Mutex::new(HashMap::new()) }
+        ReportCtx {
+            cfg,
+            registry,
+            zoo,
+            synth,
+            profiles: HashMap::new(),
+            plans: Mutex::new(HashMap::new()),
+        }
+    }
+
+    /// The device universe the figures run over.
+    pub fn registry(&self) -> &Registry {
+        &self.registry
+    }
+
+    /// Registered SoCs (cloned), in registration order — what the per-SoC
+    /// figure loops iterate.
+    pub fn socs(&self) -> Vec<Soc> {
+        self.registry.socs()
+    }
+
+    /// The studied core combos of a SoC yielded by [`socs`](Self::socs).
+    pub fn combos(&self, soc: &Soc) -> Vec<Vec<usize>> {
+        self.registry
+            .combos(&soc.name)
+            .expect("figure loops iterate registered SoCs only")
     }
 
     pub fn zoo(&self) -> &[Graph] {
@@ -280,7 +316,7 @@ mod tests {
         let mut ctx = ReportCtx::new(ReportConfig::smoke());
         assert_eq!(ctx.zoo().len(), 20);
         assert_eq!(ctx.synth().len(), 40);
-        let sc = crate::scenario::one_large_core("HelioP35");
+        let sc = crate::scenario::one_large_core("HelioP35").unwrap();
         let a = ctx.profiles(&sc, DataSet::Zoo).len();
         let b = ctx.profiles(&sc, DataSet::Zoo).len();
         assert_eq!(a, b);
@@ -298,8 +334,8 @@ mod tests {
         };
         let mut pre = ReportCtx::new(cfg.clone());
         let mut lazy = ReportCtx::new(cfg);
-        let sc1 = crate::scenario::one_large_core("HelioP35");
-        let sc2 = crate::scenario::one_large_core("Snapdragon855");
+        let sc1 = crate::scenario::one_large_core("HelioP35").unwrap();
+        let sc2 = crate::scenario::one_large_core("Snapdragon855").unwrap();
         pre.prefetch_profiles(&[
             (sc1.clone(), DataSet::Synth),
             (sc1.clone(), DataSet::Synth), // duplicates are computed once
@@ -324,7 +360,7 @@ mod tests {
     #[test]
     fn test_plans_lower_once_and_share() {
         let ctx = ReportCtx::new(ReportConfig::smoke());
-        let sc = crate::scenario::one_large_core("HelioP35");
+        let sc = crate::scenario::one_large_core("HelioP35").unwrap();
         let a = ctx.test_plans(&sc, DeductionMode::Full, DataSet::Synth);
         let b = ctx.test_plans(&sc, DeductionMode::Full, DataSet::Synth);
         // Same Arc: the second caller (another model family, another sweep
@@ -339,6 +375,22 @@ mod tests {
         let n = ctx.test_plans(&sc, DeductionMode::NoFusion, DataSet::Synth);
         assert!(!Arc::ptr_eq(&a, &n));
         assert_eq!(ctx.plans_cached(), 3);
+    }
+
+    #[test]
+    fn ctx_sweeps_a_custom_registry() {
+        let mut custom = crate::device::builtin_specs()[3].clone();
+        custom.soc.name = "ReportSoc".into();
+        let mut reg = Registry::with_builtin();
+        reg.register_soc(custom).unwrap();
+        let ctx = ReportCtx::with_registry(ReportConfig::smoke(), Arc::new(reg));
+        // Figure loops over ctx.socs()/ctx.combos() now include the custom
+        // device alongside the four builtin ones.
+        assert_eq!(ctx.socs().len(), 5);
+        let soc = ctx.socs().pop().unwrap();
+        assert_eq!(soc.name, "ReportSoc");
+        assert_eq!(ctx.combos(&soc).len(), 7);
+        assert!(ctx.registry().by_id("ReportSoc/gpu").is_some());
     }
 
     #[test]

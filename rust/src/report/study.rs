@@ -3,10 +3,10 @@
 //! selection (Figs 8/9), framework overhead (Fig 10), latency breakdowns
 //! (Figs 11/13), and the zoo scatter (Fig 25).
 
-use crate::device::{socs, DataRep, Target};
+use crate::device::{DataRep, Target};
 use crate::graph::OpType;
 use crate::report::{DataSet, ReportCtx};
-use crate::scenario::{cpu_combos, Scenario};
+use crate::scenario::Scenario;
 use crate::tflite::{compile, CompileOptions};
 use crate::util::table::{ms, pct};
 use crate::util::{mean, BoxStats, Table};
@@ -45,13 +45,14 @@ fn box_header(with_outliers: bool) -> Vec<&'static str> {
 /// multicore configuration, per SoC.
 pub fn fig02_multicore(ctx: &mut ReportCtx, outliers: bool) -> Vec<Table> {
     let mut tables = Vec::new();
-    for soc in socs() {
+    for soc in ctx.socs() {
         let mut t = Table::new(
             &format!("Fig {} — multicore end-to-end latency (ms), {} ({})", if outliers { 26 } else { 2 }, soc.name, soc.platform),
             &box_header(outliers),
         );
-        for counts in cpu_combos(&soc) {
-            let sc = Scenario::cpu(&soc, counts, DataRep::Fp32);
+        for counts in ctx.combos(&soc) {
+            let sc = Scenario::cpu(&soc, counts, DataRep::Fp32)
+                .expect("combo drawn from the SoC's own cluster table");
             let e2e: Vec<f64> = ctx
                 .profiles(&sc, DataSet::Zoo)
                 .iter()
@@ -76,14 +77,15 @@ pub fn fig03_op_speedup(ctx: &mut ReportCtx) -> Vec<Table> {
         OpType::ElementWise,
         OpType::ConcatSplit,
     ];
-    for soc in socs() {
-        // The largest homogeneous cluster with >= 2 cores.
-        let (ci, cluster) = soc
-            .clusters
-            .iter()
-            .enumerate()
-            .find(|(_, c)| c.count >= 2)
-            .expect("soc has a multi-core cluster");
+    for soc in ctx.socs() {
+        // The largest homogeneous cluster with >= 2 cores. A registered
+        // custom device may have none (all count-1 clusters) — nothing to
+        // sweep there, not a panic.
+        let Some((ci, cluster)) =
+            soc.clusters.iter().enumerate().find(|(_, c)| c.count >= 2)
+        else {
+            continue;
+        };
         let mut t = Table::new(
             &format!(
                 "Fig 3 — op-wise speedup vs 1 core on {} ({} cluster)",
@@ -102,7 +104,8 @@ pub fn fig03_op_speedup(ctx: &mut ReportCtx) -> Vec<Table> {
         for k in 1..=cluster.count {
             let mut counts = vec![0; soc.clusters.len()];
             counts[ci] = k;
-            let sc = Scenario::cpu(&soc, counts, DataRep::Fp32);
+            let sc = Scenario::cpu(&soc, counts, DataRep::Fp32)
+                .expect("combo drawn from the SoC's own cluster table");
             let mut by_type: std::collections::HashMap<OpType, Vec<f64>> = Default::default();
             for p in ctx.profiles(&sc, DataSet::Zoo) {
                 for o in &p.ops {
@@ -145,14 +148,16 @@ fn bucket_optype(bucket: &str) -> OpType {
 /// Fig 4 (27): quantization speedup on end-to-end latency per core combo.
 pub fn fig04_quantization(ctx: &mut ReportCtx, outliers: bool) -> Vec<Table> {
     let mut tables = Vec::new();
-    for soc in socs() {
+    for soc in ctx.socs() {
         let mut t = Table::new(
             &format!("Fig {} — int8 speedup over fp32 (end-to-end), {}", if outliers { 27 } else { 4 }, soc.name),
             &box_header(outliers),
         );
-        for counts in cpu_combos(&soc).into_iter().take(5) {
-            let f = Scenario::cpu(&soc, counts.clone(), DataRep::Fp32);
-            let q = Scenario::cpu(&soc, counts, DataRep::Int8);
+        for counts in ctx.combos(&soc).into_iter().take(5) {
+            let f = Scenario::cpu(&soc, counts.clone(), DataRep::Fp32)
+                .expect("combo drawn from the SoC's own cluster table");
+            let q = Scenario::cpu(&soc, counts, DataRep::Int8)
+                .expect("combo drawn from the SoC's own cluster table");
             let ef: Vec<f64> =
                 ctx.profiles(&f, DataSet::Zoo).iter().map(|p| p.end_to_end_ms).collect();
             let eq: Vec<f64> =
@@ -168,11 +173,13 @@ pub fn fig04_quantization(ctx: &mut ReportCtx, outliers: bool) -> Vec<Table> {
 /// Fig 5: per-op-type quantization speedup (element-wise/pad degrade).
 pub fn fig05_quant_opwise(ctx: &mut ReportCtx) -> Vec<Table> {
     let mut tables = Vec::new();
-    for soc in socs() {
+    for soc in ctx.socs() {
         let mut counts = vec![0; soc.clusters.len()];
         counts[0] = 1;
-        let f = Scenario::cpu(&soc, counts.clone(), DataRep::Fp32);
-        let q = Scenario::cpu(&soc, counts, DataRep::Int8);
+        let f = Scenario::cpu(&soc, counts.clone(), DataRep::Fp32)
+            .expect("combo drawn from the SoC's own cluster table");
+        let q = Scenario::cpu(&soc, counts, DataRep::Int8)
+            .expect("combo drawn from the SoC's own cluster table");
         let pf = ctx.profiles(&f, DataSet::Zoo).to_vec();
         let pq = ctx.profiles(&q, DataSet::Zoo).to_vec();
         let mut t = Table::new(
@@ -229,7 +236,7 @@ pub fn fig06_fusion(ctx: &mut ReportCtx, outliers: bool) -> Vec<Table> {
         &format!("Fig {} — fusion end-to-end speedup per GPU", if outliers { 28 } else { 6 }),
         &box_header(outliers),
     );
-    for soc in socs() {
+    for soc in ctx.socs() {
         let on = Scenario::gpu(&soc);
         let off = Scenario {
             target: Target::Gpu { options: CompileOptions { fusion: false, ..Default::default() } },
@@ -241,7 +248,7 @@ pub fn fig06_fusion(ctx: &mut ReportCtx, outliers: bool) -> Vec<Table> {
         let eoff: Vec<f64> =
             ctx.profiles(&off, DataSet::Zoo).iter().map(|p| p.end_to_end_ms).collect();
         let speedup: Vec<f64> = eoff.iter().zip(&eon).map(|(a, b)| a / b).collect();
-        b.row(boxrow(soc.gpu.name, &speedup, outliers));
+        b.row(boxrow(&soc.gpu.name, &speedup, outliers));
     }
     vec![a, b]
 }
@@ -249,7 +256,7 @@ pub fn fig06_fusion(ctx: &mut ReportCtx, outliers: bool) -> Vec<Table> {
 /// Fig 7 (29): fusion speedup per op type (element-wise ops vanish).
 pub fn fig07_fusion_opwise(ctx: &mut ReportCtx, outliers: bool) -> Vec<Table> {
     let mut tables = Vec::new();
-    for soc in socs().into_iter().take(2) {
+    for soc in ctx.socs().into_iter().take(2) {
         let on = Scenario::gpu(&soc);
         let off = Scenario {
             target: Target::Gpu { options: CompileOptions { fusion: false, ..Default::default() } },
@@ -298,7 +305,7 @@ pub fn fig08_winograd(ctx: &mut ReportCtx) -> Vec<Table> {
         "Fig 8 — Winograd kernels: end-to-end speedup per GPU (zoo)",
         &["gpu", "NAs with Winograd", "mean speedup", "max speedup"],
     );
-    for soc in socs() {
+    for soc in ctx.socs() {
         let on = Scenario::gpu(&soc);
         let off = Scenario {
             target: Target::Gpu { options: CompileOptions { winograd: false, ..Default::default() } },
@@ -351,7 +358,7 @@ pub fn fig09_grouped(ctx: &mut ReportCtx) -> Vec<Table> {
         }
         v
     };
-    for soc in socs() {
+    for soc in ctx.socs() {
         let on = Scenario::gpu(&soc);
         let off = Scenario {
             target: Target::Gpu { options: CompileOptions { grouped: false, ..Default::default() } },
@@ -380,17 +387,18 @@ pub fn fig10_overhead(ctx: &mut ReportCtx) -> Vec<Table> {
         &box_header(false),
     );
     let mut gpu = Table::new("Fig 10b — end-to-end minus Σkernel (ms), GPUs (zoo)", &box_header(false));
-    for soc in socs() {
+    for soc in ctx.socs() {
         let mut counts = vec![0; soc.clusters.len()];
         counts[0] = 1;
-        let sc = Scenario::cpu(&soc, counts, DataRep::Fp32);
+        let sc = Scenario::cpu(&soc, counts, DataRep::Fp32)
+            .expect("combo drawn from the SoC's own cluster table");
         let gaps: Vec<f64> =
             ctx.profiles(&sc, DataSet::Zoo).iter().map(|p| p.overhead_ms()).collect();
-        cpu.row(boxrow(soc.name, &gaps, false));
+        cpu.row(boxrow(&soc.name, &gaps, false));
         let sg = Scenario::gpu(&soc);
         let gg: Vec<f64> =
             ctx.profiles(&sg, DataSet::Zoo).iter().map(|p| p.overhead_ms()).collect();
-        gpu.row(boxrow(soc.gpu.name, &gg, false));
+        gpu.row(boxrow(&soc.gpu.name, &gg, false));
     }
     vec![cpu, gpu]
 }
@@ -424,7 +432,7 @@ fn breakdown(profiles: &[crate::profiler::ModelProfile], title: &str) -> Table {
 pub fn fig11_breakdown_zoo(ctx: &mut ReportCtx) -> Vec<Table> {
     let mut tables = Vec::new();
     let s855 = crate::device::soc_by_name("Snapdragon855").unwrap();
-    let sc = Scenario::cpu(&s855, vec![1, 0, 0], DataRep::Fp32);
+    let sc = Scenario::cpu(&s855, vec![1, 0, 0], DataRep::Fp32).expect("1L is valid on S855");
     let p = ctx.profiles(&sc, DataSet::Zoo).to_vec();
     tables.push(breakdown(&p, "Fig 11 — latency breakdown, Pixel 4 CPU (1 large core, zoo)"));
     for soc_name in ["Snapdragon855", "Exynos9820"] {
@@ -443,7 +451,7 @@ pub fn fig11_breakdown_zoo(ctx: &mut ReportCtx) -> Vec<Table> {
 pub fn fig13_breakdown_synth(ctx: &mut ReportCtx) -> Vec<Table> {
     let mut tables = Vec::new();
     let s855 = crate::device::soc_by_name("Snapdragon855").unwrap();
-    let sc = Scenario::cpu(&s855, vec![1, 0, 0], DataRep::Fp32);
+    let sc = Scenario::cpu(&s855, vec![1, 0, 0], DataRep::Fp32).expect("1L is valid on S855");
     let p = ctx.profiles(&sc, DataSet::Synth).to_vec();
     tables.push(breakdown(&p, "Fig 13 — latency breakdown, Pixel 4 CPU (synthetic dataset)"));
     let e9820 = crate::device::soc_by_name("Exynos9820").unwrap();

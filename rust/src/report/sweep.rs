@@ -60,8 +60,8 @@ mod tests {
         };
         let socs = crate::device::socs();
         let cells: Vec<Scenario> = vec![
-            one_large_core("HelioP35"),
-            one_large_core("Snapdragon855"),
+            one_large_core("HelioP35").unwrap(),
+            one_large_core("Snapdragon855").unwrap(),
             Scenario::gpu(&socs[0]),
         ];
         let seed = cfg.seed;

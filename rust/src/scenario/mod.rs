@@ -1,12 +1,67 @@
-//! The 72 measurement scenarios of Section 4.3: for each of the 4 SoCs, a
-//! set of CPU core combinations x {fp32, int8} plus the GPU — 34 CPU combos
-//! x 2 representations + 4 GPUs = 72.
+//! Measurement/serving scenarios over an **open** device universe.
+//!
+//! A scenario is one (SoC, target) pair — a CPU core combination in fp32 or
+//! int8, or the GPU. The paper studies 72 of them across 4 SoCs (Section
+//! 4.3); this module no longer hard-codes that set. The single source of
+//! scenario truth is the [`Registry`]: the four Table 1 devices are
+//! committed spec data (`device/specs/*.json`) registered into
+//! [`Registry::builtin`], and any new device is a spec file registered at
+//! runtime ([`Registry::load_spec_json`], `--device-spec` on the CLI).
+//!
+//! Construction is fallible ([`ScenarioError`]) — an invalid core combo or
+//! an unknown SoC is a typed error surfaced to the caller, never a library
+//! panic. The free functions at the bottom are thin compatibility shims
+//! over the builtin singleton kept so existing figure/test code compiles;
+//! new code should hold a `Registry` (or `&'static Registry`).
 
-use crate::device::{soc_by_name, CoreCombo, DataRep, Soc, Target};
+mod registry;
+
+pub use registry::Registry;
+
+use crate::device::{CoreCombo, DataRep, Soc, Target};
 use crate::tflite::CompileOptions;
+use std::fmt;
+use std::sync::Arc;
+
+/// Typed errors for scenario construction and registry operations.
+#[derive(Debug, Clone, PartialEq)]
+pub enum ScenarioError {
+    /// No registered SoC with this name.
+    UnknownSoc(String),
+    /// No registered scenario with this id.
+    UnknownScenario(String),
+    /// A SoC with this name is already registered.
+    DuplicateSoc(String),
+    /// A core combination this SoC cannot realize.
+    InvalidCombo { soc: String, detail: String },
+    /// A malformed or invalid device-spec document.
+    Spec(String),
+}
+
+impl fmt::Display for ScenarioError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            ScenarioError::UnknownSoc(name) => {
+                write!(f, "unknown SoC '{name}' (see `edgelat devices list`)")
+            }
+            ScenarioError::UnknownScenario(id) => {
+                write!(f, "unknown scenario '{id}' (see `edgelat list scenarios`)")
+            }
+            ScenarioError::DuplicateSoc(name) => {
+                write!(f, "SoC '{name}' is already registered")
+            }
+            ScenarioError::InvalidCombo { soc, detail } => {
+                write!(f, "invalid core combo on {soc}: {detail}")
+            }
+            ScenarioError::Spec(e) => write!(f, "device spec error: {e}"),
+        }
+    }
+}
+
+impl std::error::Error for ScenarioError {}
 
 /// One profiling/prediction scenario on a specific SoC.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct Scenario {
     pub soc: Soc,
     pub target: Target,
@@ -15,11 +70,15 @@ pub struct Scenario {
 }
 
 impl Scenario {
-    pub fn cpu(soc: &Soc, counts: Vec<usize>, rep: DataRep) -> Scenario {
+    /// A CPU scenario, validating the combo against the SoC's clusters.
+    pub fn cpu(soc: &Soc, counts: Vec<usize>, rep: DataRep) -> Result<Scenario, ScenarioError> {
         let combo = CoreCombo::new(counts);
-        combo.validate(soc).expect("invalid combo");
+        combo.validate(soc).map_err(|detail| ScenarioError::InvalidCombo {
+            soc: soc.name.clone(),
+            detail,
+        })?;
         let id = format!("{}/cpu/{}/{}", soc.name, combo.label(soc), rep.name());
-        Scenario { soc: soc.clone(), target: Target::Cpu { combo, rep }, id }
+        Ok(Scenario { soc: soc.clone(), target: Target::Cpu { combo, rep }, id })
     }
 
     pub fn gpu(soc: &Soc) -> Scenario {
@@ -43,115 +102,35 @@ impl Scenario {
     }
 }
 
-/// Per-SoC CPU core combinations studied (Figs 2, 15, 23).
-pub fn cpu_combos(soc: &Soc) -> Vec<Vec<usize>> {
-    match soc.name {
-        // L=1 prime, M=3 gold, S=4 silver
-        "Snapdragon855" => vec![
-            vec![1, 0, 0],
-            vec![0, 1, 0],
-            vec![0, 2, 0],
-            vec![0, 3, 0],
-            vec![0, 0, 1],
-            vec![0, 0, 2],
-            vec![0, 0, 4],
-            vec![1, 1, 0],
-            vec![1, 3, 0],
-            vec![0, 1, 1],
-        ],
-        // L=2 gold, S=6 silver
-        "Snapdragon710" => vec![
-            vec![1, 0],
-            vec![2, 0],
-            vec![0, 1],
-            vec![0, 2],
-            vec![0, 4],
-            vec![0, 6],
-            vec![1, 1],
-        ],
-        // L=2 M4, M=2 A75, S=4 A55
-        "Exynos9820" => vec![
-            vec![1, 0, 0],
-            vec![2, 0, 0],
-            vec![0, 1, 0],
-            vec![0, 2, 0],
-            vec![0, 0, 1],
-            vec![0, 0, 2],
-            vec![0, 0, 4],
-            vec![1, 0, 1],
-            vec![1, 2, 0],
-            vec![2, 2, 4],
-        ],
-        // L=4 A53@2.3, S=4 A53@1.8
-        "HelioP35" => vec![
-            vec![1, 0],
-            vec![2, 0],
-            vec![4, 0],
-            vec![0, 1],
-            vec![0, 2],
-            vec![0, 4],
-            vec![4, 4],
-        ],
-        other => panic!("unknown soc {other}"),
-    }
+/// Per-SoC CPU core combinations studied (Figs 2, 15, 23). Compat shim over
+/// [`Registry::builtin`] — runtime-registered SoCs resolve through their own
+/// registry's [`Registry::combos`].
+pub fn cpu_combos(soc: &Soc) -> Result<Vec<Vec<usize>>, ScenarioError> {
+    Registry::builtin().combos(&soc.name)
 }
 
-/// All 72 scenarios across the 4 platforms.
+/// All 72 scenarios across the 4 builtin platforms. Compat shim (clones);
+/// prefer [`Registry::all`], which hands out `Arc<Scenario>`.
 pub fn all_scenarios() -> Vec<Scenario> {
-    let mut v = Vec::new();
-    for soc in crate::device::socs() {
-        for counts in cpu_combos(&soc) {
-            for rep in [DataRep::Fp32, DataRep::Int8] {
-                v.push(Scenario::cpu(&soc, counts.clone(), rep));
-            }
-        }
-        v.push(Scenario::gpu(&soc));
-    }
-    v
+    Registry::builtin().all().iter().map(|s| (**s).clone()).collect()
 }
 
 /// The "default" NAS scenarios the headline results use: one large CPU core
-/// (fp32) per platform plus each GPU (Fig 14, Tables 4/5).
+/// (fp32) per platform plus each GPU (Fig 14, Tables 4/5). Compat shim over
+/// [`Registry::headline`].
 pub fn headline_scenarios() -> Vec<Scenario> {
-    let mut v = Vec::new();
-    for soc in crate::device::socs() {
-        let mut counts = vec![0; soc.clusters.len()];
-        counts[0] = 1;
-        v.push(Scenario::cpu(&soc, counts, DataRep::Fp32));
-        v.push(Scenario::gpu(&soc));
-    }
-    v
+    Registry::builtin().headline()
 }
 
-/// Find a scenario by id.
-///
-/// Backed by a lazily-built index: the old implementation rebuilt all 72
-/// scenarios per lookup, which made multi-bundle `EngineBuilder::build`
-/// (one `by_id` call per bundle) and CLI flag parsing quadratic.
-pub fn by_id(id: &str) -> Option<Scenario> {
-    let (all, by_id) = scenario_index();
-    by_id.get(id).map(|&i| all[i].clone())
+/// Find a builtin scenario by id. Hands out the registry's shared
+/// `Arc<Scenario>` — no `Scenario` (SoC + clusters) clone per lookup.
+pub fn by_id(id: &str) -> Option<Arc<Scenario>> {
+    Registry::builtin().by_id(id)
 }
 
-fn scenario_index(
-) -> &'static (Vec<Scenario>, std::collections::HashMap<String, usize>) {
-    static INDEX: std::sync::OnceLock<(
-        Vec<Scenario>,
-        std::collections::HashMap<String, usize>,
-    )> = std::sync::OnceLock::new();
-    INDEX.get_or_init(|| {
-        let all = all_scenarios();
-        let by_id = all.iter().enumerate().map(|(i, s)| (s.id.clone(), i)).collect();
-        (all, by_id)
-    })
-}
-
-/// Build a single-large-core fp32 scenario for a SoC by name.
-pub fn one_large_core(soc_name: &str) -> Scenario {
-    let soc = soc_by_name(soc_name).expect("unknown soc");
-    let mut counts = vec![0; soc.clusters.len()];
-    counts[0] = 1;
-    Scenario::cpu(&soc, counts, DataRep::Fp32)
+/// Build a single-large-core fp32 scenario for a builtin SoC by name.
+pub fn one_large_core(soc_name: &str) -> Result<Scenario, ScenarioError> {
+    Registry::builtin().one_large_core(soc_name)
 }
 
 #[cfg(test)]
@@ -178,7 +157,7 @@ mod tests {
     #[test]
     fn all_combos_valid() {
         for soc in crate::device::socs() {
-            for c in cpu_combos(&soc) {
+            for c in cpu_combos(&soc).unwrap() {
                 CoreCombo::new(c).validate(&soc).unwrap();
             }
         }
@@ -202,5 +181,30 @@ mod tests {
     fn by_id_unknown_is_none() {
         assert!(by_id("NoSuchSoc/cpu/1L/fp32").is_none());
         assert!(by_id("").is_none());
+    }
+
+    #[test]
+    fn by_id_shares_one_arc_per_scenario() {
+        let a = by_id("HelioP35/gpu").unwrap();
+        let b = by_id("HelioP35/gpu").unwrap();
+        assert!(Arc::ptr_eq(&a, &b), "lookups must not clone the scenario");
+    }
+
+    #[test]
+    fn invalid_inputs_are_typed_errors_not_panics() {
+        let soc = crate::device::soc_by_name("Snapdragon855").unwrap();
+        // Too many prime cores: InvalidCombo naming the SoC.
+        let err = Scenario::cpu(&soc, vec![2, 0, 0], DataRep::Fp32).unwrap_err();
+        assert!(matches!(err, ScenarioError::InvalidCombo { .. }), "{err}");
+        assert!(err.to_string().contains("Snapdragon855"), "{err}");
+        // Wrong arity and the empty combo too.
+        assert!(Scenario::cpu(&soc, vec![1, 0], DataRep::Fp32).is_err());
+        assert!(Scenario::cpu(&soc, vec![0, 0, 0], DataRep::Int8).is_err());
+        // Unknown SoC name: UnknownSoc, not a panic.
+        let err = one_large_core("NotASoc").unwrap_err();
+        assert_eq!(err, ScenarioError::UnknownSoc("NotASoc".into()));
+        let fake = Soc { name: "NotASoc".into(), ..soc };
+        let err = cpu_combos(&fake).unwrap_err();
+        assert_eq!(err, ScenarioError::UnknownSoc("NotASoc".into()));
     }
 }

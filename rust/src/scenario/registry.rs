@@ -1,0 +1,279 @@
+//! The [`Registry`]: the single source of scenario truth over an open,
+//! data-driven device universe.
+//!
+//! A registry owns a set of [`SocSpec`]s and the scenarios they yield —
+//! for each spec, every studied core combo in both data representations
+//! plus the GPU, in spec order (the builtin registry reproduces the
+//! paper's 72 scenarios bit-identically from the committed spec files).
+//! Scenarios are stored once behind `Arc`, so [`by_id`](Registry::by_id)
+//! lookups hand out shared pointers instead of cloning a `Soc` + cluster
+//! table per call.
+
+use crate::device::{builtin_specs, DataRep, Soc, SocSpec};
+use crate::scenario::{Scenario, ScenarioError};
+use crate::util::Json;
+use std::collections::HashMap;
+use std::sync::Arc;
+
+/// An ordered set of registered SoCs and their scenarios.
+#[derive(Debug, Clone, Default)]
+pub struct Registry {
+    specs: Vec<Arc<SocSpec>>,
+    scenarios: Vec<Arc<Scenario>>,
+    index: HashMap<String, usize>,
+}
+
+impl Registry {
+    /// An empty registry (no devices).
+    pub fn new() -> Registry {
+        Registry::default()
+    }
+
+    /// A registry holding the four builtin Table 1 SoCs.
+    pub fn with_builtin() -> Registry {
+        let mut r = Registry::new();
+        for spec in builtin_specs() {
+            r.register_soc(spec.clone()).expect("builtin specs register cleanly");
+        }
+        r
+    }
+
+    /// The shared builtin singleton, built once per process — what the
+    /// compatibility shims in `scenario` resolve against.
+    pub fn builtin() -> &'static Registry {
+        static REG: std::sync::OnceLock<Registry> = std::sync::OnceLock::new();
+        REG.get_or_init(Registry::with_builtin)
+    }
+
+    /// Register a SoC: validate the spec, then materialize its scenarios
+    /// (per combo: fp32 then int8; then the GPU — the Section 4.3
+    /// enumeration order). Returns the number of scenarios added.
+    pub fn register_soc(&mut self, spec: SocSpec) -> Result<usize, ScenarioError> {
+        spec.validate().map_err(ScenarioError::Spec)?;
+        if self.spec(&spec.soc.name).is_some() {
+            return Err(ScenarioError::DuplicateSoc(spec.soc.name.clone()));
+        }
+        let mut scenarios = Vec::with_capacity(spec.scenario_count());
+        for counts in &spec.combos {
+            for rep in [DataRep::Fp32, DataRep::Int8] {
+                scenarios.push(Scenario::cpu(&spec.soc, counts.clone(), rep)?);
+            }
+        }
+        scenarios.push(Scenario::gpu(&spec.soc));
+        let added = scenarios.len();
+        for s in scenarios {
+            // Ids cannot collide: the (unique) SoC name prefixes every id,
+            // and `SocSpec::validate` rejects duplicate combo labels.
+            debug_assert!(!self.index.contains_key(&s.id), "{}", s.id);
+            self.index.insert(s.id.clone(), self.scenarios.len());
+            self.scenarios.push(Arc::new(s));
+        }
+        self.specs.push(Arc::new(spec));
+        Ok(added)
+    }
+
+    /// Parse, validate, and register a device-spec JSON document (the
+    /// `--device-spec file.json` path). Returns the registered SoC name.
+    pub fn load_spec_json(&mut self, text: &str) -> Result<String, ScenarioError> {
+        let j = Json::parse(text).map_err(ScenarioError::Spec)?;
+        let spec = SocSpec::from_json(&j).map_err(ScenarioError::Spec)?;
+        let name = spec.soc.name.clone();
+        self.register_soc(spec)?;
+        Ok(name)
+    }
+
+    /// Read and register a device-spec file — the one copy of the
+    /// file-loading path (CLI `--device-spec`, `devices validate`,
+    /// examples). Every error, I/O or semantic, names the file.
+    pub fn load_spec_file(
+        &mut self,
+        path: impl AsRef<std::path::Path>,
+    ) -> Result<String, ScenarioError> {
+        let path = path.as_ref();
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| ScenarioError::Spec(format!("reading {}: {e}", path.display())))?;
+        self.load_spec_json(&text).map_err(|e| {
+            // Unwrap the Spec variant so the message is not double-prefixed.
+            let detail = match e {
+                ScenarioError::Spec(s) => s,
+                other => other.to_string(),
+            };
+            ScenarioError::Spec(format!("{}: {detail}", path.display()))
+        })
+    }
+
+    /// Registered specs, in registration order.
+    pub fn specs(&self) -> &[Arc<SocSpec>] {
+        &self.specs
+    }
+
+    /// The spec of a registered SoC.
+    pub fn spec(&self, soc_name: &str) -> Option<&Arc<SocSpec>> {
+        self.specs.iter().find(|s| s.soc.name == soc_name)
+    }
+
+    /// Registered SoCs (cloned), in registration order.
+    pub fn socs(&self) -> Vec<Soc> {
+        self.specs.iter().map(|s| s.soc.clone()).collect()
+    }
+
+    /// The studied CPU core combos of a registered SoC.
+    pub fn combos(&self, soc_name: &str) -> Result<Vec<Vec<usize>>, ScenarioError> {
+        self.spec(soc_name)
+            .map(|s| s.combos.clone())
+            .ok_or_else(|| ScenarioError::UnknownSoc(soc_name.to_string()))
+    }
+
+    /// Every registered scenario, in registration order (for the builtin
+    /// registry: the paper's 72).
+    pub fn all(&self) -> &[Arc<Scenario>] {
+        &self.scenarios
+    }
+
+    /// Find a scenario by id — a shared `Arc`, no clone.
+    pub fn by_id(&self, id: &str) -> Option<Arc<Scenario>> {
+        self.index.get(id).map(|&i| self.scenarios[i].clone())
+    }
+
+    /// Like [`by_id`](Self::by_id) but with a typed error naming the id.
+    pub fn resolve(&self, id: &str) -> Result<Arc<Scenario>, ScenarioError> {
+        self.by_id(id).ok_or_else(|| ScenarioError::UnknownScenario(id.to_string()))
+    }
+
+    /// The headline per-device scenarios (Fig 14, Tables 4/5): one large
+    /// CPU core (fp32) plus the GPU, for every registered SoC.
+    pub fn headline(&self) -> Vec<Scenario> {
+        self.specs
+            .iter()
+            .flat_map(|spec| {
+                [
+                    self.one_large_core(&spec.soc.name)
+                        .expect("spec validated at registration"),
+                    Scenario::gpu(&spec.soc),
+                ]
+            })
+            .collect()
+    }
+
+    /// A single-large-core fp32 scenario for a registered SoC. Always
+    /// constructible: validation guarantees `clusters[0]` has >= 1 core.
+    pub fn one_large_core(&self, soc_name: &str) -> Result<Scenario, ScenarioError> {
+        let spec = self
+            .spec(soc_name)
+            .ok_or_else(|| ScenarioError::UnknownSoc(soc_name.to_string()))?;
+        let mut counts = vec![0; spec.soc.clusters.len()];
+        counts[0] = 1;
+        Scenario::cpu(&spec.soc, counts, DataRep::Fp32)
+    }
+
+    /// Number of registered SoCs.
+    pub fn soc_count(&self) -> usize {
+        self.specs.len()
+    }
+
+    /// Number of registered scenarios.
+    pub fn scenario_count(&self) -> usize {
+        self.scenarios.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn custom_spec() -> SocSpec {
+        let mut spec = builtin_specs()[1].clone(); // Snapdragon710 shape
+        spec.soc.name = "TestSoc".into();
+        spec.soc.platform = "Test Phone".into();
+        spec
+    }
+
+    #[test]
+    fn builtin_registry_matches_the_paper() {
+        let r = Registry::builtin();
+        assert_eq!(r.soc_count(), 4);
+        assert_eq!(r.scenario_count(), 72);
+        assert_eq!(r.headline().len(), 8);
+        // Ordering reproduces the old hard-coded enumeration.
+        assert_eq!(r.all()[0].id, "Snapdragon855/cpu/1L/fp32");
+        assert_eq!(r.all()[1].id, "Snapdragon855/cpu/1L/int8");
+        assert!(r.all()[20].is_gpu(), "{}", r.all()[20].id);
+    }
+
+    #[test]
+    fn empty_registry_knows_nothing() {
+        let r = Registry::new();
+        assert_eq!(r.scenario_count(), 0);
+        assert!(r.by_id("Snapdragon855/cpu/1L/fp32").is_none());
+        assert_eq!(
+            r.one_large_core("Snapdragon855").unwrap_err(),
+            ScenarioError::UnknownSoc("Snapdragon855".into())
+        );
+        assert_eq!(
+            r.resolve("X/gpu").unwrap_err(),
+            ScenarioError::UnknownScenario("X/gpu".into())
+        );
+    }
+
+    #[test]
+    fn register_custom_soc_extends_the_universe() {
+        let mut r = Registry::with_builtin();
+        let added = r.register_soc(custom_spec()).unwrap();
+        assert_eq!(added, 7 * 2 + 1);
+        assert_eq!(r.scenario_count(), 72 + 15);
+        assert_eq!(r.soc_count(), 5);
+        let sc = r.by_id("TestSoc/cpu/1L/fp32").expect("registered scenario");
+        assert_eq!(sc.soc.platform, "Test Phone");
+        assert!(r.by_id("TestSoc/gpu").is_some());
+        // The builtin singleton is untouched by local registration.
+        assert_eq!(Registry::builtin().scenario_count(), 72);
+        assert!(Registry::builtin().by_id("TestSoc/gpu").is_none());
+    }
+
+    #[test]
+    fn duplicate_and_invalid_registrations_rejected() {
+        let mut r = Registry::with_builtin();
+        let err = r.register_soc(builtin_specs()[0].clone()).unwrap_err();
+        assert_eq!(err, ScenarioError::DuplicateSoc("Snapdragon855".into()));
+        let mut bad = custom_spec();
+        bad.combos.push(vec![99, 0]);
+        assert!(matches!(r.register_soc(bad), Err(ScenarioError::Spec(_))));
+        // Failed registrations leave the registry unchanged.
+        assert_eq!(r.scenario_count(), 72);
+    }
+
+    #[test]
+    fn load_spec_json_roundtrip() {
+        let text = custom_spec().to_json().to_string();
+        let mut r = Registry::new();
+        let name = r.load_spec_json(&text).unwrap();
+        assert_eq!(name, "TestSoc");
+        assert_eq!(r.scenario_count(), 15);
+        assert!(matches!(
+            r.load_spec_json("{ not json"),
+            Err(ScenarioError::Spec(_))
+        ));
+        assert!(matches!(
+            r.load_spec_json("{\"format\":\"nope\"}"),
+            Err(ScenarioError::Spec(_))
+        ));
+    }
+
+    #[test]
+    fn load_spec_file_names_the_path_in_errors() {
+        let mut r = Registry::new();
+        let err = r.load_spec_file("/no/such/dir/spec.json").unwrap_err();
+        assert!(err.to_string().contains("/no/such/dir/spec.json"), "{err}");
+        let path = std::env::temp_dir()
+            .join(format!("edgelat_registry_spec_{}.json", std::process::id()));
+        std::fs::write(&path, "{}").unwrap();
+        let err = r.load_spec_file(&path).unwrap_err();
+        let msg = err.to_string();
+        assert!(msg.contains("edgelat_registry_spec"), "{msg}");
+        // Not double-prefixed by the Spec variant's Display.
+        assert_eq!(msg.matches("device spec error").count(), 1, "{msg}");
+        std::fs::write(&path, custom_spec().to_json().to_string()).unwrap();
+        assert_eq!(r.load_spec_file(&path).unwrap(), "TestSoc");
+        let _ = std::fs::remove_file(&path);
+    }
+}

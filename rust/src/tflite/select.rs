@@ -32,6 +32,19 @@ impl GpuKind {
             GpuKind::Amd => "AMD",
         }
     }
+
+    /// Inverse of [`name`](Self::name), for device-spec files and bundle
+    /// descriptors. Case-insensitive.
+    pub fn parse(s: &str) -> Option<GpuKind> {
+        match s.to_ascii_lowercase().as_str() {
+            "adreno6xx" => Some(GpuKind::Adreno6xx),
+            "adreno" => Some(GpuKind::Adreno),
+            "mali" => Some(GpuKind::Mali),
+            "powervr" => Some(GpuKind::PowerVR),
+            "amd" => Some(GpuKind::Amd),
+            _ => None,
+        }
+    }
 }
 
 /// The implementation chosen for a compiled kernel.

@@ -90,6 +90,23 @@ impl Json {
             .ok_or_else(|| format!("key '{key}' is not a string"))
     }
 
+    /// Parse this value as an array of non-negative integers — the one
+    /// copy of the coercion rule shared by device-spec combos and bundle
+    /// target counts (same rule as [`req_usize`](Self::req_usize), applied
+    /// element-wise).
+    pub fn usize_arr(&self) -> Result<Vec<usize>, String> {
+        let arr = self.as_arr().ok_or_else(|| "not an array".to_string())?;
+        arr.iter()
+            .enumerate()
+            .map(|(i, x)| {
+                x.as_f64()
+                    .filter(|v| *v >= 0.0 && v.fract() == 0.0)
+                    .map(|v| v as usize)
+                    .ok_or_else(|| format!("[{i}] is not a non-negative integer"))
+            })
+            .collect()
+    }
+
     pub fn req_f64_arr(&self, key: &str) -> Result<Vec<f64>, String> {
         let arr = self
             .req(key)?

@@ -1,0 +1,200 @@
+//! Integration: the open device universe.
+//!
+//! The acceptance path of the registry redesign: a never-before-seen SoC
+//! defined only by a JSON spec is registered, profiled, trained into a v3
+//! predictor bundle, reloaded **without the spec available anywhere** (the
+//! descriptor travels inside the bundle), and served via `predict_batch` —
+//! plus the spec round-trip property (builtin SoCs → JSON → registry
+//! reproduces all 72 scenario ids, combos, and lowered plans exactly) and
+//! the I/O error contract (paths named in errors).
+
+use edgelat::engine::{EngineBuilder, PredictRequest, PredictorBundle};
+use edgelat::framework::DeductionMode;
+use edgelat::graph::Graph;
+use edgelat::plan;
+use edgelat::predict::Method;
+use edgelat::profiler::{profile_by_id, profile_set};
+use edgelat::scenario::{Registry, ScenarioError};
+use edgelat::util::Json;
+use std::path::PathBuf;
+
+/// A SoC that exists nowhere in the source tree: big.LITTLE with an
+/// Adreno-class GPU, described entirely as data.
+const PHANTOM_SPEC: &str = r#"{
+  "format": "edgelat.device_spec",
+  "version": 1,
+  "name": "PhantomX1",
+  "platform": "Integration-test handset",
+  "clusters": [
+    {"kind": "large", "name": "Cortex-X1", "count": 1, "ghz": 2.9, "flops_per_cycle": 16.0, "int8_speedup": 3.1, "stream_gbps": 9.0},
+    {"kind": "small", "name": "Cortex-A55", "count": 4, "ghz": 1.9, "flops_per_cycle": 8.0, "int8_speedup": 2.2, "stream_gbps": 3.6}
+  ],
+  "gpu": {"kind": "Adreno6xx", "name": "Adreno 660", "gflops": 1500.0, "mem_gbps": 44.0, "dispatch_us": 25.0, "overhead_ms": 2.9, "overhead_sigma": 0.09, "run_sigma": 0.03},
+  "mem_gbps": 44.0,
+  "cpu_op_overhead_us": 2.8,
+  "cpu_overhead_ms": 0.6,
+  "hetero_sync_mult": 2.3,
+  "quant_ew_penalty": 2.5,
+  "noise_base": 0.011,
+  "noise_per_small_core": 0.014,
+  "noise_per_extra_core": 0.005,
+  "combos": [[1, 0], [0, 2], [1, 2]]
+}"#;
+
+fn nas_graphs(seed: u64, n: usize) -> Vec<Graph> {
+    edgelat::nas::sample_dataset(seed, n).into_iter().map(|a| a.graph).collect()
+}
+
+/// Locate a repo file, robust to where the build harness roots the
+/// manifest (repo root or `rust/`).
+fn repo_path(rel: &str) -> PathBuf {
+    let root = PathBuf::from(env!("CARGO_MANIFEST_DIR"));
+    for cand in [root.join(rel), root.join("..").join(rel)] {
+        if cand.exists() {
+            return cand;
+        }
+    }
+    panic!("{rel} not found under {}", root.display());
+}
+
+#[test]
+fn never_seen_soc_trains_serializes_and_serves_without_its_spec() {
+    // 1. Register the phantom device from JSON alone.
+    let mut reg = Registry::with_builtin();
+    let name = reg.load_spec_json(PHANTOM_SPEC).expect("phantom spec registers");
+    assert_eq!(name, "PhantomX1");
+    assert_eq!(reg.scenario_count(), 72 + 3 * 2 + 1);
+
+    // 2. Profile + train a bundle for a phantom scenario, through the same
+    //    registry-resolved path the CLI uses.
+    let sc = reg.by_id("PhantomX1/cpu/1L+2S/fp32").expect("registered scenario");
+    let train = nas_graphs(41, 12);
+    let profiles = profile_set(&sc, &train, 41, 2);
+    let bundle =
+        PredictorBundle::train(&sc, &profiles, Method::Gbdt, DeductionMode::Full, 41).unwrap();
+    let pred = bundle.to_predictor().expect("in-memory predictor");
+
+    // 3. Serialize, then reload in a "fresh process": nothing but the
+    //    bundle file — no registry, no spec on disk.
+    let path = std::env::temp_dir()
+        .join(format!("edgelat_phantom_bundle_{}.json", std::process::id()));
+    bundle.save(&path).expect("save");
+    drop(reg);
+    let reloaded = PredictorBundle::load(&path).expect("v3 bundle loads with no spec anywhere");
+    assert_eq!(reloaded.scenario_id(), "PhantomX1/cpu/1L+2S/fp32");
+    assert_eq!(reloaded.scenario.soc.gpu.name, "Adreno 660");
+    assert!(Registry::builtin().by_id("PhantomX1/cpu/1L+2S/fp32").is_none());
+
+    // 4. Serve a batch from the loaded engine; bit-identical to the
+    //    in-memory predictor trained before serialization.
+    let engine = EngineBuilder::new().bundle(reloaded).threads(2).build().expect("engine");
+    let probes = nas_graphs(77, 6);
+    let reqs: Vec<PredictRequest> =
+        probes.iter().map(|g| PredictRequest::new(g, "PhantomX1/cpu/1L+2S/fp32")).collect();
+    for (g, slot) in probes.iter().zip(engine.predict_batch(&reqs)) {
+        let resp = slot.expect("batch slot served");
+        assert_eq!(resp.e2e_ms.to_bits(), pred.predict(g).to_bits(), "{}", g.name);
+    }
+    let _ = std::fs::remove_file(&path);
+}
+
+#[test]
+fn custom_device_searches_alongside_builtin_scenarios() {
+    // Multi-scenario NAS search over a registered custom device next to a
+    // builtin one, both served by one engine.
+    let mut reg = Registry::with_builtin();
+    reg.load_spec_json(PHANTOM_SPEC).unwrap();
+    let ids = ["PhantomX1/cpu/1L/fp32", "Snapdragon855/cpu/1L/fp32"];
+    let train = nas_graphs(90, 10);
+    let mut builder = EngineBuilder::new();
+    for id in ids {
+        let sc = reg.by_id(id).expect("registered scenario");
+        let profiles = profile_set(&sc, &train, 90, 2);
+        builder = builder.bundle(
+            PredictorBundle::train(&sc, &profiles, Method::Lasso, DeductionMode::Full, 90)
+                .unwrap(),
+        );
+    }
+    let engine = builder.threads(2).build().unwrap();
+    let mut cfg = edgelat::search::SearchConfig::quick();
+    cfg.population = 8;
+    cfg.generations = 2;
+    let ids: Vec<String> = ids.iter().map(|s| s.to_string()).collect();
+    let outcome = edgelat::search::run(&engine, &ids, &cfg).expect("search over custom device");
+    assert_eq!(outcome.scenarios.len(), 2);
+    assert_eq!(outcome.scenarios[0].scenario_id, "PhantomX1/cpu/1L/fp32");
+    assert!(outcome.scenarios.iter().all(|s| !s.front.is_empty()));
+    // Two scenarios share gen 0, so the cross-device summary exists.
+    assert_eq!(outcome.rank_correlation.len(), 1);
+}
+
+#[test]
+fn builtin_specs_roundtrip_reproduces_all_72_scenarios_and_plans() {
+    // Serialize every builtin spec to JSON text and rebuild a registry
+    // from nothing but that text.
+    let builtin = Registry::builtin();
+    let mut rebuilt = Registry::new();
+    for spec in builtin.specs() {
+        rebuilt.load_spec_json(&spec.to_json().to_string()).expect("spec text re-registers");
+    }
+    assert_eq!(rebuilt.scenario_count(), 72);
+
+    // Ids, order, combos, and SoC parameters reproduce exactly.
+    for (a, b) in builtin.specs().iter().zip(rebuilt.specs()) {
+        assert_eq!(a.combos, b.combos, "{}", a.soc.name);
+        assert_eq!(a.soc, b.soc, "{}", a.soc.name);
+    }
+    let probe = nas_graphs(7, 1).pop().unwrap();
+    for (a, b) in builtin.all().iter().zip(rebuilt.all()) {
+        assert_eq!(a.id, b.id);
+        // Lowered plans are bit-identical: same buckets, same feature
+        // rows, for every scenario and the same probe graph.
+        let pa = plan::lower(a, DeductionMode::Full, &probe);
+        let pb = plan::lower(b, DeductionMode::Full, &probe);
+        assert_eq!(pa.len(), pb.len(), "{}", a.id);
+        for i in 0..pa.len() {
+            assert_eq!(pa.bucket(i), pb.bucket(i), "{} unit {i}", a.id);
+            let (ra, rb) = (pa.row(i), pb.row(i));
+            assert_eq!(ra.len(), rb.len());
+            for (x, y) in ra.iter().zip(rb) {
+                assert_eq!(x.to_bits(), y.to_bits(), "{} unit {i}", a.id);
+            }
+        }
+    }
+}
+
+#[test]
+fn committed_example_spec_registers_and_profiles() {
+    let text = std::fs::read_to_string(repo_path("examples/specs/custom_soc.json"))
+        .expect("committed example spec");
+    let mut reg = Registry::with_builtin();
+    let name = reg.load_spec_json(&text).expect("example spec registers");
+    assert_eq!(name, "Dimensity700");
+    // The registry-threaded profiling path works for the new device and
+    // fails typed for unknown ids.
+    let g = nas_graphs(3, 1).pop().unwrap();
+    let p = profile_by_id(&reg, "Dimensity700/gpu", &g, 3, 2).expect("profiles custom gpu");
+    assert!(p.end_to_end_ms > 0.0);
+    assert_eq!(
+        profile_by_id(&reg, "Dimensity700/npu", &g, 3, 2).unwrap_err(),
+        ScenarioError::UnknownScenario("Dimensity700/npu".into())
+    );
+}
+
+#[test]
+fn bundle_io_errors_name_the_path() {
+    let missing = "/definitely/not/a/real/dir/bundle.json";
+    let err = PredictorBundle::load(missing).unwrap_err();
+    assert!(err.to_string().contains(missing), "{err}");
+    // The builder's file path reports the same way.
+    let err = EngineBuilder::new().bundle_file(missing).unwrap_err();
+    assert!(err.to_string().contains(missing), "{err}");
+    // Write failures too.
+    let sc = edgelat::scenario::one_large_core("HelioP35").unwrap();
+    let profiles = profile_set(&sc, &nas_graphs(5, 4), 5, 1);
+    let bundle =
+        PredictorBundle::train(&sc, &profiles, Method::Lasso, DeductionMode::Full, 5).unwrap();
+    let unwritable = "/definitely/not/a/real/dir/out.json";
+    let err = bundle.save(unwritable).unwrap_err();
+    assert!(err.to_string().contains(unwritable), "{err}");
+}

@@ -24,7 +24,7 @@ fn probe_graphs(seed: u64, n: usize) -> Vec<Graph> {
 
 #[test]
 fn bundle_roundtrip_bit_identical_for_all_native_methods() {
-    let sc = edgelat::scenario::one_large_core("HelioP35");
+    let sc = edgelat::scenario::one_large_core("HelioP35").unwrap();
     let (_, profiles) = training_set(&sc, 16, 100);
     let probes = probe_graphs(200, 8);
     for &method in Method::native() {
@@ -70,7 +70,7 @@ fn gpu_bundle_roundtrip_bit_identical() {
 
 #[test]
 fn bundle_file_roundtrip_via_save_and_load() {
-    let sc = edgelat::scenario::one_large_core("Snapdragon710");
+    let sc = edgelat::scenario::one_large_core("Snapdragon710").unwrap();
     let (_, profiles) = training_set(&sc, 12, 500);
     let pred =
         ScenarioPredictor::train_from(&sc, &profiles, Method::Gbdt, DeductionMode::Full, 2, None);
@@ -105,7 +105,7 @@ fn corrupted_and_mismatched_bundles_rejected_with_clear_errors() {
 
     // A real bundle with a bumped version must be rejected, naming the
     // version in the error.
-    let sc = edgelat::scenario::one_large_core("HelioP35");
+    let sc = edgelat::scenario::one_large_core("HelioP35").unwrap();
     let (_, profiles) = training_set(&sc, 10, 700);
     let bundle =
         PredictorBundle::train(&sc, &profiles, Method::Lasso, DeductionMode::Full, 1).unwrap();
@@ -136,7 +136,7 @@ fn corrupted_and_mismatched_bundles_rejected_with_clear_errors() {
 
 #[test]
 fn engine_serves_multiple_scenarios_and_batch_matches_sequential() {
-    let sc_cpu = edgelat::scenario::one_large_core("Snapdragon855");
+    let sc_cpu = edgelat::scenario::one_large_core("Snapdragon855").unwrap();
     let soc = edgelat::device::soc_by_name("Snapdragon855").unwrap();
     let sc_gpu = Scenario::gpu(&soc);
     let (_, p_cpu) = training_set(&sc_cpu, 12, 900);
@@ -176,7 +176,7 @@ fn engine_serves_multiple_scenarios_and_batch_matches_sequential() {
 
 #[test]
 fn bundle_serializes_the_intern_table_and_rejects_unknown_buckets() {
-    let sc = edgelat::scenario::one_large_core("HelioP35");
+    let sc = edgelat::scenario::one_large_core("HelioP35").unwrap();
     let (_, profiles) = training_set(&sc, 10, 1500);
     let bundle =
         PredictorBundle::train(&sc, &profiles, Method::Lasso, DeductionMode::Full, 2).unwrap();
@@ -218,7 +218,7 @@ fn bundle_serializes_the_intern_table_and_rejects_unknown_buckets() {
 
 #[test]
 fn engine_per_unit_buckets_are_interned_names() {
-    let sc = edgelat::scenario::one_large_core("Snapdragon855");
+    let sc = edgelat::scenario::one_large_core("Snapdragon855").unwrap();
     let (_, profiles) = training_set(&sc, 10, 1700);
     let bundle =
         PredictorBundle::train(&sc, &profiles, Method::Gbdt, DeductionMode::Full, 3).unwrap();
@@ -238,7 +238,7 @@ fn engine_per_unit_buckets_are_interned_names() {
 fn engine_memoized_deduction_is_consistent() {
     // Repeated queries for the same graph must hit the deduction cache and
     // return identical responses.
-    let sc = edgelat::scenario::one_large_core("Exynos9820");
+    let sc = edgelat::scenario::one_large_core("Exynos9820").unwrap();
     let (_, profiles) = training_set(&sc, 10, 1100);
     let bundle =
         PredictorBundle::train(&sc, &profiles, Method::Lasso, DeductionMode::Full, 5).unwrap();
@@ -253,12 +253,112 @@ fn engine_memoized_deduction_is_consistent() {
 }
 
 #[test]
-fn unknown_scenario_in_bundle_rejected_at_build() {
-    let sc = edgelat::scenario::one_large_core("HelioP35");
+fn v2_bundles_resolve_ids_against_the_builtin_registry() {
+    let sc = edgelat::scenario::one_large_core("HelioP35").unwrap();
     let (_, profiles) = training_set(&sc, 10, 1300);
-    let mut bundle =
+    let bundle =
         PredictorBundle::train(&sc, &profiles, Method::Lasso, DeductionMode::Full, 6).unwrap();
-    bundle.scenario_id = "Imaginary/cpu/1L/fp32".into();
+
+    // Downgrade the v3 document to the v2 shape: id only, no embedded
+    // device descriptor. A builtin id resolves and predicts identically...
+    let downgrade = |id: &str| {
+        let mut j = bundle.to_json();
+        if let Json::Obj(m) = &mut j {
+            m.insert("version".into(), Json::Num(2.0));
+            m.insert("scenario".into(), Json::str(id));
+            m.remove("device");
+            m.remove("target");
+        }
+        j
+    };
+    let v2 = PredictorBundle::from_json(&downgrade(&sc.id)).expect("v2 bundle loads");
+    assert_eq!(v2.scenario_id(), sc.id);
+    assert_eq!(v2.scenario, bundle.scenario);
+    let g = probe_graphs(1350, 1).pop().unwrap();
+    let a = bundle.to_predictor().unwrap().predict(&g);
+    let b = v2.to_predictor().unwrap().predict(&g);
+    assert_eq!(a.to_bits(), b.to_bits());
+
+    // ...while an id outside the builtin universe is a clear error that
+    // names the scenario and points at the v3 migration.
+    let err = PredictorBundle::from_json(&downgrade("Imaginary/cpu/1L/fp32")).unwrap_err();
+    assert!(err.contains("Imaginary"), "{err}");
+    assert!(err.contains("v3") || err.contains("descriptor"), "{err}");
+}
+
+#[test]
+fn hand_assembled_invalid_scenario_rejected_before_serving() {
+    // Bundle fields are pub: a programmatically assembled bundle whose
+    // scenario disagrees with its own device (combo arity vs clusters)
+    // must be a typed error at build/to_predictor time, never a panic
+    // inside the cost model.
+    let sc = edgelat::scenario::one_large_core("HelioP35").unwrap();
+    let (_, profiles) = training_set(&sc, 8, 1600);
+    let mut bundle =
+        PredictorBundle::train(&sc, &profiles, Method::Lasso, DeductionMode::Full, 8).unwrap();
+    // HelioP35 has 2 clusters; force a 3-count combo into the scenario.
+    let tampered = edgelat::scenario::Scenario {
+        soc: bundle.scenario.soc.clone(),
+        target: edgelat::device::Target::Cpu {
+            combo: edgelat::device::CoreCombo::new(vec![1, 0, 3]),
+            rep: edgelat::device::DataRep::Fp32,
+        },
+        id: bundle.scenario.id.clone(),
+    };
+    bundle.scenario = tampered;
+    let err = bundle.to_predictor().unwrap_err();
+    assert!(err.to_string().contains("combo"), "{err}");
+    let err = EngineBuilder::new().bundle(bundle.clone()).build().unwrap_err();
+    assert!(err.to_string().contains("combo"), "{err}");
+    // Same for out-of-range device parameters.
+    bundle.scenario = (*edgelat::scenario::by_id(&sc.id).unwrap()).clone();
+    bundle.scenario.soc.mem_gbps = f64::NAN;
     let err = EngineBuilder::new().bundle(bundle).build().unwrap_err();
-    assert!(err.to_string().contains("Imaginary"), "{err}");
+    assert!(err.to_string().contains("mem_gbps"), "{err}");
+
+    let good =
+        PredictorBundle::train(&sc, &profiles, Method::Lasso, DeductionMode::Full, 8).unwrap();
+    // An id that disagrees with an otherwise-valid descriptor is rejected
+    // too — the engine must never serve one device's cost model under
+    // another scenario's id (same rule the v3 loader enforces).
+    let mut wrong_id = good.clone();
+    let other = (*edgelat::scenario::by_id("HelioP35/cpu/2L/fp32").unwrap()).clone();
+    wrong_id.scenario = edgelat::scenario::Scenario { id: good.scenario.id.clone(), ..other };
+    let err = wrong_id.to_predictor().unwrap_err();
+    assert!(err.to_string().contains("disagrees"), "{err}");
+
+    // Fractional schema versions are rejected, not truncated.
+    let mut frac = good.to_json();
+    if let Json::Obj(m) = &mut frac {
+        m.insert("version".into(), Json::Num(2.7));
+    }
+    let err = PredictorBundle::from_json(&frac).unwrap_err();
+    assert!(err.contains("version"), "{err}");
+}
+
+#[test]
+fn v3_bundle_embeds_its_device_descriptor() {
+    // The v3 document is self-describing: the `device` block carries the
+    // full SoC spec and `target` the concrete combo/rep.
+    let sc = edgelat::scenario::one_large_core("Snapdragon710").unwrap();
+    let (_, profiles) = training_set(&sc, 8, 1400);
+    let bundle =
+        PredictorBundle::train(&sc, &profiles, Method::Lasso, DeductionMode::Full, 7).unwrap();
+    let j = bundle.to_json();
+    assert_eq!(j.req_usize("version").unwrap(), 3);
+    let device = j.req("device").unwrap();
+    assert_eq!(device.req_str("name").unwrap(), "Snapdragon710");
+    assert!(device.req("clusters").unwrap().as_arr().unwrap().len() == 2);
+    let target = j.req("target").unwrap();
+    assert_eq!(target.req_str("kind").unwrap(), "cpu");
+    assert_eq!(target.req_str("rep").unwrap(), "fp32");
+    // Tampering with the embedded device (invalid parameters) is rejected
+    // with the same validation a spec file gets.
+    let mut tampered = bundle.to_json();
+    if let Json::Obj(m) = &mut tampered {
+        let Some(Json::Obj(d)) = m.get_mut("device") else { panic!("device obj") };
+        d.insert("mem_gbps".into(), Json::Num(-1.0));
+    }
+    let err = PredictorBundle::from_json(&tampered).unwrap_err();
+    assert!(err.contains("mem_gbps"), "{err}");
 }

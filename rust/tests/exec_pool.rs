@@ -26,7 +26,7 @@ fn small_engine(sc: &Scenario, seed: u64, threads: usize) -> (LatencyEngine, Vec
 
 #[test]
 fn predict_batch_preserves_order_and_per_slot_errors() {
-    let sc = one_large_core("HelioP35");
+    let sc = one_large_core("HelioP35").unwrap();
     let (engine, graphs) = small_engine(&sc, 77, 4);
     // Interleave good requests with unknown-scenario and wrong-method
     // ones: every slot must line up with its request, and the bad slots
@@ -64,7 +64,7 @@ fn predict_batch_preserves_order_and_per_slot_errors() {
 
 #[test]
 fn predict_batch_is_identical_for_any_thread_count() {
-    let sc = one_large_core("Snapdragon710");
+    let sc = one_large_core("Snapdragon710").unwrap();
     let graphs = nas_graphs(31, 10);
     let profiles = profile_set(&sc, &graphs, 31, 2);
     let bundle =
@@ -92,7 +92,7 @@ fn predict_batch_is_identical_for_any_thread_count() {
 
 #[test]
 fn engine_cache_stats_count_hits_misses_and_sharing() {
-    let sc = one_large_core("Exynos9820");
+    let sc = one_large_core("Exynos9820").unwrap();
     let (engine, graphs) = small_engine(&sc, 55, 2);
     let g = &graphs[0];
     let s0 = engine.cache_stats();
@@ -137,7 +137,7 @@ fn sharded_cache_keeps_other_shards_warm_on_eviction() {
 
 #[test]
 fn pool_map_equivalence_across_thread_counts_on_real_profiling() {
-    let sc = one_large_core("Snapdragon855");
+    let sc = one_large_core("Snapdragon855").unwrap();
     let graphs = nas_graphs(91, 6);
     let seq = profile_set_with(&ExecPool::new(1), &sc, &graphs, 9, 2);
     let par = profile_set_with(&ExecPool::new(6), &sc, &graphs, 9, 2);

@@ -81,8 +81,8 @@ fn quantization_elementwise_degradation_band() {
         let g = edgelat::zoo::resnets::resnet(18, 1.0); // has residual adds
         let mut counts = vec![0; soc.clusters.len()];
         counts[0] = 1;
-        let f = Scenario::cpu(&soc, counts.clone(), DataRep::Fp32);
-        let q = Scenario::cpu(&soc, counts, DataRep::Int8);
+        let f = Scenario::cpu(&soc, counts.clone(), DataRep::Fp32).unwrap();
+        let q = Scenario::cpu(&soc, counts, DataRep::Int8).unwrap();
         let pf = profile(&f, &g, 5, 5);
         let pq = profile(&q, &g, 5, 5);
         let ew = |p: &edgelat::profiler::ModelProfile| -> f64 {
@@ -105,7 +105,7 @@ fn quantization_elementwise_degradation_band() {
 /// distribution; Lasso worse than trees in distribution (Fig 14 ordering).
 #[test]
 fn default_setting_pipeline_ordering() {
-    let sc = edgelat::scenario::one_large_core("Snapdragon710");
+    let sc = edgelat::scenario::one_large_core("Snapdragon710").unwrap();
     let graphs: Vec<_> =
         edgelat::nas::sample_dataset(77, 80).into_iter().map(|a| a.graph).collect();
     let profiles = profile_set(&sc, &graphs, 77, 5);
@@ -126,7 +126,7 @@ fn default_setting_pipeline_ordering() {
 /// *small-data* fits (the paper's Section 5.5 headline).
 #[test]
 fn lasso_small_data_transfers_to_zoo() {
-    let sc = edgelat::scenario::one_large_core("HelioP35");
+    let sc = edgelat::scenario::one_large_core("HelioP35").unwrap();
     let train_g: Vec<_> =
         edgelat::nas::sample_dataset(2022, 30).into_iter().map(|a| a.graph).collect();
     let tr_p = profile_set(&sc, &train_g, 2022, 5);
@@ -148,7 +148,7 @@ fn lasso_small_data_transfers_to_zoo() {
 /// from a serialized+reloaded file equals predicting from the live graph.
 #[test]
 fn prediction_from_model_file_identical() {
-    let sc = edgelat::scenario::one_large_core("Snapdragon855");
+    let sc = edgelat::scenario::one_large_core("Snapdragon855").unwrap();
     let train_g: Vec<_> =
         edgelat::nas::sample_dataset(9, 40).into_iter().map(|a| a.graph).collect();
     let tr_p = profile_set(&sc, &train_g, 9, 3);

@@ -64,21 +64,39 @@ fn expected_units(expected: &Json) -> Vec<(String, f64)> {
 }
 
 #[test]
-fn golden_bundle_loads_and_reserializes_bit_identically() {
+fn golden_v2_bundle_loads_and_upgrades_losslessly() {
     let parsed = read_json("golden_bundle.json");
+    // The committed fixture is deliberately kept at version 2 (id-only, no
+    // embedded device) — the compatibility contract for pre-v3 bundles.
+    assert_eq!(parsed.req_usize("version").unwrap(), 2);
     let bundle = PredictorBundle::load(data_path("golden_bundle.json")).expect("bundle loads");
-    assert_eq!(bundle.scenario_id, "Snapdragon855/cpu/1L/fp32");
+    assert_eq!(bundle.scenario_id(), "Snapdragon855/cpu/1L/fp32");
+    assert_eq!(bundle.scenario.soc.name, "Snapdragon855");
     assert_eq!(bundle.method, Method::Lasso);
     assert_eq!(bundle.t_overhead_ms.to_bits(), 2.0f64.to_bits());
     assert_eq!(bundle.fallback_ms.to_bits(), 3.0f64.to_bits());
     assert_eq!(bundle.models.len(), 6);
-    // Load → re-serialize must reproduce the stored document exactly
-    // (both sides normalized through the same emitter, so this compares
-    // values and structure, not whitespace).
+    // Re-serializing writes the current (v3) schema: same metadata and
+    // models, plus the embedded device descriptor; loading it back is
+    // lossless and byte-stable from then on.
+    let v3 = bundle.to_json();
+    assert_eq!(v3.req_usize("version").unwrap(), 3);
+    assert_eq!(v3.req("device").unwrap().req_str("name").unwrap(), "Snapdragon855");
+    let carried =
+        ["scenario", "method", "mode", "t_overhead_ms", "fallback_ms", "interner", "buckets"];
+    for key in carried {
+        assert_eq!(
+            v3.req(key).unwrap(),
+            parsed.req(key).unwrap(),
+            "{key} drifted in the v2→v3 upgrade"
+        );
+    }
+    let reloaded = PredictorBundle::from_json(&v3).expect("v3 reload");
+    assert_eq!(reloaded.scenario, bundle.scenario);
     assert_eq!(
-        bundle.to_json().to_string(),
-        parsed.to_string(),
-        "re-serialized bundle drifted from the committed fixture"
+        reloaded.to_json().to_string(),
+        v3.to_string(),
+        "v3 re-serialization must be byte-stable"
     );
 }
 

@@ -372,7 +372,7 @@ fn prop_plan_predictions_bit_identical_to_string_keyed_path() {
     use edgelat::framework::{deduce_units, DeductionMode, ScenarioPredictor};
     let socs = edgelat::device::socs();
     let scenarios = [
-        edgelat::scenario::one_large_core("Snapdragon855"),
+        edgelat::scenario::one_large_core("Snapdragon855").unwrap(),
         edgelat::scenario::Scenario::gpu(&socs[0]),
     ];
     let train: Vec<_> = edgelat::nas::sample_dataset(77, 14)

@@ -35,8 +35,10 @@ fn linear_bundle(sc_id: &str, intercept: f64, w: f64) -> PredictorBundle {
             },
         );
     }
+    let scenario = edgelat::scenario::by_id(sc_id)
+        .unwrap_or_else(|| panic!("builtin scenario {sc_id}"));
     PredictorBundle {
-        scenario_id: sc_id.into(),
+        scenario: (*scenario).clone(),
         method: Method::Lasso,
         mode: DeductionMode::Full,
         t_overhead_ms: 1.0,

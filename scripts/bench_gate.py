@@ -11,7 +11,10 @@ Fails on:
   slower than doing them one at a time, whatever the runner's core count;
 - a broken NAS-search stage (search.candidates_per_s <= 0, or a hit rate
   outside [0, 1]): the search loop must actually serve candidates through
-  the engine, and its plan-cache accounting must be a real rate.
+  the engine, and its plan-cache accounting must be a real rate;
+- an empty device registry (registry.scenarios <= 0): the registry-build
+  stage parses the committed device specs and materializes every scenario —
+  zero means the data-driven device universe failed to load.
 
 Both checks are ratios between two workloads timed back-to-back on the
 same machine, never absolute wall-clock thresholds, so they are robust to
@@ -78,6 +81,19 @@ def main() -> int:
             f"sequential (allowed: {1.0 / MIN_SWEEP_SPEEDUP:.2f}x)"
         )
 
+    registry = derived.get("registry")
+    if not isinstance(registry, dict):
+        return fail(f"missing derived.registry section in {path}")
+    n_scenarios = registry.get("scenarios")
+    if not isinstance(n_scenarios, (int, float)) or not n_scenarios > 0:
+        return fail(
+            f"registry-build stage reports no scenarios ({n_scenarios!r}); "
+            "the device-spec registry failed to materialize"
+        )
+    n_socs = registry.get("socs")
+    if not isinstance(n_socs, (int, float)) or not n_socs > 0:
+        return fail(f"registry-build stage reports no SoCs ({n_socs!r})")
+
     search = derived.get("search")
     if not isinstance(search, dict):
         return fail(f"missing derived.search section in {path}")
@@ -101,7 +117,8 @@ def main() -> int:
     )
     cache = derived.get("plan_cache", {})
     print(
-        f"OK: batch_predict_speedup={speedup:.2f}x "
+        f"OK: registry={n_socs:.0f} SoCs/{n_scenarios:.0f} scenarios, "
+        f"batch_predict_speedup={speedup:.2f}x "
         f"(threshold {MIN_BATCH_SPEEDUP}), "
         f"sweep_parallel_speedup={sweep:.2f}x "
         f"(threshold {MIN_SWEEP_SPEEDUP}), "
