@@ -1,0 +1,147 @@
+//! Serve-daemon walkthrough: the whole `edgelat serve` lifecycle in one
+//! process — train two scenario bundles, boot the daemon on an ephemeral
+//! port, drive it from two concurrent pipelined clients (one per
+//! scenario), then exercise `stats`, a hot `reload`, and a clean `drain`.
+//!
+//! The headline property this demo asserts is the serving contract: a
+//! prediction answered over the TCP protocol is **bit-identical** to
+//! calling `predict_batch` in-process on the same bundles. The daemon
+//! adds micro-batching and amortized plan caching, never numerics.
+//!
+//! Run: `cargo run --release --example serve_daemon`
+
+use edgelat::engine::{EngineBuilder, PredictRequest, PredictorBundle};
+use edgelat::framework::{DeductionMode, ScenarioPredictor};
+use edgelat::graph::Graph;
+use edgelat::predict::Method;
+use edgelat::profiler::profile_set;
+use edgelat::scenario::Scenario;
+use edgelat::serve::{loadgen, protocol, BundleFleet, ServeConfig, Server};
+use edgelat::util::Json;
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+use std::time::Duration;
+
+fn main() {
+    let seed = 23;
+    // --- Train one bundle per scenario into a fleet directory. This is
+    // what `edgelat train --out fleet/cpu.json` does, minus the CLI.
+    let dir = std::env::temp_dir().join(format!("edgelat_serve_daemon_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).expect("mkdir fleet dir");
+    let train: Vec<Graph> =
+        edgelat::nas::sample_dataset(seed, 10).into_iter().map(|a| a.graph).collect();
+    let sc_cpu = edgelat::scenario::one_large_core("Snapdragon855").expect("builtin soc");
+    let sc_gpu = Scenario::gpu(&edgelat::device::soc_by_name("Snapdragon855").expect("soc"));
+    for (sc, method, file) in
+        [(&sc_cpu, Method::Gbdt, "cpu.json"), (&sc_gpu, Method::Lasso, "gpu.json")]
+    {
+        let profiles = profile_set(sc, &train, seed, 2);
+        let pred =
+            ScenarioPredictor::train_from(sc, &profiles, method, DeductionMode::Full, seed, None);
+        PredictorBundle::from_predictor(&pred)
+            .expect("bundle")
+            .save(dir.join(file))
+            .expect("writing bundle");
+        println!("trained {} for {} -> {}", method.name(), sc.id, file);
+    }
+
+    // --- Ground truth: a direct engine over the same bundle files.
+    let reference = EngineBuilder::new()
+        .bundle_file(dir.join("cpu.json"))
+        .expect("cpu bundle")
+        .bundle_file(dir.join("gpu.json"))
+        .expect("gpu bundle")
+        .build()
+        .expect("reference engine");
+
+    // --- Boot the daemon on an ephemeral port (port 0 -> read it back).
+    let fleet = BundleFleet::load(&dir, None).expect("fleet");
+    let cfg = ServeConfig {
+        max_batch: 16,
+        max_wait: Duration::from_micros(500),
+        ..ServeConfig::default()
+    };
+    let srv = Server::bind("127.0.0.1:0".parse().unwrap(), cfg, fleet).expect("bind");
+    let addr = srv.addr();
+    println!("\ndaemon listening on {addr}, serving {:?}", srv.scenario_ids());
+    let daemon = std::thread::spawn(move || srv.run());
+
+    // --- Two concurrent clients, one per scenario, each pipelining 12
+    // predictions on one connection. Replies come back strictly in
+    // request order, so each client just reads them sequentially.
+    let workload: Vec<Graph> =
+        edgelat::nas::sample_dataset(seed ^ 0x5eed, 6).into_iter().map(|a| a.graph).collect();
+    std::thread::scope(|scope| {
+        for sc_id in [sc_cpu.id.clone(), sc_gpu.id.clone()] {
+            let (workload, reference) = (&workload, &reference);
+            scope.spawn(move || {
+                let mut sock = TcpStream::connect(addr).expect("connect");
+                sock.set_read_timeout(Some(Duration::from_secs(30))).unwrap();
+                let mut rd = BufReader::new(sock.try_clone().unwrap());
+                for k in 0..12usize {
+                    let g = &workload[k % workload.len()];
+                    let line = protocol::predict_line(&sc_id, g, Some(k as u64), None, false);
+                    sock.write_all(line.as_bytes()).unwrap();
+                    sock.write_all(b"\n").unwrap();
+                }
+                sock.flush().unwrap();
+                for k in 0..12usize {
+                    let g = &workload[k % workload.len()];
+                    let mut line = String::new();
+                    rd.read_line(&mut line).expect("reply");
+                    let j = Json::parse(line.trim()).expect("reply json");
+                    assert_eq!(j.get("ok"), Some(&Json::Bool(true)), "{}", j.to_string());
+                    let served = j.req_f64("e2e_ms").unwrap();
+                    let direct = reference
+                        .predict(&PredictRequest::new(g, sc_id.clone()))
+                        .expect("direct predict")
+                        .e2e_ms;
+                    assert_eq!(
+                        served.to_bits(),
+                        direct.to_bits(),
+                        "daemon must be bit-identical to predict_batch"
+                    );
+                    if k == 0 {
+                        println!("{sc_id}: first reply {served:.3} ms (== direct engine)");
+                    }
+                }
+            });
+        }
+    });
+    println!("24 pipelined predictions across 2 scenarios: all bit-identical");
+
+    // --- stats: counters, coalescing histogram, plan-cache hit rate.
+    let stats = loadgen::request_stats(addr).expect("stats");
+    let requests = stats.req("requests").unwrap();
+    let batches = stats.req("batches").unwrap();
+    println!(
+        "stats: {} predicts in {} batches (mean {:.2}), plan-cache hit rate {:.2}",
+        requests.req_f64("predict").unwrap(),
+        batches.req_f64("count").unwrap(),
+        batches.req_f64("mean").unwrap(),
+        stats.req("plan_cache").unwrap().req_f64("hit_rate").unwrap(),
+    );
+
+    // --- Hot reload: re-read the bundle directory and swap the engine.
+    // In-flight work keeps its generation; same files -> same numbers.
+    let reply = loadgen::request_reload(addr).expect("reload");
+    assert_eq!(reply.get("ok"), Some(&Json::Bool(true)));
+    println!(
+        "reload: generation {} with {} bundles",
+        reply.req_f64("generation").unwrap(),
+        reply.req_f64("bundles").unwrap()
+    );
+
+    // --- Drain: stop accepting, answer everything queued, exit cleanly.
+    let reply = loadgen::request_drain(addr).expect("drain");
+    assert_eq!(reply.get("ok"), Some(&Json::Bool(true)));
+    let summary = daemon.join().expect("daemon thread").expect("clean drain");
+    assert_eq!(summary.served_ok, 24, "every prediction answered");
+    assert_eq!(summary.reloads, 1);
+    println!(
+        "drained: {} served ok, {} batches (mean {:.2}) over {:.2}s uptime",
+        summary.served_ok, summary.batches, summary.mean_batch, summary.uptime_s
+    );
+    let _ = std::fs::remove_dir_all(&dir);
+    println!("OK: serve daemon is bit-identical, hot-reloadable, and drains cleanly");
+}

@@ -7,7 +7,11 @@
 //! engine `predict_batch`, predict-over-plan, parallel scenario-sweep
 //! profiling, and the evolutionary NAS-search loop (candidates/s plus the
 //! plan-cache hit rate it sustains), plus the engine's plan-cache
-//! hit/miss counters. The
+//! hit/miss counters. A final stage boots the `serve` daemon on an
+//! ephemeral port around a two-scenario bundle fleet, drives it with the
+//! open-loop load generator, and records requests/s, p50/p99 service
+//! latency, the mean coalesced batch size and the plan-cache hit rate
+//! under concurrent TCP traffic. The
 //! emitted JSON is the artifact the CI bench job uploads and gates on
 //! (`scripts/bench_gate.py`). Gated quantities are **ratios between
 //! workloads measured back-to-back in the same process** (e.g.
@@ -22,6 +26,7 @@ use crate::plan::{self, LoweredGraph};
 use crate::predict::Method;
 use crate::profiler::profile_set_with;
 use crate::scenario::{Registry, Scenario};
+use crate::serve;
 use crate::util::timing::{time_named, Sample};
 use crate::util::Json;
 use std::hint::black_box;
@@ -51,6 +56,12 @@ pub struct BenchConfig {
     pub seed: u64,
     /// Worker threads (engine pool and sweep pool).
     pub threads: usize,
+    /// Concurrent connections in the serve-daemon stage.
+    pub serve_clients: usize,
+    /// Offered load (requests/s) in the serve-daemon stage.
+    pub serve_rps: f64,
+    /// Duration of the serve-daemon open-loop run, in seconds.
+    pub serve_duration_s: f64,
 }
 
 fn default_threads() -> usize {
@@ -74,6 +85,9 @@ impl BenchConfig {
             search_gens: 3,
             seed: 2022,
             threads: default_threads(),
+            serve_clients: 4,
+            serve_rps: 600.0,
+            serve_duration_s: 0.8,
         }
     }
 
@@ -91,6 +105,9 @@ impl BenchConfig {
             search_gens: 5,
             seed: 2022,
             threads: default_threads(),
+            serve_clients: 8,
+            serve_rps: 2000.0,
+            serve_duration_s: 2.0,
         }
     }
 }
@@ -260,10 +277,82 @@ pub fn run(cfg: &BenchConfig) -> Json {
     });
     bench_line(&mut samples, search_s.clone());
     let cache_after = engine.cache_stats();
-    let search_hits = cache_after.hits - cache_before.hits;
-    let search_misses = cache_after.misses - cache_before.misses;
-    let search_hit_rate = search_hits as f64 / (search_hits + search_misses).max(1) as f64;
+    let search_hit_rate = cache_after.delta_since(&cache_before).hit_rate();
     let candidates_per_s = search_evaluated as f64 / search_s.mean_s.max(1e-12);
+
+    // --- Serve daemon: boot the TCP daemon on an ephemeral port around a
+    // two-scenario fleet (the GBDT bundle trained above plus a quick GPU
+    // Lasso bundle), offer open-loop load with the `serve-bench`
+    // generator, and read throughput, tail latency, the mean coalesced
+    // batch size, and the plan-cache hit rate under concurrent traffic.
+    // All numbers go through the daemon's real TCP + micro-batching path.
+    let serve_dir =
+        std::env::temp_dir().join(format!("edgelat_bench_serve_{}", std::process::id()));
+    std::fs::create_dir_all(&serve_dir).expect("mkdir serve bundle dir");
+    PredictorBundle::from_predictor(&pred)
+        .expect("native bundle")
+        .save(serve_dir.join("cpu.json"))
+        .expect("save cpu bundle");
+    let gpu_profiles = profile_set_with(&pool, &sc_gpu, &train_g, cfg.seed, cfg.runs);
+    let gpu_pred = ScenarioPredictor::train_from(
+        &sc_gpu,
+        &gpu_profiles,
+        Method::Lasso,
+        DeductionMode::Full,
+        cfg.seed,
+        None,
+    );
+    PredictorBundle::from_predictor(&gpu_pred)
+        .expect("native bundle")
+        .save(serve_dir.join("gpu.json"))
+        .expect("save gpu bundle");
+    let fleet = serve::BundleFleet::load(&serve_dir, Some(cfg.threads)).expect("serve fleet");
+    let serve_cfg = serve::ServeConfig {
+        max_batch: 16,
+        max_wait: std::time::Duration::from_micros(300),
+        ..serve::ServeConfig::default()
+    };
+    let srv = serve::Server::bind("127.0.0.1:0".parse().expect("loopback"), serve_cfg, fleet)
+        .expect("serve bind");
+    let serve_addr = srv.addr();
+    let srv_thread = std::thread::spawn(move || srv.run());
+    let serve_ids = [sc_cpu.id.clone(), sc_gpu.id.clone()];
+    let serve_g = nas_graphs(cfg.seed ^ 0x5e47e, 16);
+    let serve_lines: Vec<String> = serve_g
+        .iter()
+        .enumerate()
+        .map(|(i, g)| {
+            serve::protocol::predict_line(&serve_ids[i % 2], g, Some(i as u64), None, false)
+        })
+        .collect();
+    let load_cfg = serve::LoadConfig {
+        clients: cfg.serve_clients,
+        rps: cfg.serve_rps,
+        duration: std::time::Duration::from_secs_f64(cfg.serve_duration_s),
+    };
+    let serve_report = serve::run_load(serve_addr, &load_cfg, &serve_lines).expect("serve load");
+    assert!(serve_report.ok > 0, "serve stage produced no successful replies");
+    println!(
+        "serve/daemon open-loop          {:>8.0} req/s   p50 {:>8.0} us   p99 {:>8.0} us",
+        serve_report.requests_per_s, serve_report.p50_us, serve_report.p99_us
+    );
+    let serve_stats = serve::loadgen::request_stats(serve_addr).expect("serve stats");
+    let serve_mean_batch =
+        serve_stats.req("batches").and_then(|b| b.req_f64("mean")).unwrap_or(0.0);
+    let serve_hit_rate =
+        serve_stats.req("plan_cache").and_then(|c| c.req_f64("hit_rate")).unwrap_or(0.0);
+    let drain_reply = serve::loadgen::request_drain(serve_addr).expect("serve drain");
+    assert_eq!(
+        drain_reply.get("ok"),
+        Some(&Json::Bool(true)),
+        "drain not acknowledged: {}",
+        drain_reply.to_string()
+    );
+    srv_thread.join().expect("serve thread").expect("clean drain summary");
+    let _ = std::fs::remove_dir_all(&serve_dir);
+    // Non-finite would either emit invalid JSON or sail through a naive
+    // gate; -1.0 is visibly out of range for every gated serve quantity.
+    let fin = |v: f64| if v.is_finite() { v } else { -1.0 };
 
     let cache = engine.cache_stats();
     Json::obj(vec![
@@ -316,6 +405,22 @@ pub fn run(cfg: &BenchConfig) -> Json {
                     ]),
                 ),
                 (
+                    // The serve daemon under open-loop TCP load: the CI
+                    // gate fails on requests_per_s <= 0, mean_batch < 1,
+                    // or a non-finite/non-positive p99.
+                    "serve",
+                    Json::obj(vec![
+                        ("requests_per_s", Json::num(fin(serve_report.requests_per_s))),
+                        ("p50_us", Json::num(fin(serve_report.p50_us))),
+                        ("p99_us", Json::num(fin(serve_report.p99_us))),
+                        ("mean_batch", Json::num(fin(serve_mean_batch))),
+                        ("plan_cache_hit_rate", Json::num(fin(serve_hit_rate))),
+                        ("sent", Json::num(serve_report.sent as f64)),
+                        ("ok", Json::num(serve_report.ok as f64)),
+                        ("errors", Json::num(serve_report.errors as f64)),
+                    ]),
+                ),
+                (
                     "plan_cache",
                     Json::obj(vec![
                         ("hits", Json::num(cache.hits as f64)),
@@ -348,6 +453,9 @@ mod tests {
             search_gens: 2,
             seed: 7,
             threads: 2,
+            serve_clients: 2,
+            serve_rps: 150.0,
+            serve_duration_s: 0.4,
         };
         let doc = run(&cfg);
         // The document round-trips through the JSON emitter/parser.
@@ -398,5 +506,18 @@ mod tests {
         // sharded memo must have seen real hits.
         assert!(cache.req_f64("hits").unwrap() > 0.0);
         assert!(cache.req_f64("misses").unwrap() > 0.0);
+        // The serve-daemon stage: real TCP traffic got through, requests
+        // coalesced (mean batch >= 1 whenever any batch flushed), tail
+        // latency is a real measurement, and the hit rate is a rate.
+        let serve = derived.req("serve").unwrap();
+        assert!(serve.req_f64("requests_per_s").unwrap() > 0.0);
+        assert!(serve.req_f64("ok").unwrap() > 0.0);
+        let mean_batch = serve.req_f64("mean_batch").unwrap();
+        assert!(mean_batch >= 1.0, "mean_batch={mean_batch}");
+        let p99 = serve.req_f64("p99_us").unwrap();
+        assert!(p99.is_finite() && p99 > 0.0, "p99_us={p99}");
+        assert!(serve.req_f64("p50_us").unwrap() <= p99);
+        let serve_hit = serve.req_f64("plan_cache_hit_rate").unwrap();
+        assert!((0.0..=1.0).contains(&serve_hit), "serve hit_rate={serve_hit}");
     }
 }

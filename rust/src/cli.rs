@@ -125,6 +125,15 @@ pub fn threads_flag(rest: &[String]) -> Result<Option<usize>, String> {
     }
 }
 
+/// A socket address flag (`--addr IP:PORT`), with a default for when the
+/// flag is absent. `:0` ports are valid — the serve daemon uses port 0 to
+/// bind ephemerally and reports the real port on stdout.
+pub fn addr_flag(rest: &[String], default: &str) -> Result<std::net::SocketAddr, String> {
+    let s = flag(rest, "--addr")?.unwrap_or_else(|| default.to_string());
+    s.parse()
+        .map_err(|_| format!("--addr expects IP:PORT (e.g. 127.0.0.1:7878), got '{s}'"))
+}
+
 /// `--method`, when present; `None` when the flag is absent (callers that
 /// must distinguish "defaulted" from "explicitly requested" — bundle
 /// mismatch checks, optional request restriction — use this directly).
@@ -278,6 +287,21 @@ mod tests {
                 "{bad} accepted"
             );
         }
+    }
+
+    #[test]
+    fn addr_flag_parses_and_defaults() {
+        let d = addr_flag(&args(&[]), "127.0.0.1:0").unwrap();
+        assert_eq!(d, "127.0.0.1:0".parse().unwrap());
+        let a = addr_flag(&args(&["--addr", "0.0.0.0:7878"]), "127.0.0.1:0").unwrap();
+        assert_eq!(a.port(), 7878);
+        // Hostnames and garbage are rejected with the expected shape named
+        // (std SocketAddr parsing is numeric-only — no DNS on the daemon).
+        for bad in ["localhost:10", "7878", "1.2.3.4", "1.2.3.4:notaport", ""] {
+            let err = addr_flag(&args(&["--addr", bad]), "127.0.0.1:0").unwrap_err();
+            assert!(err.contains("IP:PORT"), "{bad}: {err}");
+        }
+        assert!(addr_flag(&args(&["--addr"]), "127.0.0.1:0").is_err());
     }
 
     #[test]

@@ -24,6 +24,53 @@ pub struct CacheStats {
     pub evictions: u64,
 }
 
+impl CacheStats {
+    /// Counter-wise sum of two snapshots, saturating — aggregating many
+    /// long-lived caches must never wrap back to small numbers.
+    pub fn merge(&self, other: &CacheStats) -> CacheStats {
+        CacheStats {
+            hits: self.hits.saturating_add(other.hits),
+            misses: self.misses.saturating_add(other.misses),
+            evictions: self.evictions.saturating_add(other.evictions),
+        }
+    }
+
+    /// Aggregate any number of snapshots into one (e.g. the serve fleet
+    /// merging every retired engine generation's counters with the live
+    /// engine's, or a caller summing per-cache stats).
+    pub fn merged(stats: impl IntoIterator<Item = CacheStats>) -> CacheStats {
+        stats.into_iter().fold(CacheStats::default(), |acc, s| acc.merge(&s))
+    }
+
+    /// Counters accumulated since an `earlier` snapshot of the same cache,
+    /// saturating at zero (a swapped-out cache restarts its counters; a
+    /// stale "earlier" must not underflow into u64::MAX-sized deltas).
+    pub fn delta_since(&self, earlier: &CacheStats) -> CacheStats {
+        CacheStats {
+            hits: self.hits.saturating_sub(earlier.hits),
+            misses: self.misses.saturating_sub(earlier.misses),
+            evictions: self.evictions.saturating_sub(earlier.evictions),
+        }
+    }
+
+    /// Total lookups (hits + misses, saturating).
+    pub fn lookups(&self) -> u64 {
+        self.hits.saturating_add(self.misses)
+    }
+
+    /// Hit fraction in `[0, 1]`. A cache that has seen no lookups reports
+    /// 0.0 — never a division-by-zero NaN that would poison downstream
+    /// JSON artifacts and gates.
+    pub fn hit_rate(&self) -> f64 {
+        let lookups = self.lookups();
+        if lookups == 0 {
+            0.0
+        } else {
+            self.hits as f64 / lookups as f64
+        }
+    }
+}
+
 /// A concurrent memo: per-shard `Mutex<HashMap>` with per-shard capacity.
 ///
 /// Values are cloned out (use `Arc<V>` for anything non-trivial). The
@@ -202,6 +249,44 @@ mod tests {
             let v = c.get(&k).unwrap();
             assert_eq!(v / 1000, k);
         }
+    }
+
+    #[test]
+    fn stats_merge_and_delta_saturate() {
+        let a = CacheStats { hits: 10, misses: 5, evictions: 1 };
+        let b = CacheStats { hits: 2, misses: 3, evictions: 0 };
+        assert_eq!(a.merge(&b), CacheStats { hits: 12, misses: 8, evictions: 1 });
+        // Aggregation over an iterator, identity on the empty case.
+        assert_eq!(CacheStats::merged([a, b]), a.merge(&b));
+        assert_eq!(CacheStats::merged([]), CacheStats::default());
+        // Near-overflow counters saturate instead of wrapping.
+        let huge = CacheStats { hits: u64::MAX - 1, misses: u64::MAX, evictions: 0 };
+        let sum = huge.merge(&a);
+        assert_eq!(sum.hits, u64::MAX);
+        assert_eq!(sum.misses, u64::MAX);
+        assert_eq!(huge.lookups(), u64::MAX);
+        // Deltas against a *newer* snapshot (cache swapped underneath the
+        // caller) clamp at zero rather than underflowing.
+        assert_eq!(b.delta_since(&a), CacheStats::default());
+        assert_eq!(
+            a.delta_since(&b),
+            CacheStats { hits: 8, misses: 2, evictions: 1 }
+        );
+    }
+
+    #[test]
+    fn hit_rate_is_a_real_rate_never_nan() {
+        assert_eq!(CacheStats::default().hit_rate(), 0.0);
+        let st = CacheStats { hits: 3, misses: 1, evictions: 0 };
+        assert_eq!(st.hit_rate(), 0.75);
+        let all_miss = CacheStats { hits: 0, misses: 9, evictions: 2 };
+        assert_eq!(all_miss.hit_rate(), 0.0);
+        let all_hit = CacheStats { hits: 9, misses: 0, evictions: 0 };
+        assert_eq!(all_hit.hit_rate(), 1.0);
+        // The saturated extreme still yields a finite rate in [0, 1].
+        let huge = CacheStats { hits: u64::MAX, misses: u64::MAX, evictions: 0 };
+        let r = huge.hit_rate();
+        assert!(r.is_finite() && (0.0..=1.0).contains(&r));
     }
 
     #[test]

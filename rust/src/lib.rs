@@ -60,6 +60,16 @@
 //!   (`report::sweep`) all run on it; `bench` (the `edgelat bench`
 //!   subcommand) measures those paths and emits the machine-readable
 //!   `BENCH_pipeline.json` that CI gates on.
+//! - **Serve daemon (`serve`)**: the persistent online half of the
+//!   serving story — `edgelat serve` keeps a `BundleFleet` (a directory of
+//!   bundles as one hot-reloadable engine) resident behind a
+//!   line-oriented JSON-over-TCP protocol, micro-batches concurrent
+//!   predict requests into `predict_batch` so the plan cache amortizes
+//!   across clients, and exposes `stats`/`reload`/`drain` control verbs
+//!   (typed error replies, graceful drain, streaming latency histograms
+//!   from `util::timing::LogHistogram`). `edgelat serve-bench` is the
+//!   open-loop load generator; the bench suite's serve stage gates its
+//!   throughput and tail latency in CI.
 //! - **L2 (python/compile/model.py, build-time only)**: the MLP latency
 //!   predictor's forward/backward in JAX, AOT-lowered to HLO text.
 //! - **L1 (python/compile/kernels/, build-time only)**: the MLP's fused
@@ -87,6 +97,7 @@ pub mod report;
 pub mod runtime;
 pub mod scenario;
 pub mod search;
+pub mod serve;
 pub mod tflite;
 pub mod util;
 pub mod zoo;

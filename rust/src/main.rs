@@ -8,6 +8,8 @@
 //!   evaluate    train (or load) + evaluate a predictor for a scenario
 //!   predict     end-to-end latency prediction for a model file
 //!   search      latency-constrained NAS search served by the engine
+//!   serve       persistent micro-batching prediction daemon (JSON/TCP)
+//!   serve-bench open-loop load generator against a running daemon
 //!   bench       time the pipeline hot paths, write BENCH_pipeline.json
 //!   devices     list/show/validate device specs (the open SoC universe)
 //!   list        list scenarios / zoo models
@@ -38,6 +40,8 @@ fn main() {
         "evaluate" => cmd_evaluate(rest),
         "predict" => cmd_predict(rest),
         "search" => cmd_search(rest),
+        "serve" => cmd_serve(rest),
+        "serve-bench" => cmd_serve_bench(rest),
         "bench" => cmd_bench(rest),
         "devices" => cmd_devices(rest),
         "list" => cmd_list(rest),
@@ -67,6 +71,10 @@ USAGE:
   edgelat search    --scenario ID[,ID...] [--budget MS] [--seed S] [--method M]
                     [--population P] [--generations G] [--train N] [--runs R]
                     [--threads N] [--quick] [--out FRONT.json]
+  edgelat serve     --bundles DIR [--addr IP:PORT] [--threads N] [--max-batch B]
+                    [--max-wait-us U] [--queue-cap Q] [--drain-grace-ms MS]
+  edgelat serve-bench --addr IP:PORT [--quick] [--clients C] [--rps R]
+                    [--duration-s S] [--seed S] [--drain] [--out REPORT.json]
   edgelat bench     [--quick] [--threads N] [--out BENCH_pipeline.json]
   edgelat devices   list | show SOC | validate --spec FILE.json [--spec ...]
   edgelat list      {{scenarios|models|figures}}
@@ -83,6 +91,10 @@ serve from it without re-profiling or retraining. `search` runs the paper's
 motivating workload end to end: an evolutionary latency-constrained NAS
 search scored entirely by the serving engine (per-scenario Pareto fronts of
 predicted latency vs. accuracy proxy, byte-reproducible for a fixed seed).
+`serve` keeps a directory of bundles resident as a long-lived daemon —
+line-oriented JSON over TCP, concurrent requests micro-batched into the
+engine, hot `reload`, graceful `drain`, and a `stats` endpoint; `serve-bench`
+measures a running daemon open-loop (requests/s, p50/p99).
 
 Figures/tables: {}",
         all_ids().join(" ")
@@ -582,8 +594,7 @@ fn cmd_search(rest: &[String]) {
             println!("  {a:<32} vs {b:<32} rho {r:.3}");
         }
     }
-    let st = engine.cache_stats();
-    let hit_rate = st.hits as f64 / (st.hits + st.misses).max(1) as f64;
+    let hit_rate = engine.cache_stats().hit_rate();
     eprintln!(
         "trained {} bundle(s) in {train_s:.1}s; searched in {search_s:.1}s \
          ({:.0} candidates/s, plan-cache hit rate {:.0}%)",
@@ -598,6 +609,165 @@ fn cmd_search(rest: &[String]) {
             std::process::exit(2);
         });
         println!("\nwrote {out}");
+    }
+}
+
+fn cmd_serve(rest: &[String]) {
+    use edgelat::serve::{BundleFleet, ServeConfig, Server};
+    let bundles = or_die(cli::flag(rest, "--bundles")).unwrap_or_else(|| {
+        eprintln!("need --bundles DIR (a directory of trained predictor bundles)");
+        std::process::exit(2);
+    });
+    let addr = or_die(cli::addr_flag(rest, "127.0.0.1:0"));
+    let threads = or_die(cli::threads_flag(rest));
+    let d = ServeConfig::default();
+    let cfg = ServeConfig {
+        max_batch: or_die(cli::usize_flag(rest, "--max-batch", d.max_batch)).max(1),
+        max_wait: std::time::Duration::from_micros(or_die(cli::u64_flag(
+            rest,
+            "--max-wait-us",
+            d.max_wait.as_micros() as u64,
+        ))),
+        queue_cap: or_die(cli::usize_flag(rest, "--queue-cap", d.queue_cap)),
+        drain_grace: std::time::Duration::from_millis(or_die(cli::u64_flag(
+            rest,
+            "--drain-grace-ms",
+            d.drain_grace.as_millis() as u64,
+        ))),
+    };
+    let fleet = BundleFleet::load(&bundles, threads).unwrap_or_else(|e| {
+        eprintln!("{e}");
+        std::process::exit(2);
+    });
+    let srv = Server::bind(addr, cfg, fleet).unwrap_or_else(|e| {
+        eprintln!("{e}");
+        std::process::exit(2);
+    });
+    println!("serving bundles from {bundles}: {}", srv.scenario_ids().join(", "));
+    println!("listening on {}", srv.addr());
+    // Scripts parse the line above from a pipe; without the flush it sits
+    // in the block buffer until the daemon exits.
+    use std::io::Write as _;
+    std::io::stdout().flush().ok();
+    match srv.run() {
+        Ok(s) => println!(
+            "drained: {} ok, {} errors, {} malformed, {} batches (mean {:.2}), \
+             {} reload(s), up {:.1}s",
+            s.served_ok, s.served_err, s.malformed, s.batches, s.mean_batch, s.reloads, s.uptime_s
+        ),
+        Err(e) => {
+            eprintln!("serve: {e}");
+            std::process::exit(1);
+        }
+    }
+}
+
+fn cmd_serve_bench(rest: &[String]) {
+    use edgelat::serve::loadgen;
+    use edgelat::serve::LoadConfig;
+    if or_die(cli::flag(rest, "--addr")).is_none() {
+        eprintln!("need --addr IP:PORT (where `edgelat serve` printed 'listening on ...')");
+        std::process::exit(2);
+    }
+    let addr = or_die(cli::addr_flag(rest, "127.0.0.1:0"));
+    let quick = cli::has(rest, "--quick");
+    let seed = or_die(cli::seed_flag(rest));
+    let (d_clients, d_rps, d_duration) = if quick { (4, 400.0, 1.0) } else { (8, 1500.0, 4.0) };
+    let cfg = LoadConfig {
+        clients: or_die(cli::usize_flag(rest, "--clients", d_clients)).max(1),
+        rps: or_die(cli::positive_f64_flag(rest, "--rps")).unwrap_or(d_rps),
+        duration: std::time::Duration::from_secs_f64(
+            or_die(cli::positive_f64_flag(rest, "--duration-s")).unwrap_or(d_duration),
+        ),
+    };
+    // Self-configure: ask the daemon which scenarios it serves and spread
+    // the workload across all of them.
+    let stats = loadgen::request_stats(addr).unwrap_or_else(|e| {
+        eprintln!("cannot reach daemon at {addr}: {e}");
+        std::process::exit(1);
+    });
+    let ids: Vec<String> = stats
+        .get("scenarios")
+        .and_then(|s| s.as_arr())
+        .map(|a| a.iter().filter_map(|j| j.as_str().map(str::to_string)).collect())
+        .unwrap_or_default();
+    if ids.is_empty() {
+        eprintln!("daemon at {addr} reports no scenarios");
+        std::process::exit(1);
+    }
+    let archs = edgelat::nas::sample_dataset(seed, 16);
+    let lines: Vec<String> = archs
+        .iter()
+        .enumerate()
+        .map(|(i, a)| {
+            edgelat::serve::protocol::predict_line(
+                &ids[i % ids.len()],
+                &a.graph,
+                Some(i as u64),
+                None,
+                false,
+            )
+        })
+        .collect();
+    let t0 = std::time::Instant::now();
+    let report = loadgen::run_load(addr, &cfg, &lines).unwrap_or_else(|e| {
+        eprintln!("{e}");
+        std::process::exit(1);
+    });
+    println!(
+        "serve-bench @ {addr}: {} clients, target {:.0} rps for {:.1}s over {} scenario(s)",
+        cfg.clients,
+        cfg.rps,
+        cfg.duration.as_secs_f64(),
+        ids.len()
+    );
+    println!(
+        "  sent {}  ok {}  errors {}  -> {:.0} requests/s  p50 {:.0} us  p95 {:.0} us  p99 {:.0} us",
+        report.sent,
+        report.ok,
+        report.errors,
+        report.requests_per_s,
+        report.p50_us,
+        report.p95_us,
+        report.p99_us
+    );
+    if cli::has(rest, "--drain") {
+        let reply = loadgen::request_drain(addr).unwrap_or_else(|e| {
+            eprintln!("drain: {e}");
+            std::process::exit(1);
+        });
+        if reply.get("ok") != Some(&edgelat::util::Json::Bool(true)) {
+            eprintln!("drain was not acknowledged: {}", reply.to_string());
+            std::process::exit(1);
+        }
+        println!("  drain acknowledged");
+    }
+    if let Some(out) = or_die(cli::flag(rest, "--out")) {
+        use edgelat::util::Json;
+        let fin = |v: f64| Json::num(if v.is_finite() { v } else { 0.0 });
+        let doc = Json::obj(vec![
+            ("addr", Json::str(addr.to_string())),
+            ("clients", Json::num(cfg.clients as f64)),
+            ("target_rps", Json::num(cfg.rps)),
+            ("duration_s", Json::num(cfg.duration.as_secs_f64())),
+            ("sent", Json::num(report.sent as f64)),
+            ("ok", Json::num(report.ok as f64)),
+            ("errors", Json::num(report.errors as f64)),
+            ("elapsed_s", Json::num(report.elapsed_s)),
+            ("requests_per_s", fin(report.requests_per_s)),
+            ("p50_us", fin(report.p50_us)),
+            ("p95_us", fin(report.p95_us)),
+            ("p99_us", fin(report.p99_us)),
+        ]);
+        std::fs::write(&out, doc.to_string()).unwrap_or_else(|e| {
+            eprintln!("writing {out}: {e}");
+            std::process::exit(2);
+        });
+        println!("  wrote {out}");
+    }
+    if report.ok == 0 {
+        eprintln!("no successful replies in {:.1}s", t0.elapsed().as_secs_f64());
+        std::process::exit(1);
     }
 }
 

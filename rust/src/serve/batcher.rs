@@ -1,0 +1,402 @@
+//! Dynamic micro-batching: coalesce concurrent predict requests into
+//! `LatencyEngine::predict_batch` calls.
+//!
+//! Connection handlers [`submit`](MicroBatcher::submit) jobs into a
+//! bounded queue and get back an `mpsc::Receiver` for their slot's
+//! result. A single flusher thread pulls batches out and executes them:
+//! a batch flushes when it reaches `max_batch` jobs **or** when the
+//! oldest queued job has waited `max_wait` (whichever comes first), so an
+//! idle daemon answers a lone request within one `max_wait` and a busy
+//! one amortizes deduction/lowering across the whole batch on the
+//! engine's `ExecPool` (where the fingerprint-keyed plan cache does the
+//! cross-client heavy lifting).
+//!
+//! Error containment is per-slot: `predict_batch` already returns one
+//! `Result` per request, so a poisoned request (unknown scenario, method
+//! mismatch) fails alone and the rest of its batch serves normally.
+//! Overflow (`queue_cap`) and post-drain submits are rejected *at
+//! submit*, with typed errors — the queue never grows unboundedly and a
+//! draining daemon never accepts work it won't finish.
+//!
+//! The flush *decision* is a pure function of (queue, config, clock),
+//! exposed to tests as [`take_ready`](MicroBatcher::take_ready) — given a
+//! scripted arrival order and an explicit `now`, coalescing is
+//! deterministic; the unit tests below script both flush paths.
+
+use crate::engine::{EngineError, LatencyEngine, PredictRequest, PredictResponse};
+use crate::graph::Graph;
+use crate::predict::Method;
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+use super::fleet::BundleFleet;
+use super::metrics::ServeMetrics;
+use super::ServeError;
+
+/// The per-slot outcome delivered back to the submitting connection.
+pub type JobResult = Result<PredictResponse, EngineError>;
+
+/// One prediction to be coalesced. The graph is owned: the submitting
+/// connection hands it off and is free to read its next request while
+/// the batch executes.
+#[derive(Debug)]
+pub struct PredictJob {
+    pub graph: Graph,
+    pub scenario_id: String,
+    pub method: Option<Method>,
+}
+
+struct Pending {
+    job: PredictJob,
+    reply: Sender<JobResult>,
+    submitted: Instant,
+}
+
+/// Coalescing knobs.
+#[derive(Debug, Clone, Copy)]
+pub struct BatchConfig {
+    /// Flush as soon as this many jobs are queued (clamped to ≥ 1).
+    pub max_batch: usize,
+    /// Flush when the oldest queued job has waited this long.
+    pub max_wait: Duration,
+    /// Reject submits beyond this many queued jobs (clamped to ≥
+    /// `max_batch`).
+    pub queue_cap: usize,
+}
+
+impl Default for BatchConfig {
+    fn default() -> BatchConfig {
+        BatchConfig {
+            max_batch: 32,
+            max_wait: Duration::from_micros(1000),
+            queue_cap: 1024,
+        }
+    }
+}
+
+/// The micro-batcher: bounded queue + condvar + one flusher loop.
+pub struct MicroBatcher {
+    cfg: BatchConfig,
+    queue: Mutex<VecDeque<Pending>>,
+    nonempty: Condvar,
+    stop: AtomicBool,
+}
+
+impl MicroBatcher {
+    pub fn new(cfg: BatchConfig) -> MicroBatcher {
+        let max_batch = cfg.max_batch.max(1);
+        MicroBatcher {
+            cfg: BatchConfig {
+                max_batch,
+                max_wait: cfg.max_wait,
+                queue_cap: cfg.queue_cap.max(max_batch),
+            },
+            queue: Mutex::new(VecDeque::new()),
+            nonempty: Condvar::new(),
+            stop: AtomicBool::new(false),
+        }
+    }
+
+    pub fn config(&self) -> BatchConfig {
+        self.cfg
+    }
+
+    /// Jobs currently queued (point in time).
+    pub fn queue_len(&self) -> usize {
+        self.queue.lock().unwrap().len()
+    }
+
+    pub fn is_draining(&self) -> bool {
+        self.stop.load(Ordering::Acquire)
+    }
+
+    /// Enqueue a job, returning the receiver its result will arrive on.
+    /// Typed rejections, decided under the queue lock: `Draining` once
+    /// [`begin_drain`](MicroBatcher::begin_drain) ran, `Overloaded` at
+    /// `queue_cap`.
+    pub fn submit(&self, job: PredictJob) -> Result<Receiver<JobResult>, ServeError> {
+        let (tx, rx) = channel();
+        let mut q = self.queue.lock().unwrap();
+        if self.stop.load(Ordering::Acquire) {
+            return Err(ServeError::Draining);
+        }
+        if q.len() >= self.cfg.queue_cap {
+            return Err(ServeError::Overloaded);
+        }
+        q.push_back(Pending { job, reply: tx, submitted: Instant::now() });
+        drop(q);
+        self.nonempty.notify_one();
+        Ok(rx)
+    }
+
+    /// Whether the queue is due to flush at `now`.
+    fn due(&self, q: &VecDeque<Pending>, now: Instant) -> bool {
+        match q.front() {
+            None => false,
+            Some(first) => {
+                q.len() >= self.cfg.max_batch
+                    || self.stop.load(Ordering::Acquire)
+                    || now.saturating_duration_since(first.submitted) >= self.cfg.max_wait
+            }
+        }
+    }
+
+    fn drain_front(q: &mut VecDeque<Pending>, max: usize) -> Vec<Pending> {
+        let n = q.len().min(max);
+        q.drain(..n).collect()
+    }
+
+    /// Non-blocking flush decision at an explicit `now` — the
+    /// deterministic core the flusher loops over and the unit tests
+    /// script directly. Returns a batch iff one is due (size reached,
+    /// oldest job past its deadline, or draining).
+    fn take_ready(&self, now: Instant) -> Option<Vec<Pending>> {
+        let mut q = self.queue.lock().unwrap();
+        if self.due(&q, now) {
+            Some(Self::drain_front(&mut q, self.cfg.max_batch))
+        } else {
+            None
+        }
+    }
+
+    /// Block until a batch is due and take it. `None` means drained:
+    /// stopped *and* empty — every accepted job is flushed before the
+    /// flusher is released.
+    fn next_batch(&self) -> Option<Vec<Pending>> {
+        let mut q = self.queue.lock().unwrap();
+        loop {
+            let now = Instant::now();
+            if self.due(&q, now) {
+                return Some(Self::drain_front(&mut q, self.cfg.max_batch));
+            }
+            if self.stop.load(Ordering::Acquire) && q.is_empty() {
+                return None;
+            }
+            match q.front() {
+                None => q = self.nonempty.wait(q).unwrap(),
+                Some(first) => {
+                    let deadline = first.submitted + self.cfg.max_wait;
+                    let timeout = deadline.saturating_duration_since(now);
+                    q = self.nonempty.wait_timeout(q, timeout).unwrap().0;
+                }
+            }
+        }
+    }
+
+    /// Execute one batch on `engine` and route each per-slot result back
+    /// to its submitter. A dead receiver (client hung up mid-flight) is
+    /// ignored — the rest of the batch still delivers.
+    fn execute(engine: &LatencyEngine, batch: Vec<Pending>, metrics: &ServeMetrics) {
+        let reqs: Vec<PredictRequest> = batch
+            .iter()
+            .map(|p| {
+                let mut r = PredictRequest::new(&p.job.graph, p.job.scenario_id.clone());
+                if let Some(m) = p.job.method {
+                    r = r.with_method(m);
+                }
+                r
+            })
+            .collect();
+        let results = engine.predict_batch(&reqs);
+        drop(reqs);
+        metrics.record_batch(batch.len());
+        let done = Instant::now();
+        for (p, res) in batch.into_iter().zip(results) {
+            match &res {
+                Ok(_) => metrics.note_predict_ok(),
+                Err(_) => metrics.note_predict_err(),
+            }
+            metrics
+                .record_service_us(done.saturating_duration_since(p.submitted).as_secs_f64() * 1e6);
+            let _ = p.reply.send(res);
+        }
+    }
+
+    /// The flusher loop the daemon runs on one dedicated thread. Grabs
+    /// the fleet's engine `Arc` fresh per batch, so a hot reload takes
+    /// effect on the next flush while the current batch finishes on the
+    /// engine it started with. Returns once drained.
+    pub fn run_flusher(&self, fleet: &BundleFleet, metrics: &ServeMetrics) {
+        while let Some(batch) = self.next_batch() {
+            let engine = fleet.engine();
+            Self::execute(&engine, batch, metrics);
+        }
+    }
+
+    /// Stop accepting submits and wake the flusher to drain what's
+    /// queued. Idempotent.
+    pub fn begin_drain(&self) {
+        self.stop.store(true, Ordering::Release);
+        self.nonempty.notify_all();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::EngineBuilder;
+
+    const GOLDEN_BUNDLE: &str = include_str!("../../tests/data/golden_bundle.json");
+    const SCENARIO: &str = "Snapdragon855/cpu/1L/fp32";
+
+    fn golden_engine() -> LatencyEngine {
+        let j = crate::util::Json::parse(GOLDEN_BUNDLE).expect("golden json");
+        let b = crate::engine::PredictorBundle::from_json(&j).expect("golden bundle");
+        EngineBuilder::new().bundle(b).threads(2).build().expect("engine")
+    }
+
+    fn jobs(n: usize, scenario: &str) -> Vec<PredictJob> {
+        crate::nas::sample_dataset(17, n)
+            .into_iter()
+            .map(|a| PredictJob {
+                graph: a.graph,
+                scenario_id: scenario.to_string(),
+                method: None,
+            })
+            .collect()
+    }
+
+    fn far_future() -> Instant {
+        Instant::now() + Duration::from_secs(3600)
+    }
+
+    #[test]
+    fn coalescing_is_deterministic_for_a_scripted_arrival_order() {
+        // Large max_wait: only the size trigger and the scripted clock
+        // decide flushes, never the test host's scheduling.
+        let b = MicroBatcher::new(BatchConfig {
+            max_batch: 4,
+            max_wait: Duration::from_secs(3600),
+            queue_cap: 64,
+        });
+        let mut rxs = Vec::new();
+        for job in jobs(6, SCENARIO) {
+            rxs.push(b.submit(job).expect("accepted"));
+        }
+        // Flush-on-size: 6 queued, max_batch 4 → exactly one full batch.
+        let now = Instant::now();
+        let first = b.take_ready(now).expect("size trigger fires");
+        assert_eq!(first.len(), 4);
+        // The 2 leftovers are under size and under deadline: no flush.
+        assert!(b.take_ready(now).is_none(), "no premature deadline flush");
+        assert_eq!(b.queue_len(), 2);
+        // Flush-on-deadline: advance the scripted clock past max_wait.
+        let second = b.take_ready(far_future()).expect("deadline trigger fires");
+        assert_eq!(second.len(), 2);
+        assert_eq!(b.queue_len(), 0);
+        assert!(b.take_ready(far_future()).is_none(), "empty queue never flushes");
+    }
+
+    #[test]
+    fn responses_route_back_to_the_correct_client_in_order() {
+        let engine = golden_engine();
+        let b = MicroBatcher::new(BatchConfig::default());
+        let metrics = ServeMetrics::new();
+        let js = jobs(5, SCENARIO);
+        // Direct predictions on the same engine are the ground truth.
+        let expected: Vec<f64> = js
+            .iter()
+            .map(|j| engine.predict(&PredictRequest::new(&j.graph, SCENARIO)).unwrap().e2e_ms)
+            .collect();
+        let rxs: Vec<_> = js.into_iter().map(|j| b.submit(j).expect("accepted")).collect();
+        let batch = b.take_ready(far_future()).expect("due");
+        assert_eq!(batch.len(), 5);
+        MicroBatcher::execute(&engine, batch, &metrics);
+        for (rx, want) in rxs.iter().zip(&expected) {
+            let got = rx.recv().expect("slot delivered").expect("served");
+            // Same engine, same graph → bit-identical through the batcher.
+            assert_eq!(got.e2e_ms.to_bits(), want.to_bits());
+        }
+        let s = metrics.snapshot();
+        assert_eq!(s.predict_ok, 5);
+        assert_eq!(s.batches, 1);
+        assert_eq!(s.mean_batch, 5.0);
+        assert!(s.service_p50_us > 0.0);
+    }
+
+    #[test]
+    fn a_poisoned_request_fails_alone_and_the_batch_survives() {
+        let engine = golden_engine();
+        let b = MicroBatcher::new(BatchConfig::default());
+        let metrics = ServeMetrics::new();
+        let mut js = jobs(3, SCENARIO);
+        js[1].scenario_id = "NoSuchSoc/gpu".to_string(); // the poison
+        let rxs: Vec<_> = js.into_iter().map(|j| b.submit(j).expect("accepted")).collect();
+        let batch = b.take_ready(far_future()).expect("due");
+        MicroBatcher::execute(&engine, batch, &metrics);
+        assert!(rxs[0].recv().unwrap().is_ok());
+        let err = rxs[1].recv().unwrap().expect_err("poisoned slot fails");
+        assert!(matches!(err, EngineError::NoPredictor { .. }), "{err:?}");
+        assert!(rxs[2].recv().unwrap().is_ok());
+        let s = metrics.snapshot();
+        assert_eq!((s.predict_ok, s.predict_err), (2, 1));
+    }
+
+    #[test]
+    fn overflow_and_drain_are_rejected_at_submit_and_drain_flushes() {
+        let b = MicroBatcher::new(BatchConfig {
+            max_batch: 2,
+            max_wait: Duration::from_secs(3600),
+            queue_cap: 2,
+        });
+        let metrics = ServeMetrics::new();
+        let mut js = jobs(3, SCENARIO);
+        let rx_keep = b.submit(js.remove(0)).expect("first accepted");
+        let _rx2 = b.submit(js.remove(0)).expect("second accepted");
+        match b.submit(js.remove(0)) {
+            Err(ServeError::Overloaded) => {}
+            other => panic!("expected Overloaded, got {other:?}"),
+        }
+        // Drain: further submits are refused, queued work still flushes.
+        b.begin_drain();
+        assert!(b.is_draining());
+        let extra = jobs(1, SCENARIO).remove(0);
+        match b.submit(extra) {
+            Err(ServeError::Draining) => {}
+            other => panic!("expected Draining, got {other:?}"),
+        }
+        // run_flusher on a stopped batcher drains the queue, then exits —
+        // no accepted slot is left without a result.
+        let fleet_dir =
+            std::env::temp_dir().join(format!("edgelat_drainflush_{}", std::process::id()));
+        std::fs::create_dir_all(&fleet_dir).unwrap();
+        std::fs::write(fleet_dir.join("golden.json"), GOLDEN_BUNDLE).unwrap();
+        let fleet = BundleFleet::load(&fleet_dir, Some(2)).unwrap();
+        b.run_flusher(&fleet, &metrics); // returns immediately after the drain flush
+        assert!(rx_keep.recv().expect("drained slot still answered").is_ok());
+        assert_eq!(metrics.snapshot().predict_ok, 2);
+        let _ = std::fs::remove_dir_all(&fleet_dir);
+    }
+
+    #[test]
+    fn flush_on_deadline_fires_through_the_real_flusher_thread() {
+        // End-to-end through next_batch's wait_timeout: one lone request
+        // must be answered within ~max_wait, without a size trigger.
+        let dir = std::env::temp_dir().join(format!("edgelat_deadline_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("golden.json"), GOLDEN_BUNDLE).unwrap();
+        let fleet = BundleFleet::load(&dir, Some(2)).unwrap();
+        let metrics = ServeMetrics::new();
+        let b = MicroBatcher::new(BatchConfig {
+            max_batch: 64, // far above 1: only the deadline can flush
+            max_wait: Duration::from_millis(5),
+            queue_cap: 64,
+        });
+        std::thread::scope(|s| {
+            let flusher = s.spawn(|| b.run_flusher(&fleet, &metrics));
+            let rx = b.submit(jobs(1, SCENARIO).remove(0)).expect("accepted");
+            let resp = rx
+                .recv_timeout(Duration::from_secs(30))
+                .expect("deadline flush delivers")
+                .expect("served");
+            assert!(resp.e2e_ms.is_finite());
+            b.begin_drain();
+            flusher.join().unwrap();
+        });
+        assert_eq!(metrics.snapshot().batches, 1);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

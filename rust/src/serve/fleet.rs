@@ -1,0 +1,231 @@
+//! The bundle fleet: a directory of predictor bundles behind one
+//! hot-swappable engine.
+//!
+//! `BundleFleet::load` scans a directory for `*.json` predictor bundles
+//! (v2 or v3 — [`crate::engine::PredictorBundle::load`] handles both),
+//! builds one multi-bundle [`LatencyEngine`], and hands out the engine as
+//! an `Arc` clone per batch. `reload` builds a **complete replacement
+//! engine first** and only then swaps the `Arc` under a write lock, so:
+//!
+//! - in-flight batches keep predicting on the engine they started with
+//!   (their `Arc` keeps the old generation alive until they finish);
+//! - a reload that fails — unreadable directory, corrupt bundle — leaves
+//!   the serving engine untouched and returns a typed error;
+//! - plan-cache counters survive swaps: the retiring engine's
+//!   [`CacheStats`] are folded into a running total, and
+//!   [`plan_cache_stats`](BundleFleet::plan_cache_stats) reports
+//!   retired + live merged (the `CacheStats::merged` contract).
+
+use crate::engine::{EngineBuilder, LatencyEngine};
+use crate::exec_pool::CacheStats;
+use std::path::{Path, PathBuf};
+use std::sync::{Arc, RwLock};
+
+use super::ServeError;
+
+struct FleetState {
+    engine: Arc<LatencyEngine>,
+    generation: u64,
+    bundles: usize,
+    /// Cache counters accumulated by engines that have been swapped out.
+    retired_cache: CacheStats,
+}
+
+/// A directory of bundles serving as one engine, with hot reload.
+pub struct BundleFleet {
+    dir: PathBuf,
+    threads: Option<usize>,
+    state: RwLock<FleetState>,
+}
+
+impl BundleFleet {
+    /// Load every `*.json` bundle in `dir` (sorted by filename — load
+    /// order is route priority for scenarios served by several bundles)
+    /// into one engine. An empty or unreadable directory is an error: a
+    /// daemon with nothing to serve should fail at startup, not at the
+    /// first request.
+    pub fn load(dir: impl AsRef<Path>, threads: Option<usize>) -> Result<BundleFleet, ServeError> {
+        let dir = dir.as_ref().to_path_buf();
+        let (engine, bundles) = Self::build_engine(&dir, threads)?;
+        Ok(BundleFleet {
+            dir,
+            threads,
+            state: RwLock::new(FleetState {
+                engine: Arc::new(engine),
+                generation: 1,
+                bundles,
+                retired_cache: CacheStats::default(),
+            }),
+        })
+    }
+
+    fn bundle_files(dir: &Path) -> Result<Vec<PathBuf>, ServeError> {
+        let entries = std::fs::read_dir(dir)
+            .map_err(|e| ServeError::Io(format!("reading bundle dir {}: {e}", dir.display())))?;
+        let mut files: Vec<PathBuf> = entries
+            .filter_map(|e| e.ok().map(|e| e.path()))
+            .filter(|p| p.extension().and_then(|x| x.to_str()) == Some("json"))
+            .collect();
+        files.sort();
+        if files.is_empty() {
+            return Err(ServeError::Config(format!(
+                "no *.json predictor bundles in {} (train some with `edgelat train`)",
+                dir.display()
+            )));
+        }
+        Ok(files)
+    }
+
+    fn build_engine(
+        dir: &Path,
+        threads: Option<usize>,
+    ) -> Result<(LatencyEngine, usize), ServeError> {
+        let files = Self::bundle_files(dir)?;
+        let n = files.len();
+        let mut builder = EngineBuilder::new();
+        for f in &files {
+            builder = builder
+                .bundle_file(f)
+                .map_err(|e| ServeError::Config(format!("bundle {}: {e}", f.display())))?;
+        }
+        if let Some(t) = threads {
+            builder = builder.threads(t);
+        }
+        let engine = builder.build().map_err(ServeError::Engine)?;
+        Ok((engine, n))
+    }
+
+    /// The directory this fleet (re)loads from.
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    /// The live engine. Batches clone the `Arc` once and predict on that
+    /// clone, so a concurrent reload can never pull the engine out from
+    /// under an in-flight batch.
+    pub fn engine(&self) -> Arc<LatencyEngine> {
+        self.state.read().unwrap().engine.clone()
+    }
+
+    /// Monotonic engine generation (1 after load, +1 per reload).
+    pub fn generation(&self) -> u64 {
+        self.state.read().unwrap().generation
+    }
+
+    /// Bundles loaded into the live engine.
+    pub fn bundle_count(&self) -> usize {
+        self.state.read().unwrap().bundles
+    }
+
+    /// Scenario ids the live engine serves (owned: the engine `Arc` this
+    /// borrows from dies with the call frame).
+    pub fn scenario_ids(&self) -> Vec<String> {
+        self.engine().scenario_ids().iter().map(|s| s.to_string()).collect()
+    }
+
+    /// Rebuild from the directory and atomically swap the engine.
+    /// Building happens *outside* the lock: readers keep serving the old
+    /// generation for the whole rebuild, and a failed rebuild changes
+    /// nothing. Returns the new generation and its scenario ids.
+    pub fn reload(&self) -> Result<(u64, usize, Vec<String>), ServeError> {
+        let (engine, bundles) = Self::build_engine(&self.dir, self.threads)?;
+        let ids: Vec<String> = engine.scenario_ids().iter().map(|s| s.to_string()).collect();
+        let mut st = self.state.write().unwrap();
+        st.retired_cache = st.retired_cache.merge(&st.engine.cache_stats());
+        st.engine = Arc::new(engine);
+        st.generation += 1;
+        st.bundles = bundles;
+        Ok((st.generation, bundles, ids))
+    }
+
+    /// Plan-cache counters over the fleet's whole lifetime: every retired
+    /// generation's totals merged with the live engine's.
+    pub fn plan_cache_stats(&self) -> CacheStats {
+        let st = self.state.read().unwrap();
+        st.retired_cache.merge(&st.engine.cache_stats())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::PredictRequest;
+
+    /// The golden-trace fixture: a handcrafted all-integer Lasso bundle
+    /// for Snapdragon855/cpu/1L/fp32 — loads instantly, no training.
+    const GOLDEN_BUNDLE: &str = include_str!("../../tests/data/golden_bundle.json");
+
+    fn fixture_dir(tag: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join(format!("edgelat_fleet_{tag}_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("a_golden.json"), GOLDEN_BUNDLE).unwrap();
+        dir
+    }
+
+    #[test]
+    fn load_serves_reload_swaps_and_cache_stats_survive() {
+        let dir = fixture_dir("reload");
+        let fleet = BundleFleet::load(&dir, Some(2)).expect("fleet loads");
+        assert_eq!(fleet.generation(), 1);
+        assert_eq!(fleet.bundle_count(), 1);
+        assert_eq!(fleet.scenario_ids(), vec!["Snapdragon855/cpu/1L/fp32".to_string()]);
+
+        // Serve a couple of predictions to put counters on the live cache.
+        let g = crate::nas::sample_dataset(3, 1).remove(0).graph;
+        let engine = fleet.engine();
+        let req = PredictRequest::new(&g, "Snapdragon855/cpu/1L/fp32");
+        let first = engine.predict(&req).expect("served");
+        engine.predict(&req).expect("served again");
+        let before = fleet.plan_cache_stats();
+        assert!(before.lookups() >= 2);
+        assert!(before.hits >= 1, "second predict must hit the plan cache");
+
+        // Reload: generation bumps, and an engine Arc taken before the
+        // swap keeps serving bit-identically (in-flight work is safe).
+        let old_engine = fleet.engine();
+        let (generation, bundles, ids) = fleet.reload().expect("reload");
+        assert_eq!(generation, 2);
+        assert_eq!(bundles, 1);
+        assert_eq!(ids, fleet.scenario_ids());
+        let after_old = old_engine.predict(&req).expect("old generation still serves");
+        assert_eq!(after_old.e2e_ms.to_bits(), first.e2e_ms.to_bits());
+        // Same fixture on disk → the swapped-in engine agrees exactly.
+        let after_new = fleet.engine().predict(&req).expect("new generation serves");
+        assert_eq!(after_new.e2e_ms.to_bits(), first.e2e_ms.to_bits());
+
+        // The retiring engine's counters were folded in, not dropped.
+        let merged = fleet.plan_cache_stats();
+        assert!(merged.lookups() >= before.lookups() + 1);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn failed_reload_leaves_the_live_engine_untouched() {
+        let dir = fixture_dir("failpath");
+        let fleet = BundleFleet::load(&dir, None).expect("fleet loads");
+        // Corrupt the only bundle on disk: reload must fail...
+        std::fs::write(dir.join("a_golden.json"), "{ not json").unwrap();
+        let err = fleet.reload().expect_err("corrupt bundle rejected");
+        assert!(err.to_string().contains("a_golden.json"), "{err}");
+        // ...and the generation-1 engine keeps serving.
+        assert_eq!(fleet.generation(), 1);
+        let g = crate::nas::sample_dataset(3, 1).remove(0).graph;
+        fleet
+            .engine()
+            .predict(&PredictRequest::new(&g, "Snapdragon855/cpu/1L/fp32"))
+            .expect("still serving after failed reload");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn empty_and_missing_directories_fail_at_startup() {
+        let dir = std::env::temp_dir().join(format!("edgelat_fleet_empty_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let err = BundleFleet::load(&dir, None).expect_err("empty dir rejected");
+        assert!(err.to_string().contains("no *.json"), "{err}");
+        let _ = std::fs::remove_dir_all(&dir);
+        let err = BundleFleet::load("/no/such/dir/anywhere", None)
+            .expect_err("missing dir rejected");
+        assert!(err.to_string().contains("/no/such/dir"), "{err}");
+    }
+}

@@ -1,0 +1,305 @@
+//! Synthetic open-loop load generator for the serve daemon.
+//!
+//! Open-loop means arrivals are scheduled on a fixed cadence derived from
+//! the target rate, **not** gated on the previous reply — a server that
+//! falls behind keeps receiving requests and the measured latency
+//! includes its queueing, which is the number an edge deployment actually
+//! cares about (closed-loop generators hide overload by slowing down with
+//! the server — the classic coordinated-omission trap).
+//!
+//! Each client owns one connection, a writer thread on the cadence and a
+//! reader thread. The protocol guarantees in-order replies per
+//! connection, so the reader matches reply `k` to send-instant `k`
+//! without correlation ids, and every reply's latency streams into one
+//! shared [`LogHistogram`](crate::util::timing::LogHistogram) — constant
+//! memory at any request count.
+//!
+//! Also here: one-shot helpers ([`request_stats`], [`request_reload`],
+//! [`request_drain`], [`request_line`]) used by `serve-bench`, the bench
+//! pipeline stage and the integration tests to speak single control
+//! requests without hand-rolling sockets each time.
+
+use crate::util::timing::LogHistogram;
+use crate::util::Json;
+use std::collections::VecDeque;
+use std::io::{BufRead, BufReader, Write};
+use std::net::{SocketAddr, TcpStream};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+use std::time::{Duration, Instant};
+
+use super::ServeError;
+
+/// Open-loop load shape.
+#[derive(Debug, Clone, Copy)]
+pub struct LoadConfig {
+    /// Concurrent connections (clamped to ≥ 1).
+    pub clients: usize,
+    /// Aggregate target request rate across all clients, in requests/s.
+    pub rps: f64,
+    /// How long to keep offering load.
+    pub duration: Duration,
+}
+
+/// What an open-loop run measured.
+#[derive(Debug, Clone, Copy)]
+pub struct LoadReport {
+    pub sent: u64,
+    /// Replies with `ok:true`.
+    pub ok: u64,
+    /// Replies with `ok:false` or that failed to parse, plus reply slots
+    /// lost to read errors/timeouts.
+    pub errors: u64,
+    pub elapsed_s: f64,
+    /// Completed-`ok` throughput over the whole run.
+    pub requests_per_s: f64,
+    /// Send→reply latency percentiles in µs. NaN when no reply was
+    /// measured — deliberately poisonous, so a gate on these fields fails
+    /// loudly instead of passing on an empty run.
+    pub p50_us: f64,
+    pub p95_us: f64,
+    pub p99_us: f64,
+}
+
+/// Offer `lines` (round-robin across clients and time) to `addr` at
+/// `cfg`'s aggregate rate and measure send→reply latency. Connects every
+/// client up front so a dead daemon fails fast instead of producing a
+/// zero-reply report.
+pub fn run_load(
+    addr: SocketAddr,
+    cfg: &LoadConfig,
+    lines: &[String],
+) -> Result<LoadReport, ServeError> {
+    if lines.is_empty() {
+        return Err(ServeError::Config("load generator needs at least one request line".into()));
+    }
+    let clients = cfg.clients.max(1);
+    let rps = if cfg.rps.is_finite() && cfg.rps > 0.0 { cfg.rps } else { 1.0 };
+    let duration_s = cfg.duration.as_secs_f64().max(0.0);
+    // Per-client quota: ceil, so short --quick runs still send work.
+    let per_client = ((duration_s * rps / clients as f64).ceil() as usize).max(1);
+    // Each client fires every `clients/rps` seconds → aggregate ≈ rps.
+    let interval = Duration::from_secs_f64(clients as f64 / rps);
+
+    let mut writers = Vec::with_capacity(clients);
+    let mut readers = Vec::with_capacity(clients);
+    for _ in 0..clients {
+        let s = TcpStream::connect(addr)
+            .map_err(|e| ServeError::Io(format!("connecting to {addr}: {e}")))?;
+        s.set_nodelay(true).ok();
+        let r = s
+            .try_clone()
+            .map_err(|e| ServeError::Io(format!("cloning socket for {addr}: {e}")))?;
+        r.set_read_timeout(Some(Duration::from_secs(10)))
+            .map_err(|e| ServeError::Io(format!("read timeout on {addr}: {e}")))?;
+        writers.push(s);
+        readers.push(r);
+    }
+
+    let sent = AtomicU64::new(0);
+    let ok = AtomicU64::new(0);
+    let errors = AtomicU64::new(0);
+    let hist = LogHistogram::new();
+    // Per-client send instants: writer pushes back, reader pops front —
+    // valid because replies on one connection arrive in request order.
+    let send_times: Vec<Mutex<VecDeque<Instant>>> =
+        (0..clients).map(|_| Mutex::new(VecDeque::new())).collect();
+    let t0 = Instant::now();
+
+    std::thread::scope(|scope| {
+        for (c, (mut w, r)) in writers.into_iter().zip(readers).enumerate() {
+            let (sent, ok, errors, hist) = (&sent, &ok, &errors, &hist);
+            let times = &send_times[c];
+            // Stagger client start phases evenly across one interval so
+            // the aggregate arrival process is smooth, not N-bursty.
+            let stagger = interval.mul_f64(c as f64 / clients as f64);
+            scope.spawn(move || {
+                for i in 0..per_client {
+                    let target = t0 + stagger + interval.mul_f64(i as f64);
+                    let now = Instant::now();
+                    if target > now {
+                        std::thread::sleep(target - now);
+                    }
+                    let line = &lines[(i * clients + c) % lines.len()];
+                    // Stamp *before* the write so queueing in the kernel
+                    // and the daemon counts against measured latency.
+                    times.lock().unwrap().push_back(Instant::now());
+                    if w.write_all(line.as_bytes()).is_err()
+                        || w.write_all(b"\n").is_err()
+                        || w.flush().is_err()
+                    {
+                        times.lock().unwrap().pop_back();
+                        break;
+                    }
+                    sent.fetch_add(1, Ordering::Relaxed);
+                }
+            });
+            scope.spawn(move || {
+                let mut rd = BufReader::new(r);
+                let mut line = String::new();
+                for _ in 0..per_client {
+                    line.clear();
+                    match rd.read_line(&mut line) {
+                        Ok(0) | Err(_) => break, // writer quit or daemon gone
+                        Ok(_) => {}
+                    }
+                    let sent_at = times.lock().unwrap().pop_front();
+                    if let Some(at) = sent_at {
+                        hist.record(at.elapsed().as_secs_f64() * 1e6);
+                    }
+                    let is_ok = Json::parse(line.trim())
+                        .ok()
+                        .and_then(|j| j.get("ok").cloned())
+                        == Some(Json::Bool(true));
+                    if is_ok {
+                        ok.fetch_add(1, Ordering::Relaxed);
+                    } else {
+                        errors.fetch_add(1, Ordering::Relaxed);
+                    }
+                }
+            });
+        }
+    });
+
+    let elapsed_s = t0.elapsed().as_secs_f64().max(1e-9);
+    let sent_n = sent.load(Ordering::Relaxed);
+    let ok_n = ok.load(Ordering::Relaxed);
+    let answered = ok_n + errors.load(Ordering::Relaxed);
+    Ok(LoadReport {
+        sent: sent_n,
+        ok: ok_n,
+        // Sent-but-never-answered slots are failures too.
+        errors: sent_n.saturating_sub(answered) + errors.load(Ordering::Relaxed),
+        elapsed_s,
+        requests_per_s: ok_n as f64 / elapsed_s,
+        p50_us: hist.percentile(0.50),
+        p95_us: hist.percentile(0.95),
+        p99_us: hist.percentile(0.99),
+    })
+}
+
+/// Send one request line and return the parsed reply. Used for control
+/// verbs and smoke checks; opens a fresh connection per call.
+pub fn request_line(
+    addr: SocketAddr,
+    line: &str,
+    timeout: Duration,
+) -> Result<Json, ServeError> {
+    let mut s = TcpStream::connect(addr)
+        .map_err(|e| ServeError::Io(format!("connecting to {addr}: {e}")))?;
+    s.set_nodelay(true).ok();
+    s.set_read_timeout(Some(timeout))
+        .map_err(|e| ServeError::Io(format!("read timeout on {addr}: {e}")))?;
+    s.write_all(line.as_bytes())
+        .and_then(|_| s.write_all(b"\n"))
+        .and_then(|_| s.flush())
+        .map_err(|e| ServeError::Io(format!("writing to {addr}: {e}")))?;
+    let mut rd = BufReader::new(s);
+    let mut reply = String::new();
+    rd.read_line(&mut reply)
+        .map_err(|e| ServeError::Io(format!("reading reply from {addr}: {e}")))?;
+    if reply.is_empty() {
+        return Err(ServeError::Io(format!("{addr} closed without replying")));
+    }
+    Json::parse(reply.trim())
+        .map_err(|e| ServeError::Io(format!("unparseable reply from {addr}: {e}")))
+}
+
+/// Fetch the daemon's `stats` document (the reply's `stats` object).
+pub fn request_stats(addr: SocketAddr) -> Result<Json, ServeError> {
+    let j = request_line(addr, &super::protocol::stats_line(), Duration::from_secs(5))?;
+    j.get("stats")
+        .cloned()
+        .ok_or_else(|| ServeError::Io(format!("stats reply from {addr} has no 'stats' object")))
+}
+
+/// Ask the daemon to hot-reload its bundle directory; returns the reply.
+pub fn request_reload(addr: SocketAddr) -> Result<Json, ServeError> {
+    request_line(addr, &super::protocol::reload_line(), Duration::from_secs(5))
+}
+
+/// Ask the daemon to drain; returns the acknowledgement reply.
+pub fn request_drain(addr: SocketAddr) -> Result<Json, ServeError> {
+    request_line(addr, &super::protocol::drain_line(), Duration::from_secs(5))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::net::TcpListener;
+
+    /// A minimal line-reply server: answers every line with a canned
+    /// reply, so the generator's pacing, matching and accounting can be
+    /// tested without booting the whole daemon.
+    fn spawn_echo_server(reply: &'static str, conns: usize) -> SocketAddr {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        std::thread::spawn(move || {
+            for _ in 0..conns {
+                let Ok((sock, _)) = listener.accept() else { return };
+                std::thread::spawn(move || {
+                    let mut rd = BufReader::new(sock.try_clone().unwrap());
+                    let mut w = sock;
+                    let mut line = String::new();
+                    loop {
+                        line.clear();
+                        match rd.read_line(&mut line) {
+                            Ok(0) | Err(_) => return,
+                            Ok(_) => {}
+                        }
+                        if w.write_all(reply.as_bytes()).is_err()
+                            || w.write_all(b"\n").is_err()
+                        {
+                            return;
+                        }
+                    }
+                });
+            }
+        });
+        addr
+    }
+
+    #[test]
+    fn measures_a_cooperative_server_with_finite_percentiles() {
+        let addr = spawn_echo_server(r#"{"ok":true,"op":"predict"}"#, 2);
+        let cfg = LoadConfig {
+            clients: 2,
+            rps: 200.0,
+            duration: Duration::from_millis(200),
+        };
+        let lines = vec![r#"{"op":"predict"}"#.to_string()];
+        let report = run_load(addr, &cfg, &lines).expect("load runs");
+        assert!(report.sent >= 2, "sent {}", report.sent);
+        assert_eq!(report.ok, report.sent, "every reply is ok:true");
+        assert_eq!(report.errors, 0);
+        assert!(report.requests_per_s > 0.0);
+        assert!(report.p50_us.is_finite() && report.p50_us > 0.0);
+        assert!(report.p50_us <= report.p95_us && report.p95_us <= report.p99_us);
+    }
+
+    #[test]
+    fn error_replies_are_counted_as_errors_not_ok() {
+        let addr = spawn_echo_server(r#"{"ok":false,"error":{"code":"bad_json","message":"x"}}"#, 1);
+        let cfg = LoadConfig {
+            clients: 1,
+            rps: 100.0,
+            duration: Duration::from_millis(100),
+        };
+        let report = run_load(addr, &cfg, &[r#"garbage"#.to_string()]).expect("load runs");
+        assert!(report.sent >= 1);
+        assert_eq!(report.ok, 0);
+        assert_eq!(report.errors, report.sent);
+        assert_eq!(report.requests_per_s, 0.0);
+    }
+
+    #[test]
+    fn refuses_an_empty_request_set_and_a_dead_address() {
+        let cfg = LoadConfig { clients: 1, rps: 10.0, duration: Duration::from_millis(10) };
+        let err = run_load("127.0.0.1:9".parse().unwrap(), &cfg, &[]).unwrap_err();
+        assert!(err.to_string().contains("at least one request line"), "{err}");
+        // Port 9 (discard) is unbound in the test environment: connect
+        // must fail fast rather than report zeros.
+        let err = run_load("127.0.0.1:9".parse().unwrap(), &cfg, &["x".into()]).unwrap_err();
+        assert!(err.to_string().contains("connecting"), "{err}");
+    }
+}

@@ -1,0 +1,213 @@
+//! Daemon observability: lock-free counters + streaming histograms.
+//!
+//! One [`ServeMetrics`] is shared by every connection handler and the
+//! batch flusher. All mutation is relaxed atomics or
+//! [`LogHistogram::record`] — nothing on the request path takes a lock or
+//! allocates. [`snapshot`](ServeMetrics::snapshot) folds the counters
+//! into a plain-value [`MetricsSnapshot`] for the `stats` endpoint and
+//! the drain summary; histogram percentiles that would be NaN on an
+//! empty histogram are reported as 0.0 there, because the snapshot feeds
+//! straight into JSON (where NaN is not a value).
+
+use crate::util::timing::LogHistogram;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Instant;
+
+/// Shared serve-daemon counters. Constructed once at bind time.
+#[derive(Debug)]
+pub struct ServeMetrics {
+    started: Instant,
+    predict_requests: AtomicU64,
+    predict_ok: AtomicU64,
+    predict_err: AtomicU64,
+    /// Typed submit rejections (queue full / draining) — disjoint from
+    /// `predict_err`, which counts engine-side per-item failures.
+    rejected: AtomicU64,
+    /// Lines that failed to parse into any request.
+    malformed: AtomicU64,
+    /// stats / reload / drain requests.
+    control: AtomicU64,
+    connections: AtomicU64,
+    reloads: AtomicU64,
+    batches: AtomicU64,
+    batched_items: AtomicU64,
+    max_batch: AtomicU64,
+    batch_sizes: LogHistogram,
+    service_us: LogHistogram,
+}
+
+/// Point-in-time plain-value view of [`ServeMetrics`].
+#[derive(Debug, Clone, Copy)]
+pub struct MetricsSnapshot {
+    pub uptime_s: f64,
+    pub predict_requests: u64,
+    pub predict_ok: u64,
+    pub predict_err: u64,
+    pub rejected: u64,
+    pub malformed: u64,
+    pub control: u64,
+    pub connections: u64,
+    pub reloads: u64,
+    pub batches: u64,
+    pub batched_items: u64,
+    pub max_batch: u64,
+    /// Mean coalesced batch size; 0.0 before the first flush.
+    pub mean_batch: f64,
+    /// Submit→reply service latency percentiles in µs; 0.0 when no
+    /// prediction has completed yet (never NaN — this feeds JSON).
+    pub service_p50_us: f64,
+    pub service_p95_us: f64,
+    pub service_p99_us: f64,
+}
+
+impl Default for ServeMetrics {
+    fn default() -> ServeMetrics {
+        ServeMetrics::new()
+    }
+}
+
+impl ServeMetrics {
+    pub fn new() -> ServeMetrics {
+        ServeMetrics {
+            started: Instant::now(),
+            predict_requests: AtomicU64::new(0),
+            predict_ok: AtomicU64::new(0),
+            predict_err: AtomicU64::new(0),
+            rejected: AtomicU64::new(0),
+            malformed: AtomicU64::new(0),
+            control: AtomicU64::new(0),
+            connections: AtomicU64::new(0),
+            reloads: AtomicU64::new(0),
+            batches: AtomicU64::new(0),
+            batched_items: AtomicU64::new(0),
+            max_batch: AtomicU64::new(0),
+            batch_sizes: LogHistogram::new(),
+            service_us: LogHistogram::new(),
+        }
+    }
+
+    pub fn note_predict(&self) {
+        self.predict_requests.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn note_predict_ok(&self) {
+        self.predict_ok.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn note_predict_err(&self) {
+        self.predict_err.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn note_rejected(&self) {
+        self.rejected.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn note_malformed(&self) {
+        self.malformed.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn note_control(&self) {
+        self.control.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn note_connection(&self) {
+        self.connections.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn note_reload(&self) {
+        self.reloads.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Record one flushed batch of `n` coalesced predictions.
+    pub fn record_batch(&self, n: usize) {
+        self.batches.fetch_add(1, Ordering::Relaxed);
+        self.batched_items.fetch_add(n as u64, Ordering::Relaxed);
+        self.max_batch.fetch_max(n as u64, Ordering::Relaxed);
+        self.batch_sizes.record(n as f64);
+    }
+
+    /// Record one served prediction's submit→reply latency.
+    pub fn record_service_us(&self, us: f64) {
+        self.service_us.record(us);
+    }
+
+    /// Coalesced-batch-size histogram (for the `stats` wire form).
+    pub fn batch_hist(&self) -> &LogHistogram {
+        &self.batch_sizes
+    }
+
+    /// Service-latency histogram in µs (for the `stats` wire form).
+    pub fn service_hist(&self) -> &LogHistogram {
+        &self.service_us
+    }
+
+    pub fn snapshot(&self) -> MetricsSnapshot {
+        let batches = self.batches.load(Ordering::Relaxed);
+        let batched_items = self.batched_items.load(Ordering::Relaxed);
+        let finite_or_zero = |v: f64| if v.is_finite() { v } else { 0.0 };
+        MetricsSnapshot {
+            uptime_s: self.started.elapsed().as_secs_f64(),
+            predict_requests: self.predict_requests.load(Ordering::Relaxed),
+            predict_ok: self.predict_ok.load(Ordering::Relaxed),
+            predict_err: self.predict_err.load(Ordering::Relaxed),
+            rejected: self.rejected.load(Ordering::Relaxed),
+            malformed: self.malformed.load(Ordering::Relaxed),
+            control: self.control.load(Ordering::Relaxed),
+            connections: self.connections.load(Ordering::Relaxed),
+            reloads: self.reloads.load(Ordering::Relaxed),
+            batches,
+            batched_items,
+            max_batch: self.max_batch.load(Ordering::Relaxed),
+            mean_batch: if batches == 0 {
+                0.0
+            } else {
+                batched_items as f64 / batches as f64
+            },
+            service_p50_us: finite_or_zero(self.service_us.percentile(0.50)),
+            service_p95_us: finite_or_zero(self.service_us.percentile(0.95)),
+            service_p99_us: finite_or_zero(self.service_us.percentile(0.99)),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn empty_snapshot_is_all_zero_and_json_safe() {
+        let m = ServeMetrics::new();
+        let s = m.snapshot();
+        assert_eq!(s.predict_requests, 0);
+        assert_eq!(s.batches, 0);
+        // The empty-histogram NaN must not leak into the snapshot: these
+        // values are emitted as JSON numbers verbatim.
+        assert_eq!(s.mean_batch, 0.0);
+        assert_eq!(s.service_p50_us, 0.0);
+        assert_eq!(s.service_p99_us, 0.0);
+        assert!(s.uptime_s >= 0.0);
+    }
+
+    #[test]
+    fn batch_and_service_accounting() {
+        let m = ServeMetrics::new();
+        m.record_batch(4);
+        m.record_batch(8);
+        for us in [100.0, 200.0, 400.0] {
+            m.record_service_us(us);
+        }
+        m.note_predict();
+        m.note_predict_ok();
+        let s = m.snapshot();
+        assert_eq!(s.batches, 2);
+        assert_eq!(s.batched_items, 12);
+        assert_eq!(s.max_batch, 8);
+        assert_eq!(s.mean_batch, 6.0);
+        assert!(s.service_p50_us >= 200.0 && s.service_p50_us <= 220.0, "{}", s.service_p50_us);
+        assert!(s.service_p99_us >= 400.0);
+        assert_eq!(s.predict_requests, 1);
+        assert_eq!(s.predict_ok, 1);
+        assert_eq!(m.service_hist().count(), 3);
+        assert_eq!(m.batch_hist().count(), 2);
+    }
+}

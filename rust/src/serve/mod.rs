@@ -1,0 +1,489 @@
+//! `edgelat serve`: a persistent micro-batching prediction daemon.
+//!
+//! The offline CLI pays bundle load + plan lowering on every invocation;
+//! an edge deployment asking "how fast is this candidate architecture on
+//! that phone?" thousands of times (NAS search loops, fleet schedulers)
+//! wants those costs paid once. This subsystem keeps a
+//! [`LatencyEngine`](crate::engine::LatencyEngine) resident behind a
+//! line-oriented JSON-over-TCP protocol and coalesces concurrent
+//! requests into `predict_batch` calls so the fingerprint-keyed plan
+//! cache and the `ExecPool` amortize across clients.
+//!
+//! Layout:
+//! - [`protocol`] — the wire format: request parsing, typed error codes,
+//!   reply rendering, client-side line builders.
+//! - [`fleet`] — [`BundleFleet`]: a directory of predictor bundles as one
+//!   hot-reloadable engine (build-then-swap, in-flight work keeps its
+//!   generation).
+//! - [`batcher`] — [`MicroBatcher`]: bounded queue coalescing requests,
+//!   flush on size or deadline, per-slot error containment.
+//! - [`metrics`] — [`ServeMetrics`]: lock-free counters + streaming
+//!   latency/batch histograms for the `stats` verb.
+//! - [`loadgen`] — open-loop load generator backing `edgelat serve-bench`
+//!   and the bench pipeline's serve stage.
+//!
+//! Threading: one accept loop (this module), one connection-reader and
+//! one connection-writer thread per client, one batch flusher. A reader
+//! parses and enqueues; the writer drains an ordered channel of
+//! ready-or-pending replies, so pipelined requests on one connection are
+//! answered strictly in order even though predictions complete on the
+//! flusher thread.
+//!
+//! Shutdown (`drain`): stop accepting, reject new submits with a typed
+//! `draining` error, flush everything already queued, give open
+//! connections a grace period, then force-close stragglers. Every
+//! accepted prediction is answered before the daemon exits.
+
+pub mod batcher;
+pub mod fleet;
+pub mod loadgen;
+pub mod metrics;
+pub mod protocol;
+
+pub use batcher::{BatchConfig, JobResult, MicroBatcher, PredictJob};
+pub use fleet::BundleFleet;
+pub use loadgen::{run_load, LoadConfig, LoadReport};
+pub use metrics::{MetricsSnapshot, ServeMetrics};
+
+use crate::engine::EngineError;
+use crate::util::Json;
+use std::collections::HashMap;
+use std::fmt;
+use std::io::{BufRead, BufReader, BufWriter, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::mpsc::{channel, Receiver};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use protocol::{engine_error_code, WireError};
+
+/// Errors from the serving subsystem (daemon setup, fleet loading, load
+/// generation). Per-request failures travel as typed wire errors instead.
+#[derive(Debug, Clone)]
+pub enum ServeError {
+    /// Socket / filesystem failures, with context.
+    Io(String),
+    /// Bad daemon configuration: empty bundle dir, corrupt bundle, bad
+    /// flag combinations.
+    Config(String),
+    /// Engine construction failed.
+    Engine(EngineError),
+    /// A submit was rejected because the queue is at capacity.
+    Overloaded,
+    /// A submit was rejected because the daemon is draining.
+    Draining,
+}
+
+impl fmt::Display for ServeError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            ServeError::Io(s) => write!(f, "io error: {s}"),
+            ServeError::Config(s) => write!(f, "{s}"),
+            ServeError::Engine(e) => write!(f, "engine error: {e}"),
+            ServeError::Overloaded => write!(f, "server overloaded (queue full)"),
+            ServeError::Draining => write!(f, "server is draining"),
+        }
+    }
+}
+
+/// Daemon tuning knobs. `Default` is sized for a small edge box: batches
+/// of up to 32 with a 1 ms coalescing window keep single-request latency
+/// interactive while still amortizing bursts.
+#[derive(Debug, Clone, Copy)]
+pub struct ServeConfig {
+    /// Flush a batch at this many coalesced requests.
+    pub max_batch: usize,
+    /// Flush a batch when its oldest request has waited this long.
+    pub max_wait: Duration,
+    /// Reject (`overloaded`) submits beyond this queue depth.
+    pub queue_cap: usize,
+    /// How long `drain` waits for open connections to finish before
+    /// force-closing them.
+    pub drain_grace: Duration,
+}
+
+impl Default for ServeConfig {
+    fn default() -> ServeConfig {
+        ServeConfig {
+            max_batch: 32,
+            max_wait: Duration::from_micros(1000),
+            queue_cap: 1024,
+            drain_grace: Duration::from_secs(2),
+        }
+    }
+}
+
+/// What the daemon did over its lifetime, returned by [`Server::run`]
+/// after a clean drain.
+#[derive(Debug, Clone, Copy)]
+pub struct ServeSummary {
+    pub served_ok: u64,
+    pub served_err: u64,
+    pub malformed: u64,
+    pub batches: u64,
+    pub mean_batch: f64,
+    pub reloads: u64,
+    pub uptime_s: f64,
+}
+
+/// State shared by the accept loop, every connection and the flusher.
+struct Shared {
+    fleet: BundleFleet,
+    batcher: MicroBatcher,
+    metrics: ServeMetrics,
+    draining: AtomicBool,
+    /// Clones of live connection sockets, for forced shutdown at the end
+    /// of the drain grace period.
+    conns: Mutex<HashMap<u64, TcpStream>>,
+    next_conn_id: AtomicU64,
+}
+
+/// A bound (but not yet running) serve daemon.
+pub struct Server {
+    shared: Arc<Shared>,
+    listener: TcpListener,
+    addr: SocketAddr,
+    drain_grace: Duration,
+}
+
+impl Server {
+    /// Bind the listener (port 0 picks an ephemeral port — read it back
+    /// with [`addr`](Server::addr)) around an already-loaded fleet.
+    pub fn bind(
+        addr: SocketAddr,
+        cfg: ServeConfig,
+        fleet: BundleFleet,
+    ) -> Result<Server, ServeError> {
+        let listener = TcpListener::bind(addr)
+            .map_err(|e| ServeError::Io(format!("binding {addr}: {e}")))?;
+        let local = listener
+            .local_addr()
+            .map_err(|e| ServeError::Io(format!("local_addr: {e}")))?;
+        Ok(Server {
+            shared: Arc::new(Shared {
+                fleet,
+                batcher: MicroBatcher::new(BatchConfig {
+                    max_batch: cfg.max_batch,
+                    max_wait: cfg.max_wait,
+                    queue_cap: cfg.queue_cap,
+                }),
+                metrics: ServeMetrics::new(),
+                draining: AtomicBool::new(false),
+                conns: Mutex::new(HashMap::new()),
+                next_conn_id: AtomicU64::new(1),
+            }),
+            listener,
+            addr: local,
+            drain_grace: cfg.drain_grace,
+        })
+    }
+
+    /// The actually-bound address (resolves port 0).
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Scenario ids the daemon's live engine serves.
+    pub fn scenario_ids(&self) -> Vec<String> {
+        self.shared.fleet.scenario_ids()
+    }
+
+    /// Serve until a client sends `drain`, then flush and return the
+    /// lifetime summary. Consumes the server; run it on its own thread
+    /// when the caller needs to keep going (the integration tests and the
+    /// bench stage do exactly that).
+    pub fn run(self) -> Result<ServeSummary, ServeError> {
+        let Server { shared, listener, addr, drain_grace } = self;
+        listener
+            .set_nonblocking(true)
+            .map_err(|e| ServeError::Io(format!("nonblocking accept on {addr}: {e}")))?;
+        let flusher = {
+            let sh = Arc::clone(&shared);
+            std::thread::spawn(move || sh.batcher.run_flusher(&sh.fleet, &sh.metrics))
+        };
+        let mut handlers = Vec::new();
+        while !shared.draining.load(Ordering::Acquire) {
+            match listener.accept() {
+                Ok((sock, _peer)) => {
+                    // Accepted sockets must block: the reader parks on
+                    // read_line and the drain path unblocks it by
+                    // shutting the socket down.
+                    sock.set_nonblocking(false).ok();
+                    sock.set_nodelay(true).ok();
+                    let id = shared.next_conn_id.fetch_add(1, Ordering::Relaxed);
+                    if let Ok(clone) = sock.try_clone() {
+                        shared.conns.lock().unwrap().insert(id, clone);
+                    }
+                    shared.metrics.note_connection();
+                    let sh = Arc::clone(&shared);
+                    handlers.push(std::thread::spawn(move || handle_conn(&sh, id, sock)));
+                }
+                // WouldBlock is the idle case; transient accept errors
+                // (e.g. ECONNABORTED) must not kill the daemon either.
+                Err(_) => std::thread::sleep(Duration::from_millis(2)),
+            }
+        }
+        drop(listener); // stop accepting: connect() now fails fast
+        let deadline = Instant::now() + drain_grace;
+        while Instant::now() < deadline {
+            if shared.conns.lock().unwrap().is_empty() {
+                break;
+            }
+            std::thread::sleep(Duration::from_millis(5));
+        }
+        // Force-close stragglers; their readers wake with EOF/error and
+        // the handlers unwind through the normal path.
+        for (_, s) in shared.conns.lock().unwrap().drain() {
+            let _ = s.shutdown(std::net::Shutdown::Both);
+        }
+        for h in handlers {
+            let _ = h.join();
+        }
+        // Idempotent if the drain verb already stopped the batcher; also
+        // covers the (unreachable today) path where the loop exits
+        // without one. The flusher answers everything queued, then exits.
+        shared.batcher.begin_drain();
+        let _ = flusher.join();
+        let m = shared.metrics.snapshot();
+        Ok(ServeSummary {
+            served_ok: m.predict_ok,
+            served_err: m.predict_err,
+            malformed: m.malformed,
+            batches: m.batches,
+            mean_batch: m.mean_batch,
+            reloads: m.reloads,
+            uptime_s: m.uptime_s,
+        })
+    }
+}
+
+/// A reply slot in a connection's ordered outgoing queue: either already
+/// rendered, or waiting on the flusher.
+enum Outgoing {
+    Ready(String),
+    Pending {
+        rx: Receiver<JobResult>,
+        id: Option<Json>,
+        scenario_id: String,
+        detail: bool,
+    },
+}
+
+/// Per-connection reader: parse each line, resolve it to an [`Outgoing`],
+/// and feed the writer thread. Ordering is the channel's FIFO — replies
+/// leave in request order no matter when predictions complete.
+fn handle_conn(sh: &Arc<Shared>, conn_id: u64, sock: TcpStream) {
+    let (out_tx, out_rx) = channel::<Outgoing>();
+    let writer = match sock.try_clone() {
+        Ok(w) => std::thread::spawn(move || write_loop(w, out_rx)),
+        Err(_) => {
+            sh.conns.lock().unwrap().remove(&conn_id);
+            return;
+        }
+    };
+    let mut rd = BufReader::new(sock);
+    let mut line = String::new();
+    loop {
+        line.clear();
+        match rd.read_line(&mut line) {
+            Ok(0) | Err(_) => break, // client hung up or drain closed us
+            Ok(_) => {}
+        }
+        let trimmed = line.trim();
+        if trimmed.is_empty() {
+            continue; // blank keep-alive lines are not an error
+        }
+        if out_tx.send(handle_line(sh, trimmed)).is_err() {
+            break; // writer died (socket gone): no point parsing more
+        }
+    }
+    drop(out_tx); // writer drains what's queued, then exits
+    let _ = writer.join();
+    sh.conns.lock().unwrap().remove(&conn_id);
+}
+
+/// Dispatch one request line. Never panics, never drops the connection:
+/// every outcome — including unparseable garbage — is a reply line.
+fn handle_line(sh: &Arc<Shared>, line: &str) -> Outgoing {
+    let req = match protocol::parse_request(line) {
+        Ok(r) => r,
+        Err(e) => {
+            sh.metrics.note_malformed();
+            return Outgoing::Ready(protocol::render_error(&e));
+        }
+    };
+    match req {
+        protocol::Request::Stats => {
+            sh.metrics.note_control();
+            Outgoing::Ready(protocol::render_stats(stats_json(sh)))
+        }
+        protocol::Request::Reload => {
+            sh.metrics.note_control();
+            match sh.fleet.reload() {
+                Ok((generation, bundles, ids)) => {
+                    sh.metrics.note_reload();
+                    Outgoing::Ready(protocol::render_reload(generation, bundles, &ids))
+                }
+                Err(e) => Outgoing::Ready(protocol::render_error(&WireError::new(
+                    "reload_failed",
+                    e.to_string(),
+                ))),
+            }
+        }
+        protocol::Request::Drain => {
+            sh.metrics.note_control();
+            sh.draining.store(true, Ordering::Release);
+            sh.batcher.begin_drain();
+            Outgoing::Ready(protocol::render_drain(sh.metrics.snapshot().predict_ok))
+        }
+        protocol::Request::Predict(w) => {
+            sh.metrics.note_predict();
+            let protocol::PredictWire { id, scenario_id, method, graph, detail } = *w;
+            match sh.batcher.submit(PredictJob {
+                graph,
+                scenario_id: scenario_id.clone(),
+                method,
+            }) {
+                Ok(rx) => Outgoing::Pending { rx, id, scenario_id, detail },
+                Err(e) => {
+                    sh.metrics.note_rejected();
+                    let code = match e {
+                        ServeError::Overloaded => "overloaded",
+                        ServeError::Draining => "draining",
+                        _ => "internal",
+                    };
+                    Outgoing::Ready(protocol::render_error(&WireError::with_id(
+                        code,
+                        e.to_string(),
+                        id,
+                    )))
+                }
+            }
+        }
+    }
+}
+
+/// Per-connection writer: drain the ordered reply queue, blocking on
+/// pending slots so replies keep request order.
+fn write_loop(sock: TcpStream, rx: Receiver<Outgoing>) {
+    let mut w = BufWriter::new(sock);
+    for item in rx {
+        let line = match item {
+            Outgoing::Ready(s) => s,
+            Outgoing::Pending { rx, id, scenario_id, detail } => match rx.recv() {
+                Ok(Ok(resp)) => protocol::render_predict(id.as_ref(), &scenario_id, detail, &resp),
+                Ok(Err(e)) => protocol::render_error(&WireError::with_id(
+                    engine_error_code(&e),
+                    e.to_string(),
+                    id,
+                )),
+                // The flusher dropped the sender without answering — only
+                // possible if the daemon is being torn down around us.
+                Err(_) => protocol::render_error(&WireError::with_id(
+                    "internal",
+                    "prediction dropped (server shutting down)",
+                    id,
+                )),
+            },
+        };
+        if w.write_all(line.as_bytes()).is_err()
+            || w.write_all(b"\n").is_err()
+            || w.flush().is_err()
+        {
+            break;
+        }
+    }
+}
+
+/// The `stats` document: counters, coalescing histogram, plan-cache
+/// stats, service percentiles. Every number is finite (the snapshot and
+/// `CacheStats::hit_rate` both guard the empty cases) — NaN would emit
+/// invalid JSON.
+fn stats_json(sh: &Shared) -> Json {
+    let m = sh.metrics.snapshot();
+    let cache = sh.fleet.plan_cache_stats();
+    let batch_hist: Vec<Json> = sh
+        .metrics
+        .batch_hist()
+        .nonzero_buckets()
+        .into_iter()
+        .map(|(edge, n)| Json::arr(vec![Json::num(edge), Json::num(n as f64)]))
+        .collect();
+    Json::obj(vec![
+        ("uptime_s", Json::num(m.uptime_s)),
+        ("generation", Json::num(sh.fleet.generation() as f64)),
+        (
+            "scenarios",
+            Json::Arr(sh.fleet.scenario_ids().into_iter().map(Json::str).collect()),
+        ),
+        ("queue_len", Json::num(sh.batcher.queue_len() as f64)),
+        ("draining", Json::Bool(sh.draining.load(Ordering::Acquire))),
+        ("connections", Json::num(m.connections as f64)),
+        ("reloads", Json::num(m.reloads as f64)),
+        (
+            "requests",
+            Json::obj(vec![
+                ("predict", Json::num(m.predict_requests as f64)),
+                ("ok", Json::num(m.predict_ok as f64)),
+                ("errors", Json::num(m.predict_err as f64)),
+                ("rejected", Json::num(m.rejected as f64)),
+                ("malformed", Json::num(m.malformed as f64)),
+                ("control", Json::num(m.control as f64)),
+            ]),
+        ),
+        (
+            "batches",
+            Json::obj(vec![
+                ("count", Json::num(m.batches as f64)),
+                ("items", Json::num(m.batched_items as f64)),
+                ("mean", Json::num(m.mean_batch)),
+                ("max", Json::num(m.max_batch as f64)),
+                ("hist", Json::Arr(batch_hist)),
+            ]),
+        ),
+        (
+            "service_us",
+            Json::obj(vec![
+                ("count", Json::num(sh.metrics.service_hist().count() as f64)),
+                ("p50", Json::num(m.service_p50_us)),
+                ("p95", Json::num(m.service_p95_us)),
+                ("p99", Json::num(m.service_p99_us)),
+            ]),
+        ),
+        (
+            "plan_cache",
+            Json::obj(vec![
+                ("hits", Json::num(cache.hits as f64)),
+                ("misses", Json::num(cache.misses as f64)),
+                ("evictions", Json::num(cache.evictions as f64)),
+                ("hit_rate", Json::num(cache.hit_rate())),
+            ]),
+        ),
+    ])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn serve_error_display_is_specific() {
+        assert_eq!(ServeError::Overloaded.to_string(), "server overloaded (queue full)");
+        assert_eq!(ServeError::Draining.to_string(), "server is draining");
+        assert!(ServeError::Io("reading bundle dir /x: gone".into()).to_string().contains("/x"));
+        assert_eq!(
+            ServeError::Config("no *.json predictor bundles in /y".into()).to_string(),
+            "no *.json predictor bundles in /y"
+        );
+    }
+
+    #[test]
+    fn serve_config_default_is_sane() {
+        let d = ServeConfig::default();
+        assert_eq!(d.max_batch, 32);
+        assert_eq!(d.max_wait, Duration::from_micros(1000));
+        assert!(d.queue_cap >= d.max_batch);
+        assert!(d.drain_grace > Duration::from_millis(100));
+    }
+}

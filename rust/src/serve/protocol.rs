@@ -1,0 +1,382 @@
+//! The serve wire protocol: one JSON object per line, each way.
+//!
+//! Requests (`op` selects the verb):
+//! - `{"op":"predict","scenario":ID,"model":<edgelat-model-v1 object>,
+//!    "id":<any JSON, echoed>,"method":"lasso|rf|gbdt"?,"detail":bool?}`
+//! - `{"op":"stats"}` — uptime, counters, coalescing histogram, cache
+//!   stats, service-latency percentiles.
+//! - `{"op":"reload"}` — re-read the daemon's configured bundle
+//!   directory and swap the engine (the path is server-side config, never
+//!   client input).
+//! - `{"op":"drain"}` — stop accepting connections, flush queues, exit.
+//!
+//! Replies are `{"ok":true,"op":...,...}` or `{"ok":false,"error":
+//! {"code":...,"message":...},"id":...?}`. Every malformed line gets a
+//! typed error reply on the same connection — never a panic or a dropped
+//! socket. Replies on one connection arrive strictly in request order.
+//!
+//! The model travels inline as an `edgelat-model-v1` document
+//! ([`crate::graph::modelfile`]). `Json` round-trips f64 bit-exactly
+//! (shortest-repr emit + exact parse, asserted in `util::json` tests) and
+//! `Graph::fingerprint` is rename-stable, so a prediction served over
+//! this protocol is bit-identical to calling `predict_batch` in-process
+//! on the same bundles — the integration suite asserts exactly that.
+
+use crate::engine::{EngineError, PredictResponse};
+use crate::graph::{modelfile, Graph};
+use crate::predict::Method;
+use crate::util::Json;
+
+/// Protocol identifier echoed by the `stats` endpoint.
+pub const PROTOCOL: &str = "edgelat.serve/1";
+
+/// A parsed client request.
+#[derive(Debug)]
+pub enum Request {
+    /// Boxed: a predict carries a whole parsed `Graph`; the other verbs
+    /// are unit-sized and shouldn't pay its footprint.
+    Predict(Box<PredictWire>),
+    Stats,
+    Reload,
+    Drain,
+}
+
+/// The payload of a `predict` request.
+#[derive(Debug)]
+pub struct PredictWire {
+    /// Client correlation id, echoed verbatim in the reply.
+    pub id: Option<Json>,
+    pub scenario_id: String,
+    pub method: Option<Method>,
+    pub graph: Graph,
+    /// Include the per-unit latency decomposition in the reply.
+    pub detail: bool,
+}
+
+/// A typed protocol-level error, rendered as an `ok:false` reply.
+#[derive(Debug, Clone)]
+pub struct WireError {
+    /// Stable machine-readable code: `bad_json`, `bad_request`,
+    /// `bad_model`, `no_predictor`, `overloaded`, `draining`,
+    /// `reload_failed`, `io`, `bad_bundle`, `unsupported`, `internal`.
+    pub code: &'static str,
+    pub message: String,
+    /// The request's `id`, when it could be extracted, echoed back so
+    /// pipelined clients can correlate the failure.
+    pub id: Option<Json>,
+}
+
+impl WireError {
+    pub fn new(code: &'static str, message: impl Into<String>) -> WireError {
+        WireError { code, message: message.into(), id: None }
+    }
+
+    pub fn with_id(code: &'static str, message: impl Into<String>, id: Option<Json>) -> WireError {
+        WireError { code, message: message.into(), id }
+    }
+}
+
+/// The stable error code for an engine-side per-request failure.
+pub fn engine_error_code(e: &EngineError) -> &'static str {
+    match e {
+        EngineError::UnknownScenario(_) | EngineError::NoPredictor { .. } => "no_predictor",
+        EngineError::Io(_) => "io",
+        EngineError::Parse(_) => "bad_bundle",
+        EngineError::Unsupported(_) => "unsupported",
+    }
+}
+
+/// Parse one request line. Every failure is a typed [`WireError`] carrying
+/// the request id when one was present.
+pub fn parse_request(line: &str) -> Result<Request, WireError> {
+    let j = Json::parse(line.trim()).map_err(|e| {
+        WireError::new("bad_json", format!("request is not one JSON object per line: {e}"))
+    })?;
+    let id = j.get("id").cloned();
+    let Some(op) = j.get("op").and_then(Json::as_str) else {
+        return Err(WireError::with_id(
+            "bad_request",
+            "missing 'op' (predict|stats|reload|drain)",
+            id,
+        ));
+    };
+    match op {
+        "stats" => Ok(Request::Stats),
+        "reload" => Ok(Request::Reload),
+        "drain" => Ok(Request::Drain),
+        "predict" => {
+            let Some(scenario_id) = j.get("scenario").and_then(Json::as_str) else {
+                return Err(WireError::with_id(
+                    "bad_request",
+                    "predict needs 'scenario' (a scenario id, e.g. Snapdragon855/gpu)",
+                    id,
+                ));
+            };
+            let scenario_id = scenario_id.to_string();
+            let method = match j.get("method") {
+                None => None,
+                Some(v) => match v.as_str().and_then(Method::parse) {
+                    Some(m) => Some(m),
+                    None => {
+                        return Err(WireError::with_id(
+                            "bad_request",
+                            format!("unknown 'method' {} (lasso|rf|gbdt)", v.to_string()),
+                            id,
+                        ))
+                    }
+                },
+            };
+            let Some(model) = j.get("model") else {
+                return Err(WireError::with_id(
+                    "bad_request",
+                    "predict needs 'model' (an inline edgelat-model-v1 document)",
+                    id,
+                ));
+            };
+            let graph = match modelfile::from_model_file(&model.to_string()) {
+                Ok(g) => g,
+                Err(e) => {
+                    return Err(WireError::with_id("bad_model", format!("bad 'model': {e}"), id))
+                }
+            };
+            let detail = matches!(j.get("detail"), Some(Json::Bool(true)));
+            Ok(Request::Predict(Box::new(PredictWire { id, scenario_id, method, graph, detail })))
+        }
+        other => Err(WireError::with_id(
+            "bad_request",
+            format!("unknown op '{other}' (predict|stats|reload|drain)"),
+            id,
+        )),
+    }
+}
+
+/// Render an `ok:false` reply line.
+pub fn render_error(e: &WireError) -> String {
+    let mut pairs = vec![
+        ("ok", Json::Bool(false)),
+        (
+            "error",
+            Json::obj(vec![
+                ("code", Json::str(e.code)),
+                ("message", Json::str(e.message.clone())),
+            ]),
+        ),
+    ];
+    if let Some(id) = &e.id {
+        pairs.push(("id", id.clone()));
+    }
+    Json::obj(pairs).to_string()
+}
+
+/// Render a successful predict reply line.
+pub fn render_predict(
+    id: Option<&Json>,
+    scenario_id: &str,
+    detail: bool,
+    resp: &PredictResponse,
+) -> String {
+    let mut pairs = vec![
+        ("ok", Json::Bool(true)),
+        ("op", Json::str("predict")),
+        ("scenario", Json::str(scenario_id)),
+        ("e2e_ms", Json::num(resp.e2e_ms)),
+        ("t_overhead_ms", Json::num(resp.t_overhead_ms)),
+        ("units", Json::num(resp.per_unit.len() as f64)),
+        ("fallback_units", Json::num(resp.fallback_units as f64)),
+    ];
+    if let Some(id) = id {
+        pairs.push(("id", id.clone()));
+    }
+    if detail {
+        pairs.push((
+            "per_unit",
+            Json::Arr(
+                resp.per_unit
+                    .iter()
+                    .map(|(bucket, ms)| Json::arr(vec![Json::str(*bucket), Json::num(*ms)]))
+                    .collect(),
+            ),
+        ));
+    }
+    Json::obj(pairs).to_string()
+}
+
+/// Render a reload acknowledgement.
+pub fn render_reload(generation: u64, bundles: usize, scenario_ids: &[String]) -> String {
+    Json::obj(vec![
+        ("ok", Json::Bool(true)),
+        ("op", Json::str("reload")),
+        ("generation", Json::num(generation as f64)),
+        ("bundles", Json::num(bundles as f64)),
+        (
+            "scenarios",
+            Json::Arr(scenario_ids.iter().map(|s| Json::str(s.clone())).collect()),
+        ),
+    ])
+    .to_string()
+}
+
+/// Render a drain acknowledgement (`served` = predictions answered so far).
+pub fn render_drain(served: u64) -> String {
+    Json::obj(vec![
+        ("ok", Json::Bool(true)),
+        ("op", Json::str("drain")),
+        ("served", Json::num(served as f64)),
+    ])
+    .to_string()
+}
+
+/// Render the `stats` reply around a stats document.
+pub fn render_stats(stats: Json) -> String {
+    Json::obj(vec![
+        ("ok", Json::Bool(true)),
+        ("op", Json::str("stats")),
+        ("protocol", Json::str(PROTOCOL)),
+        ("stats", stats),
+    ])
+    .to_string()
+}
+
+/// Build a `predict` request line for a graph (client side: the load
+/// generator, the example client, and the tests all emit through here).
+pub fn predict_line(
+    scenario_id: &str,
+    graph: &Graph,
+    id: Option<u64>,
+    method: Option<Method>,
+    detail: bool,
+) -> String {
+    let model =
+        Json::parse(&modelfile::to_model_file(graph)).expect("model files emit valid JSON");
+    let mut pairs = vec![
+        ("op", Json::str("predict")),
+        ("scenario", Json::str(scenario_id)),
+        ("model", model),
+    ];
+    if let Some(i) = id {
+        pairs.push(("id", Json::num(i as f64)));
+    }
+    if let Some(m) = method {
+        pairs.push(("method", Json::str(m.name())));
+    }
+    if detail {
+        pairs.push(("detail", Json::Bool(true)));
+    }
+    Json::obj(pairs).to_string()
+}
+
+pub fn stats_line() -> String {
+    Json::obj(vec![("op", Json::str("stats"))]).to_string()
+}
+
+pub fn reload_line() -> String {
+    Json::obj(vec![("op", Json::str("reload"))]).to_string()
+}
+
+pub fn drain_line() -> String {
+    Json::obj(vec![("op", Json::str("drain"))]).to_string()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn code_of(line: &str) -> (&'static str, Option<Json>) {
+        match parse_request(line) {
+            Err(e) => (e.code, e.id),
+            Ok(r) => panic!("expected a wire error, parsed {r:?}"),
+        }
+    }
+
+    #[test]
+    fn predict_line_round_trips_through_parse_request() {
+        let g = crate::nas::sample_dataset(11, 1).remove(0).graph;
+        let line = predict_line("Snapdragon855/gpu", &g, Some(42), Some(Method::Gbdt), true);
+        let Request::Predict(w) = parse_request(&line).expect("round-trips") else {
+            panic!("not a predict");
+        };
+        assert_eq!(w.scenario_id, "Snapdragon855/gpu");
+        assert_eq!(w.method, Some(Method::Gbdt));
+        assert!(w.detail);
+        assert_eq!(w.id, Some(Json::num(42.0)));
+        // The graph survives the inline model-file round trip exactly.
+        assert_eq!(w.graph, g);
+        assert_eq!(w.graph.fingerprint(), g.fingerprint());
+    }
+
+    #[test]
+    fn control_verbs_parse() {
+        assert!(matches!(parse_request(&stats_line()), Ok(Request::Stats)));
+        assert!(matches!(parse_request(&reload_line()), Ok(Request::Reload)));
+        assert!(matches!(parse_request(&drain_line()), Ok(Request::Drain)));
+    }
+
+    #[test]
+    fn malformed_lines_get_typed_codes_with_id_echo() {
+        assert_eq!(code_of("not json at all").0, "bad_json");
+        assert_eq!(code_of("{}").0, "bad_request");
+        assert_eq!(code_of(r#"{"op":"fly"}"#).0, "bad_request");
+        // The id is recovered even when the request itself is bad, so a
+        // pipelined client can correlate the failure.
+        let (code, id) = code_of(r#"{"op":"predict","id":7}"#);
+        assert_eq!(code, "bad_request");
+        assert_eq!(id, Some(Json::num(7.0)));
+        let (code, _) = code_of(r#"{"op":"predict","id":7,"scenario":"X"}"#);
+        assert_eq!(code, "bad_request"); // missing model
+        let (code, _) =
+            code_of(r#"{"op":"predict","id":7,"scenario":"X","model":{"nope":1}}"#);
+        assert_eq!(code, "bad_model");
+        let (code, _) = code_of(
+            r#"{"op":"predict","id":7,"scenario":"X","model":{},"method":"svm"}"#,
+        );
+        assert_eq!(code, "bad_request"); // unknown method, checked before the model
+    }
+
+    #[test]
+    fn error_rendering_echoes_the_id_and_is_valid_json() {
+        let e = WireError::with_id("bad_model", "nope", Some(Json::str("req-9")));
+        let line = render_error(&e);
+        let j = Json::parse(&line).expect("error replies are valid JSON");
+        assert_eq!(j.get("ok"), Some(&Json::Bool(false)));
+        assert_eq!(j.req("error").unwrap().req_str("code").unwrap(), "bad_model");
+        assert_eq!(j.req_str("id").unwrap(), "req-9");
+        // Without an id the key is absent, not null.
+        let bare = render_error(&WireError::new("bad_json", "x"));
+        assert_eq!(Json::parse(&bare).unwrap().get("id"), None);
+    }
+
+    #[test]
+    fn predict_rendering_carries_the_decomposition_only_on_detail() {
+        let resp = PredictResponse {
+            e2e_ms: 12.5,
+            per_unit: vec![("Conv2D", 10.0), ("Softmax", 0.5)],
+            t_overhead_ms: 2.0,
+            fallback_units: 1,
+        };
+        let id = Json::num(3.0);
+        let terse = Json::parse(&render_predict(Some(&id), "S/gpu", false, &resp)).unwrap();
+        assert_eq!(terse.req_f64("e2e_ms").unwrap(), 12.5);
+        assert_eq!(terse.req_usize("units").unwrap(), 2);
+        assert_eq!(terse.req_usize("fallback_units").unwrap(), 1);
+        assert_eq!(terse.get("per_unit"), None);
+        let full = Json::parse(&render_predict(Some(&id), "S/gpu", true, &resp)).unwrap();
+        let units = full.req("per_unit").unwrap().as_arr().unwrap();
+        assert_eq!(units.len(), 2);
+        assert_eq!(units[0].as_arr().unwrap()[0].as_str(), Some("Conv2D"));
+    }
+
+    #[test]
+    fn engine_errors_map_to_stable_codes() {
+        assert_eq!(
+            engine_error_code(&EngineError::NoPredictor {
+                scenario_id: "X".into(),
+                method: None
+            }),
+            "no_predictor"
+        );
+        assert_eq!(engine_error_code(&EngineError::UnknownScenario("X".into())), "no_predictor");
+        assert_eq!(engine_error_code(&EngineError::Io("x".into())), "io");
+        assert_eq!(engine_error_code(&EngineError::Parse("x".into())), "bad_bundle");
+        assert_eq!(engine_error_code(&EngineError::Unsupported("x".into())), "unsupported");
+    }
+}

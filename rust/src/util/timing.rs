@@ -1,8 +1,130 @@
-//! Shared wall-clock micro-benchmark harness (no criterion in the offline
-//! crate set): warmup + N timed iterations, mean/min/p50 per run. Used by
-//! `cargo bench --bench pipeline` and the `edgelat bench` subcommand.
+//! Shared wall-clock micro-benchmark harness and streaming histogram (no
+//! criterion in the offline crate set).
+//!
+//! [`time_named`] runs warmup + N timed iterations and summarizes
+//! mean/min/p50 per run for `cargo bench --bench pipeline` and the
+//! `edgelat bench` subcommand. [`LogHistogram`] is the shared streaming
+//! percentile helper underneath it: fixed log-spaced buckets, `AtomicU64`
+//! counts, O(1) `record` with **no per-sample allocation** — the serve
+//! daemon's metrics endpoint and the open-loop load generator stream
+//! service latencies into it from many threads at once.
 
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::time::Instant;
+
+/// Smallest value [`LogHistogram`] resolves. Everything at or below it
+/// (including zero, negatives, and NaN) lands in the first bucket.
+pub const HIST_FLOOR: f64 = 1e-9;
+
+/// Log-spaced sub-buckets per octave (factor-of-two span). Eight per
+/// octave bounds the quantization error at 2^(1/8) - 1 ≈ 9% relative.
+const SUB_BUCKETS: usize = 8;
+
+/// Octaves covered above [`HIST_FLOOR`]: 1e-9 · 2^44 ≈ 1.8e4, wide enough
+/// for nanosecond timings and multi-hour aggregates on one scale. Values
+/// past the top edge clamp into the last bucket (still finite).
+const OCTAVES: usize = 44;
+
+const N_BUCKETS: usize = SUB_BUCKETS * OCTAVES;
+
+/// A streaming histogram over fixed log-spaced buckets.
+///
+/// `record` is lock-free (one relaxed `fetch_add` per sample) and takes
+/// `&self`, so one histogram can be shared across worker threads without
+/// wrapping it in a mutex. Percentile reads are point-in-time snapshots:
+/// racing a concurrent `record` can at worst miss that sample, never
+/// return a value outside the recorded range.
+#[derive(Debug)]
+pub struct LogHistogram {
+    counts: Box<[AtomicU64]>,
+    total: AtomicU64,
+}
+
+impl Default for LogHistogram {
+    fn default() -> LogHistogram {
+        LogHistogram::new()
+    }
+}
+
+impl LogHistogram {
+    pub fn new() -> LogHistogram {
+        LogHistogram {
+            counts: (0..N_BUCKETS).map(|_| AtomicU64::new(0)).collect(),
+            total: AtomicU64::new(0),
+        }
+    }
+
+    /// Number of buckets (fixed at construction).
+    pub fn bucket_count() -> usize {
+        N_BUCKETS
+    }
+
+    /// Exclusive upper edge of bucket `i`: `HIST_FLOOR * 2^((i+1)/8)`.
+    /// Bucket `i` covers `[upper_edge(i-1), upper_edge(i))`, so the edge
+    /// is an upper bound on every value counted in the bucket.
+    pub fn upper_edge(i: usize) -> f64 {
+        HIST_FLOOR * 2f64.powf((i as f64 + 1.0) / SUB_BUCKETS as f64)
+    }
+
+    fn index(v: f64) -> usize {
+        if v.is_nan() || v <= HIST_FLOOR {
+            return 0;
+        }
+        let i = ((v / HIST_FLOOR).log2() * SUB_BUCKETS as f64).floor() as isize;
+        i.clamp(0, N_BUCKETS as isize - 1) as usize
+    }
+
+    /// Count one sample. O(1), allocation-free, callable from any thread.
+    pub fn record(&self, v: f64) {
+        self.counts[Self::index(v)].fetch_add(1, Ordering::Relaxed);
+        self.total.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Samples recorded so far.
+    pub fn count(&self) -> u64 {
+        self.total.load(Ordering::Relaxed)
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.count() == 0
+    }
+
+    /// The `q`-quantile (`q` clamped to `[0, 1]`), reported as the upper
+    /// edge of the bucket holding the target rank — a conservative
+    /// overestimate within 9% of the true quantile, and never below any
+    /// recorded sample of lower rank (so `min ≤ p50 ≤ p99` always holds).
+    /// NaN when the histogram is empty; callers emitting JSON must guard
+    /// that case.
+    pub fn percentile(&self, q: f64) -> f64 {
+        let total = self.total.load(Ordering::Relaxed);
+        if total == 0 {
+            return f64::NAN;
+        }
+        let target = ((q.clamp(0.0, 1.0) * total as f64).ceil() as u64).clamp(1, total);
+        let mut cum = 0u64;
+        for (i, c) in self.counts.iter().enumerate() {
+            cum += c.load(Ordering::Relaxed);
+            if cum >= target {
+                return Self::upper_edge(i);
+            }
+        }
+        // Counts recorded after `total` was read; the last edge bounds them.
+        Self::upper_edge(N_BUCKETS - 1)
+    }
+
+    /// The populated buckets as `(upper_edge, count)` pairs in ascending
+    /// order — the compact wire form the serve `stats` endpoint emits.
+    pub fn nonzero_buckets(&self) -> Vec<(f64, u64)> {
+        self.counts
+            .iter()
+            .enumerate()
+            .filter_map(|(i, c)| {
+                let n = c.load(Ordering::Relaxed);
+                (n > 0).then(|| (Self::upper_edge(i), n))
+            })
+            .collect()
+    }
+}
 
 /// Timing summary of one benchmarked operation.
 #[derive(Debug, Clone)]
@@ -39,25 +161,31 @@ pub fn fmt_secs(s: f64) -> String {
     }
 }
 
-/// Time `f`: ~iters/10 warmup calls, then `iters` timed calls.
+/// Time `f`: ~iters/10 warmup calls, then `iters` timed calls. The p50 is
+/// streamed through a [`LogHistogram`] (bucket upper edge, ≤9% high)
+/// rather than sorting a per-sample vector.
 pub fn time_named<F: FnMut()>(name: &str, iters: usize, mut f: F) -> Sample {
     let iters = iters.max(1);
     for _ in 0..iters.div_ceil(10).max(1) {
         f();
     }
-    let mut samples = Vec::with_capacity(iters);
+    let hist = LogHistogram::new();
+    let mut sum = 0.0f64;
+    let mut min_s = f64::INFINITY;
     for _ in 0..iters {
         let t0 = Instant::now();
         f();
-        samples.push(t0.elapsed().as_secs_f64());
+        let s = t0.elapsed().as_secs_f64();
+        hist.record(s);
+        sum += s;
+        min_s = min_s.min(s);
     }
-    samples.sort_by(|a, b| a.partial_cmp(b).expect("durations are finite"));
     Sample {
         name: name.to_string(),
         iters,
-        mean_s: samples.iter().sum::<f64>() / samples.len() as f64,
-        min_s: samples[0],
-        p50_s: samples[samples.len() / 2],
+        mean_s: sum / iters as f64,
+        min_s,
+        p50_s: hist.percentile(0.5),
     }
 }
 
@@ -81,5 +209,90 @@ mod tests {
         assert!(fmt_secs(2.5).contains("s"));
         assert!(fmt_secs(2.5e-3).contains("ms"));
         assert!(fmt_secs(2.5e-6).contains("µs"));
+    }
+
+    #[test]
+    fn bucket_boundaries_are_half_open_at_the_upper_edge() {
+        // A value just under bucket i's upper edge counts in bucket i; a
+        // value just over it counts in bucket i+1. (Exact edges are not
+        // probed: 2^(k/8) is irrational for k not a multiple of 8, so the
+        // float log cannot be asserted either way at the edge itself.)
+        for i in [0usize, 1, 7, 8, 100, 239, LogHistogram::bucket_count() - 2] {
+            let edge = LogHistogram::upper_edge(i);
+            let h = LogHistogram::new();
+            h.record(edge * 0.995);
+            assert_eq!(
+                h.nonzero_buckets(),
+                vec![(edge, 1)],
+                "bucket {i}: value below the edge must count under it"
+            );
+            let h = LogHistogram::new();
+            h.record(edge * 1.005);
+            assert_eq!(
+                h.nonzero_buckets(),
+                vec![(LogHistogram::upper_edge(i + 1), 1)],
+                "bucket {i}: value above the edge must count in the next bucket"
+            );
+        }
+    }
+
+    #[test]
+    fn floor_and_overflow_values_clamp_into_the_terminal_buckets() {
+        let h = LogHistogram::new();
+        h.record(0.0);
+        h.record(-3.0);
+        h.record(f64::NAN);
+        h.record(HIST_FLOOR);
+        assert_eq!(h.nonzero_buckets(), vec![(LogHistogram::upper_edge(0), 4)]);
+        let h = LogHistogram::new();
+        h.record(1e30);
+        h.record(f64::INFINITY);
+        let top = LogHistogram::upper_edge(LogHistogram::bucket_count() - 1);
+        assert_eq!(h.nonzero_buckets(), vec![(top, 2)]);
+        assert!(h.percentile(0.99).is_finite());
+    }
+
+    #[test]
+    fn percentiles_are_conservative_and_monotonic() {
+        let h = LogHistogram::new();
+        for i in 1..=1000 {
+            h.record(i as f64 * 1e-6); // 1µs ..= 1000µs, uniform
+        }
+        assert_eq!(h.count(), 1000);
+        let (p50, p95, p99) = (h.percentile(0.5), h.percentile(0.95), h.percentile(0.99));
+        // Each quantile is an upper bound on the true value, within the
+        // 9% bucket-width guarantee.
+        assert!((500e-6..=500e-6 * 1.1).contains(&p50), "p50={p50}");
+        assert!((950e-6..=950e-6 * 1.1).contains(&p95), "p95={p95}");
+        assert!((990e-6..=990e-6 * 1.1).contains(&p99), "p99={p99}");
+        assert!(p50 <= p95 && p95 <= p99);
+        // Extremes: q=0 covers the first sample, q=1 the last.
+        assert!(h.percentile(0.0) >= 1e-6);
+        assert!(h.percentile(1.0) >= 1000e-6);
+    }
+
+    #[test]
+    fn empty_histogram_reports_nan_not_a_bucket_edge() {
+        let h = LogHistogram::new();
+        assert!(h.is_empty());
+        assert!(h.percentile(0.5).is_nan());
+        assert!(h.nonzero_buckets().is_empty());
+    }
+
+    #[test]
+    fn concurrent_records_are_all_counted() {
+        let h = LogHistogram::new();
+        std::thread::scope(|s| {
+            for t in 0..4 {
+                let h = &h;
+                s.spawn(move || {
+                    for i in 0..1000 {
+                        h.record((t * 1000 + i) as f64 * 1e-7);
+                    }
+                });
+            }
+        });
+        assert_eq!(h.count(), 4000);
+        assert_eq!(h.nonzero_buckets().iter().map(|(_, c)| c).sum::<u64>(), 4000);
     }
 }

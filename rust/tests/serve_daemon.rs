@@ -1,0 +1,265 @@
+//! Integration: the `edgelat serve` daemon end to end over real TCP.
+//!
+//! Boots the daemon on an ephemeral port around a two-scenario bundle
+//! fleet and asserts the acceptance contract of the serving subsystem:
+//! 64 concurrent pipelined requests across both scenarios answered
+//! bit-identically to calling `predict_batch` in-process on the same
+//! bundles; malformed lines get typed error replies on a connection that
+//! keeps working; a hot reload mid-stream never drops or corrupts an
+//! in-flight response; `stats` reports real counters; and `drain` answers
+//! everything accepted and exits cleanly with a matching summary.
+
+use edgelat::engine::{EngineBuilder, LatencyEngine, PredictRequest, PredictorBundle};
+use edgelat::framework::{DeductionMode, ScenarioPredictor};
+use edgelat::graph::Graph;
+use edgelat::predict::Method;
+use edgelat::profiler::profile_set;
+use edgelat::scenario::Scenario;
+use edgelat::serve::{protocol, BundleFleet, ServeConfig, Server};
+use edgelat::util::Json;
+use std::io::{BufRead, BufReader, Write};
+use std::net::{SocketAddr, TcpStream};
+use std::path::{Path, PathBuf};
+use std::time::Duration;
+
+const CPU_ID: &str = "Snapdragon855/cpu/1L/fp32";
+const GPU_ID: &str = "Snapdragon855/gpu";
+
+/// Train the two tiny bundles once and save them as a fleet directory.
+fn make_bundle_dir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("edgelat_serve_it_{tag}_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).expect("mkdir fleet dir");
+    let train: Vec<Graph> =
+        edgelat::nas::sample_dataset(42, 8).into_iter().map(|a| a.graph).collect();
+    let sc_cpu = edgelat::scenario::one_large_core("Snapdragon855").unwrap();
+    let cpu = ScenarioPredictor::train_from(
+        &sc_cpu,
+        &profile_set(&sc_cpu, &train, 42, 2),
+        Method::Gbdt,
+        DeductionMode::Full,
+        42,
+        None,
+    );
+    PredictorBundle::from_predictor(&cpu).unwrap().save(dir.join("cpu.json")).unwrap();
+    let soc = edgelat::device::soc_by_name("Snapdragon855").unwrap();
+    let sc_gpu = Scenario::gpu(&soc);
+    let gpu = ScenarioPredictor::train_from(
+        &sc_gpu,
+        &profile_set(&sc_gpu, &train, 42, 2),
+        Method::Lasso,
+        DeductionMode::Full,
+        42,
+        None,
+    );
+    PredictorBundle::from_predictor(&gpu).unwrap().save(dir.join("gpu.json")).unwrap();
+    dir
+}
+
+/// The in-process ground truth: an engine built from the same files.
+fn reference_engine(dir: &Path) -> LatencyEngine {
+    EngineBuilder::new()
+        .bundle_file(dir.join("cpu.json"))
+        .unwrap()
+        .bundle_file(dir.join("gpu.json"))
+        .unwrap()
+        .threads(2)
+        .build()
+        .unwrap()
+}
+
+fn connect(addr: SocketAddr) -> TcpStream {
+    let s = TcpStream::connect(addr).expect("connect to daemon");
+    s.set_nodelay(true).ok();
+    s.set_read_timeout(Some(Duration::from_secs(30))).unwrap();
+    s
+}
+
+fn send_line(s: &mut TcpStream, line: &str) {
+    s.write_all(line.as_bytes()).unwrap();
+    s.write_all(b"\n").unwrap();
+    s.flush().unwrap();
+}
+
+fn read_reply(rd: &mut BufReader<TcpStream>) -> Json {
+    let mut line = String::new();
+    rd.read_line(&mut line).expect("reply line");
+    assert!(!line.is_empty(), "daemon closed the connection instead of replying");
+    Json::parse(line.trim()).expect("reply is valid JSON")
+}
+
+#[test]
+fn daemon_serves_reloads_and_drains_bit_identically() {
+    let dir = make_bundle_dir("e2e");
+    let reference = reference_engine(&dir);
+    let workload: Vec<Graph> =
+        edgelat::nas::sample_dataset(777, 8).into_iter().map(|a| a.graph).collect();
+    let ids = [CPU_ID, GPU_ID];
+    // Ground truth through the exact API the daemon uses.
+    let reqs: Vec<PredictRequest> = workload
+        .iter()
+        .flat_map(|g| ids.iter().map(move |id| PredictRequest::new(g, id.to_string())))
+        .collect();
+    let expected: Vec<f64> = reference
+        .predict_batch(&reqs)
+        .into_iter()
+        .map(|r| r.expect("reference serves").e2e_ms)
+        .collect();
+    let expect_ms = |graph_i: usize, sc_i: usize| expected[graph_i * 2 + sc_i];
+
+    let fleet = BundleFleet::load(&dir, Some(2)).expect("fleet");
+    let cfg = ServeConfig {
+        max_batch: 16,
+        max_wait: Duration::from_micros(2000),
+        ..ServeConfig::default()
+    };
+    let srv = Server::bind("127.0.0.1:0".parse().unwrap(), cfg, fleet).expect("bind");
+    let addr = srv.addr();
+    assert_ne!(addr.port(), 0, "ephemeral port resolved");
+    let daemon = std::thread::spawn(move || srv.run());
+
+    // --- Wave 1: 16 connections x 4 pipelined requests = 64 concurrent
+    // requests across both scenarios, replies in order, bit-identical.
+    std::thread::scope(|scope| {
+        for c in 0..16usize {
+            let (workload, expected_ok) = (&workload, &expect_ms);
+            scope.spawn(move || {
+                let mut s = connect(addr);
+                let mut rd = BufReader::new(s.try_clone().unwrap());
+                for k in 0..4usize {
+                    let graph_i = (c * 4 + k) % workload.len();
+                    let sc_i = (c + k) % 2;
+                    let line = protocol::predict_line(
+                        ids[sc_i],
+                        &workload[graph_i],
+                        Some((c * 100 + k) as u64),
+                        None,
+                        false,
+                    );
+                    send_line(&mut s, &line);
+                }
+                for k in 0..4usize {
+                    let graph_i = (c * 4 + k) % workload.len();
+                    let sc_i = (c + k) % 2;
+                    let j = read_reply(&mut rd);
+                    assert_eq!(j.get("ok"), Some(&Json::Bool(true)), "{}", j.to_string());
+                    // In-order delivery: reply k echoes request k's id.
+                    assert_eq!(j.req_usize("id").unwrap(), c * 100 + k);
+                    assert_eq!(j.req_str("scenario").unwrap(), ids[sc_i]);
+                    let got = j.req_f64("e2e_ms").unwrap();
+                    let want = expected_ok(graph_i, sc_i);
+                    assert_eq!(
+                        got.to_bits(),
+                        want.to_bits(),
+                        "client {c} req {k}: {got} vs direct {want}"
+                    );
+                }
+            });
+        }
+    });
+
+    // --- Malformed input: typed error replies, connection survives.
+    {
+        let mut s = connect(addr);
+        let mut rd = BufReader::new(s.try_clone().unwrap());
+        send_line(&mut s, "this is not json");
+        let j = read_reply(&mut rd);
+        assert_eq!(j.get("ok"), Some(&Json::Bool(false)));
+        assert_eq!(j.req("error").unwrap().req_str("code").unwrap(), "bad_json");
+        // Unknown scenario: accepted by the wire layer, fails per-slot in
+        // the engine with a typed code and the id echoed.
+        let line = protocol::predict_line("NoSuchSoc/gpu", &workload[0], Some(9001), None, false);
+        send_line(&mut s, &line);
+        let j = read_reply(&mut rd);
+        assert_eq!(j.get("ok"), Some(&Json::Bool(false)));
+        assert_eq!(j.req("error").unwrap().req_str("code").unwrap(), "no_predictor");
+        assert_eq!(j.req_usize("id").unwrap(), 9001);
+        // The same connection still serves a valid request afterwards.
+        let line = protocol::predict_line(CPU_ID, &workload[0], Some(9002), None, true);
+        send_line(&mut s, &line);
+        let j = read_reply(&mut rd);
+        assert_eq!(j.get("ok"), Some(&Json::Bool(true)), "{}", j.to_string());
+        assert_eq!(j.req_f64("e2e_ms").unwrap().to_bits(), expect_ms(0, 0).to_bits());
+        assert!(j.req("per_unit").unwrap().as_arr().unwrap().len() > 1, "detail decomposition");
+    }
+
+    // --- Hot reload mid-stream: 4 clients pump pipelined predictions
+    // while reloads swap the engine twice; no reply is dropped, every
+    // reply stays bit-identical (same bundles on disk), and the
+    // generation advances.
+    std::thread::scope(|scope| {
+        for c in 0..4usize {
+            let (workload, expected_ok) = (&workload, &expect_ms);
+            scope.spawn(move || {
+                let mut s = connect(addr);
+                let mut rd = BufReader::new(s.try_clone().unwrap());
+                for k in 0..10usize {
+                    let graph_i = (c + k) % workload.len();
+                    let sc_i = k % 2;
+                    let line = protocol::predict_line(
+                        ids[sc_i],
+                        &workload[graph_i],
+                        Some((7000 + c * 10 + k) as u64),
+                        None,
+                        false,
+                    );
+                    send_line(&mut s, &line);
+                    let j = read_reply(&mut rd);
+                    assert_eq!(j.get("ok"), Some(&Json::Bool(true)), "{}", j.to_string());
+                    let got = j.req_f64("e2e_ms").unwrap();
+                    assert_eq!(
+                        got.to_bits(),
+                        expected_ok(graph_i, sc_i).to_bits(),
+                        "reload corrupted an in-flight response (client {c}, req {k})"
+                    );
+                }
+            });
+        }
+        scope.spawn(move || {
+            for _ in 0..2 {
+                std::thread::sleep(Duration::from_millis(20));
+                let j = edgelat::serve::loadgen::request_reload(addr).expect("reload");
+                assert_eq!(j.get("ok"), Some(&Json::Bool(true)), "{}", j.to_string());
+                assert_eq!(j.req_usize("bundles").unwrap(), 2);
+            }
+        });
+    });
+
+    // --- Stats reflect what happened.
+    let stats = edgelat::serve::loadgen::request_stats(addr).expect("stats");
+    assert_eq!(stats.req_usize("generation").unwrap(), 3, "two reloads happened");
+    let scenarios = stats.req("scenarios").unwrap().as_arr().unwrap();
+    assert_eq!(scenarios.len(), 2);
+    let requests = stats.req("requests").unwrap();
+    // 64 (wave 1) + 2 (malformed section predicts) + 40 (reload wave).
+    assert_eq!(requests.req_usize("predict").unwrap(), 106);
+    assert_eq!(requests.req_usize("ok").unwrap(), 105);
+    assert_eq!(requests.req_usize("errors").unwrap(), 1, "the unknown-scenario slot");
+    assert_eq!(requests.req_usize("malformed").unwrap(), 1);
+    assert!(stats.req("batches").unwrap().req_f64("count").unwrap() >= 1.0);
+    assert!(stats.req("batches").unwrap().req_f64("mean").unwrap() >= 1.0);
+    let hit_rate = stats.req("plan_cache").unwrap().req_f64("hit_rate").unwrap();
+    assert!((0.0..=1.0).contains(&hit_rate), "hit_rate={hit_rate}");
+    assert!(hit_rate > 0.0, "repeated graphs must hit the plan cache");
+    assert!(stats.req("service_us").unwrap().req_f64("p99").unwrap() > 0.0);
+
+    // --- Drain: acknowledged, then the daemon exits cleanly with a
+    // summary that matches the stats.
+    let j = edgelat::serve::loadgen::request_drain(addr).expect("drain");
+    assert_eq!(j.get("ok"), Some(&Json::Bool(true)));
+    assert_eq!(j.req_usize("served").unwrap(), 105);
+    let summary = daemon
+        .join()
+        .expect("daemon thread")
+        .expect("clean drain exits without error");
+    assert_eq!(summary.served_ok, 105);
+    assert_eq!(summary.served_err, 1);
+    assert_eq!(summary.malformed, 1);
+    assert!(summary.batches >= 1);
+    assert!(summary.mean_batch >= 1.0);
+    assert_eq!(summary.reloads, 2);
+
+    // A drained daemon is gone: new connections are refused (or reset).
+    std::thread::sleep(Duration::from_millis(50));
+    assert!(TcpStream::connect(addr).is_err(), "listener closed after drain");
+    let _ = std::fs::remove_dir_all(&dir);
+}

@@ -14,7 +14,14 @@ Fails on:
   the engine, and its plan-cache accounting must be a real rate;
 - an empty device registry (registry.scenarios <= 0): the registry-build
   stage parses the committed device specs and materializes every scenario —
-  zero means the data-driven device universe failed to load.
+  zero means the data-driven device universe failed to load;
+- a broken serve-daemon stage (serve.requests_per_s <= 0, serve.mean_batch
+  < 1, a non-finite or non-positive serve.p99_us/p50_us, or a hit rate
+  outside [0, 1]): the daemon must answer real open-loop TCP traffic,
+  micro-batching must actually coalesce (every flushed batch has >= 1
+  item, so a mean below 1 means the accounting broke), and its tail
+  latency must be a real measurement (the bench emits -1.0 in place of
+  non-finite values so a silent NaN cannot slip through JSON).
 
 Both checks are ratios between two workloads timed back-to-back on the
 same machine, never absolute wall-clock thresholds, so they are robust to
@@ -108,6 +115,34 @@ def main() -> int:
     ):
         return fail(f"search plan_cache_hit_rate must be in [0, 1], got {hit_rate!r}")
 
+    serve = derived.get("serve")
+    if not isinstance(serve, dict):
+        return fail(f"missing derived.serve section in {path}")
+    rps = serve.get("requests_per_s")
+    if not isinstance(rps, (int, float)) or not math.isfinite(rps) or rps <= 0:
+        return fail(f"serve requests_per_s must be > 0, got {rps!r}")
+    mean_batch = serve.get("mean_batch")
+    if (
+        not isinstance(mean_batch, (int, float))
+        or not math.isfinite(mean_batch)
+        or mean_batch < 1.0
+    ):
+        return fail(
+            f"serve mean_batch must be >= 1 (every flushed batch holds at "
+            f"least one request), got {mean_batch!r}"
+        )
+    for pct in ("p50_us", "p99_us"):
+        v = serve.get(pct)
+        if not isinstance(v, (int, float)) or not math.isfinite(v) or v <= 0:
+            return fail(f"serve {pct} must be a finite positive latency, got {v!r}")
+    serve_hit = serve.get("plan_cache_hit_rate")
+    if (
+        not isinstance(serve_hit, (int, float))
+        or not math.isfinite(serve_hit)
+        or not 0.0 <= serve_hit <= 1.0
+    ):
+        return fail(f"serve plan_cache_hit_rate must be in [0, 1], got {serve_hit!r}")
+
     lowering = derived.get("lowering", {})
     graphs_per_s = lowering.get("graphs_per_s")
     lowering_txt = (
@@ -125,6 +160,9 @@ def main() -> int:
         f"lowering={lowering_txt}, "
         f"search={cps:.0f} candidates/s "
         f"(plan-cache hit rate {hit_rate:.2f}), "
+        f"serve={rps:.0f} req/s "
+        f"(p50 {serve.get('p50_us'):.0f} us, p99 {serve.get('p99_us'):.0f} us, "
+        f"mean batch {mean_batch:.2f}, hit rate {serve_hit:.2f}), "
         f"plan cache hits/misses={cache.get('hits')}/{cache.get('misses')}"
     )
     return 0
