@@ -5,7 +5,11 @@
 //! accelerate: kernel deduction (string-keyed reference vs `plan::lower`
 //! into the dense IR), one-time predictor training, single-predict,
 //! engine `predict_batch`, predict-over-plan, parallel scenario-sweep
-//! profiling, and the evolutionary NAS-search loop (candidates/s plus the
+//! profiling, a fleet stage that samples hundreds of synthetic SoC specs
+//! (`device::sample_specs`) and drives the vectorized SoA predictor
+//! kernels over every resulting scenario (scenarios/s, predictions/s, and
+//! the gated vectorized-vs-scalar speedup on identical standardized
+//! matrices), and the evolutionary NAS-search loop (candidates/s plus the
 //! plan-cache hit rate it sustains), plus the engine's plan-cache
 //! hit/miss counters. A final stage boots the `serve` daemon on an
 //! ephemeral port around a two-scenario bundle fleet, drives it with the
@@ -23,12 +27,13 @@ use crate::exec_pool::ExecPool;
 use crate::framework::{deduce_units, DeductionMode, ScenarioPredictor};
 use crate::graph::Graph;
 use crate::plan::{self, LoweredGraph};
-use crate::predict::Method;
+use crate::predict::{FeatureMatrix, Method, NativeModel, Regressor};
 use crate::profiler::profile_set_with;
 use crate::scenario::{Registry, Scenario};
 use crate::serve;
 use crate::util::timing::{time_named, Sample};
 use crate::util::Json;
+use std::collections::HashMap;
 use std::hint::black_box;
 
 /// Workload sizes for one bench run.
@@ -48,6 +53,10 @@ pub struct BenchConfig {
     pub n_sweep: usize,
     /// Graphs profiled per sweep scenario.
     pub sweep_graphs: usize,
+    /// Synthetic SoCs sampled for the fleet stage (`device::sample_specs`).
+    pub fleet_socs: usize,
+    /// Graphs lowered+predicted per fleet scenario.
+    pub fleet_graphs: usize,
     /// Population of the NAS-search throughput stage.
     pub search_pop: usize,
     /// Generations of the NAS-search throughput stage.
@@ -81,6 +90,8 @@ impl BenchConfig {
             iters: 3,
             n_sweep: 6,
             sweep_graphs: 8,
+            fleet_socs: 100,
+            fleet_graphs: 2,
             search_pop: 10,
             search_gens: 3,
             seed: 2022,
@@ -101,6 +112,8 @@ impl BenchConfig {
             iters: 8,
             n_sweep: 12,
             sweep_graphs: 16,
+            fleet_socs: 300,
+            fleet_graphs: 3,
             search_pop: 24,
             search_gens: 5,
             seed: 2022,
@@ -254,6 +267,78 @@ pub fn run(cfg: &BenchConfig) -> Json {
     bench_line(&mut samples, sweep_par.clone());
     let sweep_speedup = sweep_seq.mean_s / sweep_par.mean_s.max(1e-12);
 
+    // --- Fleet stage: a seed-deterministic universe of sampled synthetic
+    // SoCs (`device::sample_specs`) registered into a fresh registry, every
+    // scenario lowered and evaluated through the trained predictor's
+    // vectorized plan path (scenarios/s covers lower + predict). The kernel
+    // comparison then gathers every modeled unit row across the fleet's
+    // plans into per-bucket standardized dense matrices and times the SoA
+    // kernels against the scalar per-row reference on identical inputs —
+    // the `vectorized_speedup` ratio the CI gate requires to be >= 1.
+    let fleet_specs = crate::device::sample_specs(cfg.seed ^ 0xf1ee7, cfg.fleet_socs);
+    let mut fleet_reg = Registry::new();
+    for s in &fleet_specs {
+        fleet_reg.register_soc(s.clone()).expect("sampled spec registers");
+    }
+    let fleet_g = nas_graphs(cfg.seed ^ 0xf00d, cfg.fleet_graphs);
+    let fleet_iters = (cfg.iters / 2).max(1);
+    let fleet_sweep = time_named("fleet/lower+predict universe", fleet_iters, || {
+        for sc in fleet_reg.all() {
+            for g in &fleet_g {
+                let pl = plan::lower(sc, DeductionMode::Full, g);
+                black_box(pred.predict_plan_rows(&pl));
+            }
+        }
+    });
+    bench_line(&mut samples, fleet_sweep.clone());
+    let fleet_scenarios_per_s = fleet_reg.scenario_count() as f64 / fleet_sweep.mean_s.max(1e-12);
+    // Standardize once, outside the timers, so both sides measure pure
+    // model evaluation on identical inputs. Buckets without a trained
+    // native model (fallback or engine-external) are not kernel work.
+    let mut agg: Vec<(&NativeModel, usize, Vec<f64>)> = Vec::new();
+    {
+        let mut slots: HashMap<usize, usize> = HashMap::new();
+        let mut scratch = Vec::new();
+        for sc in fleet_reg.all() {
+            for g in &fleet_g {
+                let pl = plan::lower(sc, DeductionMode::Full, g);
+                for (b, row) in pl.iter() {
+                    let Some(bm) = pred.model(b).and_then(|m| m.as_owned()) else {
+                        continue;
+                    };
+                    let d = bm.feature_dim();
+                    if d == 0 || row.len() < d {
+                        continue;
+                    }
+                    let slot = *slots.entry(b.index()).or_insert_with(|| {
+                        agg.push((&bm.model, d, Vec::new()));
+                        agg.len() - 1
+                    });
+                    bm.standardizer.transform_into(row, &mut scratch);
+                    agg[slot].2.extend_from_slice(&scratch[..d]);
+                }
+            }
+        }
+    }
+    let fleet_rows: usize = agg.iter().map(|(_, d, m)| m.len() / d).sum();
+    assert!(fleet_rows > 0, "fleet stage gathered no modeled unit rows");
+    let fleet_vec = time_named("fleet/kernel matrix predict", cfg.iters, || {
+        for (model, d, m) in &agg {
+            black_box(model.predict(&FeatureMatrix::dense(m, *d)));
+        }
+    });
+    bench_line(&mut samples, fleet_vec.clone());
+    let fleet_scalar = time_named("fleet/scalar row predict", cfg.iters, || {
+        for (model, d, m) in &agg {
+            for row in m.chunks_exact(*d) {
+                black_box(model.predict_one(row));
+            }
+        }
+    });
+    bench_line(&mut samples, fleet_scalar.clone());
+    let fleet_predictions_per_s = fleet_rows as f64 / fleet_vec.mean_s.max(1e-12);
+    let vectorized_speedup = fleet_scalar.mean_s / fleet_vec.mean_s.max(1e-12);
+
     // --- NAS-search throughput: the predictor-in-the-loop workload the
     // paper motivates, driving the loaded engine generation by generation.
     // Candidates/s counts engine predictions served; elite survivors
@@ -382,6 +467,21 @@ pub fn run(cfg: &BenchConfig) -> Json {
                 ("plan_predict_speedup", Json::num(plan_scan_speedup)),
                 ("sweep_parallel_speedup", Json::num(sweep_speedup)),
                 (
+                    // The fleet stage over the sampled spec universe: the
+                    // CI gate fails on non-positive throughput or a
+                    // vectorized/scalar ratio below 1.
+                    "fleet",
+                    Json::obj(vec![
+                        ("socs", Json::num(cfg.fleet_socs as f64)),
+                        ("scenarios", Json::num(fleet_reg.scenario_count() as f64)),
+                        ("graphs", Json::num(cfg.fleet_graphs as f64)),
+                        ("unit_rows", Json::num(fleet_rows as f64)),
+                        ("scenarios_per_s", Json::num(fin(fleet_scenarios_per_s))),
+                        ("predictions_per_s", Json::num(fin(fleet_predictions_per_s))),
+                        ("vectorized_speedup", Json::num(fin(vectorized_speedup))),
+                    ]),
+                ),
+                (
                     // Lowering throughput: graphs (and plan units) lowered
                     // per second at the single-graph bench's rate.
                     "lowering",
@@ -449,6 +549,8 @@ mod tests {
             iters: 1,
             n_sweep: 2,
             sweep_graphs: 2,
+            fleet_socs: 12,
+            fleet_graphs: 2,
             search_pop: 4,
             search_gens: 2,
             seed: 7,
@@ -488,6 +590,20 @@ mod tests {
         assert!(speedup.is_finite() && speedup > 0.0, "speedup={speedup}");
         assert!(derived.req_f64("plan_predict_speedup").unwrap().is_finite());
         assert!(derived.req_f64("sweep_parallel_speedup").unwrap().is_finite());
+        // The fleet stage: the sampled universe registered, real unit rows
+        // flowed through the kernels, and both throughputs are live
+        // measurements. The >= 1 speedup bar is the CI gate's business at
+        // CI scale, not this smoke test's — here it just has to be a real
+        // finite ratio.
+        let fleet = derived.req("fleet").unwrap();
+        assert_eq!(fleet.req_usize("socs").unwrap(), 12);
+        assert!(fleet.req_usize("scenarios").unwrap() >= 12 * 3);
+        assert!(fleet.req_usize("unit_rows").unwrap() > 0);
+        assert!(fleet.req_f64("scenarios_per_s").unwrap() > 0.0);
+        assert!(fleet.req_f64("predictions_per_s").unwrap() > 0.0);
+        let vs = fleet.req_f64("vectorized_speedup").unwrap();
+        assert!(vs.is_finite() && vs > 0.0, "vectorized_speedup={vs}");
+        assert!(benches.iter().any(|b| b.req_str("name").unwrap().starts_with("fleet/")));
         let lowering = derived.req("lowering").unwrap();
         assert!(lowering.req_f64("graphs_per_s").unwrap() > 0.0);
         assert!(lowering.req_f64("units_per_graph").unwrap() > 0.0);

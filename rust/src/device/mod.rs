@@ -9,9 +9,11 @@
 pub mod cost;
 pub mod exec;
 pub mod noise;
+pub mod sample;
 pub mod spec;
 
 pub use exec::{run, OpTrace, RunTrace, Target};
+pub use sample::sample_specs;
 pub use spec::{
     builtin_specs, soc_from_json, soc_to_json, validate_soc, SocSpec, SPEC_FORMAT, SPEC_VERSION,
 };

@@ -1,0 +1,153 @@
+//! Seed-deterministic sampling of schema-valid synthetic [`SocSpec`]s — the
+//! fleet-scale device universe behind `edgelat bench`'s fleet stage.
+//!
+//! The open device universe (PR 5) made SoCs pure data; this module makes
+//! that universe *large*: hundreds of random but physically plausible SoCs,
+//! each passing [`SocSpec::validate`] by construction, so the vectorized
+//! predictor kernels can be exercised far beyond the paper's four devices.
+//!
+//! Validity is structural, not retried: cluster tiers are drawn distinct and
+//! fastest-first (all clusters share one `flops_per_cycle` while the `ghz`
+//! chain strictly descends, so `peak_gflops` strictly descends as
+//! `validate_soc` requires), every rate parameter comes from a positive
+//! range, penalty multipliers start at 1, and combos are deduplicated by
+//! count vector (distinct count vectors over distinct tiers give distinct
+//! scenario labels). Sampling is keyed per SoC from `(seed, index)`, so any
+//! prefix of the fleet is stable as `n` grows.
+
+use crate::device::{ClusterKind, CoreCluster, GpuSpec, Soc, SocSpec};
+use crate::tflite::GpuKind;
+use crate::util::Rng;
+
+/// Domain-separation label for the fleet-sampling stream ("SoCS").
+const STREAM: u64 = 0x50c5;
+
+/// Sample `n` schema-valid synthetic SoC specs. Deterministic in `seed`,
+/// and spec `i` depends only on `(seed, i)` — growing `n` never perturbs
+/// earlier specs.
+pub fn sample_specs(seed: u64, n: usize) -> Vec<SocSpec> {
+    (0..n).map(|i| sample_spec(seed, i)).collect()
+}
+
+fn sample_spec(seed: u64, i: usize) -> SocSpec {
+    let mut rng = Rng::derive(seed, &[STREAM, i as u64]);
+    let name = format!("FleetSoc{seed:x}n{i}");
+
+    // 1..=3 distinct cluster tiers, fastest first.
+    let k = rng.range_usize(1, 3);
+    let kinds = [ClusterKind::Large, ClusterKind::Medium, ClusterKind::Small];
+    let flops_per_cycle = *rng.choice(&[4.0, 8.0, 16.0]);
+    let mut ghz = rng.range_f64(1.6, 3.2);
+    let mut clusters = Vec::with_capacity(k);
+    for kind in &kinds[..k] {
+        clusters.push(CoreCluster {
+            kind: *kind,
+            name: format!("{name}-{}", kind.name()),
+            count: rng.range_usize(1, 8),
+            ghz,
+            flops_per_cycle,
+            int8_speedup: rng.range_f64(1.2, 3.0),
+            stream_gbps: rng.range_f64(2.0, 12.0),
+        });
+        // Strictly shrink the clock for the next (slower) tier.
+        ghz *= rng.range_f64(0.5, 0.95);
+    }
+
+    let gpu_kinds =
+        [GpuKind::Adreno6xx, GpuKind::Adreno, GpuKind::Mali, GpuKind::PowerVR, GpuKind::Amd];
+    let gpu = GpuSpec {
+        kind: *rng.choice(&gpu_kinds),
+        name: format!("{name}-gpu"),
+        gflops: rng.range_f64(100.0, 1200.0),
+        mem_gbps: rng.range_f64(10.0, 40.0),
+        dispatch_us: rng.range_f64(10.0, 80.0),
+        overhead_ms: rng.range_f64(0.3, 4.0),
+        overhead_sigma: rng.range_f64(0.05, 0.5),
+        run_sigma: rng.range_f64(0.01, 0.10),
+    };
+
+    let soc = Soc {
+        name,
+        platform: "synthetic".to_string(),
+        clusters,
+        gpu,
+        mem_gbps: rng.range_f64(8.0, 40.0),
+        cpu_op_overhead_us: rng.range_f64(5.0, 40.0),
+        cpu_overhead_ms: rng.range_f64(0.2, 2.0),
+        hetero_sync_mult: rng.range_f64(1.0, 1.6),
+        quant_ew_penalty: rng.range_f64(1.0, 2.5),
+        noise_base: rng.range_f64(0.005, 0.05),
+        noise_per_small_core: rng.range_f64(0.0, 0.01),
+        noise_per_extra_core: rng.range_f64(0.0, 0.005),
+    };
+
+    // Studied combos: the single-fast-core headline combo, the all-cores
+    // combo, plus up to two random draws — deduplicated by count vector.
+    let counts: Vec<usize> = soc.clusters.iter().map(|c| c.count).collect();
+    let mut one = vec![0usize; counts.len()];
+    one[0] = 1;
+    let mut combos = vec![one];
+    if !combos.contains(&counts) {
+        combos.push(counts.clone());
+    }
+    for _ in 0..2 {
+        let mut c: Vec<usize> = counts.iter().map(|&max| rng.range_usize(0, max)).collect();
+        if c.iter().sum::<usize>() == 0 {
+            c[0] = 1;
+        }
+        if !combos.contains(&c) {
+            combos.push(c);
+        }
+    }
+
+    let spec = SocSpec::new(soc, combos);
+    if let Err(e) = spec.validate() {
+        panic!("sampled spec failed validation (sampler bug): {e}");
+    }
+    spec
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::scenario::Registry;
+
+    #[test]
+    fn sampling_is_seed_deterministic() {
+        assert_eq!(sample_specs(7, 24), sample_specs(7, 24));
+        // Prefix stability: spec i depends only on (seed, i).
+        assert_eq!(sample_specs(7, 24)[..8], sample_specs(7, 8)[..]);
+        assert_ne!(sample_specs(1, 8), sample_specs(2, 8));
+    }
+
+    #[test]
+    fn sampled_specs_validate_register_and_roundtrip() {
+        let specs = sample_specs(2022, 120);
+        assert_eq!(specs.len(), 120);
+        let mut reg = Registry::new();
+        let mut scenarios = 0;
+        for s in &specs {
+            s.validate().unwrap();
+            scenarios += s.scenario_count();
+            reg.register_soc(s.clone()).unwrap();
+            // Round-trips through the spec schema like a hand-written file.
+            let parsed =
+                SocSpec::from_json(&crate::util::Json::parse(&s.to_json().to_string()).unwrap())
+                    .unwrap();
+            assert_eq!(&parsed, s);
+        }
+        assert_eq!(reg.soc_count(), 120);
+        assert_eq!(reg.scenario_count(), scenarios);
+        assert!(scenarios >= 120 * 3, "each spec yields at least 1 combo x 2 reps + gpu");
+    }
+
+    #[test]
+    fn sampler_covers_the_space() {
+        let specs = sample_specs(5, 64);
+        let tiers: std::collections::BTreeSet<usize> =
+            specs.iter().map(|s| s.soc.clusters.len()).collect();
+        assert_eq!(tiers.into_iter().collect::<Vec<_>>(), vec![1, 2, 3]);
+        assert!(specs.iter().any(|s| s.combos.len() > 2), "random extra combos appear");
+        assert!(specs.iter().any(|s| s.soc.clusters.iter().any(|c| c.count > 4)));
+    }
+}

@@ -32,7 +32,7 @@ use crate::exec_pool::{CacheStats, ExecPool, ShardedCache};
 use crate::framework::DeductionMode;
 use crate::graph::Graph;
 use crate::plan::{self, LoweredGraph};
-use crate::predict::{BucketModel, Method};
+use crate::predict::{soa, BucketModel, Method};
 use crate::scenario::Scenario;
 use std::fmt;
 use std::sync::Arc;
@@ -139,6 +139,10 @@ struct EnginePredictor {
     t_overhead_ms: f64,
     fallback_ms: f64,
     models: Vec<Option<BucketModel>>,
+    /// Vectorized SoA kernels compiled once per loaded model at build time
+    /// (parallel to `models`); the serve loop evaluates whole plans through
+    /// these, bit-identical to the scalar model path.
+    kernels: Vec<Option<soa::BucketKernel>>,
 }
 
 /// Builder for [`LatencyEngine`]: collect bundles, then `build()`.
@@ -195,6 +199,10 @@ impl EngineBuilder {
                 let id = resolve_bundle_bucket(&scenario.id, &bucket)?;
                 models[id.index()] = Some(m);
             }
+            // Compile each loaded model's SoA kernel once; every predict
+            // call reuses them instead of walking enum arenas per row.
+            let kernels =
+                models.iter().map(|m| m.as_ref().map(soa::BucketKernel::compile)).collect();
             predictors.push(EnginePredictor {
                 scenario,
                 method: b.method,
@@ -202,6 +210,7 @@ impl EngineBuilder {
                 t_overhead_ms: b.t_overhead_ms,
                 fallback_ms: b.fallback_ms,
                 models,
+                kernels,
             });
         }
         // Deduction only depends on (scenario, mode), not on the trained
@@ -319,28 +328,25 @@ impl LatencyEngine {
         self.pool.threads()
     }
 
-    /// Serve one prediction: fetch (or build) the memoized plan, then scan
-    /// it against the dense `BucketId`-indexed model table. One reusable
-    /// standardization scratch buffer; no bucket strings, no `HashMap`
-    /// lookups per unit.
+    /// Serve one prediction: fetch (or build) the memoized plan, then
+    /// evaluate it bucket-grouped through the SoA kernels compiled at
+    /// build time (`predict::soa::eval_plan_grouped`) — bit-identical to
+    /// the old per-unit scalar scan, with model-less buckets charged the
+    /// fallback and rows narrower than a model's feature dim kept on the
+    /// scalar path.
     pub fn predict(&self, req: &PredictRequest) -> Result<PredictResponse, EngineError> {
         let (idx, p) = self.find(&req.scenario_id, req.method)?;
         let it = plan::interner();
         let pl = self.plan_for(idx, p, req.graph);
+        let (rows, fallback_units) =
+            soa::eval_plan_grouped(&pl, &p.kernels, p.fallback_ms, |bi, row, scratch| {
+                p.models[bi].as_ref().map(|m| m.predict_raw_with(row, scratch))
+            });
         let mut per_unit = Vec::with_capacity(pl.len());
-        let mut fallback_units = 0usize;
         let mut sum = 0.0;
-        let mut scratch = Vec::new();
-        for (b, row) in pl.iter() {
-            let ms = match &p.models[b.index()] {
-                Some(m) => m.predict_raw_with(row, &mut scratch),
-                None => {
-                    fallback_units += 1;
-                    p.fallback_ms
-                }
-            };
+        for (i, ms) in rows.into_iter().enumerate() {
             sum += ms;
-            per_unit.push((it.name(b), ms));
+            per_unit.push((it.name(pl.bucket(i)), ms));
         }
         Ok(PredictResponse {
             e2e_ms: p.t_overhead_ms + sum,

@@ -21,7 +21,7 @@ use crate::features::{
 };
 use crate::graph::Graph;
 use crate::plan::{self, BucketId, LoweredGraph};
-use crate::predict::{mlp::MlpContext, train, Method, TrainedModel};
+use crate::predict::{mlp::MlpContext, soa, train, Method, TrainedModel};
 use crate::profiler::{bucket_datasets, ModelProfile};
 use crate::scenario::Scenario;
 use crate::tflite::{compile, CompileOptions};
@@ -83,6 +83,18 @@ pub struct ScenarioPredictor<'a> {
     /// Buckets seen at prediction time with no trained model (counted, and
     /// predicted with the global mean op latency as fallback).
     pub fallback_ms: f64,
+    /// Per-bucket SoA kernels compiled once from the owned native models
+    /// (parallel to `models`; `None` for missing or engine-external
+    /// models, which stay on the scalar path).
+    kernels: Vec<Option<soa::BucketKernel>>,
+}
+
+/// Compile the vectorized kernel table for a dense model table.
+fn compile_kernels(models: &[Option<TrainedModel<'_>>]) -> Vec<Option<soa::BucketKernel>> {
+    models
+        .iter()
+        .map(|m| m.as_ref().and_then(TrainedModel::as_owned).map(soa::BucketKernel::compile))
+        .collect()
 }
 
 /// Intern a by-name model map into the dense `BucketId`-indexed table.
@@ -154,14 +166,9 @@ impl<'a> ScenarioPredictor<'a> {
         t_overhead_ms: f64,
         fallback_ms: f64,
     ) -> ScenarioPredictor<'a> {
-        ScenarioPredictor {
-            scenario,
-            method,
-            mode,
-            models: dense_models(models),
-            t_overhead_ms,
-            fallback_ms,
-        }
+        let models = dense_models(models);
+        let kernels = compile_kernels(&models);
+        ScenarioPredictor { scenario, method, mode, models, t_overhead_ms, fallback_ms, kernels }
     }
 
     /// Train per-bucket models from profiles of the training architectures.
@@ -202,13 +209,16 @@ impl<'a> ScenarioPredictor<'a> {
         let gaps: Vec<f64> = profiles.iter().map(|p| p.overhead_ms()).collect();
         let all_lat: Vec<f64> =
             profiles.iter().flat_map(|p| p.ops.iter().map(|o| o.latency_ms)).collect();
+        let models = dense_models(models);
+        let kernels = compile_kernels(&models);
         ScenarioPredictor {
             scenario: scenario.clone(),
             method,
             mode,
-            models: dense_models(models),
+            models,
             t_overhead_ms: mean(&gaps).max(0.0),
             fallback_ms: mean(&all_lat),
+            kernels,
         }
     }
 
@@ -246,9 +256,25 @@ impl<'a> ScenarioPredictor<'a> {
     }
 
     /// Per-unit latency predictions over an already-lowered plan, in
-    /// execution order. The hot-path primitive: dense `BucketId` model
-    /// indexing, one shared standardization scratch buffer, no strings.
+    /// execution order. **The matrix-first primitive** every other predict
+    /// entry point shims over: units are grouped by bucket and evaluated
+    /// through the vectorized SoA kernels compiled at construction
+    /// (`predict::soa`), with engine-external (MLP) models and model-less
+    /// buckets on the scalar path. Bit-identical to
+    /// [`predict_plan_rows_scalar`](Self::predict_plan_rows_scalar).
     pub fn predict_plan_rows(&self, p: &LoweredGraph) -> Vec<f64> {
+        let (rows, _) = soa::eval_plan_grouped(p, &self.kernels, self.fallback_ms, |bi, row, scratch| {
+            self.models[bi].as_ref().map(|m| m.predict_raw_with(row, scratch))
+        });
+        rows
+    }
+
+    /// Scalar reference implementation of
+    /// [`predict_plan_rows`](Self::predict_plan_rows): one unit at a time
+    /// through the per-row model path. Kept as the ground truth the
+    /// vectorized kernels are proven bit-identical against (see
+    /// `tests/vector_kernels.rs` and the bench fleet stage).
+    pub fn predict_plan_rows_scalar(&self, p: &LoweredGraph) -> Vec<f64> {
         let mut scratch = Vec::new();
         p.iter()
             .map(|(b, row)| match &self.models[b.index()] {
@@ -259,17 +285,11 @@ impl<'a> ScenarioPredictor<'a> {
     }
 
     /// End-to-end prediction over an already-lowered plan:
-    /// `T_overhead + Σ f*_c(x_c)` (Section 4.2).
+    /// `T_overhead + Σ f*_c(x_c)` (Section 4.2). Sums the
+    /// [`predict_plan_rows`](Self::predict_plan_rows) vector in execution
+    /// order — the same addition sequence as the old scalar loop.
     pub fn predict_plan(&self, p: &LoweredGraph) -> f64 {
-        let mut scratch = Vec::new();
-        let mut sum = 0.0;
-        for (b, row) in p.iter() {
-            sum += match &self.models[b.index()] {
-                Some(m) => m.predict_raw_with(row, &mut scratch),
-                None => self.fallback_ms,
-            };
-        }
-        self.t_overhead_ms + sum
+        self.t_overhead_ms + self.predict_plan_rows(p).iter().sum::<f64>()
     }
 
     /// Features + bucket for every predicted unit of a graph under this
@@ -279,9 +299,10 @@ impl<'a> ScenarioPredictor<'a> {
         self.lower(g).to_units()
     }
 
-    /// Predict the latency of each unit. Compatibility shim: lowers once
-    /// and resolves bucket names through the interner (the predict loop
-    /// itself is the id-indexed plan path).
+    /// Predict the latency of each unit. **Shim over
+    /// [`predict_plan_rows`](Self::predict_plan_rows)**: lowers once, runs
+    /// the matrix-first primitive, and resolves bucket names through the
+    /// interner for the string-keyed return.
     pub fn predict_units(&self, g: &Graph) -> Vec<(String, f64)> {
         let it = plan::interner();
         let p = self.lower(g);
@@ -294,6 +315,9 @@ impl<'a> ScenarioPredictor<'a> {
     }
 
     /// End-to-end prediction: `T_overhead + Σ f*_c(x_c)` (Section 4.2).
+    /// **Shim over [`predict_plan_rows`](Self::predict_plan_rows)** via
+    /// [`predict_plan`](Self::predict_plan): lower once, evaluate the
+    /// matrix-first primitive, add `t_overhead_ms`.
     pub fn predict(&self, g: &Graph) -> f64 {
         self.predict_plan(&self.lower(g))
     }

@@ -26,7 +26,10 @@
 //!   threads through the profiler, the report context (`ReportCtx`), the
 //!   search CLI, and the bench suite. Predictor bundles (v3) embed the
 //!   full scenario descriptor, so a bundle trained on a never-seen device
-//!   loads and serves anywhere without its spec file.
+//!   loads and serves anywhere without its spec file. A seed-deterministic
+//!   spec sampler (`device::sample_specs`) generates hundreds of
+//!   schema-valid synthetic SoCs on demand — the fleet-scale universe the
+//!   bench suite's fleet stage registers and sweeps.
 //! - **Lowered-plan IR (`plan`)**: the shared representation between
 //!   deduction and prediction. A `BucketInterner` fixes the closed bucket
 //!   universe into dense `BucketId`s; `plan::lower(scenario, mode, graph)`
@@ -35,7 +38,13 @@
 //!   row offsets). Predictors evaluate plans with `BucketId`-indexed model
 //!   tables — no bucket strings or `HashMap` lookups on the predict hot
 //!   path; plans are cached by the engine and shared across model
-//!   families by the report sweeps. Bundles serialize the intern table;
+//!   families by the report sweeps. Prediction itself is matrix-first:
+//!   `Regressor::predict` takes a borrowed `predict::FeatureMatrix` view,
+//!   and the native models evaluate whole plans through flat
+//!   structure-of-arrays kernels (`predict::soa` — level-synchronous
+//!   breadth-first tree walks, blocked Lasso GEMV) compiled once per
+//!   trained model and proven bit-identical to the scalar per-row
+//!   reference (`tests/vector_kernels.rs`). Bundles serialize the intern table;
 //!   models re-intern by name on load, and a bundle whose symbols no
 //!   longer resolve is rejected.
 //! - **L3 serving (`engine`)**: the train-once / serialize / load /

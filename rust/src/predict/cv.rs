@@ -1,5 +1,6 @@
 //! K-fold cross-validation and grid-search helpers shared by the predictors.
 
+use crate::predict::{FeatureMatrixBuf, Regressor};
 use crate::util::{mape, Rng};
 
 /// Deterministic k-fold index split.
@@ -26,9 +27,23 @@ pub fn take<T: Clone>(xs: &[T], idx: &[usize]) -> Vec<T> {
     idx.iter().map(|&i| xs[i].clone()).collect()
 }
 
+/// One fold's materialized data: training rows/targets plus the held-out
+/// rows gathered into a flat matrix for batch scoring.
+struct Fold {
+    train_x: Vec<Vec<f64>>,
+    train_y: Vec<f64>,
+    test_x: FeatureMatrixBuf,
+    actual: Vec<f64>,
+}
+
 /// Grid search: evaluate `fit(param, train_x, train_y)` on each fold, score
 /// by MAPE, return the best parameter. Small datasets fall back to fewer
 /// folds automatically.
+///
+/// Fold data is materialized once (not once per parameter) and held-out
+/// predictions go through [`Regressor::predict`] — one matrix call per
+/// (param, fold) instead of a `predict_one` per row, so the native models'
+/// vectorized kernels carry CV too.
 pub fn grid_search<P: Clone, M, F>(
     params: &[P],
     x: &[Vec<f64>],
@@ -38,23 +53,37 @@ pub fn grid_search<P: Clone, M, F>(
 ) -> P
 where
     F: Fn(&P, &[Vec<f64>], &[f64]) -> M,
-    M: Fn(&[f64]) -> f64,
+    M: Regressor,
 {
     assert!(!params.is_empty());
     if x.len() < 10 || params.len() == 1 {
         return params[0].clone();
     }
-    let folds = kfold(x.len(), 5, seed);
+    let folds: Vec<Fold> = kfold(x.len(), 5, seed)
+        .iter()
+        .map(|(tr, te)| {
+            let mut test_x = FeatureMatrixBuf::new();
+            for &i in te {
+                test_x.push_row(&x[i]);
+            }
+            Fold {
+                train_x: take(x, tr),
+                train_y: take(y, tr),
+                test_x,
+                actual: te.iter().map(|&i| y[i]).collect(),
+            }
+        })
+        .collect();
     let mut best = (f64::INFINITY, 0usize);
     for (pi, p) in params.iter().enumerate() {
         let mut errs = Vec::new();
-        for (tr, te) in &folds {
-            let xt = take(x, tr);
-            let yt = take(y, tr);
-            let model = fit(p, &xt, &yt);
-            let pred: Vec<f64> = te.iter().map(|&i| model(&x[i]).max(1e-9)).collect();
-            let actual: Vec<f64> = te.iter().map(|&i| y[i]).collect();
-            errs.push(mape(&pred, &actual));
+        for f in &folds {
+            let model = fit(p, &f.train_x, &f.train_y);
+            let mut pred = model.predict(&f.test_x.view());
+            for v in pred.iter_mut() {
+                *v = v.max(1e-9);
+            }
+            errs.push(mape(&pred, &f.actual));
         }
         let score = errs.iter().sum::<f64>() / errs.len() as f64;
         if score < best.0 {
@@ -89,14 +118,21 @@ mod tests {
         assert_eq!(total, 3);
     }
 
+    /// Toy model for the grid-search contract: predict `scale * x[0]`.
+    struct Scale(f64);
+
+    impl Regressor for Scale {
+        fn predict_one(&self, x: &[f64]) -> f64 {
+            self.0 * x[0]
+        }
+    }
+
     #[test]
     fn grid_search_picks_correct_scale() {
         // y = 2x; candidate scales {1.0, 2.0, 3.0}: fit = multiply by scale.
         let x: Vec<Vec<f64>> = (1..60).map(|i| vec![i as f64]).collect();
         let y: Vec<f64> = (1..60).map(|i| 2.0 * i as f64).collect();
-        let best = grid_search(&[1.0, 2.0, 3.0], &x, &y, 3, |&s, _xt, _yt| {
-            move |v: &[f64]| s * v[0]
-        });
+        let best = grid_search(&[1.0, 2.0, 3.0], &x, &y, 3, |&s, _xt, _yt| Scale(s));
         assert_eq!(best, 2.0);
     }
 }

@@ -4,7 +4,7 @@
 
 use crate::predict::cv;
 use crate::predict::tree::{Tree, TreeParams};
-use crate::predict::Regressor;
+use crate::predict::{soa, FeatureMatrix, Regressor};
 use crate::util::{Json, Rng};
 
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -51,10 +51,8 @@ impl RandomForest {
                     .map(move |&mss| ForestParams { n_trees, min_samples_split: mss })
             })
             .collect();
-        let best = cv::grid_search(&grid, x, y, seed, |p, xt, yt| {
-            let m = RandomForest::fit(xt, yt, *p, seed);
-            move |v: &[f64]| m.predict_one(v)
-        });
+        let best =
+            cv::grid_search(&grid, x, y, seed, |p, xt, yt| RandomForest::fit(xt, yt, *p, seed));
         RandomForest::fit(x, y, best, seed)
     }
 
@@ -94,6 +92,15 @@ impl Regressor for RandomForest {
     fn predict_one(&self, x: &[f64]) -> f64 {
         let s: f64 = self.trees.iter().map(|t| t.predict_one(x)).sum();
         s / self.trees.len() as f64
+    }
+
+    /// Level-synchronous SoA walk over the whole matrix (`predict::soa`):
+    /// per row, leaves accumulate in tree order from 0 and divide by the
+    /// tree count last — the exact operation sequence of `predict_one`, so
+    /// results are bit-identical.
+    fn predict(&self, xs: &FeatureMatrix<'_>) -> Vec<f64> {
+        let k = soa::EnsembleKernel::from_trees(&self.trees, 0.0, 1.0, self.trees.len() as f64);
+        soa::ensemble_predict_matrix(&k, xs, |x| self.predict_one(x))
     }
 }
 

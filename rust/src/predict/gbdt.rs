@@ -5,7 +5,7 @@
 
 use crate::predict::cv;
 use crate::predict::tree::{Tree, TreeParams};
-use crate::predict::Regressor;
+use crate::predict::{soa, FeatureMatrix, Regressor};
 use crate::util::Json;
 
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -162,6 +162,20 @@ impl Regressor for Gbdt {
             p += self.params.learning_rate * t.predict_one(x);
         }
         p
+    }
+
+    /// Level-synchronous SoA walk over the whole matrix (`predict::soa`):
+    /// per row, stages accumulate `learning_rate * leaf` onto `init` in
+    /// stage order — the exact operation sequence of `predict_one`, so
+    /// results are bit-identical.
+    fn predict(&self, xs: &FeatureMatrix<'_>) -> Vec<f64> {
+        let k = soa::EnsembleKernel::from_trees(
+            &self.trees,
+            self.init,
+            self.params.learning_rate,
+            1.0,
+        );
+        soa::ensemble_predict_matrix(&k, xs, |x| self.predict_one(x))
     }
 }
 

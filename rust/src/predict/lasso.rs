@@ -3,7 +3,7 @@
 //! (weighted least squares with weights 1/y_i^2), trained by coordinate
 //! descent. The alpha hyperparameter is grid-searched over [1e-5, 1e2].
 
-use crate::predict::{cv, Regressor};
+use crate::predict::{cv, soa, FeatureMatrix, Regressor};
 use crate::util::Json;
 
 #[derive(Debug, Clone)]
@@ -96,10 +96,8 @@ impl Lasso {
     pub fn fit_cv(x: &[Vec<f64>], y: &[f64], seed: u64) -> Lasso {
         let alphas: Vec<f64> =
             (0..8).map(|i| 1e-5 * 10f64.powi(i)).collect(); // 1e-5 .. 1e2
-        let best = cv::grid_search(&alphas, x, y, seed, |&a, xt, yt| {
-            let m = Lasso::fit(xt, yt, a);
-            move |v: &[f64]| m.predict_one(v)
-        });
+        let best =
+            cv::grid_search(&alphas, x, y, seed, |&a, xt, yt| Lasso::fit(xt, yt, a));
         Lasso::fit(x, y, best)
     }
 
@@ -138,6 +136,19 @@ impl Lasso {
 impl Regressor for Lasso {
     fn predict_one(&self, x: &[f64]) -> f64 {
         self.intercept + self.weights.iter().zip(x).map(|(w, x)| w * x).sum::<f64>()
+    }
+
+    /// Blocked GEMV over the dense arena for uniform-width matrices
+    /// (`predict::soa::lasso_gemv`); bit-identical to the scalar row loop,
+    /// which remains the path for ragged views.
+    fn predict(&self, xs: &FeatureMatrix<'_>) -> Vec<f64> {
+        if let Some(w) = xs.uniform_width() {
+            let mut out = vec![0.0; xs.len()];
+            soa::lasso_gemv(&self.weights, self.intercept, xs.values(), w, &mut out);
+            out
+        } else {
+            xs.rows().map(|x| self.predict_one(x)).collect()
+        }
     }
 }
 

@@ -1,0 +1,202 @@
+//! Borrowed feature-matrix views — the batch-prediction primitive.
+//!
+//! [`FeatureMatrix`] is a zero-copy view over a flat `&[f64]` arena, either
+//! dense (every row the same width) or ragged (explicit row offsets, the
+//! same layout as `plan::LoweredGraph`'s feature arena). It is the argument
+//! type of [`Regressor::predict`](crate::predict::Regressor::predict): hot
+//! callers hand whole matrices to the vectorized SoA kernels instead of
+//! cloning per-row `Vec<f64>`s.
+//!
+//! [`FeatureMatrixBuf`] is the owned builder for callers that gather rows
+//! (cross-validation folds, MLP validation splits) before predicting.
+
+/// A borrowed, read-only matrix of feature rows over a flat value arena.
+#[derive(Clone, Copy)]
+pub struct FeatureMatrix<'a> {
+    values: &'a [f64],
+    /// Dense row width; ignored when `offsets` is present.
+    width: usize,
+    /// Ragged layout: `offsets[i]..offsets[i+1]` is row `i` (first entry 0).
+    offsets: Option<&'a [u32]>,
+}
+
+impl<'a> FeatureMatrix<'a> {
+    /// Dense view: `values` holds `values.len() / width` rows of `width`
+    /// contiguous features each. `width == 0` is only valid for an empty
+    /// matrix.
+    pub fn dense(values: &'a [f64], width: usize) -> FeatureMatrix<'a> {
+        if width == 0 {
+            assert!(values.is_empty(), "width-0 matrix must be empty");
+        } else {
+            assert_eq!(values.len() % width, 0, "arena not a multiple of width");
+        }
+        FeatureMatrix { values, width, offsets: None }
+    }
+
+    /// Ragged view over `values` with explicit row boundaries — the layout
+    /// of `plan::LoweredGraph`'s feature arena. `offsets` must start at 0,
+    /// be non-decreasing, and end at `values.len()`.
+    pub fn with_offsets(values: &'a [f64], offsets: &'a [u32]) -> FeatureMatrix<'a> {
+        assert!(!offsets.is_empty() && offsets[0] == 0, "offsets must start at 0");
+        assert_eq!(*offsets.last().unwrap() as usize, values.len());
+        debug_assert!(offsets.windows(2).all(|w| w[0] <= w[1]));
+        FeatureMatrix { values, width: 0, offsets: Some(offsets) }
+    }
+
+    /// Number of rows.
+    pub fn len(&self) -> usize {
+        match self.offsets {
+            Some(o) => o.len() - 1,
+            None => {
+                if self.width == 0 {
+                    0
+                } else {
+                    self.values.len() / self.width
+                }
+            }
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Row `i` as a feature slice.
+    pub fn row(&self, i: usize) -> &'a [f64] {
+        match self.offsets {
+            Some(o) => &self.values[o[i] as usize..o[i + 1] as usize],
+            None => &self.values[i * self.width..(i + 1) * self.width],
+        }
+    }
+
+    /// Iterate rows in order.
+    pub fn rows(&self) -> impl Iterator<Item = &'a [f64]> + '_ {
+        (0..self.len()).map(|i| self.row(i))
+    }
+
+    /// `Some(w)` when every row has the same width `w` (so [`values`]
+    /// (Self::values) is a dense row-major matrix the SoA kernels can walk
+    /// directly), `None` for genuinely ragged views. O(rows) for
+    /// offset-based views, O(1) for dense ones.
+    pub fn uniform_width(&self) -> Option<usize> {
+        match self.offsets {
+            None => Some(self.width),
+            Some(o) => {
+                if o.len() < 2 {
+                    // Zero rows: trivially uniform (width 0, empty arena).
+                    return Some(0);
+                }
+                let w = (o[1] - o[0]) as usize;
+                o.windows(2).all(|p| (p[1] - p[0]) as usize == w).then_some(w)
+            }
+        }
+    }
+
+    /// The flat row-major value arena backing this view.
+    pub fn values(&self) -> &'a [f64] {
+        self.values
+    }
+}
+
+/// Owned builder for a [`FeatureMatrix`]: push rows (any widths), then
+/// [`view`](Self::view) borrows them as the matrix primitive. Rows land in
+/// one flat arena — no per-row allocation.
+#[derive(Default, Clone)]
+pub struct FeatureMatrixBuf {
+    values: Vec<f64>,
+    offsets: Vec<u32>,
+}
+
+impl FeatureMatrixBuf {
+    pub fn new() -> FeatureMatrixBuf {
+        FeatureMatrixBuf { values: Vec::new(), offsets: vec![0] }
+    }
+
+    /// Build from per-row `Vec`s (test/bridge convenience).
+    pub fn from_rows<R: AsRef<[f64]>>(rows: &[R]) -> FeatureMatrixBuf {
+        let mut b = FeatureMatrixBuf::new();
+        for r in rows {
+            b.push_row(r.as_ref());
+        }
+        b
+    }
+
+    pub fn push_row(&mut self, row: &[f64]) {
+        self.values.extend_from_slice(row);
+        self.offsets.push(self.values.len() as u32);
+    }
+
+    pub fn len(&self) -> usize {
+        self.offsets.len() - 1
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn clear(&mut self) {
+        self.values.clear();
+        self.offsets.truncate(1);
+    }
+
+    pub fn view(&self) -> FeatureMatrix<'_> {
+        FeatureMatrix::with_offsets(&self.values, &self.offsets)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dense_view_rows() {
+        let vals = [1.0, 2.0, 3.0, 4.0, 5.0, 6.0];
+        let m = FeatureMatrix::dense(&vals, 3);
+        assert_eq!(m.len(), 2);
+        assert_eq!(m.row(0), &[1.0, 2.0, 3.0]);
+        assert_eq!(m.row(1), &[4.0, 5.0, 6.0]);
+        assert_eq!(m.uniform_width(), Some(3));
+        assert_eq!(m.rows().count(), 2);
+    }
+
+    #[test]
+    fn ragged_buf_roundtrip() {
+        let mut b = FeatureMatrixBuf::new();
+        b.push_row(&[1.0, 2.0]);
+        b.push_row(&[3.0]);
+        b.push_row(&[]);
+        let m = b.view();
+        assert_eq!(m.len(), 3);
+        assert_eq!(m.row(0), &[1.0, 2.0]);
+        assert_eq!(m.row(1), &[3.0]);
+        assert_eq!(m.row(2), &[] as &[f64]);
+        assert_eq!(m.uniform_width(), None);
+    }
+
+    #[test]
+    fn uniform_offsets_detected() {
+        let b = FeatureMatrixBuf::from_rows(&[vec![1.0, 2.0], vec![3.0, 4.0]]);
+        let m = b.view();
+        assert_eq!(m.uniform_width(), Some(2));
+        // Uniform offset rows are contiguous: the arena IS the dense matrix.
+        assert_eq!(m.values(), &[1.0, 2.0, 3.0, 4.0]);
+    }
+
+    #[test]
+    fn empty_matrices() {
+        let m = FeatureMatrix::dense(&[], 0);
+        assert!(m.is_empty());
+        let b = FeatureMatrixBuf::new();
+        assert!(b.is_empty());
+        assert_eq!(b.view().uniform_width(), Some(0));
+    }
+
+    #[test]
+    fn clear_resets_buf() {
+        let mut b = FeatureMatrixBuf::from_rows(&[vec![1.0]]);
+        b.clear();
+        assert!(b.is_empty());
+        b.push_row(&[9.0, 8.0]);
+        assert_eq!(b.view().row(0), &[9.0, 8.0]);
+    }
+}

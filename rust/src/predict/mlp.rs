@@ -8,7 +8,7 @@
 //! lr in {5e-3, 5e-4, 5e-5}, early stopping on a 20% validation split),
 //! restricted to the AOT-compiled variants listed in `mlp_meta.json`.
 
-use crate::predict::Regressor;
+use crate::predict::{FeatureMatrix, FeatureMatrixBuf, Regressor};
 use crate::runtime::{literal_f32, to_vec_f32, Executable, Runtime};
 use crate::util::{mape, Json, Rng};
 use anyhow::{anyhow, Context, Result};
@@ -134,13 +134,16 @@ impl<'c> MlpModel<'c> {
                 x: tr_idx.iter().map(|&i| pad_row(&x[i], variant.in_dim)).collect(),
                 y: tr_idx.iter().map(|&i| y[i] as f32).collect(),
             };
-            let val_x: Vec<Vec<f64>> = val_idx.iter().map(|&i| x[i].clone()).collect();
+            let mut val_x = FeatureMatrixBuf::new();
+            for &i in val_idx {
+                val_x.push_row(&x[i]);
+            }
             let val_y: Vec<f64> = val_idx.iter().map(|&i| y[i]).collect();
             for &lr in &lrs {
                 let params = train_variant(ctx, vi, &tr, lr, seed).expect("MLP train step failed");
                 let model = MlpModel { ctx, variant: vi, params };
                 let pred: Vec<f64> =
-                    model.predict_batch(&val_x).iter().map(|&p| (p as f64).max(1e-9)).collect();
+                    model.predict_batch(&val_x.view()).iter().map(|&p| (p as f64).max(1e-9)).collect();
                 let err = mape(&pred, &val_y);
                 if best.as_ref().map(|b| err < b.0).unwrap_or(true) {
                     best = Some((err, vi, model.params));
@@ -151,16 +154,23 @@ impl<'c> MlpModel<'c> {
         MlpModel { ctx, variant, params }
     }
 
-    /// Batched forward pass through the AOT executable.
-    pub fn predict_batch(&self, xs: &[Vec<f64>]) -> Vec<f32> {
+    /// Batched forward pass through the AOT executable. Rows are cast to
+    /// f32 and zero-padded to the variant's fixed input width while being
+    /// packed into each PJRT batch literal — no per-row `Vec` allocation.
+    pub fn predict_batch(&self, xs: &FeatureMatrix<'_>) -> Vec<f32> {
         let v = &self.ctx.variants[self.variant];
         let b = v.batch;
-        let mut out = Vec::with_capacity(xs.len());
-        for chunk in xs.chunks(b) {
+        let n = xs.len();
+        let mut out = Vec::with_capacity(n);
+        let mut start = 0;
+        while start < n {
+            let end = (start + b).min(n);
             let mut flat = vec![0f32; b * v.in_dim];
-            for (r, row) in chunk.iter().enumerate() {
-                let p = pad_row(row, v.in_dim);
-                flat[r * v.in_dim..(r + 1) * v.in_dim].copy_from_slice(&p);
+            for r in start..end {
+                let dst = &mut flat[(r - start) * v.in_dim..(r - start + 1) * v.in_dim];
+                for (o, i) in dst.iter_mut().zip(xs.row(r)) {
+                    *o = *i as f32;
+                }
             }
             let mut inputs =
                 vec![literal_f32(&flat, &[b as i64, v.in_dim as i64]).expect("x literal")];
@@ -169,7 +179,8 @@ impl<'c> MlpModel<'c> {
             }
             let outs = v.forward.run(&inputs).expect("forward failed");
             let pred = to_vec_f32(&outs[0]).expect("forward output");
-            out.extend_from_slice(&pred[..chunk.len()]);
+            out.extend_from_slice(&pred[..end - start]);
+            start = end;
         }
         out
     }
@@ -196,6 +207,16 @@ fn train_variant(
     rng.shuffle(&mut order);
     let n_es = (n / 5).max(1).min(n.saturating_sub(1)).max(1);
     let (es_idx, tr_idx) = order.split_at(n_es.min(n - 1).max(1));
+    // The early-stopping rows are fixed for the whole run: widen them to
+    // f64 once (rows in `data.x` are already padded to `in_dim`; f32 ->
+    // f64 -> f32 round-trips exactly).
+    let mut es_x = FeatureMatrixBuf::new();
+    let mut es_row: Vec<f64> = Vec::with_capacity(v.in_dim);
+    for &i in es_idx {
+        es_row.clear();
+        es_row.extend(data.x[i].iter().map(|&f| f as f64));
+        es_x.push_row(&es_row);
+    }
 
     let max_epochs = 200usize;
     let patience = 50usize;
@@ -258,11 +279,7 @@ fn train_variant(
         }
         // Early-stopping check on the held-out slice.
         let model = MlpModel { ctx, variant: vi, params: params.clone() };
-        let es_x: Vec<Vec<f64>> = es_idx
-            .iter()
-            .map(|&i| data.x[i].iter().map(|&f| f as f64).collect())
-            .collect();
-        let pred = model.predict_batch(&es_x);
+        let pred = model.predict_batch(&es_x.view());
         let mut loss = 0.0f64;
         for (p, &i) in pred.iter().zip(es_idx) {
             let e = (*p as f64 - data.y[i] as f64) / data.y[i].max(1e-9) as f64;
@@ -285,10 +302,16 @@ fn train_variant(
 
 impl<'c> Regressor for MlpModel<'c> {
     fn predict_one(&self, x: &[f64]) -> f64 {
-        self.predict_batch(std::slice::from_ref(&x.to_vec()))[0] as f64
+        let mut m = FeatureMatrixBuf::new();
+        m.push_row(x);
+        self.predict_batch(&m.view())[0] as f64
     }
 
-    fn predict(&self, xs: &[Vec<f64>]) -> Vec<f64> {
+    /// THE f32 cast point: the AOT forward pass computes in f32, so this
+    /// is the single place where [`predict_batch`](MlpModel::predict_batch)
+    /// output widens to the trait's `f64` return. Every other `Regressor`
+    /// computes in f64 end to end.
+    fn predict(&self, xs: &FeatureMatrix<'_>) -> Vec<f64> {
         self.predict_batch(xs).into_iter().map(|p| p as f64).collect()
     }
 }

@@ -11,11 +11,15 @@ pub mod cv;
 pub mod forest;
 pub mod gbdt;
 pub mod lasso;
+pub mod matrix;
 pub mod mlp;
+pub(crate) mod soa;
 pub mod tree;
 
 use crate::features::Standardizer;
 use crate::util::Json;
+
+pub use matrix::{FeatureMatrix, FeatureMatrixBuf};
 
 /// A trained regressor over standardized feature vectors.
 ///
@@ -25,8 +29,13 @@ use crate::util::Json;
 pub trait Regressor {
     fn predict_one(&self, x: &[f64]) -> f64;
 
-    fn predict(&self, xs: &[Vec<f64>]) -> Vec<f64> {
-        xs.iter().map(|x| self.predict_one(x)).collect()
+    /// Batch-predict over a borrowed [`FeatureMatrix`] — the one
+    /// batch-prediction primitive. The default walks rows through
+    /// [`predict_one`](Self::predict_one); the native models override it
+    /// with the vectorized SoA kernels (`predict::soa`), which are
+    /// bit-identical to that row loop.
+    fn predict(&self, xs: &FeatureMatrix<'_>) -> Vec<f64> {
+        xs.rows().map(|x| self.predict_one(x)).collect()
     }
 }
 
@@ -116,6 +125,15 @@ impl Regressor for NativeModel {
             NativeModel::Lasso(m) => m.predict_one(x),
             NativeModel::RandomForest(m) => m.predict_one(x),
             NativeModel::Gbdt(m) => m.predict_one(x),
+        }
+    }
+
+    fn predict(&self, xs: &FeatureMatrix<'_>) -> Vec<f64> {
+        // Dispatch to each model's vectorized override.
+        match self {
+            NativeModel::Lasso(m) => m.predict(xs),
+            NativeModel::RandomForest(m) => m.predict(xs),
+            NativeModel::Gbdt(m) => m.predict(xs),
         }
     }
 }

@@ -1,0 +1,473 @@
+//! Flat structure-of-arrays prediction kernels, evaluated breadth-first
+//! over whole feature matrices.
+//!
+//! The scalar paths (`Tree::predict_one` and friends) walk one row at a
+//! time through an enum arena — a chain of unpredictable branches per node.
+//! Here every ensemble is compiled once into parallel `feature` /
+//! `threshold` / `left` / `right` / `value` arrays and walked
+//! *level-synchronously*: all rows of a block advance one step per pass in
+//! a tight branch-free-bodied loop the compiler can autovectorize, and
+//! Lasso becomes a blocked GEMV over the dense feature arena. The scalar
+//! path remains the reference implementation; every kernel is proven
+//! bit-identical to it (same operations, same order — see the parity tests
+//! here and in `tests/vector_kernels.rs`).
+//!
+//! Layers above compile kernels once per trained model:
+//! `framework::ScenarioPredictor` and the engine both keep a per-bucket
+//! [`BucketKernel`] table next to their model table and evaluate whole
+//! lowered plans through [`eval_plan_grouped`].
+
+use crate::plan::LoweredGraph;
+use crate::predict::matrix::FeatureMatrix;
+use crate::predict::tree::Tree;
+use crate::predict::{BucketModel, NativeModel};
+
+/// Rows walked per level-synchronous pass. One block's worth of cursor
+/// state lives in a stack array, and its feature rows stay cache-resident
+/// across all trees of the ensemble.
+const BLOCK: usize = 64;
+
+/// A tree ensemble flattened into one structure-of-arrays node arena.
+///
+/// Unifies RF and GBDT accumulation: `out[r] = fold(init, += scale *
+/// leaf_t(r))`, divided by `divisor` at the end (RF: `init = 0, scale = 1,
+/// divisor = n_trees`; GBDT: `init = f0, scale = learning_rate, divisor =
+/// 1`). `scale = 1` multiplies and `divisor = 1` skips the division, so
+/// both specializations are bit-identical to their scalar formulas.
+pub(crate) struct EnsembleKernel {
+    feature: Vec<u32>,
+    threshold: Vec<f64>,
+    left: Vec<u32>,
+    right: Vec<u32>,
+    value: Vec<f64>,
+    /// Absolute root index per tree, in accumulation order.
+    roots: Vec<u32>,
+    init: f64,
+    scale: f64,
+    divisor: f64,
+    /// Minimum row width any split can index (`max_feature_index + 1`).
+    min_width: usize,
+}
+
+impl EnsembleKernel {
+    pub(crate) fn from_trees(trees: &[Tree], init: f64, scale: f64, divisor: f64) -> EnsembleKernel {
+        let total: usize = trees.iter().map(Tree::node_count).sum();
+        let mut k = EnsembleKernel {
+            feature: Vec::with_capacity(total),
+            threshold: Vec::with_capacity(total),
+            left: Vec::with_capacity(total),
+            right: Vec::with_capacity(total),
+            value: Vec::with_capacity(total),
+            roots: Vec::with_capacity(trees.len()),
+            init,
+            scale,
+            divisor,
+            min_width: trees
+                .iter()
+                .filter_map(Tree::max_feature_index)
+                .max()
+                .map_or(0, |f| f + 1),
+        };
+        for t in trees {
+            let root =
+                t.flatten_into(&mut k.feature, &mut k.threshold, &mut k.left, &mut k.right, &mut k.value);
+            k.roots.push(root);
+        }
+        k
+    }
+
+    pub(crate) fn min_width(&self) -> usize {
+        self.min_width
+    }
+
+    /// Evaluate all rows of a dense `width`-wide matrix into `out`
+    /// (`out.len()` rows). Requires `width >= max(min_width, 1)` — leaves
+    /// unconditionally read feature 0 (comparing against their `+inf`
+    /// threshold), so even a leaf-only ensemble needs one column.
+    pub(crate) fn predict_into(&self, values: &[f64], width: usize, out: &mut [f64]) {
+        let n = out.len();
+        assert_eq!(values.len(), n * width, "arena/row-count mismatch");
+        assert!(n == 0 || width >= self.min_width.max(1), "matrix narrower than the ensemble");
+        out.fill(self.init);
+        let mut start = 0;
+        while start < n {
+            let bn = (n - start).min(BLOCK);
+            let rows = &values[start * width..(start + bn) * width];
+            for &root in &self.roots {
+                let mut cur = [root; BLOCK];
+                // Level-synchronous descent: every pass advances each row
+                // one node. A row on a split strictly decreases its index
+                // (children precede parents); a row parked on a leaf
+                // self-loops and stops counting as moved, so the walk ends
+                // after at most depth+1 passes.
+                loop {
+                    let mut moved = 0usize;
+                    for r in 0..bn {
+                        let i = cur[r] as usize;
+                        let x = rows[r * width + self.feature[i] as usize];
+                        let next = if x <= self.threshold[i] { self.left[i] } else { self.right[i] };
+                        moved += (next != cur[r]) as usize;
+                        cur[r] = next;
+                    }
+                    if moved == 0 {
+                        break;
+                    }
+                }
+                for r in 0..bn {
+                    out[start + r] += self.scale * self.value[cur[r] as usize];
+                }
+            }
+            start += bn;
+        }
+        if self.divisor != 1.0 {
+            for v in out.iter_mut() {
+                *v /= self.divisor;
+            }
+        }
+    }
+}
+
+/// Blocked GEMV: `out[r] = intercept + dot(weights, row_r)` over a dense
+/// `width`-wide matrix, four rows per pass so the dot products run as
+/// independent accumulator streams. Uses the first `min(weights.len(),
+/// width)` columns — the same truncation as the scalar `zip` in
+/// `Lasso::predict_one`, and per-row accumulation order is identical, so
+/// results are bit-identical.
+pub(crate) fn lasso_gemv(weights: &[f64], intercept: f64, values: &[f64], width: usize, out: &mut [f64]) {
+    let n = out.len();
+    assert_eq!(values.len(), n * width, "arena/row-count mismatch");
+    let w = &weights[..weights.len().min(width)];
+    let mut r = 0;
+    while r + 4 <= n {
+        let base = r * width;
+        let (mut a0, mut a1, mut a2, mut a3) = (0.0f64, 0.0f64, 0.0f64, 0.0f64);
+        for (j, &wj) in w.iter().enumerate() {
+            a0 += wj * values[base + j];
+            a1 += wj * values[base + width + j];
+            a2 += wj * values[base + 2 * width + j];
+            a3 += wj * values[base + 3 * width + j];
+        }
+        out[r] = intercept + a0;
+        out[r + 1] = intercept + a1;
+        out[r + 2] = intercept + a2;
+        out[r + 3] = intercept + a3;
+        r += 4;
+    }
+    while r < n {
+        let base = r * width;
+        let mut acc = 0.0f64;
+        for (j, &wj) in w.iter().enumerate() {
+            acc += wj * values[base + j];
+        }
+        out[r] = intercept + acc;
+        r += 1;
+    }
+}
+
+/// Matrix-predict helper for the ensemble `Regressor::predict` overrides:
+/// compile once per call, run the kernel over a uniform-width matrix, and
+/// fall back to the scalar row loop for ragged or too-narrow views
+/// (preserving the scalar path's semantics, including its panics on rows
+/// shorter than a split's feature index). Hot paths that predict the same
+/// model repeatedly should cache a [`BucketKernel`] instead.
+pub(crate) fn ensemble_predict_matrix(
+    k: &EnsembleKernel,
+    xs: &FeatureMatrix<'_>,
+    scalar: impl Fn(&[f64]) -> f64,
+) -> Vec<f64> {
+    match xs.uniform_width() {
+        Some(w) if w >= k.min_width().max(1) => {
+            let mut out = vec![0.0; xs.len()];
+            k.predict_into(xs.values(), w, &mut out);
+            out
+        }
+        _ => xs.rows().map(scalar).collect(),
+    }
+}
+
+/// A native model compiled to its vectorized form.
+pub(crate) enum SoaKernel {
+    Lasso { weights: Vec<f64>, intercept: f64 },
+    Ensemble(EnsembleKernel),
+}
+
+impl SoaKernel {
+    pub(crate) fn compile(m: &NativeModel) -> SoaKernel {
+        match m {
+            NativeModel::Lasso(l) => {
+                SoaKernel::Lasso { weights: l.weights.clone(), intercept: l.intercept }
+            }
+            NativeModel::RandomForest(f) => SoaKernel::Ensemble(EnsembleKernel::from_trees(
+                &f.trees,
+                0.0,
+                1.0,
+                f.trees.len() as f64,
+            )),
+            NativeModel::Gbdt(g) => SoaKernel::Ensemble(EnsembleKernel::from_trees(
+                &g.trees,
+                g.init,
+                g.params.learning_rate,
+                1.0,
+            )),
+        }
+    }
+
+    /// Narrowest row this kernel can evaluate without falling back.
+    pub(crate) fn min_width(&self) -> usize {
+        match self {
+            // GEMV truncates like the scalar zip, so any width works.
+            SoaKernel::Lasso { .. } => 0,
+            SoaKernel::Ensemble(k) => k.min_width(),
+        }
+    }
+
+    pub(crate) fn predict_into(&self, values: &[f64], width: usize, out: &mut [f64]) {
+        match self {
+            SoaKernel::Lasso { weights, intercept } => {
+                lasso_gemv(weights, *intercept, values, width, out)
+            }
+            SoaKernel::Ensemble(k) => k.predict_into(values, width, out),
+        }
+    }
+}
+
+/// A [`BucketModel`] compiled for matrix evaluation: standardizer
+/// parameters + SoA kernel + prediction floor. Compiled once at predictor
+/// construction and reused for every plan.
+pub(crate) struct BucketKernel {
+    mean: Vec<f64>,
+    std: Vec<f64>,
+    floor: f64,
+    kernel: SoaKernel,
+}
+
+impl BucketKernel {
+    pub(crate) fn compile(m: &BucketModel) -> BucketKernel {
+        BucketKernel {
+            mean: m.standardizer.mean.clone(),
+            std: m.standardizer.std.clone(),
+            floor: m.floor,
+            kernel: SoaKernel::compile(&m.model),
+        }
+    }
+
+    /// Feature width the model was trained on (standardized row length).
+    pub(crate) fn dim(&self) -> usize {
+        self.mean.len()
+    }
+
+    fn usable(&self) -> bool {
+        // Trained models always satisfy this (bundle loading validates
+        // max_feature_index < dim); the guard keeps a corrupted table on
+        // the scalar path instead of asserting in the kernel.
+        let d = self.dim();
+        d > 0 && d >= self.kernel.min_width()
+    }
+}
+
+/// Evaluate every unit of a lowered plan, vectorized per bucket.
+///
+/// Units are grouped by bucket (counting sort, execution order preserved
+/// within a group), each group's rows standardized into one dense matrix,
+/// run through the bucket's [`BucketKernel`], floor-clamped, and scattered
+/// back to execution order. Units without a kernel — no trained model,
+/// engine-external (MLP) models, or rows narrower than the model's feature
+/// dim (mixed-width conv buckets) — go through `scalar_eval`, which
+/// returns `None` to mean "no model: charge `fallback_ms`".
+///
+/// Returns the per-unit latencies in execution order plus the number of
+/// fallback units. Bit-identical to the scalar reference loop: the
+/// standardization arithmetic, kernel accumulation order, and `max(floor)`
+/// clamp all match `BucketModel::predict_raw_with` operation for
+/// operation.
+pub(crate) fn eval_plan_grouped<F>(
+    p: &LoweredGraph,
+    kernels: &[Option<BucketKernel>],
+    fallback_ms: f64,
+    mut scalar_eval: F,
+) -> (Vec<f64>, usize)
+where
+    F: FnMut(usize, &[f64], &mut Vec<f64>) -> Option<f64>,
+{
+    let n = p.len();
+    let mut out = vec![0.0f64; n];
+    let mut fallback = 0usize;
+    let mut scratch: Vec<f64> = Vec::new();
+    let nb = kernels.len();
+    let kernel_ok = |bi: usize, row: &[f64]| match kernels.get(bi) {
+        Some(Some(k)) => k.usable() && row.len() >= k.dim(),
+        _ => false,
+    };
+    // Pass 1: count kernel-eligible units per bucket; everything else is
+    // evaluated scalar in place.
+    let mut counts = vec![0u32; nb];
+    for (b, row) in p.iter() {
+        if kernel_ok(b.index(), row) {
+            counts[b.index()] += 1;
+        }
+    }
+    let mut starts = vec![0u32; nb + 1];
+    for b in 0..nb {
+        starts[b + 1] = starts[b] + counts[b];
+    }
+    let mut order = vec![0u32; starts[nb] as usize];
+    let mut cursor: Vec<u32> = starts[..nb].to_vec();
+    for (i, (b, row)) in p.iter().enumerate() {
+        if kernel_ok(b.index(), row) {
+            order[cursor[b.index()] as usize] = i as u32;
+            cursor[b.index()] += 1;
+        } else {
+            match scalar_eval(b.index(), row, &mut scratch) {
+                Some(v) => out[i] = v,
+                None => {
+                    out[i] = fallback_ms;
+                    fallback += 1;
+                }
+            }
+        }
+    }
+    // Pass 2: one standardized dense matrix + one kernel launch per bucket.
+    let mut mat: Vec<f64> = Vec::new();
+    let mut vals: Vec<f64> = Vec::new();
+    for b in 0..nb {
+        let (lo, hi) = (starts[b] as usize, starts[b + 1] as usize);
+        if lo == hi {
+            continue;
+        }
+        let k = kernels[b].as_ref().expect("counted bucket has a kernel");
+        let d = k.dim();
+        let rows = &order[lo..hi];
+        mat.clear();
+        mat.reserve(rows.len() * d);
+        for &i in rows {
+            let row = p.row(i as usize);
+            for j in 0..d {
+                mat.push((row[j] - k.mean[j]) / k.std[j]);
+            }
+        }
+        vals.clear();
+        vals.resize(rows.len(), 0.0);
+        k.kernel.predict_into(&mat, d, &mut vals);
+        for (&i, &v) in rows.iter().zip(vals.iter()) {
+            out[i as usize] = v.max(k.floor);
+        }
+    }
+    (out, fallback)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::predict::tree::TreeParams;
+    use crate::predict::{toy_problem, Method};
+    use crate::util::Rng;
+
+    fn random_rows(rng: &mut Rng, n: usize, d: usize) -> Vec<Vec<f64>> {
+        (0..n).map(|_| (0..d).map(|_| rng.range_f64(-3.0, 3.0)).collect()).collect()
+    }
+
+    fn flatten(rows: &[Vec<f64>]) -> Vec<f64> {
+        rows.iter().flat_map(|r| r.iter().copied()).collect()
+    }
+
+    #[test]
+    fn ensemble_kernel_bit_identical_across_depths() {
+        // Adversarial depths: stumps, shallow, and fully-grown deep trees,
+        // with a row count that straddles block boundaries (2*64 + 7).
+        for &max_depth in &[1usize, 2, 4, 24] {
+            let (x, y) = toy_problem(220, max_depth as u64 + 1);
+            let trees: Vec<Tree> = (0..5)
+                .map(|t| {
+                    let p = TreeParams { max_depth, max_features: Some(2), ..Default::default() };
+                    Tree::fit(&x, &y, None, p, t)
+                })
+                .collect();
+            assert!(trees.iter().all(|t| t.depth() <= max_depth));
+            let k = EnsembleKernel::from_trees(&trees, 0.25, 0.5, 3.0);
+            let mut rng = Rng::new(max_depth as u64);
+            let rows = random_rows(&mut rng, 135, 3);
+            let mut out = vec![0.0; rows.len()];
+            k.predict_into(&flatten(&rows), 3, &mut out);
+            for (row, got) in rows.iter().zip(&out) {
+                let mut want = 0.25;
+                for t in &trees {
+                    want += 0.5 * t.predict_one(row);
+                }
+                want /= 3.0;
+                assert_eq!(got.to_bits(), want.to_bits());
+            }
+        }
+    }
+
+    #[test]
+    fn single_leaf_tree_kernel() {
+        let x: Vec<Vec<f64>> = (0..20).map(|i| vec![i as f64]).collect();
+        let y = vec![7.0; 20];
+        let t = Tree::fit(&x, &y, None, TreeParams::default(), 0);
+        assert_eq!(t.node_count(), 1);
+        assert_eq!(t.depth(), 0);
+        let k = EnsembleKernel::from_trees(std::slice::from_ref(&t), 0.0, 1.0, 1.0);
+        assert_eq!(k.min_width(), 0);
+        let vals = [0.5, -2.0, 9.0];
+        let mut out = vec![0.0; 3];
+        k.predict_into(&vals, 1, &mut out);
+        for (v, got) in vals.iter().zip(&out) {
+            assert_eq!(got.to_bits(), t.predict_one(&[*v]).to_bits());
+        }
+    }
+
+    #[test]
+    fn flattened_arenas_are_nan_free_with_leaf_self_loops() {
+        let (x, y) = toy_problem(300, 9);
+        let t = Tree::fit(&x, &y, None, TreeParams::default(), 2);
+        let k = EnsembleKernel::from_trees(std::slice::from_ref(&t), 0.0, 1.0, 1.0);
+        assert_eq!(k.threshold.len(), t.node_count());
+        for i in 0..k.threshold.len() {
+            assert!(!k.threshold[i].is_nan());
+            let is_leaf = k.left[i] == i as u32 && k.right[i] == i as u32;
+            if is_leaf {
+                assert_eq!(k.threshold[i], f64::INFINITY);
+            } else {
+                // Splits point strictly downward and carry finite thresholds.
+                assert!(k.threshold[i].is_finite());
+                assert!((k.left[i] as usize) < i && (k.right[i] as usize) < i);
+                assert!((k.feature[i] as usize) < k.min_width());
+            }
+        }
+    }
+
+    #[test]
+    fn lasso_gemv_bit_identical_with_truncation() {
+        use crate::predict::lasso::Lasso;
+        let l = Lasso { weights: vec![0.7, -1.3, 2.1], intercept: 0.4, alpha: 0.0 };
+        let mut rng = Rng::new(11);
+        // Wider rows than weights (extra cols ignored) and narrower rows
+        // (dot truncated) — both must match the scalar zip exactly.
+        for &w in &[5usize, 3, 2] {
+            let rows = random_rows(&mut rng, 9, w);
+            let mut out = vec![0.0; rows.len()];
+            lasso_gemv(&l.weights, l.intercept, &flatten(&rows), w, &mut out);
+            for (row, got) in rows.iter().zip(&out) {
+                assert_eq!(got.to_bits(), l.predict_one(row).to_bits());
+            }
+        }
+    }
+
+    #[test]
+    fn compiled_native_kernels_match_predict_one() {
+        use crate::predict::Regressor;
+        let (x, y) = toy_problem(250, 17);
+        let mut rng = Rng::new(5);
+        let rows = random_rows(&mut rng, 70, 3);
+        let flat = flatten(&rows);
+        for m in Method::native() {
+            let bm = BucketModel::train_native(*m, &x, &y, 3);
+            let k = SoaKernel::compile(&bm.model);
+            let mut out = vec![0.0; rows.len()];
+            k.predict_into(&flat, 3, &mut out);
+            for (row, got) in rows.iter().zip(&out) {
+                assert_eq!(got.to_bits(), bm.model.predict_one(row).to_bits(), "{}", m.name());
+            }
+        }
+    }
+}

@@ -237,6 +237,59 @@ impl Tree {
             .max()
     }
 
+    /// Longest root-to-leaf path length (0 for a single-leaf tree).
+    pub fn depth(&self) -> usize {
+        // Children precede parents in the arena, so one ascending pass
+        // resolves every subtree height before its parent needs it.
+        let mut h = vec![0usize; self.nodes.len()];
+        for (i, n) in self.nodes.iter().enumerate() {
+            if let NodeKind::Split { left, right, .. } = n {
+                h[i] = 1 + h[*left].max(h[*right]);
+            }
+        }
+        h[self.nodes.len() - 1]
+    }
+
+    /// Append this tree's nodes to flat structure-of-arrays arenas (see
+    /// `predict::soa`) and return the absolute index of the root.
+    ///
+    /// Splits keep their `feature`/`threshold` and absolute child indices;
+    /// leaves are encoded as self-loops (`left == right == own index`) with
+    /// `threshold = +inf` so the level-synchronous walk can evaluate every
+    /// row unconditionally — a row parked on a leaf compares against +inf
+    /// and stays put. Within one tree, children still precede parents, so
+    /// any row not yet on a leaf strictly decreases its node index each
+    /// step and the walk terminates in at most `depth()` + 1 passes.
+    pub(crate) fn flatten_into(
+        &self,
+        feature: &mut Vec<u32>,
+        threshold: &mut Vec<f64>,
+        left: &mut Vec<u32>,
+        right: &mut Vec<u32>,
+        value: &mut Vec<f64>,
+    ) -> u32 {
+        let base = feature.len() as u32;
+        for (i, n) in self.nodes.iter().enumerate() {
+            match n {
+                NodeKind::Leaf { value: v } => {
+                    feature.push(0);
+                    threshold.push(f64::INFINITY);
+                    left.push(base + i as u32);
+                    right.push(base + i as u32);
+                    value.push(*v);
+                }
+                NodeKind::Split { feature: f, threshold: t, left: l, right: r } => {
+                    feature.push(*f as u32);
+                    threshold.push(*t);
+                    left.push(base + *l as u32);
+                    right.push(base + *r as u32);
+                    value.push(0.0);
+                }
+            }
+        }
+        base + (self.nodes.len() - 1) as u32
+    }
+
     /// Serialize the node arena for `engine::bundle`: each node is a compact
     /// array, `[0, value]` for leaves and `[1, feature, threshold, left,
     /// right]` for splits. f64 values round-trip bit-exactly through

@@ -305,13 +305,16 @@ pub fn fig17_conv_ranges(ctx: &mut ReportCtx) -> Vec<Table> {
         let profs = ctx.profiles(&sc, set).to_vec();
         let model = pred.model_named("Conv2D").expect("conv model");
         let mut per_bin: [(Vec<f64>, Vec<f64>); 3] = Default::default();
+        // One shared standardization scratch across every conv row instead
+        // of a fresh allocation per prediction.
+        let mut scratch = Vec::new();
         for p in &profs {
             for o in &p.ops {
                 if o.bucket == "Conv2D" {
                     let bi = (0..3)
                         .find(|&i| o.latency_ms >= bins[i] && o.latency_ms < bins[i + 1])
                         .unwrap();
-                    per_bin[bi].0.push(model.predict_raw(&o.features));
+                    per_bin[bi].0.push(model.predict_raw_with(&o.features, &mut scratch));
                     per_bin[bi].1.push(o.latency_ms);
                 }
             }

@@ -21,7 +21,14 @@ Fails on:
   micro-batching must actually coalesce (every flushed batch has >= 1
   item, so a mean below 1 means the accounting broke), and its tail
   latency must be a real measurement (the bench emits -1.0 in place of
-  non-finite values so a silent NaN cannot slip through JSON).
+  non-finite values so a silent NaN cannot slip through JSON);
+- a broken fleet stage (fleet.socs <= 0, non-positive or non-finite
+  fleet.scenarios_per_s / fleet.predictions_per_s, or
+  fleet.vectorized_speedup < 1): the sampled spec universe must register
+  and flow through the predictor, and the vectorized SoA kernels must not
+  be slower than the scalar per-row reference on the same standardized
+  matrices — below 1 the structure-of-arrays layout has regressed into
+  pure overhead.
 
 Both checks are ratios between two workloads timed back-to-back on the
 same machine, never absolute wall-clock thresholds, so they are robust to
@@ -42,6 +49,12 @@ MIN_BATCH_SPEEDUP = 0.5
 # single-core runner (where the honest ratio is ~1.0); on multi-core
 # runners it is well above 1. Below this, the sweep pool itself regressed.
 MIN_SWEEP_SPEEDUP = 0.8
+
+# The vectorized SoA kernels vs the scalar per-row reference on identical
+# standardized matrices, single-threaded in one process. Unlike the pool
+# ratios there is no runner-topology excuse here: breadth-first evaluation
+# over a dense matrix must never lose to walking the same trees row by row.
+MIN_VECTORIZED_SPEEDUP = 1.0
 
 
 def fail(msg: str) -> int:
@@ -143,6 +156,29 @@ def main() -> int:
     ):
         return fail(f"serve plan_cache_hit_rate must be in [0, 1], got {serve_hit!r}")
 
+    fleet = derived.get("fleet")
+    if not isinstance(fleet, dict):
+        return fail(f"missing derived.fleet section in {path}")
+    fleet_socs = fleet.get("socs")
+    if not isinstance(fleet_socs, (int, float)) or not fleet_socs > 0:
+        return fail(f"fleet stage reports no sampled SoCs ({fleet_socs!r})")
+    for key in ("scenarios_per_s", "predictions_per_s"):
+        v = fleet.get(key)
+        if not isinstance(v, (int, float)) or not math.isfinite(v) or v <= 0:
+            return fail(f"fleet {key} must be a finite positive rate, got {v!r}")
+    vec_speedup = fleet.get("vectorized_speedup")
+    if (
+        not isinstance(vec_speedup, (int, float))
+        or not math.isfinite(vec_speedup)
+        or vec_speedup <= 0
+    ):
+        return fail(f"fleet vectorized_speedup must be > 0, got {vec_speedup!r}")
+    if vec_speedup < MIN_VECTORIZED_SPEEDUP:
+        return fail(
+            f"vectorized kernels are {1.0 / vec_speedup:.2f}x slower than the "
+            f"scalar reference (required: >= {MIN_VECTORIZED_SPEEDUP:.1f}x)"
+        )
+
     lowering = derived.get("lowering", {})
     graphs_per_s = lowering.get("graphs_per_s")
     lowering_txt = (
@@ -158,6 +194,10 @@ def main() -> int:
         f"sweep_parallel_speedup={sweep:.2f}x "
         f"(threshold {MIN_SWEEP_SPEEDUP}), "
         f"lowering={lowering_txt}, "
+        f"fleet={fleet_socs:.0f} SoCs "
+        f"({fleet.get('predictions_per_s'):.0f} predictions/s, "
+        f"vectorized_speedup={vec_speedup:.2f}x, "
+        f"threshold {MIN_VECTORIZED_SPEEDUP}), "
         f"search={cps:.0f} candidates/s "
         f"(plan-cache hit rate {hit_rate:.2f}), "
         f"serve={rps:.0f} req/s "

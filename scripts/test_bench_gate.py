@@ -1,0 +1,148 @@
+#!/usr/bin/env python3
+"""Fixture smoke test for bench_gate.py — run by CI before the real gate.
+
+Builds synthetic BENCH_pipeline.json documents in a temp dir and asserts
+the gate's verdict on each: a healthy artifact passes, and each class of
+regression the gate documents (slow batch predict, missing fleet section,
+sub-1x vectorized speedup, dead throughput) fails with exit code 1. This
+keeps the gate itself honest: a refactor that silently stops checking a
+section shows up here, not as a green CI on a broken bench.
+
+Usage: test_bench_gate.py
+"""
+
+import copy
+import json
+import os
+import subprocess
+import sys
+import tempfile
+
+GATE = os.path.join(os.path.dirname(os.path.abspath(__file__)), "bench_gate.py")
+
+HEALTHY = {
+    "format": "edgelat.bench",
+    "version": 1,
+    "profile": "quick",
+    "threads": 4,
+    "benches": [],
+    "derived": {
+        "registry": {"scenarios": 72, "socs": 4, "builds_per_s": 500.0},
+        "batch_predict_speedup": 2.4,
+        "plan_predict_speedup": 3.1,
+        "sweep_parallel_speedup": 1.9,
+        "fleet": {
+            "socs": 100,
+            "scenarios": 700,
+            "graphs": 2,
+            "unit_rows": 40000,
+            "scenarios_per_s": 900.0,
+            "predictions_per_s": 2.5e6,
+            "vectorized_speedup": 1.8,
+        },
+        "lowering": {
+            "graphs_per_s": 4000.0,
+            "units_per_s": 260000.0,
+            "units_per_graph": 65.0,
+        },
+        "search": {
+            "candidates_per_s": 800.0,
+            "evaluated": 40,
+            "plan_cache_hit_rate": 0.4,
+        },
+        "serve": {
+            "requests_per_s": 500.0,
+            "p50_us": 900.0,
+            "p99_us": 4000.0,
+            "mean_batch": 2.5,
+            "plan_cache_hit_rate": 0.6,
+            "sent": 200,
+            "ok": 200,
+            "errors": 0,
+        },
+        "plan_cache": {"hits": 100, "misses": 20, "evictions": 0, "shards": 8},
+    },
+}
+
+
+def run_gate(doc: dict, tmp: str, name: str) -> int:
+    path = os.path.join(tmp, name)
+    with open(path, "w") as f:
+        json.dump(doc, f)
+    proc = subprocess.run(
+        [sys.executable, GATE, path],
+        stdout=subprocess.PIPE,
+        stderr=subprocess.STDOUT,
+        text=True,
+    )
+    print(f"  [{name}] rc={proc.returncode}: {proc.stdout.strip().splitlines()[-1]}")
+    return proc.returncode
+
+
+def mutate(edit):
+    doc = copy.deepcopy(HEALTHY)
+    edit(doc)
+    return doc
+
+
+def main() -> int:
+    cases = [
+        ("healthy artifact passes", HEALTHY, 0),
+        (
+            "slow batch predict fails",
+            mutate(lambda d: d["derived"].__setitem__("batch_predict_speedup", 0.3)),
+            1,
+        ),
+        (
+            "missing fleet section fails",
+            mutate(lambda d: d["derived"].pop("fleet")),
+            1,
+        ),
+        (
+            "sub-1x vectorized speedup fails",
+            mutate(lambda d: d["derived"]["fleet"].__setitem__("vectorized_speedup", 0.8)),
+            1,
+        ),
+        (
+            "non-finite vectorized speedup fails",
+            mutate(lambda d: d["derived"]["fleet"].__setitem__("vectorized_speedup", -1.0)),
+            1,
+        ),
+        (
+            "dead fleet throughput fails",
+            mutate(lambda d: d["derived"]["fleet"].__setitem__("predictions_per_s", 0.0)),
+            1,
+        ),
+        (
+            "no sampled SoCs fails",
+            mutate(lambda d: d["derived"]["fleet"].__setitem__("socs", 0)),
+            1,
+        ),
+        (
+            "empty registry fails",
+            mutate(lambda d: d["derived"]["registry"].__setitem__("scenarios", 0)),
+            1,
+        ),
+        (
+            "dead serve daemon fails",
+            mutate(lambda d: d["derived"]["serve"].__setitem__("requests_per_s", -1.0)),
+            1,
+        ),
+    ]
+    failures = 0
+    with tempfile.TemporaryDirectory() as tmp:
+        for i, (label, doc, want) in enumerate(cases):
+            print(f"case: {label}")
+            got = run_gate(doc, tmp, f"fixture_{i}.json")
+            if got != want:
+                print(f"  MISMATCH: expected rc={want}, got rc={got}", file=sys.stderr)
+                failures += 1
+    if failures:
+        print(f"FAIL: {failures} gate fixture case(s) misbehaved", file=sys.stderr)
+        return 1
+    print(f"OK: {len(cases)} gate fixture cases behaved as expected")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
