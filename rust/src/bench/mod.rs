@@ -4,7 +4,10 @@
 //! Times the pipeline stages the worker-pool and plan-IR subsystems
 //! accelerate: kernel deduction (string-keyed reference vs `plan::lower`
 //! into the dense IR), one-time predictor training, single-predict,
-//! engine `predict_batch`, predict-over-plan, parallel scenario-sweep
+//! engine `predict_batch`, predict-over-plan, cold bundle loads (JSON
+//! parse vs the zero-copy binary decode of the same models), the
+//! compiled LUT tier vs the SoA model scan on identical plan rows
+//! (with the measured interpolation error), parallel scenario-sweep
 //! profiling, a fleet stage that samples hundreds of synthetic SoC specs
 //! (`device::sample_specs`) and drives the vectorized SoA predictor
 //! kernels over every resulting scenario (scenarios/s, predictions/s, and
@@ -27,6 +30,7 @@ use crate::exec_pool::ExecPool;
 use crate::framework::{deduce_units, DeductionMode, ScenarioPredictor};
 use crate::graph::Graph;
 use crate::plan::{self, LoweredGraph};
+use crate::predict::lut::LutSpec;
 use crate::predict::{FeatureMatrix, Method, NativeModel, Regressor};
 use crate::profiler::profile_set_with;
 use crate::scenario::{Registry, Scenario};
@@ -245,6 +249,64 @@ pub fn run(cfg: &BenchConfig) -> Json {
     });
     bench_line(&mut samples, plan_scan.clone());
     let plan_scan_speedup = single.mean_s / plan_scan.mean_s.max(1e-12);
+
+    // --- Bundle load: the trained bundle persisted as JSON and as the
+    // zero-copy binary format, then cold-loaded from disk back to back.
+    // Both sides read + validate the same model arenas; the ratio
+    // isolates text parsing vs the sectioned binary decode and the CI
+    // gate requires the binary side to be no slower (speedup >= 1).
+    let bundle_dir =
+        std::env::temp_dir().join(format!("edgelat_bench_bundle_{}", std::process::id()));
+    std::fs::create_dir_all(&bundle_dir).expect("mkdir bench bundle dir");
+    let json_path = bundle_dir.join("cpu.json");
+    let bin_path = bundle_dir.join("cpu.bin");
+    let persisted = PredictorBundle::from_predictor(&pred).expect("native bundle");
+    persisted.save(&json_path).expect("save json bundle");
+    persisted.save_bin(&bin_path).expect("save binary bundle");
+    let load_iters = (cfg.iters * 8).max(8);
+    let load_json = time_named("bundle/load json", load_iters, || {
+        black_box(PredictorBundle::load(&json_path).expect("json bundle loads"));
+    });
+    bench_line(&mut samples, load_json.clone());
+    let load_bin = time_named("bundle/load binary", load_iters, || {
+        black_box(PredictorBundle::load_bin(&bin_path).expect("binary bundle loads"));
+    });
+    bench_line(&mut samples, load_bin.clone());
+    let _ = std::fs::remove_dir_all(&bundle_dir);
+    let bundle_load_speedup = load_json.min_s / load_bin.min_s.max(1e-12);
+
+    // --- Compiled LUT tier: per-bucket lookup tables compiled over the
+    // benched plans themselves, then the same plan rows predicted through
+    // the table probe vs the SoA model scan. Calibrating on the benched
+    // plans keeps every row in-grid, so the measured error is the
+    // interpolation error the compiler already verified against the
+    // spec's bound (buckets exceeding it fall back and never serve).
+    let lut_spec = LutSpec::default();
+    let plan_refs: Vec<&LoweredGraph> = plans.iter().collect();
+    let lut_pack = pred.compile_lut(&lut_spec, &plan_refs);
+    let lut_rows: usize = plans.iter().map(|pl| pl.len()).sum();
+    let lut_soa = time_named("lut/soa model scan", cfg.iters, || {
+        for pl in &plans {
+            black_box(pred.predict_plan_rows(pl));
+        }
+    });
+    bench_line(&mut samples, lut_soa.clone());
+    let lut_fast = time_named("lut/table probe", cfg.iters, || {
+        for pl in &plans {
+            black_box(pred.predict_plan_rows_lut(pl, Some(&lut_pack)));
+        }
+    });
+    bench_line(&mut samples, lut_fast.clone());
+    let lut_vs_soa_speedup = lut_soa.min_s / lut_fast.min_s.max(1e-12);
+    let lut_predictions_per_s = lut_rows as f64 / lut_fast.mean_s.max(1e-12);
+    let mut lut_max_rel_err = 0.0f64;
+    for pl in &plans {
+        let base = pred.predict_plan_rows(pl);
+        let fast = pred.predict_plan_rows_lut(pl, Some(&lut_pack));
+        for (a, b) in base.iter().zip(fast.iter()) {
+            lut_max_rel_err = lut_max_rel_err.max((a - b).abs() / a.abs().max(1e-9));
+        }
+    }
 
     // --- Scenario-sweep throughput: profiling K scenarios one at a time
     // vs fanned out on the pool (the report prefetch pattern).
@@ -467,6 +529,31 @@ pub fn run(cfg: &BenchConfig) -> Json {
                 ("plan_predict_speedup", Json::num(plan_scan_speedup)),
                 ("sweep_parallel_speedup", Json::num(sweep_speedup)),
                 (
+                    // Cold bundle loads from disk: the binary decode must
+                    // beat the JSON parse (the gate fails on speedup < 1).
+                    "bundle_load",
+                    Json::obj(vec![
+                        ("json_ms", Json::num(fin(load_json.min_s * 1e3))),
+                        ("bin_ms", Json::num(fin(load_bin.min_s * 1e3))),
+                        ("speedup", Json::num(fin(bundle_load_speedup))),
+                    ]),
+                ),
+                (
+                    // The compiled LUT tier vs the SoA scan on identical
+                    // plan rows. The gate fails on a table probe slower
+                    // than the model scan or a measured error above the
+                    // compile-time bound.
+                    "lut",
+                    Json::obj(vec![
+                        ("tables", Json::num(lut_pack.coverage() as f64)),
+                        ("table_entries", Json::num(lut_pack.table_entries() as f64)),
+                        ("predictions_per_s", Json::num(fin(lut_predictions_per_s))),
+                        ("lut_vs_soa_speedup", Json::num(fin(lut_vs_soa_speedup))),
+                        ("max_rel_err", Json::num(fin(lut_max_rel_err))),
+                        ("bound", Json::num(lut_spec.max_rel_err)),
+                    ]),
+                ),
+                (
                     // The fleet stage over the sampled spec universe: the
                     // CI gate fails on non-positive throughput or a
                     // vectorized/scalar ratio below 1.
@@ -590,6 +677,28 @@ mod tests {
         assert!(speedup.is_finite() && speedup > 0.0, "speedup={speedup}");
         assert!(derived.req_f64("plan_predict_speedup").unwrap().is_finite());
         assert!(derived.req_f64("sweep_parallel_speedup").unwrap().is_finite());
+        // The bundle-load stage: both cold loads are live measurements and
+        // the ratio is a real finite number. The >= 1 bar is the CI
+        // gate's business at CI scale.
+        let bundle_load = derived.req("bundle_load").unwrap();
+        assert!(bundle_load.req_f64("json_ms").unwrap() > 0.0);
+        assert!(bundle_load.req_f64("bin_ms").unwrap() > 0.0);
+        let bl = bundle_load.req_f64("speedup").unwrap();
+        assert!(bl.is_finite() && bl > 0.0, "bundle_load speedup={bl}");
+        assert!(benches.iter().any(|b| b.req_str("name").unwrap().starts_with("bundle/")));
+        // The LUT stage: tables actually compiled, rows flowed through the
+        // probe, and the measured error respects the compile-time bound
+        // (buckets exceeding it must fall back, never serve bad numbers).
+        let lut = derived.req("lut").unwrap();
+        assert!(lut.req_usize("tables").unwrap() > 0, "no LUT tables compiled");
+        assert!(lut.req_usize("table_entries").unwrap() > 0);
+        assert!(lut.req_f64("predictions_per_s").unwrap() > 0.0);
+        let ls = lut.req_f64("lut_vs_soa_speedup").unwrap();
+        assert!(ls.is_finite() && ls > 0.0, "lut_vs_soa_speedup={ls}");
+        let err = lut.req_f64("max_rel_err").unwrap();
+        let bound = lut.req_f64("bound").unwrap();
+        assert!(err.is_finite() && err >= 0.0 && err <= bound, "max_rel_err={err} bound={bound}");
+        assert!(benches.iter().any(|b| b.req_str("name").unwrap().starts_with("lut/")));
         // The fleet stage: the sampled universe registered, real unit rows
         // flowed through the kernels, and both throughputs are live
         // measurements. The >= 1 speedup bar is the CI gate's business at

@@ -1,0 +1,985 @@
+//! The compact binary serialization of a [`PredictorBundle`] — a
+//! load-time fast path next to the JSON interchange format.
+//!
+//! JSON stays the golden format: human-diffable, versioned, and the one
+//! the goldens under `tests/data/` pin. The binary format is a lossless
+//! re-encoding of the same document for serving fleets that load many
+//! bundles at boot (or on hot reload): no text parsing, no per-number
+//! shortest-repr round-trip — floats are stored as raw little-endian
+//! IEEE-754 bits, so `decode(encode(b))` reproduces `b` **bit-exactly**
+//! and converting JSON → bin → JSON is the identity on the emitted text.
+//!
+//! Layout (all integers little-endian, sections 8-byte aligned, zero
+//! padding between them):
+//!
+//! ```text
+//! 0    magic "EDGELATB"                              8 bytes
+//! 8    version u32  | method u32 | mode u32          (codes, see below)
+//! 20   n_strings u32 | n_models u32 | reserved u32
+//! 32   t_overhead_ms f64 | fallback_ms f64
+//! 48   strings_off u64 | strings_len u64
+//! 64   desc_off u64    | desc_len u64
+//! 80   models_off u64  | models_len u64
+//! 96   total_len u64
+//! 104  strings:  n_strings u32 byte-lengths, pad8, concatenated UTF-8
+//!      desc:     UTF-8 JSON {device, scenario, target} (the v3 bundle
+//!                descriptor — binary bundles are self-describing too)
+//!      models:   n_models records, bucket-name (BTreeMap) order
+//! ```
+//!
+//! Each model record: `name_idx u32, kind u32, dim u32, aux u32`,
+//! `floor f64`, `mean[dim] f64`, `std[dim] f64`, then the payload —
+//! Lasso (`aux == dim`): `intercept f64, alpha f64, weights[dim] f64`;
+//! RF: `n_trees u32, min_samples_split u32` + tree arenas; GBDT:
+//! `init f64, learning_rate f64, n_stages u32, min_samples_split u32,
+//! max_depth u32` + tree arenas. Tree arenas are the exact flat SoA
+//! layout `predict::soa` evaluates (`Tree::flatten_into`): `tree_count
+//! u32, node_count u32, pad8, roots[] u32 pad8, feature[] u32 pad8,
+//! left[] u32 pad8, right[] u32 pad8, threshold[] f64, value[] f64`,
+//! rebuilt through `Tree::from_flat` which validates every structural
+//! invariant (leaf self-loops, +inf sentinels, children strictly before
+//! parents). The string table is the build's bucket interner in id
+//! order; models reference it by index and re-resolve by *name* against
+//! the reading build — same contract as the JSON `interner` array.
+//!
+//! Decoding is pure safe Rust over a bounds-checked cursor: a truncated,
+//! corrupted, or adversarially patched file produces a typed
+//! [`EngineError`], never a panic or an out-of-bounds read. Section
+//! offsets are not trusted — they must tile the file exactly in
+//! declared order with zero inter-section padding.
+
+use crate::device::{soc_from_json, soc_to_json};
+use crate::engine::bundle::{
+    scenario_from_descriptor, target_to_json, validate_bundle_scenario,
+};
+use crate::engine::{resolve_bundle_bucket, EngineError, PredictorBundle};
+use crate::features::Standardizer;
+use crate::framework::DeductionMode;
+use crate::plan;
+use crate::predict::forest::{ForestParams, RandomForest};
+use crate::predict::gbdt::{Gbdt, GbdtParams};
+use crate::predict::lasso::Lasso;
+use crate::predict::tree::Tree;
+use crate::predict::{BucketModel, Method, NativeModel};
+use crate::util::Json;
+use std::collections::BTreeMap;
+use std::path::Path;
+
+/// First 8 bytes of every binary bundle; `load_auto` sniffs this.
+pub const BIN_MAGIC: [u8; 8] = *b"EDGELATB";
+/// Binary schema version this build reads and writes.
+pub const BIN_VERSION: u32 = 1;
+
+const HEADER_LEN: usize = 104;
+/// Caps keep a corrupted header from driving huge allocations before
+/// the (cheap) bounds checks behind them would fail anyway.
+const MAX_STRINGS: u32 = 4096;
+const MAX_STRING_LEN: u32 = 1 << 20;
+const MAX_MODELS: u32 = 65_536;
+const MAX_DIM: u32 = 65_536;
+const MAX_TREE_NODES: u32 = 1 << 24;
+
+fn method_code(m: Method) -> Option<u32> {
+    match m {
+        Method::Lasso => Some(0),
+        Method::RandomForest => Some(1),
+        Method::Gbdt => Some(2),
+        Method::Mlp => None,
+    }
+}
+
+fn method_from_code(c: u32) -> Result<Method, String> {
+    match c {
+        0 => Ok(Method::Lasso),
+        1 => Ok(Method::RandomForest),
+        2 => Ok(Method::Gbdt),
+        other => Err(format!("unknown method code {other} (0=lasso, 1=rf, 2=gbdt)")),
+    }
+}
+
+fn mode_code(m: DeductionMode) -> u32 {
+    match m {
+        DeductionMode::Full => 0,
+        DeductionMode::NoFusion => 1,
+        DeductionMode::NoSelection => 2,
+    }
+}
+
+fn mode_from_code(c: u32) -> Result<DeductionMode, String> {
+    match c {
+        0 => Ok(DeductionMode::Full),
+        1 => Ok(DeductionMode::NoFusion),
+        2 => Ok(DeductionMode::NoSelection),
+        other => Err(format!(
+            "unknown deduction mode code {other} (0=full, 1=nofusion, 2=noselection)"
+        )),
+    }
+}
+
+fn align8(n: u64) -> Option<u64> {
+    n.checked_add(7).map(|v| v & !7)
+}
+
+// ---------------------------------------------------------------------------
+// Writer
+
+#[derive(Default)]
+struct BinWriter {
+    buf: Vec<u8>,
+}
+
+impl BinWriter {
+    fn u32(&mut self, v: u32) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+    fn u64(&mut self, v: u64) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+    fn f64(&mut self, v: f64) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+    fn bytes(&mut self, b: &[u8]) {
+        self.buf.extend_from_slice(b);
+    }
+    fn pad8(&mut self) {
+        while self.buf.len() % 8 != 0 {
+            self.buf.push(0);
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Reader: a bounds-checked cursor. Every read is `Result` — no slicing
+// outside `take`, no unchecked arithmetic.
+
+struct BinReader<'a> {
+    data: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> BinReader<'a> {
+    fn new(data: &'a [u8]) -> BinReader<'a> {
+        BinReader { data, pos: 0 }
+    }
+
+    fn take(&mut self, n: usize) -> Result<&'a [u8], String> {
+        let end = self
+            .pos
+            .checked_add(n)
+            .filter(|&e| e <= self.data.len())
+            .ok_or_else(|| format!("truncated: need {n} bytes at offset {}", self.pos))?;
+        let s = &self.data[self.pos..end];
+        self.pos = end;
+        Ok(s)
+    }
+
+    fn u32(&mut self) -> Result<u32, String> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().expect("4-byte slice")))
+    }
+
+    fn u64(&mut self) -> Result<u64, String> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().expect("8-byte slice")))
+    }
+
+    fn f64(&mut self) -> Result<f64, String> {
+        Ok(f64::from_le_bytes(self.take(8)?.try_into().expect("8-byte slice")))
+    }
+
+    fn u32s(&mut self, n: usize) -> Result<Vec<u32>, String> {
+        let raw = self.take(n.checked_mul(4).ok_or("u32 array length overflow")?)?;
+        Ok(raw.chunks_exact(4).map(|c| u32::from_le_bytes(c.try_into().expect("4"))).collect())
+    }
+
+    fn f64s(&mut self, n: usize) -> Result<Vec<f64>, String> {
+        let raw = self.take(n.checked_mul(8).ok_or("f64 array length overflow")?)?;
+        Ok(raw.chunks_exact(8).map(|c| f64::from_le_bytes(c.try_into().expect("8"))).collect())
+    }
+
+    /// Skip to the next 8-byte boundary, requiring zero padding — a
+    /// nonzero pad byte is corruption (and would break the byte-stable
+    /// `encode(decode(x)) == x` round-trip if tolerated).
+    fn pad8(&mut self) -> Result<(), String> {
+        while self.pos % 8 != 0 {
+            let b = self.take(1)?[0];
+            if b != 0 {
+                return Err(format!("nonzero padding byte at offset {}", self.pos - 1));
+            }
+        }
+        Ok(())
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Encode
+
+fn require_finite(v: f64, what: &str) -> Result<f64, String> {
+    if v.is_finite() {
+        Ok(v)
+    } else {
+        Err(format!("non-finite {what}"))
+    }
+}
+
+fn encode_trees(w: &mut BinWriter, trees: &[Tree]) -> Result<(), String> {
+    let mut feature: Vec<u32> = Vec::new();
+    let mut threshold: Vec<f64> = Vec::new();
+    let mut left: Vec<u32> = Vec::new();
+    let mut right: Vec<u32> = Vec::new();
+    let mut value: Vec<f64> = Vec::new();
+    let mut roots: Vec<u32> = Vec::with_capacity(trees.len());
+    for t in trees {
+        roots.push(t.flatten_into(&mut feature, &mut threshold, &mut left, &mut right, &mut value));
+    }
+    if trees.is_empty() {
+        return Err("no trees".into());
+    }
+    if feature.len() > MAX_TREE_NODES as usize || trees.len() > MAX_TREE_NODES as usize {
+        return Err(format!("tree ensemble too large ({} nodes)", feature.len()));
+    }
+    w.u32(trees.len() as u32);
+    w.u32(feature.len() as u32);
+    w.pad8();
+    for r in &roots {
+        w.u32(*r);
+    }
+    w.pad8();
+    for v in &feature {
+        w.u32(*v);
+    }
+    w.pad8();
+    for v in &left {
+        w.u32(*v);
+    }
+    w.pad8();
+    for v in &right {
+        w.u32(*v);
+    }
+    w.pad8();
+    for v in &threshold {
+        w.f64(*v);
+    }
+    for v in &value {
+        w.f64(*v);
+    }
+    Ok(())
+}
+
+fn encode_model(
+    w: &mut BinWriter,
+    name_idx: u32,
+    method_c: u32,
+    m: &BucketModel,
+) -> Result<(), String> {
+    let dim = m.standardizer.mean.len();
+    if dim == 0 || dim > MAX_DIM as usize {
+        return Err(format!("unsupported feature dim {dim}"));
+    }
+    if m.standardizer.std.len() != dim {
+        return Err(format!(
+            "standardizer mean/std length mismatch ({dim} vs {})",
+            m.standardizer.std.len()
+        ));
+    }
+    let kind = method_code(m.model.method()).expect("native model");
+    if kind != method_c {
+        return Err(format!(
+            "holds a {} model but the bundle method differs",
+            m.model.method().name()
+        ));
+    }
+    let aux = match &m.model {
+        NativeModel::Lasso(l) => {
+            if l.weights.len() != dim {
+                return Err(format!(
+                    "lasso weight count {} disagrees with feature dim {dim}",
+                    l.weights.len()
+                ));
+            }
+            dim as u32
+        }
+        _ => 0,
+    };
+    w.u32(name_idx);
+    w.u32(kind);
+    w.u32(dim as u32);
+    w.u32(aux);
+    w.f64(require_finite(m.floor, "floor")?);
+    for &v in &m.standardizer.mean {
+        w.f64(require_finite(v, "standardizer mean")?);
+    }
+    for &v in &m.standardizer.std {
+        if !(v.is_finite() && v > 0.0) {
+            return Err("non-positive standardizer std".into());
+        }
+        w.f64(v);
+    }
+    match &m.model {
+        NativeModel::Lasso(l) => {
+            w.f64(require_finite(l.intercept, "lasso intercept")?);
+            w.f64(require_finite(l.alpha, "lasso alpha")?);
+            for &v in &l.weights {
+                w.f64(require_finite(v, "lasso weight")?);
+            }
+        }
+        NativeModel::RandomForest(rf) => {
+            w.u32(rf.params.n_trees as u32);
+            w.u32(rf.params.min_samples_split as u32);
+            encode_trees(w, &rf.trees)?;
+        }
+        NativeModel::Gbdt(g) => {
+            w.f64(require_finite(g.init, "gbdt init")?);
+            w.f64(require_finite(g.params.learning_rate, "gbdt learning_rate")?);
+            w.u32(g.params.n_stages as u32);
+            w.u32(g.params.min_samples_split as u32);
+            w.u32(g.params.max_depth as u32);
+            encode_trees(w, &g.trees)?;
+        }
+    }
+    Ok(())
+}
+
+fn encode(b: &PredictorBundle) -> Result<Vec<u8>, String> {
+    let method_c = method_code(b.method).ok_or_else(|| {
+        "bundles hold the native methods (lasso|rf|gbdt); the MLP stays engine-external"
+            .to_string()
+    })?;
+    if b.models.is_empty() {
+        return Err("bundle has no bucket models".into());
+    }
+    if b.models.len() > MAX_MODELS as usize {
+        return Err(format!("too many bucket models ({})", b.models.len()));
+    }
+    let it = plan::interner();
+    let names = it.names();
+
+    // String table: the interner names in id order (same table the JSON
+    // format serializes as the `interner` array).
+    let mut sw = BinWriter::default();
+    for &n in names {
+        sw.u32(n.len() as u32);
+    }
+    sw.pad8();
+    for &n in names {
+        sw.bytes(n.as_bytes());
+    }
+    let strings = sw.buf;
+
+    // The self-describing scenario descriptor, as compact JSON — the one
+    // part of the format where text wins (it is tiny, schema'd elsewhere,
+    // and reuses the spec-file SoC codec verbatim).
+    let desc = Json::obj(vec![
+        ("device", soc_to_json(&b.scenario.soc)),
+        ("scenario", Json::str(b.scenario.id.clone())),
+        ("target", target_to_json(&b.scenario.target)),
+    ])
+    .to_string()
+    .into_bytes();
+
+    let mut mw = BinWriter::default();
+    for (name, m) in &b.models {
+        let id = it.resolve(name).ok_or_else(|| {
+            format!("bucket '{name}' is not in this build's intern table")
+        })?;
+        encode_model(&mut mw, id.index() as u32, method_c, m)
+            .map_err(|e| format!("bucket '{name}': {e}"))?;
+    }
+    let models = mw.buf;
+
+    let strings_off = HEADER_LEN as u64;
+    let desc_off = align8(strings_off + strings.len() as u64).expect("offset fits u64");
+    let models_off = align8(desc_off + desc.len() as u64).expect("offset fits u64");
+    let total_len = align8(models_off + models.len() as u64).expect("offset fits u64");
+
+    let mut w = BinWriter { buf: Vec::with_capacity(total_len as usize) };
+    w.bytes(&BIN_MAGIC);
+    w.u32(BIN_VERSION);
+    w.u32(method_c);
+    w.u32(mode_code(b.mode));
+    w.u32(names.len() as u32);
+    w.u32(b.models.len() as u32);
+    w.u32(0); // reserved
+    w.f64(require_finite(b.t_overhead_ms, "t_overhead_ms")?);
+    w.f64(require_finite(b.fallback_ms, "fallback_ms")?);
+    w.u64(strings_off);
+    w.u64(strings.len() as u64);
+    w.u64(desc_off);
+    w.u64(desc.len() as u64);
+    w.u64(models_off);
+    w.u64(models.len() as u64);
+    w.u64(total_len);
+    debug_assert_eq!(w.buf.len(), HEADER_LEN);
+    w.bytes(&strings);
+    w.pad8();
+    w.bytes(&desc);
+    w.pad8();
+    w.bytes(&models);
+    w.pad8();
+    debug_assert_eq!(w.buf.len() as u64, total_len);
+    Ok(w.buf)
+}
+
+// ---------------------------------------------------------------------------
+// Decode
+
+/// The header fields, validated structurally (magic/version/codes/layout)
+/// but before any section content is parsed.
+struct Header {
+    method_c: u32,
+    mode_c: u32,
+    n_strings: u32,
+    n_models: u32,
+    t_overhead_ms: f64,
+    fallback_ms: f64,
+    strings: (u64, u64),
+    desc: (u64, u64),
+    models: (u64, u64),
+}
+
+fn decode_header(data: &[u8]) -> Result<Header, String> {
+    if data.len() < HEADER_LEN {
+        return Err(format!("truncated header: {} bytes (need {HEADER_LEN})", data.len()));
+    }
+    if data[..8] != BIN_MAGIC {
+        return Err("not a binary predictor bundle (bad magic)".into());
+    }
+    let mut r = BinReader::new(&data[8..HEADER_LEN]);
+    let version = r.u32()?;
+    if version != BIN_VERSION {
+        return Err(format!(
+            "unsupported binary bundle version {version} (this build reads {BIN_VERSION})"
+        ));
+    }
+    let method_c = r.u32()?;
+    method_from_code(method_c)?;
+    let mode_c = r.u32()?;
+    mode_from_code(mode_c)?;
+    let n_strings = r.u32()?;
+    let n_models = r.u32()?;
+    if r.u32()? != 0 {
+        return Err("nonzero reserved header field".into());
+    }
+    let t_overhead_ms = r.f64()?;
+    let fallback_ms = r.f64()?;
+    if !t_overhead_ms.is_finite() || !fallback_ms.is_finite() {
+        return Err("non-finite t_overhead_ms/fallback_ms".into());
+    }
+    let strings = (r.u64()?, r.u64()?);
+    let desc = (r.u64()?, r.u64()?);
+    let models = (r.u64()?, r.u64()?);
+    let total_len = r.u64()?;
+    if total_len != data.len() as u64 {
+        return Err(format!(
+            "length mismatch: header says {total_len} bytes, file has {}",
+            data.len()
+        ));
+    }
+    if n_strings == 0 || n_strings > MAX_STRINGS {
+        return Err(format!("string table has {n_strings} entries (1..={MAX_STRINGS})"));
+    }
+    if n_models == 0 {
+        return Err("bundle has no bucket models".into());
+    }
+    if n_models > MAX_MODELS {
+        return Err(format!("too many bucket models ({n_models})"));
+    }
+    // The declared sections must tile the file exactly: header, strings,
+    // descriptor, models, each 8-aligned, nothing in between or after.
+    // Swapped or overlapping offsets fail here, not deep in a parser.
+    if strings.0 != HEADER_LEN as u64 {
+        return Err("strings section does not follow the header".into());
+    }
+    let exp_desc = align8(strings.0.checked_add(strings.1).ok_or("section overflow")?)
+        .ok_or("section overflow")?;
+    if desc.0 != exp_desc {
+        return Err("descriptor section offset disagrees with the strings section".into());
+    }
+    let exp_models =
+        align8(desc.0.checked_add(desc.1).ok_or("section overflow")?).ok_or("section overflow")?;
+    if models.0 != exp_models {
+        return Err("models section offset disagrees with the descriptor section".into());
+    }
+    let exp_end = align8(models.0.checked_add(models.1).ok_or("section overflow")?)
+        .ok_or("section overflow")?;
+    if exp_end != total_len {
+        return Err("trailing bytes after the models section".into());
+    }
+    Ok(Header {
+        method_c,
+        mode_c,
+        n_strings,
+        n_models,
+        t_overhead_ms,
+        fallback_ms,
+        strings,
+        desc,
+        models,
+    })
+}
+
+fn section(data: &[u8], (off, len): (u64, u64), name: &str) -> Result<&[u8], String> {
+    let end = off.checked_add(len).ok_or_else(|| format!("{name} section overflow"))?;
+    if end > data.len() as u64 {
+        return Err(format!("{name} section out of bounds ({off}+{len} > {})", data.len()));
+    }
+    // Inter-section padding must be zero (see `BinReader::pad8`).
+    let padded = align8(end).expect("end fits");
+    for i in end..padded.min(data.len() as u64) {
+        if data[i as usize] != 0 {
+            return Err(format!("nonzero padding byte after the {name} section"));
+        }
+    }
+    Ok(&data[off as usize..end as usize])
+}
+
+fn decode_strings(sec: &[u8], n: usize) -> Result<Vec<String>, String> {
+    let mut r = BinReader::new(sec);
+    let lens = r.u32s(n)?;
+    r.pad8()?;
+    let mut out = Vec::with_capacity(n);
+    for (i, &l) in lens.iter().enumerate() {
+        if l > MAX_STRING_LEN {
+            return Err(format!("string {i} oversized ({l} bytes)"));
+        }
+        let raw = r.take(l as usize).map_err(|e| format!("string {i}: {e}"))?;
+        let s = std::str::from_utf8(raw).map_err(|_| format!("string {i} is not UTF-8"))?;
+        out.push(s.to_string());
+    }
+    if r.pos != sec.len() {
+        return Err("trailing bytes in the string table".into());
+    }
+    Ok(out)
+}
+
+fn decode_trees(r: &mut BinReader, dim: u32) -> Result<Vec<Tree>, String> {
+    let tree_count = r.u32()?;
+    let node_count = r.u32()?;
+    if tree_count == 0 {
+        return Err("no trees".into());
+    }
+    if tree_count > MAX_TREE_NODES || node_count > MAX_TREE_NODES {
+        return Err(format!("tree ensemble too large ({tree_count} trees, {node_count} nodes)"));
+    }
+    if node_count < tree_count {
+        return Err(format!("{tree_count} trees cannot fit in {node_count} nodes"));
+    }
+    r.pad8()?;
+    let roots = r.u32s(tree_count as usize)?;
+    r.pad8()?;
+    let feature = r.u32s(node_count as usize)?;
+    r.pad8()?;
+    let left = r.u32s(node_count as usize)?;
+    r.pad8()?;
+    let right = r.u32s(node_count as usize)?;
+    r.pad8()?;
+    let threshold = r.f64s(node_count as usize)?;
+    let value = r.f64s(node_count as usize)?;
+    // Split nodes (non-self-loops) must index a feature inside the
+    // standardized vector this record declares.
+    for i in 0..node_count as usize {
+        let leaf = left[i] as usize == i && right[i] as usize == i;
+        if !leaf && feature[i] >= dim {
+            return Err(format!(
+                "tree node {i}: feature index {} out of range (dim {dim})",
+                feature[i]
+            ));
+        }
+    }
+    let mut trees = Vec::with_capacity(tree_count as usize);
+    let mut start = 0usize;
+    for (t, &root) in roots.iter().enumerate() {
+        let root = root as usize;
+        if root < start || root >= node_count as usize {
+            return Err(format!("tree {t}: root {root} out of order (span starts at {start})"));
+        }
+        trees.push(
+            Tree::from_flat(&feature, &threshold, &left, &right, &value, start, root)
+                .map_err(|e| format!("tree {t}: {e}"))?,
+        );
+        start = root + 1;
+    }
+    if start != node_count as usize {
+        return Err(format!(
+            "tree spans cover {start} of {node_count} arena nodes"
+        ));
+    }
+    Ok(trees)
+}
+
+fn decode_model(
+    r: &mut BinReader,
+    h: &Header,
+    strings: &[String],
+    scenario_id: &str,
+) -> Result<(String, BucketModel), String> {
+    let name_idx = r.u32()?;
+    let name = strings
+        .get(name_idx as usize)
+        .ok_or_else(|| format!("bucket name index {name_idx} out of range"))?
+        .clone();
+    let fail = |e: String| format!("bucket '{name}': {e}");
+    let kind = r.u32()?;
+    if kind != h.method_c {
+        let kind_name = method_from_code(kind).map(|m| m.name().to_string()).map_err(fail)?;
+        let method = method_from_code(h.method_c).expect("validated").name();
+        return Err(format!(
+            "bucket '{name}' holds a {kind_name} model but the bundle method is {method}"
+        ));
+    }
+    let dim = r.u32()?;
+    if dim == 0 || dim > MAX_DIM {
+        return Err(fail(format!("unsupported feature dim {dim}")));
+    }
+    let aux = r.u32()?;
+    let floor = r.f64()?;
+    if !floor.is_finite() {
+        return Err(fail("non-finite floor".into()));
+    }
+    let mean = r.f64s(dim as usize)?;
+    let std = r.f64s(dim as usize)?;
+    if mean.iter().any(|v| !v.is_finite()) {
+        return Err(fail("non-finite standardizer mean".into()));
+    }
+    if std.iter().any(|v| !(v.is_finite() && *v > 0.0)) {
+        return Err(fail("non-positive standardizer std".into()));
+    }
+    let model = match method_from_code(h.method_c).expect("validated") {
+        Method::Lasso => {
+            if aux != dim {
+                return Err(fail(format!(
+                    "lasso weight count {aux} disagrees with feature dim {dim}"
+                )));
+            }
+            let intercept = r.f64()?;
+            let alpha = r.f64()?;
+            let weights = r.f64s(dim as usize)?;
+            if weights.iter().any(|w| !w.is_finite()) || !intercept.is_finite() {
+                return Err(fail("lasso: non-finite weights/intercept".into()));
+            }
+            if !alpha.is_finite() {
+                return Err(fail("lasso: non-finite alpha".into()));
+            }
+            NativeModel::Lasso(Lasso { weights, intercept, alpha })
+        }
+        Method::RandomForest => {
+            if aux != 0 {
+                return Err(fail("nonzero aux field for a tree model".into()));
+            }
+            let n_trees = r.u32()? as usize;
+            let min_samples_split = r.u32()? as usize;
+            let trees = decode_trees(r, dim).map_err(|e| fail(format!("rf: {e}")))?;
+            NativeModel::RandomForest(RandomForest {
+                trees,
+                params: ForestParams { n_trees, min_samples_split },
+            })
+        }
+        Method::Gbdt => {
+            if aux != 0 {
+                return Err(fail("nonzero aux field for a tree model".into()));
+            }
+            let init = r.f64()?;
+            let learning_rate = r.f64()?;
+            if !init.is_finite() || !learning_rate.is_finite() {
+                return Err(fail("gbdt: non-finite init/learning_rate".into()));
+            }
+            let n_stages = r.u32()? as usize;
+            let min_samples_split = r.u32()? as usize;
+            let max_depth = r.u32()? as usize;
+            let trees = decode_trees(r, dim).map_err(|e| fail(format!("gbdt: {e}")))?;
+            NativeModel::Gbdt(Gbdt {
+                init,
+                trees,
+                params: GbdtParams { n_stages, min_samples_split, learning_rate, max_depth },
+            })
+        }
+        Method::Mlp => unreachable!("method codes cover native methods only"),
+    };
+    // Same contract as the JSON loader: the name must resolve in this
+    // build's intern table before the model can serve.
+    resolve_bundle_bucket(scenario_id, &name).map_err(|e| e.to_string())?;
+    Ok((name, BucketModel { standardizer: Standardizer { mean, std }, model, floor }))
+}
+
+fn decode(data: &[u8]) -> Result<PredictorBundle, String> {
+    let h = decode_header(data)?;
+    let strings = decode_strings(section(data, h.strings, "strings")?, h.n_strings as usize)?;
+
+    let desc_raw = section(data, h.desc, "descriptor")?;
+    let desc_txt = std::str::from_utf8(desc_raw)
+        .map_err(|_| "descriptor is not UTF-8".to_string())?;
+    let dj = Json::parse(desc_txt).map_err(|e| format!("descriptor: {e}"))?;
+    let scenario_id = dj.req_str("scenario").map_err(|e| format!("descriptor: {e}"))?.to_string();
+    let soc = soc_from_json(dj.req("device").map_err(|e| format!("descriptor: {e}"))?)
+        .map_err(|e| format!("device: {e}"))?;
+    let scenario = scenario_from_descriptor(
+        soc,
+        dj.req("target").map_err(|e| format!("descriptor: {e}"))?,
+        &scenario_id,
+    )?;
+    validate_bundle_scenario(&scenario).map_err(|e| e.to_string())?;
+
+    let msec = section(data, h.models, "models")?;
+    let mut r = BinReader::new(msec);
+    let mut models = BTreeMap::new();
+    for _ in 0..h.n_models {
+        let (name, m) = decode_model(&mut r, &h, &strings, &scenario_id)?;
+        if models.insert(name.clone(), m).is_some() {
+            return Err(format!("duplicate model for bucket '{name}'"));
+        }
+    }
+    if r.pos != msec.len() {
+        return Err("trailing bytes after the last model record".into());
+    }
+    Ok(PredictorBundle {
+        scenario,
+        method: method_from_code(h.method_c).expect("validated"),
+        mode: mode_from_code(h.mode_c).expect("validated"),
+        t_overhead_ms: h.t_overhead_ms,
+        fallback_ms: h.fallback_ms,
+        models,
+    })
+}
+
+/// Header + content summary of a binary bundle, as a JSON document for
+/// `edgelat bundle inspect`. Fully validates the file first — an inspect
+/// that succeeds is an inspect of a loadable bundle.
+pub fn inspect_bin(data: &[u8]) -> Result<Json, String> {
+    let b = decode(data)?;
+    let h = decode_header(data).expect("decode validated the header");
+    let sect = |(off, len): (u64, u64)| {
+        Json::obj(vec![("off", Json::num(off as f64)), ("len", Json::num(len as f64))])
+    };
+    Ok(Json::obj(vec![
+        ("format", Json::str("edgelat.predictor_bundle.bin")),
+        ("version", Json::num(BIN_VERSION as f64)),
+        ("scenario", Json::str(b.scenario.id.clone())),
+        ("device", Json::str(b.scenario.soc.name.clone())),
+        ("method", Json::str(b.method.name())),
+        ("mode", Json::str(b.mode.name())),
+        ("t_overhead_ms", Json::Num(b.t_overhead_ms)),
+        ("fallback_ms", Json::Num(b.fallback_ms)),
+        ("buckets", Json::Arr(b.models.keys().map(|k| Json::str(k.clone())).collect())),
+        ("n_models", Json::num(b.models.len() as f64)),
+        ("n_strings", Json::num(h.n_strings as f64)),
+        (
+            "sections",
+            Json::obj(vec![
+                ("strings", sect(h.strings)),
+                ("descriptor", sect(h.desc)),
+                ("models", sect(h.models)),
+            ]),
+        ),
+        ("total_bytes", Json::num(data.len() as f64)),
+    ]))
+}
+
+impl PredictorBundle {
+    /// Serialize to the binary format. Lossless: decoding the bytes
+    /// reproduces this bundle bit-exactly (same JSON text, same
+    /// predictions). Fails for MLP bundles and for models whose bucket
+    /// names this build's intern table does not know.
+    pub fn to_bin_bytes(&self) -> Result<Vec<u8>, EngineError> {
+        if self.method == Method::Mlp {
+            return Err(EngineError::Unsupported(
+                "bundles hold the native methods (lasso|rf|gbdt); the MLP stays \
+                 engine-external (PJRT handles are not serializable)"
+                    .into(),
+            ));
+        }
+        encode(self).map_err(EngineError::Parse)
+    }
+
+    /// Decode a binary bundle from bytes, validating every offset and
+    /// every structural invariant — corrupted input is a typed error,
+    /// never a panic.
+    pub fn from_bin_bytes(data: &[u8]) -> Result<PredictorBundle, EngineError> {
+        decode(data).map_err(EngineError::Parse)
+    }
+
+    /// Write the bundle in the binary format. I/O errors name the path.
+    pub fn save_bin(&self, path: impl AsRef<Path>) -> Result<(), EngineError> {
+        let path = path.as_ref();
+        let bytes = self.to_bin_bytes()?;
+        std::fs::write(path, bytes)
+            .map_err(|e| EngineError::Io(format!("writing {}: {e}", path.display())))
+    }
+
+    /// Load a binary bundle file. I/O and parse errors name the path.
+    pub fn load_bin(path: impl AsRef<Path>) -> Result<PredictorBundle, EngineError> {
+        let path = path.as_ref();
+        let bytes = std::fs::read(path)
+            .map_err(|e| EngineError::Io(format!("reading {}: {e}", path.display())))?;
+        decode(&bytes).map_err(|e| EngineError::Parse(format!("{}: {e}", path.display())))
+    }
+
+    /// Load a bundle in either format, sniffing the binary magic — the
+    /// path every directory-scanning loader (`EngineBuilder::bundle_file`,
+    /// the serve fleet) goes through, so `.bin` bundles work everywhere
+    /// `.json` ones do, hot reload included.
+    pub fn load_auto(path: impl AsRef<Path>) -> Result<PredictorBundle, EngineError> {
+        let path = path.as_ref();
+        let bytes = std::fs::read(path)
+            .map_err(|e| EngineError::Io(format!("reading {}: {e}", path.display())))?;
+        if bytes.starts_with(&BIN_MAGIC) {
+            return decode(&bytes)
+                .map_err(|e| EngineError::Parse(format!("{}: {e}", path.display())));
+        }
+        let s = String::from_utf8(bytes).map_err(|_| {
+            EngineError::Parse(format!(
+                "{}: neither a binary bundle (no magic) nor UTF-8 JSON",
+                path.display()
+            ))
+        })?;
+        let j = Json::parse(&s)
+            .map_err(|e| EngineError::Parse(format!("{}: {e}", path.display())))?;
+        PredictorBundle::from_json(&j)
+            .map_err(|e| EngineError::Parse(format!("{}: {e}", path.display())))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::scenario;
+
+    fn lasso_bundle() -> PredictorBundle {
+        let sc = scenario::one_large_core("Snapdragon855").expect("builtin soc");
+        let names = plan::interner().names();
+        let mut models = BTreeMap::new();
+        for (i, &name) in names.iter().take(2).enumerate() {
+            models.insert(
+                name.to_string(),
+                BucketModel {
+                    standardizer: Standardizer {
+                        mean: vec![1.5 + i as f64, -0.25, 3.0],
+                        std: vec![2.0, 0.5, 1.0],
+                    },
+                    model: NativeModel::Lasso(Lasso {
+                        weights: vec![0.125, -0.5, 2.5e-3],
+                        intercept: 4.75 + i as f64,
+                        alpha: 0.01,
+                    }),
+                    floor: 0.0625,
+                },
+            );
+        }
+        PredictorBundle {
+            scenario: sc,
+            method: Method::Lasso,
+            mode: DeductionMode::Full,
+            t_overhead_ms: 1.375,
+            fallback_ms: 0.875,
+            models,
+        }
+    }
+
+    fn gbdt_bundle() -> PredictorBundle {
+        let sc = scenario::one_large_core("Snapdragon855").expect("builtin soc");
+        // Two hand-built trees: a lone leaf and a one-split stump.
+        let leaf = Tree::from_json(&Json::parse("[[0, 2.5]]").unwrap()).unwrap();
+        let stump =
+            Tree::from_json(&Json::parse("[[0, 1.0], [0, 2.0], [1, 1, 0.5, 0, 1]]").unwrap())
+                .unwrap();
+        let name = plan::interner().names()[0];
+        let mut models = BTreeMap::new();
+        models.insert(
+            name.to_string(),
+            BucketModel {
+                standardizer: Standardizer { mean: vec![0.5, 1.5], std: vec![1.0, 2.0] },
+                model: NativeModel::Gbdt(Gbdt {
+                    init: 1.25,
+                    trees: vec![leaf, stump],
+                    params: GbdtParams {
+                        n_stages: 2,
+                        min_samples_split: 2,
+                        learning_rate: 0.1,
+                        max_depth: 3,
+                    },
+                }),
+                floor: 0.0,
+            },
+        );
+        PredictorBundle {
+            scenario: sc,
+            method: Method::Gbdt,
+            mode: DeductionMode::NoFusion,
+            t_overhead_ms: 0.5,
+            fallback_ms: 0.25,
+            models,
+        }
+    }
+
+    #[test]
+    fn lasso_and_gbdt_bundles_roundtrip_bit_exactly() {
+        for b in [lasso_bundle(), gbdt_bundle()] {
+            let bytes = b.to_bin_bytes().expect("encode");
+            let back = PredictorBundle::from_bin_bytes(&bytes).expect("decode");
+            // The JSON emitter is bit-faithful, so text equality is
+            // bit-exact equality of every float in the bundle.
+            assert_eq!(b.to_json().to_string(), back.to_json().to_string());
+            // And re-encoding is byte-stable.
+            assert_eq!(bytes, back.to_bin_bytes().expect("re-encode"));
+        }
+    }
+
+    #[test]
+    fn rf_bundle_roundtrips() {
+        let mut b = gbdt_bundle();
+        let NativeModel::Gbdt(g) = b.models.values().next().unwrap().model.clone() else {
+            unreachable!()
+        };
+        b.method = Method::RandomForest;
+        for m in b.models.values_mut() {
+            m.model = NativeModel::RandomForest(RandomForest {
+                trees: g.trees.clone(),
+                params: ForestParams { n_trees: 2, min_samples_split: 2 },
+            });
+        }
+        let bytes = b.to_bin_bytes().expect("encode");
+        let back = PredictorBundle::from_bin_bytes(&bytes).expect("decode");
+        assert_eq!(b.to_json().to_string(), back.to_json().to_string());
+    }
+
+    #[test]
+    fn every_truncation_errors_without_panicking() {
+        let bytes = gbdt_bundle().to_bin_bytes().expect("encode");
+        for n in 0..bytes.len() {
+            assert!(
+                PredictorBundle::from_bin_bytes(&bytes[..n]).is_err(),
+                "decode of {n}-byte prefix should fail"
+            );
+        }
+    }
+
+    #[test]
+    fn header_byte_flips_never_panic() {
+        let bytes = lasso_bundle().to_bin_bytes().expect("encode");
+        for i in 0..HEADER_LEN.min(bytes.len()) {
+            for bit in [0x01u8, 0x80] {
+                let mut m = bytes.clone();
+                m[i] ^= bit;
+                // Must not panic; most flips fail, a float-bit flip may
+                // legally decode to a different finite value.
+                let _ = PredictorBundle::from_bin_bytes(&m);
+            }
+        }
+    }
+
+    #[test]
+    fn mlp_method_is_unsupported() {
+        let mut b = lasso_bundle();
+        b.method = Method::Mlp;
+        let err = b.to_bin_bytes().unwrap_err();
+        assert!(matches!(err, EngineError::Unsupported(_)), "{err}");
+    }
+
+    #[test]
+    fn inspect_reports_layout_and_content() {
+        let b = gbdt_bundle();
+        let bytes = b.to_bin_bytes().expect("encode");
+        let j = inspect_bin(&bytes).expect("inspect");
+        assert_eq!(j.req_str("method").unwrap(), "GBDT");
+        assert_eq!(j.req_str("mode").unwrap(), "nofusion");
+        assert_eq!(j.req_usize("n_models").unwrap(), 1);
+        assert_eq!(j.req_usize("total_bytes").unwrap(), bytes.len());
+    }
+}

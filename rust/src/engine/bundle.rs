@@ -48,7 +48,7 @@ pub struct PredictorBundle {
 }
 
 /// The target half of the scenario descriptor.
-fn target_to_json(t: &Target) -> Json {
+pub(crate) fn target_to_json(t: &Target) -> Json {
     match t {
         Target::Cpu { combo, rep } => Json::obj(vec![
             ("kind", Json::str("cpu")),
@@ -71,7 +71,11 @@ fn target_to_json(t: &Target) -> Json {
 /// id. Structural parsing only — semantic checks (SoC ranges, combo
 /// realizability, id consistency) live in one place,
 /// [`validate_bundle_scenario`], which every loading path runs.
-fn scenario_from_descriptor(soc: Soc, target: &Json, id: &str) -> Result<Scenario, String> {
+pub(crate) fn scenario_from_descriptor(
+    soc: Soc,
+    target: &Json,
+    id: &str,
+) -> Result<Scenario, String> {
     let target = match target.req_str("kind")? {
         "cpu" => {
             let counts =

@@ -24,14 +24,17 @@
 //!
 //! [`predict_batch`]: LatencyEngine::predict_batch
 
+pub mod binfmt;
 pub mod bundle;
 
+pub use binfmt::{BIN_MAGIC, BIN_VERSION};
 pub use bundle::{PredictorBundle, BUNDLE_COMPAT_VERSION, BUNDLE_FORMAT, BUNDLE_VERSION};
 
 use crate::exec_pool::{CacheStats, ExecPool, ShardedCache};
 use crate::framework::DeductionMode;
 use crate::graph::Graph;
 use crate::plan::{self, LoweredGraph};
+use crate::predict::lut::{LutCounts, LutPack, LutSpec};
 use crate::predict::{soa, BucketModel, Method};
 use crate::scenario::Scenario;
 use std::fmt;
@@ -143,6 +146,12 @@ struct EnginePredictor {
     /// (parallel to `models`); the serve loop evaluates whole plans through
     /// these, bit-identical to the scalar model path.
     kernels: Vec<Option<soa::BucketKernel>>,
+    /// Opt-in compiled lookup-table tier (`EngineBuilder::lut`): per-bucket
+    /// direct-lookup tables pre-evaluated over a quantized feature grid at
+    /// build time. Rows on a grid point are served bit-identically to the
+    /// model; near-grid rows interpolate within the spec's error bound;
+    /// everything else falls back to the SoA kernels untouched.
+    lut: Option<LutPack>,
 }
 
 /// Builder for [`LatencyEngine`]: collect bundles, then `build()`.
@@ -150,11 +159,18 @@ struct EnginePredictor {
 pub struct EngineBuilder {
     bundles: Vec<PredictorBundle>,
     threads: Option<usize>,
+    lut: Option<LutSpec>,
 }
+
+/// Graphs lowered at build time to calibrate the LUT feature grids:
+/// deterministic NAS samples, so an engine built twice from the same
+/// bundles compiles the same tables.
+const LUT_CALIBRATION_SEED: u64 = 0xed6e;
+const LUT_CALIBRATION_GRAPHS: usize = 16;
 
 impl EngineBuilder {
     pub fn new() -> EngineBuilder {
-        EngineBuilder { bundles: Vec::new(), threads: None }
+        EngineBuilder { bundles: Vec::new(), threads: None, lut: None }
     }
 
     /// Add an in-memory bundle (e.g. freshly trained).
@@ -163,9 +179,10 @@ impl EngineBuilder {
         self
     }
 
-    /// Load and add a bundle file written by `edgelat train`.
+    /// Load and add a bundle file written by `edgelat train` — JSON or
+    /// binary, sniffed by magic (`edgelat bundle convert` writes `.bin`).
     pub fn bundle_file(self, path: impl AsRef<std::path::Path>) -> Result<EngineBuilder, EngineError> {
-        let b = PredictorBundle::load(path)?;
+        let b = PredictorBundle::load_auto(path)?;
         Ok(self.bundle(b))
     }
 
@@ -175,15 +192,25 @@ impl EngineBuilder {
         self
     }
 
+    /// Compile the opt-in LUT tier at build time: per-bucket lookup
+    /// tables calibrated on deterministic NAS graphs, verified against
+    /// the full models within `spec.max_rel_err`. Buckets whose grid
+    /// would be too large (or miss the bound) simply keep the SoA path.
+    pub fn lut(mut self, spec: LutSpec) -> EngineBuilder {
+        self.lut = Some(spec);
+        self
+    }
+
     pub fn build(self) -> Result<LatencyEngine, EngineError> {
-        if self.bundles.is_empty() {
+        let EngineBuilder { bundles, threads, lut } = self;
+        if bundles.is_empty() {
             return Err(EngineError::Unsupported(
                 "an engine needs at least one predictor bundle".into(),
             ));
         }
         let it = plan::interner();
-        let mut predictors = Vec::with_capacity(self.bundles.len());
-        for b in self.bundles {
+        let mut predictors = Vec::with_capacity(bundles.len());
+        for b in bundles {
             // The builder is consumed, so the models — and the bundle's
             // embedded scenario descriptor — move in for free. No registry
             // lookup, no `Scenario` clone: a bundle trained on a device
@@ -211,6 +238,7 @@ impl EngineBuilder {
                 fallback_ms: b.fallback_ms,
                 models,
                 kernels,
+                lut: None,
             });
         }
         // Deduction only depends on (scenario, mode), not on the trained
@@ -228,7 +256,38 @@ impl EngineBuilder {
                     .unwrap_or(i)
             })
             .collect();
-        let pool = self.threads.map(ExecPool::new).unwrap_or_default();
+        if let Some(spec) = &lut {
+            // Calibration plans: the same deterministic graph set lowered
+            // once per distinct (scenario, mode) — shared via the dedup
+            // map, like the plan cache — then a LUT compiled per
+            // predictor from its own models.
+            let graphs: Vec<Graph> =
+                crate::nas::sample_dataset(LUT_CALIBRATION_SEED, LUT_CALIBRATION_GRAPHS)
+                    .into_iter()
+                    .map(|a| a.graph)
+                    .collect();
+            let mut lowered: Vec<Option<Arc<Vec<LoweredGraph>>>> = vec![None; predictors.len()];
+            for i in 0..predictors.len() {
+                let c = dedup[i];
+                if lowered[c].is_none() {
+                    let p = &predictors[c];
+                    lowered[c] = Some(Arc::new(
+                        graphs.iter().map(|g| plan::lower(&p.scenario, p.mode, g)).collect(),
+                    ));
+                }
+                let plans = lowered[c].clone().expect("lowered above");
+                let refs: Vec<&LoweredGraph> = plans.iter().collect();
+                let p = &mut predictors[i];
+                let dims: Vec<Option<usize>> =
+                    p.models.iter().map(|m| m.as_ref().map(|m| m.feature_dim())).collect();
+                let mut scratch: Vec<f64> = Vec::new();
+                let pack = LutPack::compile(spec, &dims, &refs, |bi, row| {
+                    p.models[bi].as_ref().map(|m| m.predict_raw_with(row, &mut scratch))
+                });
+                p.lut = Some(pack);
+            }
+        }
+        let pool = threads.map(ExecPool::new).unwrap_or_default();
         Ok(LatencyEngine {
             predictors,
             dedup,
@@ -323,6 +382,28 @@ impl LatencyEngine {
         self.plan_cache.shard_count()
     }
 
+    /// Whether any loaded predictor carries a compiled LUT tier.
+    pub fn lut_enabled(&self) -> bool {
+        self.predictors.iter().any(|p| p.lut.is_some())
+    }
+
+    /// Aggregated LUT-tier counters across all loaded predictors (all
+    /// zero when the engine was built without [`EngineBuilder::lut`]).
+    pub fn lut_counts(&self) -> LutCounts {
+        let mut total = LutCounts::default();
+        for p in &self.predictors {
+            if let Some(l) = &p.lut {
+                total = total.merge(&l.counts());
+            }
+        }
+        total
+    }
+
+    /// Buckets with a compiled table, summed across loaded predictors.
+    pub fn lut_tables(&self) -> usize {
+        self.predictors.iter().filter_map(|p| p.lut.as_ref()).map(LutPack::coverage).sum()
+    }
+
     /// Worker threads used by [`predict_batch`](Self::predict_batch).
     pub fn threads(&self) -> usize {
         self.pool.threads()
@@ -338,10 +419,13 @@ impl LatencyEngine {
         let (idx, p) = self.find(&req.scenario_id, req.method)?;
         let it = plan::interner();
         let pl = self.plan_for(idx, p, req.graph);
-        let (rows, fallback_units) =
-            soa::eval_plan_grouped(&pl, &p.kernels, p.fallback_ms, |bi, row, scratch| {
-                p.models[bi].as_ref().map(|m| m.predict_raw_with(row, scratch))
-            });
+        let (rows, fallback_units) = soa::eval_plan_grouped(
+            &pl,
+            &p.kernels,
+            p.fallback_ms,
+            p.lut.as_ref(),
+            |bi, row, scratch| p.models[bi].as_ref().map(|m| m.predict_raw_with(row, scratch)),
+        );
         let mut per_unit = Vec::with_capacity(pl.len());
         let mut sum = 0.0;
         for (i, ms) in rows.into_iter().enumerate() {

@@ -21,6 +21,7 @@ use crate::features::{
 };
 use crate::graph::Graph;
 use crate::plan::{self, BucketId, LoweredGraph};
+use crate::predict::lut::{LutPack, LutSpec};
 use crate::predict::{mlp::MlpContext, soa, train, Method, TrainedModel};
 use crate::profiler::{bucket_datasets, ModelProfile};
 use crate::scenario::Scenario;
@@ -263,10 +264,36 @@ impl<'a> ScenarioPredictor<'a> {
     /// buckets on the scalar path. Bit-identical to
     /// [`predict_plan_rows_scalar`](Self::predict_plan_rows_scalar).
     pub fn predict_plan_rows(&self, p: &LoweredGraph) -> Vec<f64> {
-        let (rows, _) = soa::eval_plan_grouped(p, &self.kernels, self.fallback_ms, |bi, row, scratch| {
-            self.models[bi].as_ref().map(|m| m.predict_raw_with(row, scratch))
-        });
+        self.predict_plan_rows_lut(p, None)
+    }
+
+    /// [`predict_plan_rows`](Self::predict_plan_rows) with an optional
+    /// compiled LUT tier in front of the SoA kernels: in-grid rows are
+    /// answered from the table (see [`compile_lut`](Self::compile_lut)),
+    /// everything else — out-of-grid rows, uncovered buckets — takes the
+    /// vectorized/scalar path bit-identically to `lut: None`.
+    pub fn predict_plan_rows_lut(&self, p: &LoweredGraph, lut: Option<&LutPack>) -> Vec<f64> {
+        let (rows, _) =
+            soa::eval_plan_grouped(p, &self.kernels, self.fallback_ms, lut, |bi, row, scratch| {
+                self.models[bi].as_ref().map(|m| m.predict_raw_with(row, scratch))
+            });
         rows
+    }
+
+    /// Compile the trained per-bucket models into a direct-lookup tier
+    /// ([`predict::lut`](crate::predict::lut)) calibrated on the feature
+    /// rows of `plans` — the closed workload whose rows should become
+    /// index computations. Tables are verified against the full model at
+    /// build time (`spec.max_rel_err`); buckets that fail verification
+    /// or would need oversized grids simply stay on the SoA path.
+    pub fn compile_lut(&self, spec: &LutSpec, plans: &[&LoweredGraph]) -> LutPack {
+        let dims: Vec<Option<usize>> = (0..self.models.len())
+            .map(|bi| self.models[bi].as_ref().map(|m| m.feature_dim()))
+            .collect();
+        let mut scratch: Vec<f64> = Vec::new();
+        LutPack::compile(spec, &dims, plans, |bi, row| {
+            self.models[bi].as_ref().map(|m| m.predict_raw_with(row, &mut scratch))
+        })
     }
 
     /// Scalar reference implementation of

@@ -52,7 +52,24 @@
 //!   `PredictorBundle` file; a `Send + Sync` `LatencyEngine` loads one or
 //!   more bundles, memoizes the lowered plan per graph fingerprint, and
 //!   serves `PredictRequest`s — single or batched across threads — at NAS
-//!   search rate without retraining.
+//!   search rate without retraining. Bundles persist in two interchangeable
+//!   formats: the versioned JSON document (interchange + golden fixtures)
+//!   and a compact little-endian binary (`engine::binfmt`, magic
+//!   `EDGELATB`) whose sections decode straight into the flattened SoA
+//!   layouts — `bundle convert` round-trips the two bit-exactly, and every
+//!   loader (`EngineBuilder::bundle_file`, `serve --bundles`, hot reload)
+//!   sniffs the magic and accepts either.
+//! - **Compiled LUT tier (`predict::lut`)**: an optional pre-evaluation
+//!   tier above the SoA kernels — per-bucket models are baked over
+//!   quantized per-feature grids into direct-lookup tables with
+//!   multilinear interpolation, each table verified against the model on
+//!   every calibration row and dropped unless it meets the `LutSpec`
+//!   relative-error bound. Rows off the grid (or in buckets without a
+//!   table) fall back bit-identically to the SoA scan, and atomic
+//!   `LutCounts` account for every row (lookups / interpolations /
+//!   fallbacks — surfaced in serve `stats`). Opt-in via
+//!   `EngineBuilder::lut` / `serve --lut`; the bench suite gates the tier
+//!   against the SoA scan and the binary decode against the JSON parse.
 //! - **Search (`search`)**: the latency-constrained evolutionary NAS
 //!   search that drives the serving stack at scale — genomes over the
 //!   Section 4.3.2 block space realized via `nas::SynthArch::rebuild`

@@ -11,6 +11,7 @@
 //!   serve       persistent micro-batching prediction daemon (JSON/TCP)
 //!   serve-bench open-loop load generator against a running daemon
 //!   bench       time the pipeline hot paths, write BENCH_pipeline.json
+//!   bundle      convert/inspect predictor bundles (JSON <-> binary)
 //!   devices     list/show/validate device specs (the open SoC universe)
 //!   list        list scenarios / zoo models
 //!
@@ -43,6 +44,7 @@ fn main() {
         "serve" => cmd_serve(rest),
         "serve-bench" => cmd_serve_bench(rest),
         "bench" => cmd_bench(rest),
+        "bundle" => cmd_bundle(rest),
         "devices" => cmd_devices(rest),
         "list" => cmd_list(rest),
         "help" | "--help" | "-h" => usage(),
@@ -72,7 +74,8 @@ USAGE:
                     [--population P] [--generations G] [--train N] [--runs R]
                     [--threads N] [--quick] [--out FRONT.json]
   edgelat serve     --bundles DIR [--addr IP:PORT] [--threads N] [--max-batch B]
-                    [--max-wait-us U] [--queue-cap Q] [--drain-grace-ms MS]
+                    [--max-wait-us U] [--queue-cap Q] [--drain-grace-ms MS] [--lut]
+  edgelat bundle    convert IN OUT | inspect FILE   (.json <-> .bin, by extension)
   edgelat serve-bench --addr IP:PORT [--quick] [--clients C] [--rps R]
                     [--duration-s S] [--seed S] [--drain] [--out REPORT.json]
   edgelat bench     [--quick] [--threads N] [--out BENCH_pipeline.json]
@@ -635,7 +638,11 @@ fn cmd_serve(rest: &[String]) {
             d.drain_grace.as_millis() as u64,
         ))),
     };
-    let fleet = BundleFleet::load(&bundles, threads).unwrap_or_else(|e| {
+    // `--lut`: compile the direct-lookup predictor tier into the engine
+    // (and into every hot-reloaded generation). Counters show up under
+    // `stats` -> "lut".
+    let lut = cli::has(rest, "--lut").then(edgelat::predict::lut::LutSpec::default);
+    let fleet = BundleFleet::load_opts(&bundles, threads, lut).unwrap_or_else(|e| {
         eprintln!("{e}");
         std::process::exit(2);
     });
@@ -817,6 +824,88 @@ fn cmd_bench(rest: &[String]) {
 }
 
 /// `edgelat devices` — inspect and validate the open device universe.
+/// `edgelat bundle convert IN OUT | inspect FILE`: lossless conversion
+/// between the JSON and binary bundle formats (direction picked by the
+/// output extension — `.bin` writes binary, anything else JSON) and a
+/// validated header/content summary. Inputs load in either format.
+fn cmd_bundle(rest: &[String]) {
+    let sub = rest.first().filter(|a| !a.starts_with("--")).map(|s| s.as_str());
+    let positional = |i: usize, what: &str| -> &String {
+        rest.get(i).filter(|a| !a.starts_with("--")).unwrap_or_else(|| {
+            eprintln!("need {what}: edgelat bundle convert IN OUT | inspect FILE");
+            std::process::exit(2);
+        })
+    };
+    match sub.unwrap_or("help") {
+        "convert" => {
+            let inp = positional(1, "an input bundle");
+            let out = positional(2, "an output path");
+            let b = PredictorBundle::load_auto(inp).unwrap_or_else(|e| {
+                eprintln!("{e}");
+                std::process::exit(2);
+            });
+            let to_bin = std::path::Path::new(out).extension().and_then(|x| x.to_str())
+                == Some("bin");
+            let res = if to_bin { b.save_bin(out) } else { b.save(out) };
+            res.unwrap_or_else(|e| {
+                eprintln!("{e}");
+                std::process::exit(2);
+            });
+            println!(
+                "wrote {} bundle {out} ({} bucket models, scenario {})",
+                if to_bin { "binary" } else { "JSON" },
+                b.models.len(),
+                b.scenario_id()
+            );
+        }
+        "inspect" => {
+            let path = positional(1, "a bundle file");
+            let bytes = std::fs::read(path).unwrap_or_else(|e| {
+                eprintln!("reading {path}: {e}");
+                std::process::exit(2);
+            });
+            let doc = if bytes.starts_with(&edgelat::engine::BIN_MAGIC) {
+                edgelat::engine::binfmt::inspect_bin(&bytes).unwrap_or_else(|e| {
+                    eprintln!("{path}: {e}");
+                    std::process::exit(2);
+                })
+            } else {
+                // JSON bundle: load (full validation), then summarize in
+                // the same shape so scripts can consume either.
+                let b = PredictorBundle::load_auto(path).unwrap_or_else(|e| {
+                    eprintln!("{e}");
+                    std::process::exit(2);
+                });
+                edgelat::util::Json::obj(vec![
+                    ("format", edgelat::util::Json::str(edgelat::engine::BUNDLE_FORMAT)),
+                    ("scenario", edgelat::util::Json::str(b.scenario_id().to_string())),
+                    ("device", edgelat::util::Json::str(b.scenario.soc.name.clone())),
+                    ("method", edgelat::util::Json::str(b.method.name())),
+                    ("mode", edgelat::util::Json::str(b.mode.name())),
+                    ("t_overhead_ms", edgelat::util::Json::Num(b.t_overhead_ms)),
+                    ("fallback_ms", edgelat::util::Json::Num(b.fallback_ms)),
+                    (
+                        "buckets",
+                        edgelat::util::Json::Arr(
+                            b.models
+                                .keys()
+                                .map(|k| edgelat::util::Json::str(k.clone()))
+                                .collect(),
+                        ),
+                    ),
+                    ("n_models", edgelat::util::Json::num(b.models.len() as f64)),
+                    ("total_bytes", edgelat::util::Json::num(bytes.len() as f64)),
+                ])
+            };
+            println!("{}", doc.to_string());
+        }
+        other => {
+            eprintln!("unknown bundle subcommand '{other}' (convert|inspect)");
+            std::process::exit(2);
+        }
+    }
+}
+
 fn cmd_devices(rest: &[String]) {
     // A leading flag is not a subcommand: `devices --device-spec f.json`
     // defaults to `list` over the extended universe.

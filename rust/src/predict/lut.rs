@@ -1,0 +1,432 @@
+//! Compiled lookup-table prediction tier: per-bucket direct-lookup
+//! tables with multilinear interpolation.
+//!
+//! For a closed workload (a fixed set of lowered plans), the feature rows
+//! a bucket's model will ever see span a small grid of distinct values
+//! per dimension. [`LutPack::compile`] pre-evaluates a trained model over
+//! that grid once, so the hot path becomes an index computation (binary
+//! search per axis + one table read, or a 2^k-corner multilinear blend)
+//! instead of a 100+-tree ensemble walk. Rows outside the grid — new
+//! feature values, too-short rows, buckets whose grid would explode —
+//! fall back to the SoA kernels bit-identically; a compiled table is
+//! *dropped* at build time if any calibration or held-out row
+//! interpolates outside the declared relative-error bound, so a served
+//! LUT value is always within `LutSpec::max_rel_err` of the full model.
+//!
+//! Accounting mirrors `exec_pool::CacheStats`: lock-free counters for
+//! exact lookups, interpolations, and fallbacks ([`LutStats`] /
+//! [`LutCounts`]), surfaced through the engine and the serve daemon's
+//! `stats` verb so the fallback rate is observable in production.
+
+use crate::plan::LoweredGraph;
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Hard cap on model dimensionality a table will be attempted for. The
+/// probe keeps its per-axis state in stack arrays; wider models (none of
+/// the paper's buckets exceed 13 features) always use the SoA path.
+const MAX_DIMS: usize = 16;
+
+/// At most this many axes may interpolate in one probe (2^k corners are
+/// blended). More fractional axes than this is a miss, not a blow-up.
+const MAX_INTERP_DIMS: usize = 6;
+
+/// Grid-compilation knobs for [`LutPack::compile`].
+#[derive(Debug, Clone, Copy)]
+pub struct LutSpec {
+    /// Declared bound: a bucket table is dropped unless every verified
+    /// interpolated row lands within this relative error of the full
+    /// model. Exact grid hits are bit-identical by construction.
+    pub max_rel_err: f64,
+    /// Knots per axis when an axis has more distinct observed values
+    /// than this (it then becomes a uniform linspace over the observed
+    /// range); axes at or under it keep the exact observed values.
+    pub resolution: usize,
+    /// Per-bucket table size cap (product of axis knot counts). A bucket
+    /// whose grid would exceed this gets no table and stays on SoA.
+    pub max_table_entries: usize,
+}
+
+impl Default for LutSpec {
+    fn default() -> LutSpec {
+        LutSpec { max_rel_err: 0.05, resolution: 33, max_table_entries: 1 << 18 }
+    }
+}
+
+/// One bucket's compiled table: per-axis sorted knots, row-major strides,
+/// and the pre-evaluated model values at every grid point.
+pub struct BucketLut {
+    axes: Vec<Vec<f64>>,
+    strides: Vec<usize>,
+    table: Vec<f64>,
+}
+
+enum Probe {
+    /// Every coordinate hit a knot exactly: the stored model value,
+    /// bit-identical to evaluating the model on this row.
+    Exact(f64),
+    /// Multilinear blend of the surrounding grid corners.
+    Interp(f64),
+    /// Out of grid (or non-finite input): serve from the SoA kernel.
+    Miss,
+}
+
+impl BucketLut {
+    /// Grid points in this table.
+    pub fn entries(&self) -> usize {
+        self.table.len()
+    }
+
+    fn probe(&self, row: &[f64]) -> Probe {
+        let nd = self.axes.len();
+        if row.len() < nd {
+            return Probe::Miss;
+        }
+        let mut base = 0usize;
+        let mut fr = [(0usize, 0.0f64); MAX_INTERP_DIMS];
+        let mut nf = 0usize;
+        for j in 0..nd {
+            let a = &self.axes[j];
+            let v = row[j];
+            // NaN fails both comparisons, so non-finite rows miss here.
+            if !(v >= a[0] && v <= a[a.len() - 1]) {
+                return Probe::Miss;
+            }
+            match a.binary_search_by(|x| x.total_cmp(&v)) {
+                Ok(i) => base += i * self.strides[j],
+                Err(i) => {
+                    // Strictly inside the range, so 1 <= i <= len - 1.
+                    if nf == MAX_INTERP_DIMS {
+                        return Probe::Miss;
+                    }
+                    let (lo, hi) = (a[i - 1], a[i]);
+                    base += (i - 1) * self.strides[j];
+                    fr[nf] = (self.strides[j], (v - lo) / (hi - lo));
+                    nf += 1;
+                }
+            }
+        }
+        if nf == 0 {
+            return Probe::Exact(self.table[base]);
+        }
+        let mut acc = 0.0f64;
+        for corner in 0..(1usize << nf) {
+            let mut w = 1.0f64;
+            let mut idx = base;
+            for (k, &(stride, frac)) in fr[..nf].iter().enumerate() {
+                if corner >> k & 1 == 1 {
+                    w *= frac;
+                    idx += stride;
+                } else {
+                    w *= 1.0 - frac;
+                }
+            }
+            acc += w * self.table[idx];
+        }
+        Probe::Interp(acc)
+    }
+}
+
+/// Lock-free LUT-tier counters (`CacheStats` idiom, but atomics: one
+/// pack is shared immutably across prediction threads).
+#[derive(Default)]
+pub struct LutStats {
+    lookups: AtomicU64,
+    interpolations: AtomicU64,
+    fallbacks: AtomicU64,
+}
+
+/// A snapshot of [`LutStats`], mergeable across engine generations.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct LutCounts {
+    /// Rows served by an exact grid hit (bit-identical to the model).
+    pub lookups: u64,
+    /// Rows served by multilinear interpolation (within the bound).
+    pub interpolations: u64,
+    /// Rows the LUT tier declined (no table, out of grid) while enabled.
+    pub fallbacks: u64,
+}
+
+impl LutCounts {
+    /// Fold another snapshot in (reload-surviving totals).
+    pub fn merge(&self, other: &LutCounts) -> LutCounts {
+        LutCounts {
+            lookups: self.lookups + other.lookups,
+            interpolations: self.interpolations + other.interpolations,
+            fallbacks: self.fallbacks + other.fallbacks,
+        }
+    }
+
+    /// Rows the tier answered (exact + interpolated).
+    pub fn served(&self) -> u64 {
+        self.lookups + self.interpolations
+    }
+}
+
+/// A set of per-bucket compiled tables for one predictor, plus the bound
+/// they were verified against and live counters.
+pub struct LutPack {
+    tables: Vec<Option<BucketLut>>,
+    /// The declared bound every surviving table was verified against.
+    pub bound: f64,
+    /// Largest relative error actually measured on a verified
+    /// interpolated row across all surviving tables (<= `bound`).
+    pub max_rel_err: f64,
+    stats: LutStats,
+}
+
+impl LutPack {
+    /// Compile tables for every bucket with a model, calibrated on the
+    /// feature rows of `plans`.
+    ///
+    /// `dims[b]` is the model's feature dimension for bucket `b` (`None`
+    /// when the bucket has no model). `eval(b, row)` evaluates the full
+    /// model — it must be the exact function the LUT replaces
+    /// (`predict_raw` semantics, floor clamp included).
+    ///
+    /// Per bucket: rows are split even/odd into calibration and held-out
+    /// halves; axis knots come from the calibration half (exact distinct
+    /// values, or a uniform linspace past `spec.resolution`); the table
+    /// is filled by evaluating the model at every grid point; then every
+    /// row of *both* halves that the table would interpolate is checked
+    /// against the full model, and the whole table is dropped if any
+    /// exceeds `spec.max_rel_err`. Buckets whose grid would exceed
+    /// `spec.max_table_entries` (or with no usable rows) get no table.
+    pub fn compile<F>(
+        spec: &LutSpec,
+        dims: &[Option<usize>],
+        plans: &[&LoweredGraph],
+        mut eval: F,
+    ) -> LutPack
+    where
+        F: FnMut(usize, &[f64]) -> Option<f64>,
+    {
+        let mut tables: Vec<Option<BucketLut>> = Vec::with_capacity(dims.len());
+        let mut worst = 0.0f64;
+        for (bi, d) in dims.iter().enumerate() {
+            let built = d
+                .filter(|&d| d > 0 && d <= MAX_DIMS)
+                .and_then(|d| compile_bucket(spec, bi, d, plans, &mut eval));
+            if let Some((lut, err)) = built {
+                worst = worst.max(err);
+                tables.push(Some(lut));
+            } else {
+                tables.push(None);
+            }
+        }
+        LutPack { tables, bound: spec.max_rel_err, max_rel_err: worst, stats: LutStats::default() }
+    }
+
+    /// Serve one row from the compiled tier. `None` means "use the SoA
+    /// kernel" (no table for this bucket, or the row is out of grid);
+    /// both outcomes are counted.
+    pub fn lookup(&self, bucket: usize, row: &[f64]) -> Option<f64> {
+        let Some(Some(lut)) = self.tables.get(bucket).map(Option::as_ref) else {
+            self.stats.fallbacks.fetch_add(1, Ordering::Relaxed);
+            return None;
+        };
+        match lut.probe(row) {
+            Probe::Exact(v) => {
+                self.stats.lookups.fetch_add(1, Ordering::Relaxed);
+                Some(v)
+            }
+            Probe::Interp(v) => {
+                self.stats.interpolations.fetch_add(1, Ordering::Relaxed);
+                Some(v)
+            }
+            Probe::Miss => {
+                self.stats.fallbacks.fetch_add(1, Ordering::Relaxed);
+                None
+            }
+        }
+    }
+
+    /// Buckets that got a verified table.
+    pub fn coverage(&self) -> usize {
+        self.tables.iter().filter(|t| t.is_some()).count()
+    }
+
+    /// Total pre-evaluated grid points across all tables.
+    pub fn table_entries(&self) -> usize {
+        self.tables.iter().flatten().map(BucketLut::entries).sum()
+    }
+
+    /// Snapshot of the tier's counters.
+    pub fn counts(&self) -> LutCounts {
+        LutCounts {
+            lookups: self.stats.lookups.load(Ordering::Relaxed),
+            interpolations: self.stats.interpolations.load(Ordering::Relaxed),
+            fallbacks: self.stats.fallbacks.load(Ordering::Relaxed),
+        }
+    }
+}
+
+/// Build + verify one bucket's table; `None` drops the bucket to SoA.
+/// Returns the table and the worst verified relative error.
+fn compile_bucket<F>(
+    spec: &LutSpec,
+    bi: usize,
+    d: usize,
+    plans: &[&LoweredGraph],
+    eval: &mut F,
+) -> Option<(BucketLut, f64)>
+where
+    F: FnMut(usize, &[f64]) -> Option<f64>,
+{
+    // Gather this bucket's observed (finite, wide-enough) rows.
+    let mut rows: Vec<Vec<f64>> = Vec::new();
+    for p in plans {
+        for (b, row) in p.iter() {
+            if b.index() == bi && row.len() >= d && row[..d].iter().all(|v| v.is_finite()) {
+                rows.push(row[..d].to_vec());
+            }
+        }
+    }
+    if rows.is_empty() {
+        return None;
+    }
+    // Even rows calibrate the grid; odd rows are held out for the
+    // verification pass (which also re-checks the calibration rows —
+    // linspace'd axes make even calibration rows interpolate).
+    let calib: Vec<&Vec<f64>> = rows.iter().step_by(2).collect();
+    let mut axes: Vec<Vec<f64>> = Vec::with_capacity(d);
+    for j in 0..d {
+        let mut vals: Vec<f64> = calib.iter().map(|r| r[j]).collect();
+        vals.sort_by(f64::total_cmp);
+        vals.dedup();
+        if vals.len() > spec.resolution.max(2) {
+            let (lo, hi) = (vals[0], vals[vals.len() - 1]);
+            let n = spec.resolution.max(2);
+            let mut knots: Vec<f64> = (0..n)
+                .map(|i| lo + (hi - lo) * i as f64 / (n - 1) as f64)
+                .collect();
+            knots[n - 1] = hi; // pin the endpoint against rounding
+            knots.dedup();
+            vals = knots;
+        }
+        axes.push(vals);
+    }
+    let mut entries = 1usize;
+    for a in &axes {
+        entries = entries.checked_mul(a.len())?;
+        if entries > spec.max_table_entries {
+            return None;
+        }
+    }
+    // Row-major strides, last axis fastest.
+    let mut strides = vec![0usize; d];
+    let mut s = 1usize;
+    for j in (0..d).rev() {
+        strides[j] = s;
+        s *= axes[j].len();
+    }
+    // Fill: odometer over the cartesian product of knots.
+    let mut table = Vec::with_capacity(entries);
+    let mut idx = vec![0usize; d];
+    let mut point = vec![0.0f64; d];
+    'fill: loop {
+        for j in 0..d {
+            point[j] = axes[j][idx[j]];
+        }
+        table.push(eval(bi, &point)?);
+        for j in (0..d).rev() {
+            idx[j] += 1;
+            if idx[j] < axes[j].len() {
+                continue 'fill;
+            }
+            idx[j] = 0;
+        }
+        break;
+    }
+    debug_assert_eq!(table.len(), entries);
+    let lut = BucketLut { axes, strides, table };
+    // Verify: every row (calibration and held-out) that the table would
+    // interpolate must land within the declared bound of the full model.
+    // Exact hits are bit-identical by construction; misses go to SoA.
+    let mut worst = 0.0f64;
+    for row in &rows {
+        if let Probe::Interp(got) = lut.probe(row) {
+            let want = eval(bi, row)?;
+            let rel = (got - want).abs() / want.abs().max(1e-12);
+            if !(rel <= spec.max_rel_err) {
+                return None;
+            }
+            worst = worst.max(rel);
+        }
+    }
+    Some((lut, worst))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::framework::DeductionMode;
+    use crate::plan;
+    use crate::scenario::Registry;
+
+    /// A deterministic linear "model": LUT interpolation of a linear
+    /// function is exact up to float rounding, so every table survives.
+    fn linear_eval(_b: usize, row: &[f64]) -> Option<f64> {
+        Some(1.0 + row.iter().enumerate().map(|(i, v)| (i + 1) as f64 * v).sum::<f64>())
+    }
+
+    fn sample_plans(sc: &crate::scenario::Scenario) -> Vec<LoweredGraph> {
+        crate::nas::sample_dataset(42, 4)
+            .into_iter()
+            .map(|a| plan::lower(sc, DeductionMode::Full, &a.graph))
+            .collect()
+    }
+
+    #[test]
+    fn compiled_pack_serves_observed_rows_and_counts() {
+        let reg = Registry::with_builtin();
+        let sc = reg.one_large_core("Snapdragon855").expect("builtin soc");
+        let plans = sample_plans(&sc);
+        let refs: Vec<&LoweredGraph> = plans.iter().collect();
+        let nb = crate::plan::interner().len();
+        // Every bucket gets a nominal 4-dim linear model.
+        let dims: Vec<Option<usize>> = vec![Some(4); nb];
+        let pack = LutPack::compile(&LutSpec::default(), &dims, &refs, linear_eval);
+        assert!(pack.coverage() > 0, "no bucket compiled a table");
+        assert!(pack.max_rel_err <= pack.bound);
+        let mut served = 0u64;
+        for p in &plans {
+            for (b, row) in p.iter() {
+                if let Some(got) = pack.lookup(b.index(), row) {
+                    let want = linear_eval(b.index(), row).unwrap();
+                    let rel = (got - want).abs() / want.abs().max(1e-12);
+                    assert!(rel <= pack.bound + 1e-9, "rel={rel}");
+                    served += 1;
+                }
+            }
+        }
+        assert!(served > 0, "pack served nothing on its own calibration rows");
+        let c = pack.counts();
+        assert_eq!(c.served(), served);
+        // Calibration rows with all-knot coordinates are exact hits.
+        assert!(c.lookups > 0, "expected exact grid hits on calibration rows");
+    }
+
+    #[test]
+    fn out_of_grid_and_short_rows_miss() {
+        let lut = BucketLut {
+            axes: vec![vec![0.0, 1.0], vec![10.0, 20.0]],
+            strides: vec![2, 1],
+            table: vec![0.0, 1.0, 2.0, 3.0],
+        };
+        assert!(matches!(lut.probe(&[0.5]), Probe::Miss), "short row must miss");
+        assert!(matches!(lut.probe(&[2.0, 15.0]), Probe::Miss), "out of range must miss");
+        assert!(matches!(lut.probe(&[f64::NAN, 15.0]), Probe::Miss), "NaN must miss");
+        assert!(matches!(lut.probe(&[0.0, 10.0]), Probe::Exact(v) if v == 0.0));
+        // Bilinear midpoint of [0,1,2,3] corners: (0+1+2+3)/4 = 1.5.
+        assert!(matches!(lut.probe(&[0.5, 15.0]), Probe::Interp(v) if (v - 1.5).abs() < 1e-12));
+    }
+
+    #[test]
+    fn merged_counts_accumulate() {
+        let a = LutCounts { lookups: 1, interpolations: 2, fallbacks: 3 };
+        let b = LutCounts { lookups: 10, interpolations: 20, fallbacks: 30 };
+        let m = a.merge(&b);
+        assert_eq!(m, LutCounts { lookups: 11, interpolations: 22, fallbacks: 33 });
+        assert_eq!(m.served(), 33);
+    }
+}

@@ -11,6 +11,7 @@ pub mod cv;
 pub mod forest;
 pub mod gbdt;
 pub mod lasso;
+pub mod lut;
 pub mod matrix;
 pub mod mlp;
 pub(crate) mod soa;
@@ -274,6 +275,14 @@ impl<'a> TrainedModel<'a> {
         match self {
             TrainedModel::Owned(m) => Some(m),
             TrainedModel::External { .. } => None,
+        }
+    }
+
+    /// Feature-vector width this model was trained on.
+    pub fn feature_dim(&self) -> usize {
+        match self {
+            TrainedModel::Owned(m) => m.feature_dim(),
+            TrainedModel::External { standardizer, .. } => standardizer.mean.len(),
         }
     }
 }

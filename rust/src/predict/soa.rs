@@ -18,6 +18,7 @@
 //! lowered plans through [`eval_plan_grouped`].
 
 use crate::plan::LoweredGraph;
+use crate::predict::lut::LutPack;
 use crate::predict::matrix::FeatureMatrix;
 use crate::predict::tree::Tree;
 use crate::predict::{BucketModel, NativeModel};
@@ -280,10 +281,18 @@ impl BucketKernel {
 /// standardization arithmetic, kernel accumulation order, and `max(floor)`
 /// clamp all match `BucketModel::predict_raw_with` operation for
 /// operation.
+///
+/// When a compiled [`LutPack`] is supplied, each unit is first offered to
+/// the LUT tier: an in-grid row is answered from the table (exact hits
+/// bit-identical to the model, interpolations within the pack's verified
+/// bound) and skips both the kernel matrix and the scalar path; a miss
+/// flows through the SoA/scalar machinery unchanged, so `lut: None` is
+/// exactly the pre-LUT behaviour.
 pub(crate) fn eval_plan_grouped<F>(
     p: &LoweredGraph,
     kernels: &[Option<BucketKernel>],
     fallback_ms: f64,
+    lut: Option<&LutPack>,
     mut scalar_eval: F,
 ) -> (Vec<f64>, usize)
 where
@@ -294,6 +303,18 @@ where
     let mut fallback = 0usize;
     let mut scratch: Vec<f64> = Vec::new();
     let nb = kernels.len();
+    // LUT pre-pass: serve what the compiled tier can, mark it done.
+    let mut lut_served: Vec<bool> = Vec::new();
+    if let Some(pack) = lut {
+        lut_served = vec![false; n];
+        for (i, (b, row)) in p.iter().enumerate() {
+            if let Some(v) = pack.lookup(b.index(), row) {
+                out[i] = v;
+                lut_served[i] = true;
+            }
+        }
+    }
+    let served = |i: usize| !lut_served.is_empty() && lut_served[i];
     let kernel_ok = |bi: usize, row: &[f64]| match kernels.get(bi) {
         Some(Some(k)) => k.usable() && row.len() >= k.dim(),
         _ => false,
@@ -301,8 +322,8 @@ where
     // Pass 1: count kernel-eligible units per bucket; everything else is
     // evaluated scalar in place.
     let mut counts = vec![0u32; nb];
-    for (b, row) in p.iter() {
-        if kernel_ok(b.index(), row) {
+    for (i, (b, row)) in p.iter().enumerate() {
+        if !served(i) && kernel_ok(b.index(), row) {
             counts[b.index()] += 1;
         }
     }
@@ -313,6 +334,9 @@ where
     let mut order = vec![0u32; starts[nb] as usize];
     let mut cursor: Vec<u32> = starts[..nb].to_vec();
     for (i, (b, row)) in p.iter().enumerate() {
+        if served(i) {
+            continue;
+        }
         if kernel_ok(b.index(), row) {
             order[cursor[b.index()] as usize] = i as u32;
             cursor[b.index()] += 1;

@@ -290,6 +290,61 @@ impl Tree {
         base + (self.nodes.len() - 1) as u32
     }
 
+    /// Rebuild one tree from the flat SoA arenas [`flatten_into`] writes
+    /// (the binary bundle format stores trees in exactly that layout).
+    /// `start..=root` is this tree's absolute node span; indices inside
+    /// the arenas are absolute too. The encoding is exactly invertible:
+    /// a leaf is a self-loop (`left == right == own index`) carrying
+    /// `threshold == +inf` and a finite value, a split points strictly
+    /// downward within the span and carries a finite threshold — anything
+    /// else is a corruption error, never a panic or an OOB read.
+    pub(crate) fn from_flat(
+        feature: &[u32],
+        threshold: &[f64],
+        left: &[u32],
+        right: &[u32],
+        value: &[f64],
+        start: usize,
+        root: usize,
+    ) -> Result<Tree, String> {
+        let len = feature.len();
+        if threshold.len() != len || left.len() != len || right.len() != len || value.len() != len {
+            return Err("tree arenas: column length mismatch".into());
+        }
+        if start > root || root >= len {
+            return Err(format!("tree span {start}..={root} out of bounds (arena {len})"));
+        }
+        let mut nodes = Vec::with_capacity(root - start + 1);
+        for i in start..=root {
+            let (l, r) = (left[i] as usize, right[i] as usize);
+            if l == i && r == i {
+                if threshold[i] != f64::INFINITY {
+                    return Err(format!("tree node {i}: leaf without +inf threshold"));
+                }
+                if !value[i].is_finite() {
+                    return Err(format!("tree node {i}: non-finite leaf value"));
+                }
+                nodes.push(NodeKind::Leaf { value: value[i] });
+            } else {
+                if !threshold[i].is_finite() {
+                    return Err(format!("tree node {i}: non-finite split threshold"));
+                }
+                if l < start || l >= i || r < start || r >= i {
+                    return Err(format!(
+                        "tree node {i}: child index out of order (left {l}, right {r})"
+                    ));
+                }
+                nodes.push(NodeKind::Split {
+                    feature: feature[i] as usize,
+                    threshold: threshold[i],
+                    left: l - start,
+                    right: r - start,
+                });
+            }
+        }
+        Ok(Tree { nodes })
+    }
+
     /// Serialize the node arena for `engine::bundle`: each node is a compact
     /// array, `[0, value]` for leaves and `[1, feature, threshold, left,
     /// right]` for splits. f64 values round-trip bit-exactly through

@@ -1,8 +1,9 @@
 //! The bundle fleet: a directory of predictor bundles behind one
 //! hot-swappable engine.
 //!
-//! `BundleFleet::load` scans a directory for `*.json` predictor bundles
-//! (v2 or v3 — [`crate::engine::PredictorBundle::load`] handles both),
+//! `BundleFleet::load` scans a directory for `*.json` and `*.bin`
+//! predictor bundles (JSON v2/v3 or the binary format —
+//! [`crate::engine::PredictorBundle::load_auto`] sniffs the magic),
 //! builds one multi-bundle [`LatencyEngine`], and hands out the engine as
 //! an `Arc` clone per batch. `reload` builds a **complete replacement
 //! engine first** and only then swaps the `Arc` under a write lock, so:
@@ -11,13 +12,15 @@
 //!   (their `Arc` keeps the old generation alive until they finish);
 //! - a reload that fails — unreadable directory, corrupt bundle — leaves
 //!   the serving engine untouched and returns a typed error;
-//! - plan-cache counters survive swaps: the retiring engine's
-//!   [`CacheStats`] are folded into a running total, and
-//!   [`plan_cache_stats`](BundleFleet::plan_cache_stats) reports
-//!   retired + live merged (the `CacheStats::merged` contract).
+//! - plan-cache and LUT-tier counters survive swaps: the retiring
+//!   engine's [`CacheStats`] and [`LutCounts`] are folded into running
+//!   totals, and [`plan_cache_stats`](BundleFleet::plan_cache_stats) /
+//!   [`lut_counts`](BundleFleet::lut_counts) report retired + live
+//!   merged.
 
 use crate::engine::{EngineBuilder, LatencyEngine};
 use crate::exec_pool::CacheStats;
+use crate::predict::lut::{LutCounts, LutSpec};
 use std::path::{Path, PathBuf};
 use std::sync::{Arc, RwLock};
 
@@ -29,32 +32,49 @@ struct FleetState {
     bundles: usize,
     /// Cache counters accumulated by engines that have been swapped out.
     retired_cache: CacheStats,
+    /// LUT-tier counters accumulated by engines that have been swapped out.
+    retired_lut: LutCounts,
 }
 
 /// A directory of bundles serving as one engine, with hot reload.
 pub struct BundleFleet {
     dir: PathBuf,
     threads: Option<usize>,
+    /// Compile the LUT tier into every built engine (initial load and
+    /// every reload) when set — the serve daemon's `--lut` flag.
+    lut: Option<LutSpec>,
     state: RwLock<FleetState>,
 }
 
 impl BundleFleet {
-    /// Load every `*.json` bundle in `dir` (sorted by filename — load
-    /// order is route priority for scenarios served by several bundles)
-    /// into one engine. An empty or unreadable directory is an error: a
-    /// daemon with nothing to serve should fail at startup, not at the
-    /// first request.
+    /// Load every `*.json` / `*.bin` bundle in `dir` (sorted by filename —
+    /// load order is route priority for scenarios served by several
+    /// bundles) into one engine. An empty or unreadable directory is an
+    /// error: a daemon with nothing to serve should fail at startup, not
+    /// at the first request.
     pub fn load(dir: impl AsRef<Path>, threads: Option<usize>) -> Result<BundleFleet, ServeError> {
+        Self::load_opts(dir, threads, None)
+    }
+
+    /// [`load`](Self::load), optionally compiling the LUT predictor tier
+    /// into the engine (and into every hot-reloaded generation).
+    pub fn load_opts(
+        dir: impl AsRef<Path>,
+        threads: Option<usize>,
+        lut: Option<LutSpec>,
+    ) -> Result<BundleFleet, ServeError> {
         let dir = dir.as_ref().to_path_buf();
-        let (engine, bundles) = Self::build_engine(&dir, threads)?;
+        let (engine, bundles) = Self::build_engine(&dir, threads, lut.as_ref())?;
         Ok(BundleFleet {
             dir,
             threads,
+            lut,
             state: RwLock::new(FleetState {
                 engine: Arc::new(engine),
                 generation: 1,
                 bundles,
                 retired_cache: CacheStats::default(),
+                retired_lut: LutCounts::default(),
             }),
         })
     }
@@ -64,12 +84,14 @@ impl BundleFleet {
             .map_err(|e| ServeError::Io(format!("reading bundle dir {}: {e}", dir.display())))?;
         let mut files: Vec<PathBuf> = entries
             .filter_map(|e| e.ok().map(|e| e.path()))
-            .filter(|p| p.extension().and_then(|x| x.to_str()) == Some("json"))
+            .filter(|p| {
+                matches!(p.extension().and_then(|x| x.to_str()), Some("json") | Some("bin"))
+            })
             .collect();
         files.sort();
         if files.is_empty() {
             return Err(ServeError::Config(format!(
-                "no *.json predictor bundles in {} (train some with `edgelat train`)",
+                "no *.json or *.bin predictor bundles in {} (train some with `edgelat train`)",
                 dir.display()
             )));
         }
@@ -79,6 +101,7 @@ impl BundleFleet {
     fn build_engine(
         dir: &Path,
         threads: Option<usize>,
+        lut: Option<&LutSpec>,
     ) -> Result<(LatencyEngine, usize), ServeError> {
         let files = Self::bundle_files(dir)?;
         let n = files.len();
@@ -90,6 +113,9 @@ impl BundleFleet {
         }
         if let Some(t) = threads {
             builder = builder.threads(t);
+        }
+        if let Some(spec) = lut {
+            builder = builder.lut(spec.clone());
         }
         let engine = builder.build().map_err(ServeError::Engine)?;
         Ok((engine, n))
@@ -128,10 +154,11 @@ impl BundleFleet {
     /// generation for the whole rebuild, and a failed rebuild changes
     /// nothing. Returns the new generation and its scenario ids.
     pub fn reload(&self) -> Result<(u64, usize, Vec<String>), ServeError> {
-        let (engine, bundles) = Self::build_engine(&self.dir, self.threads)?;
+        let (engine, bundles) = Self::build_engine(&self.dir, self.threads, self.lut.as_ref())?;
         let ids: Vec<String> = engine.scenario_ids().iter().map(|s| s.to_string()).collect();
         let mut st = self.state.write().unwrap();
         st.retired_cache = st.retired_cache.merge(&st.engine.cache_stats());
+        st.retired_lut = st.retired_lut.merge(&st.engine.lut_counts());
         st.engine = Arc::new(engine);
         st.generation += 1;
         st.bundles = bundles;
@@ -144,12 +171,24 @@ impl BundleFleet {
         let st = self.state.read().unwrap();
         st.retired_cache.merge(&st.engine.cache_stats())
     }
+
+    /// LUT-tier counters over the fleet's whole lifetime (all zero when
+    /// the fleet was loaded without the LUT tier).
+    pub fn lut_counts(&self) -> LutCounts {
+        let st = self.state.read().unwrap();
+        st.retired_lut.merge(&st.engine.lut_counts())
+    }
+
+    /// Whether the live engine carries a compiled LUT tier.
+    pub fn lut_enabled(&self) -> bool {
+        self.state.read().unwrap().engine.lut_enabled()
+    }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::engine::PredictRequest;
+    use crate::engine::{PredictRequest, PredictorBundle};
 
     /// The golden-trace fixture: a handcrafted all-integer Lasso bundle
     /// for Snapdragon855/cpu/1L/fp32 — loads instantly, no training.
@@ -200,6 +239,54 @@ mod tests {
     }
 
     #[test]
+    fn binary_bundles_load_and_hot_reload_transparently() {
+        let dir =
+            std::env::temp_dir().join(format!("edgelat_fleet_bin_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        // Convert the golden JSON fixture to the binary format on disk.
+        let j = crate::util::Json::parse(GOLDEN_BUNDLE).unwrap();
+        let b = PredictorBundle::from_json(&j).expect("golden parses");
+        b.save_bin(dir.join("a_golden.bin")).expect("bin saved");
+        let fleet = BundleFleet::load(&dir, None).expect("fleet loads .bin");
+        assert_eq!(fleet.scenario_ids(), vec!["Snapdragon855/cpu/1L/fp32".to_string()]);
+        let g = crate::nas::sample_dataset(3, 1).remove(0).graph;
+        let req = PredictRequest::new(&g, "Snapdragon855/cpu/1L/fp32");
+        let from_bin = fleet.engine().predict(&req).expect("served from .bin");
+        // The binary re-encoding is lossless: predictions agree bit-for-
+        // bit with an engine built from the JSON fixture.
+        let json_dir = fixture_dir("binref");
+        let json_fleet = BundleFleet::load(&json_dir, None).expect("fleet loads .json");
+        let from_json = json_fleet.engine().predict(&req).expect("served from .json");
+        assert_eq!(from_bin.e2e_ms.to_bits(), from_json.e2e_ms.to_bits());
+        // Hot reload keeps working with binary bundles on disk.
+        let (generation, bundles, _) = fleet.reload().expect("reload over .bin");
+        assert_eq!((generation, bundles), (2, 1));
+        let _ = std::fs::remove_dir_all(&dir);
+        let _ = std::fs::remove_dir_all(&json_dir);
+    }
+
+    #[test]
+    fn lut_fleet_counts_survive_reload() {
+        let dir = fixture_dir("lut");
+        let fleet = BundleFleet::load_opts(&dir, None, Some(LutSpec::default()))
+            .expect("fleet loads with LUT tier");
+        assert!(fleet.lut_enabled());
+        let g = crate::nas::sample_dataset(5, 1).remove(0).graph;
+        let req = PredictRequest::new(&g, "Snapdragon855/cpu/1L/fp32");
+        fleet.engine().predict(&req).expect("served");
+        let before = fleet.lut_counts();
+        // Every plan row either hit the tier or was counted as a fallback.
+        assert!(before.served() + before.fallbacks > 0);
+        let (generation, _, _) = fleet.reload().expect("reload");
+        assert_eq!(generation, 2);
+        assert!(fleet.lut_enabled(), "reloaded generation keeps the LUT tier");
+        // Retired counters were folded in, not dropped.
+        let after = fleet.lut_counts();
+        assert!(after.served() + after.fallbacks >= before.served() + before.fallbacks);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
     fn failed_reload_leaves_the_live_engine_untouched() {
         let dir = fixture_dir("failpath");
         let fleet = BundleFleet::load(&dir, None).expect("fleet loads");
@@ -222,7 +309,7 @@ mod tests {
         let dir = std::env::temp_dir().join(format!("edgelat_fleet_empty_{}", std::process::id()));
         std::fs::create_dir_all(&dir).unwrap();
         let err = BundleFleet::load(&dir, None).expect_err("empty dir rejected");
-        assert!(err.to_string().contains("no *.json"), "{err}");
+        assert!(err.to_string().contains("no *.json or *.bin"), "{err}");
         let _ = std::fs::remove_dir_all(&dir);
         let err = BundleFleet::load("/no/such/dir/anywhere", None)
             .expect_err("missing dir rejected");

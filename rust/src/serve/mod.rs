@@ -460,6 +460,21 @@ fn stats_json(sh: &Shared) -> Json {
                 ("hit_rate", Json::num(cache.hit_rate())),
             ]),
         ),
+        (
+            // The compiled LUT predictor tier (`--lut`): counters over
+            // the fleet's lifetime, reload-surviving like plan_cache.
+            // All zero (enabled=false) when serving without the tier.
+            "lut",
+            {
+                let lut = sh.fleet.lut_counts();
+                Json::obj(vec![
+                    ("enabled", Json::Bool(sh.fleet.lut_enabled())),
+                    ("lookups", Json::num(lut.lookups as f64)),
+                    ("interpolations", Json::num(lut.interpolations as f64)),
+                    ("fallbacks", Json::num(lut.fallbacks as f64)),
+                ])
+            },
+        ),
     ])
 }
 
@@ -473,8 +488,8 @@ mod tests {
         assert_eq!(ServeError::Draining.to_string(), "server is draining");
         assert!(ServeError::Io("reading bundle dir /x: gone".into()).to_string().contains("/x"));
         assert_eq!(
-            ServeError::Config("no *.json predictor bundles in /y".into()).to_string(),
-            "no *.json predictor bundles in /y"
+            ServeError::Config("no *.json or *.bin predictor bundles in /y".into()).to_string(),
+            "no *.json or *.bin predictor bundles in /y"
         );
     }
 

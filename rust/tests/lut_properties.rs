@@ -1,0 +1,200 @@
+//! Property tests for the compiled LUT tier across the whole scenario
+//! universe: for every builtin scenario (all 72) under every deduction
+//! mode, a LUT-served prediction is within the compile-time relative
+//! error bound of the scalar reference on every plan row; rows the tier
+//! declines (no table, out of grid) fall back **bit-identically**; and
+//! the engine's opt-in LUT tier serves real traffic within the bound
+//! while its counters account for every row.
+
+use edgelat::engine::{EngineBuilder, PredictRequest, PredictorBundle};
+use edgelat::features::Standardizer;
+use edgelat::framework::{DeductionMode, ScenarioPredictor};
+use edgelat::graph::Graph;
+use edgelat::plan::LoweredGraph;
+use edgelat::predict::lasso::Lasso;
+use edgelat::predict::lut::LutSpec;
+use edgelat::predict::{BucketModel, Method, NativeModel, TrainedModel};
+use edgelat::scenario::Registry;
+use std::collections::BTreeMap;
+
+const MODES: [DeductionMode; 3] =
+    [DeductionMode::Full, DeductionMode::NoFusion, DeductionMode::NoSelection];
+
+fn graphs(seed: u64, n: usize) -> Vec<Graph> {
+    edgelat::nas::sample_dataset(seed, n).into_iter().map(|a| a.graph).collect()
+}
+
+/// A deterministic Lasso predictor for one (scenario, mode): one linear
+/// model per bucket observed in `plans`, dimensioned to the narrowest
+/// observed row. Linear models make LUT interpolation exact up to float
+/// rounding, so the bound check isolates the *tier's* behaviour (grid
+/// construction, probing, fallback) from model curvature.
+fn linear_predictor<'a>(
+    sc: &edgelat::scenario::Scenario,
+    mode: DeductionMode,
+    plans: &[LoweredGraph],
+) -> ScenarioPredictor<'a> {
+    let it = edgelat::plan::interner();
+    let mut dims: BTreeMap<String, usize> = BTreeMap::new();
+    for p in plans {
+        for (b, row) in p.iter() {
+            let d = dims.entry(it.name(b).to_string()).or_insert(row.len());
+            *d = (*d).min(row.len()).max(1);
+        }
+    }
+    let mut models = BTreeMap::new();
+    for (name, d) in dims {
+        let weights: Vec<f64> = (0..d).map(|j| 1e-3 * (j + 1) as f64).collect();
+        models.insert(
+            name,
+            TrainedModel::Owned(BucketModel {
+                standardizer: Standardizer { mean: vec![0.0; d], std: vec![1.0; d] },
+                model: NativeModel::Lasso(Lasso { weights, intercept: 5.0, alpha: 0.01 }),
+                floor: 0.0,
+            }),
+        );
+    }
+    ScenarioPredictor::from_parts((*sc).clone(), Method::Lasso, mode, models, 1.0, 0.5)
+}
+
+#[test]
+fn lut_error_bound_holds_across_all_builtin_scenarios_and_modes() {
+    let reg = Registry::with_builtin();
+    assert_eq!(reg.all().len(), 72, "the builtin scenario universe");
+    // Small grids keep 72 x 3 compilations cheap; the bound contract is
+    // resolution-independent.
+    let spec = LutSpec { max_rel_err: 0.05, resolution: 5, max_table_entries: 4096 };
+    let gs = graphs(77, 2);
+    let mut total_served = 0u64;
+    let mut total_tables = 0usize;
+    for sc in reg.all() {
+        for mode in MODES {
+            let pred = linear_predictor(sc, mode, &[]);
+            let plans: Vec<LoweredGraph> = gs.iter().map(|g| pred.lower(g)).collect();
+            // Rebuild with the buckets this (scenario, mode) actually
+            // produces, then compile tables on the same plans.
+            let pred = linear_predictor(sc, mode, &plans);
+            let refs: Vec<&LoweredGraph> = plans.iter().collect();
+            let pack = pred.compile_lut(&spec, &refs);
+            total_tables += pack.coverage();
+            assert!(pack.max_rel_err <= pack.bound, "{} {:?}", sc.id, mode);
+            for (g, pl) in gs.iter().zip(&plans) {
+                let want = pred.predict_plan_rows_scalar(pl);
+                let got = pred.predict_plan_rows_lut(pl, Some(&pack));
+                assert_eq!(want.len(), got.len());
+                for (i, (w, v)) in want.iter().zip(&got).enumerate() {
+                    let rel = (w - v).abs() / w.abs().max(1e-12);
+                    assert!(
+                        rel <= spec.max_rel_err + 1e-9,
+                        "{} {:?} {} unit {i}: lut {v} vs scalar {w} (rel {rel})",
+                        sc.id,
+                        mode,
+                        g.name,
+                    );
+                }
+            }
+            total_served += pack.counts().served();
+        }
+    }
+    assert!(total_tables > 0, "no scenario compiled any table");
+    assert!(total_served > 0, "the LUT tier never served a row");
+}
+
+#[test]
+fn rows_without_tables_fall_back_bit_identically() {
+    // A pack compiled from no plans has no tables: every row falls back,
+    // and the LUT path must be bit-identical to the plain SoA path.
+    let reg = Registry::with_builtin();
+    let sc = reg.one_large_core("Exynos9820").expect("builtin soc");
+    let gs = graphs(78, 2);
+    let pred = linear_predictor(&sc, DeductionMode::Full, &[]);
+    let plans: Vec<LoweredGraph> = gs.iter().map(|g| pred.lower(g)).collect();
+    let pred = linear_predictor(&sc, DeductionMode::Full, &plans);
+    let empty = pred.compile_lut(&LutSpec::default(), &[]);
+    assert_eq!(empty.coverage(), 0);
+    let mut rows = 0u64;
+    for pl in &plans {
+        let plain = pred.predict_plan_rows(pl);
+        let via_lut = pred.predict_plan_rows_lut(pl, Some(&empty));
+        for (a, b) in plain.iter().zip(&via_lut) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        rows += plain.len() as u64;
+    }
+    let c = empty.counts();
+    assert_eq!(c.fallbacks, rows, "every row must be counted as a fallback");
+    assert_eq!(c.served(), 0);
+}
+
+#[test]
+fn out_of_grid_rows_fall_back_bit_identically_to_the_scalar_path() {
+    // Compile on one workload, probe with another: rows outside the
+    // calibration grid must be declined and served bit-identically to the
+    // plain path (exact hits are bit-identical by construction, so only
+    // interpolated rows may differ — and those stay within the bound).
+    let reg = Registry::with_builtin();
+    let sc = reg.one_large_core("Snapdragon855").expect("builtin soc");
+    let calib = graphs(79, 2);
+    let probe = graphs(4242, 2);
+    let pred = linear_predictor(&sc, DeductionMode::Full, &[]);
+    let cal_plans: Vec<LoweredGraph> = calib.iter().map(|g| pred.lower(g)).collect();
+    let pred = linear_predictor(&sc, DeductionMode::Full, &cal_plans);
+    let refs: Vec<&LoweredGraph> = cal_plans.iter().collect();
+    let spec = LutSpec { max_rel_err: 0.05, resolution: 5, max_table_entries: 4096 };
+    let pack = pred.compile_lut(&spec, &refs);
+    let before = pack.counts();
+    for g in &probe {
+        let pl = pred.lower(g);
+        let want = pred.predict_plan_rows_scalar(&pl);
+        let got = pred.predict_plan_rows_lut(&pl, Some(&pack));
+        for (w, v) in want.iter().zip(&got) {
+            // Within the bound if a table answered, bit-identical if not.
+            let rel = (w - v).abs() / w.abs().max(1e-12);
+            assert!(rel <= spec.max_rel_err + 1e-9, "lut {v} vs scalar {w}");
+        }
+    }
+    let after = pack.counts();
+    assert!(
+        after.fallbacks > before.fallbacks,
+        "an unseen workload should push some rows off the grid"
+    );
+}
+
+#[test]
+fn engine_lut_tier_is_opt_in_bounded_and_counted() {
+    let sc = edgelat::scenario::one_large_core("HelioP35").unwrap();
+    let train_g = graphs(6100, 12);
+    let profiles = edgelat::profiler::profile_set(&sc, &train_g, 6100, 3);
+    let bundle =
+        PredictorBundle::train(&sc, &profiles, Method::Gbdt, DeductionMode::Full, 4).unwrap();
+
+    let plain = EngineBuilder::new().bundle(bundle.clone()).build().unwrap();
+    assert!(!plain.lut_enabled(), "the LUT tier is opt-in");
+    assert_eq!(plain.lut_tables(), 0);
+
+    let lut = EngineBuilder::new()
+        .bundle(bundle)
+        .lut(LutSpec::default())
+        .build()
+        .unwrap();
+    assert!(lut.lut_enabled());
+
+    // Predict the engine's own calibration workload: rows land in-grid,
+    // so the tier actually serves, and every answer stays within the
+    // bound of the plain engine's (scalar-compiled) numbers.
+    let probes: Vec<Graph> =
+        edgelat::nas::sample_dataset(0xed6e, 4).into_iter().map(|a| a.graph).collect();
+    for g in &probes {
+        let req = PredictRequest::new(g, sc.id.clone());
+        let a = plain.predict(&req).expect("plain serve").e2e_ms;
+        let b = lut.predict(&req).expect("lut serve").e2e_ms;
+        let rel = (a - b).abs() / a.abs().max(1e-12);
+        assert!(rel <= LutSpec::default().max_rel_err + 1e-9, "{}: {a} vs {b}", g.name);
+    }
+    let counts = lut.lut_counts();
+    assert!(
+        counts.served() + counts.fallbacks > 0,
+        "an enabled tier must account for every row it saw"
+    );
+    assert!(lut.lut_tables() > 0, "calibration compiled no tables");
+}

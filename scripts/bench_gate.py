@@ -28,7 +28,18 @@ Fails on:
   and flow through the predictor, and the vectorized SoA kernels must not
   be slower than the scalar per-row reference on the same standardized
   matrices — below 1 the structure-of-arrays layout has regressed into
-  pure overhead.
+  pure overhead;
+- a regressed binary bundle load (bundle_load.speedup < 1, or
+  non-positive/non-finite bundle_load.json_ms / bundle_load.bin_ms): the
+  zero-copy binary decode of a bundle must never lose to parsing the
+  same models from JSON text in the same process;
+- a broken compiled-LUT tier (lut.predictions_per_s <= 0,
+  lut.lut_vs_soa_speedup < 1, or lut.max_rel_err outside
+  [0, lut.bound]): the table probe must not be slower than the SoA model
+  scan it replaces on identical in-grid plan rows, and the measured
+  interpolation error must respect the compile-time bound the tables
+  were verified against — above it, a table that should have been
+  dropped is serving bad numbers.
 
 Both checks are ratios between two workloads timed back-to-back on the
 same machine, never absolute wall-clock thresholds, so they are robust to
@@ -55,6 +66,16 @@ MIN_SWEEP_SPEEDUP = 0.8
 # ratios there is no runner-topology excuse here: breadth-first evaluation
 # over a dense matrix must never lose to walking the same trees row by row.
 MIN_VECTORIZED_SPEEDUP = 1.0
+
+# Binary bundle decode vs JSON parse of the same models, cold from disk,
+# back to back in one process. A sectioned memcpy-style decode losing to
+# text float parsing means the format regressed into pure overhead.
+MIN_BUNDLE_LOAD_SPEEDUP = 1.0
+
+# The compiled LUT table probe vs the SoA model scan on identical in-grid
+# plan rows. Below 1 the direct-lookup tier costs more than the model
+# evaluation it is supposed to short-circuit.
+MIN_LUT_SPEEDUP = 1.0
 
 
 def fail(msg: str) -> int:
@@ -179,6 +200,58 @@ def main() -> int:
             f"scalar reference (required: >= {MIN_VECTORIZED_SPEEDUP:.1f}x)"
         )
 
+    bundle_load = derived.get("bundle_load")
+    if not isinstance(bundle_load, dict):
+        return fail(f"missing derived.bundle_load section in {path}")
+    for key in ("json_ms", "bin_ms"):
+        v = bundle_load.get(key)
+        if not isinstance(v, (int, float)) or not math.isfinite(v) or v <= 0:
+            return fail(f"bundle_load {key} must be a finite positive time, got {v!r}")
+    bin_speedup = bundle_load.get("speedup")
+    if (
+        not isinstance(bin_speedup, (int, float))
+        or not math.isfinite(bin_speedup)
+        or bin_speedup <= 0
+    ):
+        return fail(f"bundle_load speedup must be > 0, got {bin_speedup!r}")
+    if bin_speedup < MIN_BUNDLE_LOAD_SPEEDUP:
+        return fail(
+            f"binary bundle load is {1.0 / bin_speedup:.2f}x slower than the "
+            f"JSON parse (required: >= {MIN_BUNDLE_LOAD_SPEEDUP:.1f}x)"
+        )
+
+    lut = derived.get("lut")
+    if not isinstance(lut, dict):
+        return fail(f"missing derived.lut section in {path}")
+    lut_pps = lut.get("predictions_per_s")
+    if not isinstance(lut_pps, (int, float)) or not math.isfinite(lut_pps) or lut_pps <= 0:
+        return fail(f"lut predictions_per_s must be > 0, got {lut_pps!r}")
+    lut_speedup = lut.get("lut_vs_soa_speedup")
+    if (
+        not isinstance(lut_speedup, (int, float))
+        or not math.isfinite(lut_speedup)
+        or lut_speedup <= 0
+    ):
+        return fail(f"lut lut_vs_soa_speedup must be > 0, got {lut_speedup!r}")
+    if lut_speedup < MIN_LUT_SPEEDUP:
+        return fail(
+            f"the LUT table probe is {1.0 / lut_speedup:.2f}x slower than the "
+            f"SoA model scan (required: >= {MIN_LUT_SPEEDUP:.1f}x)"
+        )
+    lut_bound = lut.get("bound")
+    if not isinstance(lut_bound, (int, float)) or not math.isfinite(lut_bound) or lut_bound <= 0:
+        return fail(f"lut bound must be a finite positive error bound, got {lut_bound!r}")
+    lut_err = lut.get("max_rel_err")
+    if (
+        not isinstance(lut_err, (int, float))
+        or not math.isfinite(lut_err)
+        or not 0.0 <= lut_err <= lut_bound
+    ):
+        return fail(
+            f"lut max_rel_err must be in [0, {lut_bound!r}] (the bound the "
+            f"tables were verified against), got {lut_err!r}"
+        )
+
     lowering = derived.get("lowering", {})
     graphs_per_s = lowering.get("graphs_per_s")
     lowering_txt = (
@@ -198,6 +271,11 @@ def main() -> int:
         f"({fleet.get('predictions_per_s'):.0f} predictions/s, "
         f"vectorized_speedup={vec_speedup:.2f}x, "
         f"threshold {MIN_VECTORIZED_SPEEDUP}), "
+        f"bundle_load={bin_speedup:.2f}x vs JSON "
+        f"(threshold {MIN_BUNDLE_LOAD_SPEEDUP}), "
+        f"lut={lut_speedup:.2f}x vs SoA "
+        f"({lut_pps:.0f} predictions/s, "
+        f"max_rel_err {lut_err:.4f} <= bound {lut_bound}), "
         f"search={cps:.0f} candidates/s "
         f"(plan-cache hit rate {hit_rate:.2f}), "
         f"serve={rps:.0f} req/s "

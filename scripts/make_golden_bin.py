@@ -1,0 +1,258 @@
+#!/usr/bin/env python3
+"""Generate the binary golden bundle fixture from the JSON golden.
+
+Reads rust/tests/data/golden_bundle.json (the pinned v2 JSON golden) and
+the committed Snapdragon855 device spec, and writes
+rust/tests/data/golden_bundle.bin: the same bundle in the binary format
+of rust/src/engine/binfmt.rs, byte-for-byte what
+`PredictorBundle::to_bin_bytes()` emits for the loaded golden. The Rust
+test `binfmt_roundtrip::golden_bin_fixture_is_byte_stable` decodes the
+committed bytes, re-encodes, and asserts equality — so this script and
+the Rust encoder pin each other.
+
+The only subtle part is the embedded scenario descriptor, which is
+*text*: compact JSON with BTreeMap-sorted keys and Rust's f64 Display
+(integral values < 1e15 print as integers, everything else shortest
+repr, never scientific notation). Python's repr() produces the same
+shortest decimal for the magnitudes in the committed specs; the emitter
+asserts no exponent sneaks in.
+
+Usage: make_golden_bin.py   (run from the repo root; rewrites the .bin)
+"""
+
+import json
+import os
+import struct
+import sys
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+GOLDEN_JSON = os.path.join(ROOT, "rust", "tests", "data", "golden_bundle.json")
+SPEC_JSON = os.path.join(ROOT, "rust", "src", "device", "specs", "snapdragon855.json")
+OUT = os.path.join(ROOT, "rust", "tests", "data", "golden_bundle.bin")
+
+MAGIC = b"EDGELATB"
+VERSION = 1
+HEADER_LEN = 104
+
+# plan::BucketInterner::builtin() — OpType::all() names + the two
+# kernel-selection-only buckets, in stable id order.
+INTERNER = [
+    "Conv2D",
+    "GroupedConv2D",
+    "DepthwiseConv2D",
+    "FullyConnected",
+    "Pooling",
+    "Mean",
+    "Concat/Split",
+    "Pad",
+    "ElementWise",
+    "Activation",
+    "Softmax",
+    "Reshape",
+    "Winograd",
+    "NaiveGroupedConv2D",
+]
+
+METHOD_CODES = {"Lasso": 0, "RF": 1, "GBDT": 2}
+MODE_CODES = {"full": 0, "nofusion": 1, "noselection": 2}
+
+# soc_to_json field sets (device/spec.rs) — the descriptor embeds exactly
+# these, not the spec file's format/version/combos envelope.
+SOC_FIELDS = [
+    "name",
+    "platform",
+    "clusters",
+    "gpu",
+    "mem_gbps",
+    "cpu_op_overhead_us",
+    "cpu_overhead_ms",
+    "hetero_sync_mult",
+    "quant_ew_penalty",
+    "noise_base",
+    "noise_per_small_core",
+    "noise_per_extra_core",
+]
+CLUSTER_FIELDS = ["kind", "name", "count", "ghz", "flops_per_cycle", "int8_speedup", "stream_gbps"]
+GPU_FIELDS = [
+    "kind",
+    "name",
+    "gflops",
+    "mem_gbps",
+    "dispatch_us",
+    "overhead_ms",
+    "overhead_sigma",
+    "run_sigma",
+]
+
+
+def emit_json(v) -> str:
+    """Mirror util::Json::write: compact, keys BTreeMap-sorted, Rust f64
+    Display for numbers."""
+    if v is True:
+        return "true"
+    if v is False:
+        return "false"
+    if isinstance(v, (int, float)):
+        f = float(v)
+        if f == int(f) and abs(f) < 1e15:
+            return str(int(f))
+        r = repr(f)
+        assert "e" not in r and "E" not in r, f"exponent form {r} diverges from Rust Display"
+        return r
+    if isinstance(v, str):
+        out = ['"']
+        for c in v:
+            if c == '"':
+                out.append('\\"')
+            elif c == "\\":
+                out.append("\\\\")
+            elif c == "\n":
+                out.append("\\n")
+            elif c == "\t":
+                out.append("\\t")
+            elif c == "\r":
+                out.append("\\r")
+            elif ord(c) < 0x20:
+                out.append(f"\\u{ord(c):04x}")
+            else:
+                out.append(c)
+        out.append('"')
+        return "".join(out)
+    if isinstance(v, list):
+        return "[" + ",".join(emit_json(x) for x in v) + "]"
+    if isinstance(v, dict):
+        return "{" + ",".join(
+            f"{emit_json(k)}:{emit_json(v[k])}" for k in sorted(v)
+        ) + "}"
+    raise TypeError(f"unexpected value {v!r}")
+
+
+class Writer:
+    def __init__(self):
+        self.buf = bytearray()
+
+    def u32(self, v):
+        self.buf += struct.pack("<I", v)
+
+    def u64(self, v):
+        self.buf += struct.pack("<Q", v)
+
+    def f64(self, v):
+        self.buf += struct.pack("<d", v)
+
+    def bytes(self, b):
+        self.buf += b
+
+    def pad8(self):
+        while len(self.buf) % 8 != 0:
+            self.buf.append(0)
+
+
+def align8(n: int) -> int:
+    return (n + 7) & ~7
+
+
+def descriptor(spec: dict, scenario_id: str) -> bytes:
+    device = {k: spec[k] for k in SOC_FIELDS}
+    device["clusters"] = [{f: c[f] for f in CLUSTER_FIELDS} for c in spec["clusters"]]
+    device["gpu"] = {f: spec["gpu"][f] for f in GPU_FIELDS}
+
+    # Scenario id: "<soc>/cpu/<combo-label>/<rep>"; resolve the combo
+    # label (e.g. "1L", "1L+3M") against the spec's combos the way
+    # CoreCombo::label does.
+    parts = scenario_id.split("/")
+    assert len(parts) == 4 and parts[1] == "cpu", f"CPU golden expected, got {scenario_id}"
+    letters = {"large": "L", "medium": "M", "small": "S"}
+
+    def label(counts):
+        return "+".join(
+            f"{c}{letters[spec['clusters'][i]['kind']]}" for i, c in enumerate(counts) if c > 0
+        )
+
+    counts = next(c for c in spec["combos"] if label(c) == parts[2])
+    target = {"counts": counts, "kind": "cpu", "rep": parts[3]}
+    doc = {"device": device, "scenario": scenario_id, "target": target}
+    return emit_json(doc).encode()
+
+
+def encode_model(w: Writer, name_idx: int, bucket: dict):
+    std = bucket["standardizer"]
+    model = bucket["model"]
+    dim = len(std["mean"])
+    assert dim == bucket["dim"] == len(std["std"]) == len(model["weights"])
+    assert model["kind"] == "lasso", "golden is a Lasso bundle"
+    w.u32(name_idx)
+    w.u32(METHOD_CODES["Lasso"])
+    w.u32(dim)
+    w.u32(dim)  # aux == dim for lasso
+    w.f64(bucket["floor"])
+    for v in std["mean"]:
+        w.f64(v)
+    for v in std["std"]:
+        w.f64(v)
+    w.f64(model["intercept"])
+    w.f64(model["alpha"])
+    for v in model["weights"]:
+        w.f64(v)
+
+
+def main() -> int:
+    with open(GOLDEN_JSON) as f:
+        golden = json.load(f)
+    with open(SPEC_JSON) as f:
+        spec = json.load(f)
+    assert golden["format"] == "edgelat.predictor_bundle"
+    assert golden["method"] == "Lasso" and golden["mode"] == "full"
+
+    strings = Writer()
+    for n in INTERNER:
+        strings.u32(len(n.encode()))
+    strings.pad8()
+    for n in INTERNER:
+        strings.bytes(n.encode())
+
+    desc = descriptor(spec, golden["scenario"])
+
+    models = Writer()
+    for name in sorted(golden["buckets"]):  # BTreeMap order
+        encode_model(models, INTERNER.index(name), golden["buckets"][name])
+
+    strings_off = HEADER_LEN
+    desc_off = align8(strings_off + len(strings.buf))
+    models_off = align8(desc_off + len(desc))
+    total_len = align8(models_off + len(models.buf))
+
+    w = Writer()
+    w.bytes(MAGIC)
+    w.u32(VERSION)
+    w.u32(METHOD_CODES[golden["method"]])
+    w.u32(MODE_CODES[golden["mode"]])
+    w.u32(len(INTERNER))
+    w.u32(len(golden["buckets"]))
+    w.u32(0)  # reserved
+    w.f64(golden["t_overhead_ms"])
+    w.f64(golden["fallback_ms"])
+    w.u64(strings_off)
+    w.u64(len(strings.buf))
+    w.u64(desc_off)
+    w.u64(len(desc))
+    w.u64(models_off)
+    w.u64(len(models.buf))
+    w.u64(total_len)
+    assert len(w.buf) == HEADER_LEN
+    w.bytes(strings.buf)
+    w.pad8()
+    w.bytes(desc)
+    w.pad8()
+    w.bytes(models.buf)
+    w.pad8()
+    assert len(w.buf) == total_len
+
+    with open(OUT, "wb") as f:
+        f.write(w.buf)
+    print(f"wrote {OUT} ({total_len} bytes, {len(golden['buckets'])} bucket models)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -4,7 +4,9 @@
 Builds synthetic BENCH_pipeline.json documents in a temp dir and asserts
 the gate's verdict on each: a healthy artifact passes, and each class of
 regression the gate documents (slow batch predict, missing fleet section,
-sub-1x vectorized speedup, dead throughput) fails with exit code 1. This
+sub-1x vectorized speedup, dead throughput, a binary bundle load losing
+to JSON, a LUT tier slower than the SoA scan or serving outside its
+verified error bound) fails with exit code 1. This
 keeps the gate itself honest: a refactor that silently stops checking a
 section shows up here, not as a green CI on a broken bench.
 
@@ -39,6 +41,15 @@ HEALTHY = {
             "scenarios_per_s": 900.0,
             "predictions_per_s": 2.5e6,
             "vectorized_speedup": 1.8,
+        },
+        "bundle_load": {"json_ms": 4.2, "bin_ms": 0.6, "speedup": 7.0},
+        "lut": {
+            "tables": 9,
+            "table_entries": 24000,
+            "predictions_per_s": 5.0e6,
+            "lut_vs_soa_speedup": 2.2,
+            "max_rel_err": 0.011,
+            "bound": 0.05,
         },
         "lowering": {
             "graphs_per_s": 4000.0,
@@ -126,6 +137,46 @@ def main() -> int:
         (
             "dead serve daemon fails",
             mutate(lambda d: d["derived"]["serve"].__setitem__("requests_per_s", -1.0)),
+            1,
+        ),
+        (
+            "binary bundle load slower than JSON fails",
+            mutate(lambda d: d["derived"]["bundle_load"].__setitem__("speedup", 0.7)),
+            1,
+        ),
+        (
+            "missing bundle_load section fails",
+            mutate(lambda d: d["derived"].pop("bundle_load")),
+            1,
+        ),
+        (
+            "non-positive bundle load time fails",
+            mutate(lambda d: d["derived"]["bundle_load"].__setitem__("bin_ms", 0.0)),
+            1,
+        ),
+        (
+            "sub-1x LUT speedup fails",
+            mutate(lambda d: d["derived"]["lut"].__setitem__("lut_vs_soa_speedup", 0.9)),
+            1,
+        ),
+        (
+            "LUT error above its verified bound fails",
+            mutate(lambda d: d["derived"]["lut"].__setitem__("max_rel_err", 0.08)),
+            1,
+        ),
+        (
+            "non-finite LUT error fails",
+            mutate(lambda d: d["derived"]["lut"].__setitem__("max_rel_err", -1.0)),
+            1,
+        ),
+        (
+            "missing lut section fails",
+            mutate(lambda d: d["derived"].pop("lut")),
+            1,
+        ),
+        (
+            "dead LUT throughput fails",
+            mutate(lambda d: d["derived"]["lut"].__setitem__("predictions_per_s", 0.0)),
             1,
         ),
     ]
