@@ -36,7 +36,7 @@ use crate::profiler::profile_set_with;
 use crate::scenario::{Registry, Scenario};
 use crate::serve;
 use crate::util::timing::{time_named, Sample};
-use crate::util::Json;
+use crate::util::{rmspe_guarded, spearman, Json};
 use std::collections::HashMap;
 use std::hint::black_box;
 
@@ -427,6 +427,58 @@ pub fn run(cfg: &BenchConfig) -> Json {
     let search_hit_rate = cache_after.delta_since(&cache_before).hit_rate();
     let candidates_per_s = search_evaluated as f64 / search_s.mean_s.max(1e-12);
 
+    // --- Few-shot transfer: adapt the trained CPU bundle to a different
+    // builtin SoC from K≈10 profiled target samples and compare against
+    // the proxy-only baseline on a held-out eval split. adaptations/s
+    // times the whole `transfer::adapt` fit (per-bucket scales + PAV
+    // monotone map); the proxy-vs-adapted accuracy deltas are
+    // same-process quantities the CI gate compares directly.
+    let transfer_src = PredictorBundle::from_predictor(&pred).expect("native bundle");
+    let transfer_target = registry.one_large_core("Exynos9820").expect("builtin scenario");
+    let transfer_budget = 10usize.min(train_g.len());
+    let transfer_graphs = &train_g[..transfer_budget];
+    let transfer_profiles =
+        profile_set_with(&pool, &transfer_target, transfer_graphs, cfg.seed ^ 0x7a5f, cfg.runs);
+    let transfer_eval_g = nas_graphs(cfg.seed ^ 0x77aa, cfg.n_batch.min(16));
+    let transfer_eval_profiles =
+        profile_set_with(&pool, &transfer_target, &transfer_eval_g, cfg.seed ^ 0x77ab, cfg.runs);
+    let transfer_eval_actual: Vec<f64> =
+        transfer_eval_profiles.iter().map(|p| p.end_to_end_ms).collect();
+    let mut transfer_report = None;
+    let transfer_s = time_named("transfer/adapt few-shot", cfg.iters, || {
+        transfer_report = Some(
+            crate::transfer::adapt(
+                &transfer_src,
+                &transfer_target,
+                transfer_graphs,
+                &transfer_profiles,
+            )
+            .expect("transfer adapt"),
+        );
+    });
+    bench_line(&mut samples, transfer_s.clone());
+    let transfer_report = transfer_report.expect("adapt ran");
+    let adaptations_per_s = 1.0 / transfer_s.mean_s.max(1e-12);
+    let transfer_plans: Vec<LoweredGraph> = transfer_eval_g
+        .iter()
+        .map(|g| plan::lower(&transfer_target, transfer_src.mode, g))
+        .collect();
+    let transfer_proxy = crate::transfer::ProxyPredictor::new(&transfer_src).expect("proxy");
+    let proxy_pred: Vec<f64> =
+        transfer_plans.iter().map(|pl| transfer_proxy.predict_plan(pl)).collect();
+    let transfer_pred = transfer_report.bundle.predictor().expect("transfer predictor");
+    let adapted_pred: Vec<f64> =
+        transfer_plans.iter().map(|pl| transfer_pred.predict_plan(pl)).collect();
+    let (transfer_proxy_rmspe, _) = rmspe_guarded(&proxy_pred, &transfer_eval_actual);
+    let (transfer_adapted_rmspe, _) = rmspe_guarded(&adapted_pred, &transfer_eval_actual);
+    let transfer_proxy_spear = spearman(&proxy_pred, &transfer_eval_actual);
+    let transfer_adapted_spear = spearman(&adapted_pred, &transfer_eval_actual);
+    // NaN-aware Spearman aggregation (count-and-skip, never average in).
+    let transfer_degenerate = [transfer_proxy_spear, transfer_adapted_spear]
+        .iter()
+        .filter(|v| !v.is_finite())
+        .count();
+
     // --- Serve daemon: boot the TCP daemon on an ephemeral port around a
     // two-scenario fleet (the GBDT bundle trained above plus a quick GPU
     // Lasso bundle), offer open-loop load with the `serve-bench`
@@ -592,6 +644,24 @@ pub fn run(cfg: &BenchConfig) -> Json {
                     ]),
                 ),
                 (
+                    // Few-shot transfer: the CI gate fails on non-positive
+                    // adaptations/s, an adapted RMSPE above the proxy's,
+                    // or an adapted Spearman below the proxy's at the
+                    // headline budget.
+                    "transfer",
+                    Json::obj(vec![
+                        ("budget", Json::num(transfer_budget as f64)),
+                        ("adaptations_per_s", Json::num(fin(adaptations_per_s))),
+                        ("proxy_rmspe", Json::num(fin(transfer_proxy_rmspe))),
+                        ("adapted_rmspe", Json::num(fin(transfer_adapted_rmspe))),
+                        ("proxy_spearman", Json::num(fin(transfer_proxy_spear))),
+                        ("adapted_spearman", Json::num(fin(transfer_adapted_spear))),
+                        ("dropped_rows", Json::num(transfer_report.dropped_rows as f64)),
+                        ("degenerate_pairs", Json::num(transfer_degenerate as f64)),
+                        ("map_knots", Json::num(transfer_report.bundle.map.knots() as f64)),
+                    ]),
+                ),
+                (
                     // The serve daemon under open-loop TCP load: the CI
                     // gate fails on requests_per_s <= 0, mean_batch < 1,
                     // or a non-finite/non-positive p99.
@@ -731,6 +801,27 @@ mod tests {
         // sharded memo must have seen real hits.
         assert!(cache.req_f64("hits").unwrap() > 0.0);
         assert!(cache.req_f64("misses").unwrap() > 0.0);
+        // The transfer stage: the adaptation actually ran against a
+        // different builtin SoC, the accuracy comparison is live, and the
+        // few-shot calibration beats the raw proxy on this same-process
+        // eval split (the monotone map fixes the cross-device magnitude
+        // bias even at smoke scale).
+        let transfer = derived.req("transfer").unwrap();
+        assert!(transfer.req_usize("budget").unwrap() >= 1);
+        assert!(transfer.req_f64("adaptations_per_s").unwrap() > 0.0);
+        let t_proxy = transfer.req_f64("proxy_rmspe").unwrap();
+        let t_adapted = transfer.req_f64("adapted_rmspe").unwrap();
+        assert!(t_proxy.is_finite() && t_proxy > 0.0, "proxy_rmspe={t_proxy}");
+        assert!(t_adapted.is_finite() && t_adapted > 0.0, "adapted_rmspe={t_adapted}");
+        assert!(t_adapted < t_proxy, "adapted_rmspe={t_adapted} proxy_rmspe={t_proxy}");
+        let t_pspear = transfer.req_f64("proxy_spearman").unwrap();
+        let t_aspear = transfer.req_f64("adapted_spearman").unwrap();
+        let t_degenerate = transfer.req_usize("degenerate_pairs").unwrap();
+        if t_degenerate == 0 {
+            assert!(t_aspear >= t_pspear, "adapted={t_aspear} proxy={t_pspear}");
+        }
+        assert!(transfer.req_usize("map_knots").unwrap() >= 1);
+        assert!(benches.iter().any(|b| b.req_str("name").unwrap().starts_with("transfer/")));
         // The serve-daemon stage: real TCP traffic got through, requests
         // coalesced (mean batch >= 1 whenever any batch flushed), tail
         // latency is a real measurement, and the hit rate is a rate.

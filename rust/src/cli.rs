@@ -202,6 +202,57 @@ pub fn scenario_list_flag(rest: &[String], reg: &Registry) -> Result<Vec<Arc<Sce
     Ok(out)
 }
 
+/// Parsed arguments of `edgelat transfer` (the adapt form; `transfer
+/// eval` parses separately via [`transfer_eval_args`]).
+pub struct TransferArgs {
+    pub from_bundle: String,
+    pub scenario_id: String,
+    pub budget: usize,
+    pub out: String,
+    pub seed: u64,
+    pub runs: usize,
+}
+
+/// `edgelat transfer --from-bundle SRC --to SCENARIO --budget K --out F`.
+/// `--budget` defaults to 10 (MAPLE-Edge's few-shot regime) and must be
+/// at least 1; `--out` picks the encoding by extension (`.bin` → binary).
+pub fn transfer_args(rest: &[String]) -> Result<TransferArgs, String> {
+    let from_bundle = flag(rest, "--from-bundle")?
+        .ok_or("need --from-bundle FILE (a trained predictor bundle)")?;
+    let scenario_id =
+        flag(rest, "--to")?.ok_or("need --to SCENARIO (see `edgelat list scenarios`)")?;
+    let budget = usize_flag(rest, "--budget", 10)?;
+    if budget == 0 {
+        return Err("--budget needs at least one target profile".into());
+    }
+    let out = flag(rest, "--out")?.ok_or("need --out FILE (.json or .bin)")?;
+    Ok(TransferArgs {
+        from_bundle,
+        scenario_id,
+        budget,
+        out,
+        seed: seed_flag(rest)?,
+        runs: runs_flag(rest)?,
+    })
+}
+
+/// Parsed arguments of `edgelat transfer eval`.
+pub struct TransferEvalArgs {
+    pub quick: bool,
+    pub seed: u64,
+    pub threads: Option<usize>,
+    pub out: Option<String>,
+}
+
+pub fn transfer_eval_args(rest: &[String]) -> Result<TransferEvalArgs, String> {
+    Ok(TransferEvalArgs {
+        quick: has(rest, "--quick"),
+        seed: seed_flag(rest)?,
+        threads: threads_flag(rest)?,
+        out: flag(rest, "--out")?,
+    })
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -333,6 +384,57 @@ mod tests {
         assert!(flag_all(&args(&["--device-spec"]), "--device-spec").is_err());
         let trailing = args(&["--device-spec", "a", "--device-spec"]);
         assert!(flag_all(&trailing, "--device-spec").is_err());
+    }
+
+    #[test]
+    fn transfer_args_parse_and_validate() {
+        let rest = args(&[
+            "--from-bundle",
+            "src.bin",
+            "--to",
+            "FleetSoc7n0/cpu/1L/fp32",
+            "--budget",
+            "10",
+            "--out",
+            "t.json",
+        ]);
+        let a = transfer_args(&rest).unwrap();
+        assert_eq!(a.from_bundle, "src.bin");
+        assert_eq!(a.scenario_id, "FleetSoc7n0/cpu/1L/fp32");
+        assert_eq!(a.budget, 10);
+        assert_eq!(a.out, "t.json");
+        assert_eq!(a.seed, DEFAULT_SEED);
+        assert_eq!(a.runs, DEFAULT_RUNS);
+        // Budget defaults to the few-shot regime; zero is rejected.
+        let minimal = args(&["--from-bundle", "s.json", "--to", "X/gpu", "--out", "o.bin"]);
+        assert_eq!(transfer_args(&minimal).unwrap().budget, 10);
+        let zero = args(&[
+            "--from-bundle", "s.json", "--to", "X/gpu", "--out", "o.bin", "--budget", "0",
+        ]);
+        assert!(transfer_args(&zero).is_err());
+        // Every required flag is required, each named in its error.
+        for (missing, name) in [
+            (args(&["--to", "X/gpu", "--out", "o"]), "--from-bundle"),
+            (args(&["--from-bundle", "s", "--out", "o"]), "--to"),
+            (args(&["--from-bundle", "s", "--to", "X/gpu"]), "--out"),
+        ] {
+            let err = transfer_args(&missing).unwrap_err();
+            assert!(err.contains(name), "{name}: {err}");
+        }
+    }
+
+    #[test]
+    fn transfer_eval_args_parse() {
+        let a = transfer_eval_args(&args(&["--quick", "--seed", "7", "--threads", "2"])).unwrap();
+        assert!(a.quick);
+        assert_eq!(a.seed, 7);
+        assert_eq!(a.threads, Some(2));
+        assert_eq!(a.out, None);
+        let d = transfer_eval_args(&args(&["--out", "CURVE.json"])).unwrap();
+        assert!(!d.quick);
+        assert_eq!(d.seed, DEFAULT_SEED);
+        assert_eq!(d.out, Some("CURVE.json".into()));
+        assert!(transfer_eval_args(&args(&["--seed"])).is_err());
     }
 
     #[test]

@@ -152,12 +152,25 @@ struct EnginePredictor {
     /// model; near-grid rows interpolate within the spec's error bound;
     /// everything else falls back to the SoA kernels untouched.
     lut: Option<LutPack>,
+    /// Present when this predictor was loaded from a `TransferBundle`:
+    /// per-bucket recalibration scales (dense by `BucketId`, applied to
+    /// each evaluated row — after the SoA/LUT tiers, so those stay
+    /// transfer-agnostic) and the monotone latency map applied to the
+    /// summed end-to-end prediction.
+    transfer: Option<TransferParams>,
+}
+
+/// The runtime half of a loaded [`TransferBundle`].
+struct TransferParams {
+    map: crate::transfer::MonotoneMap,
+    scales: Vec<f64>,
 }
 
 /// Builder for [`LatencyEngine`]: collect bundles, then `build()`.
 #[derive(Default)]
 pub struct EngineBuilder {
     bundles: Vec<PredictorBundle>,
+    transfers: Vec<crate::transfer::TransferBundle>,
     threads: Option<usize>,
     lut: Option<LutSpec>,
 }
@@ -170,7 +183,7 @@ const LUT_CALIBRATION_GRAPHS: usize = 16;
 
 impl EngineBuilder {
     pub fn new() -> EngineBuilder {
-        EngineBuilder { bundles: Vec::new(), threads: None, lut: None }
+        EngineBuilder { bundles: Vec::new(), transfers: Vec::new(), threads: None, lut: None }
     }
 
     /// Add an in-memory bundle (e.g. freshly trained).
@@ -179,11 +192,24 @@ impl EngineBuilder {
         self
     }
 
-    /// Load and add a bundle file written by `edgelat train` — JSON or
-    /// binary, sniffed by magic (`edgelat bundle convert` writes `.bin`).
+    /// Add an in-memory transfer bundle (e.g. freshly adapted via
+    /// `transfer::adapt`). Serves under its *target* scenario id.
+    pub fn transfer(mut self, t: crate::transfer::TransferBundle) -> EngineBuilder {
+        self.transfers.push(t);
+        self
+    }
+
+    /// Load and add a bundle file written by `edgelat train` or `edgelat
+    /// transfer` — predictor or transfer bundle, JSON or binary, all four
+    /// combinations sniffed by magic / the `format` field. This is the
+    /// path every directory-scanning loader (the serve fleet, hot reload)
+    /// goes through, so a transfer bundle dropped into a fleet directory
+    /// serves like any trained bundle.
     pub fn bundle_file(self, path: impl AsRef<std::path::Path>) -> Result<EngineBuilder, EngineError> {
-        let b = PredictorBundle::load_auto(path)?;
-        Ok(self.bundle(b))
+        match crate::transfer::load_any(path)? {
+            crate::transfer::LoadedBundle::Predictor(b) => Ok(self.bundle(b)),
+            crate::transfer::LoadedBundle::Transfer(t) => Ok(self.transfer(t)),
+        }
     }
 
     /// Worker threads for `predict_batch` (default: available parallelism).
@@ -202,14 +228,14 @@ impl EngineBuilder {
     }
 
     pub fn build(self) -> Result<LatencyEngine, EngineError> {
-        let EngineBuilder { bundles, threads, lut } = self;
-        if bundles.is_empty() {
+        let EngineBuilder { bundles, transfers, threads, lut } = self;
+        if bundles.is_empty() && transfers.is_empty() {
             return Err(EngineError::Unsupported(
                 "an engine needs at least one predictor bundle".into(),
             ));
         }
         let it = plan::interner();
-        let mut predictors = Vec::with_capacity(bundles.len());
+        let mut predictors = Vec::with_capacity(bundles.len() + transfers.len());
         for b in bundles {
             // The builder is consumed, so the models — and the bundle's
             // embedded scenario descriptor — move in for free. No registry
@@ -239,6 +265,34 @@ impl EngineBuilder {
                 models,
                 kernels,
                 lut: None,
+                transfer: None,
+            });
+        }
+        for t in transfers {
+            // A transfer bundle serves under its *target* scenario: the
+            // source models do the per-row work, the dense scale table
+            // recalibrates them, and the monotone map finishes the sum.
+            bundle::validate_bundle_scenario(&t.target)?;
+            bundle::validate_bundle_scenario(&t.source.scenario)?;
+            let scales = t.dense_scales()?;
+            let scenario = Arc::new(t.target);
+            let mut models: Vec<Option<BucketModel>> = (0..it.len()).map(|_| None).collect();
+            for (bucket, m) in t.source.models {
+                let id = resolve_bundle_bucket(&scenario.id, &bucket)?;
+                models[id.index()] = Some(m);
+            }
+            let kernels =
+                models.iter().map(|m| m.as_ref().map(soa::BucketKernel::compile)).collect();
+            predictors.push(EnginePredictor {
+                scenario,
+                method: t.source.method,
+                mode: t.source.mode,
+                t_overhead_ms: t.t_overhead_ms,
+                fallback_ms: t.fallback_ms,
+                models,
+                kernels,
+                lut: None,
+                transfer: Some(TransferParams { map: t.map, scales }),
             });
         }
         // Deduction only depends on (scenario, mode), not on the trained
@@ -429,15 +483,21 @@ impl LatencyEngine {
         let mut per_unit = Vec::with_capacity(pl.len());
         let mut sum = 0.0;
         for (i, ms) in rows.into_iter().enumerate() {
+            // Transfer-loaded predictors recalibrate each row by its
+            // bucket's scale (after the SoA/LUT tiers, which stay
+            // transfer-agnostic), so per-unit figures are in target units.
+            let ms = match &p.transfer {
+                Some(t) => ms * t.scales[pl.bucket(i).index()],
+                None => ms,
+            };
             sum += ms;
             per_unit.push((it.name(pl.bucket(i)), ms));
         }
-        Ok(PredictResponse {
-            e2e_ms: p.t_overhead_ms + sum,
-            per_unit,
-            t_overhead_ms: p.t_overhead_ms,
-            fallback_units,
-        })
+        let e2e_ms = match &p.transfer {
+            Some(t) => t.map.apply(p.t_overhead_ms + sum),
+            None => p.t_overhead_ms + sum,
+        };
+        Ok(PredictResponse { e2e_ms, per_unit, t_overhead_ms: p.t_overhead_ms, fallback_units })
     }
 
     /// Serve a batch of predictions, fanned out on the shared

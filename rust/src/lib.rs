@@ -96,6 +96,18 @@
 //!   from `util::timing::LogHistogram`). `edgelat serve-bench` is the
 //!   open-loop load generator; the bench suite's serve stage gates its
 //!   throughput and tail latency in CI.
+//! - **Cross-device transfer (`transfer`)**: few-shot device onboarding —
+//!   a trained source bundle plus K profiled (graph, latency) pairs from a
+//!   new target SoC become a `TransferBundle`: per-bucket residual
+//!   recalibration of the source's native models (rows routed through the
+//!   same lowered-plan featurizer the profiler records) under a monotone
+//!   piecewise-linear latency map fit by pool-adjacent-violators isotonic
+//!   regression — deterministic, no RNG, and never ranking worse than the
+//!   proxy baseline it wraps. Transfer bundles serialize through both the
+//!   JSON and `EDGELATB`-embedding binary paths (magic `EDGELATT`), load
+//!   through every bundle loader (engine builder, serve fleet, hot
+//!   reload), and `edgelat transfer eval` emits the byte-reproducible
+//!   accuracy-vs-budget curve the bench gate checks.
 //! - **L2 (python/compile/model.py, build-time only)**: the MLP latency
 //!   predictor's forward/backward in JAX, AOT-lowered to HLO text.
 //! - **L1 (python/compile/kernels/, build-time only)**: the MLP's fused
@@ -125,5 +137,6 @@ pub mod scenario;
 pub mod search;
 pub mod serve;
 pub mod tflite;
+pub mod transfer;
 pub mod util;
 pub mod zoo;

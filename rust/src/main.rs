@@ -9,6 +9,7 @@
 //!   predict     end-to-end latency prediction for a model file
 //!   search      latency-constrained NAS search served by the engine
 //!   serve       persistent micro-batching prediction daemon (JSON/TCP)
+//!   transfer    few-shot onboard a new device from a trained bundle
 //!   serve-bench open-loop load generator against a running daemon
 //!   bench       time the pipeline hot paths, write BENCH_pipeline.json
 //!   bundle      convert/inspect predictor bundles (JSON <-> binary)
@@ -42,6 +43,7 @@ fn main() {
         "predict" => cmd_predict(rest),
         "search" => cmd_search(rest),
         "serve" => cmd_serve(rest),
+        "transfer" => cmd_transfer(rest),
         "serve-bench" => cmd_serve_bench(rest),
         "bench" => cmd_bench(rest),
         "bundle" => cmd_bundle(rest),
@@ -75,6 +77,9 @@ USAGE:
                     [--threads N] [--quick] [--out FRONT.json]
   edgelat serve     --bundles DIR [--addr IP:PORT] [--threads N] [--max-batch B]
                     [--max-wait-us U] [--queue-cap Q] [--drain-grace-ms MS] [--lut]
+  edgelat transfer  --from-bundle SRC --to SCENARIO --out FILE[.bin] [--budget K]
+                    [--runs R] [--seed S]   (few-shot onboard a new device)
+  edgelat transfer eval [--quick] [--seed S] [--threads N] [--out CURVE.json]
   edgelat bundle    convert IN OUT | inspect FILE   (.json <-> .bin, by extension)
   edgelat serve-bench --addr IP:PORT [--quick] [--clients C] [--rps R]
                     [--duration-s S] [--seed S] [--drain] [--out REPORT.json]
@@ -97,7 +102,12 @@ predicted latency vs. accuracy proxy, byte-reproducible for a fixed seed).
 `serve` keeps a directory of bundles resident as a long-lived daemon —
 line-oriented JSON over TCP, concurrent requests micro-batched into the
 engine, hot `reload`, graceful `drain`, and a `stats` endpoint; `serve-bench`
-measures a running daemon open-loop (requests/s, p50/p99).
+measures a running daemon open-loop (requests/s, p50/p99). `transfer`
+onboards a new device few-shot: a trained source bundle plus K profiled
+target samples (default 10) become a transfer bundle — per-bucket
+recalibration under a monotone latency map — that serves under the target
+scenario id anywhere a trained bundle does; `transfer eval` writes the
+byte-reproducible accuracy-vs-budget curve artifact.
 
 Figures/tables: {}",
         all_ids().join(" ")
@@ -903,6 +913,84 @@ fn cmd_bundle(rest: &[String]) {
             eprintln!("unknown bundle subcommand '{other}' (convert|inspect)");
             std::process::exit(2);
         }
+    }
+}
+
+/// `edgelat transfer`: few-shot onboard a target device from a trained
+/// source bundle — profile K target graphs, fit the per-bucket scales and
+/// the monotone latency map, and write a `TransferBundle` that serves
+/// under the target scenario id anywhere a trained bundle does.
+fn cmd_transfer(rest: &[String]) {
+    if rest.first().map(|s| s.as_str()) == Some("eval") {
+        return cmd_transfer_eval(&rest[1..]);
+    }
+    let a = or_die(cli::transfer_args(rest));
+    let reg = or_die(cli::registry_flag(rest));
+    let source = PredictorBundle::load_auto(&a.from_bundle).unwrap_or_else(|e| {
+        eprintln!("{e}");
+        std::process::exit(2);
+    });
+    let target = reg.by_id(&a.scenario_id).unwrap_or_else(|| {
+        eprintln!("unknown scenario '{}' (see `edgelat list scenarios`)", a.scenario_id);
+        std::process::exit(2);
+    });
+    let graphs: Vec<_> =
+        edgelat::nas::sample_dataset(a.seed, a.budget).into_iter().map(|x| x.graph).collect();
+    let profiles = profile_set(&target, &graphs, a.seed, a.runs);
+    let report =
+        edgelat::transfer::adapt(&source, &target, &graphs, &profiles).unwrap_or_else(|e| {
+            eprintln!("{e}");
+            std::process::exit(2);
+        });
+    let to_bin =
+        std::path::Path::new(&a.out).extension().and_then(|x| x.to_str()) == Some("bin");
+    let b = &report.bundle;
+    let res = if to_bin { b.save_bin(&a.out) } else { b.save(&a.out) };
+    res.unwrap_or_else(|e| {
+        eprintln!("{e}");
+        std::process::exit(2);
+    });
+    println!(
+        "wrote {} transfer bundle {} ({} -> {}, budget {}, {} map knots, {} scaled buckets{}{})",
+        if to_bin { "binary" } else { "JSON" },
+        a.out,
+        b.source.scenario.id,
+        b.target.id,
+        b.budget,
+        b.map.knots(),
+        b.scales.len(),
+        if report.per_bucket_scales { ", per-bucket" } else { ", uniform" },
+        if report.dropped_rows > 0 {
+            format!(", {} rows dropped", report.dropped_rows)
+        } else {
+            String::new()
+        }
+    );
+}
+
+/// `edgelat transfer eval`: emit the byte-reproducible accuracy-vs-budget
+/// curve artifact (proxy baseline vs transferred predictor across target
+/// SoCs and profiling budgets K).
+fn cmd_transfer_eval(rest: &[String]) {
+    let a = or_die(cli::transfer_eval_args(rest));
+    let cfg = edgelat::transfer::eval::EvalConfig {
+        quick: a.quick,
+        seed: a.seed,
+        threads: a.threads.unwrap_or(0),
+    };
+    let doc = edgelat::transfer::eval::run(&cfg).unwrap_or_else(|e| {
+        eprintln!("{e}");
+        std::process::exit(2);
+    });
+    match &a.out {
+        Some(p) => {
+            std::fs::write(p, doc.to_string()).unwrap_or_else(|e| {
+                eprintln!("writing {p}: {e}");
+                std::process::exit(2);
+            });
+            println!("wrote transfer curve {p}");
+        }
+        None => println!("{}", doc.to_string()),
     }
 }
 

@@ -355,7 +355,7 @@ pub fn report_json(cfg: &SearchConfig, out: &SearchOutcome) -> Json {
             ])
         })
         .collect();
-    let corr = out
+    let corr: Vec<Json> = out
         .rank_correlation
         .iter()
         .map(|(a, b, r)| {
@@ -366,6 +366,10 @@ pub fn report_json(cfg: &SearchConfig, out: &SearchOutcome) -> Json {
             ])
         })
         .collect();
+    // Degenerate correlations (NaN from constant latencies) are counted
+    // and skipped, never averaged in silently — consumers aggregating the
+    // pair list can subtract them without re-scanning for nulls.
+    let degenerate = out.rank_correlation.iter().filter(|(_, _, r)| !r.is_finite()).count();
     Json::obj(vec![
         ("format", Json::str("edgelat.search")),
         ("version", Json::num(1.0)),
@@ -374,6 +378,7 @@ pub fn report_json(cfg: &SearchConfig, out: &SearchOutcome) -> Json {
         ("generations", Json::num(cfg.generations as f64)),
         ("budget_ms", cfg.budget_ms.map(Json::Num).unwrap_or(Json::Null)),
         ("candidates_evaluated", Json::num(out.candidates_evaluated as f64)),
+        ("degenerate_pairs", Json::num(degenerate as f64)),
         ("scenarios", Json::Arr(scenarios)),
         ("rank_correlation", Json::Arr(corr)),
     ])
@@ -395,6 +400,33 @@ mod tests {
             fingerprint: fp,
             feasible,
         }
+    }
+
+    #[test]
+    fn degenerate_spearman_is_counted_and_nulled_not_averaged() {
+        // A NaN rank correlation (constant latencies on one device) must
+        // surface as `null` in the pair list AND as a degenerate_pairs
+        // count in the artifact — never as a bare NaN token (invalid
+        // JSON) and never silently included in downstream means.
+        let out = SearchOutcome {
+            scenarios: Vec::new(),
+            rank_correlation: vec![
+                ("A/cpu".into(), "B/cpu".into(), 0.75),
+                ("A/cpu".into(), "C/cpu".into(), f64::NAN),
+                ("B/cpu".into(), "C/cpu".into(), f64::NAN),
+            ],
+            candidates_evaluated: 0,
+        };
+        let doc = report_json(&SearchConfig::quick(), &out);
+        let text = doc.to_string();
+        assert!(!text.contains("NaN") && !text.contains("inf"), "{text}");
+        let doc = Json::parse(&text).expect("valid JSON");
+        assert_eq!(doc.req_usize("degenerate_pairs").unwrap(), 2);
+        let corr = doc.req("rank_correlation").unwrap().as_arr().unwrap();
+        assert_eq!(corr.len(), 3);
+        assert_eq!(corr[0].req_f64("spearman").unwrap(), 0.75);
+        assert_eq!(corr[1].get("spearman"), Some(&Json::Null));
+        assert_eq!(corr[2].get("spearman"), Some(&Json::Null));
     }
 
     #[test]

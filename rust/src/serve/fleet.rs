@@ -286,6 +286,65 @@ mod tests {
         let _ = std::fs::remove_dir_all(&dir);
     }
 
+    /// Transfer bundles are first-class fleet citizens: a directory mixing
+    /// predictor and transfer bundles loads into one engine, the
+    /// transferred target scenario serves, both transfer encodings (JSON
+    /// and `EDGELATT` binary) agree bit-for-bit, and hot reload keeps
+    /// working over them.
+    #[test]
+    fn transfer_bundles_load_and_serve_through_the_fleet() {
+        let j = crate::util::Json::parse(GOLDEN_BUNDLE).unwrap();
+        let src = PredictorBundle::from_json(&j).expect("golden parses");
+        let target = crate::scenario::one_large_core("Exynos9820").expect("builtin target");
+        let graphs: Vec<_> = crate::nas::sample_dataset(11, 6)
+            .into_iter()
+            .map(|s| s.graph)
+            .collect();
+        let profiles = crate::profiler::profile_set(&target, &graphs, 11, 2);
+        let report =
+            crate::transfer::adapt(&src, &target, &graphs, &profiles).expect("few-shot adapt");
+        let tb = report.bundle;
+        let target_id = tb.scenario_id().to_string();
+
+        // One fleet dir per encoding, each mixing a plain bundle with the
+        // transfer bundle so the loader has to dispatch on content.
+        let dir_json = fixture_dir("xfer_json");
+        tb.save(dir_json.join("b_transfer.json")).expect("transfer json saved");
+        let dir_bin = fixture_dir("xfer_bin");
+        tb.save_bin(dir_bin.join("b_transfer.bin")).expect("transfer bin saved");
+
+        let fleet = BundleFleet::load(&dir_json, Some(2)).expect("fleet loads transfer json");
+        assert_eq!(fleet.bundle_count(), 2);
+        let ids = fleet.scenario_ids();
+        assert!(ids.contains(&target_id), "{ids:?}");
+        assert!(ids.contains(&"Snapdragon855/cpu/1L/fp32".to_string()), "{ids:?}");
+
+        let g = crate::nas::sample_dataset(7, 1).remove(0).graph;
+        let req = PredictRequest::new(&g, &target_id);
+        let from_json = fleet.engine().predict(&req).expect("transferred scenario serves");
+        assert!(
+            from_json.e2e_ms.is_finite() && from_json.e2e_ms > 0.0,
+            "{}",
+            from_json.e2e_ms
+        );
+
+        // The binary encoding is lossless: a fleet loaded from the
+        // `EDGELATT` file predicts bit-identically.
+        let bin_fleet = BundleFleet::load(&dir_bin, Some(2)).expect("fleet loads transfer bin");
+        let from_bin = bin_fleet.engine().predict(&req).expect("served from .bin");
+        assert_eq!(from_bin.e2e_ms.to_bits(), from_json.e2e_ms.to_bits());
+
+        // Hot reload over a directory containing a transfer bundle.
+        let (generation, bundles, ids) = fleet.reload().expect("reload over transfer bundle");
+        assert_eq!((generation, bundles), (2, 2));
+        assert!(ids.contains(&target_id));
+        let again = fleet.engine().predict(&req).expect("reloaded generation serves");
+        assert_eq!(again.e2e_ms.to_bits(), from_json.e2e_ms.to_bits());
+
+        let _ = std::fs::remove_dir_all(&dir_json);
+        let _ = std::fs::remove_dir_all(&dir_bin);
+    }
+
     #[test]
     fn failed_reload_leaves_the_live_engine_untouched() {
         let dir = fixture_dir("failpath");

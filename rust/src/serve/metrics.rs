@@ -188,6 +188,57 @@ mod tests {
         assert!(s.uptime_s >= 0.0);
     }
 
+    /// Pin the full NaN-when-empty chain: `LogHistogram::percentile` on
+    /// an empty histogram is NaN by contract, the snapshot's
+    /// `finite_or_zero` guard turns it into 0.0, and the serialized
+    /// `stats` fields built from the snapshot (the same shapes
+    /// `serve::stats_json` emits for `batches` / `service_us`) render as
+    /// valid JSON with no bare `NaN` / `inf` token anywhere.
+    #[test]
+    fn empty_histogram_snapshot_serializes_without_nan() {
+        use crate::util::Json;
+
+        let m = ServeMetrics::new();
+        // The raw contract this module guards against: empty → NaN.
+        assert!(m.service_hist().percentile(0.50).is_nan());
+        assert!(m.batch_hist().percentile(0.99).is_nan());
+
+        let s = m.snapshot();
+        let batch_hist: Vec<Json> = m
+            .batch_hist()
+            .nonzero_buckets()
+            .into_iter()
+            .map(|(edge, n)| Json::arr(vec![Json::num(edge), Json::num(n as f64)]))
+            .collect();
+        let doc = Json::obj(vec![
+            (
+                "batches",
+                Json::obj(vec![
+                    ("count", Json::num(s.batches as f64)),
+                    ("items", Json::num(s.batched_items as f64)),
+                    ("mean", Json::num(s.mean_batch)),
+                    ("max", Json::num(s.max_batch as f64)),
+                    ("hist", Json::Arr(batch_hist)),
+                ]),
+            ),
+            (
+                "service_us",
+                Json::obj(vec![
+                    ("count", Json::num(m.service_hist().count() as f64)),
+                    ("p50", Json::num(s.service_p50_us)),
+                    ("p95", Json::num(s.service_p95_us)),
+                    ("p99", Json::num(s.service_p99_us)),
+                ]),
+            ),
+        ]);
+        let text = doc.to_string();
+        assert!(!text.contains("NaN"), "bare NaN leaked into stats JSON: {text}");
+        assert!(!text.contains("inf"), "bare inf leaked into stats JSON: {text}");
+        let back = Json::parse(&text).expect("empty-histogram stats must stay valid JSON");
+        assert_eq!(back.req("service_us").unwrap().req_f64("p50").unwrap(), 0.0);
+        assert_eq!(back.req("batches").unwrap().req_f64("mean").unwrap(), 0.0);
+    }
+
     #[test]
     fn batch_and_service_accounting() {
         let m = ServeMetrics::new();

@@ -1,0 +1,255 @@
+//! The accuracy-vs-budget evaluation harness behind `edgelat transfer
+//! eval`: for every (source SoC, target SoC) pair, compare the proxy-only
+//! baseline against the transferred predictor at increasing profiling
+//! budgets K, on an eval split the adaptation never saw.
+//!
+//! The artifact is **byte-reproducible**: no wall-clock, no RNG outside
+//! the seeded samplers, and profiling runs through
+//! [`profiler::profile_set_with`], which is bit-identical across thread
+//! counts — `--threads` changes only how fast the curve is computed,
+//! never its bytes.
+
+use crate::engine::{EngineError, PredictorBundle};
+use crate::exec_pool::ExecPool;
+use crate::framework::DeductionMode;
+use crate::graph::Graph;
+use crate::plan::{self, LoweredGraph};
+use crate::predict::Method;
+use crate::profiler::{self, ModelProfile};
+use crate::scenario::{Registry, Scenario};
+use crate::transfer::{adapt, ProxyPredictor};
+use crate::util::{rmspe_guarded, spearman, Json};
+
+/// Identifies a transfer-eval curve artifact.
+pub const EVAL_FORMAT: &str = "edgelat.transfer_eval";
+/// Schema version of the curve artifact.
+pub const EVAL_VERSION: u64 = 1;
+/// The budget the gate and the summary judge pairs at (MAPLE-Edge's ~10
+/// samples).
+pub const HEADLINE_BUDGET: usize = 10;
+
+/// Configuration for one eval run.
+pub struct EvalConfig {
+    /// Small matrix for CI: one builtin source, 3 builtin + 3 sampled
+    /// targets, a 40-graph pool. Full mode holds out all builtin pairs
+    /// plus 10 sampled SoCs with budgets up to the whole pool.
+    pub quick: bool,
+    pub seed: u64,
+    /// Profiling worker threads (0 = machine default). Affects speed only.
+    pub threads: usize,
+}
+
+impl Default for EvalConfig {
+    fn default() -> EvalConfig {
+        EvalConfig { quick: false, seed: 2022, threads: 0 }
+    }
+}
+
+/// FNV-1a over a label — derives disjoint per-target profiling seeds from
+/// the run seed without any RNG state to thread through.
+fn derive_seed(seed: u64, label: &str) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64 ^ seed.wrapping_mul(0x100_0000_01b3);
+    for b in label.bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100_0000_01b3);
+    }
+    h
+}
+
+struct TargetData {
+    sc: Scenario,
+    pool_profiles: Vec<ModelProfile>,
+    eval_actual: Vec<f64>,
+    eval_plans: Vec<LoweredGraph>,
+}
+
+/// Run the evaluation and return the curve artifact.
+pub fn run(cfg: &EvalConfig) -> Result<Json, EngineError> {
+    let (n_sampled, train_pool, n_eval, runs, budgets): (usize, usize, usize, usize, Vec<usize>) =
+        if cfg.quick {
+            (3, 40, 16, 2, vec![5, 10, 20, 40])
+        } else {
+            (10, 64, 32, 3, vec![5, 10, 20, 50, 64])
+        };
+    let scenario_err = |e: crate::scenario::ScenarioError| EngineError::Parse(e.to_string());
+
+    let mut registry = Registry::with_builtin();
+    for spec in crate::device::sample_specs(cfg.seed, n_sampled) {
+        registry.register_soc(spec).map_err(scenario_err)?;
+    }
+    let builtin_names: Vec<String> =
+        crate::device::builtin_specs().iter().map(|s| s.soc.name.clone()).collect();
+    let sampled_names: Vec<String> = crate::device::sample_specs(cfg.seed, n_sampled)
+        .into_iter()
+        .map(|s| s.soc.name)
+        .collect();
+    let source_names: Vec<String> =
+        if cfg.quick { vec![builtin_names[0].clone()] } else { builtin_names.clone() };
+
+    let pool = if cfg.threads == 0 { ExecPool::default() } else { ExecPool::new(cfg.threads) };
+    let pool_graphs: Vec<Graph> = crate::nas::sample_dataset(derive_seed(cfg.seed, "pool"), train_pool)
+        .into_iter()
+        .map(|a| a.graph)
+        .collect();
+    let eval_graphs: Vec<Graph> = crate::nas::sample_dataset(derive_seed(cfg.seed, "eval"), n_eval)
+        .into_iter()
+        .map(|a| a.graph)
+        .collect();
+
+    // Train one source bundle per source SoC on its own profile pool.
+    let mut sources: Vec<PredictorBundle> = Vec::new();
+    for name in &source_names {
+        let sc = registry.one_large_core(name).map_err(scenario_err)?;
+        let profiles = profiler::profile_set_with(
+            &pool,
+            &sc,
+            &pool_graphs,
+            derive_seed(cfg.seed, &format!("train:{}", sc.id)),
+            runs,
+        );
+        sources.push(PredictorBundle::train(
+            &sc,
+            &profiles,
+            Method::Lasso,
+            DeductionMode::Full,
+            cfg.seed,
+        )?);
+    }
+
+    // Profile every distinct target once (train pool + held-out eval
+    // split, disjoint seeds), shared across all sources.
+    let target_names: Vec<String> =
+        builtin_names.iter().chain(sampled_names.iter()).cloned().collect();
+    let mut targets: Vec<TargetData> = Vec::new();
+    for name in &target_names {
+        let sc = registry.one_large_core(name).map_err(scenario_err)?;
+        let pool_profiles = profiler::profile_set_with(
+            &pool,
+            &sc,
+            &pool_graphs,
+            derive_seed(cfg.seed, &format!("pool:{}", sc.id)),
+            runs,
+        );
+        let eval_profiles = profiler::profile_set_with(
+            &pool,
+            &sc,
+            &eval_graphs,
+            derive_seed(cfg.seed, &format!("eval:{}", sc.id)),
+            runs,
+        );
+        let eval_actual: Vec<f64> = eval_profiles.iter().map(|p| p.end_to_end_ms).collect();
+        let eval_plans: Vec<LoweredGraph> =
+            eval_graphs.iter().map(|g| plan::lower(&sc, DeductionMode::Full, g)).collect();
+        targets.push(TargetData { sc, pool_profiles, eval_actual, eval_plans });
+    }
+
+    // Evaluate every (source, target) pair with source != target.
+    let opt_num = |v: f64| if v.is_finite() { Json::Num(v) } else { Json::Null };
+    let mut pairs_json: Vec<Json> = Vec::new();
+    let mut degenerate_pairs = 0usize;
+    let mut dropped_rows_total = 0usize;
+    let mut beats_rmspe = true;
+    let mut no_worse_spearman = true;
+    let mut proxy_rmspes: Vec<f64> = Vec::new();
+    let mut adapted_rmspes: Vec<f64> = Vec::new();
+    let mut proxy_spears: Vec<f64> = Vec::new();
+    let mut adapted_spears: Vec<f64> = Vec::new();
+    for src in &sources {
+        let proxy = ProxyPredictor::new(src)?;
+        for td in &targets {
+            if td.sc.soc.name == src.scenario.soc.name {
+                continue;
+            }
+            let proxy_pred: Vec<f64> =
+                td.eval_plans.iter().map(|pl| proxy.predict_plan(pl)).collect();
+            let (proxy_rmspe, proxy_dropped) = rmspe_guarded(&proxy_pred, &td.eval_actual);
+            let proxy_spear = spearman(&proxy_pred, &td.eval_actual);
+            dropped_rows_total += proxy_dropped;
+
+            let mut curve: Vec<Json> = Vec::new();
+            for &k in &budgets {
+                let k = k.min(pool_graphs.len());
+                let report =
+                    adapt(src, &td.sc, &pool_graphs[..k], &td.pool_profiles[..k])?;
+                let tp = report.bundle.predictor()?;
+                let pred: Vec<f64> =
+                    td.eval_plans.iter().map(|pl| tp.predict_plan(pl)).collect();
+                let (rmspe, eval_dropped) = rmspe_guarded(&pred, &td.eval_actual);
+                let spear = spearman(&pred, &td.eval_actual);
+                dropped_rows_total += report.dropped_rows + eval_dropped;
+                if k == HEADLINE_BUDGET {
+                    // NaN-aware: a degenerate Spearman on either side is
+                    // counted and skipped, never averaged or compared.
+                    if !proxy_spear.is_finite() || !spear.is_finite() {
+                        degenerate_pairs += 1;
+                    } else {
+                        proxy_spears.push(proxy_spear);
+                        adapted_spears.push(spear);
+                        if spear < proxy_spear {
+                            no_worse_spearman = false;
+                        }
+                    }
+                    if proxy_rmspe.is_finite() && rmspe.is_finite() {
+                        proxy_rmspes.push(proxy_rmspe);
+                        adapted_rmspes.push(rmspe);
+                        if rmspe >= proxy_rmspe {
+                            beats_rmspe = false;
+                        }
+                    }
+                }
+                curve.push(Json::obj(vec![
+                    ("budget", Json::num(k as f64)),
+                    ("rmspe", opt_num(rmspe)),
+                    ("spearman", opt_num(spear)),
+                    ("dropped_rows", Json::num((report.dropped_rows + eval_dropped) as f64)),
+                    ("knots", Json::num(report.bundle.map.knots() as f64)),
+                    ("per_bucket_scales", Json::Bool(report.per_bucket_scales)),
+                ]));
+            }
+            pairs_json.push(Json::obj(vec![
+                ("source", Json::str(src.scenario.id.clone())),
+                ("target", Json::str(td.sc.id.clone())),
+                (
+                    "proxy",
+                    Json::obj(vec![
+                        ("rmspe", opt_num(proxy_rmspe)),
+                        ("spearman", opt_num(proxy_spear)),
+                    ]),
+                ),
+                ("curve", Json::Arr(curve)),
+            ]));
+        }
+    }
+
+    let mean = |v: &[f64]| {
+        if v.is_empty() { Json::Null } else { Json::Num(v.iter().sum::<f64>() / v.len() as f64) }
+    };
+    let summary = Json::obj(vec![
+        ("pairs", Json::num(pairs_json.len() as f64)),
+        ("headline_budget", Json::num(HEADLINE_BUDGET as f64)),
+        // Pairs whose proxy or adapted Spearman was NaN (constant inputs):
+        // counted and skipped, never silently averaged in.
+        ("degenerate_pairs", Json::num(degenerate_pairs as f64)),
+        ("dropped_rows", Json::num(dropped_rows_total as f64)),
+        ("proxy_mean_rmspe", mean(&proxy_rmspes)),
+        ("adapted_mean_rmspe", mean(&adapted_rmspes)),
+        ("proxy_mean_spearman", mean(&proxy_spears)),
+        ("adapted_mean_spearman", mean(&adapted_spears)),
+        ("adapted_beats_proxy_rmspe", Json::Bool(beats_rmspe)),
+        ("adapted_no_worse_spearman", Json::Bool(no_worse_spearman)),
+    ]);
+
+    Ok(Json::obj(vec![
+        ("format", Json::str(EVAL_FORMAT)),
+        ("version", Json::num(EVAL_VERSION as f64)),
+        ("quick", Json::Bool(cfg.quick)),
+        ("seed", Json::num(cfg.seed as f64)),
+        ("train_pool", Json::num(train_pool as f64)),
+        ("eval_graphs", Json::num(n_eval as f64)),
+        ("runs", Json::num(runs as f64)),
+        ("budgets", Json::Arr(budgets.iter().map(|&k| Json::num(k as f64)).collect())),
+        ("method", Json::str(Method::Lasso.name())),
+        ("pairs", Json::Arr(pairs_json)),
+        ("summary", summary),
+    ]))
+}

@@ -1,0 +1,785 @@
+//! Few-shot cross-device transfer: onboard a new device from a trained
+//! proxy predictor plus a handful of profiled samples.
+//!
+//! PR 5 made a SoC a JSON file, but a *predictor* for a new device still
+//! required a full profiling run. This module closes that gap with the
+//! two transfer mechanisms the related work establishes:
+//!
+//! - **Proxy transfer** ("One Proxy Device Is Enough"): latencies of two
+//!   devices are related by an approximately monotone map. Given a trained
+//!   source [`PredictorBundle`] and K profiled (graph, latency) pairs from
+//!   the target, fit a monotone piecewise-linear latency map — isotonic
+//!   regression via pool-adjacent-violators, deterministic, no RNG — from
+//!   proxy predictions to target latencies ([`MonotoneMap`]).
+//! - **Few-shot adaptation** (MAPLE-Edge, ~10 samples): per-bucket
+//!   residual recalibration of the source's native models using only the K
+//!   target rows, routed through the existing lowered-plan featurizer
+//!   (profiled op records carry the same feature rows `plan::lower`
+//!   produces). Each bucket's scale is a shrunken ratio-of-sums
+//!   (actual / proxy-predicted op latency), so buckets with thin evidence
+//!   fall back to the global ratio and never distort rankings.
+//!
+//! The result is a [`TransferBundle`]: the wrapped source bundle plus the
+//! target scenario descriptor, the monotone map, and the per-bucket
+//! scales. It serializes through the existing v3 JSON *and* the PR 8
+//! binary path (magic `EDGELATT`, embedding the source bundle's own
+//! `EDGELATB` section block), and every directory-scanning loader
+//! (`EngineBuilder::bundle_file`, the serve fleet, hot reload) sniffs and
+//! accepts it — a transfer bundle serves anywhere a trained bundle does,
+//! under the *target* scenario id.
+//!
+//! `transfer::eval` ([`eval_curve`](eval::run)) emits the byte-reproducible
+//! accuracy-vs-budget curve artifact behind `edgelat transfer eval`.
+
+pub mod eval;
+
+use crate::device::{soc_from_json, soc_to_json};
+use crate::engine::bundle::{scenario_from_descriptor, target_to_json, validate_bundle_scenario};
+use crate::engine::{EngineError, PredictorBundle, BIN_MAGIC};
+use crate::framework::DeductionMode;
+use crate::graph::Graph;
+use crate::plan::{self, LoweredGraph};
+use crate::predict::BucketModel;
+use crate::profiler::ModelProfile;
+use crate::scenario::Scenario;
+use crate::util::stats::MIN_PCT_DENOM;
+use crate::util::{rmspe_guarded, spearman, Json};
+use std::collections::BTreeMap;
+use std::path::Path;
+
+/// Identifies a transfer-bundle JSON document.
+pub const TRANSFER_FORMAT: &str = "edgelat.transfer_bundle";
+/// Schema version this build reads and writes.
+pub const TRANSFER_VERSION: u64 = 1;
+/// Magic prefix of the binary transfer-bundle format (the embedded source
+/// bundle keeps its own `EDGELATB` encoding).
+pub const TRANSFER_BIN_MAGIC: [u8; 8] = *b"EDGELATT";
+
+/// Per-bucket scales are clamped here: a ratio outside this range means
+/// the bucket's K-row evidence is garbage, not a real device difference.
+const SCALE_CLAMP: (f64, f64) = (0.05, 20.0);
+
+/// Shrinkage strength for per-bucket scales, in virtual rows of
+/// global-ratio evidence: a bucket seen in few target rows stays near the
+/// global ratio (which preserves the proxy ranking exactly), and only
+/// well-evidenced buckets earn an individual correction.
+const SCALE_VIRTUAL_ROWS: f64 = 4.0;
+
+/// A monotone non-decreasing piecewise-linear map fit by isotonic
+/// regression (pool-adjacent-violators). Deterministic: no RNG, ties
+/// broken by value. Knots are strictly increasing in both coordinates
+/// (PAV merges violating blocks until block means strictly increase), so
+/// [`apply`](Self::apply) is strictly increasing and never introduces
+/// rank ties of its own.
+#[derive(Debug, Clone, PartialEq)]
+pub struct MonotoneMap {
+    xs: Vec<f64>,
+    ys: Vec<f64>,
+}
+
+impl MonotoneMap {
+    /// Fit by PAV on (x, y) pairs. Non-finite pairs are skipped; an empty
+    /// usable set is an error. Equal-x pairs merge into their mean y
+    /// before the isotonic pass.
+    pub fn fit(pairs: &[(f64, f64)]) -> Result<MonotoneMap, String> {
+        let mut pts: Vec<(f64, f64)> =
+            pairs.iter().copied().filter(|(x, y)| x.is_finite() && y.is_finite()).collect();
+        if pts.is_empty() {
+            return Err("no finite (proxy, target) pairs to fit".into());
+        }
+        pts.sort_by(|a, b| a.0.total_cmp(&b.0).then(a.1.total_cmp(&b.1)));
+        // Merge duplicate x into one weighted point.
+        let mut merged: Vec<(f64, f64, f64)> = Vec::with_capacity(pts.len()); // (x, y, w)
+        for (x, y) in pts {
+            match merged.last_mut() {
+                Some(last) if last.0 == x => {
+                    last.1 = (last.1 * last.2 + y) / (last.2 + 1.0);
+                    last.2 += 1.0;
+                }
+                _ => merged.push((x, y, 1.0)),
+            }
+        }
+        // Pool adjacent violators: blocks carry (weight, mean x, mean y);
+        // a block whose mean y does not exceed its predecessor's merges
+        // into it, so surviving block means strictly increase.
+        let mut blocks: Vec<(f64, f64, f64)> = Vec::with_capacity(merged.len());
+        for (x, y, w) in merged {
+            blocks.push((w, x, y));
+            while blocks.len() >= 2 {
+                let n = blocks.len();
+                if blocks[n - 2].2 >= blocks[n - 1].2 {
+                    let (w2, x2, y2) = blocks.pop().expect("len checked");
+                    let (w1, x1, y1) = blocks.pop().expect("len checked");
+                    let w = w1 + w2;
+                    blocks.push((w, (x1 * w1 + x2 * w2) / w, (y1 * w1 + y2 * w2) / w));
+                } else {
+                    break;
+                }
+            }
+        }
+        let xs: Vec<f64> = blocks.iter().map(|b| b.1).collect();
+        let ys: Vec<f64> = blocks.iter().map(|b| b.2).collect();
+        Ok(MonotoneMap { xs, ys })
+    }
+
+    /// Number of knots (isotonic blocks) the fit produced.
+    pub fn knots(&self) -> usize {
+        self.xs.len()
+    }
+
+    /// Evaluate the map: linear interpolation between knots; below the
+    /// first knot, the chord through the origin (latency maps pass near
+    /// zero, and the clamp keeps the extension monotone and non-negative);
+    /// above the last knot, the first→last chord slope (the global trend —
+    /// more robust for extrapolation than the last local segment).
+    pub fn apply(&self, x: f64) -> f64 {
+        let (xs, ys) = (&self.xs, &self.ys);
+        let n = xs.len();
+        let origin_chord =
+            |x: f64| if xs[0] > 0.0 { ys[0] * (x / xs[0]).max(0.0) } else { ys[0] };
+        if n == 1 || x <= xs[0] {
+            return origin_chord(x.min(xs[0]));
+        }
+        if x >= xs[n - 1] {
+            let slope = (ys[n - 1] - ys[0]) / (xs[n - 1] - xs[0]);
+            return ys[n - 1] + (x - xs[n - 1]) * slope;
+        }
+        let hi = xs.partition_point(|&k| k <= x);
+        let lo = hi - 1;
+        let t = (x - xs[lo]) / (xs[hi] - xs[lo]);
+        ys[lo] + t * (ys[hi] - ys[lo])
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![("x", Json::from_f64s(&self.xs)), ("y", Json::from_f64s(&self.ys))])
+    }
+
+    /// Parse and validate: both coordinate lists non-empty, equal length,
+    /// finite, and strictly increasing — the invariants
+    /// [`apply`](Self::apply) relies on.
+    pub fn from_json(j: &Json) -> Result<MonotoneMap, String> {
+        let xs = j.req_f64_arr("x")?;
+        let ys = j.req_f64_arr("y")?;
+        if xs.is_empty() || xs.len() != ys.len() {
+            return Err(format!("map has {} x knots but {} y knots", xs.len(), ys.len()));
+        }
+        for w in [&xs, &ys] {
+            if w.iter().any(|v| !v.is_finite()) {
+                return Err("non-finite map knot".into());
+            }
+            if w.windows(2).any(|p| p[0] >= p[1]) {
+                return Err("map knots are not strictly increasing".into());
+            }
+        }
+        Ok(MonotoneMap { xs, ys })
+    }
+}
+
+/// A serialized transferred predictor: the source [`PredictorBundle`]
+/// wrapped with the target scenario, the monotone latency map, and the
+/// per-bucket few-shot scales. Serves under `target.id`.
+#[derive(Clone)]
+pub struct TransferBundle {
+    /// The proxy-device predictor whose models do the per-row work.
+    pub source: PredictorBundle,
+    /// The target scenario (full embedded descriptor, like a v3 bundle).
+    pub target: Scenario,
+    /// Proxy-prediction → target-latency monotone map.
+    pub map: MonotoneMap,
+    /// Per-bucket recalibration factors over the source's models (every
+    /// source-model bucket has an entry; model-less buckets are served by
+    /// the adapted fallback and are never scaled).
+    pub scales: BTreeMap<String, f64>,
+    /// Framework overhead re-estimated from the K target profiles.
+    pub t_overhead_ms: f64,
+    /// Fallback unit latency: the source fallback scaled by the global
+    /// target/source latency ratio (keeps the uniform candidate
+    /// rank-identical to the proxy — see [`adapt`]).
+    pub fallback_ms: f64,
+    /// Number of target profiles the adaptation consumed.
+    pub budget: usize,
+}
+
+/// Outcome of [`adapt`]: the bundle plus fit diagnostics.
+pub struct AdaptReport {
+    pub bundle: TransferBundle,
+    /// Profiled rows (and map pairs) skipped for zero/near-zero or
+    /// non-finite latency — surfaced instead of silently poisoning the
+    /// fit (see `util::stats::MIN_PCT_DENOM`).
+    pub dropped_rows: usize,
+    /// Whether the per-bucket scales beat the uniform global ratio on the
+    /// K training rows (otherwise every bucket holds the global ratio,
+    /// which preserves the proxy ranking exactly).
+    pub per_bucket_scales: bool,
+}
+
+/// Dense by-`BucketId` view of a bundle's models, parallel to the intern
+/// table — the same resolution the engine performs at build time.
+fn dense_models(source: &PredictorBundle) -> Result<Vec<Option<&BucketModel>>, EngineError> {
+    let it = plan::interner();
+    let mut v: Vec<Option<&BucketModel>> = (0..it.len()).map(|_| None).collect();
+    for (b, m) in &source.models {
+        let id = crate::engine::resolve_bundle_bucket(&source.scenario.id, b)?;
+        v[id.index()] = Some(m);
+    }
+    Ok(v)
+}
+
+/// Sum a lowered plan's per-unit predictions: model rows (optionally
+/// scaled per bucket), model-less buckets charged `fallback`.
+fn plan_sum(
+    models: &[Option<&BucketModel>],
+    pl: &LoweredGraph,
+    fallback: f64,
+    scales: Option<&[f64]>,
+) -> f64 {
+    let mut scratch: Vec<f64> = Vec::new();
+    let mut sum = 0.0;
+    for i in 0..pl.len() {
+        let bi = pl.bucket(i).index();
+        let ms = match models[bi] {
+            Some(m) => m.predict_raw_with(pl.row(i), &mut scratch),
+            None => fallback,
+        };
+        sum += ms * scales.map_or(1.0, |s| s[bi]);
+    }
+    sum
+}
+
+/// The proxy-only baseline: the source predictor applied unchanged to
+/// graphs lowered under the *target* scenario — no scales, no map, source
+/// overhead and fallback. What transfer must beat.
+pub struct ProxyPredictor<'a> {
+    models: Vec<Option<&'a BucketModel>>,
+    source: &'a PredictorBundle,
+}
+
+impl<'a> ProxyPredictor<'a> {
+    pub fn new(source: &'a PredictorBundle) -> Result<ProxyPredictor<'a>, EngineError> {
+        Ok(ProxyPredictor { models: dense_models(source)?, source })
+    }
+
+    /// Predict a target-scenario end-to-end latency with the raw proxy.
+    pub fn predict(&self, target: &Scenario, g: &Graph) -> f64 {
+        self.predict_plan(&plan::lower(target, self.source.mode, g))
+    }
+
+    pub fn predict_plan(&self, pl: &LoweredGraph) -> f64 {
+        self.source.t_overhead_ms + plan_sum(&self.models, pl, self.source.fallback_ms, None)
+    }
+}
+
+/// A [`TransferBundle`] compiled for prediction: dense model and scale
+/// tables, ready to evaluate lowered plans. The in-process counterpart of
+/// loading the bundle into a `LatencyEngine`.
+pub struct TransferPredictor<'a> {
+    models: Vec<Option<&'a BucketModel>>,
+    scales: Vec<f64>,
+    bundle: &'a TransferBundle,
+}
+
+impl TransferBundle {
+    /// The scenario id this bundle serves (the *target*).
+    pub fn scenario_id(&self) -> &str {
+        &self.target.id
+    }
+
+    /// Dense by-`BucketId` scale table: stored per-bucket scales for
+    /// source-model buckets, 1.0 everywhere else (fallback rows are
+    /// already in target units).
+    pub(crate) fn dense_scales(&self) -> Result<Vec<f64>, EngineError> {
+        let it = plan::interner();
+        let mut v = vec![1.0; it.len()];
+        for (b, s) in &self.scales {
+            let id = crate::engine::resolve_bundle_bucket(&self.target.id, b)?;
+            v[id.index()] = *s;
+        }
+        Ok(v)
+    }
+
+    /// Compile for in-process prediction.
+    pub fn predictor(&self) -> Result<TransferPredictor<'_>, EngineError> {
+        Ok(TransferPredictor {
+            models: dense_models(&self.source)?,
+            scales: self.dense_scales()?,
+            bundle: self,
+        })
+    }
+}
+
+impl<'a> TransferPredictor<'a> {
+    /// Predict the target end-to-end latency of a graph: lower under the
+    /// target scenario, scale per bucket, add the adapted overhead, then
+    /// apply the monotone map.
+    pub fn predict(&self, g: &Graph) -> f64 {
+        let b = self.bundle;
+        self.predict_plan(&plan::lower(&b.target, b.source.mode, g))
+    }
+
+    pub fn predict_plan(&self, pl: &LoweredGraph) -> f64 {
+        let b = self.bundle;
+        let sum = plan_sum(&self.models, pl, b.fallback_ms, Some(&self.scales));
+        b.map.apply(b.t_overhead_ms + sum)
+    }
+}
+
+/// Adapt a trained source bundle to a target scenario from K profiled
+/// (graph, profile) pairs — the few-shot onboarding path behind
+/// `edgelat transfer`.
+///
+/// Deterministic (no RNG): per-bucket ratio-of-sums scales with shrinkage
+/// toward the global ratio, overhead re-estimated from the K profiles,
+/// and a PAV monotone map from pre-map predictions to profiled end-to-end
+/// latencies. Two candidates are fit — per-bucket scales and the uniform
+/// global ratio — and per-bucket wins only when it improves training
+/// RMSPE without hurting training Spearman. The uniform candidate's
+/// pre-map score is an affine positive transform of the proxy score (see
+/// the fallback note inline), so its ranking equals the proxy's exactly:
+/// transfer never ranks worse than the baseline it starts from.
+pub fn adapt(
+    source: &PredictorBundle,
+    target: &Scenario,
+    graphs: &[Graph],
+    profiles: &[ModelProfile],
+) -> Result<AdaptReport, EngineError> {
+    if graphs.is_empty() || graphs.len() != profiles.len() {
+        return Err(EngineError::Unsupported(format!(
+            "adaptation needs parallel non-empty graph/profile sets (got {} graphs, {} profiles)",
+            graphs.len(),
+            profiles.len()
+        )));
+    }
+    validate_bundle_scenario(&source.scenario)?;
+    validate_bundle_scenario(target)?;
+    let models = dense_models(source)?;
+
+    // Per-bucket evidence from the profiled op rows: the profiler routes
+    // every op through the lowered-plan featurizer, so `rec.features` is
+    // exactly the row the source model would see for that unit.
+    let mut num: BTreeMap<&str, f64> = BTreeMap::new();
+    let mut den: BTreeMap<&str, f64> = BTreeMap::new();
+    let mut dropped = 0usize;
+    let mut kept_rows = 0usize;
+    let mut scratch: Vec<f64> = Vec::new();
+    for prof in profiles {
+        for rec in &prof.ops {
+            let pred = match source.models.get(&rec.bucket) {
+                Some(m) if m.feature_dim() == rec.features.len() => {
+                    m.predict_raw_with(&rec.features, &mut scratch)
+                }
+                _ => source.fallback_ms,
+            };
+            let lat = rec.latency_ms;
+            if !lat.is_finite() || lat.abs() < MIN_PCT_DENOM || !pred.is_finite() || pred <= 0.0 {
+                dropped += 1;
+                continue;
+            }
+            kept_rows += 1;
+            if source.models.contains_key(&rec.bucket) {
+                *num.entry(rec.bucket.as_str()).or_default() += lat;
+                *den.entry(rec.bucket.as_str()).or_default() += pred;
+            }
+        }
+    }
+    let total_num: f64 = num.values().sum();
+    let total_den: f64 = den.values().sum();
+    let rows = kept_rows.max(1) as f64;
+    let clamp = |s: f64| s.clamp(SCALE_CLAMP.0, SCALE_CLAMP.1);
+    let g_ratio = if total_den > 0.0 && (total_num / total_den).is_finite() {
+        clamp(total_num / total_den)
+    } else {
+        1.0
+    };
+    let den_bar = (total_den / rows).max(MIN_PCT_DENOM);
+    let mut per_bucket: BTreeMap<String, f64> = BTreeMap::new();
+    let mut uniform: BTreeMap<String, f64> = BTreeMap::new();
+    for b in source.models.keys() {
+        let scale = match (num.get(b.as_str()), den.get(b.as_str())) {
+            (Some(&n), Some(&d)) if d > 0.0 => clamp(
+                (n + SCALE_VIRTUAL_ROWS * g_ratio * den_bar) / (d + SCALE_VIRTUAL_ROWS * den_bar),
+            ),
+            _ => g_ratio,
+        };
+        per_bucket.insert(b.clone(), scale);
+        uniform.insert(b.clone(), g_ratio);
+    }
+
+    // Overhead and fallback re-estimated on the target, mirroring
+    // `ScenarioPredictor::train_from`.
+    let gaps: Vec<f64> = profiles.iter().map(|p| p.overhead_ms()).filter(|v| v.is_finite()).collect();
+    let t_overhead_ms = if gaps.is_empty() {
+        source.t_overhead_ms.max(0.0)
+    } else {
+        (gaps.iter().sum::<f64>() / gaps.len() as f64).max(0.0)
+    };
+    // The fallback is the source fallback scaled by the global ratio —
+    // NOT a mean of the kept target rows. This keeps the uniform
+    // candidate's pre-map score an affine positive transform of the proxy
+    // score (every per-unit term times `g_ratio`, plus a constant
+    // overhead), so the uniform variant's ranking — and therefore its
+    // tie-aware Spearman — equals the proxy's exactly. Few-shot
+    // adaptation can then never rank worse than the proxy baseline.
+    let fallback_ms = g_ratio * source.fallback_ms;
+
+    // Fit both candidates' maps on (pre-map prediction, profiled e2e).
+    // Per-bucket scales must beat uniform on training RMSPE *without*
+    // hurting training Spearman to be kept; ties keep uniform.
+    let plans: Vec<LoweredGraph> =
+        graphs.iter().map(|g| plan::lower(target, source.mode, g)).collect();
+    let actual: Vec<f64> = profiles.iter().map(|p| p.end_to_end_ms).collect();
+    let candidate = |scales: &BTreeMap<String, f64>| -> Result<(MonotoneMap, f64, f64, usize), EngineError> {
+        let it = plan::interner();
+        let mut dense = vec![1.0; it.len()];
+        for (b, s) in scales {
+            let id = crate::engine::resolve_bundle_bucket(&target.id, b)?;
+            dense[id.index()] = *s;
+        }
+        let xs: Vec<f64> = plans
+            .iter()
+            .map(|pl| t_overhead_ms + plan_sum(&models, pl, fallback_ms, Some(&dense)))
+            .collect();
+        let bad = xs.iter().zip(&actual).filter(|(x, y)| !x.is_finite() || !y.is_finite()).count();
+        let pairs: Vec<(f64, f64)> = xs.iter().copied().zip(actual.iter().copied()).collect();
+        let map = MonotoneMap::fit(&pairs).map_err(EngineError::Parse)?;
+        let mapped: Vec<f64> = xs.iter().map(|&x| map.apply(x)).collect();
+        let (train_rmspe, _) = rmspe_guarded(&mapped, &actual);
+        let train_spear = spearman(&mapped, &actual);
+        Ok((map, train_rmspe, train_spear, bad))
+    };
+    let (map_pb, rmspe_pb, spear_pb, bad_pb) = candidate(&per_bucket)?;
+    let (map_un, rmspe_un, spear_un, bad_un) = candidate(&uniform)?;
+    // `!(a < b)` rather than `a >= b`: a NaN Spearman (constant inputs) on
+    // either side must not veto the RMSPE comparison.
+    let use_per_bucket = rmspe_pb.is_finite()
+        && (!rmspe_un.is_finite() || rmspe_pb < rmspe_un)
+        && !(spear_pb < spear_un);
+    let (map, scales, bad_pairs) = if use_per_bucket {
+        (map_pb, per_bucket, bad_pb)
+    } else {
+        (map_un, uniform, bad_un)
+    };
+
+    Ok(AdaptReport {
+        bundle: TransferBundle {
+            source: source.clone(),
+            target: target.clone(),
+            map,
+            scales,
+            t_overhead_ms,
+            fallback_ms,
+            budget: graphs.len(),
+        },
+        dropped_rows: dropped + bad_pairs,
+        per_bucket_scales: use_per_bucket,
+    })
+}
+
+/// Either kind of bundle a fleet directory may hold — what the
+/// format-sniffing [`load_any`] returns and `EngineBuilder::bundle_file`
+/// dispatches on.
+pub enum LoadedBundle {
+    Predictor(PredictorBundle),
+    Transfer(TransferBundle),
+}
+
+/// Load a bundle file of either kind and either encoding, sniffing the
+/// binary magics first and the JSON `format` field second. Every error
+/// names the path.
+pub fn load_any(path: impl AsRef<Path>) -> Result<LoadedBundle, EngineError> {
+    let path = path.as_ref();
+    let bytes = std::fs::read(path)
+        .map_err(|e| EngineError::Io(format!("reading {}: {e}", path.display())))?;
+    let ctx = |e: String| EngineError::Parse(format!("{}: {e}", path.display()));
+    if bytes.starts_with(&TRANSFER_BIN_MAGIC) {
+        return TransferBundle::from_bin_bytes(&bytes)
+            .map(LoadedBundle::Transfer)
+            .map_err(|e| ctx(e.to_string()));
+    }
+    if bytes.starts_with(&BIN_MAGIC) {
+        return PredictorBundle::from_bin_bytes(&bytes)
+            .map(LoadedBundle::Predictor)
+            .map_err(|e| ctx(e.to_string()));
+    }
+    let s = String::from_utf8(bytes).map_err(|_| {
+        ctx("neither a binary bundle (no magic) nor UTF-8 JSON".into())
+    })?;
+    let j = Json::parse(&s).map_err(ctx)?;
+    if j.get("format").and_then(Json::as_str) == Some(TRANSFER_FORMAT) {
+        TransferBundle::from_json(&j).map(LoadedBundle::Transfer).map_err(ctx)
+    } else {
+        PredictorBundle::from_json(&j).map(LoadedBundle::Predictor).map_err(ctx)
+    }
+}
+
+/// The wrapper fields shared by the JSON document and the binary header
+/// section (everything except the embedded source bundle).
+struct Wrapper {
+    target: Scenario,
+    map: MonotoneMap,
+    scales: BTreeMap<String, f64>,
+    t_overhead_ms: f64,
+    fallback_ms: f64,
+    budget: usize,
+}
+
+fn wrapper_from_json(j: &Json) -> Result<Wrapper, String> {
+    let format = j.req_str("format")?;
+    if format != TRANSFER_FORMAT {
+        return Err(format!(
+            "not a transfer bundle (format '{format}', expected '{TRANSFER_FORMAT}')"
+        ));
+    }
+    let version = j.req_usize("version")? as u64;
+    if version != TRANSFER_VERSION {
+        return Err(format!(
+            "unsupported transfer-bundle version {version} (this build reads {TRANSFER_VERSION})"
+        ));
+    }
+    let scenario_id = j.req_str("scenario")?.to_string();
+    let soc = soc_from_json(j.req("device")?).map_err(|e| format!("device: {e}"))?;
+    let target = scenario_from_descriptor(soc, j.req("target")?, &scenario_id)?;
+    validate_bundle_scenario(&target).map_err(|e| e.to_string())?;
+    let map = MonotoneMap::from_json(j.req("map")?).map_err(|e| format!("map: {e}"))?;
+    let Json::Obj(smap) = j.req("scales")? else {
+        return Err("'scales' is not an object".into());
+    };
+    let mut scales = BTreeMap::new();
+    for (b, v) in smap {
+        crate::engine::resolve_bundle_bucket(&scenario_id, b).map_err(|e| e.to_string())?;
+        let s = v.as_f64().ok_or_else(|| format!("scale for bucket '{b}' is not a number"))?;
+        if !s.is_finite() || s <= 0.0 {
+            return Err(format!("scale for bucket '{b}' is not positive and finite"));
+        }
+        scales.insert(b.clone(), s);
+    }
+    let t_overhead_ms = j.req_f64("t_overhead_ms")?;
+    let fallback_ms = j.req_f64("fallback_ms")?;
+    if !t_overhead_ms.is_finite() || !fallback_ms.is_finite() {
+        return Err("non-finite t_overhead_ms/fallback_ms".into());
+    }
+    let budget = j.req_usize("budget")?;
+    Ok(Wrapper { target, map, scales, t_overhead_ms, fallback_ms, budget })
+}
+
+impl TransferBundle {
+    fn wrapper_to_json(&self) -> Json {
+        let scales: BTreeMap<String, Json> =
+            self.scales.iter().map(|(b, s)| (b.clone(), Json::Num(*s))).collect();
+        Json::obj(vec![
+            ("format", Json::str(TRANSFER_FORMAT)),
+            ("version", Json::num(TRANSFER_VERSION as f64)),
+            ("budget", Json::num(self.budget as f64)),
+            ("scenario", Json::str(self.target.id.clone())),
+            ("device", soc_to_json(&self.target.soc)),
+            ("target", target_to_json(&self.target.target)),
+            ("t_overhead_ms", Json::Num(self.t_overhead_ms)),
+            ("fallback_ms", Json::Num(self.fallback_ms)),
+            ("map", self.map.to_json()),
+            ("scales", Json::Obj(scales)),
+        ])
+    }
+
+    pub fn to_json(&self) -> Json {
+        let Json::Obj(mut m) = self.wrapper_to_json() else { unreachable!("obj built above") };
+        m.insert("source".into(), self.source.to_json());
+        Json::Obj(m)
+    }
+
+    pub fn from_json(j: &Json) -> Result<TransferBundle, String> {
+        let w = wrapper_from_json(j)?;
+        let source =
+            PredictorBundle::from_json(j.req("source")?).map_err(|e| format!("source: {e}"))?;
+        Ok(TransferBundle {
+            source,
+            target: w.target,
+            map: w.map,
+            scales: w.scales,
+            t_overhead_ms: w.t_overhead_ms,
+            fallback_ms: w.fallback_ms,
+            budget: w.budget,
+        })
+    }
+
+    /// Serialize to the binary format: `EDGELATT` magic, version, the
+    /// wrapper JSON (bit-exact float emit, like every edgelat JSON), then
+    /// the source bundle in its own PR 8 `EDGELATB` encoding at an
+    /// 8-aligned offset. Lossless both ways.
+    pub fn to_bin_bytes(&self) -> Result<Vec<u8>, EngineError> {
+        let wrapper = self.wrapper_to_json().to_string().into_bytes();
+        let src = self.source.to_bin_bytes()?;
+        let mut out = Vec::with_capacity(24 + wrapper.len() + 8 + src.len());
+        out.extend_from_slice(&TRANSFER_BIN_MAGIC);
+        out.extend_from_slice(&(TRANSFER_VERSION as u32).to_le_bytes());
+        out.extend_from_slice(&0u32.to_le_bytes()); // reserved
+        out.extend_from_slice(&(wrapper.len() as u64).to_le_bytes());
+        out.extend_from_slice(&wrapper);
+        while out.len() % 8 != 0 {
+            out.push(0);
+        }
+        out.extend_from_slice(&src);
+        Ok(out)
+    }
+
+    /// Decode the binary format; every offset is bounds-checked and every
+    /// failure is a typed error, never a panic.
+    pub fn from_bin_bytes(data: &[u8]) -> Result<TransferBundle, EngineError> {
+        let err = |m: &str| EngineError::Parse(format!("transfer bundle: {m}"));
+        if data.len() < 24 {
+            return Err(err("truncated header"));
+        }
+        if data[0..8] != TRANSFER_BIN_MAGIC {
+            return Err(err("bad magic"));
+        }
+        let version = u32::from_le_bytes(data[8..12].try_into().expect("4 bytes"));
+        if version as u64 != TRANSFER_VERSION {
+            return Err(EngineError::Parse(format!(
+                "transfer bundle: unsupported version {version} (this build reads {TRANSFER_VERSION})"
+            )));
+        }
+        let wlen = u64::from_le_bytes(data[16..24].try_into().expect("8 bytes")) as usize;
+        let wend = 24usize.checked_add(wlen).ok_or_else(|| err("wrapper length overflows"))?;
+        if wend > data.len() {
+            return Err(err("wrapper section out of bounds"));
+        }
+        let wrapper = std::str::from_utf8(&data[24..wend])
+            .map_err(|_| err("wrapper section is not UTF-8"))?;
+        let j = Json::parse(wrapper).map_err(|e| EngineError::Parse(format!("transfer bundle: {e}")))?;
+        let w = wrapper_from_json(&j).map_err(|e| EngineError::Parse(format!("transfer bundle: {e}")))?;
+        let src_off = wend.div_ceil(8) * 8;
+        if src_off >= data.len() {
+            return Err(err("missing embedded source bundle"));
+        }
+        let source = PredictorBundle::from_bin_bytes(&data[src_off..])?;
+        Ok(TransferBundle {
+            source,
+            target: w.target,
+            map: w.map,
+            scales: w.scales,
+            t_overhead_ms: w.t_overhead_ms,
+            fallback_ms: w.fallback_ms,
+            budget: w.budget,
+        })
+    }
+
+    /// Write as compact JSON. I/O errors name the path.
+    pub fn save(&self, path: impl AsRef<Path>) -> Result<(), EngineError> {
+        let path = path.as_ref();
+        std::fs::write(path, self.to_json().to_string())
+            .map_err(|e| EngineError::Io(format!("writing {}: {e}", path.display())))
+    }
+
+    /// Write in the binary format. I/O errors name the path.
+    pub fn save_bin(&self, path: impl AsRef<Path>) -> Result<(), EngineError> {
+        let path = path.as_ref();
+        std::fs::write(path, self.to_bin_bytes()?)
+            .map_err(|e| EngineError::Io(format!("writing {}: {e}", path.display())))
+    }
+
+    /// Load a transfer bundle in either encoding, sniffing the magic.
+    pub fn load_auto(path: impl AsRef<Path>) -> Result<TransferBundle, EngineError> {
+        let path = path.as_ref();
+        match load_any(path)? {
+            LoadedBundle::Transfer(t) => Ok(t),
+            LoadedBundle::Predictor(_) => Err(EngineError::Parse(format!(
+                "{}: a predictor bundle, not a transfer bundle",
+                path.display()
+            ))),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pav_recovers_a_monotone_relation() {
+        // y = 2x with one violating pair: PAV pools it away.
+        let pairs = [(1.0, 2.0), (2.0, 4.5), (3.0, 4.0), (4.0, 8.0), (5.0, 10.0)];
+        let m = MonotoneMap::fit(&pairs).unwrap();
+        // Strictly increasing knots in both coordinates.
+        assert!(m.xs.windows(2).all(|w| w[0] < w[1]));
+        assert!(m.ys.windows(2).all(|w| w[0] < w[1]));
+        // Monotone over a sweep, interpolation inside the hull.
+        let mut prev = f64::NEG_INFINITY;
+        for i in 0..200 {
+            let x = i as f64 * 0.05;
+            let y = m.apply(x);
+            assert!(y >= prev, "x={x}: {y} < {prev}");
+            prev = y;
+        }
+        assert!((m.apply(5.0) - 10.0).abs() < 1e-9);
+        assert!((m.apply(1.0) - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn pav_on_sorted_data_is_exact_interpolation() {
+        let pairs: Vec<(f64, f64)> = (1..=6).map(|i| (i as f64, 3.0 * i as f64)).collect();
+        let m = MonotoneMap::fit(&pairs).unwrap();
+        assert_eq!(m.knots(), 6);
+        assert!((m.apply(2.5) - 7.5).abs() < 1e-12);
+        // Extrapolation follows the global chord (slope 3).
+        assert!((m.apply(10.0) - 30.0).abs() < 1e-9);
+        // Below the hull: chord through the origin.
+        assert!((m.apply(0.5) - 1.5).abs() < 1e-12);
+        assert_eq!(m.apply(-1.0), 0.0);
+    }
+
+    #[test]
+    fn pav_constant_targets_collapse_to_one_knot() {
+        let pairs = [(1.0, 5.0), (2.0, 5.0), (3.0, 5.0)];
+        let m = MonotoneMap::fit(&pairs).unwrap();
+        assert_eq!(m.knots(), 1);
+        // Degenerate map: ratio scaling through the pooled knot.
+        assert!((m.apply(2.0) - 5.0).abs() < 1e-12);
+        assert!(m.apply(1.0) < 5.0);
+    }
+
+    #[test]
+    fn pav_skips_non_finite_pairs_and_rejects_empty() {
+        let m = MonotoneMap::fit(&[(1.0, 2.0), (f64::NAN, 3.0), (2.0, f64::INFINITY), (3.0, 6.0)])
+            .unwrap();
+        assert_eq!(m.knots(), 2);
+        assert!(MonotoneMap::fit(&[(f64::NAN, 1.0)]).is_err());
+        assert!(MonotoneMap::fit(&[]).is_err());
+    }
+
+    #[test]
+    fn monotone_map_json_roundtrip_bit_exact() {
+        let pairs = [(0.37, 1.12), (1.91, 2.83), (2.5, 2.2), (4.0, 9.7)];
+        let m = MonotoneMap::fit(&pairs).unwrap();
+        let back = MonotoneMap::from_json(&Json::parse(&m.to_json().to_string()).unwrap()).unwrap();
+        assert_eq!(m.xs.len(), back.xs.len());
+        for (a, b) in m.xs.iter().zip(&back.xs) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        for (a, b) in m.ys.iter().zip(&back.ys) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        // Validation rejects broken invariants.
+        let bad = Json::parse(r#"{"x":[1.0,1.0],"y":[1.0,2.0]}"#).unwrap();
+        assert!(MonotoneMap::from_json(&bad).is_err());
+        let bad = Json::parse(r#"{"x":[1.0,2.0],"y":[2.0,1.0]}"#).unwrap();
+        assert!(MonotoneMap::from_json(&bad).is_err());
+    }
+
+    #[test]
+    fn adapt_rejects_mismatched_inputs() {
+        let sc = crate::scenario::one_large_core("Snapdragon855").unwrap();
+        let graphs = crate::nas::sample_dataset(3, 2);
+        let gs: Vec<Graph> = graphs.into_iter().map(|a| a.graph).collect();
+        let profiles = crate::profiler::profile_set(&sc, &gs, 3, 1);
+        let bundle = PredictorBundle::train(
+            &sc,
+            &profiles,
+            crate::predict::Method::Lasso,
+            DeductionMode::Full,
+            3,
+        )
+        .unwrap();
+        let err = adapt(&bundle, &sc, &gs[..1], &profiles).unwrap_err();
+        assert!(err.to_string().contains("parallel"), "{err}");
+        let err = adapt(&bundle, &sc, &[], &[]).unwrap_err();
+        assert!(err.to_string().contains("non-empty"), "{err}");
+    }
+}

@@ -10,5 +10,7 @@ pub mod timing;
 
 pub use json::Json;
 pub use prng::Rng;
-pub use stats::{cov, mape, mean, median, rmspe, spearman, std_dev, BoxStats};
+pub use stats::{
+    cov, mape, mape_guarded, mean, median, rmspe, rmspe_guarded, spearman, std_dev, BoxStats,
+};
 pub use table::Table;

@@ -109,15 +109,40 @@ impl BoxStats {
     }
 }
 
+/// Smallest `|actual|` a percentage-error metric will divide by. A
+/// zero-latency profile row (or a non-finite one) used to poison a whole
+/// figure/loss with `inf`/NaN through the `(p - a) / a` term; rows below
+/// this threshold are skipped and counted instead.
+pub const MIN_PCT_DENOM: f64 = 1e-9;
+
+/// Whether a (pred, actual) pair is usable by a percentage-error metric.
+fn pct_row_ok(p: f64, a: f64) -> bool {
+    p.is_finite() && a.is_finite() && a.abs() >= MIN_PCT_DENOM
+}
+
 /// Mean absolute percentage error — the paper's headline accuracy metric.
+///
+/// Rows with a zero/near-zero or non-finite `actual` (or a non-finite
+/// prediction) are skipped; use [`mape_guarded`] to observe how many.
 pub fn mape(pred: &[f64], actual: &[f64]) -> f64 {
+    mape_guarded(pred, actual).0
+}
+
+/// [`mape`] with an explicit dropped-row count: `(value, dropped)`. NaN
+/// when every row was dropped.
+pub fn mape_guarded(pred: &[f64], actual: &[f64]) -> (f64, usize) {
     assert_eq!(pred.len(), actual.len());
     assert!(!pred.is_empty());
     let mut acc = 0.0;
-    for (p, a) in pred.iter().zip(actual) {
-        acc += ((p - a) / a).abs();
+    let mut kept = 0usize;
+    for (&p, &a) in pred.iter().zip(actual) {
+        if pct_row_ok(p, a) {
+            acc += ((p - a) / a).abs();
+            kept += 1;
+        }
     }
-    acc / pred.len() as f64
+    let value = if kept == 0 { f64::NAN } else { acc / kept as f64 };
+    (value, pred.len() - kept)
 }
 
 /// Average ranks (1-based) with ties sharing their mean rank — the
@@ -165,14 +190,28 @@ pub fn spearman(a: &[f64], b: &[f64]) -> f64 {
 }
 
 /// Root-mean-square percentage error (the training loss of Section 4.2).
+///
+/// Same zero/non-finite-denominator guard as [`mape`]; use
+/// [`rmspe_guarded`] for the dropped-row count.
 pub fn rmspe(pred: &[f64], actual: &[f64]) -> f64 {
+    rmspe_guarded(pred, actual).0
+}
+
+/// [`rmspe`] with an explicit dropped-row count: `(value, dropped)`. NaN
+/// when every row was dropped (or the input is empty).
+pub fn rmspe_guarded(pred: &[f64], actual: &[f64]) -> (f64, usize) {
     assert_eq!(pred.len(), actual.len());
     let mut acc = 0.0;
-    for (p, a) in pred.iter().zip(actual) {
-        let e = (p - a) / a;
-        acc += e * e;
+    let mut kept = 0usize;
+    for (&p, &a) in pred.iter().zip(actual) {
+        if pct_row_ok(p, a) {
+            let e = (p - a) / a;
+            acc += e * e;
+            kept += 1;
+        }
     }
-    (acc / pred.len() as f64).sqrt()
+    let value = if kept == 0 { f64::NAN } else { (acc / kept as f64).sqrt() };
+    (value, pred.len() - kept)
 }
 
 #[cfg(test)]
@@ -255,6 +294,57 @@ mod tests {
     fn spearman_degenerate_inputs_are_nan() {
         assert!(spearman(&[1.0], &[2.0]).is_nan());
         assert!(spearman(&[5.0, 5.0, 5.0], &[1.0, 2.0, 3.0]).is_nan());
+    }
+
+    #[test]
+    fn zero_latency_rows_are_dropped_not_poisonous() {
+        // One zero-actual row used to turn the whole metric into inf/NaN.
+        let p = [110.0, 90.0, 50.0];
+        let a = [100.0, 100.0, 0.0];
+        let (m, dropped) = mape_guarded(&p, &a);
+        assert_eq!(dropped, 1);
+        assert!((m - 0.1).abs() < 1e-12, "m={m}");
+        assert!(mape(&p, &a).is_finite());
+        let (r, dropped) = rmspe_guarded(&p, &a);
+        assert_eq!(dropped, 1);
+        assert!((r - 0.1).abs() < 1e-12, "r={r}");
+        assert!(rmspe(&p, &a).is_finite());
+    }
+
+    #[test]
+    fn non_finite_rows_are_dropped_and_counted() {
+        let p = [f64::NAN, 105.0, 100.0];
+        let a = [100.0, f64::INFINITY, 100.0];
+        let (m, dropped) = mape_guarded(&p, &a);
+        assert_eq!(dropped, 2);
+        assert_eq!(m, 0.0);
+        let (r, dropped) = rmspe_guarded(&p, &a);
+        assert_eq!(dropped, 2);
+        assert_eq!(r, 0.0);
+    }
+
+    #[test]
+    fn all_rows_dropped_yields_nan_with_full_count() {
+        let p = [1.0, 2.0];
+        let a = [0.0, MIN_PCT_DENOM / 2.0];
+        let (m, dropped) = mape_guarded(&p, &a);
+        assert!(m.is_nan());
+        assert_eq!(dropped, 2);
+        let (r, dropped) = rmspe_guarded(&p, &a);
+        assert!(r.is_nan());
+        assert_eq!(dropped, 2);
+    }
+
+    #[test]
+    fn clean_rows_unchanged_by_the_guard() {
+        let p = [110.0, 90.0, 55.0];
+        let a = [100.0, 100.0, 50.0];
+        let (m, dropped) = mape_guarded(&p, &a);
+        assert_eq!(dropped, 0);
+        assert_eq!(m.to_bits(), mape(&p, &a).to_bits());
+        let (r, dropped) = rmspe_guarded(&p, &a);
+        assert_eq!(dropped, 0);
+        assert_eq!(r.to_bits(), rmspe(&p, &a).to_bits());
     }
 
     #[test]

@@ -1,0 +1,157 @@
+//! Integration: few-shot device onboarding. Train a source bundle on a
+//! builtin SoC, register a never-seen sampled SoC, adapt with K profiled
+//! graphs, and check the ISSUE acceptance bar end to end: the transferred
+//! predictor beats the proxy baseline on RMSPE at every budget and never
+//! ranks worse (tie-aware Spearman), the accuracy-vs-budget artifact is
+//! byte-reproducible across thread counts, and a `TransferBundle`
+//! round-trips bit-exactly through both encodings and serves identically
+//! from either.
+
+use edgelat::engine::{EngineBuilder, PredictRequest, PredictorBundle};
+use edgelat::framework::DeductionMode;
+use edgelat::graph::Graph;
+use edgelat::plan::{self, LoweredGraph};
+use edgelat::predict::Method;
+use edgelat::profiler::{profile_set, ModelProfile};
+use edgelat::scenario::{Registry, Scenario};
+use edgelat::transfer::{adapt, eval, ProxyPredictor, TransferBundle};
+use edgelat::util::{rmspe_guarded, spearman, Json};
+
+fn graphs(seed: u64, n: usize) -> Vec<Graph> {
+    edgelat::nas::sample_dataset(seed, n).into_iter().map(|a| a.graph).collect()
+}
+
+/// Registry with the builtins plus one seed-sampled SoC the source bundle
+/// has never seen; returns the registry and the sampled SoC's name.
+fn registry_with_sampled(seed: u64) -> (Registry, String) {
+    let mut registry = Registry::with_builtin();
+    let spec = edgelat::device::sample_specs(seed, 1).remove(0);
+    let name = spec.soc.name.clone();
+    registry.register_soc(spec).expect("sampled spec registers");
+    (registry, name)
+}
+
+struct Fixture {
+    source: PredictorBundle,
+    target: Scenario,
+    pool_graphs: Vec<Graph>,
+    pool_profiles: Vec<ModelProfile>,
+    eval_actual: Vec<f64>,
+    eval_plans: Vec<LoweredGraph>,
+}
+
+fn fixture() -> Fixture {
+    let (registry, target_name) = registry_with_sampled(77);
+    let src_sc = registry.one_large_core("Snapdragon855").unwrap();
+    let pool_graphs = graphs(500, 40);
+    let src_profiles = profile_set(&src_sc, &pool_graphs, 500, 2);
+    let source =
+        PredictorBundle::train(&src_sc, &src_profiles, Method::Lasso, DeductionMode::Full, 500)
+            .expect("source trains");
+
+    let target = registry.one_large_core(&target_name).unwrap();
+    let pool_profiles = profile_set(&target, &pool_graphs, 501, 2);
+    let eval_graphs = graphs(600, 16);
+    let eval_profiles = profile_set(&target, &eval_graphs, 601, 2);
+    let eval_actual: Vec<f64> = eval_profiles.iter().map(|p| p.end_to_end_ms).collect();
+    let eval_plans: Vec<LoweredGraph> =
+        eval_graphs.iter().map(|g| plan::lower(&target, DeductionMode::Full, g)).collect();
+    Fixture { source, target, pool_graphs, pool_profiles, eval_actual, eval_plans }
+}
+
+#[test]
+fn adapted_beats_proxy_at_every_budget_on_a_never_seen_soc() {
+    let fx = fixture();
+    let proxy = ProxyPredictor::new(&fx.source).expect("proxy compiles");
+    let proxy_pred: Vec<f64> = fx.eval_plans.iter().map(|pl| proxy.predict_plan(pl)).collect();
+    let (proxy_rmspe, _) = rmspe_guarded(&proxy_pred, &fx.eval_actual);
+    let proxy_spear = spearman(&proxy_pred, &fx.eval_actual);
+    assert!(proxy_rmspe.is_finite() && proxy_rmspe > 0.0, "{proxy_rmspe}");
+    assert!(proxy_spear.is_finite(), "{proxy_spear}");
+
+    for k in [5usize, 10, 20, 40] {
+        let report =
+            adapt(&fx.source, &fx.target, &fx.pool_graphs[..k], &fx.pool_profiles[..k])
+                .expect("adapt");
+        let tp = report.bundle.predictor().expect("transfer predictor compiles");
+        let pred: Vec<f64> = fx.eval_plans.iter().map(|pl| tp.predict_plan(pl)).collect();
+        let (rmspe, _) = rmspe_guarded(&pred, &fx.eval_actual);
+        let spear = spearman(&pred, &fx.eval_actual);
+        assert!(
+            rmspe.is_finite() && rmspe < proxy_rmspe,
+            "K={k}: adapted RMSPE {rmspe} must beat proxy {proxy_rmspe}"
+        );
+        assert!(
+            spear.is_finite() && spear >= proxy_spear,
+            "K={k}: adapted Spearman {spear} must not rank worse than proxy {proxy_spear}"
+        );
+        assert_eq!(report.bundle.budget, k);
+    }
+}
+
+#[test]
+fn transfer_bundle_roundtrips_bit_exact_in_both_encodings_and_serves_identically() {
+    let fx = fixture();
+    let report = adapt(&fx.source, &fx.target, &fx.pool_graphs[..10], &fx.pool_profiles[..10])
+        .expect("adapt");
+    let tb = report.bundle;
+
+    // JSON round trip is byte-stable.
+    let text = tb.to_json().to_string();
+    let back = TransferBundle::from_json(&Json::parse(&text).unwrap()).expect("json parses back");
+    assert_eq!(back.to_json().to_string(), text, "JSON re-emit must be byte-identical");
+
+    // Binary round trip is byte-stable, and the two encodings describe
+    // the same bundle.
+    let bytes = tb.to_bin_bytes().expect("bin encodes");
+    let back2 = TransferBundle::from_bin_bytes(&bytes).expect("bin decodes");
+    assert_eq!(back2.to_bin_bytes().expect("re-encode"), bytes);
+    assert_eq!(back2.to_json().to_string(), text, "both encodings describe one bundle");
+
+    // Engines built from the two on-disk encodings predict bit-identically
+    // on the transferred target scenario.
+    let dir = std::env::temp_dir().join(format!("edgelat_transfer_rt_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let jpath = dir.join("t.json");
+    let bpath = dir.join("t.bin");
+    tb.save(&jpath).expect("json saved");
+    tb.save_bin(&bpath).expect("bin saved");
+    let e_json = EngineBuilder::new().bundle_file(&jpath).unwrap().build().unwrap();
+    let e_bin = EngineBuilder::new().bundle_file(&bpath).unwrap().build().unwrap();
+    let tp = tb.predictor().expect("in-memory predictor");
+    for (i, g) in graphs(700, 6).iter().enumerate() {
+        let req = PredictRequest::new(g, tb.scenario_id());
+        let a = e_json.predict(&req).expect("json engine serves");
+        let b = e_bin.predict(&req).expect("bin engine serves");
+        assert_eq!(a.e2e_ms.to_bits(), b.e2e_ms.to_bits(), "graph {i}");
+        // And both match the in-process transfer predictor exactly.
+        let pl = plan::lower(&fx.target, DeductionMode::Full, g);
+        assert_eq!(a.e2e_ms.to_bits(), tp.predict_plan(&pl).to_bits(), "graph {i}");
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn eval_artifact_is_byte_reproducible_and_meets_the_headline_bar() {
+    // Thread count must change speed only, never bytes: a 1-thread and a
+    // 4-thread run of the same seed must emit identical artifacts.
+    let a = eval::run(&eval::EvalConfig { quick: true, seed: 2022, threads: 1 })
+        .expect("eval runs")
+        .to_string();
+    let b = eval::run(&eval::EvalConfig { quick: true, seed: 2022, threads: 4 })
+        .expect("eval runs")
+        .to_string();
+    assert_eq!(a, b, "transfer-eval artifact must be byte-reproducible across thread counts");
+
+    let doc = Json::parse(&a).expect("artifact parses");
+    assert!(!a.contains("NaN") && !a.contains("inf"), "bare NaN/inf leaked into artifact");
+    assert_eq!(doc.req("format").unwrap().as_str().unwrap(), eval::EVAL_FORMAT);
+    let summary = doc.req("summary").expect("summary present");
+    assert!(summary.req_f64("pairs").unwrap() >= 1.0);
+    // The acceptance bar: at the headline budget the transferred
+    // predictor beats the proxy on RMSPE and never ranks worse, for
+    // every evaluated (source, target) pair.
+    assert_eq!(summary.req("adapted_beats_proxy_rmspe").unwrap(), &Json::Bool(true));
+    assert_eq!(summary.req("adapted_no_worse_spearman").unwrap(), &Json::Bool(true));
+    assert_eq!(summary.req_f64("degenerate_pairs").unwrap(), 0.0);
+}

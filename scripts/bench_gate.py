@@ -39,7 +39,15 @@ Fails on:
   scan it replaces on identical in-grid plan rows, and the measured
   interpolation error must respect the compile-time bound the tables
   were verified against — above it, a table that should have been
-  dropped is serving bad numbers.
+  dropped is serving bad numbers;
+- a broken few-shot transfer stage (missing derived.transfer,
+  non-positive or non-finite transfer.adaptations_per_s, or the adapted
+  predictor losing to the raw proxy baseline at the headline budget:
+  adapted_rmspe > proxy_rmspe, or adapted_spearman < proxy_spearman when
+  no degenerate correlations were skipped): onboarding a new device from
+  K profiled graphs must produce a predictor at least as good as serving
+  the source bundle unmodified — worse means the monotone map or the
+  per-bucket recalibration regressed.
 
 Both checks are ratios between two workloads timed back-to-back on the
 same machine, never absolute wall-clock thresholds, so they are robust to
@@ -252,6 +260,37 @@ def main() -> int:
             f"tables were verified against), got {lut_err!r}"
         )
 
+    transfer = derived.get("transfer")
+    if not isinstance(transfer, dict):
+        return fail(f"missing derived.transfer section in {path}")
+    aps = transfer.get("adaptations_per_s")
+    if not isinstance(aps, (int, float)) or not math.isfinite(aps) or aps <= 0:
+        return fail(f"transfer adaptations_per_s must be > 0, got {aps!r}")
+    for key in ("proxy_rmspe", "adapted_rmspe"):
+        v = transfer.get(key)
+        if not isinstance(v, (int, float)) or not math.isfinite(v) or v <= 0:
+            return fail(f"transfer {key} must be a finite positive error, got {v!r}")
+    t_proxy_rmspe = transfer["proxy_rmspe"]
+    t_adapted_rmspe = transfer["adapted_rmspe"]
+    if t_adapted_rmspe > t_proxy_rmspe:
+        return fail(
+            f"few-shot adapted RMSPE {t_adapted_rmspe:.4f} is worse than the "
+            f"raw proxy baseline {t_proxy_rmspe:.4f} at the headline budget"
+        )
+    degenerate = transfer.get("degenerate_pairs")
+    if not isinstance(degenerate, (int, float)) or not math.isfinite(degenerate):
+        return fail(f"transfer degenerate_pairs must be a finite count, got {degenerate!r}")
+    if degenerate == 0:
+        for key in ("proxy_spearman", "adapted_spearman"):
+            v = transfer.get(key)
+            if not isinstance(v, (int, float)) or not math.isfinite(v):
+                return fail(f"transfer {key} must be finite when no pair was degenerate, got {v!r}")
+        if transfer["adapted_spearman"] < transfer["proxy_spearman"]:
+            return fail(
+                f"few-shot adapted Spearman {transfer['adapted_spearman']:.4f} ranks "
+                f"worse than the proxy baseline {transfer['proxy_spearman']:.4f}"
+            )
+
     lowering = derived.get("lowering", {})
     graphs_per_s = lowering.get("graphs_per_s")
     lowering_txt = (
@@ -276,6 +315,8 @@ def main() -> int:
         f"lut={lut_speedup:.2f}x vs SoA "
         f"({lut_pps:.0f} predictions/s, "
         f"max_rel_err {lut_err:.4f} <= bound {lut_bound}), "
+        f"transfer={aps:.1f} adaptations/s "
+        f"(rmspe {t_adapted_rmspe:.3f} vs proxy {t_proxy_rmspe:.3f}), "
         f"search={cps:.0f} candidates/s "
         f"(plan-cache hit rate {hit_rate:.2f}), "
         f"serve={rps:.0f} req/s "

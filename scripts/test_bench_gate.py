@@ -6,7 +6,9 @@ the gate's verdict on each: a healthy artifact passes, and each class of
 regression the gate documents (slow batch predict, missing fleet section,
 sub-1x vectorized speedup, dead throughput, a binary bundle load losing
 to JSON, a LUT tier slower than the SoA scan or serving outside its
-verified error bound) fails with exit code 1. This
+verified error bound, a few-shot transfer stage that is missing, dead, or
+adapting predictors worse than the raw proxy baseline) fails with exit
+code 1. This
 keeps the gate itself honest: a refactor that silently stops checking a
 section shows up here, not as a green CI on a broken bench.
 
@@ -50,6 +52,17 @@ HEALTHY = {
             "lut_vs_soa_speedup": 2.2,
             "max_rel_err": 0.011,
             "bound": 0.05,
+        },
+        "transfer": {
+            "budget": 10,
+            "adaptations_per_s": 40.0,
+            "proxy_rmspe": 0.8,
+            "adapted_rmspe": 0.2,
+            "proxy_spearman": 0.9,
+            "adapted_spearman": 0.95,
+            "dropped_rows": 0,
+            "degenerate_pairs": 0,
+            "map_knots": 6,
         },
         "lowering": {
             "graphs_per_s": 4000.0,
@@ -178,6 +191,40 @@ def main() -> int:
             "dead LUT throughput fails",
             mutate(lambda d: d["derived"]["lut"].__setitem__("predictions_per_s", 0.0)),
             1,
+        ),
+        (
+            "missing transfer section fails",
+            mutate(lambda d: d["derived"].pop("transfer")),
+            1,
+        ),
+        (
+            "dead transfer adaptation rate fails",
+            mutate(lambda d: d["derived"]["transfer"].__setitem__("adaptations_per_s", 0.0)),
+            1,
+        ),
+        (
+            "non-finite adapted RMSPE fails",
+            mutate(lambda d: d["derived"]["transfer"].__setitem__("adapted_rmspe", -1.0)),
+            1,
+        ),
+        (
+            "adapted worse than proxy on RMSPE fails",
+            mutate(lambda d: d["derived"]["transfer"].__setitem__("adapted_rmspe", 0.9)),
+            1,
+        ),
+        (
+            "adapted ranking worse than proxy fails",
+            mutate(lambda d: d["derived"]["transfer"].__setitem__("adapted_spearman", 0.5)),
+            1,
+        ),
+        (
+            "degenerate spearman pairs skip the rank check",
+            mutate(
+                lambda d: d["derived"]["transfer"].update(
+                    {"degenerate_pairs": 1, "proxy_spearman": -1.0, "adapted_spearman": -1.0}
+                )
+            ),
+            0,
         ),
     ]
     failures = 0
