@@ -19,6 +19,12 @@
 //! open-loop load generator, and records requests/s, p50/p99 service
 //! latency, the mean coalesced batch size and the plan-cache hit rate
 //! under concurrent TCP traffic. The
+//! A workload stage registers the builtin contention/batch presets plus a
+//! sampled workload (`device::sample_workloads`) into the scenario
+//! cross-product, re-trains a predictor under every regime
+//! (`workload::eval`) and times lower+predict across contended scenarios —
+//! `derived.workload` carries the universe size, axis coverage, and the
+//! gated max RMSPE. The
 //! emitted JSON is the artifact the CI bench job uploads and gates on
 //! (`scripts/bench_gate.py`). Gated quantities are **ratios between
 //! workloads measured back-to-back in the same process** (e.g.
@@ -479,6 +485,81 @@ pub fn run(cfg: &BenchConfig) -> Json {
         .filter(|v| !v.is_finite())
         .count();
 
+    // --- Contended workload universe: every builtin workload preset plus
+    // one sampled workload (`device::sample_workloads`) registered over
+    // the builtin SoCs — the batch/contention cross-product the scenario
+    // registry enumerates. The sweep re-trains a GBDT under every regime
+    // (isolated + each preset) via `workload::eval` and reports the worst
+    // per-scenario RMSPE, the accuracy tripwire the CI gate requires to be
+    // finite; the predict stage then times lower+predict across one SoC's
+    // contended scenarios through a predictor trained *under* a workload,
+    // so the extra feature columns flow through the real serving path.
+    let mut wl_reg = Registry::with_builtin();
+    wl_reg.register_builtin_workloads().expect("builtin presets register");
+    for wl in crate::device::sample_workloads(cfg.seed ^ 0x31d, 1) {
+        wl_reg.register_workload(wl).expect("sampled workload registers");
+    }
+    let wl_eval_cfg = crate::workload::eval::EvalConfig {
+        seed: cfg.seed,
+        n_train: cfg.n_train.min(12),
+        n_test: 4,
+        runs: cfg.runs.min(2),
+        socs: 1,
+    };
+    let mut wl_report = None;
+    let wl_sweep = time_named("workload/contended sweep", 1, || {
+        wl_report = Some(crate::workload::eval::run(&wl_eval_cfg));
+    });
+    bench_line(&mut samples, wl_sweep.clone());
+    let wl_report = wl_report.expect("workload sweep ran");
+    let wl_sc = registry
+        .one_large_core("Snapdragon855")
+        .expect("builtin soc")
+        .with_workload(std::sync::Arc::new(crate::workload::builtin_presets()[1].clone()));
+    let wl_profiles = profile_set_with(&pool, &wl_sc, &train_g, cfg.seed, cfg.runs);
+    let wl_pred = ScenarioPredictor::train_from(
+        &wl_sc,
+        &wl_profiles,
+        Method::Gbdt,
+        DeductionMode::Full,
+        cfg.seed,
+        None,
+    );
+    let wl_contended: Vec<Scenario> = wl_reg
+        .all()
+        .iter()
+        .filter(|s| s.workload.is_some() && s.soc.name == "Snapdragon855")
+        .map(|s| (**s).clone())
+        .collect();
+    assert!(!wl_contended.is_empty(), "workload stage found no contended scenarios");
+    let wl_rows: usize = wl_contended
+        .iter()
+        .map(|sc| {
+            fleet_g.iter().map(|g| plan::lower(sc, DeductionMode::Full, g).len()).sum::<usize>()
+        })
+        .sum();
+    let wl_predict = time_named("workload/lower+predict contended", fleet_iters, || {
+        for sc in &wl_contended {
+            for g in &fleet_g {
+                let pl = plan::lower(sc, DeductionMode::Full, g);
+                black_box(wl_pred.predict_plan_rows(&pl));
+            }
+        }
+    });
+    bench_line(&mut samples, wl_predict.clone());
+    let wl_predictions_per_s = wl_rows as f64 / wl_predict.mean_s.max(1e-12);
+    // Axis coverage of the registered universe: distinct batch sizes
+    // (including the isolated batch-1 baseline) and workloads that perturb
+    // the contention axis (co-runner load or a fractional GPU quota).
+    let mut wl_batches: std::collections::BTreeSet<usize> =
+        wl_reg.workloads().iter().map(|w| w.batch).collect();
+    wl_batches.insert(1);
+    let wl_contention_axes = wl_reg
+        .workloads()
+        .iter()
+        .filter(|w| w.max_load() > 0.0 || w.gpu_share < 1.0)
+        .count();
+
     // --- Serve daemon: boot the TCP daemon on an ephemeral port around a
     // two-scenario fleet (the GBDT bundle trained above plus a quick GPU
     // Lasso bundle), offer open-loop load with the `serve-bench`
@@ -662,6 +743,24 @@ pub fn run(cfg: &BenchConfig) -> Json {
                     ]),
                 ),
                 (
+                    // The contended workload universe: the CI gate fails
+                    // on zero contended scenarios, missing axis coverage,
+                    // non-positive throughput, or a non-finite max RMSPE.
+                    "workload",
+                    Json::obj(vec![
+                        ("scenarios", Json::num(wl_reg.scenario_count() as f64)),
+                        ("contended_scenarios", Json::num(wl_reg.contended_count() as f64)),
+                        ("workloads", Json::num(wl_reg.workload_count() as f64)),
+                        ("batch_axes", Json::num(wl_batches.len() as f64)),
+                        ("contention_axes", Json::num(wl_contention_axes as f64)),
+                        ("unit_rows", Json::num(wl_rows as f64)),
+                        ("predictions_per_s", Json::num(fin(wl_predictions_per_s))),
+                        ("max_rmspe", Json::num(fin(wl_report.max_rmspe()))),
+                        ("eval_rows", Json::num(wl_report.rows.len() as f64)),
+                        ("eval_contended", Json::num(wl_report.contended_rows() as f64)),
+                    ]),
+                ),
+                (
                     // The serve daemon under open-loop TCP load: the CI
                     // gate fails on requests_per_s <= 0, mean_batch < 1,
                     // or a non-finite/non-positive p99.
@@ -822,6 +921,23 @@ mod tests {
         }
         assert!(transfer.req_usize("map_knots").unwrap() >= 1);
         assert!(benches.iter().any(|b| b.req_str("name").unwrap().starts_with("transfer/")));
+        // The workload stage: the contended cross-product actually
+        // enumerated (builtin presets + one sampled workload over the 72
+        // isolated scenarios), both axes are covered, rows flowed through
+        // the contended predict path, and the re-train sweep stayed finite
+        // — the accuracy tripwire the CI gate checks.
+        let wl = derived.req("workload").unwrap();
+        assert_eq!(wl.req_usize("workloads").unwrap(), 4);
+        assert_eq!(wl.req_usize("scenarios").unwrap(), 72 * 5);
+        assert_eq!(wl.req_usize("contended_scenarios").unwrap(), 72 * 4);
+        assert!(wl.req_usize("batch_axes").unwrap() >= 3);
+        assert!(wl.req_usize("contention_axes").unwrap() >= 2);
+        assert!(wl.req_usize("unit_rows").unwrap() > 0);
+        assert!(wl.req_f64("predictions_per_s").unwrap() > 0.0);
+        let wl_rmspe = wl.req_f64("max_rmspe").unwrap();
+        assert!(wl_rmspe.is_finite() && wl_rmspe >= 0.0, "max_rmspe={wl_rmspe}");
+        assert!(wl.req_usize("eval_contended").unwrap() > 0);
+        assert!(benches.iter().any(|b| b.req_str("name").unwrap().starts_with("workload/")));
         // The serve-daemon stage: real TCP traffic got through, requests
         // coalesced (mean batch >= 1 whenever any batch flushed), tail
         // latency is a real measurement, and the hit rate is a rate.

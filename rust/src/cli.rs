@@ -161,11 +161,16 @@ pub fn mode_flag(rest: &[String]) -> Result<DeductionMode, String> {
 
 /// The scenario registry a subcommand resolves against: the builtin
 /// devices plus every `--device-spec FILE.json` (repeatable) registered on
-/// top. Errors name the offending file.
+/// top, then every `--workload-spec FILE.json` (repeatable) qualifying the
+/// whole SoC universe — devices first, so a workload qualifies custom SoCs
+/// too. Errors name the offending file.
 pub fn registry_flag(rest: &[String]) -> Result<Registry, String> {
     let mut reg = Registry::with_builtin();
     for path in flag_all(rest, "--device-spec")? {
         reg.load_spec_file(&path).map_err(|e| e.to_string())?;
+    }
+    for path in flag_all(rest, "--workload-spec")? {
+        reg.load_workload_file(&path).map_err(|e| e.to_string())?;
     }
     Ok(reg)
 }
@@ -465,5 +470,47 @@ mod tests {
         let err = registry_flag(&rest).unwrap_err();
         assert!(err.contains("edgelat_cli_spec"), "{err}");
         let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn registry_flag_loads_workload_specs() {
+        // A workload spec qualifies the whole universe: 72 x (1 + 1).
+        let wl = crate::workload::builtin_presets()[0].clone();
+        let path = std::env::temp_dir()
+            .join(format!("edgelat_cli_wl_{}.json", std::process::id()));
+        std::fs::write(&path, wl.to_json().to_string()).unwrap();
+        let rest = args(&["--workload-spec", path.to_str().unwrap()]);
+        let reg = registry_flag(&rest).unwrap();
+        assert_eq!(reg.scenario_count(), 144);
+        assert_eq!(reg.contended_count(), 72);
+        let sc = scenario_flag(
+            &args(&["--scenario", &format!("HelioP35/gpu@{}", wl.name)]),
+            &reg,
+        )
+        .unwrap();
+        assert_eq!(sc.workload.as_ref().unwrap().name, wl.name);
+        // Workloads load after device specs regardless of flag order, so
+        // custom SoCs are qualified too.
+        let mut spec = crate::device::builtin_specs()[3].clone();
+        spec.soc.name = "CliWlSoc".into();
+        let spec_path = std::env::temp_dir()
+            .join(format!("edgelat_cli_wl_spec_{}.json", std::process::id()));
+        std::fs::write(&spec_path, spec.to_json().to_string()).unwrap();
+        let both = args(&[
+            "--workload-spec",
+            path.to_str().unwrap(),
+            "--device-spec",
+            spec_path.to_str().unwrap(),
+        ]);
+        let reg = registry_flag(&both).unwrap();
+        assert!(reg.by_id(&format!("CliWlSoc/gpu@{}", wl.name)).is_some());
+        // Missing and invalid files error, naming the path.
+        let err = registry_flag(&args(&["--workload-spec", "/no/such/wl.json"])).unwrap_err();
+        assert!(err.contains("/no/such/wl.json"), "{err}");
+        std::fs::write(&path, "{}").unwrap();
+        let err = registry_flag(&rest).unwrap_err();
+        assert!(err.contains("edgelat_cli_wl"), "{err}");
+        let _ = std::fs::remove_file(&path);
+        let _ = std::fs::remove_file(&spec_path);
     }
 }

@@ -9,6 +9,7 @@
 use crate::device::{CoreCombo, DataRep, Soc};
 use crate::graph::{Graph, Node, Op, OpType, Shape};
 use crate::tflite::{FusedKernel, KernelImpl};
+use crate::workload::{self, WorkloadSpec};
 
 /// Fraction of peak a convolution achieves as a function of its narrowest
 /// channel dimension: Ruy/GEMM kernels need wide panels to fill NEON lanes.
@@ -122,6 +123,57 @@ pub fn cpu_op_ms(
     rep: DataRep,
     serial_cluster: usize,
 ) -> f64 {
+    // Multiplying the phases by exactly 1.0 is an IEEE no-op, so the
+    // isolated path stays bit-identical to the pre-workload model.
+    cpu_op_ms_scaled(soc, g, node, combo, rep, serial_cluster, 1.0, 1.0)
+}
+
+/// [`cpu_op_ms`] under an optional workload: whole-batch latency, with the
+/// workload's contention multipliers on the variable compute/memory phases
+/// scaled by the batch-amortization factor, while the per-op fixed
+/// overhead is paid once per batch. `None` is bit-identical to
+/// [`cpu_op_ms`].
+pub fn cpu_op_ms_under(
+    soc: &Soc,
+    g: &Graph,
+    node: &Node,
+    combo: &CoreCombo,
+    rep: DataRep,
+    serial_cluster: usize,
+    wl: Option<&WorkloadSpec>,
+) -> f64 {
+    match wl {
+        None => cpu_op_ms(soc, g, node, combo, rep, serial_cluster),
+        Some(wl) => {
+            let load = wl.combo_load(combo);
+            let bm = wl.batch_work_mult();
+            cpu_op_ms_scaled(
+                soc,
+                g,
+                node,
+                combo,
+                rep,
+                serial_cluster,
+                workload::cpu_compute_mult(load) * bm,
+                workload::cpu_mem_mult(load) * bm,
+            )
+        }
+    }
+}
+
+/// The shared CPU roofline with explicit multipliers on the variable
+/// phases — `(1.0, 1.0)` reproduces the isolated model bit-for-bit.
+#[allow(clippy::too_many_arguments)]
+fn cpu_op_ms_scaled(
+    soc: &Soc,
+    g: &Graph,
+    node: &Node,
+    combo: &CoreCombo,
+    rep: DataRep,
+    serial_cluster: usize,
+    compute_mult: f64,
+    mem_mult: f64,
+) -> f64 {
     let ins = g.input_shapes(node);
     let outs = g.output_shapes(node);
     let flops = node.op.flops(&ins, &outs) as f64;
@@ -180,7 +232,7 @@ pub fn cpu_op_ms(
         )
     };
 
-    let mut ms = compute_ms + mem_ms + overhead_ms;
+    let mut ms = compute_ms * compute_mult + mem_ms * mem_mult + overhead_ms;
     if penalized {
         // Rescaling all inputs to a common quantization scale costs more
         // than the int8 arithmetic saves (Insight 2; ~2.5x on S855/E9820).
@@ -225,6 +277,28 @@ fn gpu_eff(impl_: KernelImpl, root: &Node, ins: &[Shape]) -> f64 {
 
 /// Noise-free latency (ms) of one compiled GPU kernel.
 pub fn gpu_kernel_ms(soc: &Soc, g: &Graph, k: &FusedKernel) -> f64 {
+    // busy_mult == 1.0 is an IEEE no-op: bit-identical isolated path.
+    gpu_kernel_ms_scaled(soc, g, k, 1.0)
+}
+
+/// [`gpu_kernel_ms`] under an optional workload: busy time (the roofline
+/// max of compute and memory, and the split/concat copies of the naive
+/// grouped path) stretches by the quota multiplier and the whole-batch
+/// work factor; per-dispatch overhead is paid once per batch regardless of
+/// who holds the GPU. `None` is bit-identical to [`gpu_kernel_ms`].
+pub fn gpu_kernel_ms_under(soc: &Soc, g: &Graph, k: &FusedKernel, wl: Option<&WorkloadSpec>) -> f64 {
+    match wl {
+        None => gpu_kernel_ms(soc, g, k),
+        Some(wl) => {
+            let busy = workload::gpu_quota_mult(wl.gpu_share) * wl.batch_work_mult();
+            gpu_kernel_ms_scaled(soc, g, k, busy)
+        }
+    }
+}
+
+/// The shared GPU roofline with an explicit multiplier on every busy-time
+/// term — `1.0` reproduces the isolated model bit-for-bit.
+fn gpu_kernel_ms_scaled(soc: &Soc, g: &Graph, k: &FusedKernel, busy_mult: f64) -> f64 {
     let gpu = &soc.gpu;
     let root = &g.nodes[k.root()];
     let ins = g.input_shapes(root);
@@ -252,11 +326,11 @@ pub fn gpu_kernel_ms(soc: &Soc, g: &Graph, k: &FusedKernel) -> f64 {
                 / (gpu.mem_gbps * 1e9)
                 * 1e3;
         let group_ms: f64 = (0..groups)
-            .map(|_| per_group_compute.max(per_group_mem) + dispatch_ms)
+            .map(|_| per_group_compute.max(per_group_mem) * busy_mult + dispatch_ms)
             .sum();
         // split: read+write input; concat: read+write output.
-        let split_ms = 2.0 * in_b / (gpu.mem_gbps * 1e9) * 1e3 + dispatch_ms;
-        let concat_ms = 2.0 * out_b / (gpu.mem_gbps * 1e9) * 1e3 + dispatch_ms;
+        let split_ms = 2.0 * in_b / (gpu.mem_gbps * 1e9) * 1e3 * busy_mult + dispatch_ms;
+        let concat_ms = 2.0 * out_b / (gpu.mem_gbps * 1e9) * 1e3 * busy_mult + dispatch_ms;
         return split_ms + group_ms + concat_ms;
     }
 
@@ -285,7 +359,7 @@ pub fn gpu_kernel_ms(soc: &Soc, g: &Graph, k: &FusedKernel) -> f64 {
 
     let compute_ms = (flops / eff + fused_flops / 0.30) / (gpu.gflops * 1e6);
     let mem_ms = (src_b * mem_mult + dst_b + param_b) / (gpu.mem_gbps * 1e9) * 1e3;
-    compute_ms.max(mem_ms) + dispatch_ms
+    compute_ms.max(mem_ms) * busy_mult + dispatch_ms
 }
 
 /// Coarse op-type of a fused kernel for breakdown figures (root op's type).
@@ -414,6 +488,68 @@ mod tests {
         let o = gpu_kernel_ms(&soc, &g, &opt.kernels[0]);
         let n = gpu_kernel_ms(&soc, &g, &naive.kernels[0]);
         assert!(n / o > 1.5, "naive={n} optimized={o}");
+    }
+
+    #[test]
+    fn isolated_valued_workload_is_bit_identical_to_none() {
+        // A workload whose axes sit at the isolated point (load 0, batch 1,
+        // full quota) multiplies by exactly 1.0 — not merely close.
+        let iso =
+            WorkloadSpec { name: "iso".into(), batch: 1, cpu_load: vec![0.0], gpu_share: 1.0 };
+        let soc = soc_by_name("Snapdragon855").unwrap();
+        let combo = CoreCombo::new(vec![1, 2, 1]);
+        let g = conv_graph(64, 128, 56, 3);
+        let a = cpu_op_ms(&soc, &g, &g.nodes[0], &combo, DataRep::Int8, 0);
+        let b = cpu_op_ms_under(&soc, &g, &g.nodes[0], &combo, DataRep::Int8, 0, Some(&iso));
+        assert_eq!(a.to_bits(), b.to_bits());
+        let compiled = compile(&g, GpuKind::Adreno, CompileOptions::default());
+        let x = gpu_kernel_ms(&soc, &g, &compiled.kernels[0]);
+        let y = gpu_kernel_ms_under(&soc, &g, &compiled.kernels[0], Some(&iso));
+        assert_eq!(x.to_bits(), y.to_bits());
+    }
+
+    #[test]
+    fn contention_and_batch_inflate_whole_batch_latency() {
+        let soc = soc_by_name("Snapdragon855").unwrap();
+        let combo = CoreCombo::new(vec![1, 0, 0]);
+        let g = conv_graph(64, 128, 56, 3);
+        let iso = cpu_op_ms(&soc, &g, &g.nodes[0], &combo, DataRep::Fp32, 0);
+        let loaded =
+            WorkloadSpec { name: "l".into(), batch: 1, cpu_load: vec![0.8], gpu_share: 1.0 };
+        let contended =
+            cpu_op_ms_under(&soc, &g, &g.nodes[0], &combo, DataRep::Fp32, 0, Some(&loaded));
+        assert!(contended > iso, "iso={iso} contended={contended}");
+        // Batch b: whole-batch latency within [1x, b x] the single-item cost.
+        let b8 = WorkloadSpec { name: "b8".into(), batch: 8, cpu_load: vec![0.0], gpu_share: 1.0 };
+        let batched = cpu_op_ms_under(&soc, &g, &g.nodes[0], &combo, DataRep::Fp32, 0, Some(&b8));
+        assert!(batched > iso && batched < 8.0 * iso, "iso={iso} batched={batched}");
+        // GPU: a halved quota share at least doubles busy-dominated kernels'
+        // busy time (dispatch is unscaled, so the total is below 2x + eps).
+        let half =
+            WorkloadSpec { name: "h".into(), batch: 1, cpu_load: vec![0.0], gpu_share: 0.5 };
+        let compiled = compile(&g, GpuKind::Adreno, CompileOptions::default());
+        let x = gpu_kernel_ms(&soc, &g, &compiled.kernels[0]);
+        let y = gpu_kernel_ms_under(&soc, &g, &compiled.kernels[0], Some(&half));
+        assert!(y > x && y <= 2.0 * x, "iso={x} half-quota={y}");
+    }
+
+    #[test]
+    fn naive_grouped_path_scales_under_workload_too() {
+        let soc = soc_by_name("HelioP35").unwrap();
+        let mut b = GraphBuilder::new("t", 28, 28, 64);
+        let x = b.input_tensor();
+        let t = b.grouped_conv(x, 64, 3, 1, 8);
+        let g = b.finish(vec![t]);
+        let naive = compile(
+            &g,
+            GpuKind::PowerVR,
+            CompileOptions { grouped: false, ..Default::default() },
+        );
+        assert!(matches!(naive.kernels[0].impl_, KernelImpl::NaiveGroupedConv2D { .. }));
+        let wl = WorkloadSpec { name: "w".into(), batch: 4, cpu_load: vec![0.5], gpu_share: 0.5 };
+        let iso = gpu_kernel_ms(&soc, &g, &naive.kernels[0]);
+        let under = gpu_kernel_ms_under(&soc, &g, &naive.kernels[0], Some(&wl));
+        assert!(under > iso, "iso={iso} under={under}");
     }
 
     #[test]

@@ -3,12 +3,13 @@
 //! trace plus end-to-end latency — the analogue of the TFLite Model
 //! Benchmark Tool + OpenCL command-queue timestamps (Section 4.3.1).
 
-use crate::device::cost::{cpu_op_ms, gpu_kernel_ms};
-use crate::device::noise::{cpu_noise, gpu_noise};
+use crate::device::cost::{cpu_op_ms_under, gpu_kernel_ms_under};
+use crate::device::noise::{cpu_noise_under, gpu_noise_under};
 use crate::device::{CoreCombo, DataRep, Soc};
 use crate::graph::{Graph, OpId, OpType};
 use crate::tflite::{compile, CompileOptions, FusedKernel, KernelImpl};
 use crate::util::Rng;
+use crate::workload::WorkloadSpec;
 
 /// Execution target for one scenario.
 #[derive(Debug, Clone, PartialEq)]
@@ -47,10 +48,25 @@ impl RunTrace {
 /// Execute one inference run. Fully deterministic in
 /// `(seed, graph name, target, run_idx)`.
 pub fn run(soc: &Soc, g: &Graph, target: &Target, seed: u64, run_idx: usize) -> RunTrace {
-    let mut rng = run_rng(soc, g, target, seed, run_idx);
+    run_under(soc, g, target, None, seed, run_idx)
+}
+
+/// Execute one inference run under an optional workload (whole-batch
+/// latency with contention multipliers). `None` is the isolated regime
+/// and reproduces [`run`] bit-identically: the RNG label stream only
+/// extends when a workload is present.
+pub fn run_under(
+    soc: &Soc,
+    g: &Graph,
+    target: &Target,
+    workload: Option<&WorkloadSpec>,
+    seed: u64,
+    run_idx: usize,
+) -> RunTrace {
+    let mut rng = run_rng(soc, g, target, workload, seed, run_idx);
     match target {
-        Target::Cpu { combo, rep } => run_cpu(soc, g, combo, *rep, &mut rng),
-        Target::Gpu { options } => run_gpu(soc, g, *options, &mut rng),
+        Target::Cpu { combo, rep } => run_cpu(soc, g, combo, *rep, workload, &mut rng),
+        Target::Gpu { options } => run_gpu(soc, g, *options, workload, &mut rng),
     }
 }
 
@@ -73,21 +89,43 @@ fn target_label(target: &Target) -> u64 {
     }
 }
 
-fn run_rng(soc: &Soc, g: &Graph, target: &Target, seed: u64, run_idx: usize) -> Rng {
-    let mut name_hash: u64 = 0xcbf29ce484222325;
-    for b in g.name.bytes() {
-        name_hash = (name_hash ^ b as u64).wrapping_mul(0x100000001b3);
+fn fnv1a(s: &str) -> u64 {
+    let mut h: u64 = 0xcbf29ce484222325;
+    for b in s.bytes() {
+        h = (h ^ b as u64).wrapping_mul(0x100000001b3);
     }
-    let mut soc_hash: u64 = 0xcbf29ce484222325;
-    for b in soc.name.bytes() {
-        soc_hash = (soc_hash ^ b as u64).wrapping_mul(0x100000001b3);
-    }
-    Rng::derive(seed, &[soc_hash, name_hash, target_label(target), run_idx as u64])
+    h
 }
 
-fn run_cpu(soc: &Soc, g: &Graph, combo: &CoreCombo, rep: DataRep, rng: &mut Rng) -> RunTrace {
+fn run_rng(
+    soc: &Soc,
+    g: &Graph,
+    target: &Target,
+    workload: Option<&WorkloadSpec>,
+    seed: u64,
+    run_idx: usize,
+) -> Rng {
+    let name_hash = fnv1a(&g.name);
+    let soc_hash = fnv1a(&soc.name);
+    let mut labels = vec![soc_hash, name_hash, target_label(target), run_idx as u64];
+    // Isolated runs keep the original 4-label stream (bit-identical
+    // traces); a workload opens its own stream keyed by name.
+    if let Some(wl) = workload {
+        labels.push(fnv1a(&wl.name));
+    }
+    Rng::derive(seed, &labels)
+}
+
+fn run_cpu(
+    soc: &Soc,
+    g: &Graph,
+    combo: &CoreCombo,
+    rep: DataRep,
+    workload: Option<&WorkloadSpec>,
+    rng: &mut Rng,
+) -> RunTrace {
     combo.validate(soc).expect("invalid core combo");
-    let params = cpu_noise(soc, combo);
+    let params = cpu_noise_under(soc, combo, workload);
     let noise = params.sample_run(rng);
     // TFLite's non-parallel ops land on whichever core hosts the
     // interpreter thread this run.
@@ -95,7 +133,7 @@ fn run_cpu(soc: &Soc, g: &Graph, combo: &CoreCombo, rep: DataRep, rng: &mut Rng)
     let serial_cluster = *rng.choice(&cores);
     let mut per_op = Vec::with_capacity(g.nodes.len());
     for node in &g.nodes {
-        let base = cpu_op_ms(soc, g, node, combo, rep, serial_cluster);
+        let base = cpu_op_ms_under(soc, g, node, combo, rep, serial_cluster, workload);
         let ms = base * noise.op_factor(rng);
         per_op.push(OpTrace {
             op: node.id,
@@ -110,13 +148,19 @@ fn run_cpu(soc: &Soc, g: &Graph, combo: &CoreCombo, rep: DataRep, rng: &mut Rng)
     RunTrace { per_op, overhead_ms: overhead, end_to_end_ms: total }
 }
 
-fn run_gpu(soc: &Soc, g: &Graph, options: CompileOptions, rng: &mut Rng) -> RunTrace {
+fn run_gpu(
+    soc: &Soc,
+    g: &Graph,
+    options: CompileOptions,
+    workload: Option<&WorkloadSpec>,
+    rng: &mut Rng,
+) -> RunTrace {
     let compiled = compile(g, soc.gpu.kind, options);
-    let params = gpu_noise(soc);
+    let params = gpu_noise_under(soc, workload);
     let noise = params.sample_run(rng);
     let mut per_op = Vec::with_capacity(compiled.kernels.len());
     for k in &compiled.kernels {
-        let base = gpu_kernel_ms(soc, g, k);
+        let base = gpu_kernel_ms_under(soc, g, k, workload);
         let ms = base * noise.op_factor(rng);
         per_op.push(trace_of(g, k, ms));
     }
@@ -137,7 +181,19 @@ fn trace_of(g: &Graph, k: &FusedKernel, ms: f64) -> OpTrace {
 
 /// Run `n` times and return the median end-to-end latency with all traces.
 pub fn run_many(soc: &Soc, g: &Graph, target: &Target, seed: u64, n: usize) -> Vec<RunTrace> {
-    (0..n).map(|i| run(soc, g, target, seed, i)).collect()
+    run_many_under(soc, g, target, None, seed, n)
+}
+
+/// [`run_many`] under an optional workload.
+pub fn run_many_under(
+    soc: &Soc,
+    g: &Graph,
+    target: &Target,
+    workload: Option<&WorkloadSpec>,
+    seed: u64,
+    n: usize,
+) -> Vec<RunTrace> {
+    (0..n).map(|i| run_under(soc, g, target, workload, seed, i)).collect()
 }
 
 #[cfg(test)]
@@ -240,6 +296,29 @@ mod tests {
         let fast = run(&s855, &g, &cpu_target(vec![1, 0, 0]), 5, 0).end_to_end_ms;
         let slow = run(&p35, &g, &cpu_target(vec![1, 0]), 5, 0).end_to_end_ms;
         assert!(slow / fast > 2.0, "fast={fast} slow={slow}");
+    }
+
+    #[test]
+    fn workload_opens_its_own_noise_stream() {
+        let soc = soc_by_name("Snapdragon855").unwrap();
+        let g = g();
+        let t = cpu_target(vec![1, 0, 0]);
+        let wl = WorkloadSpec {
+            name: "w".into(),
+            batch: 1,
+            cpu_load: vec![0.5],
+            gpu_share: 1.0,
+        };
+        let iso = run(&soc, &g, &t, 42, 0);
+        // None reproduces the isolated run bit-identically.
+        let none = run_under(&soc, &g, &t, None, 42, 0);
+        assert_eq!(iso.end_to_end_ms.to_bits(), none.end_to_end_ms.to_bits());
+        // A workload perturbs both the cost model and the RNG stream, but
+        // stays deterministic in (seed, run_idx, workload name).
+        let a = run_under(&soc, &g, &t, Some(&wl), 42, 0);
+        let b = run_under(&soc, &g, &t, Some(&wl), 42, 0);
+        assert_eq!(a.end_to_end_ms.to_bits(), b.end_to_end_ms.to_bits());
+        assert_ne!(a.end_to_end_ms, iso.end_to_end_ms);
     }
 
     #[test]

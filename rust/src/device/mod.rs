@@ -13,7 +13,7 @@ pub mod sample;
 pub mod spec;
 
 pub use exec::{run, OpTrace, RunTrace, Target};
-pub use sample::sample_specs;
+pub use sample::{sample_specs, sample_workloads};
 pub use spec::{
     builtin_specs, soc_from_json, soc_to_json, validate_soc, SocSpec, SPEC_FORMAT, SPEC_VERSION,
 };

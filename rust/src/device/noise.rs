@@ -13,6 +13,7 @@
 
 use crate::device::{CoreCombo, Soc};
 use crate::util::Rng;
+use crate::workload::WorkloadSpec;
 
 #[derive(Debug, Clone, Copy)]
 pub struct NoiseParams {
@@ -63,6 +64,34 @@ pub fn gpu_noise(soc: &Soc) -> NoiseParams {
         outlier_p: 0.008,
         outlier_lo: 1.3,
         outlier_hi: 2.2,
+    }
+}
+
+/// [`cpu_noise`] under an optional workload. Co-runners are exactly the
+/// "background jobs" the base model attributes its variance to, so load
+/// adds run-to-run spread and outlier mass on top of the isolated
+/// parameters; `None` returns them untouched (bit-identical traces).
+pub fn cpu_noise_under(soc: &Soc, combo: &CoreCombo, wl: Option<&WorkloadSpec>) -> NoiseParams {
+    let p = cpu_noise(soc, combo);
+    let Some(wl) = wl else { return p };
+    let load = wl.combo_load(combo);
+    NoiseParams {
+        run_sigma: p.run_sigma + 0.012 * load,
+        outlier_p: (p.outlier_p * (1.0 + 1.5 * load)).min(0.25),
+        ..p
+    }
+}
+
+/// [`gpu_noise`] under an optional workload: a shrinking quota share means
+/// more preemption points, hence more run-to-run spread and outlier mass.
+pub fn gpu_noise_under(soc: &Soc, wl: Option<&WorkloadSpec>) -> NoiseParams {
+    let p = gpu_noise(soc);
+    let Some(wl) = wl else { return p };
+    let stolen = 1.0 - wl.gpu_share;
+    NoiseParams {
+        run_sigma: p.run_sigma + 0.01 * stolen,
+        outlier_p: (p.outlier_p * (1.0 + stolen)).min(0.25),
+        ..p
     }
 }
 
@@ -132,6 +161,35 @@ mod tests {
             (0..n).map(|_| p.sample_run(&mut rng).run_factor).sum::<f64>() / n as f64;
         // Outliers push the mean slightly above 1.
         assert!((0.98..1.06).contains(&mean), "mean={mean}");
+    }
+
+    #[test]
+    fn workload_none_leaves_noise_untouched() {
+        let soc = soc_by_name("Snapdragon855").unwrap();
+        let combo = CoreCombo::new(vec![1, 2, 0]);
+        let base = cpu_noise(&soc, &combo);
+        let under = cpu_noise_under(&soc, &combo, None);
+        assert_eq!(base.run_sigma, under.run_sigma);
+        assert_eq!(base.outlier_p, under.outlier_p);
+        let g = gpu_noise(&soc);
+        let gu = gpu_noise_under(&soc, None);
+        assert_eq!(g.run_sigma, gu.run_sigma);
+        assert_eq!(g.outlier_p, gu.outlier_p);
+    }
+
+    #[test]
+    fn contended_runs_are_noisier() {
+        let soc = soc_by_name("Snapdragon855").unwrap();
+        let combo = CoreCombo::new(vec![1, 0, 0]);
+        let wl = WorkloadSpec { name: "w".into(), batch: 1, cpu_load: vec![0.8], gpu_share: 0.5 };
+        let base = cpu_noise(&soc, &combo);
+        let under = cpu_noise_under(&soc, &combo, Some(&wl));
+        assert!(under.run_sigma > base.run_sigma);
+        assert!(under.outlier_p > base.outlier_p);
+        let g = gpu_noise(&soc);
+        let gu = gpu_noise_under(&soc, Some(&wl));
+        assert!(gu.run_sigma > g.run_sigma);
+        assert!(gu.outlier_p > g.outlier_p);
     }
 
     #[test]

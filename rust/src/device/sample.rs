@@ -18,9 +18,14 @@
 use crate::device::{ClusterKind, CoreCluster, GpuSpec, Soc, SocSpec};
 use crate::tflite::GpuKind;
 use crate::util::Rng;
+use crate::workload::WorkloadSpec;
 
 /// Domain-separation label for the fleet-sampling stream ("SoCS").
 const STREAM: u64 = 0x50c5;
+/// Domain-separation label for the workload-sampling stream — its own
+/// stream, so adding workload draws never perturbs the SoC fleet (the
+/// seed-prefix stability tests pin the SoC stream).
+const WL_STREAM: u64 = 0x301d;
 
 /// Sample `n` schema-valid synthetic SoC specs. Deterministic in `seed`,
 /// and spec `i` depends only on `(seed, i)` — growing `n` never perturbs
@@ -107,6 +112,33 @@ fn sample_spec(seed: u64, i: usize) -> SocSpec {
     spec
 }
 
+/// Sample `n` schema-valid workload specs — the contention/batch analogue
+/// of [`sample_specs`], so the fleet bench exercises the workload axes
+/// beyond the committed presets. Same determinism contract: workload `i`
+/// depends only on `(seed, i)`, on a stream separate from the SoC
+/// sampler's, so interleaving the two never changes either sequence.
+pub fn sample_workloads(seed: u64, n: usize) -> Vec<WorkloadSpec> {
+    (0..n).map(|i| sample_workload(seed, i)).collect()
+}
+
+fn sample_workload(seed: u64, i: usize) -> WorkloadSpec {
+    let mut rng = Rng::derive(seed, &[WL_STREAM, i as u64]);
+    let wl = WorkloadSpec {
+        name: format!("FleetWl{seed:x}n{i}"),
+        // Powers of two 1..=8: the batch range the scenario universe
+        // sweeps (deeper batching belongs to explicit spec files).
+        batch: 1 << rng.range_usize(0, 3),
+        // Up to 3 per-cluster loads; the last entry broadcasts on SoCs
+        // with more clusters.
+        cpu_load: (0..rng.range_usize(1, 3)).map(|_| rng.range_f64(0.0, 1.0)).collect(),
+        gpu_share: rng.range_f64(0.25, 1.0),
+    };
+    if let Err(e) = wl.validate() {
+        panic!("sampled workload failed validation (sampler bug): {e}");
+    }
+    wl
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -139,6 +171,27 @@ mod tests {
         assert_eq!(reg.soc_count(), 120);
         assert_eq!(reg.scenario_count(), scenarios);
         assert!(scenarios >= 120 * 3, "each spec yields at least 1 combo x 2 reps + gpu");
+    }
+
+    #[test]
+    fn workload_sampler_is_deterministic_and_leaves_the_soc_stream_alone() {
+        assert_eq!(sample_workloads(7, 16), sample_workloads(7, 16));
+        assert_eq!(sample_workloads(7, 16)[..5], sample_workloads(7, 5)[..]);
+        assert_ne!(sample_workloads(1, 5), sample_workloads(2, 5));
+        for wl in sample_workloads(2022, 64) {
+            wl.validate().unwrap();
+        }
+        // Coverage of both axes across a modest draw.
+        let wls = sample_workloads(5, 64);
+        assert!(wls.iter().any(|w| w.batch > 1));
+        assert!(wls.iter().any(|w| w.batch == 1));
+        assert!(wls.iter().any(|w| w.gpu_share < 0.9));
+        assert!(wls.iter().any(|w| w.cpu_load.len() > 1));
+        // Its own RNG stream: the SoC fleet is byte-identical whether or
+        // not workloads were drawn from the same seed.
+        let before = sample_specs(9, 12);
+        let _ = sample_workloads(9, 12);
+        assert_eq!(before, sample_specs(9, 12));
     }
 
     #[test]

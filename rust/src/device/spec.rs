@@ -227,7 +227,7 @@ pub fn validate_soc(soc: &Soc) -> Result<(), String> {
     if soc.name.is_empty() {
         return Err("soc name is empty".into());
     }
-    for bad in ['/', ',', '#'] {
+    for bad in ['/', ',', '#', '@'] {
         if soc.name.contains(bad) {
             return Err(format!(
                 "soc name '{}' contains '{bad}' (reserved by scenario ids and CLI lists)",

@@ -50,7 +50,7 @@
 
 use crate::device::{soc_from_json, soc_to_json};
 use crate::engine::bundle::{
-    scenario_from_descriptor, target_to_json, validate_bundle_scenario,
+    scenario_from_descriptor, target_to_json, validate_bundle_scenario, workload_from_descriptor,
 };
 use crate::engine::{resolve_bundle_bucket, EngineError, PredictorBundle};
 use crate::features::Standardizer;
@@ -67,8 +67,16 @@ use std::path::Path;
 
 /// First 8 bytes of every binary bundle; `load_auto` sniffs this.
 pub const BIN_MAGIC: [u8; 8] = *b"EDGELATB";
-/// Binary schema version this build reads and writes.
+/// Binary schema version for isolated bundles (descriptor holds
+/// `{device, scenario, target}`).
 pub const BIN_VERSION: u32 = 1;
+/// Version written when the bundle carries a `workload` descriptor key.
+/// The version is conditional on the content — isolated bundles keep
+/// writing version 1, so their encodings stay byte-identical to
+/// pre-workload builds (the golden `.bin` under `tests/data/` pins that),
+/// and a version-2 file without a workload key (or vice versa) is
+/// rejected as non-canonical.
+pub const BIN_VERSION_WORKLOAD: u32 = 2;
 
 const HEADER_LEN: usize = 104;
 /// Caps keep a corrupted header from driving huge allocations before
@@ -366,14 +374,18 @@ fn encode(b: &PredictorBundle) -> Result<Vec<u8>, String> {
 
     // The self-describing scenario descriptor, as compact JSON — the one
     // part of the format where text wins (it is tiny, schema'd elsewhere,
-    // and reuses the spec-file SoC codec verbatim).
-    let desc = Json::obj(vec![
+    // and reuses the spec-file SoC codec verbatim). The workload key is
+    // present exactly when the scenario is workload-qualified, and the
+    // header version follows it.
+    let mut desc_fields = vec![
         ("device", soc_to_json(&b.scenario.soc)),
         ("scenario", Json::str(b.scenario.id.clone())),
         ("target", target_to_json(&b.scenario.target)),
-    ])
-    .to_string()
-    .into_bytes();
+    ];
+    if let Some(wl) = &b.scenario.workload {
+        desc_fields.push(("workload", wl.to_json()));
+    }
+    let desc = Json::obj(desc_fields).to_string().into_bytes();
 
     let mut mw = BinWriter::default();
     for (name, m) in &b.models {
@@ -392,7 +404,7 @@ fn encode(b: &PredictorBundle) -> Result<Vec<u8>, String> {
 
     let mut w = BinWriter { buf: Vec::with_capacity(total_len as usize) };
     w.bytes(&BIN_MAGIC);
-    w.u32(BIN_VERSION);
+    w.u32(if b.scenario.workload.is_some() { BIN_VERSION_WORKLOAD } else { BIN_VERSION });
     w.u32(method_c);
     w.u32(mode_code(b.mode));
     w.u32(names.len() as u32);
@@ -424,6 +436,7 @@ fn encode(b: &PredictorBundle) -> Result<Vec<u8>, String> {
 /// The header fields, validated structurally (magic/version/codes/layout)
 /// but before any section content is parsed.
 struct Header {
+    version: u32,
     method_c: u32,
     mode_c: u32,
     n_strings: u32,
@@ -444,9 +457,10 @@ fn decode_header(data: &[u8]) -> Result<Header, String> {
     }
     let mut r = BinReader::new(&data[8..HEADER_LEN]);
     let version = r.u32()?;
-    if version != BIN_VERSION {
+    if !(BIN_VERSION..=BIN_VERSION_WORKLOAD).contains(&version) {
         return Err(format!(
-            "unsupported binary bundle version {version} (this build reads {BIN_VERSION})"
+            "unsupported binary bundle version {version} (this build reads versions \
+             {BIN_VERSION}..={BIN_VERSION_WORKLOAD})"
         ));
     }
     let method_c = r.u32()?;
@@ -504,6 +518,7 @@ fn decode_header(data: &[u8]) -> Result<Header, String> {
         return Err("trailing bytes after the models section".into());
     }
     Ok(Header {
+        version,
         method_c,
         mode_c,
         n_strings,
@@ -710,10 +725,27 @@ fn decode(data: &[u8]) -> Result<PredictorBundle, String> {
     let scenario_id = dj.req_str("scenario").map_err(|e| format!("descriptor: {e}"))?.to_string();
     let soc = soc_from_json(dj.req("device").map_err(|e| format!("descriptor: {e}"))?)
         .map_err(|e| format!("device: {e}"))?;
+    let workload = workload_from_descriptor(&dj).map_err(|e| format!("descriptor: {e}"))?;
+    // The version byte is canonical: 2 exactly when a workload rides in
+    // the descriptor. Either mismatch is a tampered or miswritten file.
+    if workload.is_some() && h.version < BIN_VERSION_WORKLOAD {
+        return Err(format!(
+            "version-{} bundle carries a workload descriptor (needs version \
+             {BIN_VERSION_WORKLOAD})",
+            h.version
+        ));
+    }
+    if workload.is_none() && h.version >= BIN_VERSION_WORKLOAD {
+        return Err(format!(
+            "version-{} bundle is missing its workload descriptor",
+            h.version
+        ));
+    }
     let scenario = scenario_from_descriptor(
         soc,
         dj.req("target").map_err(|e| format!("descriptor: {e}"))?,
         &scenario_id,
+        workload,
     )?;
     validate_bundle_scenario(&scenario).map_err(|e| e.to_string())?;
 
@@ -750,7 +782,7 @@ pub fn inspect_bin(data: &[u8]) -> Result<Json, String> {
     };
     Ok(Json::obj(vec![
         ("format", Json::str("edgelat.predictor_bundle.bin")),
-        ("version", Json::num(BIN_VERSION as f64)),
+        ("version", Json::num(h.version as f64)),
         ("scenario", Json::str(b.scenario.id.clone())),
         ("device", Json::str(b.scenario.soc.name.clone())),
         ("method", Json::str(b.method.name())),
@@ -937,6 +969,41 @@ mod tests {
         let bytes = b.to_bin_bytes().expect("encode");
         let back = PredictorBundle::from_bin_bytes(&bytes).expect("decode");
         assert_eq!(b.to_json().to_string(), back.to_json().to_string());
+    }
+
+    #[test]
+    fn workload_bundles_use_version_2_and_roundtrip() {
+        // Isolated bundles keep the version-1 byte (byte-stability of the
+        // pre-workload encoding); workload-qualified ones flip it to 2 and
+        // carry the spec losslessly.
+        let iso = lasso_bundle();
+        let iso_bytes = iso.to_bin_bytes().expect("encode isolated");
+        assert_eq!(u32::from_le_bytes(iso_bytes[8..12].try_into().unwrap()), BIN_VERSION);
+
+        let wl = std::sync::Arc::new(crate::workload::builtin_presets()[0].clone());
+        let mut b = lasso_bundle();
+        b.scenario = b.scenario.with_workload(wl.clone());
+        let bytes = b.to_bin_bytes().expect("encode workload bundle");
+        assert_eq!(
+            u32::from_le_bytes(bytes[8..12].try_into().unwrap()),
+            BIN_VERSION_WORKLOAD
+        );
+        let back = PredictorBundle::from_bin_bytes(&bytes).expect("decode");
+        assert_eq!(back.scenario.id, b.scenario.id);
+        assert_eq!(back.scenario.workload.as_deref(), Some(&*wl));
+        assert_eq!(b.to_json().to_string(), back.to_json().to_string());
+        assert_eq!(bytes, back.to_bin_bytes().expect("re-encode"));
+
+        // Non-canonical version/content pairings are rejected. Patching
+        // the version byte alone must fail both ways.
+        let mut v1_with_wl = bytes.clone();
+        v1_with_wl[8..12].copy_from_slice(&BIN_VERSION.to_le_bytes());
+        let err = PredictorBundle::from_bin_bytes(&v1_with_wl).unwrap_err();
+        assert!(err.to_string().contains("workload"), "{err}");
+        let mut v2_without = iso_bytes.clone();
+        v2_without[8..12].copy_from_slice(&BIN_VERSION_WORKLOAD.to_le_bytes());
+        let err = PredictorBundle::from_bin_bytes(&v2_without).unwrap_err();
+        assert!(err.to_string().contains("workload"), "{err}");
     }
 
     #[test]

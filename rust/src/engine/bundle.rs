@@ -18,17 +18,22 @@ use crate::profiler::ModelProfile;
 use crate::scenario::{Registry, Scenario};
 use crate::tflite::CompileOptions;
 use crate::util::Json;
+use crate::workload::WorkloadSpec;
 use std::collections::BTreeMap;
 use std::path::Path;
+use std::sync::Arc;
 
 /// Identifies a predictor-bundle JSON document.
 pub const BUNDLE_FORMAT: &str = "edgelat.predictor_bundle";
-/// Schema version this build writes. v3 embeds the full scenario
-/// descriptor (`device` + `target`), so a bundle trained on a
-/// runtime-registered SoC loads anywhere — no spec file, no registry
-/// needed at load time. (v2 added the `interner` symbol table; v1 bundles
-/// predate the plan IR and are rejected; retrain with `edgelat train`.)
-pub const BUNDLE_VERSION: u64 = 3;
+/// Schema version this build writes. v4 adds the optional `workload`
+/// descriptor — a bundle trained under a contention/batch regime carries
+/// that regime with it (absent = isolated/batch-1, so every v3 bundle
+/// upgrades losslessly). v3 embeds the full scenario descriptor
+/// (`device` + `target`), so a bundle trained on a runtime-registered SoC
+/// loads anywhere — no spec file, no registry needed at load time. (v2
+/// added the `interner` symbol table; v1 bundles predate the plan IR and
+/// are rejected; retrain with `edgelat train`.)
+pub const BUNDLE_VERSION: u64 = 4;
 /// Oldest version this build still reads: v2 bundles carry only a
 /// scenario id, resolved against the builtin registry on load.
 pub const BUNDLE_COMPAT_VERSION: u64 = 2;
@@ -67,14 +72,15 @@ pub(crate) fn target_to_json(t: &Target) -> Json {
     }
 }
 
-/// Rebuild a scenario from an embedded SoC, target descriptor, and stored
-/// id. Structural parsing only — semantic checks (SoC ranges, combo
-/// realizability, id consistency) live in one place,
-/// [`validate_bundle_scenario`], which every loading path runs.
+/// Rebuild a scenario from an embedded SoC, target descriptor, optional
+/// workload, and stored id. Structural parsing only — semantic checks
+/// (SoC ranges, combo realizability, id/workload consistency) live in one
+/// place, [`validate_bundle_scenario`], which every loading path runs.
 pub(crate) fn scenario_from_descriptor(
     soc: Soc,
     target: &Json,
     id: &str,
+    workload: Option<Arc<WorkloadSpec>>,
 ) -> Result<Scenario, String> {
     let target = match target.req_str("kind")? {
         "cpu" => {
@@ -94,7 +100,18 @@ pub(crate) fn scenario_from_descriptor(
         },
         other => return Err(format!("unknown target kind '{other}' (cpu|gpu)")),
     };
-    Ok(Scenario { id: id.to_string(), soc, target })
+    Ok(Scenario { id: id.to_string(), soc, target, workload })
+}
+
+/// Parse the optional embedded workload descriptor (absent on v3 bundles
+/// and on every isolated v4 bundle).
+pub(crate) fn workload_from_descriptor(j: &Json) -> Result<Option<Arc<WorkloadSpec>>, String> {
+    match j.get("workload") {
+        Some(wj) => Ok(Some(Arc::new(
+            WorkloadSpec::from_json(wj).map_err(|e| format!("workload: {e}"))?,
+        ))),
+        None => Ok(None),
+    }
 }
 
 fn target_bool(target: &Json, key: &str) -> Result<bool, String> {
@@ -114,6 +131,27 @@ fn target_bool(target: &Json, key: &str) -> Result<bool, String> {
 pub(crate) fn validate_bundle_scenario(sc: &Scenario) -> Result<(), EngineError> {
     validate_soc(&sc.soc)
         .map_err(|e| EngineError::Parse(format!("bundle for '{}': {e}", sc.id)))?;
+    // A workload-qualified bundle must carry a valid spec AND an id whose
+    // `@WORKLOAD` suffix names it — the id is what the engine serves
+    // under, so a mismatched suffix would serve one regime's cost model
+    // under another's name. The base id then passes the same checks as an
+    // isolated bundle's. ('@' is reserved in SoC and workload names, so
+    // the suffix split is unambiguous.)
+    let base_id = match &sc.workload {
+        Some(wl) => {
+            wl.validate()
+                .map_err(|e| EngineError::Parse(format!("bundle for '{}': {e}", sc.id)))?;
+            let suffix = format!("@{}", wl.name);
+            sc.id.strip_suffix(suffix.as_str()).ok_or_else(|| {
+                EngineError::Parse(format!(
+                    "bundle scenario id '{}' does not end with its workload qualifier \
+                     '{suffix}'",
+                    sc.id
+                ))
+            })?
+        }
+        None => sc.id.as_str(),
+    };
     match &sc.target {
         Target::Cpu { combo, rep } => {
             // Re-derive through the one id-owning constructor (validates
@@ -122,7 +160,7 @@ pub(crate) fn validate_bundle_scenario(sc: &Scenario) -> Result<(), EngineError>
             // would serve one device's cost model under another's id.
             let derived = Scenario::cpu(&sc.soc, combo.counts.clone(), *rep)
                 .map_err(|e| EngineError::Parse(format!("bundle for '{}': {e}", sc.id)))?;
-            if sc.id != derived.id {
+            if base_id != derived.id {
                 return Err(EngineError::Parse(format!(
                     "bundle scenario id '{}' disagrees with its device/target ('{}')",
                     sc.id, derived.id
@@ -133,7 +171,7 @@ pub(crate) fn validate_bundle_scenario(sc: &Scenario) -> Result<(), EngineError>
             // "{soc}/gpu" exactly, or "{soc}/gpu/<ablation>" — nothing
             // else ("{soc}/gpux" is a tampered id, not an ablation).
             let prefix = format!("{}/gpu", sc.soc.name);
-            let tail = sc.id.strip_prefix(&prefix);
+            let tail = base_id.strip_prefix(&prefix);
             if !matches!(tail, Some(t) if t.is_empty() || t.starts_with('/')) {
                 return Err(EngineError::Parse(format!(
                     "bundle scenario id '{}' does not match its device '{}'",
@@ -236,7 +274,7 @@ impl PredictorBundle {
         // The intern table, names in BucketId order: the id ↔ name mapping
         // every model key resolves through on load.
         let interner = crate::plan::interner().names().iter().map(|&n| Json::str(n)).collect();
-        Json::obj(vec![
+        let mut fields = vec![
             ("format", Json::str(BUNDLE_FORMAT)),
             ("version", Json::Num(BUNDLE_VERSION as f64)),
             ("scenario", Json::str(self.scenario.id.clone())),
@@ -251,7 +289,13 @@ impl PredictorBundle {
             ("fallback_ms", Json::Num(self.fallback_ms)),
             ("interner", Json::Arr(interner)),
             ("buckets", Json::Obj(buckets)),
-        ])
+        ];
+        // The contention/batch regime, only when there is one — isolated
+        // bundles keep the v3 field set (plus the version bump).
+        if let Some(wl) = &self.scenario.workload {
+            fields.push(("workload", wl.to_json()));
+        }
+        Json::obj(fields)
     }
 
     pub fn from_json(j: &Json) -> Result<PredictorBundle, String> {
@@ -272,10 +316,11 @@ impl PredictorBundle {
         let scenario = if version >= 3 {
             // Self-describing: rebuild the scenario from the embedded
             // descriptor, then run the one shared semantic check (SoC
-            // ranges like a spec file, combo realizability, id
+            // ranges like a spec file, combo realizability, id/workload
             // consistency).
             let soc = soc_from_json(j.req("device")?).map_err(|e| format!("device: {e}"))?;
-            let sc = scenario_from_descriptor(soc, j.req("target")?, &scenario_id)?;
+            let workload = workload_from_descriptor(j)?;
+            let sc = scenario_from_descriptor(soc, j.req("target")?, &scenario_id, workload)?;
             validate_bundle_scenario(&sc).map_err(|e| e.to_string())?;
             sc
         } else {
@@ -378,7 +423,7 @@ mod tests {
             Scenario::gpu(&crate::device::soc_by_name("HelioP35").unwrap()),
         ] {
             let t = target_to_json(&sc.target);
-            let back = scenario_from_descriptor(sc.soc.clone(), &t, &sc.id).unwrap();
+            let back = scenario_from_descriptor(sc.soc.clone(), &t, &sc.id, None).unwrap();
             assert_eq!(back, sc);
             validate_bundle_scenario(&back).expect("round-tripped scenario validates");
         }
@@ -386,7 +431,7 @@ mod tests {
         let sc = crate::scenario::one_large_core("Exynos9820").unwrap();
         let t = target_to_json(&sc.target);
         let back =
-            scenario_from_descriptor(sc.soc.clone(), &t, "Exynos9820/cpu/2M/fp32").unwrap();
+            scenario_from_descriptor(sc.soc.clone(), &t, "Exynos9820/cpu/2M/fp32", None).unwrap();
         let err = validate_bundle_scenario(&back).unwrap_err();
         assert!(err.to_string().contains("disagrees"), "{err}");
         // A GPU id must belong to the embedded device: exactly "{soc}/gpu"
@@ -394,13 +439,42 @@ mod tests {
         let g = Scenario::gpu(&sc.soc);
         let t = target_to_json(&g.target);
         for bad in ["OtherSoc/gpu", "Exynos9820/gpux", "Exynos9820/gp"] {
-            let back = scenario_from_descriptor(sc.soc.clone(), &t, bad).unwrap();
+            let back = scenario_from_descriptor(sc.soc.clone(), &t, bad, None).unwrap();
             let err = validate_bundle_scenario(&back).unwrap_err();
             assert!(err.to_string().contains("does not match"), "{bad}: {err}");
         }
         for good in ["Exynos9820/gpu", "Exynos9820/gpu/nofusion"] {
-            let back = scenario_from_descriptor(sc.soc.clone(), &t, good).unwrap();
+            let back = scenario_from_descriptor(sc.soc.clone(), &t, good, None).unwrap();
             validate_bundle_scenario(&back).unwrap_or_else(|e| panic!("{good}: {e}"));
         }
+    }
+
+    #[test]
+    fn workload_qualified_descriptor_roundtrips_and_validates() {
+        let base = crate::scenario::one_large_core("Exynos9820").unwrap();
+        let wl = Arc::new(crate::workload::builtin_presets()[0].clone());
+        let sc = base.with_workload(wl.clone());
+        let t = target_to_json(&sc.target);
+        let back =
+            scenario_from_descriptor(sc.soc.clone(), &t, &sc.id, Some(wl.clone())).unwrap();
+        assert_eq!(back, sc);
+        validate_bundle_scenario(&back).expect("workload-qualified scenario validates");
+        // A workload without its id suffix (or with the wrong one) is a
+        // regime/id mismatch, not a servable bundle.
+        for bad in [base.id.clone(), format!("{}@other", base.id)] {
+            let back =
+                scenario_from_descriptor(sc.soc.clone(), &t, &bad, Some(wl.clone())).unwrap();
+            let err = validate_bundle_scenario(&back).unwrap_err();
+            assert!(err.to_string().contains("workload qualifier"), "{bad}: {err}");
+        }
+        // A suffix with no workload attached fails the base checks.
+        let back = scenario_from_descriptor(sc.soc.clone(), &t, &sc.id, None).unwrap();
+        assert!(validate_bundle_scenario(&back).is_err());
+        // An invalid embedded spec is rejected before any id logic.
+        let broken = Arc::new(crate::workload::WorkloadSpec { batch: 3, ..(*wl).clone() });
+        let back =
+            scenario_from_descriptor(sc.soc.clone(), &t, &sc.id, Some(broken)).unwrap();
+        let err = validate_bundle_scenario(&back).unwrap_err();
+        assert!(err.to_string().contains("power of two"), "{err}");
     }
 }

@@ -18,6 +18,10 @@ pub const GROUPED_CONV_FEATURE_DIM: usize = CONV_FEATURE_DIM + 1;
 pub const FUSED_KERNEL_EXTRA_FEATURES: usize = 2;
 /// Width of a fused GPU conv kernel row.
 pub const CONV_KERNEL_FEATURE_DIM: usize = CONV_FEATURE_DIM + FUSED_KERNEL_EXTRA_FEATURES;
+/// Columns a workload-qualified scenario appends to every row
+/// (`[batch, co-runner load, gpu share]` — `workload::feature_cols`).
+/// Isolated scenarios append nothing, keeping historic bundle widths.
+pub const WORKLOAD_FEATURE_DIM: usize = 3;
 
 /// Truncate or zero-pad a feature row to exactly `dim` entries.
 pub fn pad_features(v: &mut Vec<f64>, dim: usize) {

@@ -122,11 +122,20 @@ fn dense_models<'a>(named: BTreeMap<String, TrainedModel<'a>>) -> Vec<Option<Tra
 /// `tests/properties.rs` asserts the two agree bit-for-bit across all 72
 /// scenarios and every deduction mode.
 pub fn deduce_units(sc: &Scenario, mode: DeductionMode, g: &Graph) -> Vec<(String, Vec<f64>)> {
+    // Workload columns mirror `plan::lower` exactly: appended after any
+    // conform step, absent for isolated scenarios.
+    let wl_cols = crate::workload::feature_cols(sc);
     match &sc.target {
         Target::Cpu { .. } => g
             .nodes
             .iter()
-            .map(|n| (cpu_bucket(n), features(g, n)))
+            .map(|n| {
+                let mut f = features(g, n);
+                if let Some(cols) = wl_cols {
+                    f.extend_from_slice(&cols);
+                }
+                (cpu_bucket(n), f)
+            })
             .collect(),
         Target::Gpu { options } => {
             let opts = match mode {
@@ -143,6 +152,9 @@ pub fn deduce_units(sc: &Scenario, mode: DeductionMode, g: &Graph) -> Vec<(Strin
                     let mut f = kernel_features(g, k);
                     if mode == DeductionMode::NoSelection {
                         conform_conv_kernel_row(&mut f);
+                    }
+                    if let Some(cols) = wl_cols {
+                        f.extend_from_slice(&cols);
                     }
                     (b, f)
                 })

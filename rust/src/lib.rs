@@ -108,6 +108,18 @@
 //!   through every bundle loader (engine builder, serve fleet, hot
 //!   reload), and `edgelat transfer eval` emits the byte-reproducible
 //!   accuracy-vs-budget curve the bench gate checks.
+//! - **Workload axes (`workload`)**: contention- and batch-aware
+//!   scenarios. A versioned `WorkloadSpec` (batch size, per-cluster
+//!   co-runner load, GPU quota share) is data like a device spec:
+//!   committed presets plus `--workload-spec FILE.json` register into the
+//!   `Registry` as a cross-product of workload-qualified scenarios
+//!   (`BASE@WORKLOAD`), the cost model applies deterministic contention /
+//!   batch-amortization multipliers (`device::cost`), lowered-plan rows
+//!   gain guarded batch/load/share feature columns, bundles (v4 JSON,
+//!   binfmt v2) embed the descriptor, and `edgelat workload eval` emits
+//!   the per-scenario RMSPE artifact showing predictors stay accurate
+//!   across the enlarged universe. Isolated scenarios (`workload: None`)
+//!   stay bit-identical to the paper's 72.
 //! - **L2 (python/compile/model.py, build-time only)**: the MLP latency
 //!   predictor's forward/backward in JAX, AOT-lowered to HLO text.
 //! - **L1 (python/compile/kernels/, build-time only)**: the MLP's fused
@@ -139,4 +151,5 @@ pub mod serve;
 pub mod tflite;
 pub mod transfer;
 pub mod util;
+pub mod workload;
 pub mod zoo;

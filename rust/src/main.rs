@@ -14,6 +14,7 @@
 //!   bench       time the pipeline hot paths, write BENCH_pipeline.json
 //!   bundle      convert/inspect predictor bundles (JSON <-> binary)
 //!   devices     list/show/validate device specs (the open SoC universe)
+//!   workload    validate workload specs / emit the contended accuracy artifact
 //!   list        list scenarios / zoo models
 //!
 //! Flag parsing lives in `edgelat::cli` (hand-rolled — the offline crate
@@ -48,6 +49,7 @@ fn main() {
         "bench" => cmd_bench(rest),
         "bundle" => cmd_bundle(rest),
         "devices" => cmd_devices(rest),
+        "workload" => cmd_workload(rest),
         "list" => cmd_list(rest),
         "help" | "--help" | "-h" => usage(),
         other => {
@@ -85,6 +87,8 @@ USAGE:
                     [--duration-s S] [--seed S] [--drain] [--out REPORT.json]
   edgelat bench     [--quick] [--threads N] [--out BENCH_pipeline.json]
   edgelat devices   list | show SOC | validate --spec FILE.json [--spec ...]
+  edgelat workload  validate --spec FILE.json [--spec ...]
+                    | eval [--quick] [--seed S] [--out EVAL.json]
   edgelat list      {{scenarios|models|figures}}
 
 Bring your own device: reproduce/profile/train/evaluate/predict/search/list
@@ -92,6 +96,12 @@ accept `--device-spec FILE.json` (repeatable) to register SoCs on top of
 the four builtin Table 1 devices — every scenario of a registered SoC is
 addressable by id, and a bundle trained for it embeds the full device
 descriptor, so it loads and serves anywhere without the spec file.
+
+Bring your own workload: the same subcommands accept `--workload-spec
+FILE.json` (repeatable) to register contention/batch regimes (batch size,
+per-cluster co-runner load, GPU quota share). Each registered workload
+qualifies every scenario as `BASE@WORKLOAD`; a bundle trained for a
+qualified scenario embeds the workload descriptor too.
 
 The train-once/serve workflow: `train` profiles synthetic NAs once and writes
 a serialized predictor bundle; `predict --bundle` / `evaluate --bundle` then
@@ -994,6 +1004,28 @@ fn cmd_transfer_eval(rest: &[String]) {
     }
 }
 
+/// The shared workload-axis summary behind `devices list` and `list
+/// scenarios`: registered workloads with their axis values, plus the
+/// isolated-vs-contended scenario split.
+fn print_workload_universe(reg: &Registry) {
+    println!(
+        "\n{} scenarios: {} isolated, {} contended ({} workload(s))",
+        reg.scenario_count(),
+        reg.isolated_count(),
+        reg.contended_count(),
+        reg.workload_count()
+    );
+    for wl in reg.workloads() {
+        println!(
+            "  @{:<16} batch {:<3} load {:.2} gpu_share {:.2}",
+            wl.name,
+            wl.batch,
+            wl.max_load(),
+            wl.gpu_share
+        );
+    }
+}
+
 fn cmd_devices(rest: &[String]) {
     // A leading flag is not a subcommand: `devices --device-spec f.json`
     // defaults to `list` over the extended universe.
@@ -1016,6 +1048,7 @@ fn cmd_devices(rest: &[String]) {
                     spec.soc.gpu.name
                 );
             }
+            print_workload_universe(&reg);
         }
         "show" => {
             let name = rest.get(1).filter(|a| !a.starts_with("--")).unwrap_or_else(|| {
@@ -1028,6 +1061,24 @@ fn cmd_devices(rest: &[String]) {
                 std::process::exit(2);
             });
             println!("{}", spec.to_json().to_string());
+            // Summary on stderr — stdout stays a pure spec document.
+            let per_soc = spec.scenario_count();
+            eprintln!(
+                "{}: {} isolated scenario(s) + {} contended ({} workload(s) registered)",
+                spec.soc.name,
+                per_soc,
+                per_soc * reg.workload_count(),
+                reg.workload_count()
+            );
+            for wl in reg.workloads() {
+                eprintln!(
+                    "  @{:<16} batch {:<3} load {:.2} gpu_share {:.2}",
+                    wl.name,
+                    wl.batch,
+                    wl.max_load(),
+                    wl.gpu_share
+                );
+            }
         }
         "validate" => {
             // Validate spec files standalone: parse + schema + semantic
@@ -1062,6 +1113,78 @@ fn cmd_devices(rest: &[String]) {
     }
 }
 
+/// `edgelat workload` — validate workload-spec files standalone and emit
+/// the contended-universe accuracy artifact (`workload eval`).
+fn cmd_workload(rest: &[String]) {
+    let sub = rest.first().filter(|a| !a.starts_with("--")).map(|s| s.as_str());
+    match sub.unwrap_or("help") {
+        "validate" => {
+            // Parse + schema + semantic checks + a registration dry-run
+            // against the builtin universe, mirroring `devices validate`.
+            let paths = or_die(cli::flag_all(rest, "--spec"));
+            if paths.is_empty() {
+                eprintln!("need --spec FILE.json (repeatable)");
+                std::process::exit(2);
+            }
+            let mut failed = false;
+            for path in &paths {
+                let mut fresh = Registry::with_builtin();
+                match fresh.load_workload_file(path) {
+                    Ok(name) => println!(
+                        "OK   {path}: {name} (+{} contended scenarios)",
+                        fresh.contended_count()
+                    ),
+                    Err(e) => {
+                        eprintln!("FAIL {e}");
+                        failed = true;
+                    }
+                }
+            }
+            if failed {
+                std::process::exit(2);
+            }
+        }
+        "eval" => {
+            let seed = or_die(cli::seed_flag(rest));
+            let cfg = if cli::has(rest, "--quick") {
+                edgelat::workload::eval::EvalConfig::quick(seed)
+            } else {
+                edgelat::workload::eval::EvalConfig::full(seed)
+            };
+            let t0 = std::time::Instant::now();
+            let report = edgelat::workload::eval::run(&cfg);
+            let doc = report.to_json();
+            match or_die(cli::flag(rest, "--out")) {
+                Some(p) => {
+                    std::fs::write(&p, doc.to_string()).unwrap_or_else(|e| {
+                        eprintln!("writing {p}: {e}");
+                        std::process::exit(2);
+                    });
+                    println!("wrote workload eval artifact {p}");
+                }
+                None => println!("{}", doc.to_string()),
+            }
+            eprintln!(
+                "workload eval: {} scenario rows ({} contended), max RMSPE {:.3} \
+                 (bound {}), {:.1}s",
+                report.rows.len(),
+                report.contended_rows(),
+                report.max_rmspe(),
+                report.bound,
+                t0.elapsed().as_secs_f64()
+            );
+            if !report.ok() {
+                eprintln!("FAIL: contended-scenario accuracy out of bounds");
+                std::process::exit(1);
+            }
+        }
+        other => {
+            eprintln!("unknown workload subcommand '{other}' (validate|eval)");
+            std::process::exit(2);
+        }
+    }
+}
+
 fn cmd_list(rest: &[String]) {
     let sub = rest.first().filter(|a| !a.starts_with("--")).map(|s| s.as_str());
     match sub.unwrap_or("scenarios") {
@@ -1069,6 +1192,24 @@ fn cmd_list(rest: &[String]) {
             let reg = or_die(cli::registry_flag(rest));
             for s in reg.all() {
                 println!("{}", s.id);
+            }
+            // Scripts pipe stdout as one id per line; the axis summary
+            // goes to stderr.
+            eprintln!(
+                "{} scenarios: {} isolated, {} contended ({} workload(s))",
+                reg.scenario_count(),
+                reg.isolated_count(),
+                reg.contended_count(),
+                reg.workload_count()
+            );
+            for wl in reg.workloads() {
+                eprintln!(
+                    "  @{:<16} batch {:<3} load {:.2} gpu_share {:.2}",
+                    wl.name,
+                    wl.batch,
+                    wl.max_load(),
+                    wl.gpu_share
+                );
             }
         }
         "models" => {

@@ -213,12 +213,20 @@ pub(crate) fn ablate(name: &'static str, mode: DeductionMode) -> &'static str {
 /// model families.
 pub fn lower(sc: &Scenario, mode: DeductionMode, g: &Graph) -> LoweredGraph {
     let it = interner();
+    // Workload-qualified scenarios append [batch, load, share] columns to
+    // every row; isolated scenarios keep the original widths, so existing
+    // bundles' feature dimensions are untouched.
+    let wl_cols = crate::workload::feature_cols(sc);
     match &sc.target {
         Target::Cpu { .. } => {
             let mut plan = LoweredGraph::with_capacity(g.nodes.len());
             for n in &g.nodes {
                 let b = it.resolve(cpu_bucket_name(n)).expect("op-type bucket interned");
-                plan.push(b, KernelImpl::Generic, &features(g, n));
+                let mut f = features(g, n);
+                if let Some(cols) = wl_cols {
+                    f.extend_from_slice(&cols);
+                }
+                plan.push(b, KernelImpl::Generic, &f);
             }
             plan
         }
@@ -236,6 +244,9 @@ pub fn lower(sc: &Scenario, mode: DeductionMode, g: &Graph) -> LoweredGraph {
                 let mut f = kernel_features(g, k);
                 if mode == DeductionMode::NoSelection {
                     conform_conv_kernel_row(&mut f);
+                }
+                if let Some(cols) = wl_cols {
+                    f.extend_from_slice(&cols);
                 }
                 let b = it.resolve(name).expect("kernel bucket interned");
                 plan.push(b, k.impl_, &f);

@@ -47,7 +47,8 @@ impl ModelProfile {
 /// Profile one model: `runs` repetitions, per-op median, end-to-end median.
 pub fn profile(sc: &Scenario, g: &Graph, seed: u64, runs: usize) -> ModelProfile {
     assert!(runs >= 1);
-    let traces = device::exec::run_many(&sc.soc, g, &sc.target, seed, runs);
+    let traces =
+        device::exec::run_many_under(&sc.soc, g, &sc.target, sc.workload.as_deref(), seed, runs);
     let n_ops = traces[0].per_op.len();
     let mut ops = Vec::with_capacity(n_ops);
     // Structure is per-graph (identical across runs): lower once through

@@ -407,6 +407,7 @@ pub fn fig19_fusion_ablation(ctx: &mut ReportCtx) -> Vec<Table> {
             target: Target::Gpu { options: CompileOptions { fusion: false, ..Default::default() } },
             id: format!("{}/gpu/nofusion", soc.name),
             soc: soc.clone(),
+            workload: None,
         };
         let tr_nf = {
             let n = ctx.cfg.n_train.min(ctx.synth().len().saturating_sub(1));

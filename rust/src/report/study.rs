@@ -242,6 +242,7 @@ pub fn fig06_fusion(ctx: &mut ReportCtx, outliers: bool) -> Vec<Table> {
             target: Target::Gpu { options: CompileOptions { fusion: false, ..Default::default() } },
             id: format!("{}/gpu/nofusion", soc.name),
             soc: soc.clone(),
+            workload: None,
         };
         let eon: Vec<f64> =
             ctx.profiles(&on, DataSet::Zoo).iter().map(|p| p.end_to_end_ms).collect();
@@ -262,6 +263,7 @@ pub fn fig07_fusion_opwise(ctx: &mut ReportCtx, outliers: bool) -> Vec<Table> {
             target: Target::Gpu { options: CompileOptions { fusion: false, ..Default::default() } },
             id: format!("{}/gpu/nofusion", soc.name),
             soc: soc.clone(),
+            workload: None,
         };
         let pon = ctx.profiles(&on, DataSet::Zoo).to_vec();
         let poff = ctx.profiles(&off, DataSet::Zoo).to_vec();
@@ -311,6 +313,7 @@ pub fn fig08_winograd(ctx: &mut ReportCtx) -> Vec<Table> {
             target: Target::Gpu { options: CompileOptions { winograd: false, ..Default::default() } },
             id: format!("{}/gpu/nowinograd", soc.name),
             soc: soc.clone(),
+            workload: None,
         };
         let eon = ctx.profiles(&on, DataSet::Zoo).to_vec();
         let eoff = ctx.profiles(&off, DataSet::Zoo).to_vec();
@@ -364,6 +367,7 @@ pub fn fig09_grouped(ctx: &mut ReportCtx) -> Vec<Table> {
             target: Target::Gpu { options: CompileOptions { grouped: false, ..Default::default() } },
             id: format!("{}/gpu/nogrouped", soc.name),
             soc: soc.clone(),
+            workload: None,
         };
         for g in &grouped {
             let a = crate::profiler::profile(&off, g, ctx.cfg.seed, ctx.cfg.runs);

@@ -20,6 +20,7 @@ pub use registry::Registry;
 
 use crate::device::{CoreCombo, DataRep, Soc, Target};
 use crate::tflite::CompileOptions;
+use crate::workload::WorkloadSpec;
 use std::fmt;
 use std::sync::Arc;
 
@@ -32,10 +33,14 @@ pub enum ScenarioError {
     UnknownScenario(String),
     /// A SoC with this name is already registered.
     DuplicateSoc(String),
+    /// A workload with this name is already registered.
+    DuplicateWorkload(String),
     /// A core combination this SoC cannot realize.
     InvalidCombo { soc: String, detail: String },
     /// A malformed or invalid device-spec document.
     Spec(String),
+    /// A malformed or invalid workload-spec document.
+    Workload(String),
 }
 
 impl fmt::Display for ScenarioError {
@@ -50,10 +55,14 @@ impl fmt::Display for ScenarioError {
             ScenarioError::DuplicateSoc(name) => {
                 write!(f, "SoC '{name}' is already registered")
             }
+            ScenarioError::DuplicateWorkload(name) => {
+                write!(f, "workload '{name}' is already registered")
+            }
             ScenarioError::InvalidCombo { soc, detail } => {
                 write!(f, "invalid core combo on {soc}: {detail}")
             }
             ScenarioError::Spec(e) => write!(f, "device spec error: {e}"),
+            ScenarioError::Workload(e) => write!(f, "workload spec error: {e}"),
         }
     }
 }
@@ -65,8 +74,12 @@ impl std::error::Error for ScenarioError {}
 pub struct Scenario {
     pub soc: Soc,
     pub target: Target,
-    /// Stable id like "Snapdragon855/cpu/1L+3M/fp32" or "HelioP35/gpu".
+    /// Stable id like "Snapdragon855/cpu/1L+3M/fp32" or "HelioP35/gpu";
+    /// workload-qualified scenarios append `@WORKLOAD`.
     pub id: String,
+    /// The co-location/batching regime, `None` for the paper's isolated
+    /// batch-1 regime (every builtin scenario).
+    pub workload: Option<Arc<WorkloadSpec>>,
 }
 
 impl Scenario {
@@ -78,7 +91,7 @@ impl Scenario {
             detail,
         })?;
         let id = format!("{}/cpu/{}/{}", soc.name, combo.label(soc), rep.name());
-        Ok(Scenario { soc: soc.clone(), target: Target::Cpu { combo, rep }, id })
+        Ok(Scenario { soc: soc.clone(), target: Target::Cpu { combo, rep }, id, workload: None })
     }
 
     pub fn gpu(soc: &Soc) -> Scenario {
@@ -86,6 +99,29 @@ impl Scenario {
             soc: soc.clone(),
             target: Target::Gpu { options: CompileOptions::default() },
             id: format!("{}/gpu", soc.name),
+            workload: None,
+        }
+    }
+
+    /// The same (SoC, target) under a workload: the id gains an
+    /// `@WORKLOAD` suffix and the cost model applies the workload's
+    /// contention/batch multipliers. The spec must already be validated
+    /// (the registry and bundle loaders validate before qualifying).
+    pub fn with_workload(&self, workload: Arc<WorkloadSpec>) -> Scenario {
+        debug_assert!(self.workload.is_none(), "{}: already workload-qualified", self.id);
+        Scenario {
+            soc: self.soc.clone(),
+            target: self.target.clone(),
+            id: format!("{}@{}", self.id, workload.name),
+            workload: Some(workload),
+        }
+    }
+
+    /// The id without any `@WORKLOAD` qualifier (the isolated base id).
+    pub fn base_id(&self) -> &str {
+        match self.workload {
+            Some(_) => self.id.rsplit_once('@').map(|(base, _)| base).unwrap_or(&self.id),
+            None => &self.id,
         }
     }
 
@@ -188,6 +224,21 @@ mod tests {
         let a = by_id("HelioP35/gpu").unwrap();
         let b = by_id("HelioP35/gpu").unwrap();
         assert!(Arc::ptr_eq(&a, &b), "lookups must not clone the scenario");
+    }
+
+    #[test]
+    fn workload_qualification_suffixes_the_id() {
+        let base = by_id("HelioP35/gpu").unwrap();
+        assert_eq!(base.base_id(), "HelioP35/gpu");
+        let wl = Arc::new(crate::workload::builtin_presets()[0].clone());
+        let q = base.with_workload(wl.clone());
+        assert_eq!(q.id, format!("HelioP35/gpu@{}", wl.name));
+        assert_eq!(q.base_id(), "HelioP35/gpu");
+        assert_eq!(q.soc, base.soc);
+        assert_eq!(q.target, base.target);
+        assert_eq!(q.workload.as_deref(), Some(&*wl));
+        // Structural equality distinguishes workload regimes.
+        assert_ne!(q, (*base).clone());
     }
 
     #[test]

@@ -12,13 +12,17 @@
 use crate::device::{builtin_specs, DataRep, Soc, SocSpec};
 use crate::scenario::{Scenario, ScenarioError};
 use crate::util::Json;
+use crate::workload::WorkloadSpec;
 use std::collections::HashMap;
 use std::sync::Arc;
 
-/// An ordered set of registered SoCs and their scenarios.
+/// An ordered set of registered SoCs, workloads, and the scenario
+/// cross-product they yield: every SoC's isolated scenarios plus one
+/// `BASE@WORKLOAD` qualification per registered workload.
 #[derive(Debug, Clone, Default)]
 pub struct Registry {
     specs: Vec<Arc<SocSpec>>,
+    workloads: Vec<Arc<WorkloadSpec>>,
     scenarios: Vec<Arc<Scenario>>,
     index: HashMap<String, usize>,
 }
@@ -47,28 +51,100 @@ impl Registry {
 
     /// Register a SoC: validate the spec, then materialize its scenarios
     /// (per combo: fp32 then int8; then the GPU — the Section 4.3
-    /// enumeration order). Returns the number of scenarios added.
+    /// enumeration order), followed by one workload-qualified copy of each
+    /// per already-registered workload. Returns the number of scenarios
+    /// added.
     pub fn register_soc(&mut self, spec: SocSpec) -> Result<usize, ScenarioError> {
         spec.validate().map_err(ScenarioError::Spec)?;
         if self.spec(&spec.soc.name).is_some() {
             return Err(ScenarioError::DuplicateSoc(spec.soc.name.clone()));
         }
-        let mut scenarios = Vec::with_capacity(spec.scenario_count());
+        let mut scenarios = Vec::with_capacity(spec.scenario_count() * (1 + self.workloads.len()));
         for counts in &spec.combos {
             for rep in [DataRep::Fp32, DataRep::Int8] {
                 scenarios.push(Scenario::cpu(&spec.soc, counts.clone(), rep)?);
             }
         }
         scenarios.push(Scenario::gpu(&spec.soc));
+        let isolated = scenarios.len();
+        for wl in &self.workloads {
+            for i in 0..isolated {
+                scenarios.push(scenarios[i].with_workload(wl.clone()));
+            }
+        }
         let added = scenarios.len();
         for s in scenarios {
             // Ids cannot collide: the (unique) SoC name prefixes every id,
-            // and `SocSpec::validate` rejects duplicate combo labels.
+            // `SocSpec::validate` rejects duplicate combo labels, and '@'
+            // is reserved in both SoC and workload names so qualified ids
+            // parse unambiguously.
             debug_assert!(!self.index.contains_key(&s.id), "{}", s.id);
             self.index.insert(s.id.clone(), self.scenarios.len());
             self.scenarios.push(Arc::new(s));
         }
         self.specs.push(Arc::new(spec));
+        Ok(added)
+    }
+
+    /// Register a workload: validate the spec, then qualify every
+    /// currently-registered isolated scenario with it (`BASE@NAME`).
+    /// Returns the number of scenarios added. Builtin scenario ids never
+    /// change — qualification only ever *adds* ids.
+    pub fn register_workload(&mut self, wl: WorkloadSpec) -> Result<usize, ScenarioError> {
+        wl.validate().map_err(ScenarioError::Workload)?;
+        if self.workload(&wl.name).is_some() {
+            return Err(ScenarioError::DuplicateWorkload(wl.name.clone()));
+        }
+        let wl = Arc::new(wl);
+        let base: Vec<Arc<Scenario>> =
+            self.scenarios.iter().filter(|s| s.workload.is_none()).cloned().collect();
+        let added = base.len();
+        for s in &base {
+            let q = s.with_workload(wl.clone());
+            debug_assert!(!self.index.contains_key(&q.id), "{}", q.id);
+            self.index.insert(q.id.clone(), self.scenarios.len());
+            self.scenarios.push(Arc::new(q));
+        }
+        self.workloads.push(wl);
+        Ok(added)
+    }
+
+    /// Parse, validate, and register a workload-spec JSON document (the
+    /// `--workload-spec file.json` path). Returns the workload name.
+    pub fn load_workload_json(&mut self, text: &str) -> Result<String, ScenarioError> {
+        let j = Json::parse(text).map_err(ScenarioError::Workload)?;
+        let wl = WorkloadSpec::from_json(&j).map_err(ScenarioError::Workload)?;
+        let name = wl.name.clone();
+        self.register_workload(wl)?;
+        Ok(name)
+    }
+
+    /// Read and register a workload-spec file. Every error, I/O or
+    /// semantic, names the file.
+    pub fn load_workload_file(
+        &mut self,
+        path: impl AsRef<std::path::Path>,
+    ) -> Result<String, ScenarioError> {
+        let path = path.as_ref();
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| ScenarioError::Workload(format!("reading {}: {e}", path.display())))?;
+        self.load_workload_json(&text).map_err(|e| {
+            let detail = match e {
+                ScenarioError::Workload(s) => s,
+                other => other.to_string(),
+            };
+            ScenarioError::Workload(format!("{}: {detail}", path.display()))
+        })
+    }
+
+    /// Register every committed workload preset
+    /// (`workload::builtin_presets`). Returns the number of scenarios
+    /// added.
+    pub fn register_builtin_workloads(&mut self) -> Result<usize, ScenarioError> {
+        let mut added = 0;
+        for wl in crate::workload::builtin_presets() {
+            added += self.register_workload(wl.clone())?;
+        }
         Ok(added)
     }
 
@@ -166,14 +242,39 @@ impl Registry {
         Scenario::cpu(&spec.soc, counts, DataRep::Fp32)
     }
 
+    /// Registered workloads, in registration order.
+    pub fn workloads(&self) -> &[Arc<WorkloadSpec>] {
+        &self.workloads
+    }
+
+    /// The spec of a registered workload.
+    pub fn workload(&self, name: &str) -> Option<&Arc<WorkloadSpec>> {
+        self.workloads.iter().find(|w| w.name == name)
+    }
+
     /// Number of registered SoCs.
     pub fn soc_count(&self) -> usize {
         self.specs.len()
     }
 
+    /// Number of registered workloads.
+    pub fn workload_count(&self) -> usize {
+        self.workloads.len()
+    }
+
     /// Number of registered scenarios.
     pub fn scenario_count(&self) -> usize {
         self.scenarios.len()
+    }
+
+    /// Number of isolated (workload-free) scenarios.
+    pub fn isolated_count(&self) -> usize {
+        self.scenarios.iter().filter(|s| s.workload.is_none()).count()
+    }
+
+    /// Number of workload-qualified (contended/batched) scenarios.
+    pub fn contended_count(&self) -> usize {
+        self.scenarios.len() - self.isolated_count()
     }
 }
 
@@ -240,6 +341,62 @@ mod tests {
         assert!(matches!(r.register_soc(bad), Err(ScenarioError::Spec(_))));
         // Failed registrations leave the registry unchanged.
         assert_eq!(r.scenario_count(), 72);
+    }
+
+    #[test]
+    fn workload_registration_builds_the_cross_product() {
+        let mut r = Registry::with_builtin();
+        assert_eq!(r.workload_count(), 0);
+        assert_eq!(r.isolated_count(), 72);
+        assert_eq!(r.contended_count(), 0);
+        // Three presets qualify every isolated scenario: 72 x (1 + 3).
+        let added = r.register_builtin_workloads().unwrap();
+        assert_eq!(added, 72 * 3);
+        assert_eq!(r.scenario_count(), 288);
+        assert!(r.scenario_count() > 200, "the issue's universe floor");
+        assert_eq!(r.isolated_count(), 72);
+        assert_eq!(r.contended_count(), 216);
+        // The first 72 are the untouched builtin ids, in order.
+        let builtin = Registry::builtin();
+        for (a, b) in r.all().iter().take(72).zip(builtin.all()) {
+            assert_eq!(a.id, b.id);
+            assert!(a.workload.is_none());
+        }
+        // Qualified ids resolve and carry their workload.
+        let name = &crate::workload::builtin_presets()[0].name;
+        let q = r.by_id(&format!("Snapdragon855/cpu/1L/fp32@{name}")).unwrap();
+        assert_eq!(q.workload.as_ref().unwrap().name, *name);
+        assert_eq!(q.base_id(), "Snapdragon855/cpu/1L/fp32");
+        // A SoC registered after the workloads gets its qualified copies.
+        let per_soc = 7 * 2 + 1;
+        let added = r.register_soc(custom_spec()).unwrap();
+        assert_eq!(added, per_soc * 4);
+        assert!(r.by_id(&format!("TestSoc/gpu@{name}")).is_some());
+        // Duplicate workload names are rejected; registry unchanged.
+        let dup = crate::workload::builtin_presets()[0].clone();
+        assert_eq!(
+            r.register_workload(dup).unwrap_err(),
+            ScenarioError::DuplicateWorkload(name.clone())
+        );
+        assert_eq!(r.scenario_count(), 288 + per_soc * 4);
+    }
+
+    #[test]
+    fn load_workload_json_roundtrip() {
+        let mut r = Registry::with_builtin();
+        let text = crate::workload::builtin_presets()[1].to_json().to_string();
+        let name = r.load_workload_json(&text).unwrap();
+        assert_eq!(name, crate::workload::builtin_presets()[1].name);
+        assert_eq!(r.scenario_count(), 144);
+        assert!(matches!(r.load_workload_json("{ not json"), Err(ScenarioError::Workload(_))));
+        assert!(matches!(
+            r.load_workload_json("{\"format\":\"nope\"}"),
+            Err(ScenarioError::Workload(_))
+        ));
+        // File loader names the path in errors.
+        let err = r.load_workload_file("/no/such/dir/wl.json").unwrap_err();
+        assert!(err.to_string().contains("/no/such/dir/wl.json"), "{err}");
+        assert_eq!(err.to_string().matches("workload spec error").count(), 1, "{err}");
     }
 
     #[test]

@@ -34,7 +34,9 @@
 pub mod eval;
 
 use crate::device::{soc_from_json, soc_to_json};
-use crate::engine::bundle::{scenario_from_descriptor, target_to_json, validate_bundle_scenario};
+use crate::engine::bundle::{
+    scenario_from_descriptor, target_to_json, validate_bundle_scenario, workload_from_descriptor,
+};
 use crate::engine::{EngineError, PredictorBundle, BIN_MAGIC};
 use crate::framework::DeductionMode;
 use crate::graph::Graph;
@@ -537,7 +539,8 @@ fn wrapper_from_json(j: &Json) -> Result<Wrapper, String> {
     }
     let scenario_id = j.req_str("scenario")?.to_string();
     let soc = soc_from_json(j.req("device")?).map_err(|e| format!("device: {e}"))?;
-    let target = scenario_from_descriptor(soc, j.req("target")?, &scenario_id)?;
+    let workload = workload_from_descriptor(j)?;
+    let target = scenario_from_descriptor(soc, j.req("target")?, &scenario_id, workload)?;
     validate_bundle_scenario(&target).map_err(|e| e.to_string())?;
     let map = MonotoneMap::from_json(j.req("map")?).map_err(|e| format!("map: {e}"))?;
     let Json::Obj(smap) = j.req("scales")? else {
@@ -565,7 +568,7 @@ impl TransferBundle {
     fn wrapper_to_json(&self) -> Json {
         let scales: BTreeMap<String, Json> =
             self.scales.iter().map(|(b, s)| (b.clone(), Json::Num(*s))).collect();
-        Json::obj(vec![
+        let mut fields = vec![
             ("format", Json::str(TRANSFER_FORMAT)),
             ("version", Json::num(TRANSFER_VERSION as f64)),
             ("budget", Json::num(self.budget as f64)),
@@ -576,7 +579,13 @@ impl TransferBundle {
             ("fallback_ms", Json::Num(self.fallback_ms)),
             ("map", self.map.to_json()),
             ("scales", Json::Obj(scales)),
-        ])
+        ];
+        // The target's contention/batch regime, only when there is one —
+        // isolated transfer bundles keep their pre-workload field set.
+        if let Some(wl) = &self.target.workload {
+            fields.push(("workload", wl.to_json()));
+        }
+        Json::obj(fields)
     }
 
     pub fn to_json(&self) -> Json {

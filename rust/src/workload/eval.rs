@@ -1,0 +1,258 @@
+//! `edgelat workload eval` — the accuracy artifact for the contended
+//! scenario universe.
+//!
+//! The paper's evaluation (Section 5) holds workload fixed at
+//! isolated/batch-1; this sweep re-runs the train→predict loop across the
+//! workload cross-product (every builtin preset plus the isolated
+//! baseline on a slice of the builtin SoCs) and emits a versioned JSON
+//! artifact of per-scenario end-to-end RMSPE/MAPE. The point is a
+//! regression tripwire: the contention/batch multipliers are deterministic
+//! cost-model inputs, so a per-op predictor trained *under* a workload
+//! must stay as accurate as the isolated one — a blow-up here means the
+//! feature columns and the cost model disagree. The CLI (and the CI bench
+//! gate, through `derived.workload.max_rmspe`) fails when any scenario's
+//! RMSPE exceeds [`RMSPE_BOUND`] or goes non-finite.
+
+use crate::framework::{evaluate, DeductionMode, ScenarioPredictor};
+use crate::predict::Method;
+use crate::profiler::profile_set;
+use crate::scenario::{Registry, Scenario};
+use crate::util::stats::{mape_guarded, rmspe_guarded};
+use crate::util::Json;
+use std::sync::Arc;
+
+/// Format tag of the workload-eval artifact.
+pub const EVAL_FORMAT: &str = "edgelat.workload_eval";
+/// Current artifact schema version.
+pub const EVAL_VERSION: u64 = 1;
+/// Per-scenario end-to-end RMSPE ceiling. Generous on purpose: typical
+/// GBDT runs land under 0.1, so a breach signals a cost-model/feature
+/// mismatch, not measurement jitter.
+pub const RMSPE_BOUND: f64 = 1.0;
+
+/// Sweep sizes for one eval run.
+#[derive(Debug, Clone)]
+pub struct EvalConfig {
+    /// Profiling/training seed (the sweep is deterministic given it).
+    pub seed: u64,
+    /// Training NAs profiled per scenario.
+    pub n_train: usize,
+    /// Held-out NAs evaluated per scenario.
+    pub n_test: usize,
+    /// Profiling repetitions per (model, scenario).
+    pub runs: usize,
+    /// Builtin SoCs covered (first N in registry order; each contributes
+    /// one large-core CPU scenario and its GPU).
+    pub socs: usize,
+}
+
+impl EvalConfig {
+    /// CI smoke scale: one SoC, every workload regime.
+    pub fn quick(seed: u64) -> EvalConfig {
+        EvalConfig { seed, n_train: 8, n_test: 4, runs: 2, socs: 1 }
+    }
+
+    /// Default scale for local runs: two SoCs, larger splits.
+    pub fn full(seed: u64) -> EvalConfig {
+        EvalConfig { seed, n_train: 24, n_test: 10, runs: 3, socs: 2 }
+    }
+}
+
+/// One evaluated (scenario × workload regime) cell.
+#[derive(Debug, Clone)]
+pub struct ScenarioRow {
+    /// Full scenario id (`BASE` or `BASE@WORKLOAD`).
+    pub scenario: String,
+    /// Workload name, `"-"` for the isolated baseline.
+    pub workload: String,
+    pub batch: usize,
+    /// Max co-runner load the scenario's target experiences.
+    pub load: f64,
+    pub gpu_share: f64,
+    /// End-to-end RMSPE over the held-out split.
+    pub rmspe: f64,
+    /// End-to-end MAPE over the held-out split.
+    pub mape: f64,
+    /// Held-out architectures evaluated.
+    pub n_test: usize,
+}
+
+/// The full sweep result.
+#[derive(Debug, Clone)]
+pub struct EvalReport {
+    pub rows: Vec<ScenarioRow>,
+    pub bound: f64,
+}
+
+impl EvalReport {
+    /// Worst per-scenario RMSPE; NaN-poisoning (any non-finite row makes
+    /// the max non-finite, so `ok()` still fails).
+    pub fn max_rmspe(&self) -> f64 {
+        self.rows.iter().map(|r| r.rmspe).fold(0.0, |a, b| if b.is_nan() { b } else { a.max(b) })
+    }
+
+    /// Rows with a real workload attached (not the isolated baseline).
+    pub fn contended_rows(&self) -> usize {
+        self.rows.iter().filter(|r| r.workload != "-").count()
+    }
+
+    /// Every scenario finite and within the bound.
+    pub fn ok(&self) -> bool {
+        !self.rows.is_empty()
+            && self.rows.iter().all(|r| r.rmspe.is_finite() && r.rmspe <= self.bound)
+    }
+
+    pub fn to_json(&self) -> Json {
+        let rows = self
+            .rows
+            .iter()
+            .map(|r| {
+                Json::obj(vec![
+                    ("scenario", Json::str(r.scenario.clone())),
+                    ("workload", Json::str(r.workload.clone())),
+                    ("batch", Json::num(r.batch as f64)),
+                    ("load", Json::num(r.load)),
+                    ("gpu_share", Json::num(r.gpu_share)),
+                    ("rmspe", Json::num(fin(r.rmspe))),
+                    ("mape", Json::num(fin(r.mape))),
+                    ("n_test", Json::num(r.n_test as f64)),
+                ])
+            })
+            .collect();
+        Json::obj(vec![
+            ("format", Json::str(EVAL_FORMAT)),
+            ("version", Json::num(EVAL_VERSION as f64)),
+            ("bound", Json::num(self.bound)),
+            ("max_rmspe", Json::num(fin(self.max_rmspe()))),
+            ("scenarios", Json::num(self.rows.len() as f64)),
+            ("contended", Json::num(self.contended_rows() as f64)),
+            ("ok", Json::Bool(self.ok())),
+            ("rows", Json::Arr(rows)),
+        ])
+    }
+}
+
+/// Non-finite values would emit invalid JSON; -1.0 is visibly out of range
+/// for every emitted quantity (the gate checks finiteness downstream).
+fn fin(v: f64) -> f64 {
+    if v.is_finite() {
+        v
+    } else {
+        -1.0
+    }
+}
+
+/// The (scenario × regime) cells the sweep covers: for each of the first
+/// `cfg.socs` builtin SoCs, one large CPU core and the GPU, each under the
+/// isolated baseline plus every builtin workload preset.
+fn sweep_scenarios(cfg: &EvalConfig) -> Vec<Scenario> {
+    let reg = Registry::builtin();
+    let presets = crate::workload::builtin_presets();
+    let mut out = Vec::new();
+    for soc in reg.socs().iter().take(cfg.socs.max(1)) {
+        let cpu = reg.one_large_core(&soc.name).expect("builtin SoC has a large core");
+        let gpu = Scenario::gpu(soc);
+        for base in [cpu, gpu] {
+            out.push(base.clone());
+            for wl in presets {
+                out.push(base.with_workload(Arc::new(wl.clone())));
+            }
+        }
+    }
+    out
+}
+
+/// Run the sweep: train a GBDT per scenario on profiled synthetic NAs and
+/// score the held-out split end-to-end. Deterministic given `cfg.seed`.
+pub fn run(cfg: &EvalConfig) -> EvalReport {
+    let train_g: Vec<crate::graph::Graph> =
+        crate::nas::sample_dataset(cfg.seed, cfg.n_train).into_iter().map(|a| a.graph).collect();
+    let test_g: Vec<crate::graph::Graph> = crate::nas::sample_dataset(cfg.seed ^ 0x3a7e, cfg.n_test)
+        .into_iter()
+        .map(|a| a.graph)
+        .collect();
+    let mut rows = Vec::new();
+    for sc in sweep_scenarios(cfg) {
+        let train_p = profile_set(&sc, &train_g, cfg.seed, cfg.runs);
+        let test_p = profile_set(&sc, &test_g, cfg.seed ^ 0x7e57, cfg.runs);
+        let pred = ScenarioPredictor::train_from(
+            &sc,
+            &train_p,
+            Method::Gbdt,
+            DeductionMode::Full,
+            cfg.seed,
+            None,
+        );
+        let ev = evaluate(&pred, &test_g, &test_p);
+        let (pred_e2e, meas_e2e): (Vec<f64>, Vec<f64>) =
+            ev.predictions.iter().map(|(_, p, m)| (*p, *m)).unzip();
+        let (rmspe, _) = rmspe_guarded(&pred_e2e, &meas_e2e);
+        let (mape, _) = mape_guarded(&pred_e2e, &meas_e2e);
+        let (workload, batch, load, gpu_share) = match &sc.workload {
+            Some(wl) => {
+                let load = match &sc.target {
+                    crate::device::Target::Cpu { combo, .. } => wl.combo_load(combo),
+                    crate::device::Target::Gpu { .. } => wl.max_load(),
+                };
+                (wl.name.clone(), wl.batch, load, wl.gpu_share)
+            }
+            None => ("-".to_string(), 1, 0.0, 1.0),
+        };
+        rows.push(ScenarioRow {
+            scenario: sc.id.clone(),
+            workload,
+            batch,
+            load,
+            gpu_share,
+            rmspe,
+            mape,
+            n_test: test_g.len(),
+        });
+    }
+    EvalReport { rows, bound: RMSPE_BOUND }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn quick_sweep_covers_every_regime_and_stays_in_bound() {
+        let cfg = EvalConfig { seed: 11, n_train: 6, n_test: 3, runs: 1, socs: 1 };
+        let report = run(&cfg);
+        let presets = crate::workload::builtin_presets().len();
+        // One SoC: (CPU + GPU) × (isolated + every preset).
+        assert_eq!(report.rows.len(), 2 * (1 + presets));
+        assert_eq!(report.contended_rows(), 2 * presets);
+        assert!(report.rows.iter().any(|r| r.workload == "-"));
+        assert!(report.rows.iter().any(|r| r.scenario.contains('@')));
+        // Contended ids carry their workload suffix.
+        for r in &report.rows {
+            if r.workload != "-" {
+                assert!(r.scenario.ends_with(&format!("@{}", r.workload)), "{}", r.scenario);
+            }
+        }
+        // The deterministic cost model trains clean predictors in every
+        // regime — this is the tripwire the artifact exists for.
+        assert!(report.ok(), "max_rmspe={}", report.max_rmspe());
+        assert!(report.max_rmspe() < RMSPE_BOUND);
+    }
+
+    #[test]
+    fn artifact_json_roundtrips_with_summary_fields() {
+        let cfg = EvalConfig { seed: 5, n_train: 5, n_test: 3, runs: 1, socs: 1 };
+        let report = run(&cfg);
+        let doc = Json::parse(&report.to_json().to_string()).expect("valid JSON");
+        assert_eq!(doc.req_str("format").unwrap(), EVAL_FORMAT);
+        assert_eq!(doc.req_usize("version").unwrap(), EVAL_VERSION as usize);
+        assert_eq!(doc.req_usize("scenarios").unwrap(), report.rows.len());
+        assert_eq!(doc.req_usize("contended").unwrap(), report.contended_rows());
+        assert_eq!(doc.get("ok"), Some(&Json::Bool(report.ok())));
+        let rows = doc.req("rows").unwrap().as_arr().expect("rows array");
+        assert_eq!(rows.len(), report.rows.len());
+        for r in rows {
+            assert!(r.req_f64("rmspe").unwrap().is_finite());
+            assert!(r.req_usize("batch").unwrap() >= 1);
+        }
+    }
+}

@@ -1,0 +1,385 @@
+//! Contention- and batch-aware workload descriptors: the interference
+//! dimension of the scenario universe.
+//!
+//! The paper profiles one model running **alone at batch 1**. Real edge
+//! serving co-locates workloads and batches requests — RaPP conditions its
+//! predictor on batch size and GPU quota share, and MAPLE-Edge leans on
+//! runtime state for the same reason. A [`WorkloadSpec`] makes those axes
+//! *data*, exactly like `device::spec` made SoCs data: a versioned JSON
+//! document (batch size, per-cluster co-runner load, GPU quota share) that
+//! validates standalone, registers into a `scenario::Registry`
+//! cross-product ([`Registry::register_workload`]), qualifies scenario ids
+//! as `BASE@WORKLOAD`, and rides inside predictor bundles so a contended
+//! bundle serves anywhere.
+//!
+//! The cost model itself stays in `device::cost`; this module owns the
+//! deterministic multipliers it applies:
+//! - **CPU contention**: co-runner load `l` on the clusters a combo uses
+//!   inflates streamed-byte time by `1 + 0.9·l` (memory-bandwidth
+//!   pressure — the dominant interference channel on mobile SoCs) and
+//!   compute time by `1 + 0.25·l` (preemption slices).
+//! - **GPU quota**: a time-slice share `s` stretches busy time by `1/s`;
+//!   dispatch overhead is paid regardless of who holds the GPU.
+//! - **Batch scaling**: a batch of `b` items costs
+//!   `b − 0.15·(b−1)` × the per-item variable work (sub-linear: cache
+//!   reuse and amortized im2col/pack steps), while per-op fixed overheads
+//!   are paid **once per batch**. Scenario latency under a workload is
+//!   whole-batch latency, so `ms(b) ∈ [ms(1), b·ms(1)]` and per-item
+//!   amortized cost never increases with `b` — `tests/properties.rs`
+//!   asserts all three across sampled SoCs.
+//!
+//! An absent workload (`Scenario.workload == None`) means the paper's
+//! isolated/batch-1 regime, and every isolated code path is bit-identical
+//! to the pre-workload tree: the cost functions multiply by exactly `1.0`
+//! (an IEEE no-op) and RNG label derivation only extends when a workload
+//! is present.
+
+pub mod eval;
+
+use crate::device::CoreCombo;
+use crate::scenario::Scenario;
+use crate::util::Json;
+use std::sync::OnceLock;
+
+/// Format tag of a workload-spec JSON document.
+pub const WORKLOAD_FORMAT: &str = "edgelat.workload_spec";
+/// Current workload-spec schema version.
+pub const WORKLOAD_VERSION: u64 = 1;
+
+/// Largest accepted batch size (power of two; matches the cluster core cap).
+pub const MAX_BATCH: usize = 64;
+
+/// Memory-bandwidth inflation per unit of co-runner load: a saturating
+/// co-runner nearly doubles streamed-byte cost.
+pub const CPU_MEM_CONTENTION: f64 = 0.9;
+/// Compute-time inflation per unit of co-runner load (preemption slices;
+/// much milder than the bandwidth channel).
+pub const CPU_COMPUTE_CONTENTION: f64 = 0.25;
+/// Fraction of per-item variable work amortized away at batch > 1.
+pub const BATCH_AMORTIZATION: f64 = 0.15;
+
+/// Multiplier on CPU compute time under co-runner load `l ∈ [0, 1]`.
+pub fn cpu_compute_mult(load: f64) -> f64 {
+    1.0 + CPU_COMPUTE_CONTENTION * load
+}
+
+/// Multiplier on CPU streamed-byte (memory) time under co-runner load.
+pub fn cpu_mem_mult(load: f64) -> f64 {
+    1.0 + CPU_MEM_CONTENTION * load
+}
+
+/// Multiplier on GPU busy time under a quota share `s ∈ (0, 1]`.
+pub fn gpu_quota_mult(share: f64) -> f64 {
+    1.0 / share
+}
+
+/// Whole-batch multiplier on per-item variable work: `b − 0.15·(b−1)`.
+/// Exactly 1 at batch 1; strictly increasing; sub-linear (`≤ b`), and the
+/// per-item amortized ratio `mult(b)/b` never increases with `b`.
+pub fn batch_work_mult(batch: usize) -> f64 {
+    let b = batch as f64;
+    b - BATCH_AMORTIZATION * (b - 1.0)
+}
+
+/// A versioned workload descriptor: one co-location + batching regime.
+///
+/// `cpu_load[i]` is the co-runner load fraction on cluster `i`; a spec may
+/// list fewer entries than a SoC has clusters, in which case the last
+/// entry broadcasts ([`effective_load`](Self::effective_load)) — workload
+/// specs are device-portable, like quota shares in a deployment manifest.
+#[derive(Debug, Clone, PartialEq)]
+pub struct WorkloadSpec {
+    /// Registry name; qualifies scenario ids as `BASE@name`.
+    pub name: String,
+    /// Batch size: a power of two in `1..=MAX_BATCH`.
+    pub batch: usize,
+    /// Per-cluster co-runner load fractions, each in `[0, 1]`.
+    pub cpu_load: Vec<f64>,
+    /// GPU time-slice/quota share in `(0, 1]` (1 = exclusive GPU).
+    pub gpu_share: f64,
+}
+
+impl WorkloadSpec {
+    /// The isolated/batch-1 regime as an explicit spec (useful as a
+    /// baseline row in sweeps; scenarios use `workload: None` for it).
+    pub fn isolated(name: &str) -> WorkloadSpec {
+        WorkloadSpec { name: name.into(), batch: 1, cpu_load: vec![0.0], gpu_share: 1.0 }
+    }
+
+    /// Semantic validation, mirroring `device::spec::validate_soc`.
+    pub fn validate(&self) -> Result<(), String> {
+        if self.name.is_empty() {
+            return Err("workload name is empty".into());
+        }
+        for bad in ['/', ',', '#', '@'] {
+            if self.name.contains(bad) {
+                return Err(format!(
+                    "workload name '{}' contains '{bad}' (reserved by scenario ids and CLI lists)",
+                    self.name
+                ));
+            }
+        }
+        if self.batch == 0 || self.batch > MAX_BATCH || !self.batch.is_power_of_two() {
+            return Err(format!(
+                "workload '{}': batch must be a power of two in 1..={MAX_BATCH}, got {}",
+                self.name, self.batch
+            ));
+        }
+        if self.cpu_load.is_empty() {
+            return Err(format!("workload '{}': cpu_load is empty", self.name));
+        }
+        for (i, &l) in self.cpu_load.iter().enumerate() {
+            if !l.is_finite() || !(0.0..=1.0).contains(&l) {
+                return Err(format!(
+                    "workload '{}': cpu_load[{i}] must be in [0, 1], got {l}",
+                    self.name
+                ));
+            }
+        }
+        if !self.gpu_share.is_finite() || self.gpu_share <= 0.0 || self.gpu_share > 1.0 {
+            return Err(format!(
+                "workload '{}': gpu_share must be in (0, 1], got {}",
+                self.name, self.gpu_share
+            ));
+        }
+        Ok(())
+    }
+
+    /// Co-runner load on cluster `i`; the last listed entry broadcasts to
+    /// any further clusters.
+    pub fn effective_load(&self, cluster: usize) -> f64 {
+        self.cpu_load[cluster.min(self.cpu_load.len() - 1)]
+    }
+
+    /// The load a CPU core combo experiences: the max effective load over
+    /// the clusters it actually uses (the slowest-core roofline means the
+    /// most-contended used cluster bounds the op).
+    pub fn combo_load(&self, combo: &CoreCombo) -> f64 {
+        combo
+            .counts
+            .iter()
+            .enumerate()
+            .filter(|&(_, &n)| n > 0)
+            .map(|(i, _)| self.effective_load(i))
+            .fold(0.0, f64::max)
+    }
+
+    /// The max effective load over every listed cluster (the GPU feature
+    /// column — co-runners contend for shared DRAM regardless of cluster).
+    pub fn max_load(&self) -> f64 {
+        self.cpu_load.iter().copied().fold(0.0, f64::max)
+    }
+
+    /// Whole-batch multiplier on per-item variable work for this spec.
+    pub fn batch_work_mult(&self) -> f64 {
+        batch_work_mult(self.batch)
+    }
+
+    /// Whether this spec perturbs anything relative to isolated/batch-1.
+    pub fn is_contended(&self) -> bool {
+        self.batch > 1 || self.max_load() > 0.0 || self.gpu_share < 1.0
+    }
+
+    /// Serialize as a versioned JSON document.
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("format", Json::str(WORKLOAD_FORMAT)),
+            ("version", Json::num(WORKLOAD_VERSION as f64)),
+            ("name", Json::str(self.name.clone())),
+            ("batch", Json::num(self.batch as f64)),
+            ("cpu_load", Json::from_f64s(&self.cpu_load)),
+            ("gpu_share", Json::num(self.gpu_share)),
+        ])
+    }
+
+    /// Parse + validate a workload-spec JSON document.
+    pub fn from_json(j: &Json) -> Result<WorkloadSpec, String> {
+        let format = j.req_str("format")?;
+        if format != WORKLOAD_FORMAT {
+            return Err(format!("format is '{format}', want '{WORKLOAD_FORMAT}'"));
+        }
+        let version = j.req_usize("version")? as u64;
+        if version != WORKLOAD_VERSION {
+            return Err(format!(
+                "workload spec version {version} not supported (current {WORKLOAD_VERSION})"
+            ));
+        }
+        let spec = WorkloadSpec {
+            name: j.req_str("name")?.to_string(),
+            batch: j.req_usize("batch")?,
+            cpu_load: j.req_f64_arr("cpu_load")?,
+            gpu_share: j.req_f64("gpu_share")?,
+        };
+        spec.validate()?;
+        Ok(spec)
+    }
+}
+
+/// Feature columns a workload contributes to a lowered-plan row:
+/// `[batch, co-runner load, gpu share]` — `None` for isolated scenarios,
+/// so existing bundles' feature widths are untouched. The load column is
+/// the combo's experienced load on CPU targets and the global max on the
+/// GPU; the share column is 1 on CPU (quota does not throttle CPU cores).
+/// Shared by `plan::lower` and `framework::deduce_units`, which must stay
+/// bit-identical.
+pub fn feature_cols(sc: &Scenario) -> Option<[f64; 3]> {
+    use crate::device::Target;
+    sc.workload.as_ref().map(|wl| match &sc.target {
+        Target::Cpu { combo, .. } => [wl.batch as f64, wl.combo_load(combo), 1.0],
+        Target::Gpu { .. } => [wl.batch as f64, wl.max_load(), wl.gpu_share],
+    })
+}
+
+/// The committed workload presets (one per axis plus a mixed regime) —
+/// the workload analogue of `device::builtin_specs`. Parsed once per
+/// process; **not** auto-registered, so the builtin registry still
+/// enumerates exactly the paper's 72 isolated scenarios.
+pub fn builtin_presets() -> &'static [WorkloadSpec] {
+    static PRESETS: OnceLock<Vec<WorkloadSpec>> = OnceLock::new();
+    PRESETS.get_or_init(|| {
+        [
+            include_str!("presets/batch4.json"),
+            include_str!("presets/corun50.json"),
+            include_str!("presets/burst8.json"),
+        ]
+        .iter()
+        .map(|text| {
+            let j = Json::parse(text).expect("builtin workload preset parses");
+            WorkloadSpec::from_json(&j).expect("builtin workload preset validates")
+        })
+        .collect()
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::device::DataRep;
+
+    fn corun(load: f64, share: f64, batch: usize) -> WorkloadSpec {
+        WorkloadSpec { name: "t".into(), batch, cpu_load: vec![load], gpu_share: share }
+    }
+
+    #[test]
+    fn builtin_presets_validate_and_cover_both_axes() {
+        let ps = builtin_presets();
+        assert_eq!(ps.len(), 3);
+        let mut names: Vec<&str> = ps.iter().map(|p| p.name.as_str()).collect();
+        names.sort_unstable();
+        names.dedup();
+        assert_eq!(names.len(), 3, "preset names must be unique");
+        assert!(ps.iter().all(|p| p.is_contended()));
+        assert!(ps.iter().any(|p| p.batch > 1), "a batch axis preset");
+        assert!(ps.iter().any(|p| p.max_load() > 0.0), "a contention axis preset");
+    }
+
+    #[test]
+    fn json_roundtrip_is_exact() {
+        for p in builtin_presets() {
+            let back = WorkloadSpec::from_json(&p.to_json()).unwrap();
+            assert_eq!(&back, p);
+            // Canonical text round-trips byte-identically too.
+            assert_eq!(back.to_json().to_string(), p.to_json().to_string());
+        }
+    }
+
+    #[test]
+    fn invalid_specs_are_rejected_with_reasons() {
+        let cases: Vec<(WorkloadSpec, &str)> = vec![
+            (WorkloadSpec { name: "".into(), ..corun(0.0, 1.0, 1) }, "name is empty"),
+            (WorkloadSpec { name: "a@b".into(), ..corun(0.0, 1.0, 1) }, "'@'"),
+            (WorkloadSpec { name: "a/b".into(), ..corun(0.0, 1.0, 1) }, "'/'"),
+            (corun(0.0, 1.0, 3), "power of two"),
+            (corun(0.0, 1.0, 0), "power of two"),
+            (corun(0.0, 1.0, 128), "power of two"),
+            (corun(1.5, 1.0, 1), "cpu_load[0]"),
+            (corun(f64::NAN, 1.0, 1), "cpu_load[0]"),
+            (corun(0.5, 0.0, 1), "gpu_share"),
+            (corun(0.5, 1.5, 1), "gpu_share"),
+            (WorkloadSpec { cpu_load: vec![], ..corun(0.0, 1.0, 1) }, "cpu_load is empty"),
+        ];
+        for (spec, want) in cases {
+            let err = spec.validate().unwrap_err();
+            assert!(err.contains(want), "want '{want}' in '{err}'");
+        }
+    }
+
+    #[test]
+    fn multipliers_anchor_at_the_isolated_point() {
+        assert_eq!(cpu_compute_mult(0.0), 1.0);
+        assert_eq!(cpu_mem_mult(0.0), 1.0);
+        assert_eq!(gpu_quota_mult(1.0), 1.0);
+        assert_eq!(batch_work_mult(1), 1.0);
+    }
+
+    #[test]
+    fn batch_mult_is_sublinear_and_amortizing() {
+        let mut prev = batch_work_mult(1);
+        let mut prev_per_item = prev;
+        for b in [2usize, 4, 8, 16, 32, 64] {
+            let m = batch_work_mult(b);
+            assert!(m > prev, "whole-batch work must grow with batch");
+            assert!(m < b as f64, "batch {b}: sub-linear, got {m}");
+            assert!(m >= 1.0);
+            let per_item = m / b as f64;
+            assert!(per_item <= prev_per_item, "per-item cost must amortize");
+            prev = m;
+            prev_per_item = per_item;
+        }
+    }
+
+    #[test]
+    fn effective_load_broadcasts_the_last_cluster() {
+        let wl =
+            WorkloadSpec { name: "w".into(), batch: 1, cpu_load: vec![0.2, 0.7], gpu_share: 1.0 };
+        assert_eq!(wl.effective_load(0), 0.2);
+        assert_eq!(wl.effective_load(1), 0.7);
+        assert_eq!(wl.effective_load(5), 0.7, "broadcasts past the listed clusters");
+        assert_eq!(wl.max_load(), 0.7);
+    }
+
+    #[test]
+    fn combo_load_is_max_over_used_clusters() {
+        let wl =
+            WorkloadSpec { name: "w".into(), batch: 1, cpu_load: vec![0.8, 0.1, 0.3], gpu_share: 1.0 };
+        assert_eq!(wl.combo_load(&CoreCombo::new(vec![0, 1, 0])), 0.1);
+        assert_eq!(wl.combo_load(&CoreCombo::new(vec![1, 0, 2])), 0.8);
+        assert_eq!(wl.combo_load(&CoreCombo::new(vec![0, 1, 1])), 0.3);
+        assert_eq!(wl.combo_load(&CoreCombo::new(vec![0, 0, 0])), 0.0);
+    }
+
+    #[test]
+    fn feature_cols_absent_for_isolated_scenarios() {
+        let reg = crate::scenario::Registry::builtin();
+        for sc in reg.all() {
+            assert!(feature_cols(sc).is_none(), "{}", sc.id);
+        }
+    }
+
+    #[test]
+    fn feature_cols_encode_target_specific_axes() {
+        let soc = crate::device::soc_by_name("Snapdragon855").unwrap();
+        let wl = std::sync::Arc::new(WorkloadSpec {
+            name: "w".into(),
+            batch: 4,
+            cpu_load: vec![0.5, 0.25, 0.0],
+            gpu_share: 0.5,
+        });
+        let cpu = Scenario::cpu(&soc, vec![0, 0, 4], DataRep::Fp32)
+            .unwrap()
+            .with_workload(wl.clone());
+        assert_eq!(feature_cols(&cpu), Some([4.0, 0.0, 1.0]));
+        let gpu = Scenario::gpu(&soc).with_workload(wl);
+        assert_eq!(feature_cols(&gpu), Some([4.0, 0.5, 0.5]));
+    }
+
+    #[test]
+    fn isolated_spec_is_not_contended() {
+        let iso = WorkloadSpec::isolated("iso");
+        iso.validate().unwrap();
+        assert!(!iso.is_contended());
+        assert!(corun(0.0, 1.0, 2).is_contended());
+        assert!(corun(0.1, 1.0, 1).is_contended());
+        assert!(corun(0.0, 0.9, 1).is_contended());
+    }
+}

@@ -304,6 +304,7 @@ fn hand_assembled_invalid_scenario_rejected_before_serving() {
             rep: edgelat::device::DataRep::Fp32,
         },
         id: bundle.scenario.id.clone(),
+        workload: None,
     };
     bundle.scenario = tampered;
     let err = bundle.to_predictor().unwrap_err();
@@ -345,7 +346,7 @@ fn v3_bundle_embeds_its_device_descriptor() {
     let bundle =
         PredictorBundle::train(&sc, &profiles, Method::Lasso, DeductionMode::Full, 7).unwrap();
     let j = bundle.to_json();
-    assert_eq!(j.req_usize("version").unwrap(), 3);
+    assert_eq!(j.req_usize("version").unwrap(), 4);
     let device = j.req("device").unwrap();
     assert_eq!(device.req_str("name").unwrap(), "Snapdragon710");
     assert!(device.req("clusters").unwrap().as_arr().unwrap().len() == 2);

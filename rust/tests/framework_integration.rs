@@ -55,6 +55,7 @@ fn fusion_speedup_band() {
             target: Target::Gpu { options: CompileOptions { fusion: false, ..Default::default() } },
             id: format!("{}/gpu/nofusion", soc.name),
             soc: soc.clone(),
+            workload: None,
         };
         for g in &zoo {
             let a = profile(&off, g, 1, 3).end_to_end_ms;

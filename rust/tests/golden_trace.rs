@@ -76,11 +76,13 @@ fn golden_v2_bundle_loads_and_upgrades_losslessly() {
     assert_eq!(bundle.t_overhead_ms.to_bits(), 2.0f64.to_bits());
     assert_eq!(bundle.fallback_ms.to_bits(), 3.0f64.to_bits());
     assert_eq!(bundle.models.len(), 6);
-    // Re-serializing writes the current (v3) schema: same metadata and
-    // models, plus the embedded device descriptor; loading it back is
-    // lossless and byte-stable from then on.
+    // Re-serializing writes the current (v4) schema: same metadata and
+    // models, plus the embedded device descriptor (and no workload key —
+    // an isolated bundle stays isolated); loading it back is lossless and
+    // byte-stable from then on.
     let v3 = bundle.to_json();
-    assert_eq!(v3.req_usize("version").unwrap(), 3);
+    assert_eq!(v3.req_usize("version").unwrap(), 4);
+    assert!(v3.get("workload").is_none(), "isolated upgrade must not grow a workload key");
     assert_eq!(v3.req("device").unwrap().req_str("name").unwrap(), "Snapdragon855");
     let carried =
         ["scenario", "method", "mode", "t_overhead_ms", "fallback_ms", "interner", "buckets"];

@@ -7,9 +7,11 @@
 //! consistency, feature-vector alignment (what the per-bucket trainers
 //! require), simulator sanity (positivity, determinism, monotonicity),
 //! predictor numeric hygiene, `Graph::fingerprint` stability/sensitivity
-//! (the plan-cache key), and lowered-plan parity: `plan::lower` ==
-//! `framework::deduce_units` across all 72 scenarios, and plan-path
-//! predictions bit-identical to the string-keyed path.
+//! (the plan-cache key), lowered-plan parity: `plan::lower` ==
+//! `framework::deduce_units` across all 72 scenarios, plan-path
+//! predictions bit-identical to the string-keyed path, and the workload
+//! cost model across sampled SoCs (contention monotone, batch scaling
+//! sub-linear with non-increasing per-item amortized cost).
 
 use edgelat::device::{CoreCombo, DataRep, Target};
 use edgelat::features::{features, kernel_features};
@@ -418,4 +420,114 @@ fn prop_plan_predictions_bit_identical_to_string_keyed_path() {
             }
         }
     }
+}
+
+// ---------------------------------------------------------------------------
+// Workload cost-model properties across *sampled* SocSpecs — the contention
+// and batch axes must behave physically on every device the fleet sampler
+// can produce, not just the four builtin SoCs.
+
+fn wl_spec(load: f64, share: f64, batch: usize) -> edgelat::workload::WorkloadSpec {
+    edgelat::workload::WorkloadSpec {
+        name: "prop".into(),
+        batch,
+        cpu_load: vec![load],
+        gpu_share: share,
+    }
+}
+
+#[test]
+fn prop_contention_monotone_across_sampled_socs() {
+    // More co-runner load never makes a CPU op faster; a larger GPU quota
+    // share never makes a kernel slower — and the unloaded / full-quota
+    // endpoints are bit-identical to the isolated model.
+    use edgelat::device::cost::{cpu_op_ms_under, gpu_kernel_ms_under};
+    let mut checked = 0usize;
+    for (si, spec) in edgelat::device::sample_specs(0x10ad, 6).iter().enumerate() {
+        let soc = &spec.soc;
+        let g = edgelat::nas::sample(si as u64 ^ 0xc0, 6).graph;
+        let combo = CoreCombo::new(spec.combos[0].clone());
+        for n in &g.nodes {
+            let mut prev = cpu_op_ms_under(soc, &g, n, &combo, DataRep::Fp32, 0, None);
+            for load in [0.0, 0.25, 0.5, 0.75, 1.0] {
+                let w = wl_spec(load, 1.0, 1);
+                let ms = cpu_op_ms_under(soc, &g, n, &combo, DataRep::Fp32, 0, Some(&w));
+                if load == 0.0 {
+                    assert_eq!(ms.to_bits(), prev.to_bits(), "{}: unloaded != isolated", soc.name);
+                }
+                assert!(ms >= prev, "{} op {} load {load}: {ms} < {prev}", soc.name, n.id);
+                prev = ms;
+                checked += 1;
+            }
+        }
+        let compiled = compile(&g, soc.gpu.kind, CompileOptions::default());
+        for k in &compiled.kernels {
+            let mut prev = f64::INFINITY;
+            for share in [0.25, 0.5, 0.75, 1.0] {
+                let w = wl_spec(0.0, share, 1);
+                let ms = gpu_kernel_ms_under(soc, &g, k, Some(&w));
+                assert!(ms <= prev, "{} share {share}: {ms} > {prev}", soc.name);
+                prev = ms;
+                checked += 1;
+            }
+            let iso = gpu_kernel_ms_under(soc, &g, k, None);
+            assert_eq!(prev.to_bits(), iso.to_bits(), "{}: full quota != isolated", soc.name);
+        }
+    }
+    assert!(checked > 100, "property exercised on only {checked} points");
+}
+
+#[test]
+fn prop_batch_scaling_sublinear_with_amortized_per_item_cost() {
+    // Whole-batch latency for b items sits in [1x, b x) the single-item
+    // cost (fixed per-op/per-dispatch overheads are paid once per batch,
+    // variable work scales sub-linearly), so the per-item amortized cost
+    // never increases with batch size — on every sampled SoC.
+    use edgelat::device::cost::{cpu_op_ms_under, gpu_kernel_ms_under};
+    let mut checked = 0usize;
+    for (si, spec) in edgelat::device::sample_specs(0xba7c, 6).iter().enumerate() {
+        let soc = &spec.soc;
+        let g = edgelat::nas::sample(si as u64 ^ 0xb5, 4).graph;
+        let combo = CoreCombo::new(spec.combos[0].clone());
+        for n in &g.nodes {
+            let one = cpu_op_ms_under(soc, &g, n, &combo, DataRep::Fp32, 0, None);
+            let mut prev_per_item = one;
+            for b in [2usize, 4, 8, 16] {
+                let w = wl_spec(0.0, 1.0, b);
+                let ms = cpu_op_ms_under(soc, &g, n, &combo, DataRep::Fp32, 0, Some(&w));
+                assert!(ms >= one, "{} op {} batch {b}: {ms} < one item {one}", soc.name, n.id);
+                assert!(
+                    ms < b as f64 * one,
+                    "{} op {} batch {b}: {ms} not sub-linear vs {one}",
+                    soc.name,
+                    n.id
+                );
+                let per_item = ms / b as f64;
+                assert!(
+                    per_item <= prev_per_item,
+                    "{} op {} batch {b}: per-item {per_item} > {prev_per_item}",
+                    soc.name,
+                    n.id
+                );
+                prev_per_item = per_item;
+                checked += 1;
+            }
+        }
+        let compiled = compile(&g, soc.gpu.kind, CompileOptions::default());
+        for k in &compiled.kernels {
+            let one = gpu_kernel_ms_under(soc, &g, k, None);
+            let mut prev_per_item = one;
+            for b in [2usize, 4, 8, 16] {
+                let w = wl_spec(0.0, 1.0, b);
+                let ms = gpu_kernel_ms_under(soc, &g, k, Some(&w));
+                assert!(ms >= one, "{} batch {b}: {ms} < one item {one}", soc.name);
+                assert!(ms < b as f64 * one, "{} batch {b}: {ms} not sub-linear", soc.name);
+                let per_item = ms / b as f64;
+                assert!(per_item <= prev_per_item, "{} batch {b}: per-item grew", soc.name);
+                prev_per_item = per_item;
+                checked += 1;
+            }
+        }
+    }
+    assert!(checked > 100, "property exercised on only {checked} points");
 }

@@ -1,0 +1,234 @@
+//! Integration: the contention- and batch-aware scenario universe end to
+//! end — the acceptance contract of the workload subsystem.
+//!
+//! (1) Registering workload presets never perturbs the paper's 72 isolated
+//! scenarios: ids, lowered plans, and trained predictions stay
+//! bit-identical to the builtin registry's, while the cross-product
+//! universe exceeds 200 scenarios. (2) A bundle for a never-seen
+//! (sampled SoC × sampled workload) pair round-trips losslessly through
+//! both the JSON and binary encodings — the descriptors travel inside the
+//! bundle, no registry needed on the loading side. (3) The serve daemon
+//! answers that workload-qualified bundle over TCP bit-identically to
+//! calling `predict_batch` in-process.
+
+use edgelat::device::{sample_specs, sample_workloads};
+use edgelat::engine::{binfmt, EngineBuilder, PredictRequest, PredictorBundle};
+use edgelat::features::WORKLOAD_FEATURE_DIM;
+use edgelat::framework::{DeductionMode, ScenarioPredictor};
+use edgelat::graph::Graph;
+use edgelat::plan;
+use edgelat::predict::Method;
+use edgelat::profiler::profile_set;
+use edgelat::scenario::Registry;
+use edgelat::serve::{protocol, BundleFleet, ServeConfig, Server};
+use edgelat::util::Json;
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+use std::sync::Arc;
+use std::time::Duration;
+
+fn dataset(seed: u64, n: usize) -> Vec<Graph> {
+    edgelat::nas::sample_dataset(seed, n).into_iter().map(|a| a.graph).collect()
+}
+
+#[test]
+fn workload_registration_preserves_the_72_builtin_scenarios_bit_exactly() {
+    let base = Registry::builtin();
+    let mut reg = Registry::with_builtin();
+    reg.register_builtin_workloads().unwrap();
+    // Three presets cross every isolated scenario: 72 × (1 + 3).
+    assert_eq!(reg.scenario_count(), 288);
+    assert!(reg.scenario_count() > 200, "the issue's universe floor");
+    assert_eq!(reg.isolated_count(), 72);
+    assert_eq!(reg.contended_count(), 216);
+    assert_eq!(reg.workload_count(), 3);
+
+    let g = edgelat::zoo::mobilenets::mobilenet_v2(0.5);
+    let wl_name = &edgelat::workload::builtin_presets()[0].name;
+    for (a, b) in base.all().iter().zip(reg.all().iter().take(72)) {
+        // Same ids in the same order, still isolated.
+        assert_eq!(a.id, b.id);
+        assert!(b.workload.is_none(), "{}", b.id);
+        assert_eq!(**a, **b, "{}: scenario drifted under workload registration", a.id);
+        // Lowered plans are bit-identical — same buckets, same rows, no
+        // workload columns appended to the isolated path.
+        let pa = plan::lower(a, DeductionMode::Full, &g);
+        let pb = plan::lower(b, DeductionMode::Full, &g);
+        assert_eq!(pa.len(), pb.len(), "{}", a.id);
+        for i in 0..pa.len() {
+            assert_eq!(pa.bucket(i), pb.bucket(i), "{} unit {i}", a.id);
+            let (ra, rb) = (pa.row(i), pb.row(i));
+            assert_eq!(ra.len(), rb.len(), "{} unit {i}", a.id);
+            for (x, y) in ra.iter().zip(rb) {
+                assert_eq!(x.to_bits(), y.to_bits(), "{} unit {i}", a.id);
+            }
+        }
+        // The qualified counterpart exists and its rows grow by exactly
+        // the workload feature block.
+        let q = reg.by_id(&format!("{}@{wl_name}", a.id)).expect("qualified id enumerates");
+        let pq = plan::lower(&q, DeductionMode::Full, &g);
+        assert_eq!(pq.len(), pa.len(), "{}", q.id);
+        for i in 0..pq.len() {
+            assert_eq!(pq.row(i).len(), pa.row(i).len() + WORKLOAD_FEATURE_DIM, "{}", q.id);
+        }
+    }
+
+    // Predictions through a registry that knows about workloads are
+    // bit-identical to the builtin path for an isolated scenario.
+    let train = dataset(0x5eed, 6);
+    let probes = dataset(0x9e77, 3);
+    let id = "Snapdragon855/cpu/1L/fp32";
+    let sc_a = base.resolve(id).unwrap();
+    let sc_b = reg.resolve(id).unwrap();
+    let pred_a = ScenarioPredictor::train_from(
+        &sc_a,
+        &profile_set(&sc_a, &train, 11, 2),
+        Method::Lasso,
+        DeductionMode::Full,
+        3,
+        None,
+    );
+    let pred_b = ScenarioPredictor::train_from(
+        &sc_b,
+        &profile_set(&sc_b, &train, 11, 2),
+        Method::Lasso,
+        DeductionMode::Full,
+        3,
+        None,
+    );
+    for g in &probes {
+        let (x, y) = (pred_a.predict(g), pred_b.predict(g));
+        assert_eq!(x.to_bits(), y.to_bits(), "{}: {x} vs {y}", g.name);
+    }
+}
+
+#[test]
+fn never_seen_soc_workload_bundle_roundtrips_and_serves_bit_identically() {
+    // A SoC and a workload the builtin universe has never heard of,
+    // straight from the fleet samplers.
+    let spec = sample_specs(0xed9e, 1).pop().unwrap();
+    let wl = sample_workloads(0xed9e, 1).pop().unwrap();
+    let mut reg = Registry::new();
+    reg.register_workload(wl.clone()).unwrap();
+    reg.register_soc(spec.clone()).unwrap();
+    let sc = reg
+        .one_large_core(&spec.soc.name)
+        .unwrap()
+        .with_workload(Arc::new(wl.clone()));
+    // The qualified pair is enumerated by the cross-product, not just
+    // constructible by hand.
+    assert_eq!(reg.by_id(&sc.id).as_deref(), Some(&sc), "{}", sc.id);
+    assert!(sc.id.ends_with(&format!("@{}", wl.name)), "{}", sc.id);
+
+    let train = dataset(0xfee1, 8);
+    let profiles = profile_set(&sc, &train, 0xfee1, 2);
+    let pred =
+        ScenarioPredictor::train_from(&sc, &profiles, Method::Gbdt, DeductionMode::Full, 7, None);
+    let bundle = PredictorBundle::from_predictor(&pred).unwrap();
+    let probes = dataset(0xadd1, 4);
+    let expected: Vec<f64> = {
+        let p = bundle.to_predictor().expect("workload bundle assembles");
+        probes.iter().map(|g| p.predict(g)).collect()
+    };
+
+    // --- JSON round-trip: v4, workload descriptor embedded, byte-stable.
+    let j = bundle.to_json();
+    assert_eq!(j.req_usize("version").unwrap(), 4);
+    assert_eq!(j.req("workload").unwrap().req_str("name").unwrap(), wl.name);
+    let from_json = PredictorBundle::from_json(&j).expect("v4 workload bundle loads");
+    assert_eq!(from_json.scenario, bundle.scenario);
+    assert_eq!(
+        from_json.to_json().to_string(),
+        j.to_string(),
+        "JSON re-serialization must be byte-stable"
+    );
+
+    // --- Binary round-trip: the conditional workload version, lossless.
+    let bytes = bundle.to_bin_bytes().unwrap();
+    let info = binfmt::inspect_bin(&bytes).expect("binary bundle inspects");
+    assert_eq!(info.req_usize("version").unwrap(), binfmt::BIN_VERSION_WORKLOAD as usize);
+    assert_eq!(info.req_str("scenario").unwrap(), sc.id);
+    let from_bin = PredictorBundle::from_bin_bytes(&bytes).expect("binary decodes");
+    assert_eq!(from_bin.scenario, bundle.scenario);
+    assert_eq!(
+        from_bin.to_json().to_string(),
+        j.to_string(),
+        "binary decode must reproduce the JSON document exactly"
+    );
+
+    // Both decoded copies predict bit-identically to the original.
+    for (back, enc) in [(&from_json, "json"), (&from_bin, "bin")] {
+        let p = back.to_predictor().expect("decoded bundle assembles");
+        for (g, want) in probes.iter().zip(&expected) {
+            let got = p.predict(g);
+            assert_eq!(got.to_bits(), want.to_bits(), "{enc} {}: {got} vs {want}", g.name);
+        }
+    }
+
+    // An isolated bundle for the same never-seen SoC stays on the v1
+    // binary encoding — byte-compatibility for the existing fleet.
+    let sc_iso = reg.one_large_core(&spec.soc.name).unwrap();
+    let iso_pred = ScenarioPredictor::train_from(
+        &sc_iso,
+        &profile_set(&sc_iso, &train, 0xfee1, 2),
+        Method::Gbdt,
+        DeductionMode::Full,
+        7,
+        None,
+    );
+    let iso_bytes = PredictorBundle::from_predictor(&iso_pred).unwrap().to_bin_bytes().unwrap();
+    let iso_info = binfmt::inspect_bin(&iso_bytes).unwrap();
+    assert_eq!(iso_info.req_usize("version").unwrap(), binfmt::BIN_VERSION as usize);
+
+    // --- Serve: the daemon answers the workload-qualified id over TCP
+    // bit-identically to in-process predict_batch on the same bundle.
+    let dir = std::env::temp_dir().join(format!("edgelat_wl_serve_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    bundle.save_bin(dir.join("contended.bin")).unwrap();
+    let engine = EngineBuilder::new().bundle(bundle).threads(2).build().expect("engine");
+    let reqs: Vec<PredictRequest> =
+        probes.iter().map(|g| PredictRequest::new(g, sc.id.clone())).collect();
+    let in_process: Vec<f64> = engine
+        .predict_batch(&reqs)
+        .into_iter()
+        .map(|r| r.expect("in-process serves the qualified id").e2e_ms)
+        .collect();
+
+    let fleet = BundleFleet::load(&dir, Some(2)).expect("fleet loads the .bin bundle");
+    assert_eq!(fleet.scenario_ids(), vec![sc.id.clone()]);
+    let srv = Server::bind("127.0.0.1:0".parse().unwrap(), ServeConfig::default(), fleet)
+        .expect("bind");
+    let addr = srv.addr();
+    let daemon = std::thread::spawn(move || srv.run());
+
+    let mut s = TcpStream::connect(addr).expect("connect to daemon");
+    s.set_nodelay(true).ok();
+    s.set_read_timeout(Some(Duration::from_secs(30))).unwrap();
+    let mut rd = BufReader::new(s.try_clone().unwrap());
+    for (i, g) in probes.iter().enumerate() {
+        let line = protocol::predict_line(&sc.id, g, Some(i as u64), None, false);
+        s.write_all(line.as_bytes()).unwrap();
+        s.write_all(b"\n").unwrap();
+        s.flush().unwrap();
+        let mut reply = String::new();
+        rd.read_line(&mut reply).expect("reply line");
+        let r = Json::parse(reply.trim()).expect("reply is valid JSON");
+        assert_eq!(r.get("ok"), Some(&Json::Bool(true)), "{}", r.to_string());
+        assert_eq!(r.req_usize("id").unwrap(), i);
+        assert_eq!(r.req_str("scenario").unwrap(), sc.id);
+        let got = r.req_f64("e2e_ms").unwrap();
+        assert_eq!(
+            got.to_bits(),
+            in_process[i].to_bits(),
+            "probe {i}: daemon {got} vs in-process {}",
+            in_process[i]
+        );
+    }
+    drop(s);
+    drop(rd);
+
+    let j = edgelat::serve::loadgen::request_drain(addr).expect("drain");
+    assert_eq!(j.get("ok"), Some(&Json::Bool(true)));
+    daemon.join().expect("daemon thread").expect("clean drain exits without error");
+    let _ = std::fs::remove_dir_all(&dir);
+}

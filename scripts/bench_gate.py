@@ -47,7 +47,15 @@ Fails on:
   no degenerate correlations were skipped): onboarding a new device from
   K profiled graphs must produce a predictor at least as good as serving
   the source bundle unmodified — worse means the monotone map or the
-  per-bucket recalibration regressed.
+  per-bucket recalibration regressed;
+- a broken workload stage (missing derived.workload, zero contended
+  scenarios, missing batch/contention axis coverage, non-positive
+  predictions_per_s, or a non-finite/negative max_rmspe): the
+  contention/batch cross-product must actually enumerate (builtin presets
+  plus a sampled workload qualifying every isolated scenario), contended
+  plan rows must flow through the predictor, and re-training under every
+  workload regime must stay numerically sane — the bench emits -1.0 in
+  place of a non-finite RMSPE, which this gate rejects.
 
 Both checks are ratios between two workloads timed back-to-back on the
 same machine, never absolute wall-clock thresholds, so they are robust to
@@ -291,6 +299,32 @@ def main() -> int:
                 f"worse than the proxy baseline {transfer['proxy_spearman']:.4f}"
             )
 
+    workload = derived.get("workload")
+    if not isinstance(workload, dict):
+        return fail(f"missing derived.workload section in {path}")
+    wl_scenarios = workload.get("scenarios")
+    if not isinstance(wl_scenarios, (int, float)) or not wl_scenarios > 0:
+        return fail(f"workload stage reports no scenarios ({wl_scenarios!r})")
+    wl_contended = workload.get("contended_scenarios")
+    if not isinstance(wl_contended, (int, float)) or not wl_contended > 0:
+        return fail(
+            f"workload stage reports no contended scenarios ({wl_contended!r}); "
+            "the contention/batch cross-product failed to enumerate"
+        )
+    for key in ("batch_axes", "contention_axes"):
+        v = workload.get(key)
+        if not isinstance(v, (int, float)) or not v > 0:
+            return fail(f"workload {key} must be > 0, got {v!r}")
+    wl_pps = workload.get("predictions_per_s")
+    if not isinstance(wl_pps, (int, float)) or not math.isfinite(wl_pps) or wl_pps <= 0:
+        return fail(f"workload predictions_per_s must be > 0, got {wl_pps!r}")
+    wl_rmspe = workload.get("max_rmspe")
+    if not isinstance(wl_rmspe, (int, float)) or not math.isfinite(wl_rmspe) or wl_rmspe < 0:
+        return fail(
+            f"workload max_rmspe must be a finite non-negative error, got {wl_rmspe!r}; "
+            "the contended re-train sweep went numerically bad"
+        )
+
     lowering = derived.get("lowering", {})
     graphs_per_s = lowering.get("graphs_per_s")
     lowering_txt = (
@@ -317,6 +351,8 @@ def main() -> int:
         f"max_rel_err {lut_err:.4f} <= bound {lut_bound}), "
         f"transfer={aps:.1f} adaptations/s "
         f"(rmspe {t_adapted_rmspe:.3f} vs proxy {t_proxy_rmspe:.3f}), "
+        f"workload={wl_contended:.0f} contended scenarios "
+        f"({wl_pps:.0f} predictions/s, max_rmspe {wl_rmspe:.3f}), "
         f"search={cps:.0f} candidates/s "
         f"(plan-cache hit rate {hit_rate:.2f}), "
         f"serve={rps:.0f} req/s "

@@ -7,8 +7,9 @@ regression the gate documents (slow batch predict, missing fleet section,
 sub-1x vectorized speedup, dead throughput, a binary bundle load losing
 to JSON, a LUT tier slower than the SoA scan or serving outside its
 verified error bound, a few-shot transfer stage that is missing, dead, or
-adapting predictors worse than the raw proxy baseline) fails with exit
-code 1. This
+adapting predictors worse than the raw proxy baseline, a workload stage
+that is missing, enumerates no contended scenarios, loses an axis, or
+reports a non-finite contended RMSPE) fails with exit code 1. This
 keeps the gate itself honest: a refactor that silently stops checking a
 section shows up here, not as a green CI on a broken bench.
 
@@ -52,6 +53,18 @@ HEALTHY = {
             "lut_vs_soa_speedup": 2.2,
             "max_rel_err": 0.011,
             "bound": 0.05,
+        },
+        "workload": {
+            "scenarios": 360,
+            "contended_scenarios": 288,
+            "workloads": 4,
+            "batch_axes": 3,
+            "contention_axes": 3,
+            "unit_rows": 9000,
+            "predictions_per_s": 1.0e6,
+            "max_rmspe": 0.3,
+            "eval_rows": 8,
+            "eval_contended": 6,
         },
         "transfer": {
             "budget": 10,
@@ -215,6 +228,31 @@ def main() -> int:
         (
             "adapted ranking worse than proxy fails",
             mutate(lambda d: d["derived"]["transfer"].__setitem__("adapted_spearman", 0.5)),
+            1,
+        ),
+        (
+            "missing workload section fails",
+            mutate(lambda d: d["derived"].pop("workload")),
+            1,
+        ),
+        (
+            "zero contended scenarios fails",
+            mutate(lambda d: d["derived"]["workload"].__setitem__("contended_scenarios", 0)),
+            1,
+        ),
+        (
+            "non-finite workload RMSPE fails",
+            mutate(lambda d: d["derived"]["workload"].__setitem__("max_rmspe", -1.0)),
+            1,
+        ),
+        (
+            "missing contention axis coverage fails",
+            mutate(lambda d: d["derived"]["workload"].__setitem__("contention_axes", 0)),
+            1,
+        ),
+        (
+            "dead contended predict throughput fails",
+            mutate(lambda d: d["derived"]["workload"].__setitem__("predictions_per_s", 0.0)),
             1,
         ),
         (
